@@ -1,0 +1,63 @@
+//! Kernel explorer: inspect the Table-1 dot-product kernels, their
+//! Maclaurin expansions, and the RMF approximation quality — all in pure
+//! Rust (no PJRT), mirroring the paper\'s Definition 3 construction.
+//!
+//! Run with: `cargo run --release --example kernel_explorer -- [D] [t]`
+
+use macformer::reference::{maclaurin, rmf};
+use macformer::util::rng::Rng;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let feat: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(128);
+    let t_probe: f64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(0.4);
+
+    // Table 1: coefficients
+    println!("Table 1 — Maclaurin coefficients a_N (paper-order kernels)\n");
+    print!("{:>8}", "N");
+    for k in maclaurin::KERNELS {
+        print!("{k:>12}");
+    }
+    println!();
+    for n in 0..=8 {
+        print!("{n:>8}");
+        for k in maclaurin::KERNELS {
+            print!("{:>12.6}", maclaurin::coefficient(k, n));
+        }
+        println!();
+    }
+
+    // closed form vs truncated expansion at the probe point
+    println!("\nK(t) at t = {t_probe}: closed form vs degree-8 truncation\n");
+    for k in maclaurin::KERNELS {
+        let exact = maclaurin::kernel_value(k, t_probe);
+        let trunc = maclaurin::truncated_kernel_value(k, t_probe, 8);
+        println!(
+            "  {k:<6} exact {exact:>10.6}  series {trunc:>10.6}  |err| {:.2e}",
+            (exact - trunc).abs()
+        );
+    }
+
+    // RMF Monte-Carlo estimate (Definition 3 / Theorem 1)
+    println!("\nRMF estimate of K(x.y) with D = {feat} (500 draws)\n");
+    let mut rng = Rng::new(7);
+    let d = 8;
+    let x: Vec<f32> = (0..d).map(|_| rng.normal() * 0.25).collect();
+    let y: Vec<f32> = (0..d).map(|_| rng.normal() * 0.25).collect();
+    let t: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+    println!("  x.y = {t:.4}");
+    for k in maclaurin::KERNELS {
+        let est = rmf::mc_kernel_estimate(&mut rng, k, &x, &y, feat, 2.0, 8, 500);
+        let exact = maclaurin::truncated_kernel_value(k, t as f64, 8);
+        println!(
+            "  {k:<6} E[phi(x).phi(y)] = {est:>9.5}  target {exact:>9.5}  rel err {:+.3}%",
+            100.0 * (est - exact) / exact
+        );
+    }
+
+    // degree distribution
+    println!("\nDegree law P[N = n] (p = 2, truncated at 8):\n");
+    for (n, p) in maclaurin::degree_distribution(2.0, 8).iter().enumerate() {
+        println!("  N={n}: {:.4} {}", p, "*".repeat((p * 120.0) as usize));
+    }
+}

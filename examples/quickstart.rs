@@ -1,0 +1,57 @@
+//! Quickstart: load a compiled Macformer artifact, initialize state on
+//! the device, run a few training steps, and evaluate — the minimal
+//! end-to-end tour of the public API.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (after `make artifacts`).
+
+use anyhow::Result;
+use macformer::config::RunConfig;
+use macformer::coordinator::Trainer;
+use macformer::runtime::{client, DeviceState, Executable, Registry};
+
+fn main() -> Result<()> {
+    macformer::util::logging::init();
+    println!("backend: {}", client::describe()?);
+
+    // 1. Open the artifact registry (the python AOT pipeline's output).
+    let reg = Registry::open_default()?;
+    println!("artifacts: {} modules", reg.modules.len());
+
+    // 2. Pick the smallest family and inspect its manifest row.
+    let family = "translation.softmax.ppsbn";
+    let info = reg.get(&format!("{family}.train"))?;
+    println!(
+        "{family}: batch {} x seq {}, {} param buffers + {} opt buffers",
+        info.batch, info.seq_len, info.n_params, info.n_opt
+    );
+
+    // 3. Compile the init module and create device-resident state.
+    let init = Executable::compile_file(
+        "init",
+        &reg.hlo_path(reg.get(&format!("{family}.init"))?),
+    )?;
+    println!("init compiled in {:.1}s", init.compile_seconds);
+    let state = DeviceState::init(&init, info, 42)?;
+    println!("device state: {} buffers", state.state.len());
+    drop(state);
+
+    // 4. Or do all of the above + data synthesis in one call and train.
+    let cfg = RunConfig {
+        task: "translation".into(),
+        variant: "softmax".into(),
+        suffix: ".ppsbn".into(),
+        steps: 5,
+        train_examples: 64,
+        eval_examples: 32,
+        log_every: 1,
+        ..RunConfig::default()
+    };
+    let mut trainer = Trainer::build(cfg, &reg)?;
+    let report = trainer.run()?;
+    println!(
+        "trained {} steps: loss {:.4}, eval loss {:.4}, BLEU {:.2}",
+        report.steps, report.final_loss, report.eval_loss, report.quality
+    );
+    Ok(())
+}

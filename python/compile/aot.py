@@ -1,0 +1,433 @@
+"""AOT pipeline: lower every model/kernel module to HLO text + manifest.
+
+This is the ONLY place python touches the artifact directory; after
+`make artifacts` the Rust binary is self-contained. Interchange format is
+HLO *text* (not serialized HloModuleProto): jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Module families (DESIGN.md §Artifact contract):
+
+  <task>.<variant>.init      (seed u32[])                -> (state..., key)
+  <task>.<variant>.train     (state..., batch..., key)   -> (state..., loss, key)
+  <task>.<variant>.eval      (state..., batch..., key)   -> (loss, metric)
+  translation.<variant>.generate (params..., prompt, key) -> tokens
+  micro.softmax.n<len>       (q, k, v)                   -> out
+  micro.rmfa_exp.n<len>.D<D> (q, k, v, key)              -> out
+
+"state" is params + Adam state, flattened in jax pytree order; the Rust
+coordinator treats it as an opaque ordered buffer list (device-resident,
+threaded through train steps via execute_b).
+
+Usage: python -m compile.aot --out ../artifacts [--only REGEX] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import experiments as E
+from compile import model as M
+from compile import ppsbn
+from compile import train as T
+from compile.kernels import rmfa as krmfa
+from compile.kernels import softmax_attn as ksoftmax
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> Dict[str, Any]:
+    return {"shape": list(int(s) for s in shape), "dtype": str(np.dtype(dtype))}
+
+
+def _specs(shaped) -> List[Dict[str, Any]]:
+    return [_spec(s.shape, s.dtype) for s in shaped]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# model-module builders
+# ---------------------------------------------------------------------------
+
+
+class ModelFamily:
+    """init/train/eval(/generate) lowering for one (task, variant) cell."""
+
+    def __init__(self, task: E.TaskSpec, variant: str, ppsbn_flag=None,
+                 suffix: str = ""):
+        self.task = task
+        self.variant = variant
+        self.cfg = E.model_config(task, variant, ppsbn=ppsbn_flag)
+        self.opt = E.opt_config(task)
+        self.plan = M.make_rmf_plan(self.cfg) if self.cfg.kernel_name else None
+        self.name = f"{task.name}.{variant}{suffix}"
+        # shape-only init to get the flattening contract
+        pshape = jax.eval_shape(
+            lambda k: M.init_params(k, self.cfg), _sds((2,), jnp.uint32)
+        )
+        self.p_flat, self.p_tree = jax.tree_util.tree_flatten(pshape)
+        oshape = jax.eval_shape(
+            lambda: T.init_opt_state(
+                jax.tree_util.tree_map(
+                    lambda l: jnp.zeros(l.shape, l.dtype), pshape
+                )
+            )
+        )
+        self.o_flat, self.o_tree = jax.tree_util.tree_flatten(oshape)
+
+    # -- state (de)flattening ------------------------------------------------
+    def _unflatten(self, args):
+        np_, no = len(self.p_flat), len(self.o_flat)
+        p = jax.tree_util.tree_unflatten(self.p_tree, args[:np_])
+        s = jax.tree_util.tree_unflatten(self.o_tree, args[np_:np_ + no])
+        return p, s, args[np_ + no:]
+
+    def _flatten(self, params, opt_state):
+        return tuple(jax.tree_util.tree_leaves(params)) + tuple(
+            jax.tree_util.tree_leaves(opt_state)
+        )
+
+    # -- batch plumbing -------------------------------------------------------
+    def batch_specs(self) -> List[Dict[str, Any]]:
+        t, b, n = self.task, self.task.batch, self.task.seq_len
+        if t.task == "cls":
+            return [
+                {"name": "tokens", **_spec((b, n), np.int32)},
+                {"name": "mask", **_spec((b, n), np.int32)},
+                {"name": "labels", **_spec((b,), np.int32)},
+            ]
+        if t.task == "retrieval":
+            return [
+                {"name": "tokens1", **_spec((b, n), np.int32)},
+                {"name": "mask1", **_spec((b, n), np.int32)},
+                {"name": "tokens2", **_spec((b, n), np.int32)},
+                {"name": "mask2", **_spec((b, n), np.int32)},
+                {"name": "labels", **_spec((b,), np.int32)},
+            ]
+        return [
+            {"name": "tokens", **_spec((b, n), np.int32)},
+            {"name": "loss_mask", **_spec((b, n), np.float32)},
+        ]
+
+    def _batch_sds(self):
+        out = []
+        for s in self.batch_specs():
+            out.append(_sds(tuple(s["shape"]), np.dtype(s["dtype"])))
+        return out
+
+    def _batch_dict(self, arrays):
+        names = [s["name"] for s in self.batch_specs()]
+        d = dict(zip(names, arrays))
+        if "loss_mask" in d:
+            d["loss_mask"] = d["loss_mask"].astype(jnp.float32)
+        return d
+
+    # -- lowered entry points --------------------------------------------------
+    def lower_init(self):
+        def fn(seed):
+            key = jax.random.PRNGKey(seed)
+            pkey, tkey = jax.random.split(key)
+            params = M.init_params(pkey, self.cfg)
+            opt_state = T.init_opt_state(params)
+            return self._flatten(params, opt_state) + (tkey,)
+
+        return jax.jit(fn, keep_unused=True).lower(_sds((), jnp.uint32))
+
+    def lower_train(self):
+        def fn(*args):
+            params, opt_state, rest = self._unflatten(args)
+            batch, key = self._batch_dict(rest[:-1]), rest[-1]
+            p2, s2, loss, k2 = T.train_step(
+                params, opt_state, batch, key, self.cfg, self.plan, self.opt
+            )
+            return self._flatten(p2, s2) + (loss, k2)
+
+        args = (
+            [_sds(l.shape, l.dtype) for l in self.p_flat]
+            + [_sds(l.shape, l.dtype) for l in self.o_flat]
+            + self._batch_sds()
+            + [_sds((2,), jnp.uint32)]
+        )
+        return jax.jit(fn, keep_unused=True).lower(*args)
+
+    def lower_eval(self):
+        # eval takes params only (no Adam state)
+        def fn2(*args):
+            np_ = len(self.p_flat)
+            params = jax.tree_util.tree_unflatten(self.p_tree, args[:np_])
+            rest = args[np_:]
+            batch, key = self._batch_dict(rest[:-1]), rest[-1]
+            return T.eval_step(params, batch, key, self.cfg, self.plan)
+
+        args = (
+            [_sds(l.shape, l.dtype) for l in self.p_flat]
+            + self._batch_sds()
+            + [_sds((2,), jnp.uint32)]
+        )
+        return jax.jit(fn2, keep_unused=True).lower(*args)
+
+    def o_flat_zeros(self):
+        return [jnp.zeros(l.shape, l.dtype) for l in self.o_flat]
+
+    def lower_generate(self):
+        assert self.task.task == "lm"
+
+        def fn(*args):
+            np_ = len(self.p_flat)
+            params = jax.tree_util.tree_unflatten(self.p_tree, args[:np_])
+            prompt, key = args[np_], args[np_ + 1]
+            return T.generate(
+                params, prompt, E.TRANS_PROMPT_LEN, key, self.cfg, self.plan,
+                E.TRANS_TGT_MAX,
+            )
+
+        args = (
+            [_sds(l.shape, l.dtype) for l in self.p_flat]
+            + [_sds((self.task.batch, self.task.seq_len), jnp.int32),
+               _sds((2,), jnp.uint32)]
+        )
+        return jax.jit(fn, keep_unused=True).lower(*args)
+
+    # -- manifest rows ----------------------------------------------------------
+    def modules(self) -> List[Dict[str, Any]]:
+        t = self.task
+        base = {
+            "task": t.name,
+            "variant": self.variant,
+            "family": self.name,
+            "batch": t.batch,
+            "seq_len": t.seq_len,
+            "vocab_size": t.vocab_size,
+            "num_classes": t.num_classes,
+            "n_params": len(self.p_flat),
+            "n_opt": len(self.o_flat),
+            "param_specs": _specs(self.p_flat),
+            "opt_specs": _specs(self.o_flat),
+            "config": {
+                "attn": self.cfg.attn,
+                "ppsbn": self.cfg.ppsbn,
+                "d_model": self.cfg.d_model,
+                "n_layers": self.cfg.n_layers,
+                "n_heads": self.cfg.n_heads,
+                "feature_dim": self.cfg.feature_dim,
+                "p": self.cfg.p,
+                "causal": self.cfg.causal,
+                "task": self.cfg.task,
+            },
+            "batch_specs": self.batch_specs(),
+        }
+        rows = [
+            {**base, "name": f"{self.name}.init", "role": "init",
+             "lower": self.lower_init},
+            {**base, "name": f"{self.name}.train", "role": "train",
+             "lower": self.lower_train},
+            {**base, "name": f"{self.name}.eval", "role": "eval",
+             "lower": self.lower_eval},
+        ]
+        if t.task == "lm":
+            rows.append(
+                {**base, "name": f"{self.name}.generate", "role": "generate",
+                 "lower": self.lower_generate,
+                 "prompt_len": E.TRANS_PROMPT_LEN,
+                 "max_new": E.TRANS_TGT_MAX}
+            )
+        return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig-4 micro modules
+# ---------------------------------------------------------------------------
+
+
+def micro_modules() -> List[Dict[str, Any]]:
+    """Attention micro-benchmarks: softmax vs RMFA_exp on (G, n, d) inputs.
+
+    Both apply the same preSBN preprocessing in-graph (paper: generated
+    data is preprocessed with preSBN, eps=1e-12) so their outputs are
+    directly comparable for the Fig-4a NMSE and 4b wall-time ratio.
+    """
+    g = E.MICRO_B * E.MICRO_H
+    d = E.MICRO_D
+    rows: List[Dict[str, Any]] = []
+
+    def presbn4(q, k):
+        q4 = q.reshape(E.MICRO_B, E.MICRO_H, -1, d)
+        k4 = k.reshape(E.MICRO_B, E.MICRO_H, -1, d)
+        q4 = ppsbn.pre_sbn(q4, eps=E.MICRO_EPS)
+        k4 = ppsbn.pre_sbn(k4, eps=E.MICRO_EPS)
+        return q4.reshape(g, -1, d), k4.reshape(g, -1, d)
+
+    for n in E.MICRO_LENGTHS:
+        def sm_fn(q, k, v, _n=n):
+            q, k = presbn4(q, k)
+            return ksoftmax.softmax_attn(q, k, v)
+
+        def sm_lower(_fn=sm_fn, _n=n):
+            args = [_sds((g, _n, d), jnp.float32)] * 3
+            return jax.jit(_fn, keep_unused=True).lower(*args)
+
+        rows.append({
+            "name": f"micro.softmax.n{n}", "role": "micro_softmax",
+            "task": "micro", "variant": "softmax", "seq_len": n,
+            "batch": E.MICRO_B, "heads": E.MICRO_H, "d_head": d,
+            "lower": sm_lower,
+        })
+
+        for D in E.MICRO_FEATURES:
+            cfg = M.ModelConfig(
+                attn="mac_exp", feature_dim=D, seq_len=n, p=2.0,
+                d_model=d, n_heads=1, use_pallas=True,
+            )
+            # d_head == d for the micro models (one synthetic head).
+            plan_cfg = M.ModelConfig(attn="mac_exp", feature_dim=D, p=2.0)
+            plan = M.make_rmf_plan(plan_cfg)
+
+            def rmfa_fn(q, k, v, key, _plan=plan, _n=n, _D=D):
+                q, k = presbn4(q, k)
+                omegas = M._draw_bucket_omegas(key, _plan, d)
+                bscales = [jnp.asarray(s, jnp.float32)
+                           for s in _plan.bucket_scales]
+                from compile.kernels import rmf as krmf
+                root = d ** 0.25
+                phi_q = krmf.rmf_features_pallas(q / root, omegas, bscales)
+                phi_k = krmf.rmf_features_pallas(k / root, omegas, bscales)
+                return krmfa.linear_attn_bidir(phi_q, phi_k, v)
+
+            def rmfa_lower(_fn=rmfa_fn, _n=n):
+                args = [_sds((g, _n, d), jnp.float32)] * 3 + [
+                    _sds((2,), jnp.uint32)
+                ]
+                return jax.jit(_fn, keep_unused=True).lower(*args)
+
+            rows.append({
+                "name": f"micro.rmfa_exp.n{n}.D{D}", "role": "micro_rmfa",
+                "task": "micro", "variant": "mac_exp", "seq_len": n,
+                "feature_dim": D, "batch": E.MICRO_B, "heads": E.MICRO_H,
+                "d_head": d, "lower": rmfa_lower,
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def all_modules() -> List[Dict[str, Any]]:
+    rows: List[Dict[str, Any]] = []
+    for tname, variant in E.grid():
+        rows.extend(ModelFamily(E.TASKS[tname], variant).modules())
+    for tname, variant, pp in E.fig3_cells():
+        suffix = ".ppsbn" if pp else ".base"
+        rows.extend(
+            ModelFamily(E.TASKS[tname], variant, ppsbn_flag=pp,
+                        suffix=suffix).modules()
+        )
+    rows.extend(micro_modules())
+    return rows
+
+
+def _input_hash() -> str:
+    """Hash of the compile-path sources; drives incremental rebuilds."""
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="regex filter on module name")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    rows = all_modules()
+    if args.list:
+        for r in rows:
+            print(r["name"])
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    stamp_path = os.path.join(args.out, "manifest.json")
+    ihash = _input_hash()
+    old = {}
+    if os.path.exists(stamp_path) and not args.force:
+        with open(stamp_path) as f:
+            old = json.load(f)
+        if old.get("input_hash") == ihash and not args.only:
+            print(f"artifacts up to date (hash {ihash}); skipping")
+            return
+
+    pat = re.compile(args.only) if args.only else None
+    manifest_rows = []
+    t_total = time.time()
+    for r in rows:
+        name = r["name"]
+        fname = name + ".hlo.txt"
+        path = os.path.join(args.out, fname)
+        row = {k: v for k, v in r.items() if k != "lower"}
+        row["file"] = fname
+        if pat and not pat.search(name):
+            # keep prior entry if the file exists
+            manifest_rows.append(row)
+            continue
+        t0 = time.time()
+        lowered = r["lower"]()
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {name}: {len(text)/1e3:.0f} kB in {time.time()-t0:.1f}s",
+              flush=True)
+        manifest_rows.append(row)
+
+    manifest = {
+        "input_hash": ihash,
+        "generated_unix": int(time.time()),
+        "jax_version": jax.__version__,
+        "modules": manifest_rows,
+        "micro": {
+            "lengths": list(E.MICRO_LENGTHS),
+            "features": list(E.MICRO_FEATURES),
+            "batch": E.MICRO_B, "heads": E.MICRO_H, "d_head": E.MICRO_D,
+        },
+        "translation": {
+            "src_max": E.TRANS_SRC_MAX, "tgt_max": E.TRANS_TGT_MAX,
+            "seq": E.TRANS_SEQ, "prompt_len": E.TRANS_PROMPT_LEN,
+        },
+    }
+    with open(stamp_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest_rows)} modules in "
+          f"{time.time()-t_total:.0f}s -> {stamp_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Experiment registry: the (task x variant) grid the paper evaluates.
+
+Single source of truth shared by aot.py (what to lower), the pytest suite
+(what to check), and — through artifacts/manifest.json — the Rust
+coordinator (what to run).
+
+Sizing notes (DESIGN.md §Substitutions): the paper trains LRA Text at
+n=4096 and Listops at n=2048 on an RTX A6000; this testbed is a CPU PJRT
+client running interpret-lowered Pallas, so the default grid uses n=1024/
+512/512. The *normalized* Table-2 quantities (time and memory relative to
+the base Transformer, accuracy ordering) are preserved because every
+variant shares the same n. `--full` lowers the paper-scale grid too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from compile import model as M
+from compile import train as T
+
+#: Table-2 attention variants (paper order).
+VARIANTS = ("softmax", "rfa", "mac_exp", "mac_inv", "mac_trigh", "mac_log",
+            "mac_sqrt")
+
+# Fig-3 translation layout: [src (padded to SRC_MAX) | SEP | tgt | EOS pad]
+TRANS_SRC_MAX = 24
+TRANS_TGT_MAX = 32
+TRANS_SEQ = 64
+TRANS_PROMPT_LEN = TRANS_SRC_MAX + 1  # first target position
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    name: str
+    task: str  # cls | retrieval | lm
+    seq_len: int
+    vocab_size: int
+    num_classes: int
+    batch: int
+    causal: bool = False
+
+
+TASKS: Dict[str, TaskSpec] = {
+    "lra_text": TaskSpec("lra_text", "cls", 1024, 260, 2, 16),
+    "lra_listops": TaskSpec("lra_listops", "cls", 512, 32, 10, 32),
+    "lra_retrieval": TaskSpec("lra_retrieval", "retrieval", 512, 260, 2, 16),
+    "translation": TaskSpec(
+        "translation", "lm", TRANS_SEQ, 512, 0, 32, causal=True
+    ),
+}
+
+#: Fig-4 micro-benchmark grid (paper: b=16, h=8, d=64, n in 200..4000,
+#: D = powers of two). G = b*h attention problems per module.
+MICRO_B, MICRO_H, MICRO_D = 16, 8, 64
+MICRO_LENGTHS = (256, 512, 1024, 2048, 4096)
+MICRO_FEATURES = (64, 128, 256)
+MICRO_EPS = 1e-12  # preSBN eps for the simulation (paper: 1e-12)
+
+
+def model_config(task: TaskSpec, variant: str,
+                 ppsbn: Optional[bool] = None) -> M.ModelConfig:
+    """The paper's LRA hyperparameters for one (task, variant) cell.
+
+    ppSBN defaults: ON for Macformer variants (it is part of the
+    architecture), OFF for the softmax/RFA baselines — except the Fig-3
+    ablation which passes ppsbn explicitly.
+    """
+    if ppsbn is None:
+        ppsbn = variant.startswith("mac_")
+    return M.ModelConfig(
+        vocab_size=task.vocab_size,
+        d_model=64,
+        d_ff=128,
+        n_layers=2,
+        n_heads=2,
+        seq_len=task.seq_len,
+        num_classes=max(task.num_classes, 1),
+        attn=variant,
+        feature_dim=128,
+        p=2.0,
+        ppsbn=ppsbn,
+        ppsbn_eps=1e-13,
+        causal=task.causal,
+        task=task.task,
+        use_pallas=True,
+    ).validate()
+
+
+def opt_config(task: TaskSpec) -> T.OptConfig:
+    # Paper: 1000 steps of initialization (we map this to LR warmup) and
+    # 10000 steps of optimization.
+    return T.OptConfig(lr=1e-3, warmup_steps=1000)
+
+
+def grid() -> Tuple[Tuple[str, str], ...]:
+    """All Table-2 cells: (task, variant)."""
+    return tuple(
+        (t, v)
+        for t in ("lra_text", "lra_listops", "lra_retrieval")
+        for v in VARIANTS
+    )
+
+
+def fig3_cells() -> Tuple[Tuple[str, str, bool], ...]:
+    """Fig-3 cells: (task, variant, ppsbn) on the translation toy."""
+    return (("translation", "softmax", False), ("translation", "softmax", True))

@@ -1,0 +1,172 @@
+"""Pure-jnp oracles for every kernel in the stack.
+
+These are the CORE correctness anchors: the Pallas kernels (rmf.py,
+rmfa.py, softmax_attn.py) and the lowered model modules are all tested
+against these reference implementations (python/tests/), and the Rust side
+re-implements the same math in rust/src/reference/ for cross-language
+checks.
+
+Shape conventions
+-----------------
+  q, k, v          (B, H, n, dh)        attention inputs per head
+  omega            (D, max_deg, dh)     Rademacher directions (+-1)
+  degrees          (D,) int             per-feature Maclaurin degree (static)
+  scales           (D,) f32             sqrt(a_N * p^(N+1)) per feature
+  phi_q, phi_k     (B, H, n, D)         random feature maps
+  key_mask         (B, n) {0,1}         1 = real token, 0 = padding
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import maclaurin
+
+# ---------------------------------------------------------------------------
+# Random Maclaurin Features (Def. 3)
+# ---------------------------------------------------------------------------
+
+
+def rmf_features(x, omega, degrees, scales):
+    """phi(x): the RMF map, direct (un-bucketed) evaluation.
+
+    phi_i(x) = sqrt(a_{N_i} p^{N_i+1}) * prod_{j=1..N_i} <omega_{i,j}, x>,
+    Phi(x) = sqrt(1/D) [phi_1(x), ..., phi_D(x)].
+
+    O(n * D * max_deg * d) — reference only; the model path uses the
+    degree-bucketed formulation (same result, tested equal).
+    """
+    D, max_deg, _ = omega.shape
+    degrees = jnp.asarray(degrees)
+    # proj[..., n, i, j] = <omega[i, j], x[..., n, :]>
+    proj = jnp.einsum("...nd,ijd->...nij", x, omega)
+    # features of degree N use factors j < N; the rest contribute 1.
+    live = (jnp.arange(max_deg)[None, :] < degrees[:, None]).astype(x.dtype)
+    factors = proj * live + (1.0 - live)
+    phi = jnp.prod(factors, axis=-1)  # (..., n, D)
+    return phi * jnp.asarray(scales) * (1.0 / np.sqrt(D))
+
+
+def rmf_features_bucketed(x, bucket_omegas, bucket_scales):
+    """phi(x) via static degree buckets (the shape the Pallas kernel uses).
+
+    bucket_omegas: list of (eta, W) with W of shape (eta, dh, D_eta);
+    bucket_scales: list of (D_eta,) arrays. Features come out bucket-major
+    (a fixed permutation of the direct map — inner products are invariant
+    to it as long as q and k share the layout).
+    """
+    parts = []
+    total = sum(s.shape[0] for s in bucket_scales)
+    for (eta, W), scale in zip(bucket_omegas, bucket_scales):
+        acc = jnp.ones(x.shape[:-1] + (scale.shape[0],), dtype=x.dtype)
+        for j in range(eta):
+            acc = acc * (x @ W[j].astype(x.dtype))
+        parts.append(acc * scale)
+    return jnp.concatenate(parts, axis=-1) * (1.0 / np.sqrt(total))
+
+
+def sample_omega(key, num_features, max_deg, dh, dtype=jnp.float32):
+    """Rademacher direction bank, drawn in-graph from a PRNG key."""
+    return jax.random.rademacher(key, (num_features, max_deg, dh), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention oracles
+# ---------------------------------------------------------------------------
+
+
+def softmax_attn_ref(q, k, v, key_mask=None, causal=False):
+    """Definition 1: exact softmax attention with optional masking."""
+    dh = q.shape[-1]
+    logits = jnp.einsum("...qd,...kd->...qk", q, k) / np.sqrt(dh)
+    logits = _apply_masks(logits, key_mask, causal, neg=True)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", w, v)
+
+
+def kernelized_attn_ref(q, k, v, kernel, key_mask=None, causal=False, eps=1e-6):
+    """Definition 2: exact dot-product-kernelized attention.
+
+    attn_K = sum_i K(Q K_i^T / sqrt(d)) V_i / sum_j K(Q K_j^T / sqrt(d)),
+    with masked positions removed from both sums (the paper's M' form).
+    """
+    dh = q.shape[-1]
+    t = jnp.einsum("...qd,...kd->...qk", q, k) / np.sqrt(dh)
+    fn = maclaurin.kernel_fn(kernel)
+    scores = fn(t)
+    scores = _apply_masks(scores, key_mask, causal, neg=False)
+    denom = jnp.sum(scores, axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", scores, v) / (denom + eps)
+
+
+def truncated_kernelized_attn_ref(
+    q, k, v, kernel, max_degree, key_mask=None, causal=False, eps=1e-6, p=2.0
+):
+    """Kernelized attention under the *truncated* Maclaurin expansion.
+
+    This is the exact expectation of the truncated RMF estimator — the
+    right oracle for unbiasedness tests of the static-degree lowering
+    (degrees are drawn from the renormalized truncated law, so each term's
+    effective coefficient is a_N * probs[N] / p^-(N+1)).
+    """
+    dh = q.shape[-1]
+    t = jnp.einsum("...qd,...kd->...qk", q, k) / np.sqrt(dh)
+    probs = maclaurin.degree_distribution(p, max_degree)
+    scores = jnp.zeros_like(t)
+    for n in range(max_degree + 1):
+        raw = p ** -(n + 1)
+        a = maclaurin.coefficient(kernel, n) * (probs[n] / raw)
+        scores = scores + a * t**n
+    scores = _apply_masks(scores, key_mask, causal, neg=False)
+    denom = jnp.sum(scores, axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", scores, v) / (denom + eps)
+
+
+def linear_attn_ref(phi_q, phi_k, v, key_mask=None, causal=False, eps=1e-6):
+    """RMFA contraction: out = phi_q (phi_k^T v) / (phi_q sum_j phi_k_j).
+
+    The factored form from the paper's RMFA derivation — O(n d D).
+    """
+    if key_mask is not None:
+        phi_k = phi_k * key_mask[:, None, :, None].astype(phi_k.dtype)
+    if causal:
+        # S_i = sum_{j<=i} phi_k_j (x) v_j, z_i = sum_{j<=i} phi_k_j
+        s = jnp.cumsum(jnp.einsum("...nD,...nd->...nDd", phi_k, v), axis=-3)
+        z = jnp.cumsum(phi_k, axis=-2)
+        num = jnp.einsum("...nD,...nDd->...nd", phi_q, s)
+        den = jnp.einsum("...nD,...nD->...n", phi_q, z)
+    else:
+        s = jnp.einsum("...kD,...kd->...Dd", phi_k, v)
+        z = jnp.sum(phi_k, axis=-2)
+        num = jnp.einsum("...nD,...Dd->...nd", phi_q, s)
+        den = jnp.einsum("...nD,...D->...n", phi_q, z)
+    return num / (den[..., None] + eps)
+
+
+def rmfa_ref(q, k, v, omega, degrees, scales, key_mask=None, causal=False, eps=1e-6):
+    """Full RMFA oracle: RMF maps on Q/d^(1/4), K/d^(1/4) + linear attn."""
+    dh = q.shape[-1]
+    root = dh**0.25
+    phi_q = rmf_features(q / root, omega, degrees, scales)
+    phi_k = rmf_features(k / root, omega, degrees, scales)
+    return linear_attn_ref(phi_q, phi_k, v, key_mask=key_mask, causal=causal, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _apply_masks(scores, key_mask, causal, neg):
+    """Mask attention scores; `neg` selects -1e9 (logits) vs 0 (kernel)."""
+    fill = -1e9 if neg else 0.0
+    if key_mask is not None:
+        m = key_mask[:, None, None, :].astype(bool)
+        scores = jnp.where(m, scores, fill)
+    if causal:
+        n, m_ = scores.shape[-2], scores.shape[-1]
+        tri = jnp.tril(jnp.ones((n, m_), dtype=bool))
+        scores = jnp.where(tri, scores, fill)
+    return scores

@@ -1,0 +1,289 @@
+"""Pallas kernels: the RMFA linear-attention contraction (Layer 1).
+
+Given feature maps phi_q, phi_k in R^(G x n x D) (G = batch*heads rows of
+independent attention problems) and values v in R^(G x n x d), compute
+
+    out_i = phi_q_i . S / (phi_q_i . z + eps),
+    S = sum_j phi_k_j (x) v_j,   z = sum_j phi_k_j            (bidirectional)
+    S_i, z_i = prefix sums over j <= i                        (causal)
+
+This is the factored O(n d D) path from the paper's RMFA derivation; it
+never materializes the (n x n) score matrix.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * bidirectional = two passes. Pass 1 streams K/V blocks HBM->VMEM and
+    accumulates the (D, d+1) state in VMEM (value state + normalizer column
+    fused into one accumulator so a single MXU contraction serves both).
+    Pass 2 streams Q blocks and applies the state: one (bm,D)x(D,d+1) GEMM.
+  * causal = chunked prefix scan (the flash-linear-attention schedule):
+    per block, inter-block term comes from the carried (D, d+1) state and
+    the intra-block term from a tril-masked (bm x bm) score block.
+
+VMEM for defaults (bm=128, D=128, d=32): state 128*33*4 ~= 17 KB, blocks
+128*128*4 + 128*33*4 ~= 82 KB — comfortably under a TPU core's ~16 MB.
+
+interpret=True on this image (see rmf.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_HIGH = jax.lax.Precision.HIGHEST
+
+
+# ---------------------------------------------------------------------------
+# bidirectional: pass 1 — KV state accumulation
+# ---------------------------------------------------------------------------
+
+
+def _kv_state_kernel(phi_k_ref, v_ref, o_ref, *, nb: int):
+    """Grid (G, nb): accumulate S = phi_k^T [v | 1] into o_ref (D, d+1).
+
+    The same output block is revisited across the nb axis; we initialize on
+    the first visit and accumulate afterwards (sequential grid semantics).
+    Masked (padding) keys must be zeroed in phi_k by the caller — that
+    removes them from both S and z, which is exactly the paper's M' form.
+    """
+    j = pl.program_id(1)
+    phi_k = phi_k_ref[0]  # (bn, D)
+    v = v_ref[0]  # (bn, d)
+    ones = jnp.ones((v.shape[0], 1), dtype=v.dtype)
+    vv = jnp.concatenate([v, ones], axis=-1)  # (bn, d+1)
+    upd = jnp.dot(phi_k.T, vv, precision=_HIGH)  # (D, d+1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0] = upd
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[0] += upd
+
+
+def _apply_state_kernel(phi_q_ref, s_ref, o_ref, *, eps: float):
+    """Grid (G, nb): out = phi_q S[:, :d] / (phi_q S[:, d] + eps)."""
+    phi_q = phi_q_ref[0]  # (bn, D)
+    s = s_ref[0]  # (D, d+1)
+    fused = jnp.dot(phi_q, s, precision=_HIGH)  # (bn, d+1)
+    num = fused[:, :-1]
+    den = fused[:, -1:]
+    o_ref[0] = num / (den + eps)
+
+
+def _linear_attn_bidir_impl(phi_q, phi_k, v, *, eps: float = 1e-6,
+                            block_n: int = 128, interpret: bool = True):
+    """Bidirectional RMFA contraction.
+
+    Args:
+      phi_q, phi_k: (G, n, D) feature maps (phi_k already key-masked).
+      v:            (G, n, d) values.
+    Returns: (G, n, d).
+    """
+    g, n, D = phi_q.shape
+    d = v.shape[-1]
+    bn = min(block_n, n)
+    assert n % bn == 0, f"seq len {n} not divisible by block {bn}"
+    nb = n // bn
+
+    state = pl.pallas_call(
+        functools.partial(_kv_state_kernel, nb=nb),
+        grid=(g, nb),
+        in_specs=[
+            pl.BlockSpec((1, bn, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bn, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D, d + 1), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, D, d + 1), jnp.float32),
+        interpret=interpret,
+    )(phi_k.astype(jnp.float32), v.astype(jnp.float32))
+
+    return pl.pallas_call(
+        functools.partial(_apply_state_kernel, eps=eps),
+        grid=(g, nb),
+        in_specs=[
+            pl.BlockSpec((1, bn, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, D, d + 1), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n, d), jnp.float32),
+        interpret=interpret,
+    )(phi_q.astype(jnp.float32), state)
+
+
+# ---------------------------------------------------------------------------
+# causal: chunked prefix scan
+# ---------------------------------------------------------------------------
+
+
+def _causal_kernel(phi_q_ref, phi_k_ref, v_ref, o_ref, *, nb: int, bn: int,
+                   eps: float):
+    """Grid (G,): one attention problem per program, fori over chunks.
+
+    Carry is the functional (D, d+1) prefix state; each chunk combines the
+    inter-chunk contribution (state GEMM) with the intra-chunk one
+    (tril-masked score block), then advances the state.
+    """
+    D = phi_q_ref.shape[-1]
+    d = v_ref.shape[-1]
+    tril = jnp.tril(jnp.ones((bn, bn), dtype=jnp.float32))
+
+    def body(c, state):
+        sl = (0, pl.dslice(c * bn, bn), slice(None))
+        pq = pl.load(phi_q_ref, sl)  # (bn, D)
+        pk = pl.load(phi_k_ref, sl)  # (bn, D)
+        vv = pl.load(v_ref, sl)  # (bn, d)
+        # inter-chunk: everything strictly before this chunk
+        fused = jnp.dot(pq, state, precision=_HIGH)  # (bn, d+1)
+        # intra-chunk: tril-masked scores within the chunk
+        scores = jnp.dot(pq, pk.T, precision=_HIGH) * tril  # (bn, bn)
+        num = fused[:, :d] + jnp.dot(scores, vv, precision=_HIGH)
+        den = fused[:, d:] + jnp.sum(scores, axis=-1, keepdims=True)
+        pl.store(o_ref, sl, num / (den + eps))
+        ones = jnp.ones((bn, 1), dtype=vv.dtype)
+        upd = jnp.dot(pk.T, jnp.concatenate([vv, ones], -1), precision=_HIGH)
+        return state + upd
+
+    init = jnp.zeros((D, d + 1), dtype=jnp.float32)
+    jax.lax.fori_loop(0, nb, body, init)
+
+
+def _linear_attn_causal_impl(phi_q, phi_k, v, *, eps: float = 1e-6,
+                             block_n: int = 64, interpret: bool = True):
+    """Causal RMFA contraction (decoder / autoregressive masking).
+
+    Args/returns as linear_attn_bidir; out_i only attends to j <= i.
+    """
+    g, n, D = phi_q.shape
+    d = v.shape[-1]
+    bn = min(block_n, n)
+    assert n % bn == 0, f"seq len {n} not divisible by block {bn}"
+    nb = n // bn
+    return pl.pallas_call(
+        functools.partial(_causal_kernel, nb=nb, bn=bn, eps=eps),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, n, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n, d), jnp.float32),
+        interpret=interpret,
+    )(phi_q.astype(jnp.float32), phi_k.astype(jnp.float32),
+      v.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# autodiff: Pallas forward, jnp backward
+# ---------------------------------------------------------------------------
+#
+# Pallas kernels do not auto-differentiate; the training path wraps the
+# contractions in custom VJPs. The backward passes are pure GEMM chains
+# (XLA maps them straight to the MXU), derived from out = num/den:
+#
+#   fused = phi_q @ S,  S = phi_k^T [v | 1],  num = fused[:, :d],
+#   den = fused[:, d] + eps,  out = num / den
+#   g_num = g / den                  g_den = -sum(g * out_pre) / den
+#   d phi_q = [g_num | g_den] @ S^T
+#   d S     = phi_q^T @ [g_num | g_den]
+#   d phi_k = [v | 1] @ dS^T         d v = phi_k @ dS[:, :d]
+#
+# The causal variant replaces S with per-position prefix states; gradients
+# use a forward cumsum for dphi_q and a *reverse* cumsum for dphi_k / dv.
+# Causal is only used at toy scale (translation, n <= 128), so the (n, D,
+# d+1) cumsum materialization in the backward is cheap.
+
+
+def _bidir_fused(phi_q, phi_k, v, eps):
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    vv = jnp.concatenate([v, ones], axis=-1)
+    s = jnp.einsum("gkD,gke->gDe", phi_k, vv)
+    fused = jnp.einsum("gnD,gDe->gne", phi_q, s)
+    num, den = fused[..., :-1], fused[..., -1:] + eps
+    return num / den, (s, num, den)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def linear_attn_bidir(phi_q, phi_k, v, eps=1e-6, block_n=128, interpret=True):
+    """Bidirectional RMFA contraction (differentiable).
+
+    phi_q, phi_k: (G, n, D) feature maps (phi_k already key-masked);
+    v: (G, n, d). Returns (G, n, d). Forward = Pallas streaming kernels,
+    backward = jnp GEMMs (see module comment).
+    """
+    return _linear_attn_bidir_impl(
+        phi_q, phi_k, v, eps=eps, block_n=block_n, interpret=interpret
+    )
+
+
+def _bidir_fwd(phi_q, phi_k, v, eps, block_n, interpret):
+    out = _linear_attn_bidir_impl(
+        phi_q, phi_k, v, eps=eps, block_n=block_n, interpret=interpret
+    )
+    return out, (phi_q, phi_k, v)
+
+
+def _bidir_bwd(eps, block_n, interpret, res, g):
+    phi_q, phi_k, v = res
+    out, (s, num, den) = _bidir_fused(phi_q, phi_k, v, eps)
+    g_num = g / den
+    g_den = -jnp.sum(g * out, axis=-1, keepdims=True) / den
+    gf = jnp.concatenate([g_num, g_den], axis=-1)  # (G, n, d+1)
+    d_phi_q = jnp.einsum("gne,gDe->gnD", gf, s)
+    d_s = jnp.einsum("gnD,gne->gDe", phi_q, gf)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    vv = jnp.concatenate([v, ones], axis=-1)
+    d_phi_k = jnp.einsum("gke,gDe->gkD", vv, d_s)
+    d_v = jnp.einsum("gkD,gDe->gke", phi_k, d_s[..., :-1])
+    return d_phi_q, d_phi_k, d_v
+
+
+linear_attn_bidir.defvjp(_bidir_fwd, _bidir_bwd)
+
+
+def _causal_states(phi_k, v):
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    vv = jnp.concatenate([v, ones], axis=-1)
+    upd = jnp.einsum("gnD,gne->gnDe", phi_k, vv)
+    return jnp.cumsum(upd, axis=1), vv  # (G, n, D, d+1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def linear_attn_causal(phi_q, phi_k, v, eps=1e-6, block_n=64, interpret=True):
+    """Causal RMFA contraction (differentiable); see linear_attn_bidir."""
+    return _linear_attn_causal_impl(
+        phi_q, phi_k, v, eps=eps, block_n=block_n, interpret=interpret
+    )
+
+
+def _causal_fwd(phi_q, phi_k, v, eps, block_n, interpret):
+    out = _linear_attn_causal_impl(
+        phi_q, phi_k, v, eps=eps, block_n=block_n, interpret=interpret
+    )
+    return out, (phi_q, phi_k, v)
+
+
+def _causal_bwd(eps, block_n, interpret, res, g):
+    phi_q, phi_k, v = res
+    states, vv = _causal_states(phi_k, v)  # (G, n, D, d+1)
+    fused = jnp.einsum("gnD,gnDe->gne", phi_q, states)
+    num, den = fused[..., :-1], fused[..., -1:] + eps
+    out = num / den
+    g_num = g / den
+    g_den = -jnp.sum(g * out, axis=-1, keepdims=True) / den
+    gf = jnp.concatenate([g_num, g_den], axis=-1)  # (G, n, d+1)
+    d_phi_q = jnp.einsum("gne,gnDe->gnD", gf, states)
+    # d states_i = phi_q_i (x) gf_i; position j receives sum_{i >= j}
+    d_state = jnp.einsum("gnD,gne->gnDe", phi_q, gf)
+    rev = jnp.flip(jnp.cumsum(jnp.flip(d_state, axis=1), axis=1), axis=1)
+    d_phi_k = jnp.einsum("gne,gnDe->gnD", vv, rev)
+    d_v = jnp.einsum("gnD,gnDe->gne", phi_k, rev)[..., :-1]
+    return d_phi_q, d_phi_k, d_v
+
+
+linear_attn_causal.defvjp(_causal_fwd, _causal_bwd)

@@ -1,0 +1,157 @@
+"""Pallas kernel: exact softmax attention baseline (Layer 1).
+
+The O(n^2 d) comparator for the Fig-4 micro-benchmarks and the `softmax`
+model variant of Table 2. Implements the online-softmax streaming schedule
+(row blocks of Q resident in VMEM; K/V swept in chunks with running
+max/denominator), i.e. the standard flash-attention decomposition — the
+TPU analogue of the paper baseline's fused CUDA softmax.
+
+Padding is handled by an additive per-key bias (0 for real tokens, -1e9
+for pads) so the kernel needs no boolean mask plumbing.
+
+VMEM for defaults (bm=128, chunk=128, d=64): q 32 KB, k/v chunks 64 KB,
+acc 32 KB, stats 1 KB ~= 130 KB.
+
+interpret=True on this image (see rmf.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_HIGH = jax.lax.Precision.HIGHEST
+
+
+def _softmax_attn_kernel(q_ref, k_ref, v_ref, kb_ref, o_ref, *, nb: int,
+                         bk: int, causal: bool, scale: float):
+    """Grid (G, n/bm): one Q row-block per program; online softmax over K.
+
+    Running statistics (row max m, denominator l) are carried functionally
+    through the chunk loop; the accumulator is rescaled when m improves.
+    """
+    bm = q_ref.shape[1]
+    d = v_ref.shape[-1]
+    qi = pl.program_id(1)
+    q = q_ref[0] * scale  # (bm, d)
+
+    def body(c, carry):
+        acc, m, l = carry
+        sl = (0, pl.dslice(c * bk, bk), slice(None))
+        k = pl.load(k_ref, sl)  # (bk, d)
+        v = pl.load(v_ref, sl)  # (bk, d)
+        kb = pl.load(kb_ref, (0, pl.dslice(c * bk, bk)))  # (bk,)
+        s = jnp.dot(q, k.T, precision=_HIGH) + kb[None, :]  # (bm, bk)
+        if causal:
+            rows = qi * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 0)
+            cols = c * bk + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1)
+            s = jnp.where(rows >= cols, s, -1e9)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)  # (bm, bk)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v, precision=_HIGH)
+        return acc_new, m_new, l_new
+
+    init = (
+        jnp.zeros((bm, d), dtype=jnp.float32),
+        jnp.full((bm, 1), -1e30, dtype=jnp.float32),
+        jnp.zeros((bm, 1), dtype=jnp.float32),
+    )
+    acc, m, l = jax.lax.fori_loop(0, nb, body, init)
+    o_ref[0] = acc / l
+
+
+def _softmax_attn_impl(q, k, v, key_bias=None, *, causal: bool = False,
+                       block_m: int = 128, block_k: int = 128,
+                       interpret: bool = True):
+    """Exact softmax attention over (G, n, d) inputs (G = batch*heads).
+
+    Args:
+      q, k, v:  (G, n, d).
+      key_bias: (G, n) additive logit bias per key (None -> zeros); use
+                -1e9 at padded positions.
+      causal:   autoregressive masking.
+    Returns: (G, n, d) f32.
+    """
+    g, n, d = q.shape
+    bm = min(block_m, n)
+    bk = min(block_k, n)
+    assert n % bm == 0 and n % bk == 0, f"n={n} bm={bm} bk={bk}"
+    if key_bias is None:
+        key_bias = jnp.zeros((g, n), dtype=jnp.float32)
+    scale = 1.0 / (d**0.5)
+    return pl.pallas_call(
+        functools.partial(
+            _softmax_attn_kernel, nb=n // bk, bk=bk, causal=causal,
+            scale=scale,
+        ),
+        grid=(g, n // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n, d), jnp.float32),
+        interpret=interpret,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+      key_bias.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# autodiff: Pallas forward, jnp backward
+# ---------------------------------------------------------------------------
+#
+# The backward recomputes the exact softmax weights in jnp (O(n^2) time and
+# memory) — faithful to the base-Transformer cost model of Table 2, whose
+# whole point is that the exact baseline *is* quadratic. g flows as:
+#   w = softmax(s),  out = w v
+#   d_v = w^T g;  d_w = g v^T;  d_s = w * (d_w - sum(d_w * w))
+#   d_q = d_s k / sqrt(d);  d_k = d_s^T q / sqrt(d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def softmax_attn(q, k, v, key_bias=None, causal=False, block_m=128,
+                 block_k=128, interpret=True):
+    """Exact softmax attention (differentiable); see _softmax_attn_impl."""
+    return _softmax_attn_impl(
+        q, k, v, key_bias, causal=causal, block_m=block_m, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def _sm_fwd(q, k, v, key_bias, causal, block_m, block_k, interpret):
+    out = _softmax_attn_impl(
+        q, k, v, key_bias, causal=causal, block_m=block_m, block_k=block_k,
+        interpret=interpret,
+    )
+    return out, (q, k, v, key_bias)
+
+
+def _sm_bwd(causal, block_m, block_k, interpret, res, g):
+    q, k, v, key_bias = res
+    d = q.shape[-1]
+    scale = 1.0 / (d**0.5)
+    s = jnp.einsum("gnd,gmd->gnm", q, k) * scale
+    if key_bias is not None:
+        s = s + key_bias[:, None, :]
+    if causal:
+        n = s.shape[-2]
+        tril = jnp.tril(jnp.ones((n, n), dtype=bool))
+        s = jnp.where(tril, s, -1e9)
+    w = jax.nn.softmax(s, axis=-1)
+    d_v = jnp.einsum("gnm,gnd->gmd", w, g)
+    d_w = jnp.einsum("gnd,gmd->gnm", g, v)
+    d_s = w * (d_w - jnp.sum(d_w * w, axis=-1, keepdims=True))
+    d_q = jnp.einsum("gnm,gmd->gnd", d_s, k) * scale
+    d_k = jnp.einsum("gnm,gnd->gmd", d_s, q) * scale
+    d_bias = None if key_bias is None else jnp.sum(d_s, axis=-2)
+    return d_q, d_k, d_v, d_bias
+
+
+softmax_attn.defvjp(_sm_fwd, _sm_bwd)

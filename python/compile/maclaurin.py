@@ -1,0 +1,139 @@
+"""Maclaurin coefficient library for the dot-product kernels of Table 1.
+
+Each kernel K(t) = sum_{N>=0} a_N t^N must have non-negative Maclaurin
+coefficients (Kar & Karnick 2012, Lemma 7; Schoenberg 1942, Thm 2) for the
+Random Maclaurin Feature (RMF) construction to be an unbiased estimator.
+
+Paper Table 1 (with two typos fixed, validated numerically in
+python/tests/test_maclaurin.py and rust/src/reference/maclaurin.rs):
+
+  exp    exp(t)              a_N = 1/N!
+  inv    1/(1-t)             a_N = 1
+  log    1 - log(1-t)        a_0 = 1, a_N = 1/N          (paper: 1/min(1,N))
+  trigh  sinh(t)+cosh(t)     a_N = 1/N!                  (== exp)
+  sqrt   2 - sqrt(1-t)       a_0 = 1, a_N = (2N-3)!!/(2^N N!)
+                                                         (paper: max(1,2N-3))
+
+`trigh` is algebraically identical to `exp`; it is kept as a separate named
+kernel because the paper reports it as a separate row in Table 2 (the RMF
+draws differ by seed stream, so trained models differ run-to-run).
+
+The domain of inv/log/sqrt requires |t| < 1 (<= 1 for sqrt); the ppSBN
+pre-stage guarantees q.k in [-1, 1] by mapping Q, K into the l2 unit ball.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List
+
+import numpy as np
+
+KERNELS = ("exp", "inv", "log", "trigh", "sqrt")
+
+#: Truncation degree for static lowering. P[N > 8] = 2^-10 < 0.1% for p=2,
+#: and a_N p^{N+1} for the kernels above decays at least as fast as 1/N!
+#: except inv/log, whose tail contributes < 2^-9 of the kernel value on the
+#: ppSBN-constrained domain |t| <= 1.
+DEFAULT_MAX_DEGREE = 8
+
+
+def _double_factorial(n: int) -> int:
+    """(n)!! with the convention (-1)!! = (0)!! = 1."""
+    if n <= 0:
+        return 1
+    out = 1
+    while n > 1:
+        out *= n
+        n -= 2
+    return out
+
+
+def coefficient(kernel: str, n: int) -> float:
+    """a_N: the N-th Maclaurin coefficient of the named kernel."""
+    if n < 0:
+        raise ValueError(f"degree must be >= 0, got {n}")
+    if kernel in ("exp", "trigh"):
+        return 1.0 / math.factorial(n)
+    if kernel == "inv":
+        return 1.0
+    if kernel == "log":
+        return 1.0 if n == 0 else 1.0 / n
+    if kernel == "sqrt":
+        if n == 0:
+            return 1.0
+        return _double_factorial(2 * n - 3) / (2.0**n * math.factorial(n))
+    raise ValueError(f"unknown kernel {kernel!r}; expected one of {KERNELS}")
+
+
+def coefficients(kernel: str, max_degree: int) -> List[float]:
+    """[a_0, ..., a_max_degree] for the named kernel."""
+    return [coefficient(kernel, n) for n in range(max_degree + 1)]
+
+
+def kernel_fn(kernel: str) -> Callable[[np.ndarray], np.ndarray]:
+    """The closed-form K(t) for the named kernel (numpy, elementwise).
+
+    Used only by tests/benchmarks as ground truth; the model side always
+    goes through the Maclaurin expansion.
+    """
+    if kernel in ("exp", "trigh"):
+        return np.exp
+    if kernel == "inv":
+        return lambda t: 1.0 / (1.0 - t)
+    if kernel == "log":
+        return lambda t: 1.0 - np.log1p(-t)
+    if kernel == "sqrt":
+        return lambda t: 2.0 - np.sqrt(1.0 - t)
+    raise ValueError(f"unknown kernel {kernel!r}; expected one of {KERNELS}")
+
+
+def truncated_kernel_value(kernel: str, t: float, max_degree: int) -> float:
+    """sum_{N=0}^{max_degree} a_N t^N — what the truncated RMF estimates."""
+    return float(sum(coefficient(kernel, n) * t**n for n in range(max_degree + 1)))
+
+
+def degree_distribution(p: float, max_degree: int) -> np.ndarray:
+    """P[N = eta] = p^-(eta+1), renormalized over the truncation window.
+
+    The paper samples N from the untruncated geometric law; we truncate at
+    `max_degree` so the feature map has a static shape for AOT lowering and
+    renormalize so the probabilities still sum to one (the induced bias is
+    below the a_N tail bound documented at DEFAULT_MAX_DEGREE).
+    """
+    if p <= 1.0:
+        raise ValueError(f"p must be > 1, got {p}")
+    raw = np.array([p ** -(eta + 1) for eta in range(max_degree + 1)], dtype=np.float64)
+    return raw / raw.sum()
+
+
+def sample_degrees(
+    num_features: int, p: float, max_degree: int, seed: int
+) -> np.ndarray:
+    """Draw the per-feature Maclaurin degree N_i for i in [D].
+
+    Sampled at lowering time (numpy, fixed seed) so the degree *buckets*
+    are static in the compiled artifact — the MXU-friendly formulation from
+    DESIGN.md: features of equal degree form dense matmul chains instead of
+    ragged per-feature loops. The Rademacher directions omega remain
+    in-graph (redrawn per step from the threaded PRNG key).
+    """
+    probs = degree_distribution(p, max_degree)
+    rng = np.random.default_rng(seed)
+    return rng.choice(max_degree + 1, size=num_features, p=probs).astype(np.int32)
+
+
+def feature_scales(kernel: str, degrees: np.ndarray, p: float) -> np.ndarray:
+    """sqrt(a_N * p^(N+1)) per feature — the phi_i prefactor from Def. 3."""
+    return np.array(
+        [math.sqrt(coefficient(kernel, int(n)) * p ** (int(n) + 1)) for n in degrees],
+        dtype=np.float32,
+    )
+
+
+def degree_buckets(degrees: np.ndarray) -> Dict[int, np.ndarray]:
+    """Group feature indices by degree: {N: indices with degree N}."""
+    out: Dict[int, np.ndarray] = {}
+    for n in np.unique(degrees):
+        out[int(n)] = np.nonzero(degrees == n)[0].astype(np.int32)
+    return out

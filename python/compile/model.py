@@ -1,0 +1,405 @@
+"""Layer 2: the Macformer model family in JAX.
+
+One shared transformer trunk with a pluggable attention contraction:
+
+  * ``softmax``  — exact softmax attention (the base Transformer of
+                   Table 2), via the Pallas online-softmax kernel.
+  * ``rfa``      — Random Feature Attention baseline (Peng et al. 2021):
+                   trigonometric random Fourier features on l2-scaled
+                   Q/K + the linear-attention contraction.
+  * ``mac_exp | mac_inv | mac_log | mac_trigh | mac_sqrt`` — Macformer:
+                   Random Maclaurin Features for the Table-1 kernel +
+                   the same linear-attention contraction, wrapped in
+                   ppSBN (Algorithm 1).
+
+Task heads: sequence classification (LRA Text / Listops), dual-encoder
+retrieval (LRA Retrieval), and a causal LM head (the Fig-3 translation
+toy, decoder-only over [src SEP tgt] with loss on the target span).
+
+Everything is a pure function of (params pytree, int32 token batch,
+PRNG key); `python/compile/aot.py` lowers init/train/eval/generate
+wrappers of these functions to HLO text for the Rust coordinator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import maclaurin, ppsbn
+from compile.kernels import ref as kref
+from compile.kernels import rmf as krmf
+from compile.kernels import rmfa as krmfa
+from compile.kernels import softmax_attn as ksoftmax
+
+ATTN_VARIANTS = (
+    "softmax", "rfa", "mac_exp", "mac_inv", "mac_log", "mac_trigh", "mac_sqrt",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters; paper defaults from the LRA section."""
+
+    vocab_size: int = 260
+    d_model: int = 64
+    d_ff: int = 128
+    n_layers: int = 2
+    n_heads: int = 2
+    seq_len: int = 1024
+    num_classes: int = 2
+    attn: str = "softmax"
+    feature_dim: int = 128  # D, the random projection dimension
+    p: float = 2.0  # RMF degree-law hyperparameter
+    max_degree: int = maclaurin.DEFAULT_MAX_DEGREE
+    ppsbn: bool = True  # pre/post SBN around the contraction
+    ppsbn_eps: float = 1e-13
+    ppsbn_norm_mode: str = "max_row"
+    causal: bool = False
+    task: str = "cls"  # cls | retrieval | lm
+    use_pallas: bool = True  # L1 kernels vs pure-jnp ref (ablation)
+    rmf_seed: int = 17  # static degree draw
+    redraw: bool = True  # redraw omega each step vs fixed per-init
+    dropout: float = 0.0  # reserved; kept 0 for deterministic HLO
+    attn_block_n: int = 256  # raised 128 -> 256 in the §Perf pass
+    eps: float = 1e-6
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def kernel_name(self) -> Optional[str]:
+        return self.attn[4:] if self.attn.startswith("mac_") else None
+
+    def validate(self) -> "ModelConfig":
+        if self.attn not in ATTN_VARIANTS:
+            raise ValueError(f"unknown attn {self.attn!r}")
+        if self.task not in ("cls", "retrieval", "lm"):
+            raise ValueError(f"unknown task {self.task!r}")
+        if self.attn == "rfa" and self.feature_dim % 2:
+            raise ValueError("rfa needs an even feature_dim (sin|cos halves)")
+        return self
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, d_in, d_out):
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32)
+    return {"w": w * np.sqrt(1.0 / d_in), "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def _ln_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """Initialize the full parameter pytree for `cfg`."""
+    cfg.validate()
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+    params: Dict[str, Any] = {
+        "tok_emb": jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32
+        ) * 0.02,
+        "pos_emb": jax.random.normal(
+            keys[1], (cfg.seq_len, cfg.d_model), jnp.float32
+        ) * 0.02,
+        "layers": [],
+        "ln_f": _ln_init(cfg.d_model),
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[4 + i], 8)
+        layer = {
+            "ln1": _ln_init(cfg.d_model),
+            "ln2": _ln_init(cfg.d_model),
+            "wq": _dense_init(lk[0], cfg.d_model, cfg.d_model),
+            "wk": _dense_init(lk[1], cfg.d_model, cfg.d_model),
+            "wv": _dense_init(lk[2], cfg.d_model, cfg.d_model),
+            "wo": _dense_init(lk[3], cfg.d_model, cfg.d_model),
+            "ff1": _dense_init(lk[4], cfg.d_model, cfg.d_ff),
+            "ff2": _dense_init(lk[5], cfg.d_ff, cfg.d_model),
+        }
+        if cfg.ppsbn:
+            # postSBN trainable scale/exponent, identity at init (Thm 3's
+            # t and r are fitted by these during training).
+            layer["sbn_gamma"] = jnp.ones((cfg.n_heads, 1, 1), jnp.float32)
+            layer["sbn_beta"] = jnp.ones((cfg.n_heads, 1, 1), jnp.float32)
+        if cfg.attn == "rfa":
+            # RFA draws w ~ N(0, I) at init (fixed bank; redraw handled by
+            # the in-graph key when cfg.redraw).
+            layer["rfa_w"] = jax.random.normal(
+                lk[6], (cfg.feature_dim // 2, cfg.d_head), jnp.float32
+            )
+        params["layers"].append(layer)
+    if cfg.task == "cls":
+        params["head"] = _dense_init(keys[2], cfg.d_model, cfg.num_classes)
+    elif cfg.task == "retrieval":
+        hk = jax.random.split(keys[2], 2)
+        params["head_mlp"] = _dense_init(hk[0], 4 * cfg.d_model, cfg.d_model)
+        params["head"] = _dense_init(hk[1], cfg.d_model, cfg.num_classes)
+    else:  # lm
+        params["head"] = _dense_init(keys[2], cfg.d_model, cfg.vocab_size)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# static RMF plan (degrees are drawn at lowering time — DESIGN.md)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RmfPlan:
+    """Static degree bucketing shared by all layers of one model."""
+
+    degrees: Tuple[int, ...]
+    bucket_etas: Tuple[int, ...]
+    bucket_sizes: Tuple[int, ...]
+    bucket_scales: Tuple[Tuple[float, ...], ...]
+
+    @property
+    def max_eta(self) -> int:
+        return max(self.bucket_etas)
+
+
+def make_rmf_plan(cfg: ModelConfig) -> RmfPlan:
+    kernel = cfg.kernel_name
+    assert kernel is not None
+    degrees = maclaurin.sample_degrees(
+        cfg.feature_dim, cfg.p, cfg.max_degree, seed=cfg.rmf_seed
+    )
+    buckets = maclaurin.degree_buckets(degrees)
+    scales = maclaurin.feature_scales(kernel, degrees, cfg.p)
+    etas, sizes, bscales = [], [], []
+    for eta, idx in sorted(buckets.items()):
+        etas.append(int(eta))
+        sizes.append(len(idx))
+        bscales.append(tuple(float(s) for s in scales[idx]))
+    return RmfPlan(
+        degrees=tuple(int(d) for d in degrees),
+        bucket_etas=tuple(etas),
+        bucket_sizes=tuple(sizes),
+        bucket_scales=tuple(bscales),
+    )
+
+
+def _draw_bucket_omegas(key, plan: RmfPlan, dh: int):
+    """In-graph Rademacher direction draw, one bank per degree bucket."""
+    out = []
+    keys = jax.random.split(key, len(plan.bucket_etas))
+    for bk, eta, size in zip(keys, plan.bucket_etas, plan.bucket_sizes):
+        if eta == 0:
+            w = jnp.zeros((0, dh, size), jnp.float32)
+        else:
+            w = jax.random.rademacher(bk, (eta, dh, size), jnp.float32)
+        out.append((eta, w))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# attention contractions
+# ---------------------------------------------------------------------------
+
+
+def _heads(x, cfg):
+    b, n, _ = x.shape
+    return x.reshape(b, n, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _unheads(x, cfg):
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def _flatten_gh(x):
+    b, h, n, d = x.shape
+    return x.reshape(b * h, n, d)
+
+
+def _unflatten_gh(x, b, h):
+    g, n, d = x.shape
+    return x.reshape(b, h, n, d)
+
+
+def _rmf_phi(x, plan: RmfPlan, omegas, cfg, interpret=True):
+    """Phi(x / d^(1/4)) for (B, H, n, dh) input -> (B, H, n, D)."""
+    x = x / (cfg.d_head**0.25)
+    bscales = [jnp.asarray(s, jnp.float32) for s in plan.bucket_scales]
+    if cfg.use_pallas:
+        return krmf.rmf_features_pallas(x, omegas, bscales, interpret=interpret)
+    return kref.rmf_features_bucketed(x, omegas, bscales)
+
+
+def _rfa_phi(x, w, cfg):
+    """RFA trigonometric features on per-row l2-normalized inputs.
+
+    phi(x) = sqrt(2/D) [sin(w x), cos(w x)] — the Peng et al. (2021) map
+    for the Gaussian kernel; with unit-norm rows, softmax similarity is a
+    fixed monotone transform of the Gaussian kernel.
+    """
+    norm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + 1e-6)
+    xn = x / norm
+    proj = jnp.einsum("...nd,fd->...nf", xn, w)
+    d_half = w.shape[0]
+    return jnp.concatenate(
+        [jnp.sin(proj), jnp.cos(proj)], axis=-1
+    ) * np.sqrt(1.0 / d_half)
+
+
+def _linear_contract(phi_q, phi_k, v, key_mask, cfg):
+    """Dispatch the linear-attention contraction (Pallas or ref)."""
+    b, h = phi_q.shape[0], phi_q.shape[1]
+    if key_mask is not None:
+        phi_k = phi_k * key_mask[:, None, :, None].astype(phi_k.dtype)
+    if not cfg.use_pallas:
+        return kref.linear_attn_ref(
+            phi_q, phi_k, v, key_mask=None, causal=cfg.causal, eps=cfg.eps
+        )
+    fq, fk, fv = _flatten_gh(phi_q), _flatten_gh(phi_k), _flatten_gh(v)
+    if cfg.causal:
+        out = krmfa.linear_attn_causal(
+            fq, fk, fv, cfg.eps, min(cfg.attn_block_n, 64), True
+        )
+    else:
+        out = krmfa.linear_attn_bidir(
+            fq, fk, fv, cfg.eps, cfg.attn_block_n, True
+        )
+    return _unflatten_gh(out, b, h)
+
+
+def attention(layer, x, key_mask, rng_key, cfg: ModelConfig,
+              plan: Optional[RmfPlan]):
+    """One multi-head attention block body (pre-LN residual trunk)."""
+    b, n, _ = x.shape
+    q = _heads(x @ layer["wq"]["w"] + layer["wq"]["b"], cfg)
+    k = _heads(x @ layer["wk"]["w"] + layer["wk"]["b"], cfg)
+    v = _heads(x @ layer["wv"]["w"] + layer["wv"]["b"], cfg)
+
+    if cfg.attn == "softmax":
+        # Fig-3 configuration: ppSBN wrapped around the *traditional*
+        # softmax attention ("incorporated the ppSBN mechanism before and
+        # after the attention layer" on the base Transformer).
+        if cfg.ppsbn:
+            q = ppsbn.pre_sbn(q, eps=cfg.ppsbn_eps,
+                              norm_mode=cfg.ppsbn_norm_mode,
+                              key_mask=key_mask)
+            k = ppsbn.pre_sbn(k, eps=cfg.ppsbn_eps,
+                              norm_mode=cfg.ppsbn_norm_mode,
+                              key_mask=key_mask)
+        if cfg.use_pallas:
+            bias = None
+            if key_mask is not None:
+                # (B, n) -> (B*H, n), head-major to match _flatten_gh
+                bias = jnp.broadcast_to(
+                    ((1.0 - key_mask.astype(jnp.float32)) * -1e9)[:, None, :],
+                    (b, cfg.n_heads, n),
+                ).reshape(b * cfg.n_heads, n)
+            out = ksoftmax.softmax_attn(
+                _flatten_gh(q), _flatten_gh(k), _flatten_gh(v), bias,
+                cfg.causal, min(cfg.attn_block_n, n),
+                min(cfg.attn_block_n, n), True,
+            )
+            out = _unflatten_gh(out, b, cfg.n_heads)
+        else:
+            out = kref.softmax_attn_ref(q, k, v, key_mask=key_mask,
+                                        causal=cfg.causal)
+        if cfg.ppsbn:
+            out = ppsbn.post_sbn(out, layer["sbn_gamma"], layer["sbn_beta"])
+        return _unheads(out, cfg) @ layer["wo"]["w"] + layer["wo"]["b"]
+
+    # linear-feature variants: optional preSBN, feature map, contraction,
+    # optional postSBN.
+    if cfg.ppsbn:
+        q = ppsbn.pre_sbn(q, eps=cfg.ppsbn_eps, norm_mode=cfg.ppsbn_norm_mode,
+                          key_mask=key_mask)
+        k = ppsbn.pre_sbn(k, eps=cfg.ppsbn_eps, norm_mode=cfg.ppsbn_norm_mode,
+                          key_mask=key_mask)
+
+    if cfg.attn == "rfa":
+        w = layer["rfa_w"]
+        if cfg.redraw:
+            w = jax.random.normal(
+                rng_key, (cfg.feature_dim // 2, cfg.d_head), jnp.float32
+            )
+        phi_q = _rfa_phi(q, w, cfg)
+        phi_k = _rfa_phi(k, w, cfg)
+    else:
+        assert plan is not None
+        omegas = _draw_bucket_omegas(rng_key, plan, cfg.d_head)
+        phi_q = _rmf_phi(q, plan, omegas, cfg)
+        phi_k = _rmf_phi(k, plan, omegas, cfg)
+
+    out = _linear_contract(phi_q, phi_k, v, key_mask, cfg)
+    if cfg.ppsbn:
+        out = ppsbn.post_sbn(out, layer["sbn_gamma"], layer["sbn_beta"])
+    return _unheads(out, cfg) @ layer["wo"]["w"] + layer["wo"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# trunk + heads
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, p):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * p["g"] + p["b"]
+
+
+def _ffn(layer, x):
+    h = jax.nn.relu(x @ layer["ff1"]["w"] + layer["ff1"]["b"])
+    return h @ layer["ff2"]["w"] + layer["ff2"]["b"]
+
+
+def encode(params, tokens, key_mask, rng_key, cfg: ModelConfig,
+           plan: Optional[RmfPlan]):
+    """Token ids (B, n) -> contextual states (B, n, d_model)."""
+    b, n = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :n, :]
+    keys = jax.random.split(rng_key, cfg.n_layers)
+    for layer, lk in zip(params["layers"], keys):
+        x = x + attention(layer, _layer_norm(x, layer["ln1"]), key_mask, lk,
+                          cfg, plan)
+        x = x + _ffn(layer, _layer_norm(x, layer["ln2"]))
+    return _layer_norm(x, params["ln_f"])
+
+
+def _pool(x, key_mask):
+    if key_mask is None:
+        return jnp.mean(x, axis=1)
+    m = key_mask[:, :, None].astype(x.dtype)
+    return jnp.sum(x * m, axis=1) / (jnp.sum(m, axis=1) + 1e-6)
+
+
+def cls_logits(params, tokens, key_mask, rng_key, cfg, plan):
+    """Classification head (LRA Text / Listops): mean-pool -> dense."""
+    x = encode(params, tokens, key_mask, rng_key, cfg, plan)
+    pooled = _pool(x, key_mask)
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+def retrieval_logits(params, tok1, mask1, tok2, mask2, rng_key, cfg, plan):
+    """Dual-encoder head (LRA Retrieval): shared trunk, concat features."""
+    k1, k2 = jax.random.split(rng_key)
+    e1 = _pool(encode(params, tok1, mask1, k1, cfg, plan), mask1)
+    e2 = _pool(encode(params, tok2, mask2, k2, cfg, plan), mask2)
+    feats = jnp.concatenate([e1, e2, jnp.abs(e1 - e2), e1 * e2], axis=-1)
+    h = jax.nn.relu(feats @ params["head_mlp"]["w"] + params["head_mlp"]["b"])
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def lm_logits(params, tokens, rng_key, cfg, plan):
+    """Causal LM head (Fig-3 translation toy): next-token logits."""
+    x = encode(params, tokens, None, rng_key, cfg, plan)
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(params)))

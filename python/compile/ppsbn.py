@@ -1,0 +1,86 @@
+"""pre-post Scaling Batch Normalization (Algorithm 1).
+
+Two-stage regularization wrapped around the attention contraction:
+
+  preSBN  — batch-normalize Q and K per channel, then l2-scale so every
+            query/key row lies in the unit ball l2(0,1). This is the
+            regime where (a) Schoenberg's theorem makes the RMF estimator
+            unbiased (Thm 1) and (b) the inv/log/sqrt kernels' Maclaurin
+            domains (|t| <= 1) are valid.
+  postSBN — rescale the attention output with trainable (gamma, beta):
+            att <- (gamma * att)^beta, fitting the (t, r) scale factors of
+            Theorem 3 so the pre-stage shrinkage is undone in distribution.
+
+Paper ambiguity, resolved here and validated by tests: Algorithm 1 writes
+`Q <- Q / ||Q||_2` with matrix Q. Dividing by the *Frobenius* norm makes
+every row's norm <= 1 but shrinks rows to O(1/sqrt(n)), collapsing the
+kernelized scores toward a constant; dividing by the *max row norm* also
+guarantees rows in l2(0,1) (the theorem's actual requirement) with the
+least shrinkage, so that is the default. `norm_mode` keeps both plus a
+per-row option for ablations (bench: table2 ablation flag).
+
+postSBN on possibly-negative attention outputs (non-exp kernels can yield
+negative combinations — see Definition 2 discussion) uses the odd power
+extension sign(x)*|gamma*x|^beta so the map stays real and monotone.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NORM_MODES = ("max_row", "fro", "row")
+
+
+def pre_sbn(x, eps: float = 1e-13, norm_mode: str = "max_row", key_mask=None):
+    """Stage 1 of Algorithm 1 for one of Q or K.
+
+    x: (B, H, n, dh). Batch-norm statistics are taken over (batch, seq)
+    per (head, channel) — the BN axes of the baseline implementation —
+    then rows are scaled into the l2 unit ball.
+
+    key_mask (B, n) restricts the statistics to real tokens: Algorithm 1
+    is silent on padding, but unmasked BN statistics would leak padded
+    positions into every output (caught by
+    test_model.py::test_padding_mask_blocks_information).
+    """
+    if key_mask is not None:
+        m = key_mask[:, None, :, None].astype(x.dtype)  # (B, 1, n, 1)
+        count = jnp.sum(m, axis=(0, 2), keepdims=True) * jnp.ones_like(
+            x[:1, :, :1, :]
+        )
+        mu = jnp.sum(x * m, axis=(0, 2), keepdims=True) / (count + eps)
+        var = jnp.sum(((x - mu) ** 2) * m, axis=(0, 2), keepdims=True) / (
+            count + eps
+        )
+        x = (x - mu) / jnp.sqrt(var + eps) * m
+    else:
+        mu = jnp.mean(x, axis=(0, 2), keepdims=True)
+        var = jnp.var(x, axis=(0, 2), keepdims=True)
+        x = (x - mu) / jnp.sqrt(var + eps)
+    # NOTE the 1e-12 inside every sqrt: masked rows are exactly zero and
+    # d sqrt(u)/du -> inf at u = 0, which poisons the whole layer's
+    # gradient with 0 * inf = NaN (caught by the lra_text train run).
+    if norm_mode == "fro":
+        # ||X||_F per (B, H) matrix, the literal Algorithm-1 reading.
+        denom = jnp.sqrt(jnp.sum(x * x, axis=(-2, -1), keepdims=True) + 1e-12)
+    elif norm_mode == "max_row":
+        # max_i ||x_i||_2 per (B, H): tightest scalar scaling that still
+        # puts every row in l2(0,1).
+        row = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + 1e-12)
+        denom = jnp.max(row, axis=-2, keepdims=True)
+    elif norm_mode == "row":
+        # per-row unit normalization (rows on the sphere, not just ball).
+        denom = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + 1e-12)
+    else:
+        raise ValueError(f"norm_mode must be one of {NORM_MODES}")
+    return x / (denom + eps)
+
+
+def post_sbn(att, gamma, beta):
+    """Stage 2 of Algorithm 1: att <- sign(g*att) * |gamma * att|^beta.
+
+    gamma, beta: trainable scalars (broadcastable to att); initialized to 1
+    so the layer starts as identity.
+    """
+    scaled = gamma * att
+    return jnp.sign(scaled) * jnp.power(jnp.abs(scaled) + 1e-12, beta)

@@ -1,0 +1,172 @@
+"""Layer 2: optimizer and train/eval/generate step functions.
+
+Adam is implemented from scratch (no optax dependency on the AOT path) so
+the whole training step lowers to one self-contained HLO module:
+
+    train_step : (params, opt_state, batch, key) -> (params', opt_state',
+                                                     loss, key')
+
+The Rust coordinator (L3) treats (params, opt_state) as an opaque ordered
+buffer list that round-trips through the device via `execute_b`; only
+`loss` is ever copied back to the host (and only every k steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.98
+    adam_eps: float = 1e-9
+    clip_norm: float = 1.0
+    warmup_steps: int = 1000
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {
+        "step": jnp.zeros((), jnp.float32),
+        "m": zeros,
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+    }
+
+
+def _global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in leaves) + 1e-12)
+
+
+def adam_update(params, grads, state, opt: OptConfig):
+    """One Adam step with global-norm clipping and linear warmup."""
+    step = state["step"] + 1.0
+    warm = jnp.minimum(1.0, step / max(opt.warmup_steps, 1))
+    lr = opt.lr * warm
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / gnorm)
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    m = jax.tree_util.tree_map(
+        lambda m_, g: opt.beta1 * m_ + (1 - opt.beta1) * g, state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v_, g: opt.beta2 * v_ + (1 - opt.beta2) * g * g,
+        state["v"], grads,
+    )
+    mhat = jax.tree_util.tree_map(lambda m_: m_ / (1 - opt.beta1**step), m)
+    vhat = jax.tree_util.tree_map(lambda v_: v_ / (1 - opt.beta2**step), v)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + opt.adam_eps),
+        params, mhat, vhat,
+    )
+    return new_params, {"step": step, "m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def _ce(logits, labels):
+    """Mean cross-entropy over the batch; labels int32 (B,)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def _lm_ce(logits, targets, loss_mask):
+    """Masked next-token cross-entropy; returns (mean loss, token count)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * loss_mask
+    count = jnp.sum(loss_mask)
+    return jnp.sum(nll) / (count + 1e-6), count
+
+
+def loss_fn(params, batch, rng_key, cfg: M.ModelConfig, plan):
+    """Task-dispatching loss. `batch` is a dict of int32 arrays."""
+    if cfg.task == "cls":
+        logits = M.cls_logits(
+            params, batch["tokens"], batch["mask"], rng_key, cfg, plan
+        )
+        return _ce(logits, batch["labels"]), logits
+    if cfg.task == "retrieval":
+        logits = M.retrieval_logits(
+            params, batch["tokens1"], batch["mask1"],
+            batch["tokens2"], batch["mask2"], rng_key, cfg, plan,
+        )
+        return _ce(logits, batch["labels"]), logits
+    # lm: teacher-forced next-token prediction on the target span.
+    logits = M.lm_logits(params, batch["tokens"], rng_key, cfg, plan)
+    loss, _ = _lm_ce(
+        logits[:, :-1, :], batch["tokens"][:, 1:], batch["loss_mask"][:, 1:]
+    )
+    return loss, logits
+
+
+# ---------------------------------------------------------------------------
+# lowered entry points
+# ---------------------------------------------------------------------------
+
+
+def train_step(params, opt_state, batch, key, cfg: M.ModelConfig, plan,
+               opt: OptConfig):
+    """One optimization step; pure, AOT-lowerable."""
+    step_key, next_key = jax.random.split(key)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, step_key, cfg, plan), has_aux=True
+    )(params)
+    new_params, new_state = adam_update(params, grads, opt_state, opt)
+    return new_params, new_state, loss, next_key
+
+
+def eval_step(params, batch, key, cfg: M.ModelConfig, plan):
+    """Loss + correct-prediction count (cls/retrieval) or token NLL (lm)."""
+    loss, logits = loss_fn(params, batch, key, cfg, plan)
+    if cfg.task in ("cls", "retrieval"):
+        pred = jnp.argmax(logits, axis=-1)
+        correct = jnp.sum((pred == batch["labels"]).astype(jnp.float32))
+        return loss, correct
+    # lm: return (mean token nll, target token count) for perplexity.
+    _, count = _lm_ce(
+        logits[:, :-1, :], batch["tokens"][:, 1:], batch["loss_mask"][:, 1:]
+    )
+    return loss, count
+
+
+def generate(params, prompt_tokens, prompt_len, key, cfg: M.ModelConfig,
+             plan, max_new: int):
+    """Greedy decode for BLEU (Fig 3): fixed-length scan rollout.
+
+    prompt_tokens: (B, n) with the source prefix in positions < prompt_len
+    and padding after. Each scan step re-runs the full causal forward and
+    writes argmax(logits[pos-1]) at `pos` — O(max_new * forward), fine at
+    toy scale and fully static for AOT.
+    """
+    b, n = prompt_tokens.shape
+
+    def step(carry, i):
+        toks, k = carry
+        k, sub = jax.random.split(k)
+        logits = M.lm_logits(params, toks, sub, cfg, plan)
+        pos = prompt_len + i  # scalar: write position for every row
+        nxt = jnp.argmax(logits[:, pos - 1, :], axis=-1).astype(toks.dtype)
+        keep = (pos < n).astype(toks.dtype)
+        col = jnp.clip(pos, 0, n - 1)
+        upd = toks.at[:, col].set(keep * nxt + (1 - keep) * toks[:, col])
+        return (upd, k), None
+
+    (out, _), _ = jax.lax.scan(
+        step, (prompt_tokens, key), jnp.arange(max_new)
+    )
+    return out

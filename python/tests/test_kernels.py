@@ -1,0 +1,275 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes; fixed-seed cases pin the exact numerics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import maclaurin
+from compile.kernels import ref, rmf, rmfa, softmax_attn
+
+SET = dict(max_examples=12, deadline=None)
+
+
+def _rand(key, shape, scale=0.5):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _bucket_setup(kernel, D, dh, max_deg=6, seed=11):
+    degrees = maclaurin.sample_degrees(D, 2.0, max_deg, seed=seed)
+    scales = maclaurin.feature_scales(kernel, degrees, 2.0)
+    buckets = maclaurin.degree_buckets(degrees)
+    omega = ref.sample_omega(jax.random.PRNGKey(seed), D, max_deg, dh)
+    bo, bs = [], []
+    perm = []
+    for eta, idx in sorted(buckets.items()):
+        W = jnp.transpose(omega[idx, :eta, :], (1, 2, 0))
+        bo.append((int(eta), W))
+        bs.append(jnp.asarray(scales[idx]))
+        perm.extend(idx.tolist())
+    return omega, degrees, scales, bo, bs, np.array(perm)
+
+
+# ---------------------------------------------------------------------------
+# RMF projection
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    rows=st.integers(3, 40),
+    dh=st.sampled_from([4, 8, 16]),
+    D=st.sampled_from([8, 32, 64]),
+    kernel=st.sampled_from(list(maclaurin.KERNELS)),
+)
+def test_rmf_pallas_matches_bucketed_ref(rows, dh, D, kernel):
+    _, _, _, bo, bs, _ = _bucket_setup(kernel, D, dh)
+    x = _rand(jax.random.PRNGKey(rows), (rows, dh))
+    got = rmf.rmf_features_pallas(x, bo, bs, block_m=16)
+    want = ref.rmf_features_bucketed(x, bo, bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+
+def test_rmf_bucketed_is_permutation_of_direct():
+    omega, degrees, scales, bo, bs, perm = _bucket_setup("exp", 32, 8)
+    x = _rand(jax.random.PRNGKey(0), (10, 8))
+    direct = np.asarray(ref.rmf_features(x, omega, degrees, scales))
+    bucketed = np.asarray(ref.rmf_features_bucketed(x, bo, bs))
+    np.testing.assert_allclose(bucketed, direct[:, perm], rtol=1e-4, atol=1e-6)
+
+
+def test_rmf_handles_ragged_row_count():
+    # rows not divisible by block_m exercises the padding path
+    _, _, _, bo, bs, _ = _bucket_setup("inv", 16, 4)
+    x = _rand(jax.random.PRNGKey(1), (37, 4))
+    got = rmf.rmf_features_pallas(x, bo, bs, block_m=16)
+    want = ref.rmf_features_bucketed(x, bo, bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+
+def test_rmf_gradients_flow():
+    _, _, _, bo, bs, _ = _bucket_setup("exp", 16, 4)
+    x = _rand(jax.random.PRNGKey(2), (8, 4))
+
+    def f(x):
+        return jnp.sum(rmf.rmf_features_pallas(x, bo, bs, block_m=8) ** 2)
+
+    g = jax.grad(f)(x)
+    assert g.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(g)))
+    # finite-difference check on one coordinate
+    eps = 1e-3
+    x2 = x.at[0, 0].add(eps)
+    fd = (f(x2) - f(x)) / eps
+    assert float(fd) == pytest.approx(float(g[0, 0]), rel=0.05, abs=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# linear attention contraction
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    g=st.integers(1, 4),
+    n=st.sampled_from([16, 32, 64]),
+    D=st.sampled_from([8, 16]),
+    d=st.sampled_from([4, 8]),
+)
+def test_linear_attn_bidir_matches_ref(g, n, D, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n * 7 + D), 3)
+    phi_q = jnp.abs(_rand(k1, (g, n, D), 1.0))
+    phi_k = jnp.abs(_rand(k2, (g, n, D), 1.0))
+    v = _rand(k3, (g, n, d), 1.0)
+    got = rmfa.linear_attn_bidir(phi_q, phi_k, v, 1e-6, 16, True)
+    want = ref.linear_attn_ref(phi_q, phi_k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-4)
+
+
+@settings(**SET)
+@given(n=st.sampled_from([16, 32, 64]), bn=st.sampled_from([8, 16]))
+def test_linear_attn_causal_matches_ref(n, bn):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + bn), 3)
+    phi_q = jnp.abs(_rand(k1, (2, n, 12), 1.0))
+    phi_k = jnp.abs(_rand(k2, (2, n, 12), 1.0))
+    v = _rand(k3, (2, n, 6), 1.0)
+    got = rmfa.linear_attn_causal(phi_q, phi_k, v, 1e-6, bn, True)
+    want = ref.linear_attn_ref(phi_q, phi_k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-3, atol=5e-4)
+
+
+def test_linear_attn_gradients_match_ref():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    phi_q = jnp.abs(_rand(k1, (1, 32, 8), 1.0))
+    phi_k = jnp.abs(_rand(k2, (1, 32, 8), 1.0))
+    v = _rand(k3, (1, 32, 4), 1.0)
+
+    def f_pallas(pq, pk, vv):
+        return jnp.sum(rmfa.linear_attn_bidir(pq, pk, vv, 1e-6, 16, True) ** 2)
+
+    def f_ref(pq, pk, vv):
+        return jnp.sum(ref.linear_attn_ref(pq, pk, vv) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(phi_q, phi_k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(phi_q, phi_k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-4)
+
+
+def test_linear_attn_causal_gradients_match_ref():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(6), 3)
+    phi_q = jnp.abs(_rand(k1, (1, 16, 8), 1.0))
+    phi_k = jnp.abs(_rand(k2, (1, 16, 8), 1.0))
+    v = _rand(k3, (1, 16, 4), 1.0)
+
+    def f_pallas(pq, pk, vv):
+        return jnp.sum(rmfa.linear_attn_causal(pq, pk, vv, 1e-6, 8, True) ** 2)
+
+    def f_ref(pq, pk, vv):
+        return jnp.sum(ref.linear_attn_ref(pq, pk, vv, causal=True) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(phi_q, phi_k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(phi_q, phi_k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-4)
+
+
+def test_key_mask_removes_padded_keys():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, H, n, D, d = 2, 1, 16, 8, 4
+    phi_q = jnp.abs(_rand(k1, (B, H, n, D), 1.0))
+    phi_k = jnp.abs(_rand(k2, (B, H, n, D), 1.0))
+    v = _rand(k3, (B, H, n, d), 1.0)
+    mask = jnp.concatenate([jnp.ones((B, 10), jnp.int32), jnp.zeros((B, 6), jnp.int32)], 1)
+    masked = ref.linear_attn_ref(phi_q, phi_k, v, key_mask=mask)
+    # equivalent: physically truncate the keys
+    trunc = ref.linear_attn_ref(phi_q, phi_k[:, :, :10], v[:, :, :10])
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(trunc), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# softmax attention baseline
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    g=st.integers(1, 4),
+    n=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+)
+def test_softmax_attn_pallas_matches_ref(g, n, d, causal):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(g * 100 + n + d), 3)
+    q = _rand(k1, (g, n, d), 1.0)
+    k = _rand(k2, (g, n, d), 1.0)
+    v = _rand(k3, (g, n, d), 1.0)
+    got = softmax_attn.softmax_attn(q, k, v, None, causal, 16, 16, True)
+    want = ref.softmax_attn_ref(
+        q[:, None], k[:, None], v[:, None], causal=causal
+    )[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_softmax_attn_key_bias_masks_keys():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(8), 3)
+    g, n, d = 2, 32, 8
+    q, k, v = _rand(k1, (g, n, d)), _rand(k2, (g, n, d)), _rand(k3, (g, n, d))
+    bias = jnp.concatenate(
+        [jnp.zeros((g, 20), jnp.float32), jnp.full((g, 12), -1e9, jnp.float32)], 1
+    )
+    got = softmax_attn.softmax_attn(q, k, v, bias, False, 16, 16, True)
+    mask = jnp.concatenate([jnp.ones((g, 20), jnp.int32), jnp.zeros((g, 12), jnp.int32)], 1)
+    want = ref.softmax_attn_ref(q[:, None], k[:, None], v[:, None], key_mask=mask)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_softmax_attn_gradients_match_ref():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    g, n, d = 1, 32, 8
+    q, k, v = _rand(k1, (g, n, d)), _rand(k2, (g, n, d)), _rand(k3, (g, n, d))
+
+    def f_pallas(q, k, v):
+        return jnp.sum(softmax_attn.softmax_attn(q, k, v, None, False, 16, 16, True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.softmax_attn_ref(q[:, None], k[:, None], v[:, None])[:, 0] ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end approximation quality (Theorems 1-2 at kernel granularity)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel", maclaurin.KERNELS)
+def test_rmfa_expectation_approaches_truncated_kernelized_attn(kernel):
+    B, H, n, dh, D, maxdeg = 1, 1, 24, 8, 48, 6
+    key = jax.random.PRNGKey(17)
+    kq, kk, kv = jax.random.split(key, 3)
+    # ppSBN-style domain: rows in the unit ball
+    q = _rand(kq, (B, H, n, dh), 0.3)
+    k = _rand(kk, (B, H, n, dh), 0.3)
+    v = _rand(kv, (B, H, n, dh), 1.0)
+    degrees = maclaurin.sample_degrees(D, 2.0, maxdeg, seed=5)
+    scales = maclaurin.feature_scales(kernel, degrees, 2.0)
+    outs = []
+    for s in range(24):
+        omega = ref.sample_omega(jax.random.PRNGKey(100 + s), D, maxdeg, dh)
+        outs.append(np.asarray(ref.rmfa_ref(q, k, v, omega, degrees, scales)))
+    approx = np.mean(outs, axis=0)
+    exact = np.asarray(
+        ref.truncated_kernelized_attn_ref(q, k, v, kernel, maxdeg)
+    )
+    err = np.mean((approx - exact) ** 2) / np.mean(exact**2)
+    assert err < 0.05, f"{kernel}: NMSE {err}"
+
+
+def test_rmfa_error_decreases_with_D():
+    B, H, n, dh, maxdeg = 1, 1, 16, 8, 6
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (B, H, n, dh), 0.3)
+    k = _rand(kk, (B, H, n, dh), 0.3)
+    v = _rand(kv, (B, H, n, dh), 1.0)
+    exact = np.asarray(ref.truncated_kernelized_attn_ref(q, k, v, "exp", maxdeg))
+
+    def err_at(D):
+        degrees = maclaurin.sample_degrees(D, 2.0, maxdeg, seed=5)
+        scales = maclaurin.feature_scales("exp", degrees, 2.0)
+        errs = []
+        for s in range(12):
+            omega = ref.sample_omega(jax.random.PRNGKey(s), D, maxdeg, dh)
+            out = np.asarray(ref.rmfa_ref(q, k, v, omega, degrees, scales))
+            errs.append(np.mean((out - exact) ** 2) / np.mean(exact**2))
+        return float(np.mean(errs))
+
+    assert err_at(256) < err_at(16) / 2

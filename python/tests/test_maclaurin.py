@@ -1,0 +1,89 @@
+"""Table-1 coefficient library: closed forms vs expansions, degree law."""
+
+import math
+
+import numpy as np
+import pytest
+
+from compile import maclaurin
+
+
+@pytest.mark.parametrize("kernel", maclaurin.KERNELS)
+def test_coefficients_nonnegative(kernel):
+    for n in range(16):
+        assert maclaurin.coefficient(kernel, n) >= 0.0
+
+
+@pytest.mark.parametrize("kernel", maclaurin.KERNELS)
+@pytest.mark.parametrize("t", [-0.5, -0.2, 0.0, 0.1, 0.3, 0.6, 0.9])
+def test_expansion_matches_closed_form(kernel, t):
+    # inv/log converge geometrically in |t|: a degree-18 truncation at
+    # t=0.9 is ~0.9^19 away for exp-type kernels but ~13% for 1/(1-t);
+    # scale the degree with the distance to the domain edge.
+    degree = 18 if abs(t) <= 0.6 else 60
+    fn = maclaurin.kernel_fn(kernel)
+    exact = float(fn(np.array(t)))
+    series = maclaurin.truncated_kernel_value(kernel, t, degree)
+    assert series == pytest.approx(exact, rel=2e-2, abs=1e-3)
+
+
+def test_exp_and_trigh_identical():
+    # sinh + cosh == exp: both rows of Table 1 share coefficients
+    for n in range(12):
+        assert maclaurin.coefficient("exp", n) == maclaurin.coefficient("trigh", n)
+
+
+def test_known_coefficient_values():
+    assert maclaurin.coefficient("exp", 3) == pytest.approx(1 / 6)
+    assert maclaurin.coefficient("inv", 7) == 1.0
+    assert maclaurin.coefficient("log", 0) == 1.0
+    assert maclaurin.coefficient("log", 4) == pytest.approx(1 / 4)
+    # sqrt: a_4 = (2*4-3)!!/(2^4 4!) = 15/384, NOT the paper's literal
+    # max(1,2N-3)/(2^N N!) = 5/384 (typo; the series test above would fail)
+    assert maclaurin.coefficient("sqrt", 4) == pytest.approx(15 / 384)
+
+
+def test_degree_distribution_normalized_and_geometric():
+    for p in [1.5, 2.0, 3.0]:
+        probs = maclaurin.degree_distribution(p, 8)
+        assert probs.sum() == pytest.approx(1.0)
+        ratios = probs[:-1] / probs[1:]
+        np.testing.assert_allclose(ratios, p, rtol=1e-9)
+
+
+def test_degree_distribution_rejects_bad_p():
+    with pytest.raises(ValueError):
+        maclaurin.degree_distribution(1.0, 8)
+
+
+def test_sample_degrees_distribution():
+    degrees = maclaurin.sample_degrees(20000, 2.0, 8, seed=0)
+    probs = maclaurin.degree_distribution(2.0, 8)
+    counts = np.bincount(degrees, minlength=9) / len(degrees)
+    np.testing.assert_allclose(counts, probs, atol=0.01)
+
+
+def test_feature_scale_recovers_coefficient():
+    # scale^2 * p^-(N+1) == a_N (the untruncated-law telescoping identity)
+    degrees = np.array([0, 1, 2, 5], dtype=np.int32)
+    for kernel in maclaurin.KERNELS:
+        scales = maclaurin.feature_scales(kernel, degrees, 2.0)
+        for d, s in zip(degrees, scales):
+            back = float(s) ** 2 * 2.0 ** -(int(d) + 1)
+            assert back == pytest.approx(maclaurin.coefficient(kernel, int(d)), rel=1e-5)
+
+
+def test_degree_buckets_partition():
+    degrees = maclaurin.sample_degrees(256, 2.0, 8, seed=3)
+    buckets = maclaurin.degree_buckets(degrees)
+    total = sum(len(v) for v in buckets.values())
+    assert total == 256
+    for eta, idx in buckets.items():
+        assert np.all(degrees[idx] == eta)
+
+
+def test_unknown_kernel_raises():
+    with pytest.raises(ValueError):
+        maclaurin.coefficient("gauss", 1)
+    with pytest.raises(ValueError):
+        maclaurin.kernel_fn("gauss")

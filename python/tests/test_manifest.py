@@ -1,0 +1,95 @@
+"""Artifact manifest self-check: the python->rust contract."""
+
+import json
+import os
+import re
+
+import pytest
+
+ART = os.environ.get(
+    "MACFORMER_ARTIFACTS",
+    os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_all_table2_cells_present(manifest):
+    names = {m["name"] for m in manifest["modules"]}
+    for task in ["lra_text", "lra_listops", "lra_retrieval"]:
+        for variant in ["softmax", "rfa", "mac_exp", "mac_inv", "mac_trigh",
+                        "mac_log", "mac_sqrt"]:
+            for role in ["init", "train", "eval"]:
+                assert f"{task}.{variant}.{role}" in names
+
+
+def test_fig3_families_present(manifest):
+    names = {m["name"] for m in manifest["modules"]}
+    for suffix in ["base", "ppsbn"]:
+        for role in ["init", "train", "eval", "generate"]:
+            assert f"translation.softmax.{suffix}.{role}" in names
+
+
+def test_micro_grid_present(manifest):
+    names = {m["name"] for m in manifest["modules"]}
+    for n in manifest["micro"]["lengths"]:
+        assert f"micro.softmax.n{n}" in names
+        for D in manifest["micro"]["features"]:
+            assert f"micro.rmfa_exp.n{n}.D{D}" in names
+
+
+def test_files_exist_and_are_hlo(manifest):
+    for m in manifest["modules"]:
+        path = os.path.join(ART, m["file"])
+        assert os.path.exists(path), m["file"]
+        with open(path) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), m["file"]
+
+
+def test_entry_parameter_counts_match_specs(manifest):
+    """The HLO entry signature must agree with the manifest arity —
+    guards against jax dropping unused args (keep_unused regression)."""
+    for m in manifest["modules"]:
+        path = os.path.join(ART, m["file"])
+        with open(path) as f:
+            text = f.read()
+        entry = text[text.rindex("ENTRY"):]
+        n_params = len(set(re.findall(r"parameter\((\d+)\)", entry)))
+        role = m["role"]
+        if role == "init":
+            expected = 1
+        elif role == "train":
+            expected = m["n_params"] + m["n_opt"] + len(m["batch_specs"]) + 1
+        elif role == "eval":
+            expected = m["n_params"] + len(m["batch_specs"]) + 1
+        elif role == "generate":
+            expected = m["n_params"] + 2
+        elif role == "micro_softmax":
+            expected = 3
+        elif role == "micro_rmfa":
+            expected = 4
+        else:
+            continue
+        assert n_params == expected, f"{m['name']}: {n_params} vs {expected}"
+
+
+def test_state_specs_consistent(manifest):
+    for m in manifest["modules"]:
+        if m["role"] != "train":
+            continue
+        assert len(m["param_specs"]) == m["n_params"], m["name"]
+        assert len(m["opt_specs"]) == m["n_opt"], m["name"]
+        for spec in m["param_specs"] + m["opt_specs"]:
+            assert spec["dtype"] == "float32", m["name"]
+
+
+def test_manifest_hash_tracks_sources(manifest):
+    assert re.fullmatch(r"[0-9a-f]{16}", manifest["input_hash"])

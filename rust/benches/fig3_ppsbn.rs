@@ -1,0 +1,33 @@
+//! Bench E4 — Fig 3: loss / perplexity / BLEU per epoch for the base
+//! Transformer vs Transformer + ppSBN on the synthetic translation task.
+//!
+//! Knobs: MACFORMER_BENCH_EPOCHS, MACFORMER_BENCH_SPE (steps/epoch).
+//!
+//! Run with: `cargo bench --bench fig3_ppsbn`
+
+use macformer::config::RunConfig;
+use macformer::coordinator::fig3;
+use macformer::runtime::Registry;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    macformer::util::logging::init();
+    let epochs = env_usize("MACFORMER_BENCH_EPOCHS", 5);
+    let spe = env_usize("MACFORMER_BENCH_SPE", 30);
+    let cfg = RunConfig {
+        seed: 42,
+        train_examples: (spe * 32).max(512),
+        eval_examples: 96,
+        ..RunConfig::default()
+    };
+    let reg = Registry::open(std::path::Path::new(&cfg.artifacts_dir))?;
+    println!("=== E4 / Fig 3: ppSBN ablation ({epochs} epochs x {spe} steps) ===");
+    let result = fig3::run(&reg, &cfg, epochs, spe)?;
+    println!("{}", fig3::render(&result));
+    std::fs::write("bench_fig3.json", fig3::to_json(&result).to_string())?;
+    println!("raw curves written to bench_fig3.json");
+    Ok(())
+}

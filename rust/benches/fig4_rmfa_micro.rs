@@ -1,0 +1,39 @@
+//! Bench E2+E3 — Fig 4a (log NMSE) and Fig 4b (log acceleration ratio) of
+//! RMFA_exp vs exact softmax attention, over the paper\'s (length, D) grid.
+//!
+//! Shapes follow the paper: batch 16 x 8 heads, d = 64, preSBN eps 1e-12.
+//! Knobs: MACFORMER_BENCH_LENGTHS / _FEATURES (csv), _REPEATS.
+//!
+//! Run with: `cargo bench --bench fig4_rmfa_micro`
+
+use macformer::coordinator::microbench;
+use macformer::runtime::Registry;
+
+fn env_csv(name: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(name)
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() -> anyhow::Result<()> {
+    macformer::util::logging::init();
+    let reg = Registry::open_default()?;
+    let lengths = env_csv("MACFORMER_BENCH_LENGTHS", &reg.micro_lengths);
+    let features = env_csv("MACFORMER_BENCH_FEATURES", &reg.micro_features);
+    let repeats: usize = std::env::var("MACFORMER_BENCH_REPEATS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    println!(
+        "=== E2/E3 / Fig 4: RMFA_exp vs softmax attention (lengths {lengths:?}, D {features:?}, {repeats} repeats) ==="
+    );
+    let cells = microbench::run_grid(&reg, &lengths, &features, repeats, 7)?;
+    println!("{}", microbench::render(&cells));
+    std::fs::write(
+        "bench_fig4.json",
+        microbench::to_json(&cells).to_string(),
+    )?;
+    println!("raw cells written to bench_fig4.json");
+    Ok(())
+}

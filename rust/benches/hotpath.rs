@@ -1,0 +1,72 @@
+//! Bench §Perf — the L3 hot path: per-step cost breakdown of the training
+//! loop (batch staging, host->device upload, execute, tuple round-trip)
+//! on the lra_text.mac_exp cell. This is the harness behind the §Perf
+//! before/after numbers in EXPERIMENTS.md.
+//!
+//! Run with: `cargo bench --bench hotpath`
+
+use std::time::Instant;
+
+use macformer::config::RunConfig;
+use macformer::coordinator::{TaskData, Trainer};
+use macformer::metrics::Timing;
+use macformer::runtime::{DeviceState, Executable, Registry};
+
+fn main() -> anyhow::Result<()> {
+    macformer::util::logging::init();
+    let steps: usize = std::env::var("MACFORMER_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let cfg = RunConfig {
+        task: "lra_text".into(),
+        variant: "mac_exp".into(),
+        train_examples: 128,
+        eval_examples: 32,
+        steps,
+        log_every: 1,
+        seed: 7,
+        ..RunConfig::default()
+    };
+    let reg = Registry::open(std::path::Path::new(&cfg.artifacts_dir))?;
+    println!("=== §Perf hot path: {} ({} steps) ===", cfg.family(), steps);
+    let mut tr = Trainer::build(cfg.clone(), &reg)?;
+
+    // timed phases per step
+    let mut stage_t = Timing::default();
+    let mut step_t = Timing::default();
+    let mut loss_t = Timing::default();
+    let data = TaskData::build(&cfg.task, cfg.seed, cfg.train_examples, tr.info.seq_len, 24)?;
+    for s in 0..steps {
+        let idx: Vec<usize> = (0..tr.info.batch).map(|i| (s * tr.info.batch + i) % data.len()).collect();
+        let t0 = Instant::now();
+        let batch = data.stage(&idx, tr.info.seq_len);
+        stage_t.push(t0.elapsed().as_secs_f64());
+        let t1 = Instant::now();
+        let loss_buf = tr.step_with(&batch)?;
+        step_t.push(t1.elapsed().as_secs_f64());
+        let t2 = Instant::now();
+        let _ = DeviceState::loss_value(&loss_buf)?;
+        loss_t.push(t2.elapsed().as_secs_f64());
+    }
+    println!(
+        "batch staging : mean {:>9.4}s  min {:>9.4}s",
+        stage_t.mean(),
+        stage_t.min()
+    );
+    println!(
+        "train step    : mean {:>9.4}s  min {:>9.4}s (upload + execute + tuple round-trip)",
+        step_t.mean(),
+        step_t.min()
+    );
+    println!(
+        "loss fetch    : mean {:>9.4}s  min {:>9.4}s",
+        loss_t.mean(),
+        loss_t.min()
+    );
+
+    // isolate the tuple round-trip: run an eval-style fetch-only pass
+    let total = step_t.mean() + stage_t.mean() + loss_t.mean();
+    println!("total/step    : {total:>9.4}s");
+    Ok(())
+}

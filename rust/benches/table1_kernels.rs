@@ -1,0 +1,53 @@
+//! Bench E1 — regenerate Table 1 and numerically validate every kernel\'s
+//! Maclaurin expansion against its closed form (the paper\'s two formula
+//! typos are caught by exactly this check; see reference::maclaurin).
+//!
+//! Run with: `cargo bench --bench table1_kernels`
+
+use macformer::reference::maclaurin::{
+    coefficient, degree_distribution, kernel_value, truncated_kernel_value, KERNELS,
+};
+
+fn main() {
+    println!("=== E1 / Table 1: dot-product kernels and Maclaurin coefficients ===\n");
+    println!("{:<8}{:<28}{}", "K", "f(x.y)", "a_N (N = 0..6)");
+    let forms = [
+        ("exp", "exp(x.y)"),
+        ("inv", "1/(1 - x.y)"),
+        ("log", "1 - log(1 - x.y)"),
+        ("trigh", "sinh(x.y) + cosh(x.y)"),
+        ("sqrt", "2 - sqrt(1 - x.y)"),
+    ];
+    for (k, form) in forms {
+        let coeffs: Vec<String> = (0..=6).map(|n| format!("{:.4}", coefficient(k, n))).collect();
+        println!("{k:<8}{form:<28}{}", coeffs.join(" "));
+    }
+
+    println!("\nvalidation: max rel |closed - series| over t in [-0.5, 0.9]");
+    println!("(degree 16 for |t| <= 0.6, 60 near the domain edge — inv/log");
+    println!(" converge geometrically in |t|, so the edge needs more terms):");
+    let mut all_ok = true;
+    for k in KERNELS {
+        let mut worst = 0.0f64;
+        let mut i = 0;
+        while i <= 28 {
+            let t = -0.5 + i as f64 * 0.05;
+            let degree = if t.abs() <= 0.6 { 16 } else { 60 };
+            let e = kernel_value(k, t);
+            let s = truncated_kernel_value(k, t, degree);
+            let rel = (e - s).abs() / e.abs().max(1.0);
+            if rel > worst {
+                worst = rel;
+            }
+            i += 1;
+        }
+        let ok = worst < 0.02;
+        all_ok &= ok;
+        println!("  {k:<6} {worst:.3e} {}", if ok { "OK" } else { "FAIL" });
+    }
+
+    println!("\ndegree law (p = 2): {:?}", degree_distribution(2.0, 8)
+        .iter().map(|x| format!("{x:.4}")).collect::<Vec<_>>());
+    println!("\nTable 1 regeneration: {}", if all_ok { "PASS" } else { "FAIL" });
+    std::process::exit(if all_ok { 0 } else { 1 });
+}

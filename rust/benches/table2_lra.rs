@@ -1,0 +1,71 @@
+//! Bench E5 — Table 2: train time / peak memory / accuracy for the base
+//! Transformer, RFA, and the five Macformer kernels on the three LRA
+//! tasks, normalized to the base Transformer (paper protocol: one
+//! subprocess per cell so RSS peaks do not contaminate).
+//!
+//! Full-fidelity runs take hours on CPU; defaults here are sized for a
+//! meaningful *shape* comparison (who is faster, by what factor). Knobs:
+//! MACFORMER_BENCH_STEPS, _TASKS, _VARIANTS, _EXAMPLES.
+//!
+//! Run with: `cargo bench --bench table2_lra`
+
+use macformer::config::RunConfig;
+use macformer::coordinator::sweep;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_csv(name: &str, default: &str) -> Vec<String> {
+    std::env::var(name)
+        .unwrap_or_else(|_| default.to_string())
+        .split(',')
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    macformer::util::logging::init();
+    let steps = env_usize("MACFORMER_BENCH_STEPS", 10);
+    let examples = env_usize("MACFORMER_BENCH_EXAMPLES", 128);
+    let tasks = env_csv("MACFORMER_BENCH_TASKS", "lra_text,lra_listops,lra_retrieval");
+    let variants_owned = env_csv(
+        "MACFORMER_BENCH_VARIANTS",
+        "softmax,rfa,mac_exp,mac_inv,mac_trigh,mac_log,mac_sqrt",
+    );
+    let variants: Vec<&str> = variants_owned.iter().map(|s| s.as_str()).collect();
+
+    // NOTE: the subprocess binary must exist — cargo bench builds it first
+    // via the dependency on the bin target? It does not; require release
+    // binary built by `make build` and fall back to building here.
+    let bin = std::path::Path::new("target/release/macformer");
+    if !bin.exists() {
+        eprintln!("building release binary for subprocess cells...");
+        let ok = std::process::Command::new("cargo")
+            .args(["build", "--release", "--offline", "--bin", "macformer"])
+            .status()?
+            .success();
+        anyhow::ensure!(ok, "failed to build macformer binary");
+    }
+
+    let cfg = RunConfig {
+        steps,
+        train_examples: examples,
+        eval_examples: 64,
+        log_every: 1,
+        seed: 42,
+        ..RunConfig::default()
+    };
+    println!(
+        "=== E5 / Table 2: {} steps/cell, {} train examples, tasks {tasks:?} ===",
+        steps, examples
+    );
+    let mut tables = Vec::new();
+    for task in &tasks {
+        tables.push(sweep::run_task_with_binary(&cfg, task, &variants, bin)?);
+    }
+    println!("{}", sweep::render_table(&tables));
+    std::fs::write("bench_table2.json", sweep::to_json(&tables).to_string())?;
+    println!("raw cells written to bench_table2.json");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Experiment configuration: typed, layered (defaults < JSON file < CLI
+//! flags), JSON round-trippable.
+//!
+//! One `RunConfig` fully describes a training run; the sweep orchestrator
+//! materializes one per Table-2 cell and passes it to subprocesses as
+//! JSON, so a run is reproducible from its config alone.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Value};
+
+/// Configuration for one training/eval run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub task: String,
+    pub variant: String,
+    /// model-family suffix for the Fig-3 cells ("", ".base", ".ppsbn")
+    pub suffix: String,
+    pub seed: u64,
+    pub train_examples: usize,
+    pub eval_examples: usize,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub artifacts_dir: String,
+    pub checkpoint: Option<String>,
+    pub out_json: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            task: "lra_text".into(),
+            variant: "mac_exp".into(),
+            suffix: String::new(),
+            seed: 42,
+            train_examples: 512,
+            eval_examples: 128,
+            steps: 200,
+            eval_every: 100,
+            log_every: 10,
+            artifacts_dir: "artifacts".into(),
+            checkpoint: None,
+            out_json: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Artifact family prefix, e.g. "lra_text.mac_exp" or
+    /// "translation.softmax.ppsbn".
+    pub fn family(&self) -> String {
+        format!("{}.{}{}", self.task, self.variant, self.suffix)
+    }
+
+    /// Overlay CLI flags onto this config.
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(f) = a.opt_flag("config") {
+            let text = std::fs::read_to_string(&f)
+                .map_err(|e| anyhow!("reading config {f}: {e}"))?;
+            *self = RunConfig::from_json(
+                &json::parse(&text).map_err(|e| anyhow!("config {f}: {e}"))?,
+            )?;
+        }
+        self.task = a.str_flag("task", &self.task);
+        self.variant = a.str_flag("variant", &self.variant);
+        self.suffix = a.str_flag("suffix", &self.suffix);
+        self.seed = a.u64_flag("seed", self.seed).map_err(|e| anyhow!(e))?;
+        self.train_examples = a
+            .usize_flag("train-examples", self.train_examples)
+            .map_err(|e| anyhow!(e))?;
+        self.eval_examples = a
+            .usize_flag("eval-examples", self.eval_examples)
+            .map_err(|e| anyhow!(e))?;
+        self.steps = a.usize_flag("steps", self.steps).map_err(|e| anyhow!(e))?;
+        self.eval_every = a
+            .usize_flag("eval-every", self.eval_every)
+            .map_err(|e| anyhow!(e))?;
+        self.log_every = a
+            .usize_flag("log-every", self.log_every)
+            .map_err(|e| anyhow!(e))?;
+        self.artifacts_dir = a.str_flag("artifacts", &self.artifacts_dir);
+        self.checkpoint = a.opt_flag("checkpoint").or(self.checkpoint.take());
+        self.out_json = a.opt_flag("out-json").or(self.out_json.take());
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("task", Value::str(&self.task)),
+            ("variant", Value::str(&self.variant)),
+            ("suffix", Value::str(&self.suffix)),
+            ("seed", Value::num(self.seed as f64)),
+            ("train_examples", Value::num(self.train_examples as f64)),
+            ("eval_examples", Value::num(self.eval_examples as f64)),
+            ("steps", Value::num(self.steps as f64)),
+            ("eval_every", Value::num(self.eval_every as f64)),
+            ("log_every", Value::num(self.log_every as f64)),
+            ("artifacts_dir", Value::str(&self.artifacts_dir)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        Ok(RunConfig {
+            task: v.get("task").as_str().unwrap_or(&d.task).to_string(),
+            variant: v.get("variant").as_str().unwrap_or(&d.variant).to_string(),
+            suffix: v.get("suffix").as_str().unwrap_or("").to_string(),
+            seed: v.get("seed").as_i64().unwrap_or(d.seed as i64) as u64,
+            train_examples: v
+                .get("train_examples")
+                .as_usize()
+                .unwrap_or(d.train_examples),
+            eval_examples: v.get("eval_examples").as_usize().unwrap_or(d.eval_examples),
+            steps: v.get("steps").as_usize().unwrap_or(d.steps),
+            eval_every: v.get("eval_every").as_usize().unwrap_or(d.eval_every),
+            log_every: v.get("log_every").as_usize().unwrap_or(d.log_every),
+            artifacts_dir: v
+                .get("artifacts_dir")
+                .as_str()
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            checkpoint: None,
+            out_json: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = RunConfig::default();
+        c.task = "lra_listops".into();
+        c.steps = 777;
+        let v = c.to_json();
+        let back = RunConfig::from_json(&v).unwrap();
+        assert_eq!(back.task, "lra_listops");
+        assert_eq!(back.steps, 777);
+    }
+
+    #[test]
+    fn flags_override_defaults() {
+        let toks: Vec<String> = "train --task translation --variant softmax --suffix .ppsbn --steps 5"
+            .split_whitespace()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&toks).unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.family(), "translation.softmax.ppsbn");
+        assert_eq!(c.steps, 5);
+    }
+}

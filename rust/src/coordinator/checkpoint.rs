@@ -1,0 +1,53 @@
+//! Checkpointing: persist the opaque device state + run metadata.
+//!
+//! Layout: `<path>` is a tensor bundle (tensor/io.rs format) whose entries
+//! are "state_<i>" blobs in manifest order plus a "meta" tensor packing
+//! [key0, key1, steps_done] as f32 bit-views of u32 (lossless for the
+//! values involved: keys are arbitrary u32 -> stored via bit reinterpret).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{DeviceState, ModuleInfo};
+use crate::tensor::{read_bundle, write_bundle, Tensor};
+
+pub fn save(path: &Path, state: &DeviceState, info: &ModuleInfo) -> Result<()> {
+    let blobs = state.download()?;
+    let key = state.download_key()?;
+    let mut entries: Vec<(String, Tensor)> = Vec::with_capacity(blobs.len() + 1);
+    let specs: Vec<_> = info.param_specs.iter().chain(info.opt_specs.iter()).collect();
+    for (i, blob) in blobs.into_iter().enumerate() {
+        let shape = specs
+            .get(i)
+            .map(|s| s.shape.clone())
+            .unwrap_or_else(|| vec![blob.len()]);
+        entries.push((format!("state_{i:04}"), Tensor::from_vec(&shape, blob)));
+    }
+    let meta = vec![
+        f32::from_bits(key[0]),
+        f32::from_bits(key[1]),
+        state.steps_done as f32,
+    ];
+    entries.push(("meta".to_string(), Tensor::from_vec(&[3], meta)));
+    write_bundle(path, &entries).map_err(|e| anyhow!("checkpoint write: {e}"))
+}
+
+pub fn load(path: &Path, info: &ModuleInfo) -> Result<DeviceState> {
+    let entries = read_bundle(path).map_err(|e| anyhow!("checkpoint read: {e}"))?;
+    let mut blobs: Vec<Vec<f32>> = Vec::new();
+    let mut meta: Option<Vec<f32>> = None;
+    for (name, t) in entries {
+        if name == "meta" {
+            meta = Some(t.data);
+        } else {
+            blobs.push(t.data);
+        }
+    }
+    let meta = meta.ok_or_else(|| anyhow!("checkpoint missing meta entry"))?;
+    if meta.len() != 3 {
+        bail!("bad meta entry");
+    }
+    let key = [meta[0].to_bits(), meta[1].to_bits()];
+    DeviceState::restore(info, &blobs, key, meta[2] as u64)
+}

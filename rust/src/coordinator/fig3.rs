@@ -1,0 +1,112 @@
+//! Fig-3 harness: Transformer with vs without ppSBN on the synthetic
+//! translation task, tracking loss / perplexity / BLEU per epoch.
+//!
+//! Mirrors the paper's toy experiment: same base model (softmax
+//! attention), ppSBN wrapped around the attention layer in one arm,
+//! identical data/seeds in both arms.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::metrics::Perplexity;
+use crate::runtime::Registry;
+use crate::util::json::Value;
+
+use super::trainer::Trainer;
+
+/// Per-epoch curve point for one arm.
+#[derive(Debug, Clone)]
+pub struct EpochPoint {
+    pub epoch: usize,
+    pub loss: f64,
+    pub perplexity: f64,
+    pub bleu: f64,
+}
+
+/// Full Fig-3 result: two arms, aligned epochs.
+#[derive(Debug, Clone)]
+pub struct Fig3Result {
+    pub base: Vec<EpochPoint>,
+    pub ppsbn: Vec<EpochPoint>,
+}
+
+/// Train both arms for `epochs` x `steps_per_epoch` steps.
+pub fn run(
+    reg: &Registry,
+    base_cfg: &RunConfig,
+    epochs: usize,
+    steps_per_epoch: usize,
+) -> Result<Fig3Result> {
+    let mut arms = Vec::new();
+    for suffix in [".base", ".ppsbn"] {
+        let mut cfg = base_cfg.clone();
+        cfg.task = "translation".into();
+        cfg.variant = "softmax".into();
+        cfg.suffix = suffix.into();
+        cfg.steps = epochs * steps_per_epoch;
+        let mut tr = Trainer::build(cfg, reg)?;
+        let mut curve = Vec::new();
+        for e in 1..=epochs {
+            let mut ppl_epoch = Perplexity::default();
+            let mut loss_sum = 0.0;
+            for _ in 0..steps_per_epoch {
+                let buf = tr.step()?;
+                let loss = crate::runtime::DeviceState::loss_value(&buf)? as f64;
+                loss_sum += loss;
+                ppl_epoch.update(loss, 1.0);
+            }
+            let (eval_loss, bleu, ppl) = tr.evaluate()?;
+            let point = EpochPoint {
+                epoch: e,
+                loss: loss_sum / steps_per_epoch as f64,
+                perplexity: if ppl.is_nan() { eval_loss.exp() } else { ppl },
+                bleu,
+            };
+            log::info!(
+                "fig3 {suffix} epoch {e}: loss {:.4} ppl {:.2} bleu {:.2}",
+                point.loss,
+                point.perplexity,
+                point.bleu
+            );
+            curve.push(point);
+        }
+        arms.push(curve);
+    }
+    let ppsbn = arms.pop().unwrap();
+    let base = arms.pop().unwrap();
+    Ok(Fig3Result { base, ppsbn })
+}
+
+/// ASCII rendering of the three panels.
+pub fn render(r: &Fig3Result) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "\nFig 3: Transformer +- ppSBN on synthetic Multi30K-scale translation\n{:>6} | {:>10} {:>10} | {:>10} {:>10} | {:>8} {:>8}\n",
+        "epoch", "loss", "loss+sbn", "ppl", "ppl+sbn", "bleu", "bleu+sbn"
+    ));
+    for (b, p) in r.base.iter().zip(&r.ppsbn) {
+        s.push_str(&format!(
+            "{:>6} | {:>10.4} {:>10.4} | {:>10.2} {:>10.2} | {:>8.2} {:>8.2}\n",
+            b.epoch, b.loss, p.loss, b.perplexity, p.perplexity, b.bleu, p.bleu
+        ));
+    }
+    s
+}
+
+pub fn to_json(r: &Fig3Result) -> Value {
+    let arm = |pts: &[EpochPoint]| {
+        Value::Arr(
+            pts.iter()
+                .map(|p| {
+                    Value::obj(vec![
+                        ("epoch", Value::num(p.epoch as f64)),
+                        ("loss", Value::num(p.loss)),
+                        ("perplexity", Value::num(p.perplexity)),
+                        ("bleu", Value::num(p.bleu)),
+                    ])
+                })
+                .collect(),
+        )
+    };
+    Value::obj(vec![("base", arm(&r.base)), ("ppsbn", arm(&r.ppsbn))])
+}

@@ -1,0 +1,197 @@
+//! Fig-4 micro-benchmark harness: RMFA_exp vs exact softmax attention.
+//!
+//! For every (length n, feature dim D) cell of the paper's simulation
+//! grid: generate random (q, k, v) with the paper's shape (batch 16 x
+//! 8 heads x n x 64), run both compiled attention modules, and record
+//!   * Fig 4a — log10 NMSE between RMFA output and exact attention, and
+//!   * Fig 4b — log10 acceleration ratio t_softmax / t_rmfa.
+//! Both modules apply identical in-graph preSBN (eps = 1e-12), matching
+//! the paper's preprocessing.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::{nmse, Timing};
+use crate::runtime::{Executable, HostArg, Registry};
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// One (n, D) cell measurement.
+#[derive(Debug, Clone)]
+pub struct MicroCell {
+    pub n: usize,
+    pub feature_dim: usize,
+    pub nmse: f64,
+    pub softmax_seconds: f64,
+    pub rmfa_seconds: f64,
+}
+
+impl MicroCell {
+    pub fn log10_nmse(&self) -> f64 {
+        self.nmse.log10()
+    }
+    /// log10(t_softmax / t_rmfa): positive = RMFA faster.
+    pub fn log10_speedup(&self) -> f64 {
+        (self.softmax_seconds / self.rmfa_seconds).log10()
+    }
+}
+
+/// Run the grid. `repeats` controls timing stability (paper: 100; CPU
+/// default lower). Returns cells in (n-major, D-minor) order.
+pub fn run_grid(
+    reg: &Registry,
+    lengths: &[usize],
+    features: &[usize],
+    repeats: usize,
+    seed: u64,
+) -> Result<Vec<MicroCell>> {
+    let g = 16 * 8; // paper: batch 16, 8 heads
+    let d = 64;
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for &n in lengths {
+        let sm_info = reg.get(&format!("micro.softmax.n{n}"))?;
+        let sm = Executable::compile_file(&sm_info.name, &reg.hlo_path(sm_info))?;
+        // Shared inputs per length (both paths see identical data).
+        let numel = g * n * d;
+        let mk = |rng: &mut Rng| -> Vec<f32> {
+            (0..numel).map(|_| rng.normal() * 0.5).collect()
+        };
+        let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let dims = vec![g, n, d];
+        let q_buf = Executable::upload(&HostArg::F32(dims.clone(), q))?;
+        let k_buf = Executable::upload(&HostArg::F32(dims.clone(), k))?;
+        let v_buf = Executable::upload(&HostArg::F32(dims.clone(), v))?;
+
+        // exact softmax output + timing
+        let mut sm_t = Timing::default();
+        let mut exact = Vec::new();
+        for r in 0..repeats.max(1) {
+            let t0 = Instant::now();
+            let outs = sm.run_buffers_ref(&[&q_buf, &k_buf, &v_buf])?;
+            // fetch synchronizes: include device->host in both paths
+            let data = Executable::fetch_f32(&outs[0])?;
+            sm_t.push(t0.elapsed().as_secs_f64());
+            if r == 0 {
+                exact = data;
+            }
+        }
+
+        for &feat in features {
+            let rm_info = reg.get(&format!("micro.rmfa_exp.n{n}.D{feat}"))?;
+            let rm = Executable::compile_file(&rm_info.name, &reg.hlo_path(rm_info))?;
+            let mut rm_t = Timing::default();
+            let mut err_sum = 0.0;
+            let mut err_n = 0usize;
+            for r in 0..repeats.max(1) {
+                let key = Executable::upload(&HostArg::key([seed as u32, r as u32]))?;
+                let t0 = Instant::now();
+                let outs = rm.run_buffers_ref(&[&q_buf, &k_buf, &v_buf, &key])?;
+                let approx = Executable::fetch_f32(&outs[0])?;
+                rm_t.push(t0.elapsed().as_secs_f64());
+                err_sum += nmse(&approx, &exact);
+                err_n += 1;
+            }
+            let cell = MicroCell {
+                n,
+                feature_dim: feat,
+                nmse: err_sum / err_n as f64,
+                softmax_seconds: sm_t.min(),
+                rmfa_seconds: rm_t.min(),
+            };
+            log::info!(
+                "micro n={n} D={feat}: log10(nmse)={:.2} log10(speedup)={:+.2}",
+                cell.log10_nmse(),
+                cell.log10_speedup()
+            );
+            out.push(cell);
+        }
+    }
+    Ok(out)
+}
+
+/// Render the two Fig-4 panels as ASCII heat tables.
+pub fn render(cells: &[MicroCell]) -> String {
+    let mut lengths: Vec<usize> = cells.iter().map(|c| c.n).collect();
+    lengths.dedup();
+    let mut features: Vec<usize> = cells.iter().map(|c| c.feature_dim).collect();
+    features.sort_unstable();
+    features.dedup();
+    let lookup = |n: usize, f: usize| cells.iter().find(|c| c.n == n && c.feature_dim == f);
+    let mut s = String::new();
+    for (title, get) in [
+        ("Fig 4a: log10 NMSE (RMFA_exp vs softmax attention)",
+         Box::new(|c: &MicroCell| c.log10_nmse()) as Box<dyn Fn(&MicroCell) -> f64>),
+        ("Fig 4b: log10 acceleration ratio (softmax / RMFA)",
+         Box::new(|c: &MicroCell| c.log10_speedup())),
+    ] {
+        s.push_str(&format!("\n{title}\n{:>8}", "n \\ D"));
+        for f in &features {
+            s.push_str(&format!("{f:>9}"));
+        }
+        s.push('\n');
+        for n in &lengths {
+            s.push_str(&format!("{n:>8}"));
+            for f in &features {
+                match lookup(*n, *f) {
+                    Some(c) => s.push_str(&format!("{:>9.2}", get(c))),
+                    None => s.push_str(&format!("{:>9}", "-")),
+                }
+            }
+            s.push('\n');
+        }
+    }
+    s
+}
+
+pub fn to_json(cells: &[MicroCell]) -> Value {
+    Value::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                Value::obj(vec![
+                    ("n", Value::num(c.n as f64)),
+                    ("D", Value::num(c.feature_dim as f64)),
+                    ("nmse", Value::num(c.nmse)),
+                    ("softmax_seconds", Value::num(c.softmax_seconds)),
+                    ("rmfa_seconds", Value::num(c.rmfa_seconds)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_math() {
+        let c = MicroCell {
+            n: 256,
+            feature_dim: 64,
+            nmse: 0.01,
+            softmax_seconds: 1.0,
+            rmfa_seconds: 0.1,
+        };
+        assert!((c.log10_nmse() + 2.0).abs() < 1e-9);
+        assert!((c.log10_speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_includes_axes() {
+        let c = MicroCell {
+            n: 256,
+            feature_dim: 64,
+            nmse: 0.01,
+            softmax_seconds: 1.0,
+            rmfa_seconds: 0.1,
+        };
+        let s = render(&[c]);
+        assert!(s.contains("256"));
+        assert!(s.contains("64"));
+        assert!(s.contains("Fig 4a"));
+        assert!(s.contains("Fig 4b"));
+    }
+}

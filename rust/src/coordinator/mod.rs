@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: everything that happens at run time.
+//!
+//! The paper's contribution is the attention approximation (L1/L2), so —
+//! per the architecture rule — L3 is the *experiment system* around it:
+//! dataset synthesis, batch scheduling, the device-resident training loop,
+//! periodic evaluation (accuracy / perplexity / greedy-decode BLEU),
+//! checkpoints, and the multi-process Table-2 sweep orchestrator.
+
+pub mod checkpoint;
+pub mod fig3;
+pub mod microbench;
+pub mod sweep;
+pub mod task_data;
+pub mod trainer;
+
+pub use task_data::TaskData;
+pub use trainer::{RunReport, Trainer};

@@ -1,0 +1,236 @@
+//! Table-2 sweep orchestrator: run every (task, variant) cell in an
+//! isolated subprocess, normalize against the base Transformer, and emit
+//! the paper-style table.
+//!
+//! Subprocess isolation matters for the *memory* column: peak RSS is a
+//! process-lifetime high-water mark, so sharing a process across variants
+//! would contaminate later cells with earlier peaks. The child is this
+//! same binary invoked as `macformer train --out-json <tmp>`; the parent
+//! reads the JSON report back. This mirrors (and improves on) the paper's
+//! protocol of sequential per-model runs on one GPU.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::RunConfig;
+use crate::util::json::{self, Value};
+
+/// One Table-2 cell result.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub task: String,
+    pub variant: String,
+    pub train_seconds: f64,
+    pub step_seconds: f64,
+    pub peak_rss_bytes: u64,
+    pub accuracy: f64,
+}
+
+/// The normalized Table-2 row block for one task.
+#[derive(Debug, Clone)]
+pub struct TaskTable {
+    pub task: String,
+    pub cells: Vec<CellResult>,
+}
+
+impl TaskTable {
+    /// Normalize time/memory to the first (base Transformer) row, like the
+    /// paper. Uses steady-state step time (not compile time) for the time
+    /// column — compile is a one-off, the paper's numbers are train time.
+    pub fn normalized(&self) -> Vec<(String, f64, f64, f64)> {
+        let base = &self.cells[0];
+        self.cells
+            .iter()
+            .map(|c| {
+                (
+                    c.variant.clone(),
+                    c.step_seconds / base.step_seconds.max(1e-12),
+                    c.peak_rss_bytes as f64 / (base.peak_rss_bytes as f64).max(1.0),
+                    c.accuracy,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Run one cell in a child process; parse its JSON report.
+pub fn run_cell_subprocess(cfg: &RunConfig) -> Result<CellResult> {
+    let exe = std::env::current_exe()?;
+    run_cell_with_binary(cfg, &exe)
+}
+
+/// Same, with an explicit launcher binary (used by the bench harnesses,
+/// whose own executable is the bench, not the `macformer` CLI).
+pub fn run_cell_with_binary(cfg: &RunConfig, exe: &std::path::Path) -> Result<CellResult> {
+    let out: PathBuf = std::env::temp_dir().join(format!(
+        "macformer_cell_{}_{}_{}.json",
+        cfg.task,
+        cfg.variant,
+        std::process::id()
+    ));
+    let status = Command::new(exe)
+        .args([
+            "train",
+            "--task", &cfg.task,
+            "--variant", &cfg.variant,
+            "--suffix", &cfg.suffix,
+            "--steps", &cfg.steps.to_string(),
+            "--train-examples", &cfg.train_examples.to_string(),
+            "--eval-examples", &cfg.eval_examples.to_string(),
+            "--seed", &cfg.seed.to_string(),
+            "--eval-every", &(cfg.steps + 1).to_string(), // final eval only
+            "--log-every", &cfg.log_every.to_string(),
+            "--artifacts", &cfg.artifacts_dir,
+            "--out-json", out.to_str().unwrap(),
+        ])
+        .status()
+        .map_err(|e| anyhow!("spawning child: {e}"))?;
+    if !status.success() {
+        bail!("child for {}/{} failed: {status}", cfg.task, cfg.variant);
+    }
+    let text = std::fs::read_to_string(&out)?;
+    std::fs::remove_file(&out).ok();
+    let v = json::parse(&text).map_err(|e| anyhow!("child report: {e}"))?;
+    Ok(CellResult {
+        task: cfg.task.clone(),
+        variant: format!("{}{}", cfg.variant, cfg.suffix),
+        train_seconds: v.get("train_seconds").as_f64().unwrap_or(f64::NAN),
+        step_seconds: v.get("step_seconds_mean").as_f64().unwrap_or(f64::NAN),
+        peak_rss_bytes: v.get("peak_rss_bytes").as_f64().unwrap_or(0.0) as u64,
+        accuracy: v.get("quality").as_f64().unwrap_or(f64::NAN),
+    })
+}
+
+/// Run all variants on one task (sequentially, like the paper's protocol).
+pub fn run_task(base_cfg: &RunConfig, task: &str, variants: &[&str]) -> Result<TaskTable> {
+    let exe = std::env::current_exe()?;
+    run_task_with_binary(base_cfg, task, variants, &exe)
+}
+
+/// Task sweep with an explicit launcher binary.
+pub fn run_task_with_binary(
+    base_cfg: &RunConfig,
+    task: &str,
+    variants: &[&str],
+    exe: &std::path::Path,
+) -> Result<TaskTable> {
+    let mut cells = Vec::new();
+    for v in variants {
+        let mut cfg = base_cfg.clone();
+        cfg.task = task.to_string();
+        cfg.variant = v.to_string();
+        log::info!("sweep: {task}/{v} ({} steps)", cfg.steps);
+        cells.push(run_cell_with_binary(&cfg, exe)?);
+    }
+    Ok(TaskTable { task: task.to_string(), cells })
+}
+
+/// Render the paper-style table block.
+pub fn render_table(tables: &[TaskTable]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<22}{}\n",
+        "",
+        tables
+            .iter()
+            .map(|t| format!("| {:<30}", t.task))
+            .collect::<String>()
+    ));
+    out.push_str(&format!(
+        "{:<22}{}\n",
+        "Model",
+        tables
+            .iter()
+            .map(|_| format!("| {:>8} {:>8} {:>10} ", "Time", "Memory", "Accuracy"))
+            .collect::<String>()
+    ));
+    let n_rows = tables.first().map(|t| t.cells.len()).unwrap_or(0);
+    for i in 0..n_rows {
+        let name = &tables[0].cells[i].variant;
+        out.push_str(&format!("{name:<22}"));
+        for t in tables {
+            let rows = t.normalized();
+            let (_, time, mem, acc) = &rows[i];
+            out.push_str(&format!("| {time:>8.3} {mem:>8.3} {acc:>10.3} "));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Serialize sweep results for EXPERIMENTS.md tooling.
+pub fn to_json(tables: &[TaskTable]) -> Value {
+    Value::Arr(
+        tables
+            .iter()
+            .map(|t| {
+                Value::obj(vec![
+                    ("task", Value::str(&t.task)),
+                    (
+                        "cells",
+                        Value::Arr(
+                            t.cells
+                                .iter()
+                                .map(|c| {
+                                    Value::obj(vec![
+                                        ("variant", Value::str(&c.variant)),
+                                        ("train_seconds", Value::num(c.train_seconds)),
+                                        ("step_seconds", Value::num(c.step_seconds)),
+                                        (
+                                            "peak_rss_bytes",
+                                            Value::num(c.peak_rss_bytes as f64),
+                                        ),
+                                        ("accuracy", Value::num(c.accuracy)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(v: &str, step: f64, rss: u64, acc: f64) -> CellResult {
+        CellResult {
+            task: "t".into(),
+            variant: v.into(),
+            train_seconds: step * 10.0,
+            step_seconds: step,
+            peak_rss_bytes: rss,
+            accuracy: acc,
+        }
+    }
+
+    #[test]
+    fn normalization_against_first_row() {
+        let t = TaskTable {
+            task: "t".into(),
+            cells: vec![cell("softmax", 2.0, 1000, 60.0), cell("mac_exp", 1.0, 1500, 61.0)],
+        };
+        let rows = t.normalized();
+        assert_eq!(rows[0].1, 1.0);
+        assert_eq!(rows[0].2, 1.0);
+        assert_eq!(rows[1].1, 0.5);
+        assert_eq!(rows[1].2, 1.5);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let t = TaskTable {
+            task: "lra_text".into(),
+            cells: vec![cell("softmax", 2.0, 1000, 60.0), cell("mac_exp", 1.0, 1500, 61.0)],
+        };
+        let s = render_table(&[t]);
+        assert!(s.contains("softmax"));
+        assert!(s.contains("mac_exp"));
+        assert!(s.contains("0.500"));
+    }
+}

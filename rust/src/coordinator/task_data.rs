@@ -1,0 +1,133 @@
+//! Task-specific dataset + batch staging.
+//!
+//! Bridges the synthetic datasets (`data::*`) to the HLO modules' batch
+//! argument lists (manifest `batch_specs` order): cls = (tokens, mask,
+//! labels), retrieval = (tokens1, mask1, tokens2, mask2, labels),
+//! lm = (tokens, loss_mask).
+
+use anyhow::{bail, Result};
+
+use crate::data::{self, batcher};
+use crate::runtime::HostArg;
+
+/// A materialized train-or-eval split for one task.
+pub enum TaskData {
+    Cls(data::ClsDataset),
+    Pair(data::PairDataset),
+    Lm(data::LmDataset),
+}
+
+impl TaskData {
+    /// Synthesize the split. Train and eval use disjoint seed streams.
+    pub fn build(task: &str, seed: u64, count: usize, seq_len: usize,
+                 src_max: usize) -> Result<TaskData> {
+        Ok(match task {
+            "lra_text" | "lra_listops" => {
+                TaskData::Cls(data::build_cls(task, seed, count, seq_len))
+            }
+            "lra_retrieval" => TaskData::Pair(data::build_retrieval(seed, count, seq_len)),
+            "translation" => {
+                TaskData::Lm(data::build_translation(seed, count, src_max, seq_len))
+            }
+            other => bail!("unknown task {other:?}"),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TaskData::Cls(d) => d.len(),
+            TaskData::Pair(d) => d.len(),
+            TaskData::Lm(d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stage one index batch as module arguments (manifest order).
+    pub fn stage(&self, idx: &[usize], seq_len: usize) -> Vec<HostArg> {
+        let b = idx.len();
+        match self {
+            TaskData::Cls(d) => vec![
+                HostArg::I32(vec![b, seq_len], batcher::gather_i32(&d.tokens, idx)),
+                HostArg::I32(vec![b, seq_len], batcher::gather_i32(&d.masks, idx)),
+                HostArg::I32(vec![b], batcher::gather_scalar_i32(&d.labels, idx)),
+            ],
+            TaskData::Pair(d) => vec![
+                HostArg::I32(vec![b, seq_len], batcher::gather_i32(&d.tokens1, idx)),
+                HostArg::I32(vec![b, seq_len], batcher::gather_i32(&d.masks1, idx)),
+                HostArg::I32(vec![b, seq_len], batcher::gather_i32(&d.tokens2, idx)),
+                HostArg::I32(vec![b, seq_len], batcher::gather_i32(&d.masks2, idx)),
+                HostArg::I32(vec![b], batcher::gather_scalar_i32(&d.labels, idx)),
+            ],
+            TaskData::Lm(d) => vec![
+                HostArg::I32(vec![b, seq_len], batcher::gather_i32(&d.tokens, idx)),
+                HostArg::F32(vec![b, seq_len], batcher::gather_f32(&d.loss_masks, idx)),
+            ],
+        }
+    }
+
+    /// For LM eval: prompt rows (source only, targets blanked) and the
+    /// reference targets, for greedy-decode BLEU.
+    pub fn lm_prompts(&self, idx: &[usize], src_max: usize, seq_len: usize)
+                      -> (Vec<i32>, Vec<Vec<i32>>) {
+        let TaskData::Lm(d) = self else {
+            panic!("lm_prompts on non-LM task");
+        };
+        let mut prompts = Vec::with_capacity(idx.len() * seq_len);
+        let mut refs = Vec::with_capacity(idx.len());
+        for &i in idx {
+            let row = &d.tokens[i];
+            // keep [src | SEP], blank the target span with PAD
+            for (pos, &t) in row.iter().enumerate() {
+                prompts.push(if pos <= src_max { t } else { crate::data::vocab::SYM_PAD });
+            }
+            refs.push(d.tgts[i].clone());
+        }
+        (prompts, refs)
+    }
+
+    /// Number of label-bearing units per batch row (for accuracy
+    /// normalization): 1 for cls/retrieval; LM tracks tokens instead.
+    pub fn is_lm(&self) -> bool {
+        matches!(self, TaskData::Lm(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_shapes_per_task() {
+        let d = TaskData::build("lra_listops", 1, 8, 64, 0).unwrap();
+        let args = d.stage(&[0, 1, 2, 3], 64);
+        assert_eq!(args.len(), 3);
+        match &args[0] {
+            HostArg::I32(dims, data) => {
+                assert_eq!(dims, &vec![4, 64]);
+                assert_eq!(data.len(), 256);
+            }
+            _ => panic!("expected i32 tokens"),
+        }
+    }
+
+    #[test]
+    fn retrieval_stages_five_args() {
+        let d = TaskData::build("lra_retrieval", 1, 4, 64, 0).unwrap();
+        assert_eq!(d.stage(&[0, 1], 64).len(), 5);
+    }
+
+    #[test]
+    fn lm_prompts_blank_targets() {
+        let d = TaskData::build("translation", 1, 4, 64, 24).unwrap();
+        let (prompts, refs) = d.lm_prompts(&[0], 24, 64);
+        assert_eq!(prompts.len(), 64);
+        // target span blanked
+        for &t in &prompts[25..] {
+            assert_eq!(t, crate::data::vocab::SYM_PAD);
+        }
+        assert!(!refs[0].is_empty());
+    }
+}

@@ -1,0 +1,291 @@
+//! The training loop: the L3 hot path.
+//!
+//! Owns the compiled init/train/eval(/generate) executables for one
+//! (task, variant) cell, the synthetic train/eval splits, the epoch
+//! batcher, and the device-resident state. Loss buffers are fetched to
+//! the host only every `log_every` steps — between fetches the loop is a
+//! pure device-buffer relay (see DESIGN.md §Perf).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::data::batcher::Batcher;
+use crate::data::translation;
+use crate::metrics::{bleu, Accuracy, Ema, Perplexity, Timing};
+use crate::runtime::{DeviceState, Executable, HostArg, ModuleInfo, Registry};
+use crate::util::json::Value;
+
+use super::task_data::TaskData;
+
+/// Outcome of one run, consumed by the sweep orchestrator / EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub family: String,
+    pub steps: usize,
+    pub train_seconds: f64,
+    pub step_seconds_mean: f64,
+    pub compile_seconds: f64,
+    pub peak_rss_bytes: u64,
+    pub final_loss: f64,
+    pub eval_loss: f64,
+    /// accuracy % for cls/retrieval; BLEU for lm
+    pub quality: f64,
+    /// perplexity for lm runs (NaN otherwise)
+    pub perplexity: f64,
+    pub loss_curve: Vec<(usize, f64)>,
+    pub eval_curve: Vec<(usize, f64, f64)>, // (step, eval_loss, quality)
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("family", Value::str(&self.family)),
+            ("steps", Value::num(self.steps as f64)),
+            ("train_seconds", Value::num(self.train_seconds)),
+            ("step_seconds_mean", Value::num(self.step_seconds_mean)),
+            ("compile_seconds", Value::num(self.compile_seconds)),
+            ("peak_rss_bytes", Value::num(self.peak_rss_bytes as f64)),
+            ("final_loss", Value::num(self.final_loss)),
+            ("eval_loss", Value::num(self.eval_loss)),
+            ("quality", Value::num(self.quality)),
+            ("perplexity", Value::num(self.perplexity)),
+            (
+                "loss_curve",
+                Value::Arr(
+                    self.loss_curve
+                        .iter()
+                        .map(|(s, l)| Value::Arr(vec![Value::num(*s as f64), Value::num(*l)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "eval_curve",
+                Value::Arr(
+                    self.eval_curve
+                        .iter()
+                        .map(|(s, l, q)| {
+                            Value::Arr(vec![
+                                Value::num(*s as f64),
+                                Value::num(*l),
+                                Value::num(*q),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One fully-wired training cell.
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub info: ModuleInfo,
+    init_exe: Executable,
+    train_exe: Executable,
+    eval_exe: Executable,
+    gen_exe: Option<Executable>,
+    pub state: DeviceState,
+    train_data: TaskData,
+    eval_data: TaskData,
+    batcher: Batcher,
+    src_max: usize,
+    compile_seconds: f64,
+}
+
+impl Trainer {
+    /// Compile the cell's modules, synthesize data, init device state.
+    pub fn build(cfg: RunConfig, reg: &Registry) -> Result<Trainer> {
+        let family = cfg.family();
+        let info = reg.get(&format!("{family}.train"))?.clone();
+        let t0 = Instant::now();
+        let init_exe = Executable::compile_file(
+            &format!("{family}.init"),
+            &reg.hlo_path(reg.get(&format!("{family}.init"))?),
+        )?;
+        let train_exe = Executable::compile_file(
+            &format!("{family}.train"),
+            &reg.hlo_path(&info),
+        )?;
+        let eval_exe = Executable::compile_file(
+            &format!("{family}.eval"),
+            &reg.hlo_path(reg.get(&format!("{family}.eval"))?),
+        )?;
+        let gen_exe = match reg.get(&format!("{family}.generate")) {
+            Ok(gi) => Some(Executable::compile_file(
+                &format!("{family}.generate"),
+                &reg.hlo_path(gi),
+            )?),
+            Err(_) => None,
+        };
+        let compile_seconds = t0.elapsed().as_secs_f64();
+
+        let src_max = reg.translation_src_max;
+        let train_data = TaskData::build(
+            &cfg.task, cfg.seed, cfg.train_examples, info.seq_len, src_max,
+        )?;
+        let eval_data = TaskData::build(
+            &cfg.task,
+            cfg.seed ^ 0xEAE0_17AC,
+            cfg.eval_examples,
+            info.seq_len,
+            src_max,
+        )?;
+        let batcher = Batcher::new(train_data.len(), info.batch, cfg.seed ^ 0xBA7C);
+        let state = DeviceState::init(&init_exe, &info, cfg.seed as u32)?;
+        log::info!(
+            "{family}: compiled in {compile_seconds:.1}s, {} params, batch {}x{}",
+            info.n_params,
+            info.batch,
+            info.seq_len
+        );
+        Ok(Trainer {
+            cfg,
+            info,
+            init_exe,
+            train_exe,
+            eval_exe,
+            gen_exe,
+            state,
+            train_data,
+            eval_data,
+            batcher,
+            src_max,
+            compile_seconds,
+        })
+    }
+
+    /// Re-initialize parameters (fresh seed) without recompiling.
+    pub fn reinit(&mut self, seed: u32) -> Result<()> {
+        self.state = DeviceState::init(&self.init_exe, &self.info, seed)?;
+        Ok(())
+    }
+
+    /// The compiled train executable (for external harnesses, e.g. the
+    /// hotpath bench that times phases individually).
+    pub fn train_exe(&self) -> &Executable {
+        &self.train_exe
+    }
+
+    /// One train step over an externally staged batch (hotpath bench).
+    pub fn step_with(&mut self, batch: &[HostArg]) -> Result<xla::PjRtBuffer> {
+        self.state.train_step(&self.train_exe, batch)
+    }
+
+    /// One optimization step over the next scheduled batch; returns the
+    /// loss *buffer* (host fetch deferred to the caller's logging cadence).
+    pub fn step(&mut self) -> Result<xla::PjRtBuffer> {
+        let idx = self.batcher.next_batch().to_vec();
+        let batch = self.train_data.stage(&idx, self.info.seq_len);
+        self.state.train_step(&self.train_exe, &batch)
+    }
+
+    /// Full evaluation sweep; returns (mean loss, quality, ppl).
+    pub fn evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        let b = self.info.batch;
+        let n = (self.eval_data.len() / b) * b;
+        let mut loss_sum = 0.0;
+        let mut batches = 0usize;
+        let mut acc = Accuracy::default();
+        let mut ppl = Perplexity::default();
+        for start in (0..n).step_by(b) {
+            let idx: Vec<usize> = (start..start + b).collect();
+            let batch = self.eval_data.stage(&idx, self.info.seq_len);
+            let (loss, metric) = self.state.eval_step(&self.eval_exe, &batch)?;
+            loss_sum += loss as f64;
+            batches += 1;
+            if self.eval_data.is_lm() {
+                // metric = target token count; loss = mean token nll
+                ppl.update(loss as f64, metric as f64);
+            } else {
+                acc.update(metric as f64, b as f64);
+            }
+        }
+        let mean_loss = loss_sum / batches.max(1) as f64;
+        if self.eval_data.is_lm() {
+            let bleu = self.bleu_eval(n.min(4 * b))?;
+            Ok((mean_loss, bleu, ppl.value()))
+        } else {
+            Ok((mean_loss, acc.value(), f64::NAN))
+        }
+    }
+
+    /// Greedy-decode BLEU over the first `count` eval rows (LM only).
+    fn bleu_eval(&self, count: usize) -> Result<f64> {
+        let gen = self
+            .gen_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("no generate module for {}", self.cfg.family()))?;
+        let b = self.info.batch;
+        let mut pairs: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+        for start in (0..count).step_by(b) {
+            let idx: Vec<usize> = (start..start + b).collect();
+            let (prompts, refs) = self.eval_data.lm_prompts(&idx, self.src_max, self.info.seq_len);
+            let out = self.state.generate(
+                gen,
+                &HostArg::I32(vec![b, self.info.seq_len], prompts),
+                [0xB1E0u32, start as u32],
+            )?;
+            for (row, reference) in out.chunks(self.info.seq_len).zip(&refs) {
+                let hyp = translation::decode_target(row, self.src_max);
+                pairs.push((
+                    hyp.iter().map(|x| *x as u32).collect(),
+                    reference.iter().map(|x| *x as u32).collect(),
+                ));
+            }
+        }
+        Ok(bleu::corpus_bleu(&pairs))
+    }
+
+    /// The full run: train `cfg.steps` steps with periodic logging/eval.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let mut loss_curve = Vec::new();
+        let mut eval_curve = Vec::new();
+        let mut ema = Ema::new(0.1);
+        let mut timing = Timing::default();
+        let steps = self.cfg.steps;
+        let log_every = self.cfg.log_every.max(1);
+        let eval_every = self.cfg.eval_every.max(1);
+        let t_train = Instant::now();
+        let mut last_loss = f64::NAN;
+        for s in 1..=steps {
+            let t0 = Instant::now();
+            let loss_buf = self.step()?;
+            // fetching the loss synchronizes; only do it on the log cadence
+            if s % log_every == 0 || s == steps {
+                let loss = DeviceState::loss_value(&loss_buf)? as f64;
+                timing.push(t0.elapsed().as_secs_f64());
+                last_loss = ema.update(loss);
+                loss_curve.push((s, loss));
+                log::info!(
+                    "{} step {s}/{steps} loss {loss:.4} (ema {last_loss:.4})",
+                    self.cfg.family()
+                );
+            }
+            if s % eval_every == 0 && s != steps {
+                let (el, q, _p) = self.evaluate()?;
+                eval_curve.push((s, el, q));
+                log::info!("{} eval @{s}: loss {el:.4} quality {q:.2}", self.cfg.family());
+            }
+        }
+        let train_seconds = t_train.elapsed().as_secs_f64();
+        let (eval_loss, quality, perplexity) = self.evaluate()?;
+        eval_curve.push((steps, eval_loss, quality));
+        Ok(RunReport {
+            family: self.cfg.family(),
+            steps,
+            train_seconds,
+            step_seconds_mean: timing.mean(),
+            compile_seconds: self.compile_seconds,
+            peak_rss_bytes: crate::util::peak_rss_bytes(),
+            final_loss: last_loss,
+            eval_loss,
+            quality,
+            perplexity,
+            loss_curve,
+            eval_curve,
+        })
+    }
+}

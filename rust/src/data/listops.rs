@@ -1,0 +1,240 @@
+//! LRA Listops generator: nested prefix expressions over single digits.
+//!
+//! This re-implements the Long Range Arena recipe (Tay et al. 2021;
+//! originally Nangia & Bowman 2018): expressions like
+//!
+//!   [MAX 4 3 [MIN 2 3 ] 1 0 [MEDIAN 1 5 8 9 2 ] ]
+//!
+//! with operators MAX, MIN, MEDIAN (MED), SUM_MOD (SM, sum mod 10); the
+//! label is the evaluated result in 0..=9. Depth and arity are sampled to
+//! fill a target token budget so sequences genuinely exercise long-range
+//! hierarchical structure.
+
+use crate::util::rng::Rng;
+
+use super::vocab::{SymbolVocab, SYM_PAD};
+
+pub const OPS: [&str; 4] = ["MAX", "MIN", "MED", "SM"];
+
+/// AST for a listops expression.
+#[derive(Debug, Clone)]
+pub enum Expr {
+    Digit(u8),
+    Op(usize, Vec<Expr>), // index into OPS
+}
+
+impl Expr {
+    pub fn eval(&self) -> u8 {
+        match self {
+            Expr::Digit(d) => *d,
+            Expr::Op(op, args) => {
+                let vals: Vec<u8> = args.iter().map(Expr::eval).collect();
+                match OPS[*op] {
+                    "MAX" => *vals.iter().max().unwrap(),
+                    "MIN" => *vals.iter().min().unwrap(),
+                    "MED" => {
+                        let mut v = vals.clone();
+                        v.sort_unstable();
+                        v[v.len() / 2]
+                    }
+                    "SM" => (vals.iter().map(|x| *x as u32).sum::<u32>() % 10) as u8,
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    /// Token count of the rendered form ("[OP", args..., "]").
+    pub fn token_len(&self) -> usize {
+        match self {
+            Expr::Digit(_) => 1,
+            Expr::Op(_, args) => 2 + args.iter().map(Expr::token_len).sum::<usize>(),
+        }
+    }
+
+    pub fn render(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Digit(d) => out.push(d.to_string()),
+            Expr::Op(op, args) => {
+                out.push(format!("[{}", OPS[*op]));
+                for a in args {
+                    a.render(out);
+                }
+                out.push("]".to_string());
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        match self {
+            Expr::Digit(_) => 0,
+            Expr::Op(_, args) => 1 + args.iter().map(Expr::depth).max().unwrap_or(0),
+        }
+    }
+}
+
+/// Sample an expression with at most `budget` tokens and depth <= max_depth.
+pub fn sample_expr(rng: &mut Rng, budget: usize, max_depth: usize) -> Expr {
+    if budget < 4 || max_depth == 0 {
+        return Expr::Digit(rng.below(10) as u8);
+    }
+    let op = rng.below(OPS.len());
+    // spend between 2 and 5 argument slots, recursing with split budgets
+    let arity = rng.range(2, 5);
+    let mut remaining = budget - 2; // brackets
+    let mut args = Vec::with_capacity(arity);
+    for i in 0..arity {
+        let slots = arity - i;
+        let share = (remaining / slots).max(1);
+        let child_budget = if rng.bernoulli(0.45) { share } else { 1 };
+        let child = sample_expr(rng, child_budget.min(remaining), max_depth - 1);
+        remaining = remaining.saturating_sub(child.token_len());
+        args.push(child);
+        if remaining == 0 {
+            break;
+        }
+    }
+    if args.is_empty() {
+        return Expr::Digit(rng.below(10) as u8);
+    }
+    Expr::Op(op, args)
+}
+
+/// The listops token vocabulary: digits, "[OP" markers, "]".
+pub fn vocab() -> SymbolVocab {
+    SymbolVocab::new(&[
+        "0", "1", "2", "3", "4", "5", "6", "7", "8", "9",
+        "[MAX", "[MIN", "[MED", "[SM", "]",
+    ])
+}
+
+/// One labeled example: tokens (padded to n), mask, label in 0..=9.
+pub struct ListopsExample {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<i32>,
+    pub label: i32,
+}
+
+/// Generate a dataset of `count` examples, each filling roughly
+/// `fill_frac` of the n-token window.
+pub fn generate(rng: &mut Rng, count: usize, n: usize, fill_frac: f64) -> Vec<ListopsExample> {
+    let v = vocab();
+    let budget = ((n as f64) * fill_frac) as usize;
+    (0..count)
+        .map(|_| {
+            // resample until the expression fits (token_len <= n)
+            let expr = loop {
+                let e = sample_expr(rng, budget.max(8), 12);
+                if e.token_len() <= n {
+                    break e;
+                }
+            };
+            let label = expr.eval() as i32;
+            let mut syms = Vec::new();
+            expr.render(&mut syms);
+            let mut tokens: Vec<i32> = syms.iter().map(|s| v.id(s)).collect();
+            let mut mask = vec![1; tokens.len()];
+            while tokens.len() < n {
+                tokens.push(SYM_PAD);
+                mask.push(0);
+            }
+            ListopsExample { tokens, mask, label }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_known_expressions() {
+        // [MAX 4 3 [MIN 2 3] 1] = 4
+        let e = Expr::Op(
+            0,
+            vec![
+                Expr::Digit(4),
+                Expr::Digit(3),
+                Expr::Op(1, vec![Expr::Digit(2), Expr::Digit(3)]),
+                Expr::Digit(1),
+            ],
+        );
+        assert_eq!(e.eval(), 4);
+        // [SM 5 6 7] = 18 % 10 = 8
+        let e = Expr::Op(3, vec![Expr::Digit(5), Expr::Digit(6), Expr::Digit(7)]);
+        assert_eq!(e.eval(), 8);
+        // [MED 1 5 8 9 2] = sorted [1,2,5,8,9][2] = 5
+        let e = Expr::Op(
+            2,
+            vec![
+                Expr::Digit(1),
+                Expr::Digit(5),
+                Expr::Digit(8),
+                Expr::Digit(9),
+                Expr::Digit(2),
+            ],
+        );
+        assert_eq!(e.eval(), 5);
+    }
+
+    #[test]
+    fn token_len_matches_render() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let e = sample_expr(&mut rng, 60, 6);
+            let mut syms = Vec::new();
+            e.render(&mut syms);
+            assert_eq!(syms.len(), e.token_len());
+        }
+    }
+
+    #[test]
+    fn labels_in_digit_range() {
+        let mut rng = Rng::new(2);
+        for ex in generate(&mut rng, 50, 128, 0.6) {
+            assert!((0..10).contains(&ex.label));
+            assert_eq!(ex.tokens.len(), 128);
+            assert_eq!(ex.mask.len(), 128);
+        }
+    }
+
+    #[test]
+    fn expressions_are_nontrivial() {
+        let mut rng = Rng::new(3);
+        let exs = generate(&mut rng, 100, 256, 0.7);
+        let mean_len: f64 = exs
+            .iter()
+            .map(|e| e.mask.iter().sum::<i32>() as f64)
+            .sum::<f64>()
+            / exs.len() as f64;
+        assert!(mean_len > 40.0, "sequences too short: {mean_len}");
+        // label distribution not collapsed to a single value
+        let mut seen = [false; 10];
+        for e in &exs {
+            seen[e.label as usize] = true;
+        }
+        assert!(seen.iter().filter(|s| **s).count() >= 5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&mut Rng::new(7), 5, 64, 0.5);
+        let b = generate(&mut Rng::new(7), 5, 64, 0.5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn render_parses_back_visually() {
+        let mut rng = Rng::new(4);
+        let e = sample_expr(&mut rng, 30, 4);
+        let mut syms = Vec::new();
+        e.render(&mut syms);
+        // bracket balance
+        let opens = syms.iter().filter(|s| s.starts_with('[')).count();
+        let closes = syms.iter().filter(|s| *s == "]").count();
+        assert_eq!(opens, closes);
+    }
+}

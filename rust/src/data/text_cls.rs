@@ -1,0 +1,155 @@
+//! Synthetic byte-level sentiment corpus — the LRA Text substitution.
+//!
+//! The paper uses character-level IMDb; we cannot ship IMDb, so this
+//! generator produces long "reviews" with the properties that matter for
+//! the benchmark (DESIGN.md §Substitutions): byte-level input, long
+//! documents, and a *compositional* sentiment signal — polarity words
+//! carry the label, negators ("never", "hardly") flip the polarity of the
+//! following clause, and the bulk of each document is neutral filler so
+//! the model must aggregate sparse evidence across the full window.
+
+use crate::util::rng::Rng;
+
+use super::vocab::encode_bytes;
+
+const POSITIVE: [&str; 12] = [
+    "wonderful", "brilliant", "superb", "delightful", "masterful", "charming",
+    "gripping", "stunning", "excellent", "heartfelt", "inspired", "luminous",
+];
+
+const NEGATIVE: [&str; 12] = [
+    "dreadful", "tedious", "clumsy", "hollow", "grating", "lifeless",
+    "muddled", "shallow", "plodding", "stilted", "forgettable", "incoherent",
+];
+
+const NEGATORS: [&str; 4] = ["never", "hardly", "scarcely", "barely"];
+
+const FILLER: [&str; 24] = [
+    "the", "film", "with", "plot", "scene", "actor", "camera", "story",
+    "score", "while", "then", "about", "again", "during", "frame", "moment",
+    "dialogue", "sequence", "character", "director", "screen", "cut",
+    "light", "sound",
+];
+
+/// One labeled review: raw text plus encoded tokens/mask.
+pub struct TextExample {
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub mask: Vec<i32>,
+    pub label: i32, // 1 = positive
+}
+
+/// Generate `count` reviews encoded into n-byte windows.
+///
+/// Each review contains `evidence` polarity clauses (possibly negated)
+/// buried in filler; the label is the majority *effective* polarity, with
+/// ties broken by regeneration so labels are unambiguous.
+pub fn generate(rng: &mut Rng, count: usize, n: usize) -> Vec<TextExample> {
+    (0..count)
+        .map(|_| loop {
+            let (text, score) = sample_review(rng, n);
+            if score != 0 {
+                let label = (score > 0) as i32;
+                let (tokens, mask) = encode_bytes(text.as_bytes(), n);
+                return TextExample { text, tokens, mask, label };
+            }
+        })
+        .collect()
+}
+
+fn sample_review(rng: &mut Rng, n: usize) -> (String, i32) {
+    // target byte length ~ 70-95% of the window
+    let target = n * rng.range(70, 95) / 100;
+    let evidence = rng.range(3, 9);
+    let mut words: Vec<String> = Vec::new();
+    let mut score = 0i32;
+    let mut bytes = 0usize;
+    let mut placed = 0usize;
+    while bytes < target {
+        let place_evidence = placed < evidence && rng.bernoulli(0.08);
+        if place_evidence {
+            let negate = rng.bernoulli(0.3);
+            if negate {
+                let w = rng.choose(&NEGATORS);
+                bytes += w.len() + 1;
+                words.push(w.to_string());
+            }
+            let positive = rng.bernoulli(0.5);
+            let w = if positive { rng.choose(&POSITIVE) } else { rng.choose(&NEGATIVE) };
+            let effective = positive != negate;
+            score += if effective { 1 } else { -1 };
+            bytes += w.len() + 1;
+            words.push(w.to_string());
+            placed += 1;
+        } else {
+            let w = rng.choose(&FILLER);
+            bytes += w.len() + 1;
+            words.push(w.to_string());
+        }
+    }
+    (words.join(" "), score)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_binary_and_balanced() {
+        let mut rng = Rng::new(1);
+        let exs = generate(&mut rng, 200, 512);
+        let pos = exs.iter().filter(|e| e.label == 1).count();
+        assert!(pos > 50 && pos < 150, "positive count {pos}");
+        for e in &exs {
+            assert!(e.label == 0 || e.label == 1);
+        }
+    }
+
+    #[test]
+    fn documents_fill_the_window() {
+        let mut rng = Rng::new(2);
+        for e in generate(&mut rng, 20, 1024) {
+            let real: i32 = e.mask.iter().sum();
+            assert!(real as usize > 1024 / 2, "doc too short: {real}");
+            assert_eq!(e.tokens.len(), 1024);
+        }
+    }
+
+    #[test]
+    fn label_agrees_with_effective_polarity() {
+        // Count effective polarity from the text and compare to the label.
+        let mut rng = Rng::new(3);
+        for e in generate(&mut rng, 50, 512) {
+            let words: Vec<&str> = e.text.split_whitespace().collect();
+            let mut score = 0i32;
+            let mut i = 0;
+            while i < words.len() {
+                let negated = NEGATORS.contains(&words[i]);
+                let j = if negated { i + 1 } else { i };
+                if j < words.len() {
+                    if POSITIVE.contains(&words[j]) {
+                        score += if negated { -1 } else { 1 };
+                        i = j + 1;
+                        continue;
+                    }
+                    if NEGATIVE.contains(&words[j]) {
+                        score += if negated { 1 } else { -1 };
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            assert_eq!((score > 0) as i32, e.label, "text: {}", e.text);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&mut Rng::new(9), 5, 256);
+        let b = generate(&mut Rng::new(9), 5, 256);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.text, y.text);
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Synthetic translation corpus — the Multi30K substitution for Fig 3.
+//!
+//! Deterministic toy language pair sized like Multi30K (29k train pairs,
+//! ~1k eval) that exercises exactly what the Fig-3 experiment measures:
+//! a seq2seq model trained with cross-entropy, evaluated by loss,
+//! perplexity, and BLEU of greedy decodes. The mapping is learnable but
+//! non-trivial:
+//!
+//!   * every source word has a fixed target translation (a seeded
+//!     permutation of the target vocabulary),
+//!   * adjective-noun phrases invert order in the target (local
+//!     reordering, the classic de/en artifact),
+//!   * plural-marked nouns emit an extra suffix token in the target
+//!     (morphology), and
+//!   * sentences end with a mapped punctuation token.
+//!
+//! Sequence layout (matches aot.py's translation module contract):
+//!   [ src (padded to SRC_MAX) | SEP | tgt tokens | EOS | PAD... ]
+//! with loss_mask = 1 exactly on the target span (incl. EOS).
+
+use crate::util::rng::Rng;
+
+use super::vocab::{SYM_EOS, SYM_PAD, SYM_SEP};
+
+/// Vocabulary layout inside the model's 512-id space.
+pub const NUM_WORDS: usize = 180; // per language
+pub const SRC_BASE: i32 = 4;
+pub const TGT_BASE: i32 = SRC_BASE + NUM_WORDS as i32;
+pub const PLURAL_MARK: i32 = TGT_BASE + NUM_WORDS as i32; // tgt plural suffix
+pub const SRC_PLURAL: i32 = PLURAL_MARK + 1; // src plural suffix
+
+/// Word-class split of the source vocabulary (by id offset).
+const NOUNS: std::ops::Range<usize> = 0..80;
+const ADJS: std::ops::Range<usize> = 80..130;
+const VERBS: std::ops::Range<usize> = 130..175;
+const PUNCT: std::ops::Range<usize> = 175..180;
+
+/// The fixed translation lexicon: src word offset -> tgt word offset.
+pub fn lexicon(seed: u64) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..NUM_WORDS).collect();
+    let mut rng = Rng::new(seed ^ 0x7A61_7274);
+    rng.shuffle(&mut perm);
+    perm
+}
+
+/// One parallel sentence pair (unpadded token ids).
+#[derive(Debug, Clone)]
+pub struct Pair {
+    pub src: Vec<i32>,
+    pub tgt: Vec<i32>,
+}
+
+/// Sample a source sentence and derive its deterministic translation.
+pub fn sample_pair(rng: &mut Rng, lex: &[usize]) -> Pair {
+    let phrases = rng.range(2, 4);
+    let mut src = Vec::new();
+    let mut tgt = Vec::new();
+    for _ in 0..phrases {
+        match rng.below(3) {
+            0 => {
+                // adjective + noun (reordered in target)
+                let a = rng.range(ADJS.start, ADJS.end - 1);
+                let n = rng.range(NOUNS.start, NOUNS.end - 1);
+                let plural = rng.bernoulli(0.3);
+                src.push(SRC_BASE + a as i32);
+                src.push(SRC_BASE + n as i32);
+                if plural {
+                    src.push(SRC_PLURAL);
+                }
+                tgt.push(TGT_BASE + lex[n] as i32);
+                if plural {
+                    tgt.push(PLURAL_MARK);
+                }
+                tgt.push(TGT_BASE + lex[a] as i32);
+            }
+            1 => {
+                // bare noun
+                let n = rng.range(NOUNS.start, NOUNS.end - 1);
+                src.push(SRC_BASE + n as i32);
+                tgt.push(TGT_BASE + lex[n] as i32);
+            }
+            _ => {
+                // verb
+                let v = rng.range(VERBS.start, VERBS.end - 1);
+                src.push(SRC_BASE + v as i32);
+                tgt.push(TGT_BASE + lex[v] as i32);
+            }
+        }
+    }
+    let p = rng.range(PUNCT.start, PUNCT.end - 1);
+    src.push(SRC_BASE + p as i32);
+    tgt.push(TGT_BASE + lex[p] as i32);
+    Pair { src, tgt }
+}
+
+/// Reference translation of a source sentence (for BLEU scoring of
+/// arbitrary model output). Mirrors sample_pair's derivation.
+pub fn translate(src: &[i32], lex: &[usize]) -> Vec<i32> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < src.len() {
+        let w = (src[i] - SRC_BASE) as usize;
+        let is_adj = src[i] >= SRC_BASE && ADJS.contains(&w);
+        if is_adj && i + 1 < src.len() {
+            let n = (src[i + 1] - SRC_BASE) as usize;
+            if src[i + 1] >= SRC_BASE && NOUNS.contains(&n) {
+                let plural = i + 2 < src.len() && src[i + 2] == SRC_PLURAL;
+                out.push(TGT_BASE + lex[n] as i32);
+                if plural {
+                    out.push(PLURAL_MARK);
+                }
+                out.push(TGT_BASE + lex[w] as i32);
+                i += if plural { 3 } else { 2 };
+                continue;
+            }
+        }
+        if src[i] == SRC_PLURAL {
+            i += 1;
+            continue;
+        }
+        out.push(TGT_BASE + lex[w] as i32);
+        i += 1;
+    }
+    out
+}
+
+/// A padded LM training/eval row.
+pub struct TranslationExample {
+    pub tokens: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub src: Vec<i32>,
+    pub tgt: Vec<i32>,
+}
+
+/// Pack a pair into the [src | SEP | tgt | EOS | pad] layout.
+pub fn pack(pair: &Pair, src_max: usize, seq: usize) -> TranslationExample {
+    let mut tokens = vec![SYM_PAD; seq];
+    let mut loss_mask = vec![0.0f32; seq];
+    for (i, &t) in pair.src.iter().take(src_max).enumerate() {
+        tokens[i] = t;
+    }
+    tokens[src_max] = SYM_SEP;
+    let mut pos = src_max + 1;
+    for &t in &pair.tgt {
+        if pos >= seq - 1 {
+            break;
+        }
+        tokens[pos] = t;
+        loss_mask[pos] = 1.0;
+        pos += 1;
+    }
+    tokens[pos] = SYM_EOS;
+    loss_mask[pos] = 1.0;
+    TranslationExample { tokens, loss_mask, src: pair.src.clone(), tgt: pair.tgt.clone() }
+}
+
+/// Generate a corpus of packed examples.
+pub fn generate(
+    rng: &mut Rng,
+    lex: &[usize],
+    count: usize,
+    src_max: usize,
+    seq: usize,
+) -> Vec<TranslationExample> {
+    (0..count)
+        .map(|_| {
+            // keep sampling until the pair fits the fixed layout
+            let pair = loop {
+                let p = sample_pair(rng, lex);
+                if p.src.len() <= src_max && p.tgt.len() < seq - src_max - 2 {
+                    break p;
+                }
+            };
+            pack(&pair, src_max, seq)
+        })
+        .collect()
+}
+
+/// Extract the generated target span from a decoded row (stops at EOS).
+pub fn decode_target(tokens: &[i32], src_max: usize) -> Vec<i32> {
+    let mut out = Vec::new();
+    for &t in &tokens[src_max + 1..] {
+        if t == SYM_EOS || t == SYM_PAD {
+            break;
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn translation_is_deterministic() {
+        let lex = lexicon(1);
+        let mut rng = Rng::new(2);
+        let p = sample_pair(&mut rng, &lex);
+        assert_eq!(translate(&p.src, &lex), p.tgt);
+    }
+
+    #[test]
+    fn adjective_noun_reorders() {
+        let lex = lexicon(1);
+        // src: adj(80) noun(0) -> tgt: lex[0] lex[80]
+        let src = vec![SRC_BASE + 80, SRC_BASE];
+        let tgt = translate(&src, &lex);
+        assert_eq!(tgt, vec![TGT_BASE + lex[0] as i32, TGT_BASE + lex[80] as i32]);
+    }
+
+    #[test]
+    fn plural_emits_marker() {
+        let lex = lexicon(1);
+        let src = vec![SRC_BASE + 80, SRC_BASE, SRC_PLURAL];
+        let tgt = translate(&src, &lex);
+        assert_eq!(tgt[1], PLURAL_MARK);
+        assert_eq!(tgt.len(), 3);
+    }
+
+    #[test]
+    fn pack_layout_and_mask() {
+        let lex = lexicon(1);
+        let mut rng = Rng::new(3);
+        let ex = generate(&mut rng, &lex, 1, 24, 64).pop().unwrap();
+        assert_eq!(ex.tokens.len(), 64);
+        assert_eq!(ex.tokens[24], SYM_SEP);
+        // mask exactly covers the tgt span + EOS
+        let mask_count = ex.loss_mask.iter().filter(|x| **x > 0.0).count();
+        assert_eq!(mask_count, ex.tgt.len() + 1);
+        // nothing before SEP is masked
+        assert!(ex.loss_mask[..25].iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn decode_target_recovers_reference() {
+        let lex = lexicon(1);
+        let mut rng = Rng::new(4);
+        let ex = generate(&mut rng, &lex, 1, 24, 64).pop().unwrap();
+        assert_eq!(decode_target(&ex.tokens, 24), ex.tgt);
+    }
+
+    #[test]
+    fn corpus_vocabulary_stays_in_range() {
+        let lex = lexicon(5);
+        let mut rng = Rng::new(6);
+        for ex in generate(&mut rng, &lex, 100, 24, 64) {
+            for &t in &ex.tokens {
+                assert!((0..512).contains(&t), "token {t} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn lexicon_is_a_permutation() {
+        let lex = lexicon(9);
+        let mut sorted = lex.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..NUM_WORDS).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn perfect_translation_gets_bleu_100() {
+        use crate::metrics::bleu::corpus_bleu;
+        let lex = lexicon(1);
+        let mut rng = Rng::new(7);
+        let pairs: Vec<(Vec<u32>, Vec<u32>)> = (0..20)
+            .map(|_| {
+                let p = sample_pair(&mut rng, &lex);
+                let hyp: Vec<u32> = translate(&p.src, &lex).iter().map(|x| *x as u32).collect();
+                let r: Vec<u32> = p.tgt.iter().map(|x| *x as u32).collect();
+                (hyp, r)
+            })
+            .collect();
+        assert!((corpus_bleu(&pairs) - 100.0).abs() < 1e-6);
+    }
+}

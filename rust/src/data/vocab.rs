@@ -1,0 +1,116 @@
+//! Token vocabularies shared by the dataset generators and the encoders.
+//!
+//! Byte-level vocabulary (LRA Text / Retrieval): ids 0..255 are raw bytes,
+//! followed by the special tokens. Symbol vocabulary (Listops /
+//! translation): dense ids assigned per registered symbol, specials first.
+
+/// Special token ids for the byte-level tasks (match aot.py's vocab_size
+/// 260 = 256 bytes + 4 specials).
+pub const BYTE_PAD: i32 = 256;
+pub const BYTE_CLS: i32 = 257;
+pub const BYTE_SEP: i32 = 258;
+pub const BYTE_UNK: i32 = 259;
+pub const BYTE_VOCAB: usize = 260;
+
+/// Encode a byte string, prepending CLS and padding/truncating to n.
+/// Returns (tokens, mask) with mask = 1 on real positions.
+pub fn encode_bytes(text: &[u8], n: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut toks = Vec::with_capacity(n);
+    let mut mask = Vec::with_capacity(n);
+    toks.push(BYTE_CLS);
+    mask.push(1);
+    for &b in text.iter().take(n - 1) {
+        toks.push(b as i32);
+        mask.push(1);
+    }
+    while toks.len() < n {
+        toks.push(BYTE_PAD);
+        mask.push(0);
+    }
+    (toks, mask)
+}
+
+/// Dense symbol vocabulary with reserved specials.
+#[derive(Debug, Clone)]
+pub struct SymbolVocab {
+    symbols: Vec<String>,
+}
+
+pub const SYM_PAD: i32 = 0;
+pub const SYM_BOS: i32 = 1;
+pub const SYM_EOS: i32 = 2;
+pub const SYM_SEP: i32 = 3;
+pub const NUM_SPECIALS: usize = 4;
+
+impl SymbolVocab {
+    pub fn new(symbols: &[&str]) -> SymbolVocab {
+        SymbolVocab { symbols: symbols.iter().map(|s| s.to_string()).collect() }
+    }
+
+    pub fn id(&self, sym: &str) -> i32 {
+        self.symbols
+            .iter()
+            .position(|s| s == sym)
+            .map(|i| (i + NUM_SPECIALS) as i32)
+            .unwrap_or_else(|| panic!("unknown symbol {sym:?}"))
+    }
+
+    pub fn symbol(&self, id: i32) -> Option<&str> {
+        let idx = id as usize;
+        if idx < NUM_SPECIALS {
+            return Some(["<pad>", "<bos>", "<eos>", "<sep>"][idx]);
+        }
+        self.symbols.get(idx - NUM_SPECIALS).map(|s| s.as_str())
+    }
+
+    pub fn size(&self) -> usize {
+        self.symbols.len() + NUM_SPECIALS
+    }
+
+    pub fn encode(&self, syms: &[&str]) -> Vec<i32> {
+        syms.iter().map(|s| self.id(s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_encoding_pads_and_masks() {
+        let (t, m) = encode_bytes(b"ab", 6);
+        assert_eq!(t, vec![BYTE_CLS, 97, 98, BYTE_PAD, BYTE_PAD, BYTE_PAD]);
+        assert_eq!(m, vec![1, 1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn byte_encoding_truncates() {
+        let (t, m) = encode_bytes(b"abcdef", 4);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[0], BYTE_CLS);
+        assert_eq!(m, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn byte_tokens_in_vocab_range() {
+        let (t, _) = encode_bytes("héllo😀".as_bytes(), 16);
+        for tok in t {
+            assert!((0..BYTE_VOCAB as i32).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn symbol_vocab_round_trip() {
+        let v = SymbolVocab::new(&["MAX", "MIN", "0", "1"]);
+        assert_eq!(v.size(), 8);
+        let id = v.id("MIN");
+        assert_eq!(v.symbol(id), Some("MIN"));
+        assert_eq!(v.symbol(SYM_PAD), Some("<pad>"));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown symbol")]
+    fn unknown_symbol_panics() {
+        SymbolVocab::new(&["a"]).id("b");
+    }
+}

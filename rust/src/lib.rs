@@ -1,0 +1,48 @@
+//! # Macformer — Random Maclaurin Feature Attention, reproduced
+//!
+//! A three-layer reproduction of *"Macformer: Transformer with Random
+//! Maclaurin Feature Attention"* (Guo, Ding, Yuan, Wang, 2024):
+//!
+//! * **L1** — Pallas kernels (RMF projection, linear-attention
+//!   contraction, online-softmax baseline) under `python/compile/kernels/`.
+//! * **L2** — the JAX Macformer/Transformer/RFA model family under
+//!   `python/compile/`, AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: the Rust coordinator that owns datasets,
+//!   batching, the training loop over PJRT, metrics, checkpoints, the
+//!   Table-2 sweep orchestrator and the Fig-3/Fig-4 benchmark harnesses.
+//!
+//! Python never runs at training/serving time; after `make artifacts`
+//! the `macformer` binary is self-contained.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//! ```no_run
+//! use macformer::runtime::{Executable, Registry, DeviceState};
+//! let reg = Registry::open_default().unwrap();
+//! let info = reg.get("lra_text.mac_exp.train").unwrap();
+//! let init = Executable::compile_file(
+//!     "init",
+//!     &reg.hlo_path(reg.get("lra_text.mac_exp.init").unwrap()),
+//! ).unwrap();
+//! let state = DeviceState::init(&init, info, 42).unwrap();
+//! assert_eq!(state.params().len(), info.n_params);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod reference;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// The Table-2 attention variants, paper order.
+pub const VARIANTS: [&str; 7] = [
+    "softmax", "rfa", "mac_exp", "mac_inv", "mac_trigh", "mac_log", "mac_sqrt",
+];
+
+/// The three LRA tasks evaluated in Table 2.
+pub const LRA_TASKS: [&str; 3] = ["lra_text", "lra_listops", "lra_retrieval"];

@@ -1,0 +1,220 @@
+//! `macformer` — the launcher.
+//!
+//! Subcommands:
+//!   info                         backend + artifact inventory
+//!   train                        one (task, variant) training run
+//!   sweep                        Table-2: all variants x tasks, subprocesses
+//!   microbench                   Fig-4 RMFA-vs-softmax grid
+//!   fig3                         ppSBN translation ablation
+//!   datagen                      dump synthetic dataset samples
+//!
+//! Every run prints a human summary to stdout and (with --out-json) a
+//! machine-readable report for the bench harnesses / EXPERIMENTS.md.
+
+use anyhow::{anyhow, bail, Result};
+
+use macformer::config::RunConfig;
+use macformer::coordinator::{fig3, microbench, sweep, Trainer};
+use macformer::runtime::{client, Registry};
+use macformer::util::cli::Args;
+use macformer::util::logging;
+
+fn main() {
+    logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(args),
+        Some("train") => cmd_train(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("microbench") => cmd_microbench(args),
+        Some("fig3") => cmd_fig3(args),
+        Some("datagen") => cmd_datagen(args),
+        Some(other) => bail!(
+            "unknown subcommand {other:?}; try: info, train, sweep, microbench, fig3, datagen"
+        ),
+        None => {
+            println!(
+                "macformer v{} — Random Maclaurin Feature Attention",
+                macformer::VERSION
+            );
+            println!("usage: macformer <info|train|sweep|microbench|fig3|datagen> [flags]");
+            Ok(())
+        }
+    }
+}
+
+fn registry(args: &Args) -> Result<Registry> {
+    let dir = args.str_flag("artifacts", "artifacts");
+    Registry::open(std::path::Path::new(&dir))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    args.check_unknown().map_err(|e| anyhow!(e))?;
+    println!("backend: {}", client::describe()?);
+    println!("artifacts: {} modules in {:?}", reg.modules.len(), reg.dir);
+    let mut by_role = std::collections::BTreeMap::new();
+    for m in reg.modules.values() {
+        *by_role.entry(m.role.clone()).or_insert(0usize) += 1;
+    }
+    for (role, count) in by_role {
+        println!("  {role:<14} {count}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(args)?;
+    args.check_unknown().map_err(|e| anyhow!(e))?;
+    let reg = Registry::open(std::path::Path::new(&cfg.artifacts_dir))?;
+    let out_json = cfg.out_json.clone();
+    let ckpt = cfg.checkpoint.clone();
+    let mut trainer = Trainer::build(cfg, &reg)?;
+    let report = trainer.run()?;
+    if let Some(path) = ckpt {
+        macformer::coordinator::checkpoint::save(
+            std::path::Path::new(&path),
+            &trainer.state,
+            &trainer.info,
+        )?;
+        log::info!("checkpoint saved to {path}");
+    }
+    println!(
+        "{}: steps {} | loss {:.4} | eval loss {:.4} | quality {:.3} | {:.1}s train ({:.3}s/step) | peak rss {}",
+        report.family,
+        report.steps,
+        report.final_loss,
+        report.eval_loss,
+        report.quality,
+        report.train_seconds,
+        report.step_seconds_mean,
+        macformer::util::human_bytes(report.peak_rss_bytes),
+    );
+    if let Some(path) = out_json {
+        std::fs::write(&path, report.to_json().to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(args)?;
+    let tasks_flag = args.str_flag("tasks", "lra_text,lra_listops,lra_retrieval");
+    let variants_flag = args.str_flag(
+        "variants",
+        "softmax,rfa,mac_exp,mac_inv,mac_trigh,mac_log,mac_sqrt",
+    );
+    args.check_unknown().map_err(|e| anyhow!(e))?;
+    let variants: Vec<&str> = variants_flag.split(',').collect();
+    let mut tables = Vec::new();
+    for task in tasks_flag.split(',') {
+        tables.push(sweep::run_task(&cfg, task, &variants)?);
+    }
+    println!("{}", sweep::render_table(&tables));
+    if let Some(path) = cfg.out_json {
+        std::fs::write(&path, sweep::to_json(&tables).to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_microbench(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    let repeats = args.usize_flag("repeats", 5).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_flag("seed", 7).map_err(|e| anyhow!(e))?;
+    let lengths_flag = args.opt_flag("lengths");
+    let features_flag = args.opt_flag("features");
+    let out_json = args.opt_flag("out-json");
+    args.check_unknown().map_err(|e| anyhow!(e))?;
+    let parse_list = |s: String| -> Result<Vec<usize>> {
+        s.split(',')
+            .map(|x| x.parse::<usize>().map_err(|e| anyhow!("bad list item {x:?}: {e}")))
+            .collect()
+    };
+    let lengths = match lengths_flag {
+        Some(s) => parse_list(s)?,
+        None => reg.micro_lengths.clone(),
+    };
+    let features = match features_flag {
+        Some(s) => parse_list(s)?,
+        None => reg.micro_features.clone(),
+    };
+    let cells = microbench::run_grid(&reg, &lengths, &features, repeats, seed)?;
+    println!("{}", microbench::render(&cells));
+    if let Some(path) = out_json {
+        std::fs::write(&path, microbench::to_json(&cells).to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(args)?;
+    let epochs = args.usize_flag("epochs", 8).map_err(|e| anyhow!(e))?;
+    let spe = args.usize_flag("steps-per-epoch", 50).map_err(|e| anyhow!(e))?;
+    args.check_unknown().map_err(|e| anyhow!(e))?;
+    let reg = Registry::open(std::path::Path::new(&cfg.artifacts_dir))?;
+    cfg.train_examples = cfg.train_examples.max(spe * 32);
+    let out_json = cfg.out_json.clone();
+    let result = fig3::run(&reg, &cfg, epochs, spe)?;
+    println!("{}", fig3::render(&result));
+    if let Some(path) = out_json {
+        std::fs::write(&path, fig3::to_json(&result).to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    use macformer::data;
+    let task = args.str_flag("task", "lra_listops");
+    let count = args.usize_flag("count", 3).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_flag("seed", 1).map_err(|e| anyhow!(e))?;
+    let n = args.usize_flag("seq-len", 128).map_err(|e| anyhow!(e))?;
+    args.check_unknown().map_err(|e| anyhow!(e))?;
+    match task.as_str() {
+        "lra_text" => {
+            let mut rng = macformer::util::rng::Rng::new(seed);
+            for e in data::text_cls::generate(&mut rng, count, n) {
+                println!("[label {}] {}", e.label, e.text);
+            }
+        }
+        "lra_listops" => {
+            let mut rng = macformer::util::rng::Rng::new(seed);
+            let v = data::listops::vocab();
+            for e in data::listops::generate(&mut rng, count, n, 0.6) {
+                let text: Vec<&str> = e
+                    .tokens
+                    .iter()
+                    .take_while(|t| **t != data::vocab::SYM_PAD)
+                    .filter_map(|t| v.symbol(*t))
+                    .collect();
+                println!("[label {}] {}", e.label, text.join(" "));
+            }
+        }
+        "translation" => {
+            let lex = data::translation::lexicon(0xBEEF);
+            let mut rng = macformer::util::rng::Rng::new(seed);
+            for _ in 0..count {
+                let p = data::translation::sample_pair(&mut rng, &lex);
+                println!("src {:?} -> tgt {:?}", p.src, p.tgt);
+            }
+        }
+        other => bail!(
+            "datagen for {other:?} not supported (try lra_text, lra_listops, translation)"
+        ),
+    }
+    Ok(())
+}

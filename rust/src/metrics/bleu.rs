@@ -1,0 +1,152 @@
+//! Corpus BLEU (Papineni et al. 2002) for the Fig-3 translation toy.
+//!
+//! Standard BLEU-4: modified n-gram precision with clipping, geometric
+//! mean over n=1..4 with +epsilon smoothing for empty counts (method
+//! "add-epsilon", needed at toy scale where 4-gram matches can be zero),
+//! times the brevity penalty. Operates on integer token ids — the
+//! synthetic corpus never needs detokenization.
+
+use std::collections::HashMap;
+
+/// Clipped n-gram match statistics for one sentence pair.
+#[derive(Debug, Default, Clone)]
+pub struct BleuStats {
+    /// matched[n-1], total[n-1] for n = 1..=4
+    pub matched: [usize; 4],
+    pub total: [usize; 4],
+    pub hyp_len: usize,
+    pub ref_len: usize,
+}
+
+impl BleuStats {
+    pub fn accumulate(&mut self, other: &BleuStats) {
+        for i in 0..4 {
+            self.matched[i] += other.matched[i];
+            self.total[i] += other.total[i];
+        }
+        self.hyp_len += other.hyp_len;
+        self.ref_len += other.ref_len;
+    }
+
+    /// Corpus BLEU in [0, 100].
+    pub fn score(&self) -> f64 {
+        if self.hyp_len == 0 {
+            return 0.0;
+        }
+        let mut log_p = 0.0;
+        for i in 0..4 {
+            let p = if self.total[i] == 0 {
+                // sentence shorter than n: skip order (uniform convention)
+                continue;
+            } else {
+                (self.matched[i] as f64 + 1e-9) / self.total[i] as f64
+            };
+            log_p += p.ln() / 4.0;
+        }
+        let bp = if self.hyp_len >= self.ref_len {
+            1.0
+        } else {
+            (1.0 - self.ref_len as f64 / self.hyp_len as f64).exp()
+        };
+        100.0 * bp * log_p.exp()
+    }
+}
+
+fn ngram_counts(tokens: &[u32], n: usize) -> HashMap<&[u32], usize> {
+    let mut map = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *map.entry(w).or_insert(0) += 1;
+        }
+    }
+    map
+}
+
+/// Per-sentence statistics (accumulate for corpus BLEU).
+pub fn sentence_stats(hyp: &[u32], reference: &[u32]) -> BleuStats {
+    let mut s = BleuStats {
+        hyp_len: hyp.len(),
+        ref_len: reference.len(),
+        ..Default::default()
+    };
+    for n in 1..=4 {
+        let h = ngram_counts(hyp, n);
+        let r = ngram_counts(reference, n);
+        let total: usize = h.values().sum();
+        let matched: usize = h
+            .iter()
+            .map(|(g, c)| (*c).min(r.get(g).copied().unwrap_or(0)))
+            .sum();
+        s.matched[n - 1] = matched;
+        s.total[n - 1] = total;
+    }
+    s
+}
+
+/// Convenience: corpus BLEU over aligned hypothesis/reference lists.
+pub fn corpus_bleu(pairs: &[(Vec<u32>, Vec<u32>)]) -> f64 {
+    let mut acc = BleuStats::default();
+    for (hyp, reference) in pairs {
+        acc.accumulate(&sentence_stats(hyp, reference));
+    }
+    acc.score()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let s = corpus_bleu(&[(vec![1, 2, 3, 4, 5], vec![1, 2, 3, 4, 5])]);
+        assert!((s - 100.0).abs() < 0.01, "{s}");
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        let s = corpus_bleu(&[(vec![1, 2, 3, 4, 5], vec![6, 7, 8, 9, 10])]);
+        assert!(s < 0.01, "{s}");
+    }
+
+    #[test]
+    fn partial_overlap_between() {
+        let s = corpus_bleu(&[(vec![1, 2, 3, 9, 9], vec![1, 2, 3, 4, 5])]);
+        assert!(s > 0.0 && s < 100.0, "{s}");
+    }
+
+    #[test]
+    fn clipping_prevents_repeat_gaming() {
+        // "the the the the" trick: repeated unigram must be clipped.
+        let gamed = corpus_bleu(&[(vec![7, 7, 7, 7], vec![7, 1, 2, 3])]);
+        let honest = corpus_bleu(&[(vec![7, 1, 2, 9], vec![7, 1, 2, 3])]);
+        assert!(honest > gamed, "honest {honest} vs gamed {gamed}");
+    }
+
+    #[test]
+    fn brevity_penalty_hits_short_hyps() {
+        let long = corpus_bleu(&[(vec![1, 2, 3, 4, 5, 6], vec![1, 2, 3, 4, 5, 6])]);
+        let short = corpus_bleu(&[(vec![1, 2, 3], vec![1, 2, 3, 4, 5, 6])]);
+        assert!(short < long);
+    }
+
+    #[test]
+    fn hand_computed_unigram_case() {
+        // hyp [1,2] vs ref [1,3]: p1 = 1/2, shorter than bigram for n>=2
+        // with total 1 each and 0 matches -> heavily penalized but > 0.
+        let s = sentence_stats(&[1, 2], &[1, 3]);
+        assert_eq!(s.matched[0], 1);
+        assert_eq!(s.total[0], 2);
+        assert_eq!(s.total[1], 1);
+        assert_eq!(s.matched[1], 0);
+    }
+
+    #[test]
+    fn corpus_pools_statistics() {
+        // Corpus BLEU pools counts rather than averaging sentence scores.
+        let a = corpus_bleu(&[
+            (vec![1, 2, 3, 4], vec![1, 2, 3, 4]),
+            (vec![9, 9, 9, 9], vec![5, 6, 7, 8]),
+        ]);
+        assert!(a > 0.0 && a < 100.0);
+    }
+}

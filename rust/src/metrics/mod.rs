@@ -1,0 +1,176 @@
+//! Evaluation metrics: accuracy/perplexity (Table 2, Fig 3), BLEU (Fig 3),
+//! NMSE (Fig 4a), and timing statistics (Fig 4b, Table 2, §Perf).
+
+pub mod bleu;
+
+/// Running classification accuracy.
+#[derive(Debug, Default, Clone)]
+pub struct Accuracy {
+    pub correct: f64,
+    pub total: f64,
+}
+
+impl Accuracy {
+    pub fn update(&mut self, correct: f64, total: f64) {
+        self.correct += correct;
+        self.total += total;
+    }
+    pub fn value(&self) -> f64 {
+        if self.total == 0.0 { 0.0 } else { 100.0 * self.correct / self.total }
+    }
+}
+
+/// Perplexity from accumulated (token nll sum, token count).
+#[derive(Debug, Default, Clone)]
+pub struct Perplexity {
+    pub nll_sum: f64,
+    pub tokens: f64,
+}
+
+impl Perplexity {
+    pub fn update(&mut self, mean_nll: f64, tokens: f64) {
+        self.nll_sum += mean_nll * tokens;
+        self.tokens += tokens;
+    }
+    pub fn value(&self) -> f64 {
+        if self.tokens == 0.0 { f64::INFINITY } else { (self.nll_sum / self.tokens).exp() }
+    }
+    pub fn mean_nll(&self) -> f64 {
+        if self.tokens == 0.0 { f64::INFINITY } else { self.nll_sum / self.tokens }
+    }
+}
+
+/// Normalized mean squared error: mean((a-b)^2) / mean(b^2).
+/// Fig 4a reports log10 of this between RMFA and exact attention.
+pub fn nmse(approx: &[f32], exact: &[f32]) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    assert!(!exact.is_empty());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in approx.iter().zip(exact) {
+        let d = (*a - *b) as f64;
+        num += d * d;
+        den += (*b as f64) * (*b as f64);
+    }
+    if den == 0.0 { f64::INFINITY } else { num / den }
+}
+
+/// Loss EMA for training logs.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    pub alpha: f64,
+    pub value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        Ema { alpha, value: None }
+    }
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+}
+
+/// Wall-time statistics over repeated measurements (Fig 4b / §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct Timing {
+    samples: Vec<f64>,
+}
+
+impl Timing {
+    pub fn push(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_accumulates() {
+        let mut a = Accuracy::default();
+        a.update(3.0, 4.0);
+        a.update(1.0, 4.0);
+        assert_eq!(a.value(), 50.0);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // uniform over 8 classes -> nll = ln 8 -> ppl = 8
+        let mut p = Perplexity::default();
+        p.update((8.0f64).ln(), 100.0);
+        assert!((p.value() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nmse_zero_for_identical() {
+        let a = [1.0, -2.0, 3.0];
+        assert_eq!(nmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn nmse_scales_quadratically() {
+        let exact = [1.0f32, 1.0, 1.0, 1.0];
+        let near: Vec<f32> = exact.iter().map(|x| x + 0.1).collect();
+        let far: Vec<f32> = exact.iter().map(|x| x + 0.2).collect();
+        let r = nmse(&far, &exact) / nmse(&near, &exact);
+        assert!((r - 4.0).abs() < 1e-3, "{r}");
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..32 {
+            e.update(10.0);
+        }
+        assert!((e.value.unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn timing_stats() {
+        let mut t = Timing::default();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            t.push(x);
+        }
+        assert_eq!(t.mean(), 3.0);
+        assert_eq!(t.min(), 1.0);
+        assert_eq!(t.percentile(50.0), 3.0);
+        assert!((t.std() - 1.5811).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,245 @@
+//! Pure-Rust attention oracles: exact softmax attention, kernelized
+//! attention (Definition 2), and the factored linear contraction.
+//!
+//! These mirror `python/compile/kernels/ref.py` and exist for two jobs:
+//! (1) integration tests cross-check the HLO modules' numerics against an
+//! independent implementation, and (2) the Fig-4 harness computes exact
+//! attention on the host when validating device outputs.
+//!
+//! Layout: one attention problem = q, k, v as (n x d) row-major slices.
+
+use crate::tensor::Tensor;
+
+use super::maclaurin;
+
+/// Exact softmax attention for a single head: out = softmax(q k^T / sqrt(d)) v.
+pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Tensor {
+    let (n, d) = (q.shape[0], q.shape[1]);
+    let m = k.shape[0];
+    assert_eq!(k.shape[1], d);
+    assert_eq!(v.shape[0], m);
+    let dv = v.shape[1];
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Tensor::zeros(&[n, dv]);
+    let mut logits = vec![0.0f32; m];
+    for i in 0..n {
+        let qi = &q.data[i * d..(i + 1) * d];
+        let limit = if causal { i + 1 } else { m };
+        let mut maxl = f32::NEG_INFINITY;
+        for j in 0..limit {
+            let kj = &k.data[j * d..(j + 1) * d];
+            let s: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+            logits[j] = s;
+            maxl = maxl.max(s);
+        }
+        let mut z = 0.0f32;
+        for l in logits.iter_mut().take(limit) {
+            *l = (*l - maxl).exp();
+            z += *l;
+        }
+        for j in 0..limit {
+            let w = logits[j] / z;
+            let vj = &v.data[j * dv..(j + 1) * dv];
+            let dst = &mut out.data[i * dv..(i + 1) * dv];
+            for (o, x) in dst.iter_mut().zip(vj) {
+                *o += w * x;
+            }
+        }
+    }
+    out
+}
+
+/// Kernelized attention (Definition 2) with a Table-1 kernel.
+pub fn kernelized_attention(
+    kernel: &str,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    causal: bool,
+    eps: f32,
+) -> Tensor {
+    let (n, d) = (q.shape[0], q.shape[1]);
+    let m = k.shape[0];
+    let dv = v.shape[1];
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Tensor::zeros(&[n, dv]);
+    for i in 0..n {
+        let qi = &q.data[i * d..(i + 1) * d];
+        let limit = if causal { i + 1 } else { m };
+        let mut den = 0.0f32;
+        let mut num = vec![0.0f32; dv];
+        for j in 0..limit {
+            let kj = &k.data[j * d..(j + 1) * d];
+            let t: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+            let w = maclaurin::kernel_value(kernel, t as f64) as f32;
+            den += w;
+            let vj = &v.data[j * dv..(j + 1) * dv];
+            for (o, x) in num.iter_mut().zip(vj) {
+                *o += w * x;
+            }
+        }
+        for (o, x) in out.data[i * dv..(i + 1) * dv].iter_mut().zip(&num) {
+            *o = x / (den + eps);
+        }
+    }
+    out
+}
+
+/// Factored linear contraction: out_i = phi_q_i S / (phi_q_i z + eps).
+pub fn linear_attention(
+    phi_q: &Tensor,
+    phi_k: &Tensor,
+    v: &Tensor,
+    causal: bool,
+    eps: f32,
+) -> Tensor {
+    let (n, feat) = (phi_q.shape[0], phi_q.shape[1]);
+    let dv = v.shape[1];
+    let mut out = Tensor::zeros(&[n, dv]);
+    if causal {
+        let mut s = vec![0.0f32; feat * dv];
+        let mut z = vec![0.0f32; feat];
+        for i in 0..n {
+            let pk = &phi_k.data[i * feat..(i + 1) * feat];
+            let vi = &v.data[i * dv..(i + 1) * dv];
+            for (f, pkf) in pk.iter().enumerate() {
+                z[f] += pkf;
+                let row = &mut s[f * dv..(f + 1) * dv];
+                for (acc, x) in row.iter_mut().zip(vi) {
+                    *acc += pkf * x;
+                }
+            }
+            let pq = &phi_q.data[i * feat..(i + 1) * feat];
+            let mut den = 0.0f32;
+            let mut num = vec![0.0f32; dv];
+            for (f, pqf) in pq.iter().enumerate() {
+                den += pqf * z[f];
+                let row = &s[f * dv..(f + 1) * dv];
+                for (acc, x) in num.iter_mut().zip(row) {
+                    *acc += pqf * x;
+                }
+            }
+            for (o, x) in out.data[i * dv..(i + 1) * dv].iter_mut().zip(&num) {
+                *o = x / (den + eps);
+            }
+        }
+    } else {
+        // S = phi_k^T v (feat x dv), z = sum_j phi_k_j
+        let s = phi_k.transpose2().matmul(v);
+        let mut z = vec![0.0f32; feat];
+        for j in 0..phi_k.shape[0] {
+            for f in 0..feat {
+                z[f] += phi_k.data[j * feat + f];
+            }
+        }
+        for i in 0..n {
+            let pq = &phi_q.data[i * feat..(i + 1) * feat];
+            let den: f32 = pq.iter().zip(&z).map(|(a, b)| a * b).sum();
+            for c in 0..dv {
+                let mut acc = 0.0f32;
+                for f in 0..feat {
+                    acc += pq[f] * s.data[f * dv + c];
+                }
+                out.data[i * dv + c] = acc / (den + eps);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for x in t.data.iter_mut() {
+            *x = rng.normal() * scale;
+        }
+        t
+    }
+
+    #[test]
+    fn softmax_rows_are_convex_combinations() {
+        let mut rng = Rng::new(1);
+        let q = randn(&mut rng, &[8, 4], 1.0);
+        let k = randn(&mut rng, &[8, 4], 1.0);
+        // v constant per column -> output must equal that constant
+        let v = Tensor::filled(&[8, 3], 2.5);
+        let out = softmax_attention(&q, &k, &v, false);
+        for x in &out.data {
+            assert!((x - 2.5).abs() < 1e-5, "{x}");
+        }
+    }
+
+    #[test]
+    fn causal_first_row_copies_first_value() {
+        let mut rng = Rng::new(2);
+        let q = randn(&mut rng, &[5, 4], 1.0);
+        let k = randn(&mut rng, &[5, 4], 1.0);
+        let v = randn(&mut rng, &[5, 3], 1.0);
+        let out = softmax_attention(&q, &k, &v, true);
+        for c in 0..3 {
+            assert!((out.data[c] - v.data[c]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kernelized_exp_equals_softmax() {
+        let mut rng = Rng::new(3);
+        let q = randn(&mut rng, &[6, 4], 0.5);
+        let k = randn(&mut rng, &[6, 4], 0.5);
+        let v = randn(&mut rng, &[6, 4], 1.0);
+        let a = softmax_attention(&q, &k, &v, false);
+        let b = kernelized_attention("exp", &q, &k, &v, false, 0.0);
+        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn linear_attention_matches_explicit_scores() {
+        // With phi maps given, linear attention must equal the quadratic
+        // form sum_j (phi_q.phi_k_j) v_j / sum_j (phi_q.phi_k_j).
+        let mut rng = Rng::new(4);
+        let n = 7;
+        let feat = 5;
+        let phi_q = randn(&mut rng, &[n, feat], 1.0).map(f32::abs);
+        let phi_k = randn(&mut rng, &[n, feat], 1.0).map(f32::abs);
+        let v = randn(&mut rng, &[n, 3], 1.0);
+        let fast = linear_attention(&phi_q, &phi_k, &v, false, 0.0);
+        // explicit
+        let mut slow = Tensor::zeros(&[n, 3]);
+        for i in 0..n {
+            let mut den = 0.0;
+            let mut num = [0.0f32; 3];
+            for j in 0..n {
+                let s: f32 = (0..feat)
+                    .map(|f| phi_q.data[i * feat + f] * phi_k.data[j * feat + f])
+                    .sum();
+                den += s;
+                for c in 0..3 {
+                    num[c] += s * v.data[j * 3 + c];
+                }
+            }
+            for c in 0..3 {
+                slow.data[i * 3 + c] = num[c] / den;
+            }
+        }
+        assert!(fast.max_abs_diff(&slow) < 1e-4);
+    }
+
+    #[test]
+    fn causal_linear_matches_bidir_on_last_row() {
+        let mut rng = Rng::new(5);
+        let n = 6;
+        let phi_q = randn(&mut rng, &[n, 4], 1.0).map(f32::abs);
+        let phi_k = randn(&mut rng, &[n, 4], 1.0).map(f32::abs);
+        let v = randn(&mut rng, &[n, 2], 1.0);
+        let c = linear_attention(&phi_q, &phi_k, &v, true, 0.0);
+        let b = linear_attention(&phi_q, &phi_k, &v, false, 0.0);
+        for col in 0..2 {
+            let i = (n - 1) * 2 + col;
+            assert!((c.data[i] - b.data[i]).abs() < 1e-5);
+        }
+    }
+}

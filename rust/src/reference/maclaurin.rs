@@ -1,0 +1,169 @@
+//! Table-1 kernels and their Maclaurin coefficients — the Rust mirror of
+//! `python/compile/maclaurin.py`. Cross-language agreement is enforced by
+//! golden tests (same values both sides) and by the table1_kernels bench,
+//! which regenerates Table 1 and numerically validates each expansion
+//! against its closed form.
+
+/// The five dot-product kernels of Table 1 (paper order).
+pub const KERNELS: [&str; 5] = ["exp", "inv", "log", "trigh", "sqrt"];
+
+/// Truncation degree used by the static AOT lowering (see python side).
+pub const DEFAULT_MAX_DEGREE: usize = 8;
+
+fn factorial(n: usize) -> f64 {
+    (1..=n).map(|i| i as f64).product()
+}
+
+fn double_factorial(n: i64) -> f64 {
+    if n <= 0 {
+        return 1.0;
+    }
+    let mut out = 1.0;
+    let mut k = n;
+    while k > 1 {
+        out *= k as f64;
+        k -= 2;
+    }
+    out
+}
+
+/// a_N: the N-th Maclaurin coefficient of the named kernel.
+///
+/// Matches the paper's Table 1 with the two typos fixed (log: 1/max(1,N);
+/// sqrt: double factorial (2N-3)!!) — see maclaurin.py for the derivation.
+pub fn coefficient(kernel: &str, n: usize) -> f64 {
+    match kernel {
+        "exp" | "trigh" => 1.0 / factorial(n),
+        "inv" => 1.0,
+        "log" => {
+            if n == 0 {
+                1.0
+            } else {
+                1.0 / n as f64
+            }
+        }
+        "sqrt" => {
+            if n == 0 {
+                1.0
+            } else {
+                double_factorial(2 * n as i64 - 3) / (2f64.powi(n as i32) * factorial(n))
+            }
+        }
+        other => panic!("unknown kernel {other:?}"),
+    }
+}
+
+/// Closed-form K(t).
+pub fn kernel_value(kernel: &str, t: f64) -> f64 {
+    match kernel {
+        "exp" | "trigh" => t.exp(),
+        "inv" => 1.0 / (1.0 - t),
+        "log" => 1.0 - (1.0 - t).ln(),
+        "sqrt" => 2.0 - (1.0 - t).sqrt(),
+        other => panic!("unknown kernel {other:?}"),
+    }
+}
+
+/// sum_{N=0}^{max_degree} a_N t^N.
+pub fn truncated_kernel_value(kernel: &str, t: f64, max_degree: usize) -> f64 {
+    let mut acc = 0.0;
+    let mut tn = 1.0;
+    for n in 0..=max_degree {
+        acc += coefficient(kernel, n) * tn;
+        tn *= t;
+    }
+    acc
+}
+
+/// P[N = eta] over the truncated window (renormalized geometric law).
+pub fn degree_distribution(p: f64, max_degree: usize) -> Vec<f64> {
+    assert!(p > 1.0, "p must be > 1");
+    let raw: Vec<f64> = (0..=max_degree).map(|e| p.powi(-(e as i32 + 1))).collect();
+    let z: f64 = raw.iter().sum();
+    raw.into_iter().map(|x| x / z).collect()
+}
+
+/// sqrt(a_N * p^(N+1)): the phi_i prefactor from Definition 3.
+pub fn feature_scale(kernel: &str, degree: usize, p: f64) -> f64 {
+    (coefficient(kernel, degree) * p.powi(degree as i32 + 1)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_coefficients_are_inverse_factorials() {
+        assert_eq!(coefficient("exp", 0), 1.0);
+        assert_eq!(coefficient("exp", 3), 1.0 / 6.0);
+        assert_eq!(coefficient("trigh", 4), 1.0 / 24.0);
+    }
+
+    #[test]
+    fn all_coefficients_nonnegative() {
+        for k in KERNELS {
+            for n in 0..=12 {
+                assert!(coefficient(k, n) >= 0.0, "{k} a_{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn expansions_match_closed_forms() {
+        // On |t| <= 0.5 a degree-16 truncation must be within 1e-3 of the
+        // closed form for every kernel.
+        for k in KERNELS {
+            for i in 0..=20 {
+                let t = -0.5 + i as f64 * 0.05;
+                let exact = kernel_value(k, t);
+                let series = truncated_kernel_value(k, t, 16);
+                assert!(
+                    (exact - series).abs() < 1e-3 * exact.abs().max(1.0),
+                    "{k}(t={t}): closed {exact} vs series {series}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_coefficient_uses_double_factorial() {
+        // a_4 of 2-sqrt(1-t) is 5!!/2^4/4! = 15/384, NOT the paper's
+        // max(1, 2N-3)/(2^N N!) = 5/384 — the series test above would fail
+        // with the paper's literal formula.
+        assert!((coefficient("sqrt", 4) - 15.0 / 384.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degree_distribution_sums_to_one() {
+        for p in [1.5, 2.0, 4.0] {
+            let d = degree_distribution(p, 8);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            // monotone decreasing
+            for w in d.windows(2) {
+                assert!(w[0] > w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn geometric_law_ratios() {
+        let d = degree_distribution(2.0, 8);
+        for w in d.windows(2) {
+            assert!((w[0] / w[1] - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn scale_squared_times_prob_recovers_coefficient() {
+        // E[a_N p^{N+1} * P[N]] telescopes back to a_N (untruncated law):
+        // scale^2 * p^-(N+1) == a_N.
+        for k in KERNELS {
+            for n in 0..=6 {
+                let s = feature_scale(k, n, 2.0);
+                let back = s * s * 2f64.powi(-(n as i32 + 1));
+                assert!((back - coefficient(k, n)).abs() < 1e-12);
+            }
+        }
+    }
+}

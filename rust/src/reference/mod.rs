@@ -1,0 +1,10 @@
+//! Pure-Rust reference implementations of the paper's math.
+//!
+//! Independent of JAX/XLA — these mirror `python/compile/kernels/ref.py`
+//! and exist so the compiled HLO modules can be validated by a second
+//! implementation (integration tests) and so property tests on the
+//! paper's theorems (unbiasedness, concentration) run natively.
+
+pub mod attention;
+pub mod maclaurin;
+pub mod rmf;

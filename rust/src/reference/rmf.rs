@@ -1,0 +1,188 @@
+//! Pure-Rust Random Maclaurin Feature map (Definition 3) — the host-side
+//! mirror of the L1 Pallas kernel, used by property tests to validate the
+//! unbiasedness claims (Theorem 1) independently of JAX.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::maclaurin;
+
+/// One sampled RMF map: per-feature degrees and Rademacher directions.
+#[derive(Debug, Clone)]
+pub struct RmfMap {
+    /// degrees[i] = N_i
+    pub degrees: Vec<usize>,
+    /// omega[i][j] in {-1, +1}^d for j < degrees[i]
+    pub omega: Vec<Vec<Vec<f32>>>,
+    /// scales[i] = sqrt(a_{N_i} p^{N_i + 1})
+    pub scales: Vec<f32>,
+    pub dim_in: usize,
+}
+
+impl RmfMap {
+    /// Draw a D-feature map for `kernel` on inputs of dimension d.
+    pub fn sample(
+        rng: &mut Rng,
+        kernel: &str,
+        num_features: usize,
+        dim_in: usize,
+        p: f64,
+        max_degree: usize,
+    ) -> RmfMap {
+        let probs = maclaurin::degree_distribution(p, max_degree);
+        let mut degrees = Vec::with_capacity(num_features);
+        let mut omega = Vec::with_capacity(num_features);
+        let mut scales = Vec::with_capacity(num_features);
+        for _ in 0..num_features {
+            let n = rng.weighted(&probs);
+            degrees.push(n);
+            scales.push(maclaurin::feature_scale(kernel, n, p) as f32);
+            let dirs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dim_in).map(|_| rng.rademacher()).collect())
+                .collect();
+            omega.push(dirs);
+        }
+        RmfMap { degrees, omega, scales, dim_in }
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.degrees.len()
+    }
+
+    /// phi(x) for a single row x (length dim_in).
+    pub fn apply_row(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.dim_in);
+        let d = self.num_features() as f32;
+        let inv = (1.0 / d).sqrt();
+        self.omega
+            .iter()
+            .zip(&self.scales)
+            .map(|(dirs, scale)| {
+                let mut prod = 1.0f32;
+                for w in dirs {
+                    let dot: f32 = w.iter().zip(x).map(|(a, b)| a * b).sum();
+                    prod *= dot;
+                }
+                scale * prod * inv
+            })
+            .collect()
+    }
+
+    /// Phi over an (n x dim_in) tensor -> (n x D).
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape[1], self.dim_in);
+        let n = x.shape[0];
+        let feat = self.num_features();
+        let mut out = Tensor::zeros(&[n, feat]);
+        for i in 0..n {
+            let row = self.apply_row(&x.data[i * self.dim_in..(i + 1) * self.dim_in]);
+            out.data[i * feat..(i + 1) * feat].copy_from_slice(&row);
+        }
+        out
+    }
+}
+
+/// Monte-Carlo estimate of K(x.y) via phi(x).phi(y), averaged over `draws`
+/// independently sampled maps — the Theorem-1 expectation check.
+pub fn mc_kernel_estimate(
+    rng: &mut Rng,
+    kernel: &str,
+    x: &[f32],
+    y: &[f32],
+    num_features: usize,
+    p: f64,
+    max_degree: usize,
+    draws: usize,
+) -> f64 {
+    let mut acc = 0.0f64;
+    for _ in 0..draws {
+        let map = RmfMap::sample(rng, kernel, num_features, x.len(), p, max_degree);
+        let fx = map.apply_row(x);
+        let fy = map.apply_row(y);
+        let dot: f32 = fx.iter().zip(&fy).map(|(a, b)| a * b).sum();
+        acc += dot as f64;
+    }
+    acc / draws as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_count_and_shape() {
+        let mut rng = Rng::new(1);
+        let map = RmfMap::sample(&mut rng, "exp", 32, 8, 2.0, 8);
+        assert_eq!(map.num_features(), 32);
+        let x = vec![0.1f32; 8];
+        assert_eq!(map.apply_row(&x).len(), 32);
+    }
+
+    #[test]
+    fn zero_degree_features_are_constant() {
+        let mut rng = Rng::new(2);
+        let map = RmfMap::sample(&mut rng, "exp", 64, 4, 2.0, 8);
+        let a = map.apply_row(&[0.5, -0.5, 0.25, 0.0]);
+        let b = map.apply_row(&[0.0, 0.9, -0.1, 0.3]);
+        for (i, &deg) in map.degrees.iter().enumerate() {
+            if deg == 0 {
+                assert_eq!(a[i], b[i], "degree-0 feature {i} must not vary");
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased_for_exp_kernel() {
+        // E[phi(x).phi(y)] -> truncated exp(x.y); tolerance from MC noise.
+        let mut rng = Rng::new(3);
+        let x = [0.3f32, -0.2, 0.1, 0.4];
+        let y = [0.2f32, 0.3, -0.1, 0.2];
+        let t: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let est = mc_kernel_estimate(&mut rng, "exp", &x, &y, 64, 2.0, 8, 3000);
+        let exact = maclaurin::truncated_kernel_value("exp", t as f64, 8);
+        assert!(
+            (est - exact).abs() < 0.05 * exact.abs().max(1.0),
+            "est {est} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn unbiased_for_inv_kernel() {
+        let mut rng = Rng::new(4);
+        let x = [0.3f32, -0.1, 0.2, 0.1];
+        let y = [0.25f32, 0.2, -0.15, 0.1];
+        let t: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let est = mc_kernel_estimate(&mut rng, "inv", &x, &y, 64, 2.0, 8, 3000);
+        let exact = maclaurin::truncated_kernel_value("inv", t as f64, 8);
+        assert!(
+            (est - exact).abs() < 0.08 * exact.abs().max(1.0),
+            "est {est} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn variance_decreases_with_features() {
+        // Theorem 2: error concentrates as D grows. Estimate variance of
+        // the kernel estimate at D=8 vs D=128.
+        let x = [0.4f32, -0.3, 0.2, 0.1];
+        let y = [0.1f32, 0.2, 0.3, -0.2];
+        let spread = |feat: usize, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut vals = Vec::new();
+            for _ in 0..200 {
+                let map = RmfMap::sample(&mut rng, "exp", feat, 4, 2.0, 8);
+                let fx = map.apply_row(&x);
+                let fy = map.apply_row(&y);
+                vals.push(fx.iter().zip(&fy).map(|(a, b)| a * b).sum::<f32>() as f64);
+            }
+            let m = vals.iter().sum::<f64>() / vals.len() as f64;
+            vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / vals.len() as f64
+        };
+        let v_small = spread(8, 7);
+        let v_big = spread(128, 8);
+        assert!(
+            v_big < v_small / 4.0,
+            "variance must shrink with D: D=8 {v_small} vs D=128 {v_big}"
+        );
+    }
+}

@@ -1,0 +1,230 @@
+//! Artifact registry: the typed view of `artifacts/manifest.json`.
+//!
+//! The manifest is the contract between the Python compile path and this
+//! runtime (DESIGN.md §Artifact-contract). The registry exposes module
+//! metadata lookups and lazily compiles HLO files into executables.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Shape + dtype of one module input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = v.get("dtype").as_str().unwrap_or("float32").to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO module's manifest row.
+#[derive(Debug, Clone)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub role: String,
+    pub task: String,
+    pub variant: String,
+    pub file: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub num_classes: usize,
+    pub n_params: usize,
+    pub n_opt: usize,
+    pub param_specs: Vec<TensorSpec>,
+    pub opt_specs: Vec<TensorSpec>,
+    pub batch_specs: Vec<(String, TensorSpec)>,
+    pub feature_dim: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub ppsbn: bool,
+}
+
+impl ModuleInfo {
+    fn from_json(v: &Value) -> Result<ModuleInfo> {
+        let name = v.get("name").as_str().unwrap_or_default().to_string();
+        if name.is_empty() {
+            bail!("manifest row without name");
+        }
+        let param_specs = v
+            .get("param_specs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let opt_specs = v
+            .get("opt_specs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let batch_specs = v
+            .get("batch_specs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|b| {
+                Ok((
+                    b.get("name").as_str().unwrap_or("?").to_string(),
+                    TensorSpec::from_json(b)?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModuleInfo {
+            role: v.get("role").as_str().unwrap_or_default().to_string(),
+            task: v.get("task").as_str().unwrap_or_default().to_string(),
+            variant: v.get("variant").as_str().unwrap_or_default().to_string(),
+            file: v.get("file").as_str().unwrap_or_default().to_string(),
+            batch: v.get("batch").as_usize().unwrap_or(0),
+            seq_len: v.get("seq_len").as_usize().unwrap_or(0),
+            num_classes: v.get("num_classes").as_usize().unwrap_or(0),
+            n_params: v.get("n_params").as_usize().unwrap_or(0),
+            n_opt: v.get("n_opt").as_usize().unwrap_or(0),
+            feature_dim: v.get("feature_dim").as_usize().unwrap_or(0),
+            prompt_len: v.get("prompt_len").as_usize().unwrap_or(0),
+            max_new: v.get("max_new").as_usize().unwrap_or(0),
+            ppsbn: v.get("config").get("ppsbn").as_bool().unwrap_or(false),
+            param_specs,
+            opt_specs,
+            batch_specs,
+            name,
+        })
+    }
+
+    /// Total parameter (+ optimizer) element count.
+    pub fn state_numel(&self) -> usize {
+        self.param_specs.iter().map(TensorSpec::numel).sum()
+    }
+}
+
+/// Parsed manifest + artifact directory.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub modules: BTreeMap<String, ModuleInfo>,
+    pub micro_lengths: Vec<usize>,
+    pub micro_features: Vec<usize>,
+    pub translation_src_max: usize,
+    pub translation_seq: usize,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut modules = BTreeMap::new();
+        for row in root.get("modules").as_arr().unwrap_or(&[]) {
+            let info = ModuleInfo::from_json(row)?;
+            modules.insert(info.name.clone(), info);
+        }
+        let micro = root.get("micro");
+        let arr_usize = |v: &Value| -> Vec<usize> {
+            v.as_arr().unwrap_or(&[]).iter().filter_map(|x| x.as_usize()).collect()
+        };
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            micro_lengths: arr_usize(micro.get("lengths")),
+            micro_features: arr_usize(micro.get("features")),
+            translation_src_max: root.get("translation").get("src_max").as_usize().unwrap_or(24),
+            translation_seq: root.get("translation").get("seq").as_usize().unwrap_or(64),
+            modules,
+        })
+    }
+
+    /// Default artifact location: `$MACFORMER_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Registry> {
+        let dir = std::env::var("MACFORMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Registry::open(Path::new(&dir))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModuleInfo> {
+        self.modules.get(name).ok_or_else(|| {
+            anyhow!(
+                "module {name:?} not in manifest ({} modules known)",
+                self.modules.len()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, info: &ModuleInfo) -> PathBuf {
+        self.dir.join(&info.file)
+    }
+
+    /// All modules with a given role ("train", "eval", ...).
+    pub fn by_role(&self, role: &str) -> Vec<&ModuleInfo> {
+        self.modules.values().filter(|m| m.role == role).collect()
+    }
+
+    /// The family prefix for one (task, variant): e.g. "lra_text.mac_exp".
+    pub fn family(task: &str, variant: &str) -> String {
+        format!("{task}.{variant}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(
+            std::env::var("MACFORMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        )
+    }
+
+    #[test]
+    fn registry_parses_real_manifest() {
+        let reg = Registry::open(&manifest_dir()).expect("make artifacts first");
+        assert!(reg.modules.len() >= 80, "got {}", reg.modules.len());
+        // every Table-2 cell present
+        for task in ["lra_text", "lra_listops", "lra_retrieval"] {
+            for variant in ["softmax", "rfa", "mac_exp", "mac_inv", "mac_trigh", "mac_log", "mac_sqrt"] {
+                for role in ["init", "train", "eval"] {
+                    let name = format!("{task}.{variant}.{role}");
+                    assert!(reg.modules.contains_key(&name), "missing {name}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn module_files_exist_on_disk() {
+        let reg = Registry::open(&manifest_dir()).unwrap();
+        for info in reg.modules.values() {
+            assert!(reg.hlo_path(info).exists(), "missing {:?}", info.file);
+        }
+    }
+
+    #[test]
+    fn train_modules_declare_state() {
+        let reg = Registry::open(&manifest_dir()).unwrap();
+        for info in reg.by_role("train") {
+            assert!(info.n_params > 0, "{}", info.name);
+            assert!(info.n_opt > 0, "{}", info.name);
+            assert_eq!(info.param_specs.len(), info.n_params, "{}", info.name);
+            assert!(!info.batch_specs.is_empty(), "{}", info.name);
+        }
+    }
+}

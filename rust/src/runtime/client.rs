@@ -1,0 +1,51 @@
+//! Thread-local PJRT client.
+//!
+//! The `xla` crate's `PjRtClient` is an `Rc`-backed handle (not `Send`/
+//! `Sync`), so a process-global would be unsound under `cargo test`'s
+//! thread pool. Each thread lazily creates its own CPU client instead;
+//! the launcher is effectively single-threaded over PJRT (parallelism in
+//! this stack is *process*-level, via the sweep orchestrator), so in
+//! production exactly one client exists.
+
+use anyhow::Result;
+
+thread_local! {
+    static CLIENT: std::cell::OnceCell<xla::PjRtClient> =
+        const { std::cell::OnceCell::new() };
+}
+
+/// Run `f` with this thread's PJRT CPU client (created on first use).
+///
+/// The client is intentionally *leaked* (an extra Rc clone is forgotten):
+/// destroying a TfrtCpuClient tears down process-shared TFRT state and
+/// crashes any client created afterwards (observed as SIGSEGV/SIGABRT in
+/// sequential test runs). Leaking one client handle per PJRT-touching
+/// thread is bounded and safe.
+pub fn with<R>(f: impl FnOnce(&xla::PjRtClient) -> Result<R>) -> Result<R> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client init failed: {e}"))?;
+            std::mem::forget(c.clone()); // pin: never run the destructor
+            let _ = cell.set(c);
+        }
+        f(cell.get().unwrap())
+    })
+}
+
+/// Clone this thread's client handle (cheap: bumps an Rc).
+pub fn handle() -> Result<xla::PjRtClient> {
+    with(|c| Ok(c.clone()))
+}
+
+/// Backend description string for logs / `macformer info`.
+pub fn describe() -> Result<String> {
+    with(|c| {
+        Ok(format!(
+            "{} ({} device(s), v{})",
+            c.platform_name(),
+            c.device_count(),
+            c.platform_version()
+        ))
+    })
+}

@@ -1,0 +1,262 @@
+//! Compiled-module handle: HLO text -> PJRT executable + typed execute
+//! helpers over host slices and device buffers.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::client;
+
+/// A compiled PJRT executable plus bookkeeping.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_seconds: f64,
+}
+
+/// Host-side argument for an execution: shape + typed data.
+pub enum HostArg {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+    U32(Vec<usize>, Vec<u32>),
+}
+
+impl HostArg {
+    pub fn scalar_u32(x: u32) -> HostArg {
+        HostArg::U32(vec![], vec![x])
+    }
+    pub fn key(k: [u32; 2]) -> HostArg {
+        HostArg::U32(vec![2], k.to_vec())
+    }
+}
+
+impl Executable {
+    /// Parse + compile an HLO text file on the global client.
+    pub fn compile_file(name: &str, path: &Path) -> Result<Executable> {
+        let t0 = Instant::now();
+        let client = client::handle()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        Ok(Executable {
+            name: name.to_string(),
+            exe,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Upload one host argument to the device.
+    pub fn upload(arg: &HostArg) -> Result<xla::PjRtBuffer> {
+        let client = client::handle()?;
+        let buf = match arg {
+            HostArg::F32(dims, data) => client.buffer_from_host_buffer(data, dims, None),
+            HostArg::I32(dims, data) => client.buffer_from_host_buffer(data, dims, None),
+            HostArg::U32(dims, data) => client.buffer_from_host_buffer(data, dims, None),
+        };
+        buf.map_err(|e| anyhow!("host->device upload: {e}"))
+    }
+
+    /// Execute over device buffers; returns the output buffers (tuple
+    /// outputs are decomposed into leaves — see `split_outputs`).
+    pub fn run_buffers(&self, args: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        self.split_outputs(outs)
+    }
+
+    /// Execute over borrowed device buffers (hot path — no moves).
+    pub fn run_buffers_ref(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        self.split_outputs(outs)
+    }
+
+    /// Upload host args, execute, return output buffers.
+    pub fn run_hosts(&self, args: &[HostArg]) -> Result<Vec<xla::PjRtBuffer>> {
+        let bufs = args.iter().map(Self::upload).collect::<Result<Vec<_>>>()?;
+        self.run_buffers(&bufs)
+    }
+
+    fn split_outputs(&self, outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::PjRtBuffer>> {
+        let dev0 = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output device", self.name))?;
+        if dev0.is_empty() {
+            bail!("{}: empty output list", self.name);
+        }
+        Ok(dev0)
+    }
+
+    /// Execute and untuple: the vendored xla crate executes with
+    /// `untuple_result = false`, so a multi-output module comes back as a
+    /// single tuple buffer. This fetches the tuple to the host, splits it,
+    /// and re-uploads the leaves — correct everywhere, with a measured
+    /// per-step cost recorded in EXPERIMENTS.md §Perf (the state is ~2 MB,
+    /// the round-trip is noise next to the step compute on this testbed).
+    pub fn run_buffers_untupled(
+        &self,
+        args: &[&xla::PjRtBuffer],
+        expected: usize,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let outs = self.run_buffers_ref(args)?;
+        if outs.len() == expected {
+            return Ok(outs);
+        }
+        if outs.len() != 1 {
+            bail!(
+                "{}: got {} output buffers, expected {} or 1 tuple",
+                self.name,
+                outs.len(),
+                expected
+            );
+        }
+        let mut lit = outs[0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("tuple fetch {}: {e}", self.name))?;
+        let leaves = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("tuple decompose {}: {e}", self.name))?;
+        if leaves.len() != expected {
+            bail!(
+                "{}: tuple has {} leaves, expected {}",
+                self.name,
+                leaves.len(),
+                expected
+            );
+        }
+        // NOTE: client.buffer_from_host_literal is NOT used here — the
+        // underlying BufferFromHostLiteral transfers asynchronously and the
+        // C shim does not await it, so dropping the decomposed Literal
+        // races the copy (observed as use-after-free crashes with garbage
+        // primitive types). buffer_from_host_buffer uses
+        // kImmutableOnlyDuringCall semantics: the copy completes before it
+        // returns, making the round-trip sound.
+        leaves
+            .into_iter()
+            .map(|leaf| Self::upload_literal(&leaf))
+            .collect()
+    }
+
+    /// Sound host re-upload of a (non-tuple) literal; see the note above.
+    pub fn upload_literal(leaf: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let client = client::handle()?;
+        let dims: Vec<usize> = leaf
+            .array_shape()
+            .map_err(|e| anyhow!("leaf shape: {e}"))?
+            .dims()
+            .iter()
+            .map(|d| *d as usize)
+            .collect();
+        let buf = match leaf.ty().map_err(|e| anyhow!("leaf type: {e}"))? {
+            xla::ElementType::F32 => {
+                let v = leaf.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+                client.buffer_from_host_buffer(&v, &dims, None)
+            }
+            xla::ElementType::S32 => {
+                let v = leaf.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+                client.buffer_from_host_buffer(&v, &dims, None)
+            }
+            xla::ElementType::U32 => {
+                let v = leaf.to_vec::<u32>().map_err(|e| anyhow!("{e}"))?;
+                client.buffer_from_host_buffer(&v, &dims, None)
+            }
+            xla::ElementType::S64 => {
+                let v = leaf.to_vec::<i64>().map_err(|e| anyhow!("{e}"))?;
+                client.buffer_from_host_buffer(&v, &dims, None)
+            }
+            other => bail!("unsupported leaf element type {other:?}"),
+        };
+        buf.map_err(|e| anyhow!("leaf upload: {e}"))
+    }
+
+    /// Upload host args, execute, untuple to `expected` buffers.
+    pub fn run_hosts_untupled(
+        &self,
+        args: &[HostArg],
+        expected: usize,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let bufs = args.iter().map(Self::upload).collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers_untupled(&refs, expected)
+    }
+
+    /// Execute and fetch every output leaf to the host as f32 vectors
+    /// (cheapest path for eval-style modules whose outputs are consumed
+    /// host-side anyway — no device re-upload).
+    pub fn run_fetch_f32_leaves(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        let outs = self.run_buffers_ref(args)?;
+        let mut leaves = Vec::new();
+        for buf in &outs {
+            let mut lit = buf.to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
+            match lit.ty() {
+                Ok(xla::ElementType::F32) => {
+                    leaves.push(lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?)
+                }
+                _ => {
+                    for part in lit.decompose_tuple().map_err(|e| anyhow!("{e}"))? {
+                        leaves.push(Self::literal_leaves_f32(part)?);
+                    }
+                }
+            }
+        }
+        Ok(leaves)
+    }
+
+    /// Copy a device buffer back as f32 data (flattened).
+    pub fn fetch_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
+        Self::literal_leaves_f32(lit)
+    }
+
+    /// Copy a device buffer back as i32 data (unwrapping 1-tuples).
+    pub fn fetch_i32(buf: &xla::PjRtBuffer) -> Result<Vec<i32>> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
+        match lit.ty() {
+            Ok(xla::ElementType::S32) => {
+                lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))
+            }
+            _ => {
+                let mut lit = lit;
+                let mut parts = lit.decompose_tuple().map_err(|e| anyhow!("{e}"))?;
+                if parts.len() != 1 {
+                    bail!("fetch_i32: expected scalar or 1-tuple, got {} parts", parts.len());
+                }
+                parts
+                    .remove(0)
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("to_vec i32: {e}"))
+            }
+        }
+    }
+
+    /// Flatten a literal (possibly a tuple) into f32 data.
+    fn literal_leaves_f32(lit: xla::Literal) -> Result<Vec<f32>> {
+        match lit.ty() {
+            Ok(xla::ElementType::F32) => {
+                lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
+            }
+            _ => {
+                let mut lit = lit;
+                let parts = lit
+                    .decompose_tuple()
+                    .map_err(|e| anyhow!("decompose: {e}"))?;
+                let mut out = Vec::new();
+                for p in parts {
+                    out.extend(Self::literal_leaves_f32(p)?);
+                }
+                Ok(out)
+            }
+        }
+    }
+}

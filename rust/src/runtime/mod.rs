@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts and run them from the hot path.
+//!
+//! `client` owns the process-wide PJRT CPU client, `artifact` parses the
+//! manifest contract written by python/compile/aot.py, `executable` wraps
+//! compile + execute, and `params` keeps model/optimizer state resident on
+//! the device across training steps (the §Perf-critical piece: the host
+//! only ever copies the scalar loss back).
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+pub mod params;
+
+pub use artifact::{ModuleInfo, Registry, TensorSpec};
+pub use executable::{Executable, HostArg};
+pub use params::DeviceState;

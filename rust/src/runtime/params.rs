@@ -1,0 +1,202 @@
+//! Device-resident model + optimizer state.
+//!
+//! Training state (params, Adam moments, PRNG key) is an *opaque ordered
+//! buffer list* produced by the `<family>.init` module and threaded
+//! through `<family>.train` executions entirely on the device. The host
+//! never reconstructs the pytree — checkpoints serialize the buffers
+//! positionally against the manifest's `param_specs`.
+
+use anyhow::{bail, Result};
+
+use super::executable::{Executable, HostArg};
+use super::ModuleInfo;
+
+/// The opaque device-resident training state.
+pub struct DeviceState {
+    /// params (n_params) followed by optimizer state (n_opt).
+    pub state: Vec<xla::PjRtBuffer>,
+    /// threaded PRNG key buffer, u32[2]
+    pub key: xla::PjRtBuffer,
+    pub n_params: usize,
+    pub n_opt: usize,
+    pub steps_done: u64,
+}
+
+impl DeviceState {
+    /// Run the init module: seed -> fresh state on device.
+    pub fn init(init_exe: &Executable, info: &ModuleInfo, seed: u32) -> Result<DeviceState> {
+        let expect = info.n_params + info.n_opt + 1;
+        let mut outs = init_exe.run_hosts_untupled(&[HostArg::scalar_u32(seed)], expect)?;
+        if outs.len() != expect {
+            bail!(
+                "{}: init returned {} buffers, expected {} (params {} + opt {} + key)",
+                init_exe.name,
+                outs.len(),
+                expect,
+                info.n_params,
+                info.n_opt
+            );
+        }
+        let key = outs.pop().unwrap();
+        Ok(DeviceState {
+            state: outs,
+            key,
+            n_params: info.n_params,
+            n_opt: info.n_opt,
+            steps_done: 0,
+        })
+    }
+
+    /// One train step: state + host batch -> new state; returns the loss
+    /// buffer WITHOUT copying it to the host (call `loss_value` when a
+    /// reading is actually wanted — usually every k steps).
+    pub fn train_step(
+        &mut self,
+        train_exe: &Executable,
+        batch: &[HostArg],
+    ) -> Result<xla::PjRtBuffer> {
+        self.train_step_buffers(train_exe, {
+            let mut bufs = Vec::with_capacity(batch.len());
+            for b in batch {
+                bufs.push(Executable::upload(b)?);
+            }
+            bufs
+        })
+    }
+
+    /// Train step over pre-uploaded batch buffers (hot path; lets callers
+    /// overlap staging with execution or reuse pinned batches).
+    pub fn train_step_buffers(
+        &mut self,
+        train_exe: &Executable,
+        batch: Vec<xla::PjRtBuffer>,
+    ) -> Result<xla::PjRtBuffer> {
+        // execute_b borrows buffers, so the state stays owned here and is
+        // simply replaced by the returned buffers afterwards.
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.state.len() + batch.len() + 1);
+        args.extend(self.state.iter());
+        args.extend(batch.iter());
+        args.push(&self.key);
+        let expect = self.n_params + self.n_opt + 2; // state + loss + key
+        let mut outs = train_exe.run_buffers_untupled(&args, expect)?;
+        if outs.len() != expect {
+            bail!(
+                "{}: train returned {} buffers, expected {}",
+                train_exe.name,
+                outs.len(),
+                expect
+            );
+        }
+        self.key = outs.pop().unwrap();
+        let loss = outs.pop().unwrap();
+        self.state = outs;
+        self.steps_done += 1;
+        Ok(loss)
+    }
+
+    /// Fetch a scalar loss buffer to the host.
+    pub fn loss_value(loss: &xla::PjRtBuffer) -> Result<f32> {
+        Ok(Executable::fetch_f32(loss)?[0])
+    }
+
+    /// Borrow the parameter buffers (for eval / generate calls).
+    pub fn params(&self) -> &[xla::PjRtBuffer] {
+        &self.state[..self.n_params]
+    }
+
+    /// Download all state buffers as flat f32 blobs (checkpointing).
+    pub fn download(&self) -> Result<Vec<Vec<f32>>> {
+        self.state.iter().map(Executable::fetch_f32).collect()
+    }
+
+    /// Current key value (for checkpoint).
+    pub fn download_key(&self) -> Result<[u32; 2]> {
+        let lit = self
+            .key
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("key fetch: {e}"))?;
+        let v = lit.to_vec::<u32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok([v[0], v[1]])
+    }
+
+    /// Rebuild device state from host blobs (checkpoint restore). Shapes
+    /// come positionally from the manifest's param_specs ++ opt_specs.
+    pub fn restore(
+        info: &ModuleInfo,
+        blobs: &[Vec<f32>],
+        key: [u32; 2],
+        steps_done: u64,
+    ) -> Result<DeviceState> {
+        if blobs.len() != info.n_params + info.n_opt {
+            bail!(
+                "restore: {} blobs vs manifest {}+{}",
+                blobs.len(),
+                info.n_params,
+                info.n_opt
+            );
+        }
+        let specs = info.param_specs.iter().chain(info.opt_specs.iter());
+        let mut state = Vec::with_capacity(blobs.len());
+        for (blob, spec) in blobs.iter().zip(specs) {
+            if spec.numel() != blob.len() {
+                bail!(
+                    "restore: blob len {} vs spec {:?} for {}",
+                    blob.len(),
+                    spec.shape,
+                    info.name
+                );
+            }
+            state.push(Executable::upload(&HostArg::F32(
+                spec.shape.clone(),
+                blob.clone(),
+            ))?);
+        }
+        let key = Executable::upload(&HostArg::key(key))?;
+        Ok(DeviceState {
+            state,
+            key,
+            n_params: info.n_params,
+            n_opt: info.n_opt,
+            steps_done,
+        })
+    }
+
+    /// Run an eval module: (params..., batch..., key) -> (loss, metric).
+    pub fn eval_step(&self, eval_exe: &Executable, batch: &[HostArg]) -> Result<(f32, f32)> {
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(self.n_params + batch.len() + 1);
+        let refs: Vec<&xla::PjRtBuffer> = {
+            for b in batch {
+                args.push(Executable::upload(b)?);
+            }
+            args.push(Executable::upload(&HostArg::key([
+                0x5EED_u32,
+                self.steps_done as u32,
+            ]))?);
+            self.params().iter().chain(args.iter()).collect()
+        };
+        let leaves = eval_exe.run_fetch_f32_leaves(&refs)?;
+        if leaves.len() != 2 {
+            bail!("{}: eval returned {} leaves, expected 2", eval_exe.name, leaves.len());
+        }
+        Ok((leaves[0][0], leaves[1][0]))
+    }
+
+    /// Run a generate module: (params..., prompt, key) -> tokens.
+    pub fn generate(
+        &self,
+        gen_exe: &Executable,
+        prompt: &HostArg,
+        key: [u32; 2],
+    ) -> Result<Vec<i32>> {
+        let prompt_buf = Executable::upload(prompt)?;
+        let key_buf = Executable::upload(&HostArg::key(key))?;
+        let refs: Vec<&xla::PjRtBuffer> = self
+            .params()
+            .iter()
+            .chain([&prompt_buf, &key_buf])
+            .collect();
+        let outs = gen_exe.run_buffers_ref(&refs)?;
+        Executable::fetch_i32(&outs[0])
+    }
+}

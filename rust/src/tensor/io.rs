@@ -1,0 +1,153 @@
+//! Checkpoint serialization: a simple length-prefixed binary bundle.
+//!
+//! Format (little-endian):
+//!   magic "MACT" | u32 version | u32 count |
+//!   per tensor: u32 name_len | name bytes | u32 rank | u64 dims... |
+//!               f32 data...
+//!
+//! Used by coordinator::checkpoint to persist the opaque device-state
+//! buffer list between runs (and by tests for golden data).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Result, Write};
+use std::path::Path;
+
+use super::Tensor;
+
+const MAGIC: &[u8; 4] = b"MACT";
+const VERSION: u32 = 1;
+
+pub fn write_bundle(path: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for d in &t.shape {
+            w.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        for x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn read_bundle(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("not a MACT bundle"));
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(bad(&format!("unsupported bundle version {version}")));
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 1 << 20 {
+            return Err(bad("absurd name length"));
+        }
+        let mut nb = vec![0u8; name_len];
+        r.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).map_err(|_| bad("name not utf-8"))?;
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 16 {
+            return Err(bad("absurd rank"));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        if numel > 1 << 31 {
+            return Err(bad("absurd tensor size"));
+        }
+        let mut bytes = vec![0u8; numel * 4];
+        r.read_exact(&mut bytes)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((name, Tensor { shape, data }));
+    }
+    Ok(out)
+}
+
+/// Single-tensor convenience wrappers.
+pub fn write_tensor(path: &Path, t: &Tensor) -> Result<()> {
+    write_bundle(path, &[("t".to_string(), t.clone())])
+}
+
+pub fn read_tensor(path: &Path) -> Result<Tensor> {
+    let mut v = read_bundle(path)?;
+    if v.len() != 1 {
+        return Err(bad("expected single-tensor bundle"));
+    }
+    Ok(v.pop().unwrap().1)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("macformer_io_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn bundle_round_trip() {
+        let path = tmp("rt");
+        let tensors = vec![
+            ("a".to_string(), Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.])),
+            ("b".to_string(), Tensor::from_vec(&[3], vec![-0.5, 0.0, 0.5])),
+            ("scalar".to_string(), Tensor::from_vec(&[], vec![7.0])),
+        ];
+        write_bundle(&path, &tensors).unwrap();
+        let back = read_bundle(&path).unwrap();
+        assert_eq!(back, tensors);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("bad");
+        std::fs::write(&path, b"NOTA bundle at all").unwrap();
+        assert!(read_bundle(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn single_tensor_helpers() {
+        let path = tmp("single");
+        let t = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]);
+        write_tensor(&path, &t).unwrap();
+        assert_eq!(read_tensor(&path).unwrap(), t);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,215 @@
+//! Host-side tensors: the coordinator's working representation for batch
+//! staging, reference math, and checkpoints.
+//!
+//! Deliberately minimal — the heavy math runs on the PJRT device; this
+//! type exists so the data pipeline, metrics, and the pure-Rust reference
+//! implementations share one shape-checked container.
+
+mod io;
+
+pub use io::{read_tensor, write_tensor, read_bundle, write_bundle};
+
+/// Dense row-major f32 tensor with explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with data len {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        let off: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[off]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let strides = self.strides();
+        let off: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[off] = v;
+    }
+
+    /// 2-D matmul (self: m x k, rhs: k x n).
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(rhs.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[p * n..(p + 1) * n];
+                let dst = &mut out.data[i * n..(i + 1) * n];
+                for (d, b) in dst.iter_mut().zip(row) {
+                    *d += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|x| f(*x)).collect(),
+        }
+    }
+
+    pub fn add(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape, rhs.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&rhs.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn dot(&self, rhs: &Tensor) -> f32 {
+        assert_eq!(self.shape, rhs.shape);
+        self.data.iter().zip(&rhs.data).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max |a - b| over elements; shapes must match.
+    pub fn max_abs_diff(&self, rhs: &Tensor) -> f32 {
+        assert_eq!(self.shape, rhs.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Slice the leading axis: rows [start, start+len).
+    pub fn slice0(&self, start: usize, len: usize) -> Tensor {
+        assert!(self.rank() >= 1);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = len;
+        Tensor::from_vec(
+            &shape,
+            self.data[start * row..(start + len) * row].to_vec(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_agreement_enforced() {
+        let r = std::panic::catch_unwind(|| Tensor::from_vec(&[2, 3], vec![0.0; 5]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn indexing_round_trip() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        t.set(&[2, 1], 7.5);
+        assert_eq!(t.at(&[2, 1]), 7.5);
+        assert_eq!(t.data[2 * 4 + 1], 7.5);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let eye = Tensor::from_vec(&[3, 3], vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]);
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose2().transpose2(), a);
+        assert_eq!(a.transpose2().at(&[2, 1]), 6.0);
+    }
+
+    #[test]
+    fn slice0_takes_rows() {
+        let a = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let s = a.slice0(1, 2);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn norms_and_dot() {
+        let a = Tensor::from_vec(&[2], vec![3.0, 4.0]);
+        assert_eq!(a.l2_norm(), 5.0);
+        assert_eq!(a.dot(&a), 25.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Flag parser for the launcher (no clap in the offline vendor set).
+//!
+//! Grammar: `program <subcommand> [--flag value | --flag=value | --switch]
+//! [positional...]`. Typed accessors with defaults; unknown-flag checking
+//! happens at the end so subcommands can declare their accepted set.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable) — see `from_env`.
+    pub fn parse(tokens: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&tokens)
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().push(name.to_string());
+    }
+
+    pub fn str_flag(&self, name: &str, default: &str) -> String {
+        self.mark(name);
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_flag(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64, String> {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64, String> {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.mark(name);
+        self.switches.iter().any(|s| s == name)
+            || self.flags.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Error on flags nobody asked about (catches typos like --epcohs).
+    pub fn check_unknown(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        // NOTE the documented ambiguity: `--switch positional` reads the
+        // positional as the switch's value, so switches that precede
+        // positionals must be written `--switch=true`.
+        let a =
+            Args::parse(&toks("train --task lra_text --steps=50 --verbose=true file.json"))
+                .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_flag("task", ""), "lra_text");
+        assert_eq!(a.usize_flag("steps", 0).unwrap(), 50);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["file.json"]);
+        let b = Args::parse(&toks("train file.json --verbose")).unwrap();
+        assert!(b.switch("verbose"));
+        assert_eq!(b.positional, vec!["file.json"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&toks("bench")).unwrap();
+        assert_eq!(a.usize_flag("steps", 7).unwrap(), 7);
+        assert_eq!(a.str_flag("task", "x"), "x");
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let a = Args::parse(&toks("x --steps abc")).unwrap();
+        assert!(a.usize_flag("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = Args::parse(&toks("x --known 1 --typo 2")).unwrap();
+        let _ = a.usize_flag("known", 0);
+        assert!(a.check_unknown().is_err());
+        let _ = a.usize_flag("typo", 0);
+        assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn switch_followed_by_flag() {
+        let a = Args::parse(&toks("x --dry-run --steps 3")).unwrap();
+        assert!(a.switch("dry-run"));
+        assert_eq!(a.usize_flag("steps", 0).unwrap(), 3);
+    }
+}

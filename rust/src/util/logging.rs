@@ -1,0 +1,63 @@
+//! Tiny stderr logger with wall-clock timestamps and level filtering.
+//!
+//! Backs the `log` crate facade so library modules can use the standard
+//! `log::info!` macros. Level comes from `MACFORMER_LOG` (error|warn|info|
+//! debug|trace; default info).
+
+use std::io::Write;
+use std::time::Instant;
+
+use once_cell::sync::OnceCell;
+
+static START: OnceCell<Instant> = OnceCell::new();
+static LOGGER: Logger = Logger;
+
+struct Logger;
+
+impl log::Log for Logger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger; idempotent (subsequent calls are no-ops).
+pub fn init() {
+    let _ = START.set(Instant::now());
+    if log::set_logger(&LOGGER).is_ok() {
+        let level = match std::env::var("MACFORMER_LOG").as_deref() {
+            Ok("error") => log::LevelFilter::Error,
+            Ok("warn") => log::LevelFilter::Warn,
+            Ok("debug") => log::LevelFilter::Debug,
+            Ok("trace") => log::LevelFilter::Trace,
+            _ => log::LevelFilter::Info,
+        };
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke");
+    }
+}

@@ -1,0 +1,59 @@
+//! Substrate utilities: JSON, CLI, PRNG, logging, property testing.
+//!
+//! Everything here is hand-rolled because the build is fully offline;
+//! see DESIGN.md §System-inventory rows 11-13 and 22.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+
+/// Peak resident-set size of this process in bytes (`getrusage`).
+/// Used by the Table-2 sweep for the paper's "memory" column; each cell
+/// runs in its own subprocess so peaks do not contaminate each other.
+pub fn peak_rss_bytes() -> u64 {
+    // SAFETY: plain libc call with an out-param struct we own.
+    unsafe {
+        let mut ru: libc::rusage = std::mem::zeroed();
+        if libc::getrusage(libc::RUSAGE_SELF, &mut ru) == 0 {
+            // ru_maxrss is kilobytes on Linux.
+            (ru.ru_maxrss as u64) * 1024
+        } else {
+            0
+        }
+    }
+}
+
+/// Format a byte count for logs ("1.50 GiB").
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = b as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{x:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive() {
+        assert!(peak_rss_bytes() > 0);
+    }
+
+    #[test]
+    fn human_bytes_formats() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

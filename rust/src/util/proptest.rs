@@ -1,0 +1,171 @@
+//! Seeded property-testing harness (no proptest crate offline).
+//!
+//! `check(cases, gen, prop)` draws `cases` random inputs from `gen`, runs
+//! `prop`, and on failure performs greedy shrinking via the input's
+//! `Shrink` implementation before reporting the minimal counterexample.
+//! Deterministic: the failing seed is printed so a case can be replayed
+//! with `check_seeded`.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose strictly "smaller" variants of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrinks(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for f32 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            // drop halves, drop one element, shrink one element
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[self.len() / 2..].to_vec());
+            for i in 0..self.len().min(8) {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+                for s in self[i].shrinks() {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a property over one input.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random inputs; panic with the shrunk
+/// counterexample on failure. Base seed is fixed for reproducibility;
+/// use `check_seeded` to vary it.
+pub fn check<T, G, P>(cases: usize, gen: G, prop: P)
+where
+    T: Shrink,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    check_seeded(0xC0FFEE, cases, gen, prop)
+}
+
+pub fn check_seeded<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: Shrink,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min, min_msg) = shrink_input(input, msg, &prop);
+            panic!(
+                "property failed (seed {seed:#x}, case {case}):\n  {min_msg}\n  minimal input: {min:?}"
+            );
+        }
+    }
+}
+
+fn shrink_input<T: Shrink, P: Fn(&T) -> PropResult>(
+    mut cur: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    // Greedy descent, bounded to avoid pathological shrink loops.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in cur.shrinks() {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (cur, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_always_true() {
+        check(50, |r| r.below(100), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_reports() {
+        check(
+            50,
+            |r| r.below(100) + 1,
+            |x| if *x < 1000 { Err("too small".into()) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn shrinks_vec_to_minimal() {
+        // property: no vec contains an element >= 5. Shrinker should find
+        // a small witness.
+        let witness = std::panic::catch_unwind(|| {
+            check(
+                100,
+                |r| (0..r.below(20)).map(|_| r.below(10)).collect::<Vec<usize>>(),
+                |v| {
+                    if v.iter().any(|x| *x >= 5) {
+                        Err("has big element".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            )
+        });
+        assert!(witness.is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Cross-implementation numerics: the compiled HLO micro modules vs the
+//! pure-Rust reference math (reference::attention) on identical inputs.
+//!
+//! This is the strongest correctness statement in the stack: three
+//! independent implementations (Pallas-lowered HLO, pure jnp [tested in
+//! pytest], pure Rust) agree on the paper's quantities.
+//!
+//! One #[test] = one process = one PJRT client (see pjrt_smoke.rs).
+
+use macformer::metrics::nmse;
+use macformer::reference::attention;
+use macformer::runtime::{Executable, HostArg, Registry};
+use macformer::tensor::Tensor;
+use macformer::util::rng::Rng;
+
+fn registry() -> Registry {
+    Registry::open(std::path::Path::new(
+        &std::env::var("MACFORMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    ))
+    .expect("run `make artifacts` before cargo test")
+}
+
+/// Host-side preSBN mirroring compile/ppsbn.py (max_row mode) for the
+/// micro modules' (B, H, n, d) layout flattened as (G, n, d).
+fn pre_sbn_host(x: &mut [f32], g: usize, n: usize, d: usize, eps: f32) {
+    let (b, h) = (16usize, 8usize);
+    assert_eq!(b * h, g);
+    // batch-norm stats over (batch, seq) per (head, channel)
+    for head in 0..h {
+        for c in 0..d {
+            let mut mean = 0.0f64;
+            let mut count = 0.0f64;
+            for bi in 0..b {
+                let base = (bi * h + head) * n * d;
+                for i in 0..n {
+                    mean += x[base + i * d + c] as f64;
+                    count += 1.0;
+                }
+            }
+            mean /= count;
+            let mut var = 0.0f64;
+            for bi in 0..b {
+                let base = (bi * h + head) * n * d;
+                for i in 0..n {
+                    let v = x[base + i * d + c] as f64 - mean;
+                    var += v * v;
+                }
+            }
+            var /= count;
+            let denom = (var + eps as f64).sqrt();
+            for bi in 0..b {
+                let base = (bi * h + head) * n * d;
+                for i in 0..n {
+                    let idx = base + i * d + c;
+                    x[idx] = ((x[idx] as f64 - mean) / denom) as f32;
+                }
+            }
+        }
+    }
+    // max row norm per (batch, head) matrix
+    for gi in 0..g {
+        let base = gi * n * d;
+        let mut maxn = 0.0f32;
+        for i in 0..n {
+            let row = &x[base + i * d..base + (i + 1) * d];
+            let nn: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            maxn = maxn.max(nn);
+        }
+        let denom = maxn + eps;
+        for v in &mut x[base..base + n * d] {
+            *v /= denom;
+        }
+    }
+}
+
+#[test]
+fn hlo_micro_modules_match_rust_reference() {
+    let reg = registry();
+    let n = 256;
+    let d = 64;
+    let g = 16 * 8;
+    let mut rng = Rng::new(99);
+    let numel = g * n * d;
+    let gen = |rng: &mut Rng| -> Vec<f32> { (0..numel).map(|_| rng.normal() * 0.5).collect() };
+    let (q, k, v) = (gen(&mut rng), gen(&mut rng), gen(&mut rng));
+    let dims = vec![g, n, d];
+
+    // --- exact softmax module vs rust reference ---------------------------
+    let sm_info = reg.get("micro.softmax.n256").unwrap();
+    let sm = Executable::compile_file(&sm_info.name, &reg.hlo_path(sm_info)).unwrap();
+    let outs = sm
+        .run_hosts(&[
+            HostArg::F32(dims.clone(), q.clone()),
+            HostArg::F32(dims.clone(), k.clone()),
+            HostArg::F32(dims.clone(), v.clone()),
+        ])
+        .unwrap();
+    let hlo_out = Executable::fetch_f32(&outs[0]).unwrap();
+    assert_eq!(hlo_out.len(), numel);
+
+    // host reference: preSBN then per-problem exact softmax attention
+    let (mut qs, mut ks) = (q.clone(), k.clone());
+    pre_sbn_host(&mut qs, g, n, d, 1e-12);
+    pre_sbn_host(&mut ks, g, n, d, 1e-12);
+    let mut ref_out = vec![0.0f32; numel];
+    for gi in 0..g {
+        let sl = |x: &[f32]| {
+            Tensor::from_vec(&[n, d], x[gi * n * d..(gi + 1) * n * d].to_vec())
+        };
+        let out = attention::softmax_attention(&sl(&qs), &sl(&ks), &sl(&v), false);
+        ref_out[gi * n * d..(gi + 1) * n * d].copy_from_slice(&out.data);
+    }
+    let err = nmse(&hlo_out, &ref_out);
+    assert!(err < 1e-6, "softmax HLO vs rust reference NMSE {err}");
+
+    // --- RMFA module approximates the softmax module ------------------------
+    // Theorem-level check at module granularity: with D=256 features the
+    // approximation error must be small and must shrink as D grows.
+    let mut errs = Vec::new();
+    for feat in [64usize, 256] {
+        let rm_info = reg.get(&format!("micro.rmfa_exp.n256.D{feat}")).unwrap();
+        let rm = Executable::compile_file(&rm_info.name, &reg.hlo_path(rm_info)).unwrap();
+        // average over a few omega draws to beat single-draw variance
+        let mut acc = vec![0.0f64; numel];
+        let draws = 3;
+        for s in 0..draws {
+            let outs = rm
+                .run_hosts(&[
+                    HostArg::F32(dims.clone(), q.clone()),
+                    HostArg::F32(dims.clone(), k.clone()),
+                    HostArg::F32(dims.clone(), v.clone()),
+                    HostArg::key([1234, s]),
+                ])
+                .unwrap();
+            for (a, x) in acc.iter_mut().zip(Executable::fetch_f32(&outs[0]).unwrap()) {
+                *a += x as f64 / draws as f64;
+            }
+        }
+        let approx: Vec<f32> = acc.iter().map(|x| *x as f32).collect();
+        let err = nmse(&approx, &hlo_out);
+        errs.push(err);
+    }
+    assert!(
+        errs[1] < errs[0],
+        "error must shrink with D: D=64 {} vs D=256 {}",
+        errs[0],
+        errs[1]
+    );
+    assert!(errs[1] < 0.5, "D=256 RMFA too far from softmax: {}", errs[1]);
+}

@@ -1,0 +1,89 @@
+//! PJRT runtime smoke tests.
+//!
+//! TfrtCpuClient instances share process-global TFRT state; creating
+//! clients on several test threads (cargo test spawns one thread per
+//! #[test]) is unreliable. Each integration-test FILE is its own process,
+//! and this file keeps all PJRT work inside ONE #[test] so exactly one
+//! client exists. The same policy applies to the other pjrt_*.rs files.
+
+use macformer::runtime::{client, Executable, HostArg};
+
+const TWO_OUT_HLO: &str = r#"
+HloModule two_out, entry_computation_layout={(f32[2]{0}, f32[2]{0})->(f32[2]{0}, f32[2]{0})}
+
+ENTRY main.5 {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  one = f32[] constant(1)
+  ones = f32[2]{0} broadcast(one), dimensions={}
+  add.1 = f32[2]{0} add(Arg_0.1, ones)
+  Arg_1.2 = f32[2]{0} parameter(1)
+  two = f32[] constant(2)
+  twos = f32[2]{0} broadcast(two), dimensions={}
+  multiply.1 = f32[2]{0} multiply(Arg_1.2, twos)
+  ROOT tuple.1 = (f32[2]{0}, f32[2]{0}) tuple(add.1, multiply.1)
+}
+"#;
+
+#[test]
+fn pjrt_smoke() {
+    // -- client ------------------------------------------------------------
+    client::with(|c| {
+        assert_eq!(c.platform_name(), "cpu");
+        assert!(c.device_count() >= 1);
+        Ok(())
+    })
+    .unwrap();
+
+    let dir = std::env::temp_dir().join(format!("mac_pjrt_smoke_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("two_out.hlo.txt");
+    std::fs::write(&path, TWO_OUT_HLO).unwrap();
+    let exe = Executable::compile_file("two_out", &path).unwrap();
+
+    // -- raw execute returns ONE tuple buffer (untuple_result=false) -------
+    let raw = exe
+        .run_hosts(&[
+            HostArg::F32(vec![2], vec![1.0, 2.0]),
+            HostArg::F32(vec![2], vec![3.0, 4.0]),
+        ])
+        .unwrap();
+    assert_eq!(raw.len(), 1, "expected a single tuple output buffer");
+
+    // -- run_hosts_untupled splits it into addressable leaves --------------
+    let outs = exe
+        .run_hosts_untupled(
+            &[
+                HostArg::F32(vec![2], vec![1.0, 2.0]),
+                HostArg::F32(vec![2], vec![3.0, 4.0]),
+            ],
+            2,
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    assert_eq!(Executable::fetch_f32(&outs[0]).unwrap(), vec![2.0, 3.0]);
+    assert_eq!(Executable::fetch_f32(&outs[1]).unwrap(), vec![6.0, 8.0]);
+
+    // -- untupled output buffers can feed the next execution ----------------
+    // f(x, y) = (x + 1, 2y): thread x through 5 iterations
+    let mut buf = exe
+        .run_hosts_untupled(
+            &[
+                HostArg::F32(vec![2], vec![0.0, 10.0]),
+                HostArg::F32(vec![2], vec![0.0, 0.0]),
+            ],
+            2,
+        )
+        .unwrap()
+        .remove(0);
+    let zeros = Executable::upload(&HostArg::F32(vec![2], vec![0.0, 0.0])).unwrap();
+    for _ in 0..5 {
+        buf = exe.run_buffers_untupled(&[&buf, &zeros], 2).unwrap().remove(0);
+    }
+    assert_eq!(Executable::fetch_f32(&buf).unwrap(), vec![6.0, 16.0]);
+
+    // -- fetch_f32 flattens tuples ------------------------------------------
+    let flat = Executable::fetch_f32(&raw[0]).unwrap();
+    assert_eq!(flat, vec![2.0, 3.0, 6.0, 8.0]);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

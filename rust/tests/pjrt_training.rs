@@ -1,0 +1,80 @@
+//! End-to-end training integration: init -> train steps -> eval ->
+//! checkpoint round-trip, on a real compiled artifact.
+//!
+//! One #[test] = one process = one PJRT client (see pjrt_smoke.rs).
+//! Uses the smallest artifact family (translation, n=64) so the test
+//! stays fast while exercising every DeviceState path.
+
+use macformer::config::RunConfig;
+use macformer::coordinator::{checkpoint, Trainer};
+use macformer::runtime::{DeviceState, Registry};
+
+fn registry() -> Registry {
+    Registry::open(std::path::Path::new(
+        &std::env::var("MACFORMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    ))
+    .expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn training_loop_end_to_end() {
+    let reg = registry();
+    let cfg = RunConfig {
+        task: "translation".into(),
+        variant: "softmax".into(),
+        suffix: ".ppsbn".into(),
+        seed: 7,
+        train_examples: 128,
+        eval_examples: 64,
+        steps: 6,
+        eval_every: 100,
+        log_every: 2,
+        ..RunConfig::default()
+    };
+    let mut tr = Trainer::build(cfg, &reg).unwrap();
+
+    // --- losses decrease over a short run (toy task is easy) -------------
+    let first = DeviceState::loss_value(&tr.step().unwrap()).unwrap();
+    assert!(first.is_finite(), "first loss {first}");
+    let report = tr.run().unwrap();
+    assert_eq!(report.steps, 6);
+    assert!(report.final_loss.is_finite());
+    assert!(
+        report.final_loss < first as f64 * 1.5,
+        "loss exploded: {first} -> {}",
+        report.final_loss
+    );
+    // eval produced BLEU in [0, 100] and a perplexity > 1
+    assert!((0.0..=100.0).contains(&report.quality), "{}", report.quality);
+    assert!(report.perplexity > 1.0);
+
+    // --- deterministic re-init: same seed + same batch, same loss ---------
+    use macformer::coordinator::TaskData;
+    let data = TaskData::build("translation", 11, 64, tr.info.seq_len, 24).unwrap();
+    let idx: Vec<usize> = (0..tr.info.batch).collect();
+    let batch = data.stage(&idx, tr.info.seq_len);
+    tr.reinit(7).unwrap();
+    let again = DeviceState::loss_value(&tr.step_with(&batch).unwrap()).unwrap();
+    tr.reinit(7).unwrap();
+    let batch2 = data.stage(&idx, tr.info.seq_len);
+    let again2 = DeviceState::loss_value(&tr.step_with(&batch2).unwrap()).unwrap();
+    assert_eq!(again, again2, "same seed must give identical first step");
+
+    // --- checkpoint round-trip --------------------------------------------
+    let path = std::env::temp_dir().join(format!("mac_ckpt_{}.mact", std::process::id()));
+    checkpoint::save(&path, &tr.state, &tr.info).unwrap();
+    let restored = checkpoint::load(&path, &tr.info).unwrap();
+    assert_eq!(restored.n_params, tr.state.n_params);
+    assert_eq!(restored.steps_done, tr.state.steps_done);
+    let a = tr.state.download().unwrap();
+    let b = restored.download().unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x, y, "restored state differs");
+    }
+    assert_eq!(
+        tr.state.download_key().unwrap(),
+        restored.download_key().unwrap()
+    );
+    std::fs::remove_file(&path).ok();
+}

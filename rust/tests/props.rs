@@ -1,0 +1,265 @@
+//! Property tests on the paper's invariants, via util::proptest (no PJRT
+//! — pure host math, safe to run multi-threaded).
+
+use macformer::data::batcher::Batcher;
+use macformer::metrics::bleu::corpus_bleu;
+use macformer::reference::{attention, maclaurin, rmf};
+use macformer::tensor::Tensor;
+use macformer::util::proptest::{check, PropResult};
+use macformer::util::rng::Rng;
+
+fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    for x in t.data.iter_mut() {
+        *x = rng.normal() * scale;
+    }
+    t
+}
+
+/// Softmax attention rows are convex combinations: outputs stay inside
+/// the per-column [min, max] envelope of V.
+#[test]
+fn prop_softmax_attention_is_convex_combination() {
+    check(
+        30,
+        |rng| {
+            let n = rng.range(2, 12);
+            let d = rng.range(2, 8);
+            let q = randn(rng, &[n, d], 1.0);
+            let k = randn(rng, &[n, d], 1.0);
+            let v = randn(rng, &[n, 3], 2.0);
+            vec![
+                q.data,
+                k.data,
+                v.data,
+                vec![n as f32, d as f32],
+            ]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let n = input[3][0] as usize;
+            let d = input[3][1] as usize;
+            let q = Tensor::from_vec(&[n, d], input[0].clone());
+            let k = Tensor::from_vec(&[n, d], input[1].clone());
+            let v = Tensor::from_vec(&[n, 3], input[2].clone());
+            let out = attention::softmax_attention(&q, &k, &v, false);
+            for c in 0..3 {
+                let col: Vec<f32> = (0..n).map(|i| v.data[i * 3 + c]).collect();
+                let (lo, hi) = col
+                    .iter()
+                    .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), x| {
+                        (l.min(*x), h.max(*x))
+                    });
+                for i in 0..n {
+                    let o = out.data[i * 3 + c];
+                    if o < lo - 1e-4 || o > hi + 1e-4 {
+                        return Err(format!("out[{i},{c}]={o} outside [{lo},{hi}]"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Kernelized attention with the exp kernel equals softmax attention
+/// (Definition 2 reduces to Definition 1) for any well-scaled inputs.
+#[test]
+fn prop_exp_kernelized_equals_softmax() {
+    check(
+        30,
+        |rng| {
+            let n = rng.range(2, 10);
+            let d = rng.range(2, 6);
+            let q = randn(rng, &[n, d], 0.6);
+            let k = randn(rng, &[n, d], 0.6);
+            let v = randn(rng, &[n, 2], 1.0);
+            vec![q.data, k.data, v.data, vec![n as f32, d as f32]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let n = input[3][0] as usize;
+            let d = input[3][1] as usize;
+            let q = Tensor::from_vec(&[n, d], input[0].clone());
+            let k = Tensor::from_vec(&[n, d], input[1].clone());
+            let v = Tensor::from_vec(&[n, 2], input[2].clone());
+            let a = attention::softmax_attention(&q, &k, &v, false);
+            let b = attention::kernelized_attention("exp", &q, &k, &v, false, 0.0);
+            let diff = a.max_abs_diff(&b);
+            if diff > 2e-3 {
+                return Err(format!("max diff {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The factored linear contraction equals explicit kernel-score attention
+/// when phi comes from an actual RMF map (any Table-1 kernel).
+#[test]
+fn prop_linear_contraction_matches_explicit_scores() {
+    check(
+        20,
+        |rng| {
+            let kernel_idx = rng.below(5);
+            let n = rng.range(3, 10);
+            let seed = rng.next_u64() as f32;
+            vec![vec![kernel_idx as f32, n as f32, seed]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let kernel = maclaurin::KERNELS[input[0][0] as usize];
+            let n = input[0][1] as usize;
+            let mut rng = Rng::new(input[0][2] as u64);
+            let d = 6;
+            let q = randn(&mut rng, &[n, d], 0.3);
+            let k = randn(&mut rng, &[n, d], 0.3);
+            let v = randn(&mut rng, &[n, 3], 1.0);
+            let map = rmf::RmfMap::sample(&mut rng, kernel, 32, d, 2.0, 8);
+            let phi_q = map.apply(&q);
+            let phi_k = map.apply(&k);
+            let fast = attention::linear_attention(&phi_q, &phi_k, &v, false, 1e-6);
+            // explicit: scores s_ij = phi_q_i . phi_k_j
+            let mut slow = Tensor::zeros(&[n, 3]);
+            let feat = map.num_features();
+            for i in 0..n {
+                let mut den = 1e-6f32;
+                let mut num = [0.0f32; 3];
+                for j in 0..n {
+                    let s: f32 = (0..feat)
+                        .map(|f| phi_q.data[i * feat + f] * phi_k.data[j * feat + f])
+                        .sum();
+                    den += s;
+                    for c in 0..3 {
+                        num[c] += s * v.data[j * 3 + c];
+                    }
+                }
+                for c in 0..3 {
+                    slow.data[i * 3 + c] = num[c] / den;
+                }
+            }
+            let diff = fast.max_abs_diff(&slow);
+            if diff > 1e-3 {
+                return Err(format!("{kernel}: fast vs slow {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Causal linear attention equals bidirectional restricted to the prefix:
+/// row i only depends on positions <= i.
+#[test]
+fn prop_causal_prefix_consistency() {
+    check(
+        25,
+        |rng| vec![vec![rng.next_u64() as f32, rng.range(2, 9) as f32]],
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let mut rng = Rng::new(input[0][0] as u64);
+            let n = input[0][1] as usize;
+            let feat = 5;
+            let phi_q = randn(&mut rng, &[n, feat], 1.0).map(f32::abs);
+            let phi_k = randn(&mut rng, &[n, feat], 1.0).map(f32::abs);
+            let v = randn(&mut rng, &[n, 2], 1.0);
+            let causal = attention::linear_attention(&phi_q, &phi_k, &v, true, 1e-6);
+            for i in 0..n {
+                // recompute row i from the first i+1 positions only
+                let pq = phi_q.slice0(i, 1);
+                let pk = phi_k.slice0(0, i + 1);
+                let vv = v.slice0(0, i + 1);
+                let row = attention::linear_attention(&pq, &pk, &vv, false, 1e-6);
+                for c in 0..2 {
+                    let a = causal.data[i * 2 + c];
+                    let b = row.data[c];
+                    if (a - b).abs() > 1e-4 {
+                        return Err(format!("row {i} col {c}: {a} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batcher: over k epochs every sample index is consumed exactly k times.
+#[test]
+fn prop_batcher_exhaustive_coverage() {
+    check(
+        25,
+        |rng| {
+            let len = rng.range(4, 40);
+            let batch = rng.range(1, len.min(8));
+            vec![vec![len as f32, batch as f32, rng.next_u64() as f32]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let len = input[0][0] as usize;
+            let batch = input[0][1] as usize;
+            let seed = input[0][2] as u64;
+            let mut b = Batcher::new(len, batch, seed);
+            let epochs = 6;
+            let draws = epochs * len / batch;
+            let mut counts = vec![0usize; len];
+            for _ in 0..draws {
+                for &i in b.next_batch() {
+                    counts[i] += 1;
+                }
+            }
+            let total: usize = counts.iter().sum();
+            if total != draws * batch {
+                return Err(format!("count total {total} != {}", draws * batch));
+            }
+            let (lo, hi) = (epochs - 1, epochs + 1);
+            for (i, c) in counts.iter().enumerate() {
+                if *c < lo || *c > hi {
+                    return Err(format!("sample {i} seen {c} times (want ~{epochs})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// BLEU is bounded in [0, 100] and identical sequences score 100.
+#[test]
+fn prop_bleu_bounds() {
+    check(
+        40,
+        |rng| {
+            let n = rng.range(4, 20);
+            let hyp: Vec<f32> = (0..n).map(|_| rng.below(12) as f32).collect();
+            let m = rng.range(4, 20);
+            let refr: Vec<f32> = (0..m).map(|_| rng.below(12) as f32).collect();
+            vec![hyp, refr]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let hyp: Vec<u32> = input[0].iter().map(|x| *x as u32).collect();
+            let refr: Vec<u32> = input[1].iter().map(|x| *x as u32).collect();
+            let s = corpus_bleu(&[(hyp.clone(), refr)]);
+            if !(0.0..=100.0 + 1e-9).contains(&s) {
+                return Err(format!("bleu {s} out of range"));
+            }
+            let perfect = corpus_bleu(&[(hyp.clone(), hyp)]);
+            if (perfect - 100.0).abs() > 1e-6 {
+                return Err(format!("self-bleu {perfect} != 100"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Monte-Carlo RMF estimates are unbiased for every Table-1 kernel
+/// (Theorem 1 restricted to the truncated degree law).
+#[test]
+fn prop_rmf_unbiased_all_kernels() {
+    for kernel in maclaurin::KERNELS {
+        let mut rng = Rng::new(0xFEED ^ kernel.len() as u64);
+        let d = 6;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() * 0.25).collect();
+        let y: Vec<f32> = (0..d).map(|_| rng.normal() * 0.25).collect();
+        let t: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let est = rmf::mc_kernel_estimate(&mut rng, kernel, &x, &y, 64, 2.0, 8, 4000);
+        let exact = maclaurin::truncated_kernel_value(kernel, t as f64, 8);
+        let tol = 0.08 * exact.abs().max(1.0);
+        assert!(
+            (est - exact).abs() < tol,
+            "{kernel}: est {est} vs exact {exact} (t={t})"
+        );
+    }
+}
