@@ -1,8 +1,17 @@
 //! Bench E2+E3 — Fig 4a (log NMSE) and Fig 4b (log acceleration ratio) of
-//! RMFA_exp vs exact softmax attention, over the paper\'s (length, D) grid.
+//! RMFA_exp vs exact softmax attention, over the paper's (length, D) grid.
 //!
-//! Shapes follow the paper: batch 16 x 8 heads, d = 64, preSBN eps 1e-12.
-//! Knobs: MACFORMER_BENCH_LENGTHS / _FEATURES (csv), _REPEATS.
+//! Backends (MACFORMER_BENCH_BACKEND):
+//!   host   (default) — the fastpath: FlatRmfMap + scoped-thread batched
+//!          attention kernels; no artifacts/PJRT needed. Also times the
+//!          seed reference path per cell (fast-vs-oracle speedup).
+//!   device — the original compiled-HLO path over PJRT (needs
+//!          `make artifacts`).
+//!
+//! Shapes follow the paper: batch 16 x 8 heads, d = 64, preSBN eps 1e-12
+//! (device) / eps 1e-6 denominators (host).
+//! Knobs: MACFORMER_BENCH_LENGTHS / _FEATURES (csv), _REPEATS, _GROUPS,
+//! MACFORMER_THREADS.
 //!
 //! Run with: `cargo bench --bench fig4_rmfa_micro`
 
@@ -16,24 +25,40 @@ fn env_csv(name: &str, default: &[usize]) -> Vec<usize> {
         .unwrap_or_else(|| default.to_vec())
 }
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 fn main() -> anyhow::Result<()> {
     macformer::util::logging::init();
-    let reg = Registry::open_default()?;
-    let lengths = env_csv("MACFORMER_BENCH_LENGTHS", &reg.micro_lengths);
-    let features = env_csv("MACFORMER_BENCH_FEATURES", &reg.micro_features);
-    let repeats: usize = std::env::var("MACFORMER_BENCH_REPEATS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(3);
+    let backend =
+        std::env::var("MACFORMER_BENCH_BACKEND").unwrap_or_else(|_| "host".to_string());
+    let repeats = env_usize("MACFORMER_BENCH_REPEATS", 3);
+    if backend == "device" {
+        let reg = Registry::open_default()?;
+        let lengths = env_csv("MACFORMER_BENCH_LENGTHS", &reg.micro_lengths);
+        let features = env_csv("MACFORMER_BENCH_FEATURES", &reg.micro_features);
+        println!(
+            "=== E2/E3 / Fig 4 [device]: RMFA_exp vs softmax attention (lengths {lengths:?}, D {features:?}, {repeats} repeats) ==="
+        );
+        let cells = microbench::run_grid(&reg, &lengths, &features, repeats, 7)?;
+        println!("{}", microbench::render(&cells));
+        std::fs::write("bench_fig4.json", microbench::to_json(&cells).to_string())?;
+        println!("raw cells written to bench_fig4.json");
+        return Ok(());
+    }
+
+    let lengths = env_csv("MACFORMER_BENCH_LENGTHS", &[256, 1024, 2048]);
+    let features = env_csv("MACFORMER_BENCH_FEATURES", &[64, 128]);
+    let groups = env_usize("MACFORMER_BENCH_GROUPS", 16 * 8);
     println!(
-        "=== E2/E3 / Fig 4: RMFA_exp vs softmax attention (lengths {lengths:?}, D {features:?}, {repeats} repeats) ==="
+        "=== E2/E3 / Fig 4 [host fastpath]: RMFA_exp vs softmax attention \
+         (lengths {lengths:?}, D {features:?}, {repeats} repeats, {groups} batch x head problems, {} threads) ===",
+        macformer::fastpath::parallel::num_threads()
     );
-    let cells = microbench::run_grid(&reg, &lengths, &features, repeats, 7)?;
-    println!("{}", microbench::render(&cells));
-    std::fs::write(
-        "bench_fig4.json",
-        microbench::to_json(&cells).to_string(),
-    )?;
+    let cells = microbench::run_host_grid(&lengths, &features, repeats, 7, groups, 64);
+    println!("{}", microbench::render_host(&cells));
+    std::fs::write("bench_fig4.json", microbench::host_to_json(&cells).to_string())?;
     println!("raw cells written to bench_fig4.json");
     Ok(())
 }

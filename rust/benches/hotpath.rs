@@ -1,23 +1,111 @@
-//! Bench §Perf — the L3 hot path: per-step cost breakdown of the training
-//! loop (batch staging, host->device upload, execute, tuple round-trip)
-//! on the lra_text.mac_exp cell. This is the harness behind the §Perf
-//! before/after numbers in EXPERIMENTS.md.
+//! Bench §Perf — the hot paths, in two tiers:
+//!
+//! 1. **Host compute path** (always runs): the reference RMFA pipeline
+//!    (scalar per-problem `RmfMap::apply` + oracle linear attention,
+//!    single thread, as the oracle tier stands in this tree) vs the
+//!    fastpath (degree-grouped `FlatRmfMap` GEMMs + scoped-thread
+//!    batched linear attention) at the Fig-4 stress shape n=2048,
+//!    D=128. This is the fast-vs-oracle speedup tracked across PRs.
+//! 2. **Training loop** (needs `make artifacts` + a PJRT runtime):
+//!    per-step cost breakdown on the lra_text.mac_exp cell — batch
+//!    staging, train step (upload + execute + tuple round-trip), loss
+//!    fetch, and a fetch-only pass (full state download, no re-upload)
+//!    that isolates the device->host half of the tuple round-trip.
+//!
+//! Every phase's mean/min seconds is written to `BENCH_hotpath.json` so
+//! the perf trajectory is diffable across PRs.
+//!
+//! Knobs: MACFORMER_BENCH_STEPS, _N, _FEATURES1, _GROUPS, _REPEATS,
+//! MACFORMER_THREADS.
 //!
 //! Run with: `cargo bench --bench hotpath`
 
 use std::time::Instant;
 
 use macformer::config::RunConfig;
-use macformer::coordinator::{TaskData, Trainer};
+use macformer::coordinator::{microbench, TaskData, Trainer};
+use macformer::fastpath::{self, FlatRmfMap};
 use macformer::metrics::Timing;
-use macformer::runtime::{DeviceState, Executable, Registry};
+use macformer::reference::rmf::RmfMap;
+use macformer::runtime::{DeviceState, Registry};
+use macformer::tensor::Tensor;
+use macformer::util::json::Value;
+use macformer::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    macformer::util::logging::init();
-    let steps: usize = std::env::var("MACFORMER_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(12);
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn phase_json(t: &Timing) -> Value {
+    Value::obj(vec![
+        ("mean", Value::num(t.mean())),
+        ("min", Value::num(if t.count() == 0 { 0.0 } else { t.min() })),
+    ])
+}
+
+fn print_phase(name: &str, t: &Timing) {
+    println!("{name:<22}: mean {:>9.4}s  min {:>9.4}s", t.mean(), t.min());
+}
+
+/// Host tier: the reference RMFA path vs the fastpath on one batched
+/// problem set, both timed min-over-`repeats` via the shared
+/// `microbench` helpers (no warm-up bias between the two). Returns the
+/// JSON report block.
+fn host_phases() -> Value {
+    let n = env_usize("MACFORMER_BENCH_N", 2048);
+    let feat = env_usize("MACFORMER_BENCH_FEATURES1", 128);
+    let d = 64;
+    let groups = env_usize("MACFORMER_BENCH_GROUPS", 16);
+    let repeats = env_usize("MACFORMER_BENCH_REPEATS", 3);
+    println!(
+        "--- host compute path: n={n} D={feat} d={d} x {groups} problems, {} threads ---",
+        fastpath::parallel::num_threads()
+    );
+    let mut rng = Rng::new(7);
+    let q = Tensor::randn(&mut rng, &[groups, n, d], 0.5);
+    let k = Tensor::randn(&mut rng, &[groups, n, d], 0.5);
+    let v = Tensor::randn(&mut rng, &[groups, n, d], 1.0);
+    // score-scale inputs so phi products estimate exp(q.k / sqrt(d))
+    let input_scale = 1.0 / (d as f32).sqrt().sqrt();
+    let qs = q.scale(input_scale);
+    let ks = k.scale(input_scale);
+    let map = {
+        let mut map_rng = Rng::new(0xFEA7);
+        RmfMap::sample(&mut map_rng, "exp", feat, d, 2.0, 8)
+    };
+    let flat = FlatRmfMap::from(&map);
+    let eps = 1e-6f32;
+
+    let ref_t = microbench::reference_rmfa(&map, &qs, &ks, &v, eps, repeats);
+    let (_out, fast_t) = microbench::fastpath_rmfa(&flat, &qs, &ks, &v, eps, repeats);
+
+    let speedup = ref_t.min() / fast_t.min();
+    print_phase("rmfa reference", &ref_t);
+    print_phase("rmfa fastpath", &fast_t);
+    println!("fastpath speedup      : x{speedup:.2} (reference min / fastpath min)");
+    Value::obj(vec![
+        ("n", Value::num(n as f64)),
+        ("D", Value::num(feat as f64)),
+        ("d", Value::num(d as f64)),
+        ("groups", Value::num(groups as f64)),
+        (
+            "threads",
+            Value::num(fastpath::parallel::num_threads() as f64),
+        ),
+        (
+            "phases",
+            Value::obj(vec![
+                ("rmfa_reference", phase_json(&ref_t)),
+                ("rmfa_fastpath", phase_json(&fast_t)),
+            ]),
+        ),
+        ("speedup_fastpath_vs_reference", Value::num(speedup)),
+    ])
+}
+
+/// Trainer tier: per-step phase breakdown over PJRT. Errors (no
+/// artifacts / no PJRT runtime) are reported by the caller as a skip.
+fn trainer_phases(steps: usize) -> anyhow::Result<Value> {
     let cfg = RunConfig {
         task: "lra_text".into(),
         variant: "mac_exp".into(),
@@ -29,16 +117,18 @@ fn main() -> anyhow::Result<()> {
         ..RunConfig::default()
     };
     let reg = Registry::open(std::path::Path::new(&cfg.artifacts_dir))?;
-    println!("=== §Perf hot path: {} ({} steps) ===", cfg.family(), steps);
+    println!("--- training loop: {} ({} steps) ---", cfg.family(), steps);
     let mut tr = Trainer::build(cfg.clone(), &reg)?;
 
-    // timed phases per step
     let mut stage_t = Timing::default();
     let mut step_t = Timing::default();
     let mut loss_t = Timing::default();
+    let mut fetch_t = Timing::default();
     let data = TaskData::build(&cfg.task, cfg.seed, cfg.train_examples, tr.info.seq_len, 24)?;
     for s in 0..steps {
-        let idx: Vec<usize> = (0..tr.info.batch).map(|i| (s * tr.info.batch + i) % data.len()).collect();
+        let idx: Vec<usize> = (0..tr.info.batch)
+            .map(|i| (s * tr.info.batch + i) % data.len())
+            .collect();
         let t0 = Instant::now();
         let batch = data.stage(&idx, tr.info.seq_len);
         stage_t.push(t0.elapsed().as_secs_f64());
@@ -48,25 +138,59 @@ fn main() -> anyhow::Result<()> {
         let t2 = Instant::now();
         let _ = DeviceState::loss_value(&loss_buf)?;
         loss_t.push(t2.elapsed().as_secs_f64());
+        // fetch-only pass: download the full device state WITHOUT
+        // re-uploading — isolates the device->host half of the tuple
+        // round-trip that the train step pays inside
+        // run_buffers_untupled.
+        let t3 = Instant::now();
+        let _ = tr.state.download()?;
+        fetch_t.push(t3.elapsed().as_secs_f64());
     }
+    print_phase("batch staging", &stage_t);
     println!(
-        "batch staging : mean {:>9.4}s  min {:>9.4}s",
-        stage_t.mean(),
-        stage_t.min()
-    );
-    println!(
-        "train step    : mean {:>9.4}s  min {:>9.4}s (upload + execute + tuple round-trip)",
+        "{:<22}: mean {:>9.4}s  min {:>9.4}s (upload + execute + tuple round-trip)",
+        "train step",
         step_t.mean(),
         step_t.min()
     );
+    print_phase("loss fetch", &loss_t);
     println!(
-        "loss fetch    : mean {:>9.4}s  min {:>9.4}s",
-        loss_t.mean(),
-        loss_t.min()
+        "{:<22}: mean {:>9.4}s  min {:>9.4}s (state download, no re-upload)",
+        "fetch-only pass",
+        fetch_t.mean(),
+        fetch_t.min()
     );
+    let total = stage_t.mean() + step_t.mean() + loss_t.mean();
+    println!("total/step            : {total:>9.4}s (excluding the fetch-only probe)");
+    Ok(Value::obj(vec![
+        ("family", Value::str(cfg.family())),
+        ("steps", Value::num(steps as f64)),
+        (
+            "phases",
+            Value::obj(vec![
+                ("batch_staging", phase_json(&stage_t)),
+                ("train_step", phase_json(&step_t)),
+                ("loss_fetch", phase_json(&loss_t)),
+                ("state_fetch_only", phase_json(&fetch_t)),
+            ]),
+        ),
+    ]))
+}
 
-    // isolate the tuple round-trip: run an eval-style fetch-only pass
-    let total = step_t.mean() + stage_t.mean() + loss_t.mean();
-    println!("total/step    : {total:>9.4}s");
+fn main() -> anyhow::Result<()> {
+    macformer::util::logging::init();
+    let steps = env_usize("MACFORMER_BENCH_STEPS", 12);
+    println!("=== §Perf hot path ===");
+    let host = host_phases();
+    let trainer = match trainer_phases(steps) {
+        Ok(v) => v,
+        Err(e) => {
+            println!("training-loop tier skipped: {e}");
+            Value::Null
+        }
+    };
+    let report = Value::obj(vec![("host", host), ("trainer", trainer)]);
+    std::fs::write("BENCH_hotpath.json", report.to_string())?;
+    println!("per-phase timings written to BENCH_hotpath.json");
     Ok(())
 }

@@ -1,19 +1,32 @@
 //! Fig-4 micro-benchmark harness: RMFA_exp vs exact softmax attention.
 //!
+//! Two backends share this module:
+//!
+//! * **device** (`run_grid`) — the original path: compiled HLO modules
+//!   over PJRT, identical in-graph preSBN (eps = 1e-12).
+//! * **host** (`run_host_grid`) — the fastpath: `FlatRmfMap` feature
+//!   maps + the scoped-thread batched attention kernels, no artifacts
+//!   or PJRT needed. Each cell additionally times the *reference path*
+//!   (scalar per-problem `RmfMap::apply` + `reference::linear_attention`,
+//!   single thread — the oracle tier as it stands in this tree, i.e.
+//!   including its memory-layout fix) so the fast-vs-oracle speedup is
+//!   tracked under one protocol.
+//!
 //! For every (length n, feature dim D) cell of the paper's simulation
 //! grid: generate random (q, k, v) with the paper's shape (batch 16 x
-//! 8 heads x n x 64), run both compiled attention modules, and record
+//! 8 heads x n x 64) and record
 //!   * Fig 4a — log10 NMSE between RMFA output and exact attention, and
 //!   * Fig 4b — log10 acceleration ratio t_softmax / t_rmfa.
-//! Both modules apply identical in-graph preSBN (eps = 1e-12), matching
-//! the paper's preprocessing.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::fastpath::{self, FlatRmfMap};
 use crate::metrics::{nmse, Timing};
+use crate::reference::{attention, rmf::RmfMap};
 use crate::runtime::{Executable, HostArg, Registry};
+use crate::tensor::Tensor;
 use crate::util::json::Value;
 use crate::util::rng::Rng;
 
@@ -145,6 +158,229 @@ pub fn render(cells: &[MicroCell]) -> String {
     s
 }
 
+// ---------------------------------------------------------------------------
+// host backend (fastpath, no PJRT)
+// ---------------------------------------------------------------------------
+
+/// One (n, D) cell of the host grid.
+#[derive(Debug, Clone)]
+pub struct HostCell {
+    pub n: usize,
+    pub feature_dim: usize,
+    pub nmse: f64,
+    /// exact softmax attention on the fastpath (threaded), min seconds
+    pub softmax_seconds: f64,
+    /// RMFA on the fastpath (FlatRmfMap + threaded linear attention)
+    pub rmfa_seconds: f64,
+    /// RMFA on the reference path (scalar per-problem, single thread)
+    pub reference_seconds: f64,
+}
+
+impl HostCell {
+    pub fn log10_nmse(&self) -> f64 {
+        self.nmse.log10()
+    }
+    /// log10(t_softmax / t_rmfa): positive = RMFA faster (Fig 4b).
+    pub fn log10_speedup(&self) -> f64 {
+        (self.softmax_seconds / self.rmfa_seconds).log10()
+    }
+    /// t_reference / t_rmfa: the fast-vs-oracle speedup factor.
+    pub fn speedup_vs_reference(&self) -> f64 {
+        self.reference_seconds / self.rmfa_seconds
+    }
+}
+
+/// Time the fastpath RMFA pipeline (FlatRmfMap phi on score-scaled
+/// inputs + threaded linear contraction) over a batched (g, n, d)
+/// problem set: returns (first run's output, full timing over
+/// `repeats`). Shared by the host grid and the hotpath bench so both
+/// report speedups against the same protocol.
+pub fn fastpath_rmfa(
+    flat: &FlatRmfMap,
+    qs: &Tensor,
+    ks: &Tensor,
+    v: &Tensor,
+    eps: f32,
+    repeats: usize,
+) -> (Tensor, Timing) {
+    let mut t = Timing::default();
+    let mut first: Option<Tensor> = None;
+    for _ in 0..repeats.max(1) {
+        let t0 = Instant::now();
+        let phi_q = fastpath::apply_map_batched(flat, qs);
+        let phi_k = fastpath::apply_map_batched(flat, ks);
+        let out = fastpath::linear_attention_batched(&phi_q, &phi_k, v, false, eps);
+        t.push(t0.elapsed().as_secs_f64());
+        if first.is_none() {
+            first = Some(out);
+        }
+    }
+    (first.expect("repeats >= 1"), t)
+}
+
+/// Time the reference RMFA pipeline (per-problem scalar `RmfMap::apply`
+/// + oracle linear attention, single thread) over the same batched
+/// problem set, with the same repeats protocol as [`fastpath_rmfa`] —
+/// so the speedup ratio carries no warm-up bias.
+pub fn reference_rmfa(
+    map: &RmfMap,
+    qs: &Tensor,
+    ks: &Tensor,
+    v: &Tensor,
+    eps: f32,
+    repeats: usize,
+) -> Timing {
+    let g = qs.shape[0];
+    let mut t = Timing::default();
+    for _ in 0..repeats.max(1) {
+        let t0 = Instant::now();
+        for gi in 0..g {
+            let phi_q = map.apply(&qs.problem2(gi));
+            let phi_k = map.apply(&ks.problem2(gi));
+            let _ = attention::linear_attention(&phi_q, &phi_k, &v.problem2(gi), false, eps);
+        }
+        t.push(t0.elapsed().as_secs_f64());
+    }
+    t
+}
+
+/// Run the Fig-4 grid entirely on the host. `groups` is batch x heads
+/// (paper: 16 x 8 = 128), `dim` the head dimension (paper: 64). All
+/// three paths — exact softmax, fastpath RMFA, reference RMFA — take
+/// the min over the same `repeats`, so no path gets a cold-start
+/// penalty the others amortize away.
+pub fn run_host_grid(
+    lengths: &[usize],
+    features: &[usize],
+    repeats: usize,
+    seed: u64,
+    groups: usize,
+    dim: usize,
+) -> Vec<HostCell> {
+    let kernel = "exp";
+    let (p, max_degree) = (2.0, 8);
+    let eps = 1e-6f32;
+    let mut out = Vec::new();
+    for &n in lengths {
+        let mut rng = Rng::new(seed ^ (n as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let q = Tensor::randn(&mut rng, &[groups, n, dim], 0.5);
+        let k = Tensor::randn(&mut rng, &[groups, n, dim], 0.5);
+        let v = Tensor::randn(&mut rng, &[groups, n, dim], 1.0);
+        // phi(x / d^(1/4)) . phi(y / d^(1/4)) estimates exp(x.y / sqrt(d)),
+        // the softmax numerator at the attention score scale.
+        let input_scale = 1.0 / (dim as f32).sqrt().sqrt();
+        let qs = q.scale(input_scale);
+        let ks = k.scale(input_scale);
+
+        let mut sm_t = Timing::default();
+        let mut exact: Option<Tensor> = None;
+        for _ in 0..repeats.max(1) {
+            let t0 = Instant::now();
+            let got = fastpath::softmax_attention_batched(&q, &k, &v, false);
+            sm_t.push(t0.elapsed().as_secs_f64());
+            if exact.is_none() {
+                exact = Some(got);
+            }
+        }
+        let exact = exact.expect("repeats >= 1");
+        let softmax_seconds = sm_t.min();
+
+        for &feat in features {
+            let mut map_rng =
+                Rng::new(seed ^ (feat as u64).wrapping_mul(0xD1B54A32D192ED03) ^ n as u64);
+            let map = RmfMap::sample(&mut map_rng, kernel, feat, dim, p, max_degree);
+            let flat = FlatRmfMap::from(&map);
+
+            let (approx, rmfa_t) = fastpath_rmfa(&flat, &qs, &ks, &v, eps, repeats);
+            let err = nmse(&approx.data, &exact.data);
+            let reference_t = reference_rmfa(&map, &qs, &ks, &v, eps, repeats);
+
+            let cell = HostCell {
+                n,
+                feature_dim: feat,
+                nmse: err,
+                softmax_seconds,
+                rmfa_seconds: rmfa_t.min(),
+                reference_seconds: reference_t.min(),
+            };
+            log::info!(
+                "host micro n={n} D={feat}: log10(nmse)={:.2} log10(speedup)={:+.2} vs-reference x{:.1}",
+                cell.log10_nmse(),
+                cell.log10_speedup(),
+                cell.speedup_vs_reference()
+            );
+            out.push(cell);
+        }
+    }
+    out
+}
+
+/// Render the host grid: the two Fig-4 panels plus the fast-vs-reference
+/// speedup panel.
+pub fn render_host(cells: &[HostCell]) -> String {
+    let mut lengths: Vec<usize> = cells.iter().map(|c| c.n).collect();
+    lengths.dedup();
+    let mut features: Vec<usize> = cells.iter().map(|c| c.feature_dim).collect();
+    features.sort_unstable();
+    features.dedup();
+    let lookup = |n: usize, f: usize| cells.iter().find(|c| c.n == n && c.feature_dim == f);
+    let mut s = String::new();
+    let panels: [(&str, Box<dyn Fn(&HostCell) -> f64>); 3] = [
+        (
+            "Fig 4a (host): log10 NMSE (RMFA_exp vs softmax attention)",
+            Box::new(|c: &HostCell| c.log10_nmse()),
+        ),
+        (
+            "Fig 4b (host): log10 acceleration ratio (softmax / RMFA)",
+            Box::new(|c: &HostCell| c.log10_speedup()),
+        ),
+        (
+            "fastpath speedup over reference path (x)",
+            Box::new(|c: &HostCell| c.speedup_vs_reference()),
+        ),
+    ];
+    for (title, get) in panels {
+        s.push_str(&format!("\n{title}\n{:>8}", "n \\ D"));
+        for f in &features {
+            s.push_str(&format!("{f:>9}"));
+        }
+        s.push('\n');
+        for n in &lengths {
+            s.push_str(&format!("{n:>8}"));
+            for f in &features {
+                match lookup(*n, *f) {
+                    Some(c) => s.push_str(&format!("{:>9.2}", get(c))),
+                    None => s.push_str(&format!("{:>9}", "-")),
+                }
+            }
+            s.push('\n');
+        }
+    }
+    s
+}
+
+pub fn host_to_json(cells: &[HostCell]) -> Value {
+    Value::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                Value::obj(vec![
+                    ("n", Value::num(c.n as f64)),
+                    ("D", Value::num(c.feature_dim as f64)),
+                    ("nmse", Value::num(c.nmse)),
+                    ("softmax_seconds", Value::num(c.softmax_seconds)),
+                    ("rmfa_seconds", Value::num(c.rmfa_seconds)),
+                    ("reference_seconds", Value::num(c.reference_seconds)),
+                    (
+                        "speedup_vs_reference",
+                        Value::num(c.speedup_vs_reference()),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
 pub fn to_json(cells: &[MicroCell]) -> Value {
     Value::Arr(
         cells
@@ -177,6 +413,20 @@ mod tests {
         };
         assert!((c.log10_nmse() + 2.0).abs() < 1e-9);
         assert!((c.log10_speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn host_grid_smoke() {
+        let cells = run_host_grid(&[8], &[4], 1, 3, 2, 4);
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert!(c.nmse.is_finite() && c.nmse >= 0.0, "nmse {}", c.nmse);
+        assert!(c.rmfa_seconds >= 0.0 && c.reference_seconds >= 0.0);
+        let s = render_host(&cells);
+        assert!(s.contains("Fig 4a (host)"));
+        assert!(s.contains("fastpath speedup"));
+        let j = host_to_json(&cells).to_string();
+        assert!(j.contains("speedup_vs_reference"), "{j}");
     }
 
     #[test]

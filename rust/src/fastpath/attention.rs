@@ -1,0 +1,356 @@
+//! Cache-aware single-problem attention kernels.
+//!
+//! Same math as `reference::attention` (which stays the oracle), but:
+//! score matrices come from the register-blocked `matmul_nt_into` GEMM
+//! instead of per-row scalar dots, rows are processed in blocks so the
+//! logits working set stays L1/L2-resident, and every inner loop walks
+//! contiguous memory. All functions also exist as `_into` variants over
+//! raw slices so the parallel driver can shard one batched tensor into
+//! per-problem sub-slices without copies.
+
+use crate::reference::maclaurin;
+use crate::tensor::{matmul_nt_into, Tensor};
+
+/// Rows of the score matrix materialized at a time: 32 rows x n=4096
+/// cols of f32 is 512 KiB, comfortably L2-resident.
+const ROW_BLOCK: usize = 32;
+
+/// Exact softmax attention, blocked: out = softmax(q k^T / sqrt(d)) v.
+pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Tensor {
+    let (n, d) = (q.shape[0], q.shape[1]);
+    let m = k.shape[0];
+    assert_eq!(k.shape[1], d);
+    assert_eq!(v.shape[0], m);
+    let dv = v.shape[1];
+    let mut out = Tensor::zeros(&[n, dv]);
+    softmax_attention_into(&q.data, &k.data, &v.data, n, m, d, dv, causal, &mut out.data);
+    out
+}
+
+/// Slice-level exact softmax attention; `out` is (n x dv) row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_attention_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    m: usize,
+    d: usize,
+    dv: usize,
+    causal: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), m * d);
+    assert_eq!(v.len(), m * dv);
+    assert_eq!(out.len(), n * dv);
+    if causal {
+        // same contract as the reference oracle (which indexes keys up
+        // to row i and has no defined causal semantics for n != m)
+        assert_eq!(n, m, "causal softmax attention needs n == m");
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut logits = vec![0.0f32; ROW_BLOCK * m];
+    let mut i0 = 0;
+    while i0 < n {
+        let ib = ROW_BLOCK.min(n - i0);
+        // score block = Q[i0..i0+ib] · K[..cols]^T, one GEMM. Under a
+        // causal mask only keys j <= i are ever read, so cap the GEMM at
+        // the block's widest row instead of computing the full triangle.
+        let cols = if causal { (i0 + ib).min(m) } else { m };
+        matmul_nt_into(
+            &q[i0 * d..(i0 + ib) * d],
+            ib,
+            d,
+            &k[..cols * d],
+            cols,
+            &mut logits[..ib * cols],
+        );
+        for ii in 0..ib {
+            let i = i0 + ii;
+            let limit = if causal { (i + 1).min(m) } else { m };
+            let row = &mut logits[ii * cols..ii * cols + limit];
+            let mut maxl = f32::NEG_INFINITY;
+            for l in row.iter_mut() {
+                *l *= scale;
+                maxl = maxl.max(*l);
+            }
+            let mut z = 0.0f32;
+            for l in row.iter_mut() {
+                *l = (*l - maxl).exp();
+                z += *l;
+            }
+            let orow = &mut out[i * dv..(i + 1) * dv];
+            orow.fill(0.0);
+            for (j, &w) in row.iter().enumerate() {
+                let vj = &v[j * dv..(j + 1) * dv];
+                for (o, x) in orow.iter_mut().zip(vj) {
+                    *o += w * x;
+                }
+            }
+            for o in orow.iter_mut() {
+                *o /= z;
+            }
+        }
+        i0 += ib;
+    }
+}
+
+/// Kernelized attention (Definition 2), blocked, any Table-1 kernel.
+pub fn kernelized_attention(
+    kernel: &str,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    causal: bool,
+    eps: f32,
+) -> Tensor {
+    let (n, d) = (q.shape[0], q.shape[1]);
+    let m = k.shape[0];
+    assert_eq!(k.shape[1], d);
+    assert_eq!(v.shape[0], m);
+    let dv = v.shape[1];
+    let mut out = Tensor::zeros(&[n, dv]);
+    kernelized_attention_into(
+        kernel, &q.data, &k.data, &v.data, n, m, d, dv, causal, eps, &mut out.data,
+    );
+    out
+}
+
+/// Slice-level kernelized attention; `out` is (n x dv) row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn kernelized_attention_into(
+    kernel: &str,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    m: usize,
+    d: usize,
+    dv: usize,
+    causal: bool,
+    eps: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), m * d);
+    assert_eq!(v.len(), m * dv);
+    assert_eq!(out.len(), n * dv);
+    if causal {
+        assert_eq!(n, m, "causal kernelized attention needs n == m");
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    // resolve the kernel once — not per score element in the hot loop
+    let kf = maclaurin::kernel_value_fn(kernel);
+    let mut scores = vec![0.0f32; ROW_BLOCK * m];
+    let mut i0 = 0;
+    while i0 < n {
+        let ib = ROW_BLOCK.min(n - i0);
+        // see softmax_attention_into: cap the GEMM at the causal width
+        let cols = if causal { (i0 + ib).min(m) } else { m };
+        matmul_nt_into(
+            &q[i0 * d..(i0 + ib) * d],
+            ib,
+            d,
+            &k[..cols * d],
+            cols,
+            &mut scores[..ib * cols],
+        );
+        for ii in 0..ib {
+            let i = i0 + ii;
+            let limit = if causal { (i + 1).min(m) } else { m };
+            let row = &scores[ii * cols..ii * cols + limit];
+            let mut den = 0.0f32;
+            let orow = &mut out[i * dv..(i + 1) * dv];
+            orow.fill(0.0);
+            for (j, &t) in row.iter().enumerate() {
+                let w = kf((t * scale) as f64) as f32;
+                den += w;
+                let vj = &v[j * dv..(j + 1) * dv];
+                for (o, x) in orow.iter_mut().zip(vj) {
+                    *o += w * x;
+                }
+            }
+            let denom = den + eps;
+            for o in orow.iter_mut() {
+                *o /= denom;
+            }
+        }
+        i0 += ib;
+    }
+}
+
+/// Factored linear contraction: out_i = phi_q_i S / (phi_q_i z + eps).
+pub fn linear_attention(
+    phi_q: &Tensor,
+    phi_k: &Tensor,
+    v: &Tensor,
+    causal: bool,
+    eps: f32,
+) -> Tensor {
+    let (n, feat) = (phi_q.shape[0], phi_q.shape[1]);
+    let m = phi_k.shape[0];
+    assert_eq!(phi_k.shape[1], feat);
+    assert_eq!(v.shape[0], m);
+    let dv = v.shape[1];
+    let mut out = Tensor::zeros(&[n, dv]);
+    linear_attention_into(
+        &phi_q.data, &phi_k.data, &v.data, n, m, feat, dv, causal, eps, &mut out.data,
+    );
+    out
+}
+
+/// Slice-level linear attention; `out` is (n x dv) row-major. The causal
+/// variant requires n == m (one running prefix state).
+#[allow(clippy::too_many_arguments)]
+pub fn linear_attention_into(
+    phi_q: &[f32],
+    phi_k: &[f32],
+    v: &[f32],
+    n: usize,
+    m: usize,
+    feat: usize,
+    dv: usize,
+    causal: bool,
+    eps: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(phi_q.len(), n * feat);
+    assert_eq!(phi_k.len(), m * feat);
+    assert_eq!(v.len(), m * dv);
+    assert_eq!(out.len(), n * dv);
+    if causal {
+        assert_eq!(n, m, "causal linear attention needs n == m");
+        let mut s = vec![0.0f32; feat * dv];
+        let mut z = vec![0.0f32; feat];
+        for i in 0..n {
+            let pk = &phi_k[i * feat..(i + 1) * feat];
+            let vi = &v[i * dv..(i + 1) * dv];
+            for (f, &pkf) in pk.iter().enumerate() {
+                z[f] += pkf;
+                if pkf == 0.0 {
+                    continue;
+                }
+                let srow = &mut s[f * dv..(f + 1) * dv];
+                for (acc, x) in srow.iter_mut().zip(vi) {
+                    *acc += pkf * x;
+                }
+            }
+            let pq = &phi_q[i * feat..(i + 1) * feat];
+            let mut den = 0.0f32;
+            let orow = &mut out[i * dv..(i + 1) * dv];
+            orow.fill(0.0);
+            for (f, &pqf) in pq.iter().enumerate() {
+                den += pqf * z[f];
+                if pqf == 0.0 {
+                    continue;
+                }
+                let srow = &s[f * dv..(f + 1) * dv];
+                for (o, x) in orow.iter_mut().zip(srow) {
+                    *o += pqf * x;
+                }
+            }
+            let denom = den + eps;
+            for o in orow.iter_mut() {
+                *o /= denom;
+            }
+        }
+    } else {
+        // S = phi_k^T v (feat x dv) and z = colsum(phi_k), one fused
+        // pass of contiguous rank-1 updates.
+        let mut s = vec![0.0f32; feat * dv];
+        let mut z = vec![0.0f32; feat];
+        for j in 0..m {
+            let pk = &phi_k[j * feat..(j + 1) * feat];
+            let vj = &v[j * dv..(j + 1) * dv];
+            for (f, &pkf) in pk.iter().enumerate() {
+                z[f] += pkf;
+                if pkf == 0.0 {
+                    continue;
+                }
+                let srow = &mut s[f * dv..(f + 1) * dv];
+                for (acc, x) in srow.iter_mut().zip(vj) {
+                    *acc += pkf * x;
+                }
+            }
+        }
+        for i in 0..n {
+            let pq = &phi_q[i * feat..(i + 1) * feat];
+            let den: f32 = pq.iter().zip(&z).map(|(a, b)| a * b).sum();
+            let orow = &mut out[i * dv..(i + 1) * dv];
+            orow.fill(0.0);
+            for (f, &pqf) in pq.iter().enumerate() {
+                if pqf == 0.0 {
+                    continue;
+                }
+                let srow = &s[f * dv..(f + 1) * dv];
+                for (o, x) in orow.iter_mut().zip(srow) {
+                    *o += pqf * x;
+                }
+            }
+            let denom = den + eps;
+            for o in orow.iter_mut() {
+                *o /= denom;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reference::attention as oracle;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+        Tensor::randn(rng, shape, scale)
+    }
+
+    #[test]
+    fn softmax_matches_oracle_including_row_block_boundary() {
+        let mut rng = Rng::new(21);
+        // n = 70 crosses two ROW_BLOCK boundaries
+        for causal in [false, true] {
+            let q = randn(&mut rng, &[70, 8], 0.8);
+            let k = randn(&mut rng, &[70, 8], 0.8);
+            let v = randn(&mut rng, &[70, 5], 1.0);
+            let a = oracle::softmax_attention(&q, &k, &v, causal);
+            let b = softmax_attention(&q, &k, &v, causal);
+            assert!(a.max_abs_diff(&b) < 1e-5, "causal={causal}: {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn kernelized_matches_oracle_all_kernels() {
+        let mut rng = Rng::new(22);
+        // n = 70 crosses two ROW_BLOCK boundaries, exercising the causal
+        // cols-capped score stride
+        for kernel in maclaurin::KERNELS {
+            for causal in [false, true] {
+                let q = randn(&mut rng, &[70, 4], 0.4);
+                let k = randn(&mut rng, &[70, 4], 0.4);
+                let v = randn(&mut rng, &[70, 3], 1.0);
+                let a = oracle::kernelized_attention(kernel, &q, &k, &v, causal, 1e-6);
+                let b = kernelized_attention(kernel, &q, &k, &v, causal, 1e-6);
+                assert!(
+                    a.max_abs_diff(&b) < 1e-5,
+                    "{kernel} causal={causal}: {}",
+                    a.max_abs_diff(&b)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn linear_matches_oracle_nonsquare() {
+        let mut rng = Rng::new(23);
+        let phi_q = randn(&mut rng, &[7, 6], 1.0).map(f32::abs);
+        let phi_k = randn(&mut rng, &[7, 6], 1.0).map(f32::abs);
+        let v = randn(&mut rng, &[7, 2], 1.0);
+        for causal in [false, true] {
+            let a = oracle::linear_attention(&phi_q, &phi_k, &v, causal, 1e-6);
+            let b = linear_attention(&phi_q, &phi_k, &v, causal, 1e-6);
+            assert!(a.max_abs_diff(&b) < 1e-5, "causal={causal}: {}", a.max_abs_diff(&b));
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Degree-grouped Random Maclaurin Feature map.
+//!
+//! `reference::rmf::RmfMap` stores each feature's Rademacher directions
+//! as `Vec<Vec<Vec<f32>>>` and evaluates phi feature by feature — three
+//! levels of pointer chasing per dot product. `FlatRmfMap` re-sorts the
+//! sampled features by Maclaurin degree and packs each degree bucket's
+//! directions into one contiguous row-major matrix, so `phi(X)` becomes
+//! a short sequence of GEMMs (one per distinct degree, at most
+//! `max_degree + 1` of them) followed by a running elementwise product
+//! over each feature's `degree` contiguous dot products.
+//!
+//! The layout change is exact, not approximate: the blocked GEMM
+//! accumulates every dot product in the same order as the reference's
+//! `zip(..).sum()`, the degree products multiply in the same direction,
+//! and the `scale * prod * sqrt(1/D)` prefactor is the same expression —
+//! so `FlatRmfMap::apply` is **bit-for-bit identical** to
+//! `RmfMap::apply` (enforced by `tests/fastpath_equiv.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::reference::rmf::RmfMap;
+use crate::tensor::{matmul_nt_into, Tensor};
+
+/// One degree's worth of features, packed contiguously.
+struct DegreeBucket {
+    /// Maclaurin degree N shared by every feature in this bucket.
+    degree: usize,
+    /// Original feature indices (ascending), used to scatter outputs
+    /// back into the reference feature order.
+    features: Vec<usize>,
+    /// `(features.len() * degree) x dim_in` row-major Rademacher
+    /// directions, rows grouped feature-major; empty when degree == 0.
+    omega: Vec<f32>,
+    /// Per feature: `sqrt(a_N p^{N+1})`, in `features` order.
+    scales: Vec<f32>,
+}
+
+/// Degree-grouped, GEMM-friendly RMF map (same math as [`RmfMap`]).
+pub struct FlatRmfMap {
+    pub dim_in: usize,
+    num_features: usize,
+    buckets: Vec<DegreeBucket>,
+}
+
+impl From<&RmfMap> for FlatRmfMap {
+    fn from(map: &RmfMap) -> FlatRmfMap {
+        let mut by_degree: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, &deg) in map.degrees.iter().enumerate() {
+            by_degree.entry(deg).or_default().push(i);
+        }
+        let buckets = by_degree
+            .into_iter()
+            .map(|(degree, features)| {
+                let mut omega = Vec::with_capacity(features.len() * degree * map.dim_in);
+                let mut scales = Vec::with_capacity(features.len());
+                for &f in &features {
+                    scales.push(map.scales[f]);
+                    for dir in &map.omega[f] {
+                        omega.extend_from_slice(dir);
+                    }
+                }
+                DegreeBucket { degree, features, omega, scales }
+            })
+            .collect();
+        FlatRmfMap {
+            dim_in: map.dim_in,
+            num_features: map.num_features(),
+            buckets,
+        }
+    }
+}
+
+impl FlatRmfMap {
+    pub fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    /// Number of distinct degrees present (== number of GEMMs per apply).
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Phi over an (n x dim_in) tensor -> (n x D); bit-for-bit equal to
+    /// `RmfMap::apply` on the map this was converted from.
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape[1], self.dim_in);
+        let n = x.shape[0];
+        let mut out = Tensor::zeros(&[n, self.num_features]);
+        self.apply_into(&x.data, n, &mut out.data);
+        out
+    }
+
+    /// Slice-level apply for the parallel driver: `x` is (n x dim_in)
+    /// row-major, `out` is (n x D) row-major.
+    pub fn apply_into(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        let feat = self.num_features;
+        assert_eq!(x.len(), n * self.dim_in, "apply_into: input len");
+        assert_eq!(out.len(), n * feat, "apply_into: output len");
+        // Same prefactor expression as RmfMap::apply_row — kept textually
+        // identical so the result is bit-for-bit the same.
+        let d = feat as f32;
+        let inv = (1.0 / d).sqrt();
+        let mut dots: Vec<f32> = Vec::new();
+        for bucket in &self.buckets {
+            let s = bucket.features.len();
+            let g = bucket.degree;
+            if g == 0 {
+                // Degree-0 features are input-independent constants.
+                for i in 0..n {
+                    let row = &mut out[i * feat..(i + 1) * feat];
+                    for (j, &f) in bucket.features.iter().enumerate() {
+                        let prod = 1.0f32;
+                        row[f] = bucket.scales[j] * prod * inv;
+                    }
+                }
+                continue;
+            }
+            // One GEMM: (n x dim_in) · (s*g x dim_in)^T -> (n x s*g).
+            // Feature j's g dot products land contiguously at columns
+            // [j*g, (j+1)*g). Grow-only scratch: matmul_nt_into writes
+            // every element, so no zero-fill between buckets.
+            if dots.len() < n * s * g {
+                dots.resize(n * s * g, 0.0);
+            }
+            matmul_nt_into(x, n, self.dim_in, &bucket.omega, s * g, &mut dots[..n * s * g]);
+            for i in 0..n {
+                let drow = &dots[i * s * g..(i + 1) * s * g];
+                let row = &mut out[i * feat..(i + 1) * feat];
+                for (j, &f) in bucket.features.iter().enumerate() {
+                    let mut prod = 1.0f32;
+                    for &dot in &drow[j * g..(j + 1) * g] {
+                        prod *= dot;
+                    }
+                    row[f] = bucket.scales[j] * prod * inv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conversion_preserves_feature_count_and_groups_degrees() {
+        let mut rng = Rng::new(11);
+        let map = RmfMap::sample(&mut rng, "exp", 64, 8, 2.0, 8);
+        let flat = FlatRmfMap::from(&map);
+        assert_eq!(flat.num_features(), 64);
+        let distinct: std::collections::BTreeSet<usize> =
+            map.degrees.iter().copied().collect();
+        assert_eq!(flat.num_buckets(), distinct.len());
+    }
+
+    #[test]
+    fn apply_matches_reference_bitwise_smoke() {
+        let mut rng = Rng::new(12);
+        for kernel in ["exp", "inv", "sqrt"] {
+            let map = RmfMap::sample(&mut rng, kernel, 48, 6, 2.0, 8);
+            let flat = FlatRmfMap::from(&map);
+            let mut x = Tensor::zeros(&[5, 6]);
+            for v in x.data.iter_mut() {
+                *v = rng.normal() * 0.5;
+            }
+            let a = map.apply(&x);
+            let b = flat.apply(&x);
+            assert_eq!(a.shape, b.shape);
+            for (i, (p, q)) in a.data.iter().zip(&b.data).enumerate() {
+                assert_eq!(
+                    p.to_bits(),
+                    q.to_bits(),
+                    "{kernel}: feature value {i} differs: {p} vs {q}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! The host fast compute path: cache-aware, data-parallel versions of
+//! the three hot kernels (RMF feature map, softmax attention, linear
+//! attention) behind the Fig-4 micro-benchmarks and the hotpath bench.
+//!
+//! Two-tier structure (the contract every later backend follows):
+//!
+//! * **oracle tier** — `crate::reference`: scalar, single-problem,
+//!   obviously-correct mirrors of the paper's math. It may receive
+//!   memory-layout fixes (e.g. the non-causal `S` contraction walking
+//!   rows instead of columns) but is never blocked, tiled, or threaded.
+//! * **fast tier** — this module: same math, engineered for throughput,
+//!   and *proved against the oracle* by the equivalence tests in
+//!   `tests/fastpath_equiv.rs` (`FlatRmfMap::apply` bit-for-bit,
+//!   attention kernels within 1e-5).
+//!
+//! Pieces:
+//! * [`flat_rmf::FlatRmfMap`] — degree-grouped feature map: phi(X) as a
+//!   short sequence of GEMMs + running elementwise products.
+//! * [`attention`] — blocked single-problem kernels over raw slices
+//!   (GEMM score blocks, contiguous inner loops).
+//! * [`parallel`] — `std::thread::scope` driver sharding batch x head
+//!   problems over cores; batched entry points for all three kernels.
+
+pub mod attention;
+pub mod flat_rmf;
+pub mod parallel;
+
+pub use flat_rmf::FlatRmfMap;
+pub use parallel::{
+    apply_map_batched, kernelized_attention_batched, linear_attention_batched,
+    softmax_attention_batched,
+};

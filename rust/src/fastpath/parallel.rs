@@ -1,0 +1,240 @@
+//! Scoped-thread parallel driver for batched (batch x head) problems.
+//!
+//! A batched attention workload is `g = batch * heads` independent
+//! problems over one flat `(g, n, d)` tensor. The driver splits the
+//! output buffer into per-problem chunks with `split_at_mut` (no
+//! unsafe, no copies, no extra deps) and shards contiguous problem
+//! ranges across `std::thread::scope` workers. Each problem is computed
+//! by exactly the same single-thread kernel code, so parallel results
+//! are identical to sequential ones.
+//!
+//! Thread count: `MACFORMER_THREADS` if set, else
+//! `std::thread::available_parallelism()`.
+
+use std::thread;
+
+use crate::tensor::Tensor;
+
+use super::attention;
+use super::flat_rmf::FlatRmfMap;
+
+/// Worker count for the parallel driver.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("MACFORMER_THREADS") {
+        if let Ok(x) = s.parse::<usize>() {
+            if x >= 1 {
+                return x;
+            }
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(problem_index, out_chunk)` for each of `count` problems, where
+/// `out` is `count * out_stride` long and chunk `i` is the sub-slice
+/// `[i * out_stride, (i + 1) * out_stride)`. Problems are sharded as
+/// contiguous ranges over scoped threads; with one worker (or one
+/// problem) everything runs on the calling thread.
+pub fn for_each_problem<F>(count: usize, out: &mut [f32], out_stride: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), count * out_stride, "for_each_problem: out len");
+    if count == 0 {
+        return;
+    }
+    if out_stride == 0 {
+        for g in 0..count {
+            f(g, &mut []);
+        }
+        return;
+    }
+    let threads = num_threads().min(count);
+    if threads <= 1 {
+        for (g, chunk) in out.chunks_mut(out_stride).enumerate() {
+            f(g, chunk);
+        }
+        return;
+    }
+    thread::scope(|scope| {
+        let mut rem: &mut [f32] = out;
+        let mut start = 0usize;
+        for t in 0..threads {
+            // balanced contiguous split: remaining / remaining-threads
+            let cnt = (count - start) / (threads - t);
+            let (head, tail) = rem.split_at_mut(cnt * out_stride);
+            rem = tail;
+            let fref = &f;
+            scope.spawn(move || {
+                for (off, chunk) in head.chunks_mut(out_stride).enumerate() {
+                    fref(start + off, chunk);
+                }
+            });
+            start += cnt;
+        }
+    });
+}
+
+fn batched_dims(t: &Tensor, what: &str) -> (usize, usize, usize) {
+    assert_eq!(t.rank(), 3, "{what}: expected (g, n, d) layout");
+    (t.shape[0], t.shape[1], t.shape[2])
+}
+
+/// Exact softmax attention over `(g, n, d)` q/k and `(g, n, dv)` v.
+pub fn softmax_attention_batched(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Tensor {
+    let (g, n, d) = batched_dims(q, "softmax_attention_batched q");
+    let (gk, m, dk) = batched_dims(k, "softmax_attention_batched k");
+    let (gv, mv, dv) = batched_dims(v, "softmax_attention_batched v");
+    assert_eq!((g, d), (gk, dk), "q/k disagree");
+    assert_eq!((g, m), (gv, mv), "k/v disagree");
+    let mut out = Tensor::zeros(&[g, n, dv]);
+    for_each_problem(g, &mut out.data, n * dv, |gi, chunk| {
+        attention::softmax_attention_into(
+            &q.data[gi * n * d..(gi + 1) * n * d],
+            &k.data[gi * m * d..(gi + 1) * m * d],
+            &v.data[gi * m * dv..(gi + 1) * m * dv],
+            n,
+            m,
+            d,
+            dv,
+            causal,
+            chunk,
+        );
+    });
+    out
+}
+
+/// Kernelized attention over batched tensors (see [`softmax_attention_batched`]).
+pub fn kernelized_attention_batched(
+    kernel: &str,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    causal: bool,
+    eps: f32,
+) -> Tensor {
+    let (g, n, d) = batched_dims(q, "kernelized_attention_batched q");
+    let (gk, m, dk) = batched_dims(k, "kernelized_attention_batched k");
+    let (gv, mv, dv) = batched_dims(v, "kernelized_attention_batched v");
+    assert_eq!((g, d), (gk, dk), "q/k disagree");
+    assert_eq!((g, m), (gv, mv), "k/v disagree");
+    let mut out = Tensor::zeros(&[g, n, dv]);
+    for_each_problem(g, &mut out.data, n * dv, |gi, chunk| {
+        attention::kernelized_attention_into(
+            kernel,
+            &q.data[gi * n * d..(gi + 1) * n * d],
+            &k.data[gi * m * d..(gi + 1) * m * d],
+            &v.data[gi * m * dv..(gi + 1) * m * dv],
+            n,
+            m,
+            d,
+            dv,
+            causal,
+            eps,
+            chunk,
+        );
+    });
+    out
+}
+
+/// Linear attention over `(g, n, D)` phi_q/phi_k and `(g, n, dv)` v.
+pub fn linear_attention_batched(
+    phi_q: &Tensor,
+    phi_k: &Tensor,
+    v: &Tensor,
+    causal: bool,
+    eps: f32,
+) -> Tensor {
+    let (g, n, feat) = batched_dims(phi_q, "linear_attention_batched phi_q");
+    let (gk, m, fk) = batched_dims(phi_k, "linear_attention_batched phi_k");
+    let (gv, mv, dv) = batched_dims(v, "linear_attention_batched v");
+    assert_eq!((g, feat), (gk, fk), "phi_q/phi_k disagree");
+    assert_eq!((g, m), (gv, mv), "phi_k/v disagree");
+    let mut out = Tensor::zeros(&[g, n, dv]);
+    for_each_problem(g, &mut out.data, n * dv, |gi, chunk| {
+        attention::linear_attention_into(
+            &phi_q.data[gi * n * feat..(gi + 1) * n * feat],
+            &phi_k.data[gi * m * feat..(gi + 1) * m * feat],
+            &v.data[gi * m * dv..(gi + 1) * m * dv],
+            n,
+            m,
+            feat,
+            dv,
+            causal,
+            eps,
+            chunk,
+        );
+    });
+    out
+}
+
+/// phi over a batched `(g, n, d)` tensor -> `(g, n, D)`, one problem per
+/// shard (each problem is itself a short GEMM sequence).
+pub fn apply_map_batched(map: &FlatRmfMap, x: &Tensor) -> Tensor {
+    let (g, n, d) = batched_dims(x, "apply_map_batched x");
+    assert_eq!(d, map.dim_in, "input dim vs map dim");
+    let feat = map.num_features();
+    let mut out = Tensor::zeros(&[g, n, feat]);
+    for_each_problem(g, &mut out.data, n * feat, |gi, chunk| {
+        map.apply_into(&x.data[gi * n * d..(gi + 1) * n * d], n, chunk);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn3(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+        Tensor::randn(rng, shape, scale)
+    }
+
+    #[test]
+    fn for_each_problem_covers_every_chunk_once() {
+        let count = 13;
+        let stride = 7;
+        let mut out = vec![0.0f32; count * stride];
+        for_each_problem(count, &mut out, stride, |g, chunk| {
+            for (i, c) in chunk.iter_mut().enumerate() {
+                *c = (g * stride + i) as f32;
+            }
+        });
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+    }
+
+    #[test]
+    fn for_each_problem_edge_cases() {
+        // zero problems
+        for_each_problem(0, &mut [], 5, |_, _| panic!("must not run"));
+        // one problem
+        let mut one = vec![0.0f32; 3];
+        for_each_problem(1, &mut one, 3, |g, chunk| {
+            assert_eq!(g, 0);
+            chunk.fill(1.0);
+        });
+        assert_eq!(one, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn batched_equals_sequential_per_problem() {
+        let mut rng = Rng::new(31);
+        let (g, n, d, dv) = (5, 9, 4, 3);
+        let q = randn3(&mut rng, &[g, n, d], 0.7);
+        let k = randn3(&mut rng, &[g, n, d], 0.7);
+        let v = randn3(&mut rng, &[g, n, dv], 1.0);
+        let batched = softmax_attention_batched(&q, &k, &v, false);
+        for gi in 0..g {
+            let single =
+                attention::softmax_attention(&q.problem2(gi), &k.problem2(gi), &v.problem2(gi), false);
+            for (a, b) in batched.data[gi * n * dv..(gi + 1) * n * dv]
+                .iter()
+                .zip(&single.data)
+            {
+                assert_eq!(a, b, "problem {gi} differs between batched and single");
+            }
+        }
+    }
+}

@@ -30,6 +30,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fastpath;
 pub mod metrics;
 pub mod reference;
 pub mod runtime;

@@ -132,18 +132,41 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_microbench(args: &Args) -> Result<()> {
-    let reg = registry(args)?;
+    let backend = args.str_flag("backend", "host");
     let repeats = args.usize_flag("repeats", 5).map_err(|e| anyhow!(e))?;
     let seed = args.u64_flag("seed", 7).map_err(|e| anyhow!(e))?;
+    let groups = args.usize_flag("groups", 16 * 8).map_err(|e| anyhow!(e))?;
     let lengths_flag = args.opt_flag("lengths");
     let features_flag = args.opt_flag("features");
     let out_json = args.opt_flag("out-json");
+    let artifacts_flag = args.str_flag("artifacts", "artifacts");
     args.check_unknown().map_err(|e| anyhow!(e))?;
     let parse_list = |s: String| -> Result<Vec<usize>> {
         s.split(',')
             .map(|x| x.parse::<usize>().map_err(|e| anyhow!("bad list item {x:?}: {e}")))
             .collect()
     };
+    if backend == "host" {
+        let lengths = match lengths_flag {
+            Some(s) => parse_list(s)?,
+            None => vec![256, 1024, 2048],
+        };
+        let features = match features_flag {
+            Some(s) => parse_list(s)?,
+            None => vec![64, 128],
+        };
+        let cells =
+            microbench::run_host_grid(&lengths, &features, repeats, seed, groups, 64);
+        println!("{}", microbench::render_host(&cells));
+        if let Some(path) = out_json {
+            std::fs::write(&path, microbench::host_to_json(&cells).to_string())?;
+        }
+        return Ok(());
+    }
+    if backend != "device" {
+        bail!("unknown --backend {backend:?}; try: host, device");
+    }
+    let reg = Registry::open(std::path::Path::new(&artifacts_flag))?;
     let lengths = match lengths_flag {
         Some(s) => parse_list(s)?,
         None => reg.micro_lengths.clone(),

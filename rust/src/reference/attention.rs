@@ -124,23 +124,35 @@ pub fn linear_attention(
             }
         }
     } else {
-        // S = phi_k^T v (feat x dv), z = sum_j phi_k_j
-        let s = phi_k.transpose2().matmul(v);
+        // S = phi_k^T v (feat x dv) — matmul_tn reads phi_k row-major and
+        // never materializes the transpose; z = sum_j phi_k_j.
+        let s = phi_k.matmul_tn(v);
         let mut z = vec![0.0f32; feat];
         for j in 0..phi_k.shape[0] {
-            for f in 0..feat {
-                z[f] += phi_k.data[j * feat + f];
+            let pk = &phi_k.data[j * feat..(j + 1) * feat];
+            for (zf, pkf) in z.iter_mut().zip(pk) {
+                *zf += *pkf;
             }
         }
         for i in 0..n {
             let pq = &phi_q.data[i * feat..(i + 1) * feat];
             let den: f32 = pq.iter().zip(&z).map(|(a, b)| a * b).sum();
-            for c in 0..dv {
-                let mut acc = 0.0f32;
-                for f in 0..feat {
-                    acc += pq[f] * s.data[f * dv + c];
+            // accumulate num_i = pq_i · S row by row: the old loop walked
+            // S down its columns (stride dv) per output element; this
+            // walks each S row once, contiguously.
+            let num = &mut out.data[i * dv..(i + 1) * dv];
+            for (f, &pqf) in pq.iter().enumerate() {
+                if pqf == 0.0 {
+                    continue;
                 }
-                out.data[i * dv + c] = acc / (den + eps);
+                let srow = &s.data[f * dv..(f + 1) * dv];
+                for (o, x) in num.iter_mut().zip(srow) {
+                    *o += pqf * x;
+                }
+            }
+            let denom = den + eps;
+            for o in num.iter_mut() {
+                *o /= denom;
             }
         }
     }

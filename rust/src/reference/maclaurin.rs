@@ -53,15 +53,21 @@ pub fn coefficient(kernel: &str, n: usize) -> f64 {
     }
 }
 
-/// Closed-form K(t).
-pub fn kernel_value(kernel: &str, t: f64) -> f64 {
+/// Closed-form K as a plain function pointer, so hot loops resolve the
+/// kernel name once instead of string-matching per score element.
+pub fn kernel_value_fn(kernel: &str) -> fn(f64) -> f64 {
     match kernel {
-        "exp" | "trigh" => t.exp(),
-        "inv" => 1.0 / (1.0 - t),
-        "log" => 1.0 - (1.0 - t).ln(),
-        "sqrt" => 2.0 - (1.0 - t).sqrt(),
+        "exp" | "trigh" => f64::exp,
+        "inv" => |t| 1.0 / (1.0 - t),
+        "log" => |t| 1.0 - (1.0 - t).ln(),
+        "sqrt" => |t| 2.0 - (1.0 - t).sqrt(),
         other => panic!("unknown kernel {other:?}"),
     }
+}
+
+/// Closed-form K(t).
+pub fn kernel_value(kernel: &str, t: f64) -> f64 {
+    kernel_value_fn(kernel)(t)
 }
 
 /// sum_{N=0}^{max_degree} a_N t^N.

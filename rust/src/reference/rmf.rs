@@ -29,6 +29,16 @@ impl RmfMap {
         p: f64,
         max_degree: usize,
     ) -> RmfMap {
+        assert!(
+            num_features > 0,
+            "RmfMap::sample: num_features must be > 0 — a zero-feature map \
+             would make apply_row scale by sqrt(1/0) and emit NaNs silently"
+        );
+        assert!(
+            dim_in > 0,
+            "RmfMap::sample: dim_in must be > 0 — degree >= 1 features would \
+             take empty-dot products and collapse phi to zero"
+        );
         let probs = maclaurin::degree_distribution(p, max_degree);
         let mut degrees = Vec::with_capacity(num_features);
         let mut omega = Vec::with_capacity(num_features);
@@ -116,6 +126,20 @@ mod tests {
         assert_eq!(map.num_features(), 32);
         let x = vec![0.1f32; 8];
         assert_eq!(map.apply_row(&x).len(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "num_features must be > 0")]
+    fn sample_rejects_zero_features() {
+        let mut rng = Rng::new(1);
+        let _ = RmfMap::sample(&mut rng, "exp", 0, 8, 2.0, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "dim_in must be > 0")]
+    fn sample_rejects_zero_dim() {
+        let mut rng = Rng::new(1);
+        let _ = RmfMap::sample(&mut rng, "exp", 8, 0, 2.0, 8);
     }
 
     #[test]

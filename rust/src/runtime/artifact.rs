@@ -194,9 +194,23 @@ mod tests {
         )
     }
 
+    /// Artifacts are a build product (`make artifacts`, needs the Python
+    /// toolchain); when *absent* these contract tests skip, so `cargo
+    /// test` stays meaningful on artifact-less hosts. Artifacts that
+    /// exist but fail to parse are a regression and panic — skipping
+    /// would turn manifest corruption into a silent green run.
+    fn open_or_skip() -> Option<Registry> {
+        let dir = manifest_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping artifact contract test: no artifacts at {dir:?}");
+            return None;
+        }
+        Some(Registry::open(&dir).expect("artifacts present but unreadable"))
+    }
+
     #[test]
     fn registry_parses_real_manifest() {
-        let reg = Registry::open(&manifest_dir()).expect("make artifacts first");
+        let Some(reg) = open_or_skip() else { return };
         assert!(reg.modules.len() >= 80, "got {}", reg.modules.len());
         // every Table-2 cell present
         for task in ["lra_text", "lra_listops", "lra_retrieval"] {
@@ -211,7 +225,7 @@ mod tests {
 
     #[test]
     fn module_files_exist_on_disk() {
-        let reg = Registry::open(&manifest_dir()).unwrap();
+        let Some(reg) = open_or_skip() else { return };
         for info in reg.modules.values() {
             assert!(reg.hlo_path(info).exists(), "missing {:?}", info.file);
         }
@@ -219,7 +233,7 @@ mod tests {
 
     #[test]
     fn train_modules_declare_state() {
-        let reg = Registry::open(&manifest_dir()).unwrap();
+        let Some(reg) = open_or_skip() else { return };
         for info in reg.by_role("train") {
             assert!(info.n_params > 0, "{}", info.name);
             assert!(info.n_opt > 0, "{}", info.name);

@@ -9,6 +9,72 @@ mod io;
 
 pub use io::{read_tensor, write_tensor, read_bundle, write_bundle};
 
+/// Register-tile height/width for the blocked matmul kernels. 4x4 f32
+/// accumulators fit comfortably in registers on every target we care
+/// about while keeping the tail logic trivial.
+const TILE: usize = 4;
+
+/// `out = A · B^T` over raw row-major slices: A is (m x k), B is (n x k),
+/// out is (m x n). Register-blocked over TILE x TILE output tiles; the
+/// k-loop stays sequential and ascending per accumulator, so every output
+/// element is accumulated in exactly the same order as a naive
+/// `zip(..).map(..).sum()` dot product — callers (the RMF fastpath) rely
+/// on that for bit-for-bit equivalence with the reference path.
+pub fn matmul_nt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul_nt_into: lhs len");
+    assert_eq!(b.len(), n * k, "matmul_nt_into: rhs len");
+    assert_eq!(out.len(), m * n, "matmul_nt_into: out len");
+    let mut i0 = 0;
+    while i0 < m {
+        let ib = TILE.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let jb = TILE.min(n - j0);
+            let mut acc = [[0.0f32; TILE]; TILE];
+            for p in 0..k {
+                for (ii, row) in acc.iter_mut().enumerate().take(ib) {
+                    let av = a[(i0 + ii) * k + p];
+                    for (jj, c) in row.iter_mut().enumerate().take(jb) {
+                        *c += av * b[(j0 + jj) * k + p];
+                    }
+                }
+            }
+            for (ii, row) in acc.iter().enumerate().take(ib) {
+                for (jj, c) in row.iter().enumerate().take(jb) {
+                    out[(i0 + ii) * n + j0 + jj] = *c;
+                }
+            }
+            j0 += TILE;
+        }
+        i0 += TILE;
+    }
+}
+
+/// `out = A^T · B` over raw row-major slices: A is (r x m), B is (r x n),
+/// out is (m x n), accumulated rank-1 update by rank-1 update so every
+/// memory stream is contiguous (the "column-major fix": no transposed
+/// reads, no `transpose2` allocation). Accumulation order over r matches
+/// `transpose2().matmul(..)` exactly, including its zero-skip.
+pub fn matmul_tn_into(a: &[f32], r: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), r * m, "matmul_tn_into: lhs len");
+    assert_eq!(b.len(), r * n, "matmul_tn_into: rhs len");
+    assert_eq!(out.len(), m * n, "matmul_tn_into: out len");
+    out.fill(0.0);
+    for p in 0..r {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (f, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let dst = &mut out[f * n..(f + 1) * n];
+            for (d, &bv) in dst.iter_mut().zip(brow) {
+                *d += av * bv;
+            }
+        }
+    }
+}
+
 /// Dense row-major f32 tensor with explicit shape.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -33,6 +99,17 @@ impl Tensor {
 
     pub fn filled(shape: &[usize], v: f32) -> Tensor {
         Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// i.i.d. N(0, scale^2) entries — the one Gaussian-fill helper shared
+    /// by tests and benches (drift-proof: seeding/scale semantics live
+    /// here only).
+    pub fn randn(rng: &mut crate::util::rng::Rng, shape: &[usize], scale: f32) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for x in t.data.iter_mut() {
+            *x = rng.normal() * scale;
+        }
+        t
     }
 
     pub fn numel(&self) -> usize {
@@ -89,6 +166,34 @@ impl Tensor {
         out
     }
 
+    /// `self · rhs^T` (self: m x k, rhs: n x k) via the register-blocked
+    /// kernel — the GEMM behind the fastpath feature maps and attention
+    /// logits. Accumulation order matches a naive dot product exactly.
+    pub fn matmul_nt(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(rhs.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        matmul_nt_into(&self.data, m, k, &rhs.data, n, &mut out.data);
+        out
+    }
+
+    /// `self^T · rhs` (self: r x m, rhs: r x n) without materializing the
+    /// transpose — replaces the `transpose2().matmul(..)` allocation on
+    /// the linear-attention path.
+    pub fn matmul_tn(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(rhs.rank(), 2);
+        let (r, m) = (self.shape[0], self.shape[1]);
+        let (r2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(r, r2, "matmul_tn leading dims {r} vs {r2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        matmul_tn_into(&self.data, r, m, &rhs.data, n, &mut out.data);
+        out
+    }
+
     pub fn transpose2(&self) -> Tensor {
         assert_eq!(self.rank(), 2);
         let (m, n) = (self.shape[0], self.shape[1]);
@@ -139,9 +244,26 @@ impl Tensor {
             .fold(0.0, f32::max)
     }
 
-    /// Slice the leading axis: rows [start, start+len).
+    /// Copy problem `gi` of a batched rank-3 (g, n, w) tensor out as a
+    /// rank-2 (n, w) tensor — the one helper behind every per-problem
+    /// fast-vs-reference comparison.
+    pub fn problem2(&self, gi: usize) -> Tensor {
+        assert_eq!(self.rank(), 3, "problem2 expects a (g, n, w) tensor");
+        let (n, w) = (self.shape[1], self.shape[2]);
+        let mut t = self.slice0(gi, 1);
+        t.shape = vec![n, w];
+        t
+    }
+
+    /// Slice the leading axis: rows [start, start+len). Works for any
+    /// rank >= 1 (for rank-1 tensors a "row" is a single element).
     pub fn slice0(&self, start: usize, len: usize) -> Tensor {
-        assert!(self.rank() >= 1);
+        assert!(self.rank() >= 1, "slice0 on a rank-0 tensor");
+        assert!(
+            start.checked_add(len).is_some_and(|end| end <= self.shape[0]),
+            "slice0 rows [{start}, {start}+{len}) out of bounds for leading axis of {}",
+            self.shape[0]
+        );
         let row: usize = self.shape[1..].iter().product();
         let mut shape = self.shape.clone();
         shape[0] = len;
@@ -204,6 +326,63 @@ mod tests {
         let s = a.slice0(1, 2);
         assert_eq!(s.shape, vec![2, 2]);
         assert_eq!(s.data, vec![3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn slice0_works_on_rank1() {
+        let a = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]);
+        let s = a.slice0(1, 2);
+        assert_eq!(s.shape, vec![2]);
+        assert_eq!(s.data, vec![2., 3.]);
+    }
+
+    #[test]
+    fn slice0_bounds_checked_with_message() {
+        let a = Tensor::from_vec(&[3, 2], vec![0.0; 6]);
+        let r = std::panic::catch_unwind(|| a.slice0(2, 2));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("out of bounds"), "panic message: {msg}");
+        // overflow-proof: start + len wrapping must not sneak past the check
+        let r = std::panic::catch_unwind(|| a.slice0(usize::MAX, 2));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn matmul_nt_matches_transposed_matmul() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 4), (7, 2, 9), (5, 8, 5)] {
+            let a = Tensor::from_vec(
+                &[m, k],
+                (0..m * k).map(|_| rng.normal()).collect(),
+            );
+            let b = Tensor::from_vec(
+                &[n, k],
+                (0..n * k).map(|_| rng.normal()).collect(),
+            );
+            let fast = a.matmul_nt(&b);
+            let slow = a.matmul(&b.transpose2());
+            assert_eq!(fast.shape, slow.shape);
+            assert_eq!(fast.max_abs_diff(&slow), 0.0, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_transposed_matmul() {
+        let mut rng = crate::util::rng::Rng::new(18);
+        for (r, m, n) in [(1, 1, 1), (4, 3, 5), (9, 2, 7), (6, 6, 1)] {
+            let a = Tensor::from_vec(
+                &[r, m],
+                (0..r * m).map(|_| rng.normal()).collect(),
+            );
+            let b = Tensor::from_vec(
+                &[r, n],
+                (0..r * n).map(|_| rng.normal()).collect(),
+            );
+            let fast = a.matmul_tn(&b);
+            let slow = a.transpose2().matmul(&b);
+            assert_eq!(fast.shape, slow.shape);
+            assert_eq!(fast.max_abs_diff(&slow), 0.0, "({r},{m},{n})");
+        }
     }
 
     #[test]

@@ -1,0 +1,43 @@
+//! Shared helpers for the PJRT integration tests (the `common/mod.rs`
+//! layout keeps this out of the test-binary list).
+#![allow(dead_code)] // each test binary uses a subset of these helpers
+
+use std::path::PathBuf;
+
+use macformer::runtime::{client, Registry};
+
+/// True iff a PJRT runtime is actually available. The offline `xla`
+/// stub (which can never initialize) is a *skip*; a real backend
+/// failing to initialize is a regression and panics — skipping would
+/// turn it into a silent green run.
+pub fn pjrt_or_skip() -> bool {
+    match client::handle() {
+        Ok(_) => true,
+        Err(e) => {
+            let msg = format!("{e}");
+            assert!(
+                msg.contains("offline xla stub"),
+                "PJRT client failed on a non-stub build (regression, not a skip): {msg}"
+            );
+            eprintln!("skipping: {msg}");
+            false
+        }
+    }
+}
+
+/// `None` => prerequisites genuinely absent (stub backend, or no
+/// artifacts directory was ever built). Artifacts that exist but fail
+/// to parse are a regression and panic instead of skipping.
+pub fn registry_or_skip() -> Option<Registry> {
+    if !pjrt_or_skip() {
+        return None;
+    }
+    let dir = PathBuf::from(
+        std::env::var("MACFORMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Registry::open(&dir).expect("artifacts present but unreadable — regression, not a skip"))
+}

@@ -1,0 +1,329 @@
+//! Fast-vs-oracle equivalence: the `fastpath` tier must reproduce the
+//! `reference` tier — bit-for-bit for the RMF feature map (pure layout
+//! change), within 1e-5 for the attention kernels (same math, different
+//! blocking), and exactly for parallel-vs-sequential (same code, sharded).
+//!
+//! Pure host math — no PJRT, safe to run multi-threaded.
+
+use macformer::fastpath::{self, FlatRmfMap};
+use macformer::reference::{attention, maclaurin, rmf::RmfMap};
+use macformer::tensor::Tensor;
+use macformer::util::proptest::{check, PropResult};
+use macformer::util::rng::Rng;
+
+fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+    Tensor::randn(rng, shape, scale)
+}
+
+/// FlatRmfMap::apply is bit-for-bit identical to RmfMap::apply after
+/// conversion, for every Table-1 kernel and shapes down to n=1, D=1.
+#[test]
+fn prop_flat_rmf_apply_bit_for_bit() {
+    check(
+        40,
+        |rng| {
+            let kernel_idx = rng.below(5);
+            let n = rng.range(1, 9);
+            let d = rng.range(1, 10);
+            let feat = rng.range(1, 48);
+            let seed = rng.next_u64() as f32;
+            vec![vec![kernel_idx as f32, n as f32, d as f32, feat as f32, seed]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let kernel = maclaurin::KERNELS[input[0][0] as usize % 5];
+            let n = (input[0][1] as usize).max(1);
+            let d = (input[0][2] as usize).max(1);
+            let feat = (input[0][3] as usize).max(1);
+            let mut rng = Rng::new(input[0][4] as u64);
+            let map = RmfMap::sample(&mut rng, kernel, feat, d, 2.0, 8);
+            let flat = FlatRmfMap::from(&map);
+            let x = randn(&mut rng, &[n, d], 0.5);
+            let a = map.apply(&x);
+            let b = flat.apply(&x);
+            if a.shape != b.shape {
+                return Err(format!("shape {:?} vs {:?}", a.shape, b.shape));
+            }
+            for (i, (p, q)) in a.data.iter().zip(&b.data).enumerate() {
+                if p.to_bits() != q.to_bits() {
+                    return Err(format!(
+                        "{kernel} n={n} d={d} D={feat}: element {i}: {p} vs {q} (bits differ)"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fast softmax attention matches the oracle within 1e-5, including
+/// non-square m != n (non-causal) and d != dv.
+#[test]
+fn prop_fast_softmax_matches_oracle() {
+    check(
+        30,
+        |rng| {
+            let n = rng.range(1, 12);
+            let m = rng.range(1, 12);
+            let d = rng.range(1, 8);
+            let dv = rng.range(1, 8);
+            let causal = rng.below(2);
+            let seed = rng.next_u64() as f32;
+            vec![vec![n as f32, m as f32, d as f32, dv as f32, causal as f32, seed]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let p = &input[0];
+            let (n, mut m, d, dv) = (
+                (p[0] as usize).max(1),
+                (p[1] as usize).max(1),
+                (p[2] as usize).max(1),
+                (p[3] as usize).max(1),
+            );
+            let causal = p[4] as usize == 1;
+            if causal {
+                m = n; // causal requires a square prefix structure
+            }
+            let mut rng = Rng::new(p[5] as u64);
+            let q = randn(&mut rng, &[n, d], 0.8);
+            let k = randn(&mut rng, &[m, d], 0.8);
+            let v = randn(&mut rng, &[m, dv], 1.0);
+            let a = attention::softmax_attention(&q, &k, &v, causal);
+            let b = fastpath::attention::softmax_attention(&q, &k, &v, causal);
+            let diff = a.max_abs_diff(&b);
+            if diff > 1e-5 {
+                return Err(format!("n={n} m={m} d={d} dv={dv} causal={causal}: diff {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fast linear attention matches the oracle within 1e-5, causal and
+/// non-causal, with d != dv and n down to 1.
+#[test]
+fn prop_fast_linear_matches_oracle() {
+    check(
+        30,
+        |rng| {
+            let n = rng.range(1, 12);
+            let feat = rng.range(1, 10);
+            let dv = rng.range(1, 6);
+            let causal = rng.below(2);
+            let seed = rng.next_u64() as f32;
+            vec![vec![n as f32, feat as f32, dv as f32, causal as f32, seed]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let p = &input[0];
+            let (n, feat, dv) = (
+                (p[0] as usize).max(1),
+                (p[1] as usize).max(1),
+                (p[2] as usize).max(1),
+            );
+            let causal = p[3] as usize == 1;
+            let mut rng = Rng::new(p[4] as u64);
+            let phi_q = randn(&mut rng, &[n, feat], 1.0).map(f32::abs);
+            let phi_k = randn(&mut rng, &[n, feat], 1.0).map(f32::abs);
+            let v = randn(&mut rng, &[n, dv], 1.0);
+            let a = attention::linear_attention(&phi_q, &phi_k, &v, causal, 1e-6);
+            let b = fastpath::attention::linear_attention(&phi_q, &phi_k, &v, causal, 1e-6);
+            let diff = a.max_abs_diff(&b);
+            if diff > 1e-5 {
+                return Err(format!("n={n} feat={feat} dv={dv} causal={causal}: diff {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fast kernelized attention matches the oracle within 1e-5 for every
+/// Table-1 kernel, causal and non-causal (the causal branch exercises
+/// the cols-capped, cols-strided score buffer).
+#[test]
+fn prop_fast_kernelized_matches_oracle() {
+    check(
+        25,
+        |rng| {
+            let kernel_idx = rng.below(5);
+            let n = rng.range(1, 10);
+            let d = rng.range(1, 6);
+            let dv = rng.range(1, 6);
+            let causal = rng.below(2);
+            let seed = rng.next_u64() as f32;
+            vec![vec![
+                kernel_idx as f32,
+                n as f32,
+                d as f32,
+                dv as f32,
+                causal as f32,
+                seed,
+            ]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let p = &input[0];
+            let kernel = maclaurin::KERNELS[p[0] as usize % 5];
+            let (n, d, dv) = (
+                (p[1] as usize).max(1),
+                (p[2] as usize).max(1),
+                (p[3] as usize).max(1),
+            );
+            let causal = p[4] as usize == 1;
+            let mut rng = Rng::new(p[5] as u64);
+            let q = randn(&mut rng, &[n, d], 0.3);
+            let k = randn(&mut rng, &[n, d], 0.3);
+            let v = randn(&mut rng, &[n, dv], 1.0);
+            let a = attention::kernelized_attention(kernel, &q, &k, &v, causal, 1e-6);
+            let b = fastpath::attention::kernelized_attention(kernel, &q, &k, &v, causal, 1e-6);
+            let diff = a.max_abs_diff(&b);
+            if diff > 1e-5 {
+                return Err(format!("{kernel} n={n} d={d} dv={dv} causal={causal}: diff {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The scoped-thread batched drivers produce EXACTLY the per-problem
+/// single-thread results (same kernel code, disjoint output shards),
+/// and stay within 1e-5 of the oracle — across g down to 1 (single
+/// head), n down to 1, and d != dv.
+#[test]
+fn prop_parallel_matches_single_thread() {
+    check(
+        20,
+        |rng| {
+            let g = rng.range(1, 7);
+            let n = rng.range(1, 10);
+            let d = rng.range(1, 6);
+            let dv = rng.range(1, 6);
+            let seed = rng.next_u64() as f32;
+            vec![vec![g as f32, n as f32, d as f32, dv as f32, seed]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let p = &input[0];
+            let (g, n, d, dv) = (
+                (p[0] as usize).max(1),
+                (p[1] as usize).max(1),
+                (p[2] as usize).max(1),
+                (p[3] as usize).max(1),
+            );
+            let mut rng = Rng::new(p[4] as u64);
+            let q = randn(&mut rng, &[g, n, d], 0.7);
+            let k = randn(&mut rng, &[g, n, d], 0.7);
+            let v = randn(&mut rng, &[g, n, dv], 1.0);
+            let phi_q = q.map(f32::abs);
+            let phi_k = k.map(f32::abs);
+
+            let sm = fastpath::softmax_attention_batched(&q, &k, &v, false);
+            let kn = fastpath::kernelized_attention_batched("exp", &q, &k, &v, false, 1e-6);
+            let la = fastpath::linear_attention_batched(&phi_q, &phi_k, &v, false, 1e-6);
+            for gi in 0..g {
+                let (qs, ks, vs) = (q.problem2(gi), k.problem2(gi), v.problem2(gi));
+                // exact vs the single-thread fast kernel
+                let one = fastpath::attention::softmax_attention(&qs, &ks, &vs, false);
+                for (a, b) in sm.data[gi * n * dv..(gi + 1) * n * dv].iter().zip(&one.data) {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("softmax problem {gi}: batched {a} vs single {b}"));
+                    }
+                }
+                // within 1e-5 of the oracle
+                let oracle_sm = attention::softmax_attention(&qs, &ks, &vs, false);
+                let mut diff = 0.0f32;
+                for (a, b) in sm.data[gi * n * dv..(gi + 1) * n * dv]
+                    .iter()
+                    .zip(&oracle_sm.data)
+                {
+                    diff = diff.max((a - b).abs());
+                }
+                if diff > 1e-5 {
+                    return Err(format!("softmax problem {gi} vs oracle: diff {diff}"));
+                }
+                let oracle_kn =
+                    attention::kernelized_attention("exp", &qs, &ks, &vs, false, 1e-6);
+                let mut diff = 0.0f32;
+                for (a, b) in kn.data[gi * n * dv..(gi + 1) * n * dv]
+                    .iter()
+                    .zip(&oracle_kn.data)
+                {
+                    diff = diff.max((a - b).abs());
+                }
+                if diff > 1e-5 {
+                    return Err(format!("kernelized problem {gi} vs oracle: diff {diff}"));
+                }
+                let (pqs, pks) = (phi_q.problem2(gi), phi_k.problem2(gi));
+                let oracle_la = attention::linear_attention(&pqs, &pks, &vs, false, 1e-6);
+                let mut diff = 0.0f32;
+                for (a, b) in la.data[gi * n * dv..(gi + 1) * n * dv]
+                    .iter()
+                    .zip(&oracle_la.data)
+                {
+                    diff = diff.max((a - b).abs());
+                }
+                if diff > 1e-5 {
+                    return Err(format!("linear problem {gi} vs oracle: diff {diff}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batched phi application equals the sequential FlatRmfMap::apply per
+/// problem (and therefore the reference map, by transitivity with the
+/// bit-for-bit property above).
+#[test]
+fn prop_batched_phi_matches_sequential() {
+    check(
+        20,
+        |rng| {
+            let g = rng.range(1, 6);
+            let n = rng.range(1, 8);
+            let d = rng.range(1, 8);
+            let feat = rng.range(1, 32);
+            let seed = rng.next_u64() as f32;
+            vec![vec![g as f32, n as f32, d as f32, feat as f32, seed]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let p = &input[0];
+            let (g, n, d, feat) = (
+                (p[0] as usize).max(1),
+                (p[1] as usize).max(1),
+                (p[2] as usize).max(1),
+                (p[3] as usize).max(1),
+            );
+            let mut rng = Rng::new(p[4] as u64);
+            let map = RmfMap::sample(&mut rng, "exp", feat, d, 2.0, 8);
+            let flat = FlatRmfMap::from(&map);
+            let x = randn(&mut rng, &[g, n, d], 0.5);
+            let batched = fastpath::apply_map_batched(&flat, &x);
+            for gi in 0..g {
+                let xs = x.problem2(gi);
+                let one = flat.apply(&xs);
+                for (i, (a, b)) in batched.data[gi * n * feat..(gi + 1) * n * feat]
+                    .iter()
+                    .zip(&one.data)
+                    .enumerate()
+                {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("problem {gi} element {i}: {a} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Deterministic spot check of the smallest shapes the batched drivers
+/// must handle: one problem, one row, d != dv.
+#[test]
+fn single_problem_single_row_nonsquare() {
+    let mut rng = Rng::new(0xE1);
+    let q = randn(&mut rng, &[1, 1, 3], 0.5);
+    let k = randn(&mut rng, &[1, 1, 3], 0.5);
+    let v = randn(&mut rng, &[1, 1, 5], 1.0);
+    let out = fastpath::softmax_attention_batched(&q, &k, &v, true);
+    assert_eq!(out.shape, vec![1, 1, 5]);
+    // one key => attention output copies v exactly (weight 1)
+    for (o, x) in out.data.iter().zip(&v.data) {
+        assert!((o - x).abs() < 1e-6, "{o} vs {x}");
+    }
+}

@@ -7,18 +7,14 @@
 //!
 //! One #[test] = one process = one PJRT client (see pjrt_smoke.rs).
 
+mod common;
+
+use common::registry_or_skip;
 use macformer::metrics::nmse;
 use macformer::reference::attention;
-use macformer::runtime::{Executable, HostArg, Registry};
+use macformer::runtime::{Executable, HostArg};
 use macformer::tensor::Tensor;
 use macformer::util::rng::Rng;
-
-fn registry() -> Registry {
-    Registry::open(std::path::Path::new(
-        &std::env::var("MACFORMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    ))
-    .expect("run `make artifacts` before cargo test")
-}
 
 /// Host-side preSBN mirroring compile/ppsbn.py (max_row mode) for the
 /// micro modules' (B, H, n, d) layout flattened as (G, n, d).
@@ -75,7 +71,7 @@ fn pre_sbn_host(x: &mut [f32], g: usize, n: usize, d: usize, eps: f32) {
 
 #[test]
 fn hlo_micro_modules_match_rust_reference() {
-    let reg = registry();
+    let Some(reg) = registry_or_skip() else { return };
     let n = 256;
     let d = 64;
     let g = 16 * 8;

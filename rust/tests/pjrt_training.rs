@@ -5,20 +5,16 @@
 //! Uses the smallest artifact family (translation, n=64) so the test
 //! stays fast while exercising every DeviceState path.
 
+mod common;
+
+use common::registry_or_skip;
 use macformer::config::RunConfig;
 use macformer::coordinator::{checkpoint, Trainer};
-use macformer::runtime::{DeviceState, Registry};
-
-fn registry() -> Registry {
-    Registry::open(std::path::Path::new(
-        &std::env::var("MACFORMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    ))
-    .expect("run `make artifacts` before cargo test")
-}
+use macformer::runtime::DeviceState;
 
 #[test]
 fn training_loop_end_to_end() {
-    let reg = registry();
+    let Some(reg) = registry_or_skip() else { return };
     let cfg = RunConfig {
         task: "translation".into(),
         variant: "softmax".into(),

@@ -1,0 +1,135 @@
+//! Minimal offline shim of `anyhow`: a string-backed error type plus the
+//! `anyhow!` / `bail!` / `ensure!` macros and the `Context` extension
+//! trait. Covers exactly the surface the `macformer` crate uses.
+
+use std::fmt;
+
+/// A string-backed dynamic error.
+///
+/// Deliberately does NOT implement `std::error::Error`, so the blanket
+/// `From<E: std::error::Error>` below does not collide with the
+/// reflexive `From<Error>` impl from core (same trick as upstream).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error (subset of upstream: context is prepended
+/// to the cause's message).
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/42")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!format!("{e}").is_empty());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        let e2: Result<()> = Err(anyhow!("inner")).context("outer");
+        assert_eq!(format!("{}", e2.unwrap_err()), "outer: inner");
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "not ok");
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "not ok");
+    }
+}

@@ -1,0 +1,66 @@
+//! Minimal offline shim of `libc`: exactly the `getrusage` surface used
+//! by `macformer::util::peak_rss_bytes`. Struct layout matches glibc on
+//! 64-bit Linux (two `timeval`s followed by fourteen `c_long` fields).
+
+#![allow(non_camel_case_types)]
+
+// This shim hardcodes the glibc/64-bit-Linux ABI. On any other target
+// the struct layout (and on Windows, the symbol itself) would be wrong
+// — fail the build loudly instead of corrupting memory at run time.
+#[cfg(not(target_os = "linux"))]
+compile_error!(
+    "the vendored libc shim only provides the Linux/glibc rusage layout; \
+     swap the real libc crate into rust/Cargo.toml for other targets"
+);
+
+pub type c_int = i32;
+pub type c_long = i64;
+
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct timeval {
+    pub tv_sec: c_long,
+    pub tv_usec: c_long,
+}
+
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct rusage {
+    pub ru_utime: timeval,
+    pub ru_stime: timeval,
+    pub ru_maxrss: c_long,
+    pub ru_ixrss: c_long,
+    pub ru_idrss: c_long,
+    pub ru_isrss: c_long,
+    pub ru_minflt: c_long,
+    pub ru_majflt: c_long,
+    pub ru_nswap: c_long,
+    pub ru_inblock: c_long,
+    pub ru_oublock: c_long,
+    pub ru_msgsnd: c_long,
+    pub ru_msgrcv: c_long,
+    pub ru_nsignals: c_long,
+    pub ru_nvcsw: c_long,
+    pub ru_nivcsw: c_long,
+}
+
+pub const RUSAGE_SELF: c_int = 0;
+
+extern "C" {
+    pub fn getrusage(who: c_int, usage: *mut rusage) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn getrusage_reports_positive_maxrss() {
+        // SAFETY: plain libc call with an out-param struct we own.
+        unsafe {
+            let mut ru: rusage = std::mem::zeroed();
+            assert_eq!(getrusage(RUSAGE_SELF, &mut ru), 0);
+            assert!(ru.ru_maxrss > 0);
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Minimal offline shim of `once_cell`: `sync::OnceCell` delegating to
+//! `std::sync::OnceLock` (available since Rust 1.70).
+
+pub mod sync {
+    /// Thread-safe cell which can be written to only once.
+    #[derive(Debug, Default)]
+    pub struct OnceCell<T>(std::sync::OnceLock<T>);
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> OnceCell<T> {
+            OnceCell(std::sync::OnceLock::new())
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            self.0.get()
+        }
+
+        pub fn set(&self, value: T) -> Result<(), T> {
+            self.0.set(value)
+        }
+
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.0.get_or_init(f)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::OnceCell;
+
+    #[test]
+    fn set_once() {
+        static CELL: OnceCell<u32> = OnceCell::new();
+        assert!(CELL.get().is_none());
+        assert!(CELL.set(7).is_ok());
+        assert!(CELL.set(8).is_err());
+        assert_eq!(*CELL.get().unwrap(), 7);
+    }
+}

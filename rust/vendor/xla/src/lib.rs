@@ -1,0 +1,205 @@
+//! Offline **API stub** of the vendored `xla` PJRT bindings.
+//!
+//! Exposes the exact type and method surface `macformer::runtime` is
+//! written against, but with no native XLA library behind it: every
+//! device entry point returns a descriptive `Err`. Callers gate on
+//! `PjRtClient::cpu()` failing and fall back to the pure-Rust host
+//! compute path (`macformer::fastpath` / `macformer::reference`), so
+//! builds, unit tests, property tests, and the host benches all work
+//! on machines without the PJRT plugin. Swapping the real bindings back
+//! in is a path change in `rust/Cargo.toml` — no call-site edits.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::rc::Rc;
+
+/// Error type mirroring the real bindings' error enum (message-only here).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT/XLA native runtime is not present in this build \
+         (offline xla stub); the host fastpath and reference kernels \
+         remain available"
+    ))
+}
+
+/// Element types of array literals (subset used by the runtime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+    U64,
+    Tuple,
+}
+
+/// Host types that map onto an [`ElementType`].
+pub trait NativeType: Copy + 'static {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+}
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+impl NativeType for u64 {
+    const TY: ElementType = ElementType::U64;
+}
+
+/// Handle to a PJRT client. `Rc`-backed like the real bindings, hence
+/// intentionally neither `Send` nor `Sync`.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _handle: Rc<()>,
+}
+
+impl PjRtClient {
+    /// In the stub there is no native plugin to load, so this always
+    /// fails; callers treat the error as "PJRT unavailable".
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn platform_version(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path:?})")))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over device buffers; generic over owned or borrowed
+    /// buffer slices like the real bindings.
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Dimensions of a (non-tuple) array literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side literal (array or tuple).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(unavailable("Literal::ty"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable("Literal::array_shape"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::decompose_tuple"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("PJRT"), "{msg}");
+    }
+}
