@@ -1,10 +1,12 @@
 //! Kernel explorer: inspect the Table-1 dot-product kernels, their
 //! Maclaurin expansions, and the RMF approximation quality — all in pure
-//! Rust (no PJRT), mirroring the paper\'s Definition 3 construction.
+//! Rust (no PJRT) through the typed `attn::Kernel` API, mirroring the
+//! paper's Definition 3 construction.
 //!
 //! Run with: `cargo run --release --example kernel_explorer -- [D] [t]`
 
-use macformer::reference::{maclaurin, rmf};
+use macformer::attn::{degree_distribution, Kernel};
+use macformer::reference::rmf;
 use macformer::util::rng::Rng;
 
 fn main() {
@@ -15,23 +17,23 @@ fn main() {
     // Table 1: coefficients
     println!("Table 1 — Maclaurin coefficients a_N (paper-order kernels)\n");
     print!("{:>8}", "N");
-    for k in maclaurin::KERNELS {
+    for k in Kernel::MACLAURIN {
         print!("{k:>12}");
     }
     println!();
     for n in 0..=8 {
         print!("{n:>8}");
-        for k in maclaurin::KERNELS {
-            print!("{:>12.6}", maclaurin::coefficient(k, n));
+        for k in Kernel::MACLAURIN {
+            print!("{:>12.6}", k.coefficient(n).expect("Table-1 kernel"));
         }
         println!();
     }
 
     // closed form vs truncated expansion at the probe point
     println!("\nK(t) at t = {t_probe}: closed form vs degree-8 truncation\n");
-    for k in maclaurin::KERNELS {
-        let exact = maclaurin::kernel_value(k, t_probe);
-        let trunc = maclaurin::truncated_kernel_value(k, t_probe, 8);
+    for k in Kernel::MACLAURIN {
+        let exact = k.value(t_probe).expect("Table-1 kernel");
+        let trunc = k.truncated_value(t_probe, 8).expect("Table-1 kernel");
         println!(
             "  {k:<6} exact {exact:>10.6}  series {trunc:>10.6}  |err| {:.2e}",
             (exact - trunc).abs()
@@ -46,9 +48,9 @@ fn main() {
     let y: Vec<f32> = (0..d).map(|_| rng.normal() * 0.25).collect();
     let t: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
     println!("  x.y = {t:.4}");
-    for k in maclaurin::KERNELS {
+    for k in Kernel::MACLAURIN {
         let est = rmf::mc_kernel_estimate(&mut rng, k, &x, &y, feat, 2.0, 8, 500);
-        let exact = maclaurin::truncated_kernel_value(k, t as f64, 8);
+        let exact = k.truncated_value(t as f64, 8).expect("Table-1 kernel");
         println!(
             "  {k:<6} E[phi(x).phi(y)] = {est:>9.5}  target {exact:>9.5}  rel err {:+.3}%",
             100.0 * (est - exact) / exact
@@ -57,7 +59,7 @@ fn main() {
 
     // degree distribution
     println!("\nDegree law P[N = n] (p = 2, truncated at 8):\n");
-    for (n, p) in maclaurin::degree_distribution(2.0, 8).iter().enumerate() {
+    for (n, p) in degree_distribution(2.0, 8).iter().enumerate() {
         println!("  N={n}: {:.4} {}", p, "*".repeat((p * 120.0) as usize));
     }
 }

@@ -1,20 +1,26 @@
 //! Bench E2+E3 — Fig 4a (log NMSE) and Fig 4b (log acceleration ratio) of
-//! RMFA_exp vs exact softmax attention, over the paper's (length, D) grid.
+//! RMFA vs exact softmax attention, over the paper's (length, D) grid.
 //!
 //! Backends (MACFORMER_BENCH_BACKEND):
-//!   host   (default) — the fastpath: FlatRmfMap + scoped-thread batched
-//!          attention kernels; no artifacts/PJRT needed. Also times the
-//!          seed reference path per cell (fast-vs-oracle speedup).
+//!   host   (default) — typed `attn` sessions over the `AttentionBackend`
+//!          dispatch: the host-fast tier per cell plus the reference tier
+//!          (fast-vs-oracle speedup); no artifacts/PJRT needed. Any
+//!          Table-1 kernel via MACFORMER_BENCH_KERNEL (default exp).
 //!   device — the original compiled-HLO path over PJRT (needs
-//!          `make artifacts`).
+//!          `make artifacts`; exp only).
 //!
 //! Shapes follow the paper: batch 16 x 8 heads, d = 64, preSBN eps 1e-12
 //! (device) / eps 1e-6 denominators (host).
-//! Knobs: MACFORMER_BENCH_LENGTHS / _FEATURES (csv), _REPEATS, _GROUPS,
-//! MACFORMER_THREADS.
+//! Knobs: MACFORMER_BENCH_KERNEL, MACFORMER_BENCH_LENGTHS / _FEATURES
+//! (csv), _REPEATS, _GROUPS, MACFORMER_THREADS.
 //!
 //! Run with: `cargo bench --bench fig4_rmfa_micro`
 
+use std::str::FromStr;
+
+use anyhow::anyhow;
+
+use macformer::attn::Kernel;
 use macformer::coordinator::microbench;
 use macformer::runtime::Registry;
 
@@ -33,8 +39,19 @@ fn main() -> anyhow::Result<()> {
     macformer::util::logging::init();
     let backend =
         std::env::var("MACFORMER_BENCH_BACKEND").unwrap_or_else(|_| "host".to_string());
+    let kernel_name =
+        std::env::var("MACFORMER_BENCH_KERNEL").unwrap_or_else(|_| "exp".to_string());
+    // typed parse: a typo'd kernel name is a clean error, never a panic
+    let kernel =
+        Kernel::from_str(&kernel_name).map_err(|e| anyhow!("MACFORMER_BENCH_KERNEL: {e}"))?;
     let repeats = env_usize("MACFORMER_BENCH_REPEATS", 3);
     if backend == "device" {
+        if kernel != Kernel::Exp {
+            anyhow::bail!(
+                "the device grid runs precompiled rmfa_exp artifacts; \
+                 MACFORMER_BENCH_KERNEL={kernel} is host-only (unset MACFORMER_BENCH_BACKEND)"
+            );
+        }
         let reg = Registry::open_default()?;
         let lengths = env_csv("MACFORMER_BENCH_LENGTHS", &reg.micro_lengths);
         let features = env_csv("MACFORMER_BENCH_FEATURES", &reg.micro_features);
@@ -52,11 +69,11 @@ fn main() -> anyhow::Result<()> {
     let features = env_csv("MACFORMER_BENCH_FEATURES", &[64, 128]);
     let groups = env_usize("MACFORMER_BENCH_GROUPS", 16 * 8);
     println!(
-        "=== E2/E3 / Fig 4 [host fastpath]: RMFA_exp vs softmax attention \
+        "=== E2/E3 / Fig 4 [host sessions]: RMFA_{kernel} vs softmax attention \
          (lengths {lengths:?}, D {features:?}, {repeats} repeats, {groups} batch x head problems, {} threads) ===",
         macformer::fastpath::parallel::num_threads()
     );
-    let cells = microbench::run_host_grid(&lengths, &features, repeats, 7, groups, 64);
+    let cells = microbench::run_host_grid(kernel, &lengths, &features, repeats, 7, groups, 64)?;
     println!("{}", microbench::render_host(&cells));
     std::fs::write("bench_fig4.json", microbench::host_to_json(&cells).to_string())?;
     println!("raw cells written to bench_fig4.json");

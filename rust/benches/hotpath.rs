@@ -1,10 +1,10 @@
 //! Bench §Perf — the hot paths, in two tiers:
 //!
-//! 1. **Host compute path** (always runs): the reference RMFA pipeline
-//!    (scalar per-problem `RmfMap::apply` + oracle linear attention,
-//!    single thread, as the oracle tier stands in this tree) vs the
-//!    fastpath (degree-grouped `FlatRmfMap` GEMMs + scoped-thread
-//!    batched linear attention) at the Fig-4 stress shape n=2048,
+//! 1. **Host compute path** (always runs): one `attn` spec built twice —
+//!    `Backend::Reference` (scalar per-problem oracle, single thread)
+//!    and `Backend::HostFast` (degree-grouped `FlatRmfMap` GEMMs +
+//!    scoped-thread batched linear attention) — both driven through the
+//!    `AttentionBackend` dispatch at the Fig-4 stress shape n=2048,
 //!    D=128. This is the fast-vs-oracle speedup tracked across PRs.
 //! 2. **Training loop** (needs `make artifacts` + a PJRT runtime):
 //!    per-step cost breakdown on the lra_text.mac_exp cell — batch
@@ -22,11 +22,11 @@
 
 use std::time::Instant;
 
+use macformer::attn::{AttentionSpec, Backend, Kernel};
 use macformer::config::RunConfig;
 use macformer::coordinator::{microbench, TaskData, Trainer};
-use macformer::fastpath::{self, FlatRmfMap};
+use macformer::fastpath;
 use macformer::metrics::Timing;
-use macformer::reference::rmf::RmfMap;
 use macformer::runtime::{DeviceState, Registry};
 use macformer::tensor::Tensor;
 use macformer::util::json::Value;
@@ -47,11 +47,12 @@ fn print_phase(name: &str, t: &Timing) {
     println!("{name:<22}: mean {:>9.4}s  min {:>9.4}s", t.mean(), t.min());
 }
 
-/// Host tier: the reference RMFA path vs the fastpath on one batched
-/// problem set, both timed min-over-`repeats` via the shared
-/// `microbench` helpers (no warm-up bias between the two). Returns the
-/// JSON report block.
-fn host_phases() -> Value {
+/// Host tier: one RMFA_exp spec built on the reference and host-fast
+/// backends, both driven through the `attn` session dispatch on one
+/// batched problem set and timed min-over-`repeats` via the shared
+/// `microbench::time_forward` helper (no warm-up bias between the two).
+/// Returns the JSON report block.
+fn host_phases() -> anyhow::Result<Value> {
     let n = env_usize("MACFORMER_BENCH_N", 2048);
     let feat = env_usize("MACFORMER_BENCH_FEATURES1", 128);
     let d = 64;
@@ -65,25 +66,23 @@ fn host_phases() -> Value {
     let q = Tensor::randn(&mut rng, &[groups, n, d], 0.5);
     let k = Tensor::randn(&mut rng, &[groups, n, d], 0.5);
     let v = Tensor::randn(&mut rng, &[groups, n, d], 1.0);
-    // score-scale inputs so phi products estimate exp(q.k / sqrt(d))
-    let input_scale = 1.0 / (d as f32).sqrt().sqrt();
-    let qs = q.scale(input_scale);
-    let ks = k.scale(input_scale);
-    let map = {
-        let mut map_rng = Rng::new(0xFEA7);
-        RmfMap::sample(&mut map_rng, "exp", feat, d, 2.0, 8)
-    };
-    let flat = FlatRmfMap::from(&map);
-    let eps = 1e-6f32;
+    // one spec, two tiers — the same map draw (seed) on both
+    let spec = AttentionSpec::new(Kernel::Exp)
+        .head_dim(d)
+        .num_features(feat)
+        .eps(1e-6)
+        .seed(0xFEA7);
+    let reference = spec.clone().backend(Backend::Reference).build()?;
+    let fast = spec.backend(Backend::HostFast).build()?;
 
-    let ref_t = microbench::reference_rmfa(&map, &qs, &ks, &v, eps, repeats);
-    let (_out, fast_t) = microbench::fastpath_rmfa(&flat, &qs, &ks, &v, eps, repeats);
+    let (_ref_out, ref_t) = microbench::time_forward(&reference, &q, &k, &v, repeats)?;
+    let (_out, fast_t) = microbench::time_forward(&fast, &q, &k, &v, repeats)?;
 
     let speedup = ref_t.min() / fast_t.min();
     print_phase("rmfa reference", &ref_t);
     print_phase("rmfa fastpath", &fast_t);
     println!("fastpath speedup      : x{speedup:.2} (reference min / fastpath min)");
-    Value::obj(vec![
+    Ok(Value::obj(vec![
         ("n", Value::num(n as f64)),
         ("D", Value::num(feat as f64)),
         ("d", Value::num(d as f64)),
@@ -100,7 +99,7 @@ fn host_phases() -> Value {
             ]),
         ),
         ("speedup_fastpath_vs_reference", Value::num(speedup)),
-    ])
+    ]))
 }
 
 /// Trainer tier: per-step phase breakdown over PJRT. Errors (no
@@ -181,7 +180,7 @@ fn main() -> anyhow::Result<()> {
     macformer::util::logging::init();
     let steps = env_usize("MACFORMER_BENCH_STEPS", 12);
     println!("=== §Perf hot path ===");
-    let host = host_phases();
+    let host = host_phases()?;
     let trainer = match trainer_phases(steps) {
         Ok(v) => v,
         Err(e) => {

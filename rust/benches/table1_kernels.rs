@@ -1,25 +1,25 @@
-//! Bench E1 — regenerate Table 1 and numerically validate every kernel\'s
-//! Maclaurin expansion against its closed form (the paper\'s two formula
-//! typos are caught by exactly this check; see reference::maclaurin).
+//! Bench E1 — regenerate Table 1 and numerically validate every kernel's
+//! Maclaurin expansion against its closed form (the paper's two formula
+//! typos are caught by exactly this check; see `attn::Kernel`).
 //!
 //! Run with: `cargo bench --bench table1_kernels`
 
-use macformer::reference::maclaurin::{
-    coefficient, degree_distribution, kernel_value, truncated_kernel_value, KERNELS,
-};
+use macformer::attn::{degree_distribution, Kernel};
 
 fn main() {
     println!("=== E1 / Table 1: dot-product kernels and Maclaurin coefficients ===\n");
     println!("{:<8}{:<28}{}", "K", "f(x.y)", "a_N (N = 0..6)");
     let forms = [
-        ("exp", "exp(x.y)"),
-        ("inv", "1/(1 - x.y)"),
-        ("log", "1 - log(1 - x.y)"),
-        ("trigh", "sinh(x.y) + cosh(x.y)"),
-        ("sqrt", "2 - sqrt(1 - x.y)"),
+        (Kernel::Exp, "exp(x.y)"),
+        (Kernel::Inv, "1/(1 - x.y)"),
+        (Kernel::Log, "1 - log(1 - x.y)"),
+        (Kernel::Trigh, "sinh(x.y) + cosh(x.y)"),
+        (Kernel::Sqrt, "2 - sqrt(1 - x.y)"),
     ];
     for (k, form) in forms {
-        let coeffs: Vec<String> = (0..=6).map(|n| format!("{:.4}", coefficient(k, n))).collect();
+        let coeffs: Vec<String> = (0..=6)
+            .map(|n| format!("{:.4}", k.coefficient(n).expect("Table-1 kernel")))
+            .collect();
         println!("{k:<8}{form:<28}{}", coeffs.join(" "));
     }
 
@@ -27,14 +27,14 @@ fn main() {
     println!("(degree 16 for |t| <= 0.6, 60 near the domain edge — inv/log");
     println!(" converge geometrically in |t|, so the edge needs more terms):");
     let mut all_ok = true;
-    for k in KERNELS {
+    for k in Kernel::MACLAURIN {
         let mut worst = 0.0f64;
         let mut i = 0;
         while i <= 28 {
             let t = -0.5 + i as f64 * 0.05;
             let degree = if t.abs() <= 0.6 { 16 } else { 60 };
-            let e = kernel_value(k, t);
-            let s = truncated_kernel_value(k, t, degree);
+            let e = k.value(t).expect("Table-1 kernel");
+            let s = k.truncated_value(t, degree).expect("Table-1 kernel");
             let rel = (e - s).abs() / e.abs().max(1.0);
             if rel > worst {
                 worst = rel;

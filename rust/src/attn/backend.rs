@@ -1,0 +1,368 @@
+//! [`AttentionBackend`] — the compute-tier trait every attention
+//! implementation plugs into, plus the three built-in tiers:
+//!
+//! * [`ReferenceBackend`] — the scalar oracle (`crate::reference`),
+//!   single thread, per-problem loops. Never optimized; the ground
+//!   truth the other tiers are proved against.
+//! * [`HostFastBackend`] — the engineered host tier
+//!   (`crate::fastpath`): degree-grouped GEMM feature maps and
+//!   scoped-thread batched kernels.
+//! * [`DeviceBackend`] — PJRT execution. On the vendored stub (or when
+//!   no per-shape artifacts are compiled) every op returns a clean
+//!   `Err` instead of panicking, and [`select`] auto-falls back to the
+//!   host fast path.
+//!
+//! All tensor arguments are batched `(g, n, d)` row-major; `g` is
+//! batch x heads. Sharding across problems is a backend concern.
+
+use anyhow::{anyhow, Result};
+
+use crate::fastpath;
+use crate::reference::attention as oracle;
+use crate::tensor::Tensor;
+
+use super::kernel::Kernel;
+use super::session::FeatureMap;
+use super::spec::Backend;
+
+/// One compute tier. Object-safe so sessions can hold `Box<dyn ...>`;
+/// future tiers (SIMD, sharded, remote) implement this same contract
+/// and are proved against [`ReferenceBackend`].
+pub trait AttentionBackend: Send + Sync {
+    /// Stable identifier for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Can this tier execute at all in the current build/environment?
+    fn available(&self) -> bool;
+
+    /// Exact softmax attention over `(g, n, d)` q/k and `(g, m, dv)` v.
+    fn softmax(&self, q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Result<Tensor>;
+
+    /// Quadratic kernelized attention (Definition 2) with a Table-1
+    /// kernel; scores are scaled by `1/sqrt(d)` internally.
+    fn kernelized(
+        &self,
+        kernel: Kernel,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        causal: bool,
+        eps: f32,
+    ) -> Result<Tensor>;
+
+    /// phi over a batched `(g, n, d)` tensor -> `(g, n, D)`. Inputs are
+    /// expected to be pre-scaled to score scale by the caller.
+    fn features(&self, map: &FeatureMap, x: &Tensor) -> Result<Tensor>;
+
+    /// Factored linear contraction over `(g, n, D)` phi maps.
+    fn linear(
+        &self,
+        phi_q: &Tensor,
+        phi_k: &Tensor,
+        v: &Tensor,
+        causal: bool,
+        eps: f32,
+    ) -> Result<Tensor>;
+
+    /// phi of a single pre-scaled row — the O(1)-per-token building
+    /// block of the streaming decode path.
+    fn phi_row(&self, map: &FeatureMap, x_scaled: &[f32]) -> Result<Vec<f32>>;
+}
+
+fn batched_dims(t: &Tensor, what: &str) -> Result<(usize, usize, usize)> {
+    if t.rank() != 3 {
+        return Err(anyhow!("{what}: expected a (g, n, d) tensor, got shape {:?}", t.shape));
+    }
+    Ok((t.shape[0], t.shape[1], t.shape[2]))
+}
+
+/// The scalar oracle tier: per-problem loops over `crate::reference`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    /// Run a single-problem kernel over every problem of a batched set.
+    fn per_problem(
+        g: usize,
+        out_shape: &[usize],
+        mut f: impl FnMut(usize) -> Tensor,
+    ) -> Tensor {
+        let mut out = Tensor::zeros(out_shape);
+        let stride = out_shape[1] * out_shape[2];
+        for gi in 0..g {
+            let one = f(gi);
+            out.data[gi * stride..(gi + 1) * stride].copy_from_slice(&one.data);
+        }
+        out
+    }
+}
+
+impl AttentionBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn available(&self) -> bool {
+        true
+    }
+
+    fn softmax(&self, q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Result<Tensor> {
+        let (g, n, _d) = batched_dims(q, "reference softmax q")?;
+        let (_, _, dv) = batched_dims(v, "reference softmax v")?;
+        Ok(Self::per_problem(g, &[g, n, dv], |gi| {
+            oracle::softmax_attention(&q.problem2(gi), &k.problem2(gi), &v.problem2(gi), causal)
+        }))
+    }
+
+    fn kernelized(
+        &self,
+        kernel: Kernel,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        causal: bool,
+        eps: f32,
+    ) -> Result<Tensor> {
+        kernel.value_fn()?; // reject the exact baseline with a clean error
+        let (g, n, _d) = batched_dims(q, "reference kernelized q")?;
+        let (_, _, dv) = batched_dims(v, "reference kernelized v")?;
+        Ok(Self::per_problem(g, &[g, n, dv], |gi| {
+            oracle::kernelized_attention(
+                kernel,
+                &q.problem2(gi),
+                &k.problem2(gi),
+                &v.problem2(gi),
+                causal,
+                eps,
+            )
+        }))
+    }
+
+    fn features(&self, map: &FeatureMap, x: &Tensor) -> Result<Tensor> {
+        let (g, n, _d) = batched_dims(x, "reference features x")?;
+        let feat = map.reference.num_features();
+        Ok(Self::per_problem(g, &[g, n, feat], |gi| {
+            map.reference.apply(&x.problem2(gi))
+        }))
+    }
+
+    fn linear(
+        &self,
+        phi_q: &Tensor,
+        phi_k: &Tensor,
+        v: &Tensor,
+        causal: bool,
+        eps: f32,
+    ) -> Result<Tensor> {
+        let (g, n, _feat) = batched_dims(phi_q, "reference linear phi_q")?;
+        let (_, _, dv) = batched_dims(v, "reference linear v")?;
+        Ok(Self::per_problem(g, &[g, n, dv], |gi| {
+            oracle::linear_attention(
+                &phi_q.problem2(gi),
+                &phi_k.problem2(gi),
+                &v.problem2(gi),
+                causal,
+                eps,
+            )
+        }))
+    }
+
+    fn phi_row(&self, map: &FeatureMap, x_scaled: &[f32]) -> Result<Vec<f32>> {
+        Ok(map.reference.apply_row(x_scaled))
+    }
+}
+
+/// The engineered host tier: `crate::fastpath` batched kernels.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HostFastBackend;
+
+impl AttentionBackend for HostFastBackend {
+    fn name(&self) -> &'static str {
+        // matches Backend::HostFast's Display/FromStr token, so
+        // backend_name() round-trips through Backend::from_str
+        "host"
+    }
+
+    fn available(&self) -> bool {
+        true
+    }
+
+    fn softmax(&self, q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Result<Tensor> {
+        batched_dims(q, "host_fast softmax q")?;
+        Ok(fastpath::softmax_attention_batched(q, k, v, causal))
+    }
+
+    fn kernelized(
+        &self,
+        kernel: Kernel,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        causal: bool,
+        eps: f32,
+    ) -> Result<Tensor> {
+        kernel.value_fn()?; // reject the exact baseline with a clean error
+        batched_dims(q, "host_fast kernelized q")?;
+        Ok(fastpath::kernelized_attention_batched(kernel, q, k, v, causal, eps))
+    }
+
+    fn features(&self, map: &FeatureMap, x: &Tensor) -> Result<Tensor> {
+        batched_dims(x, "host_fast features x")?;
+        Ok(fastpath::apply_map_batched(&map.flat, x))
+    }
+
+    fn linear(
+        &self,
+        phi_q: &Tensor,
+        phi_k: &Tensor,
+        v: &Tensor,
+        causal: bool,
+        eps: f32,
+    ) -> Result<Tensor> {
+        batched_dims(phi_q, "host_fast linear phi_q")?;
+        Ok(fastpath::linear_attention_batched(phi_q, phi_k, v, causal, eps))
+    }
+
+    fn phi_row(&self, map: &FeatureMap, x_scaled: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; map.flat.num_features()];
+        map.flat.apply_into(x_scaled, 1, &mut out);
+        Ok(out)
+    }
+}
+
+/// PJRT device execution.
+///
+/// Today this tier serves only the precompiled per-shape microbench
+/// modules (`macformer microbench --backend device`); generic-shape
+/// execution needs an artifact story a later PR supplies. Every trait
+/// op therefore returns a descriptive `Err` — on the vendored stub
+/// because no runtime exists, and on a real PJRT build because no
+/// artifact matches an arbitrary `(g, n, d)` problem. [`select`] never
+/// auto-picks it.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DeviceBackend;
+
+impl DeviceBackend {
+    /// Why this tier cannot run the requested op right now.
+    fn unavailable(&self, op: &str) -> anyhow::Error {
+        match crate::runtime::client::describe() {
+            Err(e) => anyhow!(
+                "device backend cannot run {op}: PJRT runtime unavailable ({e}); \
+                 use Backend::HostFast or Backend::Auto"
+            ),
+            Ok(desc) => anyhow!(
+                "device backend cannot run {op}: PJRT present ({desc}) but generic-shape \
+                 attention needs compiled artifacts — run `macformer microbench --backend \
+                 device` for the precompiled grid, or use Backend::HostFast"
+            ),
+        }
+    }
+
+    /// Could the device tier execute arbitrary-shape sessions? Always
+    /// false until a generic artifact/compile path lands.
+    pub fn can_execute() -> bool {
+        false
+    }
+}
+
+impl AttentionBackend for DeviceBackend {
+    fn name(&self) -> &'static str {
+        "device"
+    }
+
+    fn available(&self) -> bool {
+        crate::runtime::client::describe().is_ok()
+    }
+
+    fn softmax(&self, _q: &Tensor, _k: &Tensor, _v: &Tensor, _causal: bool) -> Result<Tensor> {
+        Err(self.unavailable("softmax attention"))
+    }
+
+    fn kernelized(
+        &self,
+        _kernel: Kernel,
+        _q: &Tensor,
+        _k: &Tensor,
+        _v: &Tensor,
+        _causal: bool,
+        _eps: f32,
+    ) -> Result<Tensor> {
+        Err(self.unavailable("kernelized attention"))
+    }
+
+    fn features(&self, _map: &FeatureMap, _x: &Tensor) -> Result<Tensor> {
+        Err(self.unavailable("the RMF feature map"))
+    }
+
+    fn linear(
+        &self,
+        _phi_q: &Tensor,
+        _phi_k: &Tensor,
+        _v: &Tensor,
+        _causal: bool,
+        _eps: f32,
+    ) -> Result<Tensor> {
+        Err(self.unavailable("linear attention"))
+    }
+
+    fn phi_row(&self, _map: &FeatureMap, _x_scaled: &[f32]) -> Result<Vec<f32>> {
+        Err(self.unavailable("streaming decode"))
+    }
+}
+
+/// Resolve a backend preference to a concrete tier. `Auto` picks the
+/// device tier only when it can actually execute generic shapes (never,
+/// today) and otherwise the host fast path — so `Auto` is always safe.
+pub fn select(choice: Backend) -> Box<dyn AttentionBackend> {
+    match choice {
+        Backend::Reference => Box::new(ReferenceBackend),
+        Backend::HostFast => Box::new(HostFastBackend),
+        Backend::Device => Box::new(DeviceBackend),
+        Backend::Auto => {
+            if DeviceBackend::can_execute() {
+                Box::new(DeviceBackend)
+            } else {
+                Box::new(HostFastBackend)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_selects_a_usable_backend() {
+        let b = select(Backend::Auto);
+        assert!(b.available(), "auto must resolve to a usable tier");
+        assert_eq!(b.name(), "host");
+    }
+
+    #[test]
+    fn backend_names_round_trip_through_from_str() {
+        use std::str::FromStr;
+        for choice in [Backend::Reference, Backend::HostFast, Backend::Device] {
+            let tier = select(choice);
+            assert_eq!(Backend::from_str(tier.name()), Ok(choice), "{choice}");
+        }
+    }
+
+    #[test]
+    fn device_ops_error_cleanly() {
+        let dev = DeviceBackend;
+        let t = Tensor::zeros(&[1, 2, 3]);
+        let err = dev.softmax(&t, &t, &t, false).unwrap_err();
+        assert!(err.to_string().contains("device backend"), "{err}");
+    }
+
+    #[test]
+    fn kernelized_rejects_softmax_kernel() {
+        let t = Tensor::zeros(&[1, 2, 3]);
+        let tiers: [&dyn AttentionBackend; 2] = [&ReferenceBackend, &HostFastBackend];
+        for b in tiers {
+            let err = b.kernelized(Kernel::Softmax, &t, &t, &t, false, 0.0).unwrap_err();
+            assert!(err.to_string().contains("no Maclaurin expansion"), "{err}");
+        }
+    }
+}

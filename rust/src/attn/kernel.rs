@@ -1,0 +1,322 @@
+//! The `Kernel` enum — the single typed home of the paper's Table-1
+//! dot-product kernels (plus the exact-softmax baseline).
+//!
+//! This replaces the old stringly-typed `&str` kernel parameters that
+//! threaded `"exp"`/`"inv"`/... through every attention entry point and
+//! `panic!`ed on typos. Parsing is total (`FromStr` returns `Err`, never
+//! panics) and the Maclaurin-series accessors return `Result` because
+//! [`Kernel::Softmax`] — the exact-attention baseline — has no feature
+//! expansion.
+//!
+//! ```
+//! use std::str::FromStr;
+//! use macformer::attn::Kernel;
+//!
+//! assert_eq!(Kernel::from_str("inv"), Ok(Kernel::Inv));
+//! assert!(Kernel::from_str("bogus").is_err());
+//! assert_eq!(Kernel::Exp.to_string(), "exp");
+//! // Table 1: a_3 of exp is 1/3! = 1/6
+//! assert_eq!(Kernel::Exp.coefficient(3).unwrap(), 1.0 / 6.0);
+//! // the exact baseline has no Maclaurin series
+//! assert!(Kernel::Softmax.coefficient(0).is_err());
+//! ```
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Truncation degree used by the static AOT lowering (see python side).
+pub const DEFAULT_MAX_DEGREE: usize = 8;
+
+/// A dot-product kernel K(q.k / sqrt(d)): the five Maclaurin kernels of
+/// Table 1 (paper order) plus the exact-softmax baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kernel {
+    /// exp(t) — the softmax numerator; RMFA_exp approximates softmax.
+    Exp,
+    /// 1 / (1 - t).
+    Inv,
+    /// 1 - ln(1 - t).
+    Log,
+    /// sinh(t) + cosh(t) (= exp(t), but with its own Table-1 row).
+    Trigh,
+    /// 2 - sqrt(1 - t).
+    Sqrt,
+    /// Exact softmax attention — the quadratic baseline, no feature map.
+    Softmax,
+}
+
+/// A kernel operation needed a Maclaurin expansion that does not exist.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NoMaclaurinSeries(pub Kernel);
+
+impl fmt::Display for NoMaclaurinSeries {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "kernel {:?} ({}) has no Maclaurin expansion — it is the exact \
+             baseline, not a Table-1 feature kernel",
+            self.0, self.0
+        )
+    }
+}
+
+impl std::error::Error for NoMaclaurinSeries {}
+
+/// `Kernel::from_str` failed: the name is not a known kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseKernelError {
+    got: String,
+}
+
+impl fmt::Display for ParseKernelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown kernel {:?}; expected one of: exp, inv, log, trigh, sqrt, softmax",
+            self.got
+        )
+    }
+}
+
+impl std::error::Error for ParseKernelError {}
+
+impl FromStr for Kernel {
+    type Err = ParseKernelError;
+
+    fn from_str(s: &str) -> Result<Kernel, ParseKernelError> {
+        match s {
+            "exp" => Ok(Kernel::Exp),
+            "inv" => Ok(Kernel::Inv),
+            "log" => Ok(Kernel::Log),
+            "trigh" => Ok(Kernel::Trigh),
+            "sqrt" => Ok(Kernel::Sqrt),
+            "softmax" => Ok(Kernel::Softmax),
+            other => Err(ParseKernelError { got: other.to_string() }),
+        }
+    }
+}
+
+impl fmt::Display for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // pad() so width specifiers ({:<8}) align bench tables
+        f.pad(self.name())
+    }
+}
+
+fn factorial(n: usize) -> f64 {
+    (1..=n).map(|i| i as f64).product()
+}
+
+fn double_factorial(n: i64) -> f64 {
+    if n <= 0 {
+        return 1.0;
+    }
+    let mut out = 1.0;
+    let mut k = n;
+    while k > 1 {
+        out *= k as f64;
+        k -= 2;
+    }
+    out
+}
+
+impl Kernel {
+    /// The five Maclaurin kernels of Table 1, paper order.
+    pub const MACLAURIN: [Kernel; 5] =
+        [Kernel::Exp, Kernel::Inv, Kernel::Log, Kernel::Trigh, Kernel::Sqrt];
+
+    /// Every kernel, Table-1 order then the exact baseline.
+    pub const ALL: [Kernel; 6] = [
+        Kernel::Exp,
+        Kernel::Inv,
+        Kernel::Log,
+        Kernel::Trigh,
+        Kernel::Sqrt,
+        Kernel::Softmax,
+    ];
+
+    /// The canonical (parseable) name — inverse of `FromStr`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Exp => "exp",
+            Kernel::Inv => "inv",
+            Kernel::Log => "log",
+            Kernel::Trigh => "trigh",
+            Kernel::Sqrt => "sqrt",
+            Kernel::Softmax => "softmax",
+        }
+    }
+
+    /// Does this kernel have a Maclaurin feature expansion (Table 1)?
+    pub fn has_maclaurin(self) -> bool {
+        !matches!(self, Kernel::Softmax)
+    }
+
+    /// a_N: the N-th Maclaurin coefficient.
+    ///
+    /// Matches the paper's Table 1 with the two typos fixed (log:
+    /// 1/max(1,N); sqrt: double factorial (2N-3)!!) — see
+    /// `python/compile/maclaurin.py` for the derivation. `Err` for
+    /// [`Kernel::Softmax`], which has no expansion.
+    pub fn coefficient(self, n: usize) -> Result<f64, NoMaclaurinSeries> {
+        match self {
+            Kernel::Exp | Kernel::Trigh => Ok(1.0 / factorial(n)),
+            Kernel::Inv => Ok(1.0),
+            Kernel::Log => Ok(if n == 0 { 1.0 } else { 1.0 / n as f64 }),
+            Kernel::Sqrt => Ok(if n == 0 {
+                1.0
+            } else {
+                double_factorial(2 * n as i64 - 3) / (2f64.powi(n as i32) * factorial(n))
+            }),
+            Kernel::Softmax => Err(NoMaclaurinSeries(self)),
+        }
+    }
+
+    /// Closed-form K as a plain function pointer, so hot loops resolve
+    /// the kernel once instead of matching per score element. `Err` for
+    /// [`Kernel::Softmax`] (exact attention does not go through a
+    /// pointwise kernel weight).
+    pub fn value_fn(self) -> Result<fn(f64) -> f64, NoMaclaurinSeries> {
+        match self {
+            Kernel::Exp | Kernel::Trigh => Ok(f64::exp),
+            Kernel::Inv => Ok(|t| 1.0 / (1.0 - t)),
+            Kernel::Log => Ok(|t| 1.0 - (1.0 - t).ln()),
+            Kernel::Sqrt => Ok(|t| 2.0 - (1.0 - t).sqrt()),
+            Kernel::Softmax => Err(NoMaclaurinSeries(self)),
+        }
+    }
+
+    /// Closed-form K(t).
+    pub fn value(self, t: f64) -> Result<f64, NoMaclaurinSeries> {
+        Ok(self.value_fn()?(t))
+    }
+
+    /// sum_{N=0}^{max_degree} a_N t^N.
+    pub fn truncated_value(self, t: f64, max_degree: usize) -> Result<f64, NoMaclaurinSeries> {
+        let mut acc = 0.0;
+        let mut tn = 1.0;
+        for n in 0..=max_degree {
+            acc += self.coefficient(n)? * tn;
+            tn *= t;
+        }
+        Ok(acc)
+    }
+
+    /// sqrt(a_N * p^(N+1)): the phi_i prefactor from Definition 3.
+    pub fn feature_scale(self, degree: usize, p: f64) -> Result<f64, NoMaclaurinSeries> {
+        Ok((self.coefficient(degree)? * p.powi(degree as i32 + 1)).sqrt())
+    }
+}
+
+/// P[N = eta] over the truncated window (renormalized geometric law) —
+/// kernel-independent, shared by every RMF map.
+pub fn degree_distribution(p: f64, max_degree: usize) -> Vec<f64> {
+    assert!(p > 1.0, "p must be > 1");
+    let raw: Vec<f64> = (0..=max_degree).map(|e| p.powi(-(e as i32 + 1))).collect();
+    let z: f64 = raw.iter().sum();
+    raw.into_iter().map(|x| x / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_str_round_trips_and_never_panics() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::from_str(k.name()), Ok(k));
+            assert_eq!(k.to_string(), k.name());
+        }
+        for bad in ["bogus", "", "EXP", "exp ", "soft-max"] {
+            let e = Kernel::from_str(bad).unwrap_err();
+            assert!(e.to_string().contains("unknown kernel"), "{e}");
+        }
+    }
+
+    #[test]
+    fn softmax_has_no_series() {
+        assert!(Kernel::Softmax.coefficient(0).is_err());
+        assert!(Kernel::Softmax.value(0.3).is_err());
+        assert!(Kernel::Softmax.value_fn().is_err());
+        assert!(Kernel::Softmax.feature_scale(2, 2.0).is_err());
+        assert!(!Kernel::Softmax.has_maclaurin());
+        for k in Kernel::MACLAURIN {
+            assert!(k.has_maclaurin());
+        }
+    }
+
+    #[test]
+    fn exp_coefficients_are_inverse_factorials() {
+        assert_eq!(Kernel::Exp.coefficient(0).unwrap(), 1.0);
+        assert_eq!(Kernel::Exp.coefficient(3).unwrap(), 1.0 / 6.0);
+        assert_eq!(Kernel::Trigh.coefficient(4).unwrap(), 1.0 / 24.0);
+    }
+
+    #[test]
+    fn all_coefficients_nonnegative() {
+        for k in Kernel::MACLAURIN {
+            for n in 0..=12 {
+                assert!(k.coefficient(n).unwrap() >= 0.0, "{k} a_{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn expansions_match_closed_forms() {
+        // On |t| <= 0.5 a degree-16 truncation must be within 1e-3 of the
+        // closed form for every kernel.
+        for k in Kernel::MACLAURIN {
+            for i in 0..=20 {
+                let t = -0.5 + i as f64 * 0.05;
+                let exact = k.value(t).unwrap();
+                let series = k.truncated_value(t, 16).unwrap();
+                assert!(
+                    (exact - series).abs() < 1e-3 * exact.abs().max(1.0),
+                    "{k}(t={t}): closed {exact} vs series {series}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_coefficient_uses_double_factorial() {
+        // a_4 of 2-sqrt(1-t) is 5!!/2^4/4! = 15/384, NOT the paper's
+        // max(1, 2N-3)/(2^N N!) = 5/384 — the series test above would fail
+        // with the paper's literal formula.
+        assert!((Kernel::Sqrt.coefficient(4).unwrap() - 15.0 / 384.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degree_distribution_sums_to_one() {
+        for p in [1.5, 2.0, 4.0] {
+            let d = degree_distribution(p, 8);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            // monotone decreasing
+            for w in d.windows(2) {
+                assert!(w[0] > w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn geometric_law_ratios() {
+        let d = degree_distribution(2.0, 8);
+        for w in d.windows(2) {
+            assert!((w[0] / w[1] - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn scale_squared_times_prob_recovers_coefficient() {
+        // E[a_N p^{N+1} * P[N]] telescopes back to a_N (untruncated law):
+        // scale^2 * p^-(N+1) == a_N.
+        for k in Kernel::MACLAURIN {
+            for n in 0..=6 {
+                let s = k.feature_scale(n, 2.0).unwrap();
+                let back = s * s * 2f64.powi(-(n as i32 + 1));
+                assert!((back - k.coefficient(n).unwrap()).abs() < 1e-12);
+            }
+        }
+    }
+}

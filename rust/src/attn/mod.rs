@@ -1,0 +1,100 @@
+//! The unified typed attention engine — the single public API for every
+//! way this crate runs attention.
+//!
+//! Macformer's core claim is one mechanism (RMFA + ppSBN) instantiated
+//! over many dot-product kernels and backends. This module is that
+//! claim as an API: a typed [`Kernel`] enum instead of stringly-typed
+//! `"exp"`-style parameters, an [`AttentionSpec`] builder, an
+//! [`AttentionBackend`] trait with three tiers, and an
+//! [`AttentionSession`] that owns one feature-map draw and exposes both
+//! batched `forward()` and O(1)-per-token streaming decode.
+//!
+//! # Tier contract
+//!
+//! | tier | type | job |
+//! |------|------|-----|
+//! | oracle | [`ReferenceBackend`] | scalar, single-thread mirrors of the paper's math (`crate::reference`); never optimized |
+//! | fast | [`HostFastBackend`] | same math, engineered for throughput (`crate::fastpath`); proved against the oracle |
+//! | device | [`DeviceBackend`] | PJRT execution; gates itself off with clean `Err`s on the stub build |
+//!
+//! [`Backend::Auto`] resolves to the best tier that can actually
+//! execute (today: the host fast path). Every future backend (SIMD,
+//! sharded, batching servers) implements [`AttentionBackend`] and plugs
+//! into the same sessions.
+//!
+//! # Migration from the old free functions
+//!
+//! | old (stringly-typed, panics on typos) | new |
+//! |---|---|
+//! | `maclaurin::coefficient("exp", n)` | [`Kernel::Exp`]`.coefficient(n)?` |
+//! | `maclaurin::kernel_value("inv", t)` | [`Kernel::Inv`]`.value(t)?` |
+//! | `maclaurin::truncated_kernel_value(k, t, deg)` | `kernel.truncated_value(t, deg)?` |
+//! | `maclaurin::feature_scale(k, n, p)` | `kernel.feature_scale(n, p)?` |
+//! | `maclaurin::KERNELS` | [`Kernel::MACLAURIN`] |
+//! | `maclaurin::degree_distribution(p, deg)` | [`degree_distribution`] |
+//! | `RmfMap::sample(rng, "exp", ..)` | `RmfMap::sample(rng, Kernel::Exp, ..)` (or let a session own the draw) |
+//! | `reference::attention::kernelized_attention("exp", ..)` | [`AttentionSpec::new`]`(Kernel::Exp).build()?.forward_exact(..)` |
+//! | `fastpath::kernelized_attention_batched("exp", ..)` | session with [`Backend::HostFast`], `forward_exact(..)` |
+//! | hand-rolled `phi_q`/`phi_k` + `linear_attention(..)` | `session.forward(..)` |
+//! | (not expressible before) O(1)-per-token decode | [`AttentionSession::begin_decode`] + [`CausalState::append_token`] |
+//!
+//! Kernel parsing never panics: `Kernel::from_str("bogus")` is a plain
+//! `Err`, so CLI surfaces report bad `--kernel` values cleanly.
+//!
+//! # Batched forward
+//!
+//! ```
+//! use macformer::attn::{AttentionSpec, Backend, Kernel};
+//! use macformer::tensor::Tensor;
+//! use macformer::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(7);
+//! // 2 problems (batch x heads), 6 tokens, head_dim 4
+//! let q = Tensor::randn(&mut rng, &[2, 6, 4], 0.5);
+//! let k = Tensor::randn(&mut rng, &[2, 6, 4], 0.5);
+//! let v = Tensor::randn(&mut rng, &[2, 6, 4], 1.0);
+//!
+//! let session = AttentionSpec::new(Kernel::Inv)
+//!     .head_dim(4)
+//!     .num_features(32)
+//!     .seed(42)
+//!     .backend(Backend::HostFast)
+//!     .build()
+//!     .unwrap();
+//! let out = session.forward(&q, &k, &v).unwrap();
+//! assert_eq!(out.shape, vec![2, 6, 4]);
+//! ```
+//!
+//! # Streaming decode
+//!
+//! ```
+//! use macformer::attn::{AttentionSpec, Kernel};
+//!
+//! let session = AttentionSpec::new(Kernel::Exp)
+//!     .head_dim(2)
+//!     .num_features(16)
+//!     .causal(true)
+//!     .build()
+//!     .unwrap();
+//! let mut state = session.begin_decode(1).unwrap();
+//! // one (q, k, v) row per generated token; O(1) work each
+//! let o0 = state.append_token(&[0.1, -0.2], &[0.3, 0.0], &[1.0]).unwrap();
+//! let o1 = state.append_token(&[0.0, 0.2], &[-0.1, 0.1], &[2.0]).unwrap();
+//! assert_eq!((o0.len(), o1.len(), state.len()), (1, 1, 2));
+//! // the first token can only attend to itself (up to the eps stabilizer)
+//! assert!((o0[0] - 1.0).abs() < 1e-3);
+//! ```
+
+pub mod backend;
+pub mod kernel;
+pub mod session;
+pub mod spec;
+
+pub use backend::{
+    select, AttentionBackend, DeviceBackend, HostFastBackend, ReferenceBackend,
+};
+pub use kernel::{
+    degree_distribution, Kernel, NoMaclaurinSeries, ParseKernelError, DEFAULT_MAX_DEGREE,
+};
+pub use session::{AttentionSession, CausalState, FeatureMap};
+pub use spec::{AttentionSpec, Backend, ParseBackendError};

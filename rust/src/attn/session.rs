@@ -1,0 +1,398 @@
+//! [`AttentionSession`] — a built attention configuration that owns one
+//! RMF feature-map draw across all its calls, plus [`CausalState`], the
+//! O(1)-per-token streaming decode state.
+//!
+//! A session is the unit of determinism: the map is sampled exactly
+//! once (from `spec.seed`) at build time, so repeated `forward()` calls
+//! — and the streaming decode path — all see the same features. The
+//! batched and streaming causal paths are proved equal by
+//! `tests/attn_api.rs`.
+
+use std::borrow::Cow;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fastpath::FlatRmfMap;
+use crate::reference::rmf::RmfMap;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::backend::{select, AttentionBackend};
+use super::kernel::Kernel;
+use super::spec::AttentionSpec;
+
+/// The session's single feature-map draw, in both layouts: the
+/// reference `RmfMap` (scalar oracle) and the degree-grouped
+/// `FlatRmfMap` (GEMM layout). The two are bit-for-bit equivalent, so
+/// every backend sees the same features.
+pub struct FeatureMap {
+    /// Scalar per-feature layout (`crate::reference::rmf`).
+    pub reference: RmfMap,
+    /// Degree-grouped GEMM layout (`crate::fastpath::flat_rmf`).
+    pub flat: FlatRmfMap,
+}
+
+/// A built attention configuration: spec + resolved backend + (for
+/// Table-1 kernels) the one feature-map draw it owns.
+pub struct AttentionSession {
+    spec: AttentionSpec,
+    backend: Box<dyn AttentionBackend>,
+    map: Option<FeatureMap>,
+}
+
+impl AttentionSession {
+    /// Build from a validated spec (called by [`AttentionSpec::build`]).
+    pub(crate) fn build(spec: AttentionSpec) -> Result<AttentionSession> {
+        let backend = select(spec.backend);
+        let map = if spec.kernel.has_maclaurin() {
+            let mut rng = Rng::new(spec.seed);
+            let reference = RmfMap::sample(
+                &mut rng,
+                spec.kernel,
+                spec.num_features,
+                spec.head_dim,
+                spec.p,
+                spec.max_degree,
+            );
+            let flat = FlatRmfMap::from(&reference);
+            Some(FeatureMap { reference, flat })
+        } else {
+            None
+        };
+        Ok(AttentionSession { spec, backend, map })
+    }
+
+    /// The spec this session was built from.
+    pub fn spec(&self) -> &AttentionSpec {
+        &self.spec
+    }
+
+    /// Name of the resolved backend tier (`Auto` is resolved at build).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The session's feature-map draw (`None` for `Kernel::Softmax`).
+    pub fn feature_map(&self) -> Option<&FeatureMap> {
+        self.map.as_ref()
+    }
+
+    /// `d^(-1/4)`: inputs are scaled by this before phi so that
+    /// `phi(q') . phi(k')` estimates `K(q.k / sqrt(d))` — the kernel at
+    /// attention-score scale.
+    fn input_scale(&self, d: usize) -> f32 {
+        1.0 / (d as f32).sqrt().sqrt()
+    }
+
+    fn checked_inputs<'t>(
+        &self,
+        q: &'t Tensor,
+        k: &'t Tensor,
+        v: &'t Tensor,
+    ) -> Result<(Cow<'t, Tensor>, Cow<'t, Tensor>, Cow<'t, Tensor>, bool)> {
+        let promote = |t: &'t Tensor, what: &str| -> Result<Cow<'t, Tensor>> {
+            match t.rank() {
+                3 => Ok(Cow::Borrowed(t)),
+                2 => Ok(Cow::Owned(Tensor::from_vec(
+                    &[1, t.shape[0], t.shape[1]],
+                    t.data.clone(),
+                ))),
+                r => Err(anyhow!("{what}: expected rank 2 or 3, got rank {r} ({:?})", t.shape)),
+            }
+        };
+        let was_2d = q.rank() == 2;
+        let q3 = promote(q, "forward q")?;
+        let k3 = promote(k, "forward k")?;
+        let v3 = promote(v, "forward v")?;
+        let (g, n, d) = (q3.shape[0], q3.shape[1], q3.shape[2]);
+        let (gk, m, dk) = (k3.shape[0], k3.shape[1], k3.shape[2]);
+        let (gv, mv, _dv) = (v3.shape[0], v3.shape[1], v3.shape[2]);
+        if (g, d) != (gk, dk) {
+            bail!("forward: q {:?} and k {:?} disagree on (g, d)", q3.shape, k3.shape);
+        }
+        if (gk, m) != (gv, mv) {
+            bail!("forward: k {:?} and v {:?} disagree on (g, m)", k3.shape, v3.shape);
+        }
+        if self.spec.causal && n != m {
+            bail!(
+                "forward: causal attention needs n == m (one prefix per position), \
+                 got n = {n}, m = {m}"
+            );
+        }
+        if self.spec.kernel.has_maclaurin() && d != self.spec.head_dim {
+            bail!(
+                "forward: this session's feature map was sampled for head_dim = {}, \
+                 got inputs with d = {d}",
+                self.spec.head_dim
+            );
+        }
+        Ok((q3, k3, v3, was_2d))
+    }
+
+    fn demote(out: Tensor, was_2d: bool) -> Tensor {
+        if was_2d {
+            let (n, dv) = (out.shape[1], out.shape[2]);
+            Tensor::from_vec(&[n, dv], out.data)
+        } else {
+            out
+        }
+    }
+
+    /// Run attention on `(g, n, d)` q/k and `(g, m, dv)` v (rank-2
+    /// single-problem inputs are promoted to `g = 1` and the output
+    /// demoted back).
+    ///
+    /// * `Kernel::Softmax` — exact attention.
+    /// * Table-1 kernels — the linear RMFA path: inputs are scaled to
+    ///   score scale, mapped through the session's phi draw, and
+    ///   contracted via running `(S, z)` state (O(n) total).
+    pub fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
+        let (q3, k3, v3, was_2d) = self.checked_inputs(q, k, v)?;
+        let out = match self.spec.kernel {
+            Kernel::Softmax => self.backend.softmax(&q3, &k3, &v3, self.spec.causal)?,
+            _ => {
+                let map = self.map.as_ref().expect("Maclaurin session always has a map");
+                let scale = self.input_scale(q3.shape[2]);
+                let qs = q3.scale(scale);
+                let ks = k3.scale(scale);
+                let phi_q = self.backend.features(map, &qs)?;
+                let phi_k = self.backend.features(map, &ks)?;
+                self.backend.linear(&phi_q, &phi_k, &v3, self.spec.causal, self.spec.eps)?
+            }
+        };
+        Ok(Self::demote(out, was_2d))
+    }
+
+    /// The quadratic oracle this session's `forward` approximates:
+    /// exact softmax for `Kernel::Softmax`, otherwise Definition-2
+    /// kernelized attention with the session's kernel (O(n^2)). Useful
+    /// for NMSE measurement.
+    pub fn forward_exact(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
+        let (q3, k3, v3, was_2d) = self.checked_inputs(q, k, v)?;
+        let out = match self.spec.kernel {
+            Kernel::Softmax => self.backend.softmax(&q3, &k3, &v3, self.spec.causal)?,
+            kernel => {
+                self.backend
+                    .kernelized(kernel, &q3, &k3, &v3, self.spec.causal, self.spec.eps)?
+            }
+        };
+        Ok(Self::demote(out, was_2d))
+    }
+
+    /// Start an O(1)-per-token streaming decode for one problem (one
+    /// head) producing `dv`-dimensional outputs. Requires a causal
+    /// session with a Table-1 kernel; matches the batched causal
+    /// `forward()` token-for-token.
+    pub fn begin_decode(&self, dv: usize) -> Result<CausalState<'_>> {
+        if !self.spec.causal {
+            bail!(
+                "begin_decode: streaming decode is causal by construction; build the \
+                 session with .causal(true) so batched and streaming outputs agree"
+            );
+        }
+        if !self.spec.kernel.has_maclaurin() {
+            bail!(
+                "begin_decode: kernel {} has no feature map, so no O(1) running-state \
+                 decode exists (exact softmax needs the full key/value history)",
+                self.spec.kernel
+            );
+        }
+        if dv == 0 {
+            bail!("begin_decode: dv must be > 0");
+        }
+        // Surface device-tier unavailability at decode start, not on the
+        // first token.
+        let map = self.map.as_ref().expect("Maclaurin session always has a map");
+        let probe = vec![0.0f32; self.spec.head_dim];
+        self.backend.phi_row(map, &probe)?;
+        let feat = map.reference.num_features();
+        Ok(CausalState {
+            session: self,
+            dv,
+            s: vec![0.0f32; feat * dv],
+            z: vec![0.0f32; feat],
+            q_scaled: vec![0.0f32; self.spec.head_dim],
+            k_scaled: vec![0.0f32; self.spec.head_dim],
+            len: 0,
+        })
+    }
+}
+
+/// Running `(S, z)` decode state: `S = sum_j phi(k_j) v_j^T` (feat x dv)
+/// and `z = sum_j phi(k_j)`. Each [`CausalState::append_token`] folds
+/// one `(q, k, v)` row in and emits that position's attention output in
+/// O(D * dv) time and O(D * dv) memory — independent of the sequence
+/// length, the linear-attention decoding story of Performer/RFA.
+pub struct CausalState<'s> {
+    session: &'s AttentionSession,
+    dv: usize,
+    /// feat x dv running value accumulator.
+    s: Vec<f32>,
+    /// feat running normalizer accumulator.
+    z: Vec<f32>,
+    /// Reused per-token scratch for the score-scaled q/k rows.
+    q_scaled: Vec<f32>,
+    k_scaled: Vec<f32>,
+    len: usize,
+}
+
+impl CausalState<'_> {
+    /// Tokens consumed so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True before the first token.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Fold in one token and return its attention output (length `dv`).
+    ///
+    /// The key/value update happens before the query read — position i
+    /// attends to positions `0..=i`, exactly like the batched causal
+    /// path.
+    pub fn append_token(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let spec = self.session.spec();
+        let d = spec.head_dim;
+        if q.len() != d || k.len() != d {
+            bail!(
+                "append_token: q/k rows must have length head_dim = {d}, got {} and {}",
+                q.len(),
+                k.len()
+            );
+        }
+        if v.len() != self.dv {
+            bail!("append_token: v row must have length dv = {}, got {}", self.dv, v.len());
+        }
+        let map = self.session.feature_map().expect("decode state implies a map");
+        let scale = self.session.input_scale(d);
+        for (dst, x) in self.q_scaled.iter_mut().zip(q) {
+            *dst = x * scale;
+        }
+        for (dst, x) in self.k_scaled.iter_mut().zip(k) {
+            *dst = x * scale;
+        }
+        let phi_k = self.session.backend.phi_row(map, &self.k_scaled)?;
+        for (f, &pkf) in phi_k.iter().enumerate() {
+            self.z[f] += pkf;
+            let srow = &mut self.s[f * self.dv..(f + 1) * self.dv];
+            for (acc, x) in srow.iter_mut().zip(v) {
+                *acc += pkf * x;
+            }
+        }
+        let phi_q = self.session.backend.phi_row(map, &self.q_scaled)?;
+        let mut den = 0.0f32;
+        let mut num = vec![0.0f32; self.dv];
+        for (f, &pqf) in phi_q.iter().enumerate() {
+            den += pqf * self.z[f];
+            let srow = &self.s[f * self.dv..(f + 1) * self.dv];
+            for (acc, x) in num.iter_mut().zip(srow) {
+                *acc += pqf * x;
+            }
+        }
+        let denom = den + spec.eps;
+        for o in num.iter_mut() {
+            *o /= denom;
+        }
+        self.len += 1;
+        Ok(num)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::spec::Backend;
+
+    fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+        Tensor::randn(rng, shape, scale)
+    }
+
+    #[test]
+    fn session_owns_one_map_draw() {
+        let a = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(8)
+            .seed(3)
+            .build()
+            .unwrap();
+        let b = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(8)
+            .seed(3)
+            .build()
+            .unwrap();
+        let (ma, mb) = (a.feature_map().unwrap(), b.feature_map().unwrap());
+        assert_eq!(ma.reference.degrees, mb.reference.degrees);
+        assert_eq!(ma.reference.scales, mb.reference.scales);
+    }
+
+    #[test]
+    fn rank2_inputs_round_trip() {
+        let mut rng = Rng::new(5);
+        let q = randn(&mut rng, &[6, 4], 0.5);
+        let k = randn(&mut rng, &[6, 4], 0.5);
+        let v = randn(&mut rng, &[6, 3], 1.0);
+        let sess = AttentionSpec::new(Kernel::Softmax)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let out = sess.forward(&q, &k, &v).unwrap();
+        assert_eq!(out.shape, vec![6, 3]);
+        let oracle = crate::reference::attention::softmax_attention(&q, &k, &v, false);
+        assert!(out.max_abs_diff(&oracle) < 1e-5);
+    }
+
+    #[test]
+    fn causal_shape_mismatch_is_an_error_not_a_panic() {
+        let mut rng = Rng::new(6);
+        let q = randn(&mut rng, &[1, 4, 4], 0.5);
+        let k = randn(&mut rng, &[1, 6, 4], 0.5);
+        let v = randn(&mut rng, &[1, 6, 3], 1.0);
+        let sess = AttentionSpec::new(Kernel::Softmax)
+            .causal(true)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let err = sess.forward(&q, &k, &v).unwrap_err();
+        assert!(err.to_string().contains("causal"), "{err}");
+    }
+
+    #[test]
+    fn decode_requires_causal_maclaurin_session() {
+        let not_causal =
+            AttentionSpec::new(Kernel::Exp).head_dim(4).num_features(8).build().unwrap();
+        assert!(not_causal.begin_decode(3).is_err());
+        let softmax = AttentionSpec::new(Kernel::Softmax).causal(true).build().unwrap();
+        assert!(softmax.begin_decode(3).is_err());
+        let ok = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(8)
+            .causal(true)
+            .build()
+            .unwrap();
+        let state = ok.begin_decode(3).unwrap();
+        assert!(state.is_empty());
+    }
+
+    #[test]
+    fn exp_forward_tracks_softmax() {
+        // RMFA_exp with a healthy D approximates exact softmax attention.
+        let mut rng = Rng::new(9);
+        let q = randn(&mut rng, &[2, 8, 4], 0.3);
+        let k = randn(&mut rng, &[2, 8, 4], 0.3);
+        let v = randn(&mut rng, &[2, 8, 3], 1.0);
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(256)
+            .seed(11)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let approx = sess.forward(&q, &k, &v).unwrap();
+        let exact = sess.forward_exact(&q, &k, &v).unwrap();
+        let diff = approx.max_abs_diff(&exact);
+        assert!(diff < 0.35, "RMFA_exp vs exact kernelized: {diff}");
+    }
+}

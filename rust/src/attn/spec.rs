@@ -1,0 +1,225 @@
+//! [`AttentionSpec`] — the builder that describes one attention
+//! configuration (kernel, causality, feature-map hyper-parameters,
+//! backend preference) and turns it into a ready
+//! [`AttentionSession`](crate::attn::AttentionSession).
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Result};
+
+use super::kernel::{Kernel, DEFAULT_MAX_DEGREE};
+use super::session::AttentionSession;
+
+/// Which compute tier a session should run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pick the best available tier (device if it can execute, else the
+    /// host fast path).
+    Auto,
+    /// The scalar oracle tier (`crate::reference`) — obviously correct,
+    /// single thread, never optimized.
+    Reference,
+    /// The engineered host tier (`crate::fastpath`) — degree-grouped
+    /// GEMM feature maps + scoped-thread batched kernels.
+    HostFast,
+    /// PJRT device execution. Gates itself off (every op returns `Err`)
+    /// when the runtime is the vendored stub or no per-shape artifacts
+    /// are compiled.
+    Device,
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(match self {
+            Backend::Auto => "auto",
+            Backend::Reference => "reference",
+            Backend::HostFast => "host",
+            Backend::Device => "device",
+        })
+    }
+}
+
+/// `Backend::from_str` failed: the name is not a known backend.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseBackendError {
+    got: String,
+}
+
+impl fmt::Display for ParseBackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown backend {:?}; expected one of: auto, reference, host, device",
+            self.got
+        )
+    }
+}
+
+impl std::error::Error for ParseBackendError {}
+
+impl FromStr for Backend {
+    type Err = ParseBackendError;
+
+    fn from_str(s: &str) -> Result<Backend, ParseBackendError> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "reference" => Ok(Backend::Reference),
+            "host" => Ok(Backend::HostFast),
+            "device" => Ok(Backend::Device),
+            other => Err(ParseBackendError { got: other.to_string() }),
+        }
+    }
+}
+
+/// One attention configuration. Build with [`AttentionSpec::new`] and
+/// the chained setters, then [`AttentionSpec::build`] to get a session
+/// that owns a single RMF feature-map draw across all its calls.
+///
+/// ```
+/// use macformer::attn::{AttentionSpec, Backend, Kernel};
+///
+/// let session = AttentionSpec::new(Kernel::Inv)
+///     .head_dim(8)
+///     .num_features(32)
+///     .causal(true)
+///     .seed(42)
+///     .backend(Backend::HostFast)
+///     .build()
+///     .unwrap();
+/// assert_eq!(session.spec().kernel, Kernel::Inv);
+/// ```
+#[derive(Debug, Clone)]
+pub struct AttentionSpec {
+    /// Score kernel (Table 1 or the exact-softmax baseline).
+    pub kernel: Kernel,
+    /// Causal (autoregressive) masking.
+    pub causal: bool,
+    /// Denominator stabilizer for the kernelized / linear paths.
+    pub eps: f32,
+    /// Feature count D of the RMF map (ignored for `Kernel::Softmax`).
+    pub num_features: usize,
+    /// Input (head) dimension d the feature map is sampled for.
+    pub head_dim: usize,
+    /// Geometric degree-law parameter p (> 1).
+    pub p: f64,
+    /// Maclaurin truncation degree of the sampled map.
+    pub max_degree: usize,
+    /// Seed for the one map draw the session owns.
+    pub seed: u64,
+    /// Compute-tier preference.
+    pub backend: Backend,
+}
+
+impl AttentionSpec {
+    /// Paper defaults: d = 64, D = 128, p = 2, degree 8, eps = 1e-6,
+    /// non-causal, auto backend.
+    pub fn new(kernel: Kernel) -> AttentionSpec {
+        AttentionSpec {
+            kernel,
+            causal: false,
+            eps: 1e-6,
+            num_features: 128,
+            head_dim: 64,
+            p: 2.0,
+            max_degree: DEFAULT_MAX_DEGREE,
+            seed: 7,
+            backend: Backend::Auto,
+        }
+    }
+
+    /// Causal (autoregressive) masking; enables the streaming decode path.
+    pub fn causal(mut self, yes: bool) -> Self {
+        self.causal = yes;
+        self
+    }
+
+    /// Denominator stabilizer eps.
+    pub fn eps(mut self, eps: f32) -> Self {
+        self.eps = eps;
+        self
+    }
+
+    /// Feature count D of the RMF map.
+    pub fn num_features(mut self, d: usize) -> Self {
+        self.num_features = d;
+        self
+    }
+
+    /// Input (head) dimension d.
+    pub fn head_dim(mut self, d: usize) -> Self {
+        self.head_dim = d;
+        self
+    }
+
+    /// Geometric degree-law parameter p (> 1).
+    pub fn p(mut self, p: f64) -> Self {
+        self.p = p;
+        self
+    }
+
+    /// Maclaurin truncation degree.
+    pub fn max_degree(mut self, n: usize) -> Self {
+        self.max_degree = n;
+        self
+    }
+
+    /// Seed for the session's single feature-map draw.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Compute-tier preference.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Validate the spec and build a session (samples the RMF map once).
+    pub fn build(self) -> Result<AttentionSession> {
+        self.validate()?;
+        AttentionSession::build(self)
+    }
+
+    pub(crate) fn validate(&self) -> Result<()> {
+        if self.eps.is_nan() || self.eps < 0.0 {
+            bail!("AttentionSpec: eps must be >= 0, got {}", self.eps);
+        }
+        if self.kernel.has_maclaurin() {
+            if self.num_features == 0 {
+                bail!("AttentionSpec: num_features must be > 0 for kernel {}", self.kernel);
+            }
+            if self.head_dim == 0 {
+                bail!("AttentionSpec: head_dim must be > 0 for kernel {}", self.kernel);
+            }
+            if self.p.is_nan() || self.p <= 1.0 {
+                bail!("AttentionSpec: p must be > 1, got {}", self.p);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_round_trips() {
+        for b in [Backend::Auto, Backend::Reference, Backend::HostFast, Backend::Device] {
+            assert_eq!(Backend::from_str(&b.to_string()), Ok(b));
+        }
+        assert!(Backend::from_str("gpu").is_err());
+    }
+
+    #[test]
+    fn invalid_specs_are_errors_not_panics() {
+        assert!(AttentionSpec::new(Kernel::Exp).num_features(0).build().is_err());
+        assert!(AttentionSpec::new(Kernel::Exp).head_dim(0).build().is_err());
+        assert!(AttentionSpec::new(Kernel::Exp).p(1.0).build().is_err());
+        assert!(AttentionSpec::new(Kernel::Exp).eps(-1.0).build().is_err());
+        // the exact baseline needs no feature map, so D = 0 is fine there
+        assert!(AttentionSpec::new(Kernel::Softmax).num_features(0).build().is_ok());
+    }
+}

@@ -4,13 +4,12 @@
 //!
 //! * **device** (`run_grid`) — the original path: compiled HLO modules
 //!   over PJRT, identical in-graph preSBN (eps = 1e-12).
-//! * **host** (`run_host_grid`) — the fastpath: `FlatRmfMap` feature
-//!   maps + the scoped-thread batched attention kernels, no artifacts
-//!   or PJRT needed. Each cell additionally times the *reference path*
-//!   (scalar per-problem `RmfMap::apply` + `reference::linear_attention`,
-//!   single thread — the oracle tier as it stands in this tree, i.e.
-//!   including its memory-layout fix) so the fast-vs-oracle speedup is
-//!   tracked under one protocol.
+//! * **host** (`run_host_grid`) — typed `attn` sessions dispatched over
+//!   the `AttentionBackend` trait: the fast tier (`Backend::HostFast` —
+//!   `FlatRmfMap` GEMM feature maps + scoped-thread batched kernels)
+//!   and, per cell, the oracle tier (`Backend::Reference`, scalar
+//!   per-problem, single thread) so the fast-vs-oracle speedup is
+//!   tracked under one protocol. Any Table-1 kernel, not just exp.
 //!
 //! For every (length n, feature dim D) cell of the paper's simulation
 //! grid: generate random (q, k, v) with the paper's shape (batch 16 x
@@ -20,11 +19,10 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::fastpath::{self, FlatRmfMap};
+use crate::attn::{AttentionSession, AttentionSpec, Backend, Kernel};
 use crate::metrics::{nmse, Timing};
-use crate::reference::{attention, rmf::RmfMap};
 use crate::runtime::{Executable, HostArg, Registry};
 use crate::tensor::Tensor;
 use crate::util::json::Value;
@@ -165,14 +163,16 @@ pub fn render(cells: &[MicroCell]) -> String {
 /// One (n, D) cell of the host grid.
 #[derive(Debug, Clone)]
 pub struct HostCell {
+    /// The Table-1 kernel the RMFA sessions ran.
+    pub kernel: Kernel,
     pub n: usize,
     pub feature_dim: usize,
     pub nmse: f64,
-    /// exact softmax attention on the fastpath (threaded), min seconds
+    /// exact softmax attention through the host-fast backend, min seconds
     pub softmax_seconds: f64,
-    /// RMFA on the fastpath (FlatRmfMap + threaded linear attention)
+    /// RMFA session forward on `Backend::HostFast`
     pub rmfa_seconds: f64,
-    /// RMFA on the reference path (scalar per-problem, single thread)
+    /// RMFA session forward on `Backend::Reference` (scalar, single thread)
     pub reference_seconds: f64,
 }
 
@@ -190,112 +190,91 @@ impl HostCell {
     }
 }
 
-/// Time the fastpath RMFA pipeline (FlatRmfMap phi on score-scaled
-/// inputs + threaded linear contraction) over a batched (g, n, d)
-/// problem set: returns (first run's output, full timing over
-/// `repeats`). Shared by the host grid and the hotpath bench so both
-/// report speedups against the same protocol.
-pub fn fastpath_rmfa(
-    flat: &FlatRmfMap,
-    qs: &Tensor,
-    ks: &Tensor,
+/// Time `session.forward` over a batched problem set: returns (first
+/// run's output, full timing over `repeats`). Shared by the host grid
+/// and the hotpath bench so every tier is measured under the same
+/// protocol (min over the same repeats, no warm-up bias).
+pub fn time_forward(
+    session: &AttentionSession,
+    q: &Tensor,
+    k: &Tensor,
     v: &Tensor,
-    eps: f32,
     repeats: usize,
-) -> (Tensor, Timing) {
+) -> Result<(Tensor, Timing)> {
     let mut t = Timing::default();
     let mut first: Option<Tensor> = None;
     for _ in 0..repeats.max(1) {
         let t0 = Instant::now();
-        let phi_q = fastpath::apply_map_batched(flat, qs);
-        let phi_k = fastpath::apply_map_batched(flat, ks);
-        let out = fastpath::linear_attention_batched(&phi_q, &phi_k, v, false, eps);
+        let out = session.forward(q, k, v)?;
         t.push(t0.elapsed().as_secs_f64());
         if first.is_none() {
             first = Some(out);
         }
     }
-    (first.expect("repeats >= 1"), t)
+    Ok((first.expect("repeats >= 1"), t))
 }
 
-/// Time the reference RMFA pipeline (per-problem scalar `RmfMap::apply`
-/// + oracle linear attention, single thread) over the same batched
-/// problem set, with the same repeats protocol as [`fastpath_rmfa`] —
-/// so the speedup ratio carries no warm-up bias.
-pub fn reference_rmfa(
-    map: &RmfMap,
-    qs: &Tensor,
-    ks: &Tensor,
-    v: &Tensor,
-    eps: f32,
-    repeats: usize,
-) -> Timing {
-    let g = qs.shape[0];
-    let mut t = Timing::default();
-    for _ in 0..repeats.max(1) {
-        let t0 = Instant::now();
-        for gi in 0..g {
-            let phi_q = map.apply(&qs.problem2(gi));
-            let phi_k = map.apply(&ks.problem2(gi));
-            let _ = attention::linear_attention(&phi_q, &phi_k, &v.problem2(gi), false, eps);
-        }
-        t.push(t0.elapsed().as_secs_f64());
-    }
-    t
-}
-
-/// Run the Fig-4 grid entirely on the host. `groups` is batch x heads
-/// (paper: 16 x 8 = 128), `dim` the head dimension (paper: 64). All
-/// three paths — exact softmax, fastpath RMFA, reference RMFA — take
-/// the min over the same `repeats`, so no path gets a cold-start
-/// penalty the others amortize away.
+/// Run the Fig-4 grid entirely on the host, through the typed `attn`
+/// session API. `groups` is batch x heads (paper: 16 x 8 = 128), `dim`
+/// the head dimension (paper: 64). Per cell three sessions run: exact
+/// softmax (host-fast tier), the RMFA session on `Backend::HostFast`,
+/// and the same spec on `Backend::Reference` — all timed min over the
+/// same `repeats`, so no path gets a cold-start penalty the others
+/// amortize away. NMSE is measured against exact softmax for the exp
+/// kernel (Fig 4a) and against the quadratic Definition-2 oracle for
+/// every other kernel.
 pub fn run_host_grid(
+    kernel: Kernel,
     lengths: &[usize],
     features: &[usize],
     repeats: usize,
     seed: u64,
     groups: usize,
     dim: usize,
-) -> Vec<HostCell> {
-    let kernel = "exp";
-    let (p, max_degree) = (2.0, 8);
+) -> Result<Vec<HostCell>> {
+    if !kernel.has_maclaurin() {
+        bail!(
+            "the host microbench measures an RMFA approximation; kernel {kernel} is the \
+             exact baseline itself — pick one of: exp, inv, log, trigh, sqrt"
+        );
+    }
     let eps = 1e-6f32;
+    let softmax_session = AttentionSpec::new(Kernel::Softmax)
+        .head_dim(dim)
+        .backend(Backend::HostFast)
+        .build()?;
     let mut out = Vec::new();
     for &n in lengths {
         let mut rng = Rng::new(seed ^ (n as u64).wrapping_mul(0x9E3779B97F4A7C15));
         let q = Tensor::randn(&mut rng, &[groups, n, dim], 0.5);
         let k = Tensor::randn(&mut rng, &[groups, n, dim], 0.5);
         let v = Tensor::randn(&mut rng, &[groups, n, dim], 1.0);
-        // phi(x / d^(1/4)) . phi(y / d^(1/4)) estimates exp(x.y / sqrt(d)),
-        // the softmax numerator at the attention score scale.
-        let input_scale = 1.0 / (dim as f32).sqrt().sqrt();
-        let qs = q.scale(input_scale);
-        let ks = k.scale(input_scale);
 
-        let mut sm_t = Timing::default();
-        let mut exact: Option<Tensor> = None;
-        for _ in 0..repeats.max(1) {
-            let t0 = Instant::now();
-            let got = fastpath::softmax_attention_batched(&q, &k, &v, false);
-            sm_t.push(t0.elapsed().as_secs_f64());
-            if exact.is_none() {
-                exact = Some(got);
-            }
-        }
-        let exact = exact.expect("repeats >= 1");
+        let (exact_softmax, sm_t) = time_forward(&softmax_session, &q, &k, &v, repeats)?;
         let softmax_seconds = sm_t.min();
 
         for &feat in features {
-            let mut map_rng =
-                Rng::new(seed ^ (feat as u64).wrapping_mul(0xD1B54A32D192ED03) ^ n as u64);
-            let map = RmfMap::sample(&mut map_rng, kernel, feat, dim, p, max_degree);
-            let flat = FlatRmfMap::from(&map);
+            let spec = AttentionSpec::new(kernel)
+                .head_dim(dim)
+                .num_features(feat)
+                .eps(eps)
+                .seed(seed ^ (feat as u64).wrapping_mul(0xD1B54A32D192ED03) ^ n as u64);
+            let fast = spec.clone().backend(Backend::HostFast).build()?;
+            let reference = spec.backend(Backend::Reference).build()?;
 
-            let (approx, rmfa_t) = fastpath_rmfa(&flat, &qs, &ks, &v, eps, repeats);
-            let err = nmse(&approx.data, &exact.data);
-            let reference_t = reference_rmfa(&map, &qs, &ks, &v, eps, repeats);
+            let (approx, rmfa_t) = time_forward(&fast, &q, &k, &v, repeats)?;
+            let (_, reference_t) = time_forward(&reference, &q, &k, &v, repeats)?;
+            // the RMFA estimate's target: softmax for exp (Fig 4a), the
+            // same-kernel quadratic oracle otherwise (not timed)
+            let err = if kernel == Kernel::Exp {
+                nmse(&approx.data, &exact_softmax.data)
+            } else {
+                let target = fast.forward_exact(&q, &k, &v)?;
+                nmse(&approx.data, &target.data)
+            };
 
             let cell = HostCell {
+                kernel,
                 n,
                 feature_dim: feat,
                 nmse: err,
@@ -304,7 +283,7 @@ pub fn run_host_grid(
                 reference_seconds: reference_t.min(),
             };
             log::info!(
-                "host micro n={n} D={feat}: log10(nmse)={:.2} log10(speedup)={:+.2} vs-reference x{:.1}",
+                "host micro {kernel} n={n} D={feat}: log10(nmse)={:.2} log10(speedup)={:+.2} vs-reference x{:.1}",
                 cell.log10_nmse(),
                 cell.log10_speedup(),
                 cell.speedup_vs_reference()
@@ -312,7 +291,7 @@ pub fn run_host_grid(
             out.push(cell);
         }
     }
-    out
+    Ok(out)
 }
 
 /// Render the host grid: the two Fig-4 panels plus the fast-vs-reference
@@ -324,18 +303,21 @@ pub fn render_host(cells: &[HostCell]) -> String {
     features.sort_unstable();
     features.dedup();
     let lookup = |n: usize, f: usize| cells.iter().find(|c| c.n == n && c.feature_dim == f);
+    let kernel = cells.first().map(|c| c.kernel).unwrap_or(Kernel::Exp);
+    let nmse_target =
+        if kernel == Kernel::Exp { "softmax attention" } else { "exact kernelized" };
     let mut s = String::new();
-    let panels: [(&str, Box<dyn Fn(&HostCell) -> f64>); 3] = [
+    let panels: [(String, Box<dyn Fn(&HostCell) -> f64>); 3] = [
         (
-            "Fig 4a (host): log10 NMSE (RMFA_exp vs softmax attention)",
+            format!("Fig 4a (host): log10 NMSE (RMFA_{kernel} vs {nmse_target})"),
             Box::new(|c: &HostCell| c.log10_nmse()),
         ),
         (
-            "Fig 4b (host): log10 acceleration ratio (softmax / RMFA)",
+            format!("Fig 4b (host): log10 acceleration ratio (softmax / RMFA_{kernel})"),
             Box::new(|c: &HostCell| c.log10_speedup()),
         ),
         (
-            "fastpath speedup over reference path (x)",
+            "fastpath speedup over reference path (x)".to_string(),
             Box::new(|c: &HostCell| c.speedup_vs_reference()),
         ),
     ];
@@ -365,6 +347,7 @@ pub fn host_to_json(cells: &[HostCell]) -> Value {
             .iter()
             .map(|c| {
                 Value::obj(vec![
+                    ("kernel", Value::str(c.kernel.name())),
                     ("n", Value::num(c.n as f64)),
                     ("D", Value::num(c.feature_dim as f64)),
                     ("nmse", Value::num(c.nmse)),
@@ -417,7 +400,7 @@ mod tests {
 
     #[test]
     fn host_grid_smoke() {
-        let cells = run_host_grid(&[8], &[4], 1, 3, 2, 4);
+        let cells = run_host_grid(Kernel::Exp, &[8], &[4], 1, 3, 2, 4).unwrap();
         assert_eq!(cells.len(), 1);
         let c = &cells[0];
         assert!(c.nmse.is_finite() && c.nmse >= 0.0, "nmse {}", c.nmse);
@@ -427,6 +410,23 @@ mod tests {
         assert!(s.contains("fastpath speedup"));
         let j = host_to_json(&cells).to_string();
         assert!(j.contains("speedup_vs_reference"), "{j}");
+        assert!(j.contains("\"kernel\""), "{j}");
+    }
+
+    #[test]
+    fn host_grid_non_exp_kernel_measures_against_kernelized_oracle() {
+        let cells = run_host_grid(Kernel::Inv, &[6], &[8], 1, 5, 2, 4).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].kernel, Kernel::Inv);
+        assert!(cells[0].nmse.is_finite(), "nmse {}", cells[0].nmse);
+        let s = render_host(&cells);
+        assert!(s.contains("RMFA_inv"), "{s}");
+    }
+
+    #[test]
+    fn host_grid_rejects_softmax_kernel() {
+        let err = run_host_grid(Kernel::Softmax, &[4], &[4], 1, 1, 1, 4).unwrap_err();
+        assert!(err.to_string().contains("exact baseline"), "{err}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! raw slices so the parallel driver can shard one batched tensor into
 //! per-problem sub-slices without copies.
 
-use crate::reference::maclaurin;
+use crate::attn::Kernel;
 use crate::tensor::{matmul_nt_into, Tensor};
 
 /// Rows of the score matrix materialized at a time: 32 rows x n=4096
@@ -97,8 +97,10 @@ pub fn softmax_attention_into(
 }
 
 /// Kernelized attention (Definition 2), blocked, any Table-1 kernel.
+/// Panics on [`Kernel::Softmax`] (no pointwise kernel weight) — the
+/// `attn` session API rejects that combination with a clean error.
 pub fn kernelized_attention(
-    kernel: &str,
+    kernel: Kernel,
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -120,7 +122,7 @@ pub fn kernelized_attention(
 /// Slice-level kernelized attention; `out` is (n x dv) row-major.
 #[allow(clippy::too_many_arguments)]
 pub fn kernelized_attention_into(
-    kernel: &str,
+    kernel: Kernel,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -141,7 +143,9 @@ pub fn kernelized_attention_into(
     }
     let scale = 1.0 / (d as f32).sqrt();
     // resolve the kernel once — not per score element in the hot loop
-    let kf = maclaurin::kernel_value_fn(kernel);
+    let kf = kernel
+        .value_fn()
+        .expect("kernelized attention requires a Table-1 Maclaurin kernel");
     let mut scores = vec![0.0f32; ROW_BLOCK * m];
     let mut i0 = 0;
     while i0 < n {
@@ -325,7 +329,7 @@ mod tests {
         let mut rng = Rng::new(22);
         // n = 70 crosses two ROW_BLOCK boundaries, exercising the causal
         // cols-capped score stride
-        for kernel in maclaurin::KERNELS {
+        for kernel in Kernel::MACLAURIN {
             for causal in [false, true] {
                 let q = randn(&mut rng, &[70, 4], 0.4);
                 let k = randn(&mut rng, &[70, 4], 0.4);

@@ -141,12 +141,13 @@ impl FlatRmfMap {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attn::Kernel;
     use crate::util::rng::Rng;
 
     #[test]
     fn conversion_preserves_feature_count_and_groups_degrees() {
         let mut rng = Rng::new(11);
-        let map = RmfMap::sample(&mut rng, "exp", 64, 8, 2.0, 8);
+        let map = RmfMap::sample(&mut rng, Kernel::Exp, 64, 8, 2.0, 8);
         let flat = FlatRmfMap::from(&map);
         assert_eq!(flat.num_features(), 64);
         let distinct: std::collections::BTreeSet<usize> =
@@ -157,7 +158,7 @@ mod tests {
     #[test]
     fn apply_matches_reference_bitwise_smoke() {
         let mut rng = Rng::new(12);
-        for kernel in ["exp", "inv", "sqrt"] {
+        for kernel in [Kernel::Exp, Kernel::Inv, Kernel::Sqrt] {
             let map = RmfMap::sample(&mut rng, kernel, 48, 6, 2.0, 8);
             let flat = FlatRmfMap::from(&map);
             let mut x = Tensor::zeros(&[5, 6]);

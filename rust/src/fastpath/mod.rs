@@ -20,6 +20,10 @@
 //!   (GEMM score blocks, contiguous inner loops).
 //! * [`parallel`] — `std::thread::scope` driver sharding batch x head
 //!   problems over cores; batched entry points for all three kernels.
+//!
+//! This tier backs `attn::HostFastBackend`; new code should run
+//! attention through `attn::AttentionSpec` rather than calling these
+//! entry points directly.
 
 pub mod attention;
 pub mod flat_rmf;

@@ -13,6 +13,7 @@
 
 use std::thread;
 
+use crate::attn::Kernel;
 use crate::tensor::Tensor;
 
 use super::attention;
@@ -106,7 +107,7 @@ pub fn softmax_attention_batched(q: &Tensor, k: &Tensor, v: &Tensor, causal: boo
 
 /// Kernelized attention over batched tensors (see [`softmax_attention_batched`]).
 pub fn kernelized_attention_batched(
-    kernel: &str,
+    kernel: Kernel,
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,

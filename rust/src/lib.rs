@@ -14,6 +14,11 @@
 //! Python never runs at training/serving time; after `make artifacts`
 //! the `macformer` binary is self-contained.
 //!
+//! Attention itself has one public API: the typed engine in [`attn`]
+//! (a `Kernel` enum, an `AttentionSpec` builder, pluggable
+//! `AttentionBackend` tiers, and streaming decode sessions). The
+//! `reference` and `fastpath` modules are the tiers behind it.
+//!
 //! Quickstart (see `examples/quickstart.rs`):
 //! ```no_run
 //! use macformer::runtime::{Executable, Registry, DeviceState};
@@ -27,6 +32,7 @@
 //! assert_eq!(state.params().len(), info.n_params);
 //! ```
 
+pub mod attn;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -4,7 +4,7 @@
 //!   info                         backend + artifact inventory
 //!   train                        one (task, variant) training run
 //!   sweep                        Table-2: all variants x tasks, subprocesses
-//!   microbench                   Fig-4 RMFA-vs-softmax grid
+//!   microbench                   Fig-4 RMFA-vs-softmax grid (--kernel exp|inv|log|trigh|sqrt)
 //!   fig3                         ppSBN translation ablation
 //!   datagen                      dump synthetic dataset samples
 //!
@@ -13,6 +13,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use macformer::attn::{Backend, Kernel};
 use macformer::config::RunConfig;
 use macformer::coordinator::{fig3, microbench, sweep, Trainer};
 use macformer::runtime::{client, Registry};
@@ -132,7 +133,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_microbench(args: &Args) -> Result<()> {
-    let backend = args.str_flag("backend", "host");
+    use std::str::FromStr;
+    // typed parses: a typo'd --backend or --kernel is a clean CLI error,
+    // never a panic
+    let backend_flag = args.str_flag("backend", "host");
+    let backend = Backend::from_str(&backend_flag).map_err(|e| anyhow!("--backend: {e}"))?;
+    let kernel_flag = args.str_flag("kernel", "exp");
+    let kernel = Kernel::from_str(&kernel_flag).map_err(|e| anyhow!("--kernel: {e}"))?;
     let repeats = args.usize_flag("repeats", 5).map_err(|e| anyhow!(e))?;
     let seed = args.u64_flag("seed", 7).map_err(|e| anyhow!(e))?;
     let groups = args.usize_flag("groups", 16 * 8).map_err(|e| anyhow!(e))?;
@@ -146,7 +153,14 @@ fn cmd_microbench(args: &Args) -> Result<()> {
             .map(|x| x.parse::<usize>().map_err(|e| anyhow!("bad list item {x:?}: {e}")))
             .collect()
     };
-    if backend == "host" {
+    if matches!(backend, Backend::Reference) {
+        bail!(
+            "--backend reference: the host grid already times the reference tier per \
+             cell; use --backend host"
+        );
+    }
+    if !matches!(backend, Backend::Device) {
+        // HostFast, or Auto resolving to the host tier
         let lengths = match lengths_flag {
             Some(s) => parse_list(s)?,
             None => vec![256, 1024, 2048],
@@ -156,15 +170,18 @@ fn cmd_microbench(args: &Args) -> Result<()> {
             None => vec![64, 128],
         };
         let cells =
-            microbench::run_host_grid(&lengths, &features, repeats, seed, groups, 64);
+            microbench::run_host_grid(kernel, &lengths, &features, repeats, seed, groups, 64)?;
         println!("{}", microbench::render_host(&cells));
         if let Some(path) = out_json {
             std::fs::write(&path, microbench::host_to_json(&cells).to_string())?;
         }
         return Ok(());
     }
-    if backend != "device" {
-        bail!("unknown --backend {backend:?}; try: host, device");
+    if kernel != Kernel::Exp {
+        bail!(
+            "the device microbench runs precompiled rmfa_exp artifacts; \
+             --kernel {kernel} is host-only (drop --backend device)"
+        );
     }
     let reg = Registry::open(std::path::Path::new(&artifacts_flag))?;
     let lengths = match lengths_flag {

@@ -8,16 +8,23 @@
 //!
 //! Layout: one attention problem = q, k, v as (n x d) row-major slices.
 
+use crate::attn::Kernel;
 use crate::tensor::Tensor;
 
-use super::maclaurin;
-
 /// Exact softmax attention for a single head: out = softmax(q k^T / sqrt(d)) v.
+///
+/// The causal mask is defined over one shared token axis (`limit = i + 1`),
+/// so `causal = true` requires `n == m` — cross-attention (m != n) is
+/// non-causal by construction. This used to be silently wrong for m > n
+/// and out-of-bounds for m < n; it now asserts.
 pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Tensor {
     let (n, d) = (q.shape[0], q.shape[1]);
     let m = k.shape[0];
     assert_eq!(k.shape[1], d);
     assert_eq!(v.shape[0], m);
+    if causal {
+        assert_eq!(n, m, "causal softmax attention needs n == m");
+    }
     let dv = v.shape[1];
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = Tensor::zeros(&[n, dv]);
@@ -50,8 +57,13 @@ pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Te
 }
 
 /// Kernelized attention (Definition 2) with a Table-1 kernel.
+///
+/// Causal masking requires `n == m` (see [`softmax_attention`]).
+/// Panics if `kernel` is [`Kernel::Softmax`] — the exact baseline has no
+/// pointwise kernel weight; route through `attn::AttentionSession`,
+/// which rejects that combination with a clean error.
 pub fn kernelized_attention(
-    kernel: &str,
+    kernel: Kernel,
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -60,8 +72,17 @@ pub fn kernelized_attention(
 ) -> Tensor {
     let (n, d) = (q.shape[0], q.shape[1]);
     let m = k.shape[0];
+    assert_eq!(k.shape[1], d);
+    assert_eq!(v.shape[0], m);
+    if causal {
+        assert_eq!(n, m, "causal kernelized attention needs n == m");
+    }
     let dv = v.shape[1];
     let scale = 1.0 / (d as f32).sqrt();
+    // resolve the kernel once — not per score element
+    let kf = kernel
+        .value_fn()
+        .expect("kernelized attention requires a Table-1 Maclaurin kernel");
     let mut out = Tensor::zeros(&[n, dv]);
     for i in 0..n {
         let qi = &q.data[i * d..(i + 1) * d];
@@ -71,7 +92,7 @@ pub fn kernelized_attention(
         for j in 0..limit {
             let kj = &k.data[j * d..(j + 1) * d];
             let t: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
-            let w = maclaurin::kernel_value(kernel, t as f64) as f32;
+            let w = kf(t as f64) as f32;
             den += w;
             let vj = &v.data[j * dv..(j + 1) * dv];
             for (o, x) in num.iter_mut().zip(vj) {
@@ -204,8 +225,50 @@ mod tests {
         let k = randn(&mut rng, &[6, 4], 0.5);
         let v = randn(&mut rng, &[6, 4], 1.0);
         let a = softmax_attention(&q, &k, &v, false);
-        let b = kernelized_attention("exp", &q, &k, &v, false, 0.0);
+        let b = kernelized_attention(Kernel::Exp, &q, &k, &v, false, 0.0);
         assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn non_causal_cross_attention_supports_m_ne_n() {
+        // m != n is a legal cross-attention shape when non-causal; with a
+        // constant v, every output row must be that constant.
+        let mut rng = Rng::new(6);
+        let q = randn(&mut rng, &[3, 4], 1.0);
+        let k = randn(&mut rng, &[7, 4], 1.0);
+        let v = Tensor::filled(&[7, 2], -1.5);
+        for out in [
+            softmax_attention(&q, &k, &v, false),
+            kernelized_attention(Kernel::Inv, &q, &k, &v, false, 0.0),
+        ] {
+            assert_eq!(out.shape, vec![3, 2]);
+            for x in &out.data {
+                assert!((x + 1.5).abs() < 1e-4, "{x}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "causal softmax attention needs n == m")]
+    fn causal_softmax_rejects_m_ne_n() {
+        // Regression: limit = i + 1 assumes one shared token axis. With
+        // m > n this used to silently ignore keys; with m < n it read out
+        // of bounds. Both now fail fast.
+        let mut rng = Rng::new(7);
+        let q = randn(&mut rng, &[3, 4], 1.0);
+        let k = randn(&mut rng, &[5, 4], 1.0);
+        let v = randn(&mut rng, &[5, 2], 1.0);
+        let _ = softmax_attention(&q, &k, &v, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "causal kernelized attention needs n == m")]
+    fn causal_kernelized_rejects_m_ne_n() {
+        let mut rng = Rng::new(8);
+        let q = randn(&mut rng, &[5, 4], 1.0);
+        let k = randn(&mut rng, &[3, 4], 1.0);
+        let v = randn(&mut rng, &[3, 2], 1.0);
+        let _ = kernelized_attention(Kernel::Exp, &q, &k, &v, true, 0.0);
     }
 
     #[test]

@@ -4,7 +4,13 @@
 //! and exist so the compiled HLO modules can be validated by a second
 //! implementation (integration tests) and so property tests on the
 //! paper's theorems (unbiasedness, concentration) run natively.
+//!
+//! Kernel identities (Table-1 coefficients, closed forms, the degree
+//! law) live on the typed [`crate::attn::Kernel`] enum — the old
+//! stringly-typed `maclaurin` module is gone. This tier is the oracle
+//! behind [`crate::attn::ReferenceBackend`]; run attention through
+//! [`crate::attn::AttentionSpec`] rather than calling these free
+//! functions directly.
 
 pub mod attention;
-pub mod maclaurin;
 pub mod rmf;

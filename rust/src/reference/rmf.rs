@@ -2,10 +2,9 @@
 //! mirror of the L1 Pallas kernel, used by property tests to validate the
 //! unbiasedness claims (Theorem 1) independently of JAX.
 
+use crate::attn::kernel::{degree_distribution, Kernel};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
-
-use super::maclaurin;
 
 /// One sampled RMF map: per-feature degrees and Rademacher directions.
 #[derive(Debug, Clone)]
@@ -21,14 +20,22 @@ pub struct RmfMap {
 
 impl RmfMap {
     /// Draw a D-feature map for `kernel` on inputs of dimension d.
+    ///
+    /// Panics if `kernel` is [`Kernel::Softmax`] (no Maclaurin expansion
+    /// to sample from); `attn::AttentionSpec::build` rejects that
+    /// combination with a clean error before reaching here.
     pub fn sample(
         rng: &mut Rng,
-        kernel: &str,
+        kernel: Kernel,
         num_features: usize,
         dim_in: usize,
         p: f64,
         max_degree: usize,
     ) -> RmfMap {
+        assert!(
+            kernel.has_maclaurin(),
+            "RmfMap::sample: kernel {kernel} has no Maclaurin expansion to sample from"
+        );
         assert!(
             num_features > 0,
             "RmfMap::sample: num_features must be > 0 — a zero-feature map \
@@ -39,14 +46,14 @@ impl RmfMap {
             "RmfMap::sample: dim_in must be > 0 — degree >= 1 features would \
              take empty-dot products and collapse phi to zero"
         );
-        let probs = maclaurin::degree_distribution(p, max_degree);
+        let probs = degree_distribution(p, max_degree);
         let mut degrees = Vec::with_capacity(num_features);
         let mut omega = Vec::with_capacity(num_features);
         let mut scales = Vec::with_capacity(num_features);
         for _ in 0..num_features {
             let n = rng.weighted(&probs);
             degrees.push(n);
-            scales.push(maclaurin::feature_scale(kernel, n, p) as f32);
+            scales.push(kernel.feature_scale(n, p).expect("Maclaurin kernel checked above") as f32);
             let dirs: Vec<Vec<f32>> = (0..n)
                 .map(|_| (0..dim_in).map(|_| rng.rademacher()).collect())
                 .collect();
@@ -96,7 +103,7 @@ impl RmfMap {
 /// independently sampled maps — the Theorem-1 expectation check.
 pub fn mc_kernel_estimate(
     rng: &mut Rng,
-    kernel: &str,
+    kernel: Kernel,
     x: &[f32],
     y: &[f32],
     num_features: usize,
@@ -122,7 +129,7 @@ mod tests {
     #[test]
     fn feature_count_and_shape() {
         let mut rng = Rng::new(1);
-        let map = RmfMap::sample(&mut rng, "exp", 32, 8, 2.0, 8);
+        let map = RmfMap::sample(&mut rng, Kernel::Exp, 32, 8, 2.0, 8);
         assert_eq!(map.num_features(), 32);
         let x = vec![0.1f32; 8];
         assert_eq!(map.apply_row(&x).len(), 32);
@@ -132,20 +139,20 @@ mod tests {
     #[should_panic(expected = "num_features must be > 0")]
     fn sample_rejects_zero_features() {
         let mut rng = Rng::new(1);
-        let _ = RmfMap::sample(&mut rng, "exp", 0, 8, 2.0, 8);
+        let _ = RmfMap::sample(&mut rng, Kernel::Exp, 0, 8, 2.0, 8);
     }
 
     #[test]
     #[should_panic(expected = "dim_in must be > 0")]
     fn sample_rejects_zero_dim() {
         let mut rng = Rng::new(1);
-        let _ = RmfMap::sample(&mut rng, "exp", 8, 0, 2.0, 8);
+        let _ = RmfMap::sample(&mut rng, Kernel::Exp, 8, 0, 2.0, 8);
     }
 
     #[test]
     fn zero_degree_features_are_constant() {
         let mut rng = Rng::new(2);
-        let map = RmfMap::sample(&mut rng, "exp", 64, 4, 2.0, 8);
+        let map = RmfMap::sample(&mut rng, Kernel::Exp, 64, 4, 2.0, 8);
         let a = map.apply_row(&[0.5, -0.5, 0.25, 0.0]);
         let b = map.apply_row(&[0.0, 0.9, -0.1, 0.3]);
         for (i, &deg) in map.degrees.iter().enumerate() {
@@ -162,8 +169,8 @@ mod tests {
         let x = [0.3f32, -0.2, 0.1, 0.4];
         let y = [0.2f32, 0.3, -0.1, 0.2];
         let t: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
-        let est = mc_kernel_estimate(&mut rng, "exp", &x, &y, 64, 2.0, 8, 3000);
-        let exact = maclaurin::truncated_kernel_value("exp", t as f64, 8);
+        let est = mc_kernel_estimate(&mut rng, Kernel::Exp, &x, &y, 64, 2.0, 8, 3000);
+        let exact = Kernel::Exp.truncated_value(t as f64, 8).unwrap();
         assert!(
             (est - exact).abs() < 0.05 * exact.abs().max(1.0),
             "est {est} vs exact {exact}"
@@ -176,8 +183,8 @@ mod tests {
         let x = [0.3f32, -0.1, 0.2, 0.1];
         let y = [0.25f32, 0.2, -0.15, 0.1];
         let t: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
-        let est = mc_kernel_estimate(&mut rng, "inv", &x, &y, 64, 2.0, 8, 3000);
-        let exact = maclaurin::truncated_kernel_value("inv", t as f64, 8);
+        let est = mc_kernel_estimate(&mut rng, Kernel::Inv, &x, &y, 64, 2.0, 8, 3000);
+        let exact = Kernel::Inv.truncated_value(t as f64, 8).unwrap();
         assert!(
             (est - exact).abs() < 0.08 * exact.abs().max(1.0),
             "est {est} vs exact {exact}"
@@ -194,7 +201,7 @@ mod tests {
             let mut rng = Rng::new(seed);
             let mut vals = Vec::new();
             for _ in 0..200 {
-                let map = RmfMap::sample(&mut rng, "exp", feat, 4, 2.0, 8);
+                let map = RmfMap::sample(&mut rng, Kernel::Exp, feat, 4, 2.0, 8);
                 let fx = map.apply_row(&x);
                 let fy = map.apply_row(&y);
                 vals.push(fx.iter().zip(&fy).map(|(a, b)| a * b).sum::<f32>() as f64);

@@ -5,8 +5,9 @@
 //!
 //! Pure host math — no PJRT, safe to run multi-threaded.
 
+use macformer::attn::Kernel;
 use macformer::fastpath::{self, FlatRmfMap};
-use macformer::reference::{attention, maclaurin, rmf::RmfMap};
+use macformer::reference::{attention, rmf::RmfMap};
 use macformer::tensor::Tensor;
 use macformer::util::proptest::{check, PropResult};
 use macformer::util::rng::Rng;
@@ -30,7 +31,7 @@ fn prop_flat_rmf_apply_bit_for_bit() {
             vec![vec![kernel_idx as f32, n as f32, d as f32, feat as f32, seed]]
         },
         |input: &Vec<Vec<f32>>| -> PropResult {
-            let kernel = maclaurin::KERNELS[input[0][0] as usize % 5];
+            let kernel = Kernel::MACLAURIN[input[0][0] as usize % 5];
             let n = (input[0][1] as usize).max(1);
             let d = (input[0][2] as usize).max(1);
             let feat = (input[0][3] as usize).max(1);
@@ -159,7 +160,7 @@ fn prop_fast_kernelized_matches_oracle() {
         },
         |input: &Vec<Vec<f32>>| -> PropResult {
             let p = &input[0];
-            let kernel = maclaurin::KERNELS[p[0] as usize % 5];
+            let kernel = Kernel::MACLAURIN[p[0] as usize % 5];
             let (n, d, dv) = (
                 (p[1] as usize).max(1),
                 (p[2] as usize).max(1),
@@ -213,7 +214,7 @@ fn prop_parallel_matches_single_thread() {
             let phi_k = k.map(f32::abs);
 
             let sm = fastpath::softmax_attention_batched(&q, &k, &v, false);
-            let kn = fastpath::kernelized_attention_batched("exp", &q, &k, &v, false, 1e-6);
+            let kn = fastpath::kernelized_attention_batched(Kernel::Exp, &q, &k, &v, false, 1e-6);
             let la = fastpath::linear_attention_batched(&phi_q, &phi_k, &v, false, 1e-6);
             for gi in 0..g {
                 let (qs, ks, vs) = (q.problem2(gi), k.problem2(gi), v.problem2(gi));
@@ -237,7 +238,7 @@ fn prop_parallel_matches_single_thread() {
                     return Err(format!("softmax problem {gi} vs oracle: diff {diff}"));
                 }
                 let oracle_kn =
-                    attention::kernelized_attention("exp", &qs, &ks, &vs, false, 1e-6);
+                    attention::kernelized_attention(Kernel::Exp, &qs, &ks, &vs, false, 1e-6);
                 let mut diff = 0.0f32;
                 for (a, b) in kn.data[gi * n * dv..(gi + 1) * n * dv]
                     .iter()
@@ -290,7 +291,7 @@ fn prop_batched_phi_matches_sequential() {
                 (p[3] as usize).max(1),
             );
             let mut rng = Rng::new(p[4] as u64);
-            let map = RmfMap::sample(&mut rng, "exp", feat, d, 2.0, 8);
+            let map = RmfMap::sample(&mut rng, Kernel::Exp, feat, d, 2.0, 8);
             let flat = FlatRmfMap::from(&map);
             let x = randn(&mut rng, &[g, n, d], 0.5);
             let batched = fastpath::apply_map_batched(&flat, &x);

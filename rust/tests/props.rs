@@ -1,9 +1,10 @@
 //! Property tests on the paper's invariants, via util::proptest (no PJRT
 //! — pure host math, safe to run multi-threaded).
 
+use macformer::attn::Kernel;
 use macformer::data::batcher::Batcher;
 use macformer::metrics::bleu::corpus_bleu;
-use macformer::reference::{attention, maclaurin, rmf};
+use macformer::reference::{attention, rmf};
 use macformer::tensor::Tensor;
 use macformer::util::proptest::{check, PropResult};
 use macformer::util::rng::Rng;
@@ -82,7 +83,7 @@ fn prop_exp_kernelized_equals_softmax() {
             let k = Tensor::from_vec(&[n, d], input[1].clone());
             let v = Tensor::from_vec(&[n, 2], input[2].clone());
             let a = attention::softmax_attention(&q, &k, &v, false);
-            let b = attention::kernelized_attention("exp", &q, &k, &v, false, 0.0);
+            let b = attention::kernelized_attention(Kernel::Exp, &q, &k, &v, false, 0.0);
             let diff = a.max_abs_diff(&b);
             if diff > 2e-3 {
                 return Err(format!("max diff {diff}"));
@@ -105,7 +106,7 @@ fn prop_linear_contraction_matches_explicit_scores() {
             vec![vec![kernel_idx as f32, n as f32, seed]]
         },
         |input: &Vec<Vec<f32>>| -> PropResult {
-            let kernel = maclaurin::KERNELS[input[0][0] as usize];
+            let kernel = Kernel::MACLAURIN[input[0][0] as usize];
             let n = input[0][1] as usize;
             let mut rng = Rng::new(input[0][2] as u64);
             let d = 6;
@@ -248,14 +249,14 @@ fn prop_bleu_bounds() {
 /// (Theorem 1 restricted to the truncated degree law).
 #[test]
 fn prop_rmf_unbiased_all_kernels() {
-    for kernel in maclaurin::KERNELS {
-        let mut rng = Rng::new(0xFEED ^ kernel.len() as u64);
+    for kernel in Kernel::MACLAURIN {
+        let mut rng = Rng::new(0xFEED ^ kernel.name().len() as u64);
         let d = 6;
         let x: Vec<f32> = (0..d).map(|_| rng.normal() * 0.25).collect();
         let y: Vec<f32> = (0..d).map(|_| rng.normal() * 0.25).collect();
         let t: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
         let est = rmf::mc_kernel_estimate(&mut rng, kernel, &x, &y, 64, 2.0, 8, 4000);
-        let exact = maclaurin::truncated_kernel_value(kernel, t as f64, 8);
+        let exact = kernel.truncated_value(t as f64, 8).unwrap();
         let tol = 0.08 * exact.abs().max(1.0);
         assert!(
             (est - exact).abs() < tol,
