@@ -1,11 +1,13 @@
 //! Bench E2+E3 — Fig 4a (log NMSE) and Fig 4b (log acceleration ratio) of
 //! RMFA vs exact softmax attention, over the paper's (length, D) grid.
 //!
-//! Backends (MACFORMER_BENCH_BACKEND):
+//! Backends (MACFORMER_BENCH_BACKEND, parsed via `Backend::from_str`):
 //!   host   (default) — typed `attn` sessions over the `AttentionBackend`
-//!          dispatch: the host-fast tier per cell plus the reference tier
+//!          dispatch: the requested tier per cell plus the reference tier
 //!          (fast-vs-oracle speedup); no artifacts/PJRT needed. Any
 //!          Table-1 kernel via MACFORMER_BENCH_KERNEL (default exp).
+//!   reference / auto — same grid, timing that tier instead (rows carry
+//!          a "backend" field in bench_fig4.json).
 //!   device — the original compiled-HLO path over PJRT (needs
 //!          `make artifacts`; exp only).
 //!
@@ -20,7 +22,7 @@ use std::str::FromStr;
 
 use anyhow::anyhow;
 
-use macformer::attn::Kernel;
+use macformer::attn::{Backend, Kernel};
 use macformer::coordinator::microbench;
 use macformer::runtime::Registry;
 
@@ -37,15 +39,18 @@ fn env_usize(name: &str, default: usize) -> usize {
 
 fn main() -> anyhow::Result<()> {
     macformer::util::logging::init();
-    let backend =
+    let backend_name =
         std::env::var("MACFORMER_BENCH_BACKEND").unwrap_or_else(|_| "host".to_string());
+    // typed parses: a typo'd backend or kernel name is a clean error,
+    // never a panic
+    let backend =
+        Backend::from_str(&backend_name).map_err(|e| anyhow!("MACFORMER_BENCH_BACKEND: {e}"))?;
     let kernel_name =
         std::env::var("MACFORMER_BENCH_KERNEL").unwrap_or_else(|_| "exp".to_string());
-    // typed parse: a typo'd kernel name is a clean error, never a panic
     let kernel =
         Kernel::from_str(&kernel_name).map_err(|e| anyhow!("MACFORMER_BENCH_KERNEL: {e}"))?;
     let repeats = env_usize("MACFORMER_BENCH_REPEATS", 3);
-    if backend == "device" {
+    if backend == Backend::Device {
         if kernel != Kernel::Exp {
             anyhow::bail!(
                 "the device grid runs precompiled rmfa_exp artifacts; \
@@ -69,11 +74,12 @@ fn main() -> anyhow::Result<()> {
     let features = env_csv("MACFORMER_BENCH_FEATURES", &[64, 128]);
     let groups = env_usize("MACFORMER_BENCH_GROUPS", 16 * 8);
     println!(
-        "=== E2/E3 / Fig 4 [host sessions]: RMFA_{kernel} vs softmax attention \
+        "=== E2/E3 / Fig 4 [host sessions, {backend} tier]: RMFA_{kernel} vs softmax attention \
          (lengths {lengths:?}, D {features:?}, {repeats} repeats, {groups} batch x head problems, {} threads) ===",
         macformer::fastpath::parallel::num_threads()
     );
-    let cells = microbench::run_host_grid(kernel, &lengths, &features, repeats, 7, groups, 64)?;
+    let cells =
+        microbench::run_host_grid(kernel, backend, &lengths, &features, repeats, 7, groups, 64)?;
     println!("{}", microbench::render_host(&cells));
     std::fs::write("bench_fig4.json", microbench::host_to_json(&cells).to_string())?;
     println!("raw cells written to bench_fig4.json");

@@ -3,9 +3,13 @@
 //! 1. **Host compute path** (always runs): one `attn` spec built twice —
 //!    `Backend::Reference` (scalar per-problem oracle, single thread)
 //!    and `Backend::HostFast` (degree-grouped `FlatRmfMap` GEMMs +
-//!    scoped-thread batched linear attention) — both driven through the
-//!    `AttentionBackend` dispatch at the Fig-4 stress shape n=2048,
+//!    persistent-pool batched linear attention) — both driven through
+//!    the `AttentionBackend` dispatch at the Fig-4 stress shape n=2048,
 //!    D=128. This is the fast-vs-oracle speedup tracked across PRs.
+//!    The host-fast session is then re-timed with the SIMD dispatch
+//!    pinned to each arm (`fastpath::simd::set_active`), producing the
+//!    `speedup_simd_vs_scalar` field (target >= 2x on AVX2 hosts;
+//!    reported as 1.0 with `"simd_supported": false` elsewhere).
 //! 2. **Training loop** (needs `make artifacts` + a PJRT runtime):
 //!    per-step cost breakdown on the lra_text.mac_exp cell — batch
 //!    staging, train step (upload + execute + tuple round-trip), loss
@@ -82,6 +86,29 @@ fn host_phases() -> anyhow::Result<Value> {
     print_phase("rmfa reference", &ref_t);
     print_phase("rmfa fastpath", &fast_t);
     println!("fastpath speedup      : x{speedup:.2} (reference min / fastpath min)");
+
+    // SIMD arm vs scalar arm of the same host-fast session: pin the
+    // dispatch to each arm in turn, then restore the env/CPU default.
+    let simd_supported = fastpath::simd::supported();
+    fastpath::simd::set_active(false);
+    let (_s, scalar_t) = microbench::time_forward(&fast, &q, &k, &v, repeats)?;
+    let simd_on = fastpath::simd::set_active(true);
+    let simd_t = if simd_on {
+        let (_v, t) = microbench::time_forward(&fast, &q, &k, &v, repeats)?;
+        t
+    } else {
+        scalar_t.clone()
+    };
+    fastpath::simd::reset();
+    let speedup_simd = if simd_on { scalar_t.min() / simd_t.min() } else { 1.0 };
+    print_phase("rmfa fastpath scalar", &scalar_t);
+    if simd_on {
+        print_phase("rmfa fastpath simd", &simd_t);
+        println!("simd speedup          : x{speedup_simd:.2} (scalar min / simd min)");
+    } else {
+        println!("simd speedup          : skipped (no AVX2+FMA on this host)");
+    }
+
     Ok(Value::obj(vec![
         ("n", Value::num(n as f64)),
         ("D", Value::num(feat as f64)),
@@ -91,14 +118,18 @@ fn host_phases() -> anyhow::Result<Value> {
             "threads",
             Value::num(fastpath::parallel::num_threads() as f64),
         ),
+        ("simd_supported", Value::Bool(simd_supported)),
         (
             "phases",
             Value::obj(vec![
                 ("rmfa_reference", phase_json(&ref_t)),
                 ("rmfa_fastpath", phase_json(&fast_t)),
+                ("rmfa_fastpath_scalar", phase_json(&scalar_t)),
+                ("rmfa_fastpath_simd", phase_json(&simd_t)),
             ]),
         ),
         ("speedup_fastpath_vs_reference", Value::num(speedup)),
+        ("speedup_simd_vs_scalar", Value::num(speedup_simd)),
     ]))
 }
 

@@ -6,7 +6,8 @@
 //!   truth the other tiers are proved against.
 //! * [`HostFastBackend`] — the engineered host tier
 //!   (`crate::fastpath`): degree-grouped GEMM feature maps and
-//!   scoped-thread batched kernels.
+//!   persistent-pool batched kernels, with a runtime-dispatched
+//!   AVX2+FMA arm on capable hosts.
 //! * [`DeviceBackend`] — PJRT execution. On the vendored stub (or when
 //!   no per-shape artifacts are compiled) every op returns a clean
 //!   `Err` instead of panicking, and [`select`] auto-falls back to the
@@ -67,6 +68,89 @@ pub trait AttentionBackend: Send + Sync {
     /// phi of a single pre-scaled row — the O(1)-per-token building
     /// block of the streaming decode path.
     fn phi_row(&self, map: &FeatureMap, x_scaled: &[f32]) -> Result<Vec<f32>>;
+
+    // ----- allocation-free slice entry points -------------------------
+    //
+    // The `_into` variants below power `AttentionSession::forward_into`:
+    // they write into caller-owned buffers so steady-state forwards make
+    // zero heap allocations. The default implementations wrap the slices
+    // into tensors and delegate to the allocating methods (correct for
+    // every tier); `HostFastBackend` overrides them with true zero-copy,
+    // zero-alloc paths. All slices are flat row-major with the batched
+    // `(g, n, d)` layout of the tensor methods.
+
+    /// Exact softmax attention into a caller-owned `(g, n, dv)` buffer.
+    #[allow(clippy::too_many_arguments)]
+    fn softmax_into(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        g: usize,
+        n: usize,
+        m: usize,
+        d: usize,
+        dv: usize,
+        causal: bool,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let qt = Tensor::from_vec(&[g, n, d], q.to_vec());
+        let kt = Tensor::from_vec(&[g, m, d], k.to_vec());
+        let vt = Tensor::from_vec(&[g, m, dv], v.to_vec());
+        let r = self.softmax(&qt, &kt, &vt, causal)?;
+        out.copy_from_slice(&r.data);
+        Ok(())
+    }
+
+    /// phi over a `(g, n, d)` slice into a caller-owned `(g, n, D)`
+    /// buffer. Inputs are expected to be pre-scaled to score scale.
+    fn features_into(
+        &self,
+        map: &FeatureMap,
+        x: &[f32],
+        g: usize,
+        n: usize,
+        d: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let xt = Tensor::from_vec(&[g, n, d], x.to_vec());
+        let r = self.features(map, &xt)?;
+        out.copy_from_slice(&r.data);
+        Ok(())
+    }
+
+    /// Factored linear contraction into a caller-owned `(g, n, dv)`
+    /// buffer.
+    #[allow(clippy::too_many_arguments)]
+    fn linear_into(
+        &self,
+        phi_q: &[f32],
+        phi_k: &[f32],
+        v: &[f32],
+        g: usize,
+        n: usize,
+        m: usize,
+        feat: usize,
+        dv: usize,
+        causal: bool,
+        eps: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let pq = Tensor::from_vec(&[g, n, feat], phi_q.to_vec());
+        let pk = Tensor::from_vec(&[g, m, feat], phi_k.to_vec());
+        let vt = Tensor::from_vec(&[g, m, dv], v.to_vec());
+        let r = self.linear(&pq, &pk, &vt, causal, eps)?;
+        out.copy_from_slice(&r.data);
+        Ok(())
+    }
+
+    /// phi of a single pre-scaled row into a caller-owned `D`-length
+    /// buffer — the allocation-free decode building block.
+    fn phi_row_into(&self, map: &FeatureMap, x_scaled: &[f32], out: &mut [f32]) -> Result<()> {
+        let r = self.phi_row(map, x_scaled)?;
+        out.copy_from_slice(&r);
+        Ok(())
+    }
 }
 
 fn batched_dims(t: &Tensor, what: &str) -> Result<(usize, usize, usize)> {
@@ -172,7 +256,11 @@ impl AttentionBackend for ReferenceBackend {
     }
 }
 
-/// The engineered host tier: `crate::fastpath` batched kernels.
+/// The engineered host tier: `crate::fastpath` batched kernels over the
+/// persistent worker pool, with the runtime-dispatched SIMD arm
+/// (AVX2+FMA where available, scalar otherwise — `MACFORMER_NO_SIMD=1`
+/// pins the scalar arm). The slice-level `_into` methods are true
+/// zero-allocation paths.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct HostFastBackend;
 
@@ -227,6 +315,66 @@ impl AttentionBackend for HostFastBackend {
         let mut out = vec![0.0f32; map.flat.num_features()];
         map.flat.apply_into(x_scaled, 1, &mut out);
         Ok(out)
+    }
+
+    // Zero-alloc slice paths: straight into the fastpath batched
+    // drivers, no tensor round-trips.
+
+    #[allow(clippy::too_many_arguments)]
+    fn softmax_into(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        g: usize,
+        n: usize,
+        m: usize,
+        d: usize,
+        dv: usize,
+        causal: bool,
+        out: &mut [f32],
+    ) -> Result<()> {
+        fastpath::parallel::softmax_attention_batched_into(q, k, v, g, n, m, d, dv, causal, out);
+        Ok(())
+    }
+
+    fn features_into(
+        &self,
+        map: &FeatureMap,
+        x: &[f32],
+        g: usize,
+        n: usize,
+        d: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        fastpath::parallel::apply_map_batched_into(&map.flat, x, g, n, d, out);
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn linear_into(
+        &self,
+        phi_q: &[f32],
+        phi_k: &[f32],
+        v: &[f32],
+        g: usize,
+        n: usize,
+        m: usize,
+        feat: usize,
+        dv: usize,
+        causal: bool,
+        eps: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        fastpath::parallel::linear_attention_batched_into(
+            phi_q, phi_k, v, g, n, m, feat, dv, causal, eps, out,
+        );
+        Ok(())
+    }
+
+    fn phi_row_into(&self, map: &FeatureMap, x_scaled: &[f32], out: &mut [f32]) -> Result<()> {
+        map.flat.apply_into(x_scaled, 1, out);
+        Ok(())
     }
 }
 

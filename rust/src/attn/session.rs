@@ -7,12 +7,25 @@
 //! — and the streaming decode path — all see the same features. The
 //! batched and streaming causal paths are proved equal by
 //! `tests/attn_api.rs`.
+//!
+//! # Scratch arena
+//!
+//! Each session owns a grow-only scratch arena (behind a `Mutex`)
+//! holding the scaled-input and phi staging buffers, and every kernel-
+//! level buffer (logits blocks, `(S, z)` accumulators) lives in
+//! thread-local scratch inside `crate::fastpath`. Together with the
+//! persistent worker pool this makes steady-state
+//! [`AttentionSession::forward_into`] calls **zero-allocation** after
+//! the first (warmup) call — enforced by `tests/alloc_free.rs`.
+//! Concurrent `forward` calls on one session are safe but serialize on
+//! the arena; use one session per thread for parallel inference.
 
 use std::borrow::Cow;
+use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::fastpath::FlatRmfMap;
+use crate::fastpath::{grow, simd, FlatRmfMap};
 use crate::reference::rmf::RmfMap;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -23,13 +36,39 @@ use super::spec::AttentionSpec;
 
 /// The session's single feature-map draw, in both layouts: the
 /// reference `RmfMap` (scalar oracle) and the degree-grouped
-/// `FlatRmfMap` (GEMM layout). The two are bit-for-bit equivalent, so
-/// every backend sees the same features.
+/// `FlatRmfMap` (GEMM layout). The two are equivalent (bit-for-bit on
+/// the scalar dispatch arm, within `1e-5` on the SIMD arm), so every
+/// backend sees the same features.
 pub struct FeatureMap {
     /// Scalar per-feature layout (`crate::reference::rmf`).
     pub reference: RmfMap,
     /// Degree-grouped GEMM layout (`crate::fastpath::flat_rmf`).
     pub flat: FlatRmfMap,
+}
+
+/// Grow-only session-owned staging buffers for the forward path. Every
+/// used prefix is fully overwritten before being read, so nothing
+/// bleeds between calls of different shapes.
+#[derive(Default)]
+struct Scratch {
+    /// Score-scaled q, `g * n * d`.
+    qs: Vec<f32>,
+    /// Score-scaled k, `g * m * d`.
+    ks: Vec<f32>,
+    /// phi(q'), `g * n * D`.
+    phi_q: Vec<f32>,
+    /// phi(k'), `g * m * D`.
+    phi_k: Vec<f32>,
+}
+
+/// Validated batched dimensions of one forward call.
+struct Dims {
+    g: usize,
+    n: usize,
+    m: usize,
+    d: usize,
+    dv: usize,
+    was_2d: bool,
 }
 
 /// A built attention configuration: spec + resolved backend + (for
@@ -38,6 +77,7 @@ pub struct AttentionSession {
     spec: AttentionSpec,
     backend: Box<dyn AttentionBackend>,
     map: Option<FeatureMap>,
+    scratch: Mutex<Scratch>,
 }
 
 impl AttentionSession {
@@ -59,7 +99,12 @@ impl AttentionSession {
         } else {
             None
         };
-        Ok(AttentionSession { spec, backend, map })
+        Ok(AttentionSession {
+            spec,
+            backend,
+            map,
+            scratch: Mutex::new(Scratch::default()),
+        })
     }
 
     /// The spec this session was built from.
@@ -84,6 +129,42 @@ impl AttentionSession {
         1.0 / (d as f32).sqrt().sqrt()
     }
 
+    /// Shape-check one forward call without copying anything: rank-2
+    /// tensors are viewed as `g = 1`, rank-3 as `(g, n, d)`.
+    fn checked_dims(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Dims> {
+        let view = |t: &Tensor, what: &str| -> Result<(usize, usize, usize)> {
+            match t.rank() {
+                3 => Ok((t.shape[0], t.shape[1], t.shape[2])),
+                2 => Ok((1, t.shape[0], t.shape[1])),
+                r => Err(anyhow!("{what}: expected rank 2 or 3, got rank {r} ({:?})", t.shape)),
+            }
+        };
+        let was_2d = q.rank() == 2;
+        let (g, n, d) = view(q, "forward q")?;
+        let (gk, m, dk) = view(k, "forward k")?;
+        let (gv, mv, dv) = view(v, "forward v")?;
+        if (g, d) != (gk, dk) {
+            bail!("forward: q {:?} and k {:?} disagree on (g, d)", q.shape, k.shape);
+        }
+        if (gk, m) != (gv, mv) {
+            bail!("forward: k {:?} and v {:?} disagree on (g, m)", k.shape, v.shape);
+        }
+        if self.spec.causal && n != m {
+            bail!(
+                "forward: causal attention needs n == m (one prefix per position), \
+                 got n = {n}, m = {m}"
+            );
+        }
+        if self.spec.kernel.has_maclaurin() && d != self.spec.head_dim {
+            bail!(
+                "forward: this session's feature map was sampled for head_dim = {}, \
+                 got inputs with d = {d}",
+                self.spec.head_dim
+            );
+        }
+        Ok(Dims { g, n, m, d, dv, was_2d })
+    }
+
     fn checked_inputs<'t>(
         &self,
         q: &'t Tensor,
@@ -100,32 +181,13 @@ impl AttentionSession {
                 r => Err(anyhow!("{what}: expected rank 2 or 3, got rank {r} ({:?})", t.shape)),
             }
         };
+        // shared validation, then the Cow promotion the quadratic
+        // tensor-level paths still use
+        self.checked_dims(q, k, v)?;
         let was_2d = q.rank() == 2;
         let q3 = promote(q, "forward q")?;
         let k3 = promote(k, "forward k")?;
         let v3 = promote(v, "forward v")?;
-        let (g, n, d) = (q3.shape[0], q3.shape[1], q3.shape[2]);
-        let (gk, m, dk) = (k3.shape[0], k3.shape[1], k3.shape[2]);
-        let (gv, mv, _dv) = (v3.shape[0], v3.shape[1], v3.shape[2]);
-        if (g, d) != (gk, dk) {
-            bail!("forward: q {:?} and k {:?} disagree on (g, d)", q3.shape, k3.shape);
-        }
-        if (gk, m) != (gv, mv) {
-            bail!("forward: k {:?} and v {:?} disagree on (g, m)", k3.shape, v3.shape);
-        }
-        if self.spec.causal && n != m {
-            bail!(
-                "forward: causal attention needs n == m (one prefix per position), \
-                 got n = {n}, m = {m}"
-            );
-        }
-        if self.spec.kernel.has_maclaurin() && d != self.spec.head_dim {
-            bail!(
-                "forward: this session's feature map was sampled for head_dim = {}, \
-                 got inputs with d = {d}",
-                self.spec.head_dim
-            );
-        }
         Ok((q3, k3, v3, was_2d))
     }
 
@@ -146,21 +208,98 @@ impl AttentionSession {
     /// * Table-1 kernels — the linear RMFA path: inputs are scaled to
     ///   score scale, mapped through the session's phi draw, and
     ///   contracted via running `(S, z)` state (O(n) total).
+    ///
+    /// Allocates the output tensor; reuse one via [`forward_into`](Self::forward_into)
+    /// for allocation-free steady state.
     pub fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
-        let (q3, k3, v3, was_2d) = self.checked_inputs(q, k, v)?;
-        let out = match self.spec.kernel {
-            Kernel::Softmax => self.backend.softmax(&q3, &k3, &v3, self.spec.causal)?,
+        let mut out = Tensor { shape: Vec::new(), data: Vec::new() };
+        self.forward_into(q, k, v, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`forward`](Self::forward) into a caller-owned output tensor,
+    /// which is reshaped and resized as needed (grow-only data buffer).
+    /// After a warmup call per shape, repeated calls make **zero heap
+    /// allocations**: inputs are scaled and phi-mapped inside the
+    /// session's scratch arena and the kernels run out of thread-local
+    /// workspaces. On error the output's contents are unspecified.
+    pub fn forward_into(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let Dims { g, n, m, d, dv, was_2d } = self.checked_dims(q, k, v)?;
+        // reshape in place: clear + extend reuses the shape vec's capacity
+        out.shape.clear();
+        if was_2d {
+            out.shape.extend_from_slice(&[n, dv]);
+        } else {
+            out.shape.extend_from_slice(&[g, n, dv]);
+        }
+        out.data.resize(g * n * dv, 0.0);
+        match self.spec.kernel {
+            Kernel::Softmax => self.backend.softmax_into(
+                &q.data,
+                &k.data,
+                &v.data,
+                g,
+                n,
+                m,
+                d,
+                dv,
+                self.spec.causal,
+                &mut out.data,
+            ),
             _ => {
                 let map = self.map.as_ref().expect("Maclaurin session always has a map");
-                let scale = self.input_scale(q3.shape[2]);
-                let qs = q3.scale(scale);
-                let ks = k3.scale(scale);
-                let phi_q = self.backend.features(map, &qs)?;
-                let phi_k = self.backend.features(map, &ks)?;
-                self.backend.linear(&phi_q, &phi_k, &v3, self.spec.causal, self.spec.eps)?
+                let feat = map.flat.num_features();
+                let scale = self.input_scale(d);
+                // A panicking kernel shard unwinds through this guard and
+                // poisons the lock; the scratch holds no invariants (every
+                // used prefix is overwritten before reads), so recover the
+                // buffers instead of bricking the session forever.
+                let mut scratch =
+                    self.scratch.lock().unwrap_or_else(|poison| poison.into_inner());
+                let sc = &mut *scratch;
+                grow(&mut sc.qs, g * n * d);
+                grow(&mut sc.ks, g * m * d);
+                grow(&mut sc.phi_q, g * n * feat);
+                grow(&mut sc.phi_k, g * m * feat);
+                simd::scaled_copy(&q.data, scale, &mut sc.qs[..g * n * d]);
+                simd::scaled_copy(&k.data, scale, &mut sc.ks[..g * m * d]);
+                self.backend.features_into(
+                    map,
+                    &sc.qs[..g * n * d],
+                    g,
+                    n,
+                    d,
+                    &mut sc.phi_q[..g * n * feat],
+                )?;
+                self.backend.features_into(
+                    map,
+                    &sc.ks[..g * m * d],
+                    g,
+                    m,
+                    d,
+                    &mut sc.phi_k[..g * m * feat],
+                )?;
+                self.backend.linear_into(
+                    &sc.phi_q[..g * n * feat],
+                    &sc.phi_k[..g * m * feat],
+                    &v.data,
+                    g,
+                    n,
+                    m,
+                    feat,
+                    dv,
+                    self.spec.causal,
+                    self.spec.eps,
+                    &mut out.data,
+                )
             }
-        };
-        Ok(Self::demote(out, was_2d))
+        }
     }
 
     /// The quadratic oracle this session's `forward` approximates:
@@ -182,7 +321,9 @@ impl AttentionSession {
     /// Start an O(1)-per-token streaming decode for one problem (one
     /// head) producing `dv`-dimensional outputs. Requires a causal
     /// session with a Table-1 kernel; matches the batched causal
-    /// `forward()` token-for-token.
+    /// `forward()` token-for-token. The state owns its own scratch
+    /// (running accumulators + a phi staging row), so decode and
+    /// batched `forward` calls interleave freely on one session.
     pub fn begin_decode(&self, dv: usize) -> Result<CausalState<'_>> {
         if !self.spec.causal {
             bail!(
@@ -213,6 +354,7 @@ impl AttentionSession {
             z: vec![0.0f32; feat],
             q_scaled: vec![0.0f32; self.spec.head_dim],
             k_scaled: vec![0.0f32; self.spec.head_dim],
+            phi: vec![0.0f32; feat],
             len: 0,
         })
     }
@@ -223,6 +365,10 @@ impl AttentionSession {
 /// one `(q, k, v)` row in and emits that position's attention output in
 /// O(D * dv) time and O(D * dv) memory — independent of the sequence
 /// length, the linear-attention decoding story of Performer/RFA.
+///
+/// All per-token staging (scaled rows, the phi row) is owned by the
+/// state and reused, so [`CausalState::append_token_into`] is
+/// allocation-free after construction.
 pub struct CausalState<'s> {
     session: &'s AttentionSession,
     dv: usize,
@@ -233,6 +379,8 @@ pub struct CausalState<'s> {
     /// Reused per-token scratch for the score-scaled q/k rows.
     q_scaled: Vec<f32>,
     k_scaled: Vec<f32>,
+    /// Reused per-token phi staging row (first phi(k'), then phi(q')).
+    phi: Vec<f32>,
     len: usize,
 }
 
@@ -248,11 +396,28 @@ impl CausalState<'_> {
     }
 
     /// Fold in one token and return its attention output (length `dv`).
+    /// Allocates the output row; use
+    /// [`append_token_into`](Self::append_token_into) for the
+    /// allocation-free form.
+    pub fn append_token(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.dv];
+        self.append_token_into(q, k, v, &mut out)?;
+        Ok(out)
+    }
+
+    /// Fold in one token, writing its attention output into a caller-
+    /// owned `dv`-length row. Zero allocations in steady state.
     ///
     /// The key/value update happens before the query read — position i
     /// attends to positions `0..=i`, exactly like the batched causal
     /// path.
-    pub fn append_token(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+    pub fn append_token_into(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
         let spec = self.session.spec();
         let d = spec.head_dim;
         if q.len() != d || k.len() != d {
@@ -265,38 +430,38 @@ impl CausalState<'_> {
         if v.len() != self.dv {
             bail!("append_token: v row must have length dv = {}, got {}", self.dv, v.len());
         }
+        if out.len() != self.dv {
+            bail!(
+                "append_token: out row must have length dv = {}, got {}",
+                self.dv,
+                out.len()
+            );
+        }
         let map = self.session.feature_map().expect("decode state implies a map");
         let scale = self.session.input_scale(d);
-        for (dst, x) in self.q_scaled.iter_mut().zip(q) {
-            *dst = x * scale;
-        }
-        for (dst, x) in self.k_scaled.iter_mut().zip(k) {
-            *dst = x * scale;
-        }
-        let phi_k = self.session.backend.phi_row(map, &self.k_scaled)?;
-        for (f, &pkf) in phi_k.iter().enumerate() {
+        simd::scaled_copy(q, scale, &mut self.q_scaled);
+        simd::scaled_copy(k, scale, &mut self.k_scaled);
+        self.session.backend.phi_row_into(map, &self.k_scaled, &mut self.phi)?;
+        for (f, &pkf) in self.phi.iter().enumerate() {
             self.z[f] += pkf;
-            let srow = &mut self.s[f * self.dv..(f + 1) * self.dv];
-            for (acc, x) in srow.iter_mut().zip(v) {
-                *acc += pkf * x;
+            if pkf == 0.0 {
+                continue;
             }
+            simd::axpy(pkf, v, &mut self.s[f * self.dv..(f + 1) * self.dv]);
         }
-        let phi_q = self.session.backend.phi_row(map, &self.q_scaled)?;
+        self.session.backend.phi_row_into(map, &self.q_scaled, &mut self.phi)?;
         let mut den = 0.0f32;
-        let mut num = vec![0.0f32; self.dv];
-        for (f, &pqf) in phi_q.iter().enumerate() {
+        out.fill(0.0);
+        for (f, &pqf) in self.phi.iter().enumerate() {
             den += pqf * self.z[f];
-            let srow = &self.s[f * self.dv..(f + 1) * self.dv];
-            for (acc, x) in num.iter_mut().zip(srow) {
-                *acc += pqf * x;
+            if pqf == 0.0 {
+                continue;
             }
+            simd::axpy(pqf, &self.s[f * self.dv..(f + 1) * self.dv], out);
         }
-        let denom = den + spec.eps;
-        for o in num.iter_mut() {
-            *o /= denom;
-        }
+        simd::div_assign(out, den + spec.eps);
         self.len += 1;
-        Ok(num)
+        Ok(())
     }
 }
 
@@ -345,6 +510,30 @@ mod tests {
     }
 
     #[test]
+    fn forward_into_reuses_the_output_tensor() {
+        let mut rng = Rng::new(15);
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(16)
+            .seed(2)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let mut out = Tensor { shape: Vec::new(), data: Vec::new() };
+        // big, then small, then big again: shapes must track the inputs
+        // and results must equal fresh forward() calls (no stale state)
+        for n in [40usize, 3, 40] {
+            let q = randn(&mut rng, &[2, n, 4], 0.5);
+            let k = randn(&mut rng, &[2, n, 4], 0.5);
+            let v = randn(&mut rng, &[2, n, 3], 1.0);
+            sess.forward_into(&q, &k, &v, &mut out).unwrap();
+            assert_eq!(out.shape, vec![2, n, 3]);
+            let fresh = sess.forward(&q, &k, &v).unwrap();
+            assert_eq!(out.data[..2 * n * 3], fresh.data[..], "n={n}");
+        }
+    }
+
+    #[test]
     fn causal_shape_mismatch_is_an_error_not_a_panic() {
         let mut rng = Rng::new(6);
         let q = randn(&mut rng, &[1, 4, 4], 0.5);
@@ -374,6 +563,23 @@ mod tests {
             .unwrap();
         let state = ok.begin_decode(3).unwrap();
         assert!(state.is_empty());
+    }
+
+    #[test]
+    fn append_token_into_rejects_bad_out_len() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(2)
+            .num_features(8)
+            .causal(true)
+            .build()
+            .unwrap();
+        let mut state = sess.begin_decode(3).unwrap();
+        let mut out = [0.0f32; 2];
+        let err = state
+            .append_token_into(&[0.1, 0.2], &[0.3, 0.4], &[1.0, 2.0, 3.0], &mut out)
+            .unwrap_err();
+        assert!(err.to_string().contains("out row"), "{err}");
+        assert!(state.is_empty(), "a rejected token must not advance the state");
     }
 
     #[test]

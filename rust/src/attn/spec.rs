@@ -21,7 +21,9 @@ pub enum Backend {
     /// single thread, never optimized.
     Reference,
     /// The engineered host tier (`crate::fastpath`) — degree-grouped
-    /// GEMM feature maps + scoped-thread batched kernels.
+    /// GEMM feature maps + persistent-pool batched kernels, with a
+    /// runtime-dispatched AVX2+FMA arm on capable x86_64 hosts
+    /// (`MACFORMER_NO_SIMD=1` pins the always-available scalar arm).
     HostFast,
     /// PJRT device execution. Gates itself off (every op returns `Err`)
     /// when the runtime is the vendored stub or no per-shape artifacts

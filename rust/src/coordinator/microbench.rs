@@ -5,9 +5,10 @@
 //! * **device** (`run_grid`) — the original path: compiled HLO modules
 //!   over PJRT, identical in-graph preSBN (eps = 1e-12).
 //! * **host** (`run_host_grid`) — typed `attn` sessions dispatched over
-//!   the `AttentionBackend` trait: the fast tier (`Backend::HostFast` —
-//!   `FlatRmfMap` GEMM feature maps + scoped-thread batched kernels)
-//!   and, per cell, the oracle tier (`Backend::Reference`, scalar
+//!   the `AttentionBackend` trait: the requested tier (default
+//!   `Backend::HostFast` — `FlatRmfMap` GEMM feature maps +
+//!   persistent-pool batched kernels with the runtime-dispatched SIMD
+//!   arm) and, per cell, the oracle tier (`Backend::Reference`, scalar
 //!   per-problem, single thread) so the fast-vs-oracle speedup is
 //!   tracked under one protocol. Any Table-1 kernel, not just exp.
 //!
@@ -165,12 +166,15 @@ pub fn render(cells: &[MicroCell]) -> String {
 pub struct HostCell {
     /// The Table-1 kernel the RMFA sessions ran.
     pub kernel: Kernel,
+    /// Resolved name of the tier that produced `rmfa_seconds`
+    /// (`Backend::Auto` is resolved before timing).
+    pub backend: &'static str,
     pub n: usize,
     pub feature_dim: usize,
     pub nmse: f64,
     /// exact softmax attention through the host-fast backend, min seconds
     pub softmax_seconds: f64,
-    /// RMFA session forward on `Backend::HostFast`
+    /// RMFA session forward on the requested backend tier
     pub rmfa_seconds: f64,
     /// RMFA session forward on `Backend::Reference` (scalar, single thread)
     pub reference_seconds: f64,
@@ -217,14 +221,18 @@ pub fn time_forward(
 /// Run the Fig-4 grid entirely on the host, through the typed `attn`
 /// session API. `groups` is batch x heads (paper: 16 x 8 = 128), `dim`
 /// the head dimension (paper: 64). Per cell three sessions run: exact
-/// softmax (host-fast tier), the RMFA session on `Backend::HostFast`,
-/// and the same spec on `Backend::Reference` — all timed min over the
-/// same `repeats`, so no path gets a cold-start penalty the others
-/// amortize away. NMSE is measured against exact softmax for the exp
-/// kernel (Fig 4a) and against the quadratic Definition-2 oracle for
-/// every other kernel.
+/// softmax (host-fast tier), the RMFA session on the requested
+/// `backend` tier (`Auto` resolves before timing; `Reference` times the
+/// oracle tier itself, so the speedup column reads ~1x), and the same
+/// spec on `Backend::Reference` — all timed min over the same
+/// `repeats`, so no path gets a cold-start penalty the others amortize
+/// away. NMSE is measured against exact softmax for the exp kernel
+/// (Fig 4a) and against the quadratic Definition-2 oracle for every
+/// other kernel.
+#[allow(clippy::too_many_arguments)]
 pub fn run_host_grid(
     kernel: Kernel,
+    backend: Backend,
     lengths: &[usize],
     features: &[usize],
     repeats: usize,
@@ -238,6 +246,17 @@ pub fn run_host_grid(
              exact baseline itself — pick one of: exp, inv, log, trigh, sqrt"
         );
     }
+    if backend == Backend::Device {
+        bail!(
+            "the host grid cannot time the device tier (generic-shape artifacts are not \
+             compiled); use the device grid via `microbench --backend device`"
+        );
+    }
+    // Resolve Auto to a host tier explicitly: on a device-capable build
+    // `select(Auto)` could pick the device tier, whose generic-shape ops
+    // error — and the host grid only times host tiers (the bail above).
+    let backend = if backend == Backend::Auto { Backend::HostFast } else { backend };
+    let backend_name = crate::attn::select(backend).name();
     let eps = 1e-6f32;
     let softmax_session = AttentionSpec::new(Kernel::Softmax)
         .head_dim(dim)
@@ -259,7 +278,7 @@ pub fn run_host_grid(
                 .num_features(feat)
                 .eps(eps)
                 .seed(seed ^ (feat as u64).wrapping_mul(0xD1B54A32D192ED03) ^ n as u64);
-            let fast = spec.clone().backend(Backend::HostFast).build()?;
+            let fast = spec.clone().backend(backend).build()?;
             let reference = spec.backend(Backend::Reference).build()?;
 
             let (approx, rmfa_t) = time_forward(&fast, &q, &k, &v, repeats)?;
@@ -275,6 +294,7 @@ pub fn run_host_grid(
 
             let cell = HostCell {
                 kernel,
+                backend: backend_name,
                 n,
                 feature_dim: feat,
                 nmse: err,
@@ -283,7 +303,7 @@ pub fn run_host_grid(
                 reference_seconds: reference_t.min(),
             };
             log::info!(
-                "host micro {kernel} n={n} D={feat}: log10(nmse)={:.2} log10(speedup)={:+.2} vs-reference x{:.1}",
+                "host micro {kernel} [{backend_name}] n={n} D={feat}: log10(nmse)={:.2} log10(speedup)={:+.2} vs-reference x{:.1}",
                 cell.log10_nmse(),
                 cell.log10_speedup(),
                 cell.speedup_vs_reference()
@@ -348,6 +368,7 @@ pub fn host_to_json(cells: &[HostCell]) -> Value {
             .map(|c| {
                 Value::obj(vec![
                     ("kernel", Value::str(c.kernel.name())),
+                    ("backend", Value::str(c.backend)),
                     ("n", Value::num(c.n as f64)),
                     ("D", Value::num(c.feature_dim as f64)),
                     ("nmse", Value::num(c.nmse)),
@@ -400,9 +421,11 @@ mod tests {
 
     #[test]
     fn host_grid_smoke() {
-        let cells = run_host_grid(Kernel::Exp, &[8], &[4], 1, 3, 2, 4).unwrap();
+        let cells =
+            run_host_grid(Kernel::Exp, Backend::HostFast, &[8], &[4], 1, 3, 2, 4).unwrap();
         assert_eq!(cells.len(), 1);
         let c = &cells[0];
+        assert_eq!(c.backend, "host");
         assert!(c.nmse.is_finite() && c.nmse >= 0.0, "nmse {}", c.nmse);
         assert!(c.rmfa_seconds >= 0.0 && c.reference_seconds >= 0.0);
         let s = render_host(&cells);
@@ -411,11 +434,28 @@ mod tests {
         let j = host_to_json(&cells).to_string();
         assert!(j.contains("speedup_vs_reference"), "{j}");
         assert!(j.contains("\"kernel\""), "{j}");
+        assert!(j.contains("\"backend\""), "{j}");
+    }
+
+    #[test]
+    fn host_grid_times_any_tier() {
+        // --backend reference: the grid times the oracle tier itself
+        let cells =
+            run_host_grid(Kernel::Exp, Backend::Reference, &[6], &[4], 1, 3, 2, 4).unwrap();
+        assert_eq!(cells[0].backend, "reference");
+        // auto resolves to the host tier before timing
+        let cells = run_host_grid(Kernel::Exp, Backend::Auto, &[6], &[4], 1, 3, 2, 4).unwrap();
+        assert_eq!(cells[0].backend, "host");
+        // the device tier has no generic-shape path to time
+        let err =
+            run_host_grid(Kernel::Exp, Backend::Device, &[6], &[4], 1, 3, 2, 4).unwrap_err();
+        assert!(err.to_string().contains("device"), "{err}");
     }
 
     #[test]
     fn host_grid_non_exp_kernel_measures_against_kernelized_oracle() {
-        let cells = run_host_grid(Kernel::Inv, &[6], &[8], 1, 5, 2, 4).unwrap();
+        let cells =
+            run_host_grid(Kernel::Inv, Backend::HostFast, &[6], &[8], 1, 5, 2, 4).unwrap();
         assert_eq!(cells.len(), 1);
         assert_eq!(cells[0].kernel, Kernel::Inv);
         assert!(cells[0].nmse.is_finite(), "nmse {}", cells[0].nmse);
@@ -425,7 +465,8 @@ mod tests {
 
     #[test]
     fn host_grid_rejects_softmax_kernel() {
-        let err = run_host_grid(Kernel::Softmax, &[4], &[4], 1, 1, 1, 4).unwrap_err();
+        let err = run_host_grid(Kernel::Softmax, Backend::HostFast, &[4], &[4], 1, 1, 1, 4)
+            .unwrap_err();
         assert!(err.to_string().contains("exact baseline"), "{err}");
     }
 

@@ -1,19 +1,57 @@
 //! Cache-aware single-problem attention kernels.
 //!
 //! Same math as `reference::attention` (which stays the oracle), but:
-//! score matrices come from the register-blocked `matmul_nt_into` GEMM
+//! score matrices come from the runtime-dispatched `matmul_nt_into` GEMM
+//! (AVX2+FMA on capable hosts, register-blocked scalar otherwise)
 //! instead of per-row scalar dots, rows are processed in blocks so the
 //! logits working set stays L1/L2-resident, and every inner loop walks
-//! contiguous memory. All functions also exist as `_into` variants over
-//! raw slices so the parallel driver can shard one batched tensor into
-//! per-problem sub-slices without copies.
+//! contiguous memory through the `fastpath::simd` primitives (row
+//! weighting, normalize, running `(S, z)` updates). Transcendentals
+//! (`exp` and the Table-1 kernel weights) stay scalar on both arms.
+//!
+//! All functions also exist as `_into` variants over raw slices so the
+//! parallel driver can shard one batched tensor into per-problem
+//! sub-slices without copies.
+//!
+//! # Scratch discipline
+//!
+//! The logits / score blocks and the linear-attention `(S, z)`
+//! accumulators live in a grow-only, thread-local workspace instead
+//! of per-call `vec![0.0; ..]`s. The persistent worker pool keeps its
+//! threads (and therefore their workspaces) alive across calls, so
+//! steady-state attention makes **zero heap allocations** — enforced by
+//! `tests/alloc_free.rs`. Every buffer's used prefix is fully
+//! overwritten (or explicitly zero-filled) before being read, so no
+//! state bleeds between calls of different shapes.
+
+use std::cell::RefCell;
 
 use crate::attn::Kernel;
-use crate::tensor::{matmul_nt_into, Tensor};
+use crate::tensor::{matmul_nt_into, matmul_tn_into, Tensor};
+
+use super::{grow, simd};
 
 /// Rows of the score matrix materialized at a time: 32 rows x n=4096
 /// cols of f32 is 512 KiB, comfortably L2-resident.
 const ROW_BLOCK: usize = 32;
+
+/// Grow-only per-thread scratch for the attention kernels.
+struct Workspace {
+    /// ROW_BLOCK x m score/logits block.
+    logits: Vec<f32>,
+    /// feat x dv linear-attention accumulator.
+    s: Vec<f32>,
+    /// feat linear-attention normalizer.
+    z: Vec<f32>,
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<Workspace> = RefCell::new(Workspace {
+        logits: Vec::new(),
+        s: Vec::new(),
+        z: Vec::new(),
+    });
+}
 
 /// Exact softmax attention, blocked: out = softmax(q k^T / sqrt(d)) v.
 pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Tensor {
@@ -50,50 +88,45 @@ pub fn softmax_attention_into(
         assert_eq!(n, m, "causal softmax attention needs n == m");
     }
     let scale = 1.0 / (d as f32).sqrt();
-    let mut logits = vec![0.0f32; ROW_BLOCK * m];
-    let mut i0 = 0;
-    while i0 < n {
-        let ib = ROW_BLOCK.min(n - i0);
-        // score block = Q[i0..i0+ib] · K[..cols]^T, one GEMM. Under a
-        // causal mask only keys j <= i are ever read, so cap the GEMM at
-        // the block's widest row instead of computing the full triangle.
-        let cols = if causal { (i0 + ib).min(m) } else { m };
-        matmul_nt_into(
-            &q[i0 * d..(i0 + ib) * d],
-            ib,
-            d,
-            &k[..cols * d],
-            cols,
-            &mut logits[..ib * cols],
-        );
-        for ii in 0..ib {
-            let i = i0 + ii;
-            let limit = if causal { (i + 1).min(m) } else { m };
-            let row = &mut logits[ii * cols..ii * cols + limit];
-            let mut maxl = f32::NEG_INFINITY;
-            for l in row.iter_mut() {
-                *l *= scale;
-                maxl = maxl.max(*l);
-            }
-            let mut z = 0.0f32;
-            for l in row.iter_mut() {
-                *l = (*l - maxl).exp();
-                z += *l;
-            }
-            let orow = &mut out[i * dv..(i + 1) * dv];
-            orow.fill(0.0);
-            for (j, &w) in row.iter().enumerate() {
-                let vj = &v[j * dv..(j + 1) * dv];
-                for (o, x) in orow.iter_mut().zip(vj) {
-                    *o += w * x;
+    WORKSPACE.with(|ws| {
+        let ws = &mut *ws.borrow_mut();
+        grow(&mut ws.logits, ROW_BLOCK * m);
+        let logits = &mut ws.logits;
+        let mut i0 = 0;
+        while i0 < n {
+            let ib = ROW_BLOCK.min(n - i0);
+            // score block = Q[i0..i0+ib] · K[..cols]^T, one GEMM. Under a
+            // causal mask only keys j <= i are ever read, so cap the GEMM at
+            // the block's widest row instead of computing the full triangle.
+            let cols = if causal { (i0 + ib).min(m) } else { m };
+            matmul_nt_into(
+                &q[i0 * d..(i0 + ib) * d],
+                ib,
+                d,
+                &k[..cols * d],
+                cols,
+                &mut logits[..ib * cols],
+            );
+            for ii in 0..ib {
+                let i = i0 + ii;
+                let limit = if causal { (i + 1).min(m) } else { m };
+                let row = &mut logits[ii * cols..ii * cols + limit];
+                let maxl = simd::scale_max(row, scale);
+                let mut z = 0.0f32;
+                for l in row.iter_mut() {
+                    *l = (*l - maxl).exp();
+                    z += *l;
                 }
+                let orow = &mut out[i * dv..(i + 1) * dv];
+                orow.fill(0.0);
+                for (j, &w) in row.iter().enumerate() {
+                    simd::axpy(w, &v[j * dv..(j + 1) * dv], orow);
+                }
+                simd::div_assign(orow, z);
             }
-            for o in orow.iter_mut() {
-                *o /= z;
-            }
+            i0 += ib;
         }
-        i0 += ib;
-    }
+    });
 }
 
 /// Kernelized attention (Definition 2), blocked, any Table-1 kernel.
@@ -146,42 +179,40 @@ pub fn kernelized_attention_into(
     let kf = kernel
         .value_fn()
         .expect("kernelized attention requires a Table-1 Maclaurin kernel");
-    let mut scores = vec![0.0f32; ROW_BLOCK * m];
-    let mut i0 = 0;
-    while i0 < n {
-        let ib = ROW_BLOCK.min(n - i0);
-        // see softmax_attention_into: cap the GEMM at the causal width
-        let cols = if causal { (i0 + ib).min(m) } else { m };
-        matmul_nt_into(
-            &q[i0 * d..(i0 + ib) * d],
-            ib,
-            d,
-            &k[..cols * d],
-            cols,
-            &mut scores[..ib * cols],
-        );
-        for ii in 0..ib {
-            let i = i0 + ii;
-            let limit = if causal { (i + 1).min(m) } else { m };
-            let row = &scores[ii * cols..ii * cols + limit];
-            let mut den = 0.0f32;
-            let orow = &mut out[i * dv..(i + 1) * dv];
-            orow.fill(0.0);
-            for (j, &t) in row.iter().enumerate() {
-                let w = kf((t * scale) as f64) as f32;
-                den += w;
-                let vj = &v[j * dv..(j + 1) * dv];
-                for (o, x) in orow.iter_mut().zip(vj) {
-                    *o += w * x;
+    WORKSPACE.with(|ws| {
+        let ws = &mut *ws.borrow_mut();
+        grow(&mut ws.logits, ROW_BLOCK * m);
+        let scores = &mut ws.logits;
+        let mut i0 = 0;
+        while i0 < n {
+            let ib = ROW_BLOCK.min(n - i0);
+            // see softmax_attention_into: cap the GEMM at the causal width
+            let cols = if causal { (i0 + ib).min(m) } else { m };
+            matmul_nt_into(
+                &q[i0 * d..(i0 + ib) * d],
+                ib,
+                d,
+                &k[..cols * d],
+                cols,
+                &mut scores[..ib * cols],
+            );
+            for ii in 0..ib {
+                let i = i0 + ii;
+                let limit = if causal { (i + 1).min(m) } else { m };
+                let row = &scores[ii * cols..ii * cols + limit];
+                let mut den = 0.0f32;
+                let orow = &mut out[i * dv..(i + 1) * dv];
+                orow.fill(0.0);
+                for (j, &t) in row.iter().enumerate() {
+                    let w = kf((t * scale) as f64) as f32;
+                    den += w;
+                    simd::axpy(w, &v[j * dv..(j + 1) * dv], orow);
                 }
+                simd::div_assign(orow, den + eps);
             }
-            let denom = den + eps;
-            for o in orow.iter_mut() {
-                *o /= denom;
-            }
+            i0 += ib;
         }
-        i0 += ib;
-    }
+    });
 }
 
 /// Factored linear contraction: out_i = phi_q_i S / (phi_q_i z + eps).
@@ -225,79 +256,63 @@ pub fn linear_attention_into(
     assert_eq!(out.len(), n * dv);
     if causal {
         assert_eq!(n, m, "causal linear attention needs n == m");
-        let mut s = vec![0.0f32; feat * dv];
-        let mut z = vec![0.0f32; feat];
-        for i in 0..n {
-            let pk = &phi_k[i * feat..(i + 1) * feat];
-            let vi = &v[i * dv..(i + 1) * dv];
-            for (f, &pkf) in pk.iter().enumerate() {
-                z[f] += pkf;
-                if pkf == 0.0 {
-                    continue;
-                }
-                let srow = &mut s[f * dv..(f + 1) * dv];
-                for (acc, x) in srow.iter_mut().zip(vi) {
-                    *acc += pkf * x;
-                }
-            }
-            let pq = &phi_q[i * feat..(i + 1) * feat];
-            let mut den = 0.0f32;
-            let orow = &mut out[i * dv..(i + 1) * dv];
-            orow.fill(0.0);
-            for (f, &pqf) in pq.iter().enumerate() {
-                den += pqf * z[f];
-                if pqf == 0.0 {
-                    continue;
-                }
-                let srow = &s[f * dv..(f + 1) * dv];
-                for (o, x) in orow.iter_mut().zip(srow) {
-                    *o += pqf * x;
-                }
-            }
-            let denom = den + eps;
-            for o in orow.iter_mut() {
-                *o /= denom;
-            }
-        }
-    } else {
-        // S = phi_k^T v (feat x dv) and z = colsum(phi_k), one fused
-        // pass of contiguous rank-1 updates.
-        let mut s = vec![0.0f32; feat * dv];
-        let mut z = vec![0.0f32; feat];
-        for j in 0..m {
-            let pk = &phi_k[j * feat..(j + 1) * feat];
-            let vj = &v[j * dv..(j + 1) * dv];
-            for (f, &pkf) in pk.iter().enumerate() {
-                z[f] += pkf;
-                if pkf == 0.0 {
-                    continue;
-                }
-                let srow = &mut s[f * dv..(f + 1) * dv];
-                for (acc, x) in srow.iter_mut().zip(vj) {
-                    *acc += pkf * x;
-                }
-            }
-        }
-        for i in 0..n {
-            let pq = &phi_q[i * feat..(i + 1) * feat];
-            let den: f32 = pq.iter().zip(&z).map(|(a, b)| a * b).sum();
-            let orow = &mut out[i * dv..(i + 1) * dv];
-            orow.fill(0.0);
-            for (f, &pqf) in pq.iter().enumerate() {
-                if pqf == 0.0 {
-                    continue;
-                }
-                let srow = &s[f * dv..(f + 1) * dv];
-                for (o, x) in orow.iter_mut().zip(srow) {
-                    *o += pqf * x;
-                }
-            }
-            let denom = den + eps;
-            for o in orow.iter_mut() {
-                *o /= denom;
-            }
-        }
     }
+    WORKSPACE.with(|ws| {
+        let ws = &mut *ws.borrow_mut();
+        grow(&mut ws.s, feat * dv);
+        grow(&mut ws.z, feat);
+        let s = &mut ws.s[..feat * dv];
+        let z = &mut ws.z[..feat];
+        if causal {
+            s.fill(0.0);
+            z.fill(0.0);
+            for i in 0..n {
+                let pk = &phi_k[i * feat..(i + 1) * feat];
+                let vi = &v[i * dv..(i + 1) * dv];
+                for (f, &pkf) in pk.iter().enumerate() {
+                    z[f] += pkf;
+                    if pkf == 0.0 {
+                        continue;
+                    }
+                    simd::axpy(pkf, vi, &mut s[f * dv..(f + 1) * dv]);
+                }
+                let pq = &phi_q[i * feat..(i + 1) * feat];
+                let mut den = 0.0f32;
+                let orow = &mut out[i * dv..(i + 1) * dv];
+                orow.fill(0.0);
+                for (f, &pqf) in pq.iter().enumerate() {
+                    den += pqf * z[f];
+                    if pqf == 0.0 {
+                        continue;
+                    }
+                    simd::axpy(pqf, &s[f * dv..(f + 1) * dv], orow);
+                }
+                simd::div_assign(orow, den + eps);
+            }
+        } else {
+            // S = phi_k^T v (feat x dv) via the dispatched rank-1-update
+            // GEMM and z = colsum(phi_k) — same accumulation order over
+            // keys as the fused reference loop.
+            matmul_tn_into(phi_k, m, feat, v, dv, s);
+            z.fill(0.0);
+            for j in 0..m {
+                simd::axpy(1.0, &phi_k[j * feat..(j + 1) * feat], z);
+            }
+            for i in 0..n {
+                let pq = &phi_q[i * feat..(i + 1) * feat];
+                let den = simd::dot(pq, z);
+                let orow = &mut out[i * dv..(i + 1) * dv];
+                orow.fill(0.0);
+                for (f, &pqf) in pq.iter().enumerate() {
+                    if pqf == 0.0 {
+                        continue;
+                    }
+                    simd::axpy(pqf, &s[f * dv..(f + 1) * dv], orow);
+                }
+                simd::div_assign(orow, den + eps);
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -355,6 +370,33 @@ mod tests {
             let a = oracle::linear_attention(&phi_q, &phi_k, &v, causal, 1e-6);
             let b = linear_attention(&phi_q, &phi_k, &v, causal, 1e-6);
             assert!(a.max_abs_diff(&b) < 1e-5, "causal={causal}: {}", a.max_abs_diff(&b));
+        }
+    }
+
+    /// The workspace is shared across shapes within a thread: running a
+    /// big problem, then a small one, then the big one again must give
+    /// identical results (no stale-buffer bleed).
+    #[test]
+    fn workspace_reuse_across_shapes_is_stateless() {
+        let mut rng = Rng::new(24);
+        let qb = randn(&mut rng, &[40, 6], 0.6);
+        let kb = randn(&mut rng, &[40, 6], 0.6);
+        let vb = randn(&mut rng, &[40, 4], 1.0);
+        let qs = randn(&mut rng, &[3, 2], 0.6);
+        let ks = randn(&mut rng, &[3, 2], 0.6);
+        let vs = randn(&mut rng, &[3, 7], 1.0);
+        for causal in [false, true] {
+            let first = softmax_attention(&qb, &kb, &vb, causal);
+            let _ = softmax_attention(&qs, &ks, &vs, causal);
+            let again = softmax_attention(&qb, &kb, &vb, causal);
+            assert_eq!(first.data, again.data, "softmax causal={causal}");
+
+            let pqb = qb.map(f32::abs);
+            let pkb = kb.map(f32::abs);
+            let first = linear_attention(&pqb, &pkb, &vb, causal, 1e-6);
+            let _ = linear_attention(&qs.map(f32::abs), &ks.map(f32::abs), &vs, causal, 1e-6);
+            let again = linear_attention(&pqb, &pkb, &vb, causal, 1e-6);
+            assert_eq!(first.data, again.data, "linear causal={causal}");
         }
     }
 }

@@ -1,8 +1,9 @@
-//! The host fast compute path: cache-aware, data-parallel versions of
-//! the three hot kernels (RMF feature map, softmax attention, linear
-//! attention) behind the Fig-4 micro-benchmarks and the hotpath bench.
+//! The host fast compute path: cache-aware, data-parallel, SIMD-capable
+//! versions of the three hot kernels (RMF feature map, softmax
+//! attention, linear attention) behind the Fig-4 micro-benchmarks and
+//! the hotpath bench.
 //!
-//! Two-tier structure (the contract every later backend follows):
+//! Tier structure (the contract every later backend follows):
 //!
 //! * **oracle tier** — `crate::reference`: scalar, single-problem,
 //!   obviously-correct mirrors of the paper's math. It may receive
@@ -10,16 +11,26 @@
 //!   rows instead of columns) but is never blocked, tiled, or threaded.
 //! * **fast tier** — this module: same math, engineered for throughput,
 //!   and *proved against the oracle* by the equivalence tests in
-//!   `tests/fastpath_equiv.rs` (`FlatRmfMap::apply` bit-for-bit,
-//!   attention kernels within 1e-5).
+//!   `tests/fastpath_equiv.rs`. The fast tier itself has two
+//!   runtime-dispatched arms (see [`simd`]): the **scalar arm**
+//!   (`FlatRmfMap::apply` bit-for-bit, attention kernels within 1e-5)
+//!   and the **AVX2+FMA arm** (everything within 1e-5; lane-parallel
+//!   accumulation reassociates floating-point addition). Set
+//!   `MACFORMER_NO_SIMD=1` to pin the scalar arm.
 //!
 //! Pieces:
+//! * [`simd`] — the runtime feature detection + the 8-lane f32
+//!   microkernels (GEMM tiles, row updates, normalize passes) with
+//!   always-available scalar twins.
 //! * [`flat_rmf::FlatRmfMap`] — degree-grouped feature map: phi(X) as a
 //!   short sequence of GEMMs + running elementwise products.
 //! * [`attention`] — blocked single-problem kernels over raw slices
-//!   (GEMM score blocks, contiguous inner loops).
-//! * [`parallel`] — `std::thread::scope` driver sharding batch x head
-//!   problems over cores; batched entry points for all three kernels.
+//!   (GEMM score blocks, contiguous inner loops, thread-local grow-only
+//!   scratch: steady-state calls never allocate).
+//! * [`parallel`] — the persistent worker pool sharding batch x head
+//!   problems over cores (created once per process, channel-free
+//!   claim-based dispatch, no per-call allocation); batched entry
+//!   points for all three kernels, over tensors and raw slices.
 //!
 //! This tier backs `attn::HostFastBackend`; new code should run
 //! attention through `attn::AttentionSpec` rather than calling these
@@ -28,6 +39,18 @@
 pub mod attention;
 pub mod flat_rmf;
 pub mod parallel;
+pub mod simd;
+
+/// Grow `buf` to at least `len` without ever shrinking — the one
+/// scratch-buffer idiom behind the zero-alloc steady-state contract
+/// (capacity is retained across calls, so repeated use of the largest
+/// shape seen never reallocates). Shared by the kernel workspaces and
+/// the session scratch arena.
+pub(crate) fn grow(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
 
 pub use flat_rmf::FlatRmfMap;
 pub use parallel::{

@@ -1,16 +1,42 @@
-//! Scoped-thread parallel driver for batched (batch x head) problems.
+//! Persistent worker-pool parallel driver for batched (batch x head)
+//! problems.
 //!
 //! A batched attention workload is `g = batch * heads` independent
-//! problems over one flat `(g, n, d)` tensor. The driver splits the
-//! output buffer into per-problem chunks with `split_at_mut` (no
-//! unsafe, no copies, no extra deps) and shards contiguous problem
-//! ranges across `std::thread::scope` workers. Each problem is computed
-//! by exactly the same single-thread kernel code, so parallel results
-//! are identical to sequential ones.
+//! problems over one flat `(g, n, d)` tensor. Earlier revisions spawned
+//! a fresh `std::thread::scope` per call; this module keeps a process-
+//! wide pool of resident workers instead (created once, on the first
+//! parallel call) and feeds them through a claim-based task slot:
 //!
-//! Thread count: `MACFORMER_THREADS` if set, else
-//! `std::thread::available_parallelism()`.
+//! * the caller publishes one type-erased task (raw closure + output
+//!   pointers) under the pool mutex and wakes the workers;
+//! * workers (and the caller itself) repeatedly claim the next unclaimed
+//!   problem index and run it on a disjoint `out` chunk;
+//! * the caller blocks until every claimed problem has finished before
+//!   returning, which is what makes the borrowed-data-behind-raw-
+//!   pointers scheme sound (the borrows strictly outlive every worker
+//!   access).
+//!
+//! No boxing, no channels: publishing and claiming are plain mutex ops
+//! over POD state, so steady-state batched calls make **zero heap
+//! allocations** (enforced by `tests/alloc_free.rs`). Problems are
+//! claimed one at a time, which also load-balances ragged problem
+//! costs better than the old contiguous range split. Each problem runs
+//! exactly the same single-thread kernel code, so parallel results are
+//! identical to sequential ones.
+//!
+//! Thread count: `MACFORMER_THREADS` if set (validated by
+//! [`parse_thread_override`]; malformed values warn and fall back, `0`
+//! warns and clamps to 1), else `std::thread::available_parallelism()`.
+//! The count is resolved once per process (see [`num_threads`]) and the
+//! pool is sized from it on first use.
+//!
+//! Re-entrant / concurrent batched calls are safe: if the task slot is
+//! already occupied (another thread mid-batch), the new call simply
+//! runs sequentially on its own thread.
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, OnceLock};
 use std::thread;
 
 use crate::attn::Kernel;
@@ -19,23 +45,175 @@ use crate::tensor::Tensor;
 use super::attention;
 use super::flat_rmf::FlatRmfMap;
 
-/// Worker count for the parallel driver.
+/// Outcome of parsing a `MACFORMER_THREADS` override value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThreadOverride {
+    /// A usable worker count (>= 1).
+    Count(usize),
+    /// `"0"`: zero workers cannot make progress — clamp to 1 (warned).
+    ClampedToOne,
+    /// Not a number at all — ignore with a warning, use the hardware
+    /// default.
+    Malformed,
+}
+
+/// Validate a raw `MACFORMER_THREADS` value. Pure (no env access, no
+/// logging) so the policy is unit-testable; [`num_threads`] applies it
+/// and emits the warnings.
+pub fn parse_thread_override(raw: &str) -> ThreadOverride {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => ThreadOverride::ClampedToOne,
+        Ok(n) => ThreadOverride::Count(n),
+        Err(_) => ThreadOverride::Malformed,
+    }
+}
+
+/// Worker count for the parallel driver (>= 1, always). Resolved once
+/// per process: the pool is sized once anyway, and re-reading the
+/// environment (or `available_parallelism`, which probes cgroup files
+/// on Linux) on every batched call would allocate inside the
+/// steady-state hot path.
 pub fn num_threads() -> usize {
-    if let Ok(s) = std::env::var("MACFORMER_THREADS") {
-        if let Ok(x) = s.parse::<usize>() {
-            if x >= 1 {
-                return x;
-            }
+    static RESOLVED: OnceLock<usize> = OnceLock::new();
+    *RESOLVED.get_or_init(|| {
+        let hardware = || thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        match std::env::var("MACFORMER_THREADS") {
+            Ok(raw) => match parse_thread_override(&raw) {
+                ThreadOverride::Count(n) => n,
+                ThreadOverride::ClampedToOne => {
+                    log::warn!("MACFORMER_THREADS={raw:?} requests zero workers; clamping to 1");
+                    1
+                }
+                ThreadOverride::Malformed => {
+                    let d = hardware();
+                    log::warn!(
+                        "MACFORMER_THREADS={raw:?} is not a thread count; \
+                         using the hardware default of {d}"
+                    );
+                    d
+                }
+            },
+            Err(_) => hardware(),
+        }
+    })
+}
+
+/// One published batch, type-erased. The pointers borrow the publishing
+/// call's stack frame; soundness comes from `for_each_problem` blocking
+/// until `in_flight == 0` with every index claimed before it returns.
+#[derive(Clone, Copy)]
+struct Task {
+    /// `&F` erased to a thin pointer.
+    f: *const (),
+    /// Monomorphized trampoline that re-types `f` and runs one problem.
+    call: unsafe fn(*const (), usize, *mut f32, usize),
+    /// Base of the output buffer; problem `i` owns
+    /// `[i * stride, (i + 1) * stride)`.
+    out: *mut f32,
+    stride: usize,
+    count: usize,
+}
+
+// SAFETY: the raw pointers are only dereferenced between publication and
+// completion of the owning `for_each_problem` call, which outlives every
+// worker access by construction (the caller waits on `done`).
+unsafe impl Send for Task {}
+
+/// Mutex-protected pool state. `next`/`in_flight` always describe the
+/// task currently in `slot`; the slot is cleared by the publishing
+/// caller only after `next >= count && in_flight == 0`.
+struct PoolState {
+    slot: Option<Task>,
+    next: usize,
+    in_flight: usize,
+    /// First shard panic's payload; re-raised on the publishing caller
+    /// via `resume_unwind` so the original message survives the pool.
+    panic: Option<Box<dyn Any + Send + 'static>>,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    /// Wakes workers when a task is published.
+    work: Condvar,
+    /// Wakes the publishing caller when the last shard finishes.
+    done: Condvar,
+    workers: usize,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        // The caller participates in every batch, so resident workers
+        // only need to cover the remaining parallelism.
+        let workers = num_threads().saturating_sub(1);
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            state: Mutex::new(PoolState {
+                slot: None,
+                next: 0,
+                in_flight: 0,
+                panic: None,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            workers,
+        }));
+        for i in 0..workers {
+            thread::Builder::new()
+                .name(format!("macformer-pool-{i}"))
+                .spawn(move || worker_loop(pool))
+                .expect("spawn fastpath pool worker");
+        }
+        pool
+    })
+}
+
+/// Claim one problem of `task` (already counted into `in_flight` by the
+/// claimant) and run it, catching panics so the pool survives.
+fn run_claimed(pool: &Pool, task: Task, index: usize) {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        // SAFETY: `index < task.count` was checked under the pool lock,
+        // chunks of distinct indices are disjoint, and the publishing
+        // caller keeps the buffers alive until `in_flight` drains.
+        unsafe { (task.call)(task.f, index, task.out.add(index * task.stride), task.stride) }
+    }));
+    let mut st = pool.state.lock().unwrap();
+    st.in_flight -= 1;
+    if let Err(payload) = result {
+        if st.panic.is_none() {
+            st.panic = Some(payload);
         }
     }
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    if st.in_flight == 0 && st.next >= task.count {
+        pool.done.notify_all();
+    }
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let (task, index) = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                match st.slot {
+                    Some(t) if st.next < t.count => {
+                        let i = st.next;
+                        st.next += 1;
+                        st.in_flight += 1;
+                        break (t, i);
+                    }
+                    _ => st = pool.work.wait(st).unwrap(),
+                }
+            }
+        };
+        run_claimed(pool, task, index);
+    }
 }
 
 /// Run `f(problem_index, out_chunk)` for each of `count` problems, where
 /// `out` is `count * out_stride` long and chunk `i` is the sub-slice
-/// `[i * out_stride, (i + 1) * out_stride)`. Problems are sharded as
-/// contiguous ranges over scoped threads; with one worker (or one
-/// problem) everything runs on the calling thread.
+/// `[i * out_stride, (i + 1) * out_stride)`. Problems are claimed one at
+/// a time by the resident pool workers plus the calling thread; with one
+/// worker (or one problem, or a pool already busy with another batch)
+/// everything runs on the calling thread.
 pub fn for_each_problem<F>(count: usize, out: &mut [f32], out_stride: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -57,28 +235,121 @@ where
         }
         return;
     }
-    thread::scope(|scope| {
-        let mut rem: &mut [f32] = out;
-        let mut start = 0usize;
-        for t in 0..threads {
-            // balanced contiguous split: remaining / remaining-threads
-            let cnt = (count - start) / (threads - t);
-            let (head, tail) = rem.split_at_mut(cnt * out_stride);
-            rem = tail;
-            let fref = &f;
-            scope.spawn(move || {
-                for (off, chunk) in head.chunks_mut(out_stride).enumerate() {
-                    fref(start + off, chunk);
-                }
-            });
-            start += cnt;
+    let pool = pool();
+    if pool.workers == 0 {
+        for (g, chunk) in out.chunks_mut(out_stride).enumerate() {
+            f(g, chunk);
         }
-    });
+        return;
+    }
+
+    /// Re-type the erased closure pointer and run one problem.
+    unsafe fn trampoline<F: Fn(usize, &mut [f32]) + Sync>(
+        f: *const (),
+        index: usize,
+        chunk: *mut f32,
+        len: usize,
+    ) {
+        let f = &*(f as *const F);
+        f(index, std::slice::from_raw_parts_mut(chunk, len));
+    }
+
+    let task = Task {
+        f: &f as *const F as *const (),
+        call: trampoline::<F>,
+        out: out.as_mut_ptr(),
+        stride: out_stride,
+        count,
+    };
+
+    // Publish — or fall back to sequential if another batch is mid-air.
+    {
+        let mut st = pool.state.lock().unwrap();
+        if st.slot.is_some() {
+            drop(st);
+            for (g, chunk) in out.chunks_mut(out_stride).enumerate() {
+                f(g, chunk);
+            }
+            return;
+        }
+        debug_assert_eq!(st.in_flight, 0, "stale in_flight with an empty slot");
+        st.slot = Some(task);
+        st.next = 0;
+        st.panic = None;
+    }
+    pool.work.notify_all();
+
+    // The caller claims problems alongside the workers.
+    loop {
+        let claimed = {
+            let mut st = pool.state.lock().unwrap();
+            if st.next < count {
+                let i = st.next;
+                st.next += 1;
+                st.in_flight += 1;
+                Some(i)
+            } else {
+                None
+            }
+        };
+        match claimed {
+            Some(i) => run_claimed(pool, task, i),
+            None => break,
+        }
+    }
+
+    // Wait out the stragglers, then retire the task. This wait is what
+    // keeps the raw pointers in `task` sound.
+    let panic = {
+        let mut st = pool.state.lock().unwrap();
+        while st.in_flight > 0 {
+            st = pool.done.wait(st).unwrap();
+        }
+        st.slot = None;
+        st.panic.take()
+    };
+    if let Some(payload) = panic {
+        // re-raise the first shard panic with its original payload
+        resume_unwind(payload);
+    }
 }
 
 fn batched_dims(t: &Tensor, what: &str) -> (usize, usize, usize) {
     assert_eq!(t.rank(), 3, "{what}: expected (g, n, d) layout");
     (t.shape[0], t.shape[1], t.shape[2])
+}
+
+/// Slice-level batched exact softmax attention: `(g, n, d)` q, `(g, m,
+/// d)` k, `(g, m, dv)` v, `(g, n, dv)` out, all row-major flat slices.
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_attention_batched_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    g: usize,
+    n: usize,
+    m: usize,
+    d: usize,
+    dv: usize,
+    causal: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), g * n * d, "softmax batched: q len");
+    assert_eq!(k.len(), g * m * d, "softmax batched: k len");
+    assert_eq!(v.len(), g * m * dv, "softmax batched: v len");
+    for_each_problem(g, out, n * dv, |gi, chunk| {
+        attention::softmax_attention_into(
+            &q[gi * n * d..(gi + 1) * n * d],
+            &k[gi * m * d..(gi + 1) * m * d],
+            &v[gi * m * dv..(gi + 1) * m * dv],
+            n,
+            m,
+            d,
+            dv,
+            causal,
+            chunk,
+        );
+    });
 }
 
 /// Exact softmax attention over `(g, n, d)` q/k and `(g, n, dv)` v.
@@ -89,20 +360,47 @@ pub fn softmax_attention_batched(q: &Tensor, k: &Tensor, v: &Tensor, causal: boo
     assert_eq!((g, d), (gk, dk), "q/k disagree");
     assert_eq!((g, m), (gv, mv), "k/v disagree");
     let mut out = Tensor::zeros(&[g, n, dv]);
-    for_each_problem(g, &mut out.data, n * dv, |gi, chunk| {
-        attention::softmax_attention_into(
-            &q.data[gi * n * d..(gi + 1) * n * d],
-            &k.data[gi * m * d..(gi + 1) * m * d],
-            &v.data[gi * m * dv..(gi + 1) * m * dv],
+    softmax_attention_batched_into(
+        &q.data, &k.data, &v.data, g, n, m, d, dv, causal, &mut out.data,
+    );
+    out
+}
+
+/// Slice-level batched kernelized attention (see
+/// [`softmax_attention_batched_into`] for the layout contract).
+#[allow(clippy::too_many_arguments)]
+pub fn kernelized_attention_batched_into(
+    kernel: Kernel,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    g: usize,
+    n: usize,
+    m: usize,
+    d: usize,
+    dv: usize,
+    causal: bool,
+    eps: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), g * n * d, "kernelized batched: q len");
+    assert_eq!(k.len(), g * m * d, "kernelized batched: k len");
+    assert_eq!(v.len(), g * m * dv, "kernelized batched: v len");
+    for_each_problem(g, out, n * dv, |gi, chunk| {
+        attention::kernelized_attention_into(
+            kernel,
+            &q[gi * n * d..(gi + 1) * n * d],
+            &k[gi * m * d..(gi + 1) * m * d],
+            &v[gi * m * dv..(gi + 1) * m * dv],
             n,
             m,
             d,
             dv,
             causal,
+            eps,
             chunk,
         );
     });
-    out
 }
 
 /// Kernelized attention over batched tensors (see [`softmax_attention_batched`]).
@@ -120,22 +418,45 @@ pub fn kernelized_attention_batched(
     assert_eq!((g, d), (gk, dk), "q/k disagree");
     assert_eq!((g, m), (gv, mv), "k/v disagree");
     let mut out = Tensor::zeros(&[g, n, dv]);
-    for_each_problem(g, &mut out.data, n * dv, |gi, chunk| {
-        attention::kernelized_attention_into(
-            kernel,
-            &q.data[gi * n * d..(gi + 1) * n * d],
-            &k.data[gi * m * d..(gi + 1) * m * d],
-            &v.data[gi * m * dv..(gi + 1) * m * dv],
+    kernelized_attention_batched_into(
+        kernel, &q.data, &k.data, &v.data, g, n, m, d, dv, causal, eps, &mut out.data,
+    );
+    out
+}
+
+/// Slice-level batched linear attention over `(g, n, feat)` phi maps and
+/// `(g, m, dv)` values.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_attention_batched_into(
+    phi_q: &[f32],
+    phi_k: &[f32],
+    v: &[f32],
+    g: usize,
+    n: usize,
+    m: usize,
+    feat: usize,
+    dv: usize,
+    causal: bool,
+    eps: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(phi_q.len(), g * n * feat, "linear batched: phi_q len");
+    assert_eq!(phi_k.len(), g * m * feat, "linear batched: phi_k len");
+    assert_eq!(v.len(), g * m * dv, "linear batched: v len");
+    for_each_problem(g, out, n * dv, |gi, chunk| {
+        attention::linear_attention_into(
+            &phi_q[gi * n * feat..(gi + 1) * n * feat],
+            &phi_k[gi * m * feat..(gi + 1) * m * feat],
+            &v[gi * m * dv..(gi + 1) * m * dv],
             n,
             m,
-            d,
+            feat,
             dv,
             causal,
             eps,
             chunk,
         );
     });
-    out
 }
 
 /// Linear attention over `(g, n, D)` phi_q/phi_k and `(g, n, dv)` v.
@@ -152,33 +473,36 @@ pub fn linear_attention_batched(
     assert_eq!((g, feat), (gk, fk), "phi_q/phi_k disagree");
     assert_eq!((g, m), (gv, mv), "phi_k/v disagree");
     let mut out = Tensor::zeros(&[g, n, dv]);
-    for_each_problem(g, &mut out.data, n * dv, |gi, chunk| {
-        attention::linear_attention_into(
-            &phi_q.data[gi * n * feat..(gi + 1) * n * feat],
-            &phi_k.data[gi * m * feat..(gi + 1) * m * feat],
-            &v.data[gi * m * dv..(gi + 1) * m * dv],
-            n,
-            m,
-            feat,
-            dv,
-            causal,
-            eps,
-            chunk,
-        );
-    });
+    linear_attention_batched_into(
+        &phi_q.data, &phi_k.data, &v.data, g, n, m, feat, dv, causal, eps, &mut out.data,
+    );
     out
+}
+
+/// Slice-level batched phi: `(g, n, d)` input, `(g, n, D)` output.
+pub fn apply_map_batched_into(
+    map: &FlatRmfMap,
+    x: &[f32],
+    g: usize,
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(d, map.dim_in, "input dim vs map dim");
+    assert_eq!(x.len(), g * n * d, "apply_map batched: x len");
+    let feat = map.num_features();
+    for_each_problem(g, out, n * feat, |gi, chunk| {
+        map.apply_into(&x[gi * n * d..(gi + 1) * n * d], n, chunk);
+    });
 }
 
 /// phi over a batched `(g, n, d)` tensor -> `(g, n, D)`, one problem per
 /// shard (each problem is itself a short GEMM sequence).
 pub fn apply_map_batched(map: &FlatRmfMap, x: &Tensor) -> Tensor {
     let (g, n, d) = batched_dims(x, "apply_map_batched x");
-    assert_eq!(d, map.dim_in, "input dim vs map dim");
     let feat = map.num_features();
     let mut out = Tensor::zeros(&[g, n, feat]);
-    for_each_problem(g, &mut out.data, n * feat, |gi, chunk| {
-        map.apply_into(&x.data[gi * n * d..(gi + 1) * n * d], n, chunk);
-    });
+    apply_map_batched_into(map, &x.data, g, n, d, &mut out.data);
     out
 }
 
@@ -189,6 +513,26 @@ mod tests {
 
     fn randn3(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
         Tensor::randn(rng, shape, scale)
+    }
+
+    #[test]
+    fn thread_override_parsing_policy() {
+        // malformed values are rejected (the driver falls back + warns)
+        assert_eq!(parse_thread_override("abc"), ThreadOverride::Malformed);
+        assert_eq!(parse_thread_override(""), ThreadOverride::Malformed);
+        assert_eq!(parse_thread_override("-3"), ThreadOverride::Malformed);
+        assert_eq!(parse_thread_override("2.5"), ThreadOverride::Malformed);
+        // zero is clamped, not silently defaulted
+        assert_eq!(parse_thread_override("0"), ThreadOverride::ClampedToOne);
+        assert_eq!(parse_thread_override(" 0 "), ThreadOverride::ClampedToOne);
+        // honest values pass through, whitespace tolerated
+        assert_eq!(parse_thread_override("1"), ThreadOverride::Count(1));
+        assert_eq!(parse_thread_override(" 8 "), ThreadOverride::Count(8));
+    }
+
+    #[test]
+    fn num_threads_is_at_least_one() {
+        assert!(num_threads() >= 1);
     }
 
     #[test]
@@ -217,6 +561,78 @@ mod tests {
             chunk.fill(1.0);
         });
         assert_eq!(one, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn pool_survives_repeated_batches() {
+        // many small batches through the same resident pool: no worker
+        // leaks, no deadlocks, every chunk written every time
+        for round in 0..50usize {
+            let count = 1 + round % 5;
+            let stride = 3;
+            let mut out = vec![-1.0f32; count * stride];
+            for_each_problem(count, &mut out, stride, |g, chunk| {
+                chunk.fill(g as f32 + round as f32);
+            });
+            for (i, &x) in out.iter().enumerate() {
+                assert_eq!(x, (i / stride) as f32 + round as f32, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_batches_from_many_threads_stay_disjoint() {
+        // the slot-busy path must degrade to sequential, never corrupt
+        std::thread::scope(|scope| {
+            for t in 0..4u32 {
+                scope.spawn(move || {
+                    for round in 0..20usize {
+                        let count = 6;
+                        let stride = 5;
+                        let mut out = vec![0.0f32; count * stride];
+                        for_each_problem(count, &mut out, stride, |g, chunk| {
+                            chunk.fill((t as f32) * 1000.0 + g as f32 + round as f32);
+                        });
+                        for (i, &x) in out.iter().enumerate() {
+                            assert_eq!(
+                                x,
+                                (t as f32) * 1000.0 + (i / stride) as f32 + round as f32,
+                                "thread {t} round {round}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_recovers() {
+        let count = 8;
+        let stride = 2;
+        let mut out = vec![0.0f32; count * stride];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for_each_problem(count, &mut out, stride, |g, chunk| {
+                if g == 3 {
+                    panic!("shard 3 exploded");
+                }
+                chunk.fill(g as f32);
+            });
+        }));
+        let payload = r.expect_err("the shard panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(
+            msg.contains("shard 3 exploded"),
+            "the original panic payload must be preserved, got {msg:?}"
+        );
+        // the pool must still serve later batches
+        let mut out2 = vec![0.0f32; count * stride];
+        for_each_problem(count, &mut out2, stride, |g, chunk| {
+            chunk.fill(g as f32);
+        });
+        for (i, &x) in out2.iter().enumerate() {
+            assert_eq!(x, (i / stride) as f32);
+        }
     }
 
     #[test]

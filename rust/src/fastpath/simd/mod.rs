@@ -1,0 +1,355 @@
+//! The runtime-dispatched SIMD compute tier.
+//!
+//! Every primitive here exists twice:
+//!
+//! * a `_scalar` twin — the plain loop the rest of the crate used before
+//!   this module existed, kept textually equivalent so the scalar arm of
+//!   the fastpath stays **bit-for-bit** what it always was;
+//! * an AVX2+FMA microkernel in [`x86`] (8-lane f32, `x86_64` only),
+//!   selected at runtime via `is_x86_feature_detected!` — never at
+//!   compile time, so one binary runs correctly on every host.
+//!
+//! The public entry points (`axpy`, `dot`, `scale_max`, …) dispatch
+//! between the two. Dispatch is resolved once per process and cached:
+//! the SIMD arm is taken iff the CPU reports AVX2 **and** FMA and
+//! `MACFORMER_NO_SIMD` is unset (set it to force the scalar arm for
+//! debugging — see PERF.md).
+//!
+//! # The two-arm equivalence contract
+//!
+//! SIMD reassociates floating-point accumulation (8 partial sums + a
+//! horizontal reduce instead of one sequential chain), so the fastpath
+//! equivalence contract splits:
+//!
+//! * **scalar arm** — `FlatRmfMap::apply` bit-for-bit equal to
+//!   `RmfMap::apply`, attention kernels within `1e-5` of the oracle
+//!   (unchanged from before this tier existed);
+//! * **SIMD arm** — everything within `1e-5` of the scalar arm (and by
+//!   the triangle inequality, of the oracle).
+//!
+//! Both arms are enforced by `tests/fastpath_equiv.rs`, and CI runs the
+//! equivalence suite once per arm (`MACFORMER_NO_SIMD=1` and unset).
+
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Dispatch cache: 0 = unresolved, 1 = scalar, 2 = vector.
+static STATE: AtomicU8 = AtomicU8::new(0);
+const SCALAR: u8 = 1;
+const VECTOR: u8 = 2;
+
+/// True when the running CPU can execute the AVX2+FMA microkernels,
+/// regardless of the `MACFORMER_NO_SIMD` override.
+#[cfg(target_arch = "x86_64")]
+pub fn supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+/// True when the running CPU can execute the AVX2+FMA microkernels
+/// (never, on non-x86_64 targets).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn supported() -> bool {
+    false
+}
+
+/// Is the SIMD arm active? Resolved once per process on first use:
+/// `supported()` and `MACFORMER_NO_SIMD` unset (or `"0"`/empty). The
+/// result is cached, so flipping the env var mid-process has no effect —
+/// use [`set_active`] for in-process arm switching (benches).
+pub fn active() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        VECTOR => true,
+        SCALAR => false,
+        _ => {
+            let on = supported() && !no_simd_env();
+            STATE.store(if on { VECTOR } else { SCALAR }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+fn no_simd_env() -> bool {
+    matches!(std::env::var("MACFORMER_NO_SIMD"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// Force the dispatch arm for this process (benches time both arms in
+/// one run; tests pin an arm). Forcing the vector arm on a host without
+/// AVX2+FMA stays scalar. Returns the arm actually in effect
+/// (`true` = vector). Global: do not call concurrently with compute.
+pub fn set_active(on: bool) -> bool {
+    let arm = if on && supported() { VECTOR } else { SCALAR };
+    STATE.store(arm, Ordering::Relaxed);
+    arm == VECTOR
+}
+
+/// Drop any cached/forced arm; the next [`active`] call re-resolves from
+/// the CPU and `MACFORMER_NO_SIMD`.
+pub fn reset() {
+    STATE.store(0, Ordering::Relaxed);
+}
+
+/// `y += alpha * x` (lengths must match) — the row-update primitive
+/// behind every value contraction in the fastpath.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        unsafe { x86::axpy(alpha, x, y) };
+        return;
+    }
+    axpy_scalar(alpha, x, y);
+}
+
+/// Scalar arm of [`axpy`] — the exact pre-SIMD loop.
+pub fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (o, xv) in y.iter_mut().zip(x) {
+        *o += alpha * xv;
+    }
+}
+
+/// Dot product of two equal-length rows.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len(), "dot: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        return unsafe { x86::dot(x, y) };
+    }
+    dot_scalar(x, y)
+}
+
+/// Scalar arm of [`dot`] — the exact pre-SIMD expression.
+pub fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// `row *= scale` in place; returns the post-scale maximum (or
+/// `f32::NEG_INFINITY` for an empty row) — the softmax pre-pass.
+pub fn scale_max(row: &mut [f32], scale: f32) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        return unsafe { x86::scale_max(row, scale) };
+    }
+    scale_max_scalar(row, scale)
+}
+
+/// Scalar arm of [`scale_max`] — the exact pre-SIMD loop.
+pub fn scale_max_scalar(row: &mut [f32], scale: f32) -> f32 {
+    let mut maxl = f32::NEG_INFINITY;
+    for l in row.iter_mut() {
+        *l *= scale;
+        maxl = maxl.max(*l);
+    }
+    maxl
+}
+
+/// `row /= denom` in place — the attention normalize pass (real
+/// division, not a reciprocal multiply, to preserve accuracy).
+pub fn div_assign(row: &mut [f32], denom: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        unsafe { x86::div_assign(row, denom) };
+        return;
+    }
+    div_assign_scalar(row, denom);
+}
+
+/// Scalar arm of [`div_assign`].
+pub fn div_assign_scalar(row: &mut [f32], denom: f32) {
+    for o in row.iter_mut() {
+        *o /= denom;
+    }
+}
+
+/// `dst = src * scale` elementwise (lengths must match) — the
+/// score-scale input pass of the session forward path. Elementwise
+/// multiply rounds identically in both arms, so this primitive is
+/// bit-for-bit across dispatch.
+pub fn scaled_copy(src: &[f32], scale: f32, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len(), "scaled_copy: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        unsafe { x86::scaled_copy(src, scale, dst) };
+        return;
+    }
+    scaled_copy_scalar(src, scale, dst);
+}
+
+/// Scalar arm of [`scaled_copy`].
+pub fn scaled_copy_scalar(src: &[f32], scale: f32, dst: &mut [f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = s * scale;
+    }
+}
+
+/// One row's degree-bucket pass of the RMF feature map: for each of the
+/// bucket's `s = scales.len()` features (shared degree `g >= 1`),
+/// multiply its `g` contiguous dot products out of `dots` (laid out
+/// feature-major, `s * g` long) and scatter
+/// `scales[j] * prod * inv` into `row[features[j]]`.
+///
+/// Given identical `dots`, both arms round identically (the product
+/// chain multiplies in the same order); the arms only diverge through
+/// the GEMM that produced `dots`.
+pub fn bucket_products(
+    dots: &[f32],
+    g: usize,
+    scales: &[f32],
+    inv: f32,
+    features: &[usize],
+    row: &mut [f32],
+) {
+    debug_assert_eq!(dots.len(), scales.len() * g, "bucket_products: dots length");
+    debug_assert_eq!(features.len(), scales.len(), "bucket_products: features length");
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        unsafe { x86::bucket_products(dots, g, scales, inv, features, row) };
+        return;
+    }
+    bucket_products_scalar(dots, g, scales, inv, features, row);
+}
+
+/// Scalar arm of [`bucket_products`] — the exact pre-SIMD loop.
+pub fn bucket_products_scalar(
+    dots: &[f32],
+    g: usize,
+    scales: &[f32],
+    inv: f32,
+    features: &[usize],
+    row: &mut [f32],
+) {
+    for (j, &f) in features.iter().enumerate() {
+        let mut prod = 1.0f32;
+        for &d in &dots[j * g..(j + 1) * g] {
+            prod *= d;
+        }
+        row[f] = scales[j] * prod * inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn scalar_arms_match_reference_semantics() {
+        let mut rng = Rng::new(41);
+        let x = fill(&mut rng, 13);
+        let mut y = fill(&mut rng, 13);
+        let mut expect = y.clone();
+        for (o, xv) in expect.iter_mut().zip(&x) {
+            *o += 0.37 * xv;
+        }
+        axpy_scalar(0.37, &x, &mut y);
+        assert_eq!(y, expect);
+
+        let d = dot_scalar(&x, &y);
+        let dref: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert_eq!(d.to_bits(), dref.to_bits());
+
+        let mut row = fill(&mut rng, 9);
+        let mut row2 = row.clone();
+        let m = scale_max_scalar(&mut row, 0.5);
+        let mut mref = f32::NEG_INFINITY;
+        for l in row2.iter_mut() {
+            *l *= 0.5;
+            mref = mref.max(*l);
+        }
+        assert_eq!(row, row2);
+        assert_eq!(m, mref);
+        assert_eq!(scale_max_scalar(&mut [], 2.0), f32::NEG_INFINITY);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn vector_arms_match_scalar_within_tolerance() {
+        if !supported() {
+            return; // nothing to compare on this host
+        }
+        let mut rng = Rng::new(42);
+        // cross the 8-lane boundary and exercise the tails
+        for n in [1usize, 3, 7, 8, 9, 16, 31, 70] {
+            let x = fill(&mut rng, n);
+            let y0 = fill(&mut rng, n);
+
+            let mut ys = y0.clone();
+            axpy_scalar(0.81, &x, &mut ys);
+            let mut yv = y0.clone();
+            // SAFETY: supported() checked above.
+            unsafe { x86::axpy(0.81, &x, &mut yv) };
+            for (a, b) in ys.iter().zip(&yv) {
+                assert!((a - b).abs() < 1e-5, "axpy n={n}: {a} vs {b}");
+            }
+
+            let ds = dot_scalar(&x, &y0);
+            // SAFETY: supported() checked above.
+            let dv = unsafe { x86::dot(&x, &y0) };
+            assert!((ds - dv).abs() < 1e-4 * ds.abs().max(1.0), "dot n={n}: {ds} vs {dv}");
+
+            let mut rs = x.clone();
+            let ms = scale_max_scalar(&mut rs, 0.25);
+            let mut rv = x.clone();
+            // SAFETY: supported() checked above.
+            let mv = unsafe { x86::scale_max(&mut rv, 0.25) };
+            assert_eq!(rs, rv, "scale n={n}");
+            assert_eq!(ms, mv, "max n={n}");
+
+            let mut qs = x.clone();
+            div_assign_scalar(&mut qs, 1.7);
+            let mut qv = x.clone();
+            // SAFETY: supported() checked above.
+            unsafe { x86::div_assign(&mut qv, 1.7) };
+            assert_eq!(qs, qv, "div n={n}");
+
+            let mut cs = vec![0.0f32; n];
+            scaled_copy_scalar(&x, 0.3, &mut cs);
+            let mut cv = vec![0.0f32; n];
+            // SAFETY: supported() checked above.
+            unsafe { x86::scaled_copy(&x, 0.3, &mut cv) };
+            assert_eq!(cs, cv, "scaled_copy n={n}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn vector_bucket_products_match_scalar() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(43);
+        for g in 1usize..5 {
+            for s in [1usize, 2, 7, 8, 9, 17] {
+                let dots = fill(&mut rng, s * g);
+                let scales = fill(&mut rng, s);
+                // scattered, strictly ascending feature slots
+                let features: Vec<usize> = (0..s).map(|j| j * 2 + 1).collect();
+                let width = 2 * s + 1;
+                let mut row_s = vec![0.0f32; width];
+                bucket_products_scalar(&dots, g, &scales, 0.5, &features, &mut row_s);
+                let mut row_v = vec![0.0f32; width];
+                // SAFETY: supported() checked above.
+                unsafe { x86::bucket_products(&dots, g, &scales, 0.5, &features, &mut row_v) };
+                for (i, (a, b)) in row_s.iter().zip(&row_v).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "g={g} s={s} slot {i}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    // NOTE: set_active / reset are process-global, so flipping them here
+    // would race with sibling unit tests that read the dispatch state.
+    // Their round-trip behavior is covered by `tests/simd_dispatch.rs`,
+    // which owns its whole test binary.
+}

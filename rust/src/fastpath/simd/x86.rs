@@ -1,0 +1,370 @@
+//! AVX2+FMA microkernels (`x86_64` only) — the vector arm of the
+//! [`simd`](super) dispatch.
+//!
+//! Every function is an `unsafe fn` carrying
+//! `#[target_feature(enable = "avx2,fma")]`: the compiler may emit VEX
+//! instructions freely inside, and the caller promises (via
+//! [`super::active`] / [`super::supported`]) that the running CPU
+//! reports both features. Layout contracts (lengths, row-major strides)
+//! are asserted eagerly so a bad caller fails loudly rather than reading
+//! out of bounds.
+//!
+//! Accumulation strategy: 8 f32 lanes per register, FMA for every
+//! multiply-add chain, scalar tails for the `len % 8` remainder. The
+//! lane-parallel partial sums reassociate addition relative to the
+//! scalar arm — that is exactly why the SIMD arm carries a `1e-5`
+//! equivalence contract instead of bit-for-bit (see the module docs).
+
+#![allow(clippy::missing_safety_doc)] // one shared contract, documented above
+
+use std::arch::x86_64::*;
+
+/// Horizontal sum of the 8 lanes.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let shuf = _mm_movehdup_ps(s);
+    let sums = _mm_add_ps(s, shuf);
+    let shuf2 = _mm_movehl_ps(shuf, sums);
+    _mm_cvtss_f32(_mm_add_ss(sums, shuf2))
+}
+
+/// Horizontal max of the 8 lanes.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hmax(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let m4 = _mm_max_ps(lo, hi);
+    let m2 = _mm_max_ps(m4, _mm_movehl_ps(m4, m4));
+    let m1 = _mm_max_ss(m2, _mm_shuffle_ps::<1>(m2, m2));
+    _mm_cvtss_f32(m1)
+}
+
+/// `out = A · B^T`: A is (m x k), B is (n x k), out is (m x n), all
+/// row-major. 1x4 register tile of dot products, each vectorized over k
+/// with FMA; column and k tails run scalar.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn matmul_nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "simd matmul_nt: lhs len");
+    assert_eq!(b.len(), n * k, "simd matmul_nt: rhs len");
+    assert_eq!(out.len(), m * n, "simd matmul_nt: out len");
+    let kv = k - k % 8;
+    for i in 0..m {
+        let arow = a.as_ptr().add(i * k);
+        let orow = out.as_mut_ptr().add(i * n);
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = b.as_ptr().add(j * k);
+            let b1 = b.as_ptr().add((j + 1) * k);
+            let b2 = b.as_ptr().add((j + 2) * k);
+            let b3 = b.as_ptr().add((j + 3) * k);
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut acc2 = _mm256_setzero_ps();
+            let mut acc3 = _mm256_setzero_ps();
+            let mut p = 0;
+            while p < kv {
+                let av = _mm256_loadu_ps(arow.add(p));
+                acc0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b0.add(p)), acc0);
+                acc1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b1.add(p)), acc1);
+                acc2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b2.add(p)), acc2);
+                acc3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b3.add(p)), acc3);
+                p += 8;
+            }
+            let mut d0 = hsum(acc0);
+            let mut d1 = hsum(acc1);
+            let mut d2 = hsum(acc2);
+            let mut d3 = hsum(acc3);
+            while p < k {
+                let av = *arow.add(p);
+                d0 += av * *b0.add(p);
+                d1 += av * *b1.add(p);
+                d2 += av * *b2.add(p);
+                d3 += av * *b3.add(p);
+                p += 1;
+            }
+            *orow.add(j) = d0;
+            *orow.add(j + 1) = d1;
+            *orow.add(j + 2) = d2;
+            *orow.add(j + 3) = d3;
+            j += 4;
+        }
+        while j < n {
+            let brow = b.as_ptr().add(j * k);
+            let mut acc = _mm256_setzero_ps();
+            let mut p = 0;
+            while p < kv {
+                acc = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(arow.add(p)),
+                    _mm256_loadu_ps(brow.add(p)),
+                    acc,
+                );
+                p += 8;
+            }
+            let mut d = hsum(acc);
+            while p < k {
+                d += *arow.add(p) * *brow.add(p);
+                p += 1;
+            }
+            *orow.add(j) = d;
+            j += 1;
+        }
+    }
+}
+
+/// `out = A^T · B`: A is (r x m), B is (r x n), out is (m x n), all
+/// row-major, accumulated rank-1 update by rank-1 update (every stream
+/// contiguous); each update row is vectorized over n with FMA.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn matmul_tn(a: &[f32], r: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), r * m, "simd matmul_tn: lhs len");
+    assert_eq!(b.len(), r * n, "simd matmul_tn: rhs len");
+    assert_eq!(out.len(), m * n, "simd matmul_tn: out len");
+    out.fill(0.0);
+    let nv = n - n % 8;
+    for p in 0..r {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = b.as_ptr().add(p * n);
+        for (f, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let dst = out.as_mut_ptr().add(f * n);
+            let avv = _mm256_set1_ps(av);
+            let mut c = 0;
+            while c < nv {
+                let cur = _mm256_loadu_ps(dst.add(c));
+                _mm256_storeu_ps(
+                    dst.add(c),
+                    _mm256_fmadd_ps(avv, _mm256_loadu_ps(brow.add(c)), cur),
+                );
+                c += 8;
+            }
+            while c < n {
+                *dst.add(c) += av * *brow.add(c);
+                c += 1;
+            }
+        }
+    }
+}
+
+/// `y += alpha * x` (lengths must match).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "simd axpy: length mismatch");
+    let n = x.len();
+    let nv = n - n % 8;
+    let av = _mm256_set1_ps(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut c = 0;
+    while c < nv {
+        let cur = _mm256_loadu_ps(yp.add(c));
+        _mm256_storeu_ps(yp.add(c), _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(c)), cur));
+        c += 8;
+    }
+    while c < n {
+        *yp.add(c) += alpha * *xp.add(c);
+        c += 1;
+    }
+}
+
+/// Dot product of two equal-length rows.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len(), "simd dot: length mismatch");
+    let n = x.len();
+    let nv = n - n % 8;
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    let mut c = 0;
+    while c < nv {
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(c)), _mm256_loadu_ps(yp.add(c)), acc);
+        c += 8;
+    }
+    let mut d = hsum(acc);
+    while c < n {
+        d += *xp.add(c) * *yp.add(c);
+        c += 1;
+    }
+    d
+}
+
+/// `row *= scale` in place; returns the post-scale maximum
+/// (`f32::NEG_INFINITY` for an empty row).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn scale_max(row: &mut [f32], scale: f32) -> f32 {
+    let n = row.len();
+    let nv = n - n % 8;
+    let sv = _mm256_set1_ps(scale);
+    let mut mv = _mm256_set1_ps(f32::NEG_INFINITY);
+    let p = row.as_mut_ptr();
+    let mut c = 0;
+    while c < nv {
+        let v = _mm256_mul_ps(_mm256_loadu_ps(p.add(c)), sv);
+        _mm256_storeu_ps(p.add(c), v);
+        mv = _mm256_max_ps(mv, v);
+        c += 8;
+    }
+    let mut maxl = hmax(mv);
+    while c < n {
+        let v = *p.add(c) * scale;
+        *p.add(c) = v;
+        maxl = maxl.max(v);
+        c += 1;
+    }
+    maxl
+}
+
+/// `row /= denom` in place (real division, matching the scalar arm).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn div_assign(row: &mut [f32], denom: f32) {
+    let n = row.len();
+    let nv = n - n % 8;
+    let dv = _mm256_set1_ps(denom);
+    let p = row.as_mut_ptr();
+    let mut c = 0;
+    while c < nv {
+        _mm256_storeu_ps(p.add(c), _mm256_div_ps(_mm256_loadu_ps(p.add(c)), dv));
+        c += 8;
+    }
+    while c < n {
+        *p.add(c) /= denom;
+        c += 1;
+    }
+}
+
+/// `dst = src * scale` elementwise (lengths must match).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn scaled_copy(src: &[f32], scale: f32, dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "simd scaled_copy: length mismatch");
+    let n = src.len();
+    let nv = n - n % 8;
+    let sv = _mm256_set1_ps(scale);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut c = 0;
+    while c < nv {
+        _mm256_storeu_ps(dp.add(c), _mm256_mul_ps(_mm256_loadu_ps(sp.add(c)), sv));
+        c += 8;
+    }
+    while c < n {
+        *dp.add(c) = *sp.add(c) * scale;
+        c += 1;
+    }
+}
+
+/// Degree-bucket running products (see [`super::bucket_products`]):
+/// 8 features at a time, their strided first dots fetched with an AVX2
+/// gather, the remaining `g - 1` dots folded in gather by gather. The
+/// product chain multiplies in the same order as the scalar arm, so
+/// given identical `dots` the results are bit-identical; only the GEMM
+/// feeding `dots` differs between arms.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn bucket_products(
+    dots: &[f32],
+    g: usize,
+    scales: &[f32],
+    inv: f32,
+    features: &[usize],
+    row: &mut [f32],
+) {
+    let s = scales.len();
+    assert!(g >= 1, "simd bucket_products: degree-0 buckets are handled by the caller");
+    assert_eq!(dots.len(), s * g, "simd bucket_products: dots len");
+    assert_eq!(features.len(), s, "simd bucket_products: features len");
+    let gi = g as i32;
+    let step = _mm256_setr_epi32(0, gi, 2 * gi, 3 * gi, 4 * gi, 5 * gi, 6 * gi, 7 * gi);
+    let invv = _mm256_set1_ps(inv);
+    let base = dots.as_ptr();
+    let sv = s - s % 8;
+    let mut tmp = [0.0f32; 8];
+    let mut j = 0;
+    while j < sv {
+        let idx = _mm256_add_epi32(_mm256_set1_epi32((j * g) as i32), step);
+        let mut prod = _mm256_i32gather_ps::<4>(base, idx);
+        for t in 1..g {
+            prod = _mm256_mul_ps(prod, _mm256_i32gather_ps::<4>(base.add(t), idx));
+        }
+        let res = _mm256_mul_ps(
+            _mm256_mul_ps(_mm256_loadu_ps(scales.as_ptr().add(j)), prod),
+            invv,
+        );
+        _mm256_storeu_ps(tmp.as_mut_ptr(), res);
+        for (u, &val) in tmp.iter().enumerate() {
+            row[features[j + u]] = val;
+        }
+        j += 8;
+    }
+    while j < s {
+        let mut prod = 1.0f32;
+        for &d in &dots[j * g..(j + 1) * g] {
+            prod *= d;
+        }
+        row[features[j]] = scales[j] * prod * inv;
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::supported;
+    use super::*;
+    use crate::tensor::{matmul_nt_scalar_into, matmul_tn_scalar_into};
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn matmul_nt_matches_scalar_kernel() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(51);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 4), (7, 9, 11), (4, 16, 8), (2, 70, 5)] {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, n * k);
+            let mut scalar = vec![0.0f32; m * n];
+            matmul_nt_scalar_into(&a, m, k, &b, n, &mut scalar);
+            let mut vector = vec![f32::NAN; m * n];
+            // SAFETY: supported() checked above.
+            unsafe { matmul_nt(&a, m, k, &b, n, &mut vector) };
+            for (i, (x, y)) in scalar.iter().zip(&vector).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-4 * x.abs().max(1.0),
+                    "({m},{k},{n}) elem {i}: scalar {x} vs simd {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_scalar_kernel() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(52);
+        for (r, m, n) in [(1, 1, 1), (4, 3, 5), (9, 2, 17), (6, 6, 8), (13, 5, 70)] {
+            let a = fill(&mut rng, r * m);
+            let b = fill(&mut rng, r * n);
+            let mut scalar = vec![0.0f32; m * n];
+            matmul_tn_scalar_into(&a, r, m, &b, n, &mut scalar);
+            let mut vector = vec![f32::NAN; m * n];
+            // SAFETY: supported() checked above.
+            unsafe { matmul_tn(&a, r, m, &b, n, &mut vector) };
+            for (i, (x, y)) in scalar.iter().zip(&vector).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-4 * x.abs().max(1.0),
+                    "({r},{m},{n}) elem {i}: scalar {x} vs simd {y}"
+                );
+            }
+        }
+    }
+}

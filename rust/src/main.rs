@@ -4,7 +4,8 @@
 //!   info                         backend + artifact inventory
 //!   train                        one (task, variant) training run
 //!   sweep                        Table-2: all variants x tasks, subprocesses
-//!   microbench                   Fig-4 RMFA-vs-softmax grid (--kernel exp|inv|log|trigh|sqrt)
+//!   microbench                   Fig-4 RMFA-vs-softmax grid (--kernel exp|inv|log|trigh|sqrt,
+//!                                --backend auto|reference|host|device)
 //!   fig3                         ppSBN translation ablation
 //!   datagen                      dump synthetic dataset samples
 //!
@@ -153,14 +154,10 @@ fn cmd_microbench(args: &Args) -> Result<()> {
             .map(|x| x.parse::<usize>().map_err(|e| anyhow!("bad list item {x:?}: {e}")))
             .collect()
     };
-    if matches!(backend, Backend::Reference) {
-        bail!(
-            "--backend reference: the host grid already times the reference tier per \
-             cell; use --backend host"
-        );
-    }
     if !matches!(backend, Backend::Device) {
-        // HostFast, or Auto resolving to the host tier
+        // Reference, HostFast, or Auto resolving to the host tier — the
+        // host grid times the requested tier per cell (plus the oracle
+        // tier as the speedup baseline)
         let lengths = match lengths_flag {
             Some(s) => parse_list(s)?,
             None => vec![256, 1024, 2048],
@@ -169,8 +166,9 @@ fn cmd_microbench(args: &Args) -> Result<()> {
             Some(s) => parse_list(s)?,
             None => vec![64, 128],
         };
-        let cells =
-            microbench::run_host_grid(kernel, &lengths, &features, repeats, seed, groups, 64)?;
+        let cells = microbench::run_host_grid(
+            kernel, backend, &lengths, &features, repeats, seed, groups, 64,
+        )?;
         println!("{}", microbench::render_host(&cells));
         if let Some(path) = out_json {
             std::fs::write(&path, microbench::host_to_json(&cells).to_string())?;

@@ -145,9 +145,19 @@ pub fn linear_attention(
             }
         }
     } else {
-        // S = phi_k^T v (feat x dv) — matmul_tn reads phi_k row-major and
-        // never materializes the transpose; z = sum_j phi_k_j.
-        let s = phi_k.matmul_tn(v);
+        // S = phi_k^T v (feat x dv) — the scalar matmul_tn kernel reads
+        // phi_k row-major and never materializes the transpose (pinned to
+        // the scalar arm: the oracle must not pick up the SIMD dispatch);
+        // z = sum_j phi_k_j.
+        let mut s = Tensor::zeros(&[feat, dv]);
+        crate::tensor::matmul_tn_scalar_into(
+            &phi_k.data,
+            phi_k.shape[0],
+            feat,
+            &v.data,
+            dv,
+            &mut s.data,
+        );
         let mut z = vec![0.0f32; feat];
         for j in 0..phi_k.shape[0] {
             let pk = &phi_k.data[j * feat..(j + 1) * feat];

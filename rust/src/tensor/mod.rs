@@ -15,12 +15,28 @@ pub use io::{read_tensor, write_tensor, read_bundle, write_bundle};
 const TILE: usize = 4;
 
 /// `out = A · B^T` over raw row-major slices: A is (m x k), B is (n x k),
-/// out is (m x n). Register-blocked over TILE x TILE output tiles; the
-/// k-loop stays sequential and ascending per accumulator, so every output
-/// element is accumulated in exactly the same order as a naive
-/// `zip(..).map(..).sum()` dot product — callers (the RMF fastpath) rely
-/// on that for bit-for-bit equivalence with the reference path.
+/// out is (m x n). Runtime-dispatched: on hosts with AVX2+FMA (and
+/// `MACFORMER_NO_SIMD` unset) this runs the 8-lane
+/// `fastpath::simd::x86::matmul_nt` microkernel (within `1e-5` of the
+/// scalar kernel — lane-parallel accumulation reassociates addition);
+/// everywhere else it is exactly [`matmul_nt_scalar_into`].
 pub fn matmul_nt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if crate::fastpath::simd::active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        unsafe { crate::fastpath::simd::x86::matmul_nt(a, m, k, b, n, out) };
+        return;
+    }
+    matmul_nt_scalar_into(a, m, k, b, n, out);
+}
+
+/// The scalar arm of [`matmul_nt_into`]: register-blocked over TILE x
+/// TILE output tiles; the k-loop stays sequential and ascending per
+/// accumulator, so every output element is accumulated in exactly the
+/// same order as a naive `zip(..).map(..).sum()` dot product — callers
+/// (the RMF fastpath) rely on that for bit-for-bit equivalence with the
+/// reference path on the scalar arm.
+pub fn matmul_nt_scalar_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k, "matmul_nt_into: lhs len");
     assert_eq!(b.len(), n * k, "matmul_nt_into: rhs len");
     assert_eq!(out.len(), m * n, "matmul_nt_into: out len");
@@ -51,11 +67,25 @@ pub fn matmul_nt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &
 }
 
 /// `out = A^T · B` over raw row-major slices: A is (r x m), B is (r x n),
-/// out is (m x n), accumulated rank-1 update by rank-1 update so every
-/// memory stream is contiguous (the "column-major fix": no transposed
-/// reads, no `transpose2` allocation). Accumulation order over r matches
-/// `transpose2().matmul(..)` exactly, including its zero-skip.
+/// out is (m x n). Runtime-dispatched like [`matmul_nt_into`]: the
+/// AVX2+FMA arm vectorizes each rank-1 update row, the fallback is
+/// exactly [`matmul_tn_scalar_into`].
 pub fn matmul_tn_into(a: &[f32], r: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if crate::fastpath::simd::active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        unsafe { crate::fastpath::simd::x86::matmul_tn(a, r, m, b, n, out) };
+        return;
+    }
+    matmul_tn_scalar_into(a, r, m, b, n, out);
+}
+
+/// The scalar arm of [`matmul_tn_into`]: rank-1 update by rank-1 update
+/// so every memory stream is contiguous (the "column-major fix": no
+/// transposed reads, no `transpose2` allocation). Accumulation order
+/// over r matches `transpose2().matmul(..)` exactly, including its
+/// zero-skip.
+pub fn matmul_tn_scalar_into(a: &[f32], r: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), r * m, "matmul_tn_into: lhs len");
     assert_eq!(b.len(), r * n, "matmul_tn_into: rhs len");
     assert_eq!(out.len(), m * n, "matmul_tn_into: out len");
@@ -166,9 +196,10 @@ impl Tensor {
         out
     }
 
-    /// `self · rhs^T` (self: m x k, rhs: n x k) via the register-blocked
+    /// `self · rhs^T` (self: m x k, rhs: n x k) via the runtime-dispatched
     /// kernel — the GEMM behind the fastpath feature maps and attention
-    /// logits. Accumulation order matches a naive dot product exactly.
+    /// logits. On the scalar arm, accumulation order matches a naive dot
+    /// product exactly; the AVX2 arm stays within `1e-5`.
     pub fn matmul_nt(&self, rhs: &Tensor) -> Tensor {
         assert_eq!(self.rank(), 2);
         assert_eq!(rhs.rank(), 2);
@@ -359,10 +390,15 @@ mod tests {
                 &[n, k],
                 (0..n * k).map(|_| rng.normal()).collect(),
             );
+            // the dispatched kernel may take the SIMD arm: 1e-5 contract
             let fast = a.matmul_nt(&b);
             let slow = a.matmul(&b.transpose2());
             assert_eq!(fast.shape, slow.shape);
-            assert_eq!(fast.max_abs_diff(&slow), 0.0, "({m},{k},{n})");
+            assert!(fast.max_abs_diff(&slow) < 1e-5, "({m},{k},{n})");
+            // the scalar arm stays bit-for-bit
+            let mut anchor = Tensor::zeros(&[m, n]);
+            matmul_nt_scalar_into(&a.data, m, k, &b.data, n, &mut anchor.data);
+            assert_eq!(anchor.max_abs_diff(&slow), 0.0, "scalar ({m},{k},{n})");
         }
     }
 
@@ -378,10 +414,15 @@ mod tests {
                 &[r, n],
                 (0..r * n).map(|_| rng.normal()).collect(),
             );
+            // the dispatched kernel may take the SIMD arm: 1e-5 contract
             let fast = a.matmul_tn(&b);
             let slow = a.transpose2().matmul(&b);
             assert_eq!(fast.shape, slow.shape);
-            assert_eq!(fast.max_abs_diff(&slow), 0.0, "({r},{m},{n})");
+            assert!(fast.max_abs_diff(&slow) < 1e-5, "({r},{m},{n})");
+            // the scalar arm stays bit-for-bit
+            let mut anchor = Tensor::zeros(&[m, n]);
+            matmul_tn_scalar_into(&a.data, r, m, &b.data, n, &mut anchor.data);
+            assert_eq!(anchor.max_abs_diff(&slow), 0.0, "scalar ({r},{m},{n})");
         }
     }
 

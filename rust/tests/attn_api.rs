@@ -198,6 +198,90 @@ fn prop_backends_agree_through_dispatch() {
     );
 }
 
+/// Interleaving batched `forward()` calls (of several different shapes)
+/// with an in-flight streaming decode on ONE session must disturb
+/// neither: the session's scratch arena and the decode state's own
+/// scratch are disjoint, and buffer reuse across shapes must not leak
+/// stale values (the ISSUE's scratch-arena acceptance test).
+#[test]
+fn interleaved_forward_and_decode_share_a_session_without_bleed() {
+    let (n, d, dv, feat) = (70, 4, 3, 16);
+    for backend in [Backend::Reference, Backend::HostFast] {
+        let spec = AttentionSpec::new(Kernel::Inv)
+            .head_dim(d)
+            .num_features(feat)
+            .causal(true)
+            .seed(0xC0FFEE)
+            .backend(backend);
+        let session = spec.clone().build().unwrap();
+        // a pristine twin supplies the expected outputs
+        let twin = spec.build().unwrap();
+
+        let mut rng = Rng::new(0x1A7E);
+        let q = randn(&mut rng, &[n, d], 0.4);
+        let k = randn(&mut rng, &[n, d], 0.4);
+        let v = randn(&mut rng, &[n, dv], 1.0);
+        let expected = twin.forward(&q, &k, &v).unwrap();
+
+        // side problems of assorted shapes, fired between decode steps
+        let q_big = randn(&mut rng, &[3, 33, d], 0.4);
+        let k_big = randn(&mut rng, &[3, 33, d], 0.4);
+        let v_big = randn(&mut rng, &[3, 33, 5], 1.0);
+        let expected_big = twin.forward(&q_big, &k_big, &v_big).unwrap();
+        let q_small = randn(&mut rng, &[2, d], 0.4);
+        let k_small = randn(&mut rng, &[2, d], 0.4);
+        let v_small = randn(&mut rng, &[2, 1], 1.0);
+        let expected_small = twin.forward(&q_small, &k_small, &v_small).unwrap();
+
+        let mut state = session.begin_decode(dv).unwrap();
+        let mut out_row = vec![0.0f32; dv];
+        let mut scratch_out = Tensor { shape: Vec::new(), data: Vec::new() };
+        for i in 0..n {
+            // hammer the session's forward scratch mid-decode, cycling
+            // through growing and shrinking shapes
+            match i % 3 {
+                0 => {
+                    session.forward_into(&q_big, &k_big, &v_big, &mut scratch_out).unwrap();
+                    assert!(
+                        scratch_out.max_abs_diff(&expected_big) < 1e-5,
+                        "{backend:?}: interleaved big forward drifted at token {i}"
+                    );
+                }
+                1 => {
+                    session
+                        .forward_into(&q_small, &k_small, &v_small, &mut scratch_out)
+                        .unwrap();
+                    assert!(
+                        scratch_out.max_abs_diff(&expected_small) < 1e-5,
+                        "{backend:?}: interleaved small forward drifted at token {i}"
+                    );
+                }
+                _ => {}
+            }
+            state
+                .append_token_into(
+                    &q.data[i * d..(i + 1) * d],
+                    &k.data[i * d..(i + 1) * d],
+                    &v.data[i * dv..(i + 1) * dv],
+                    &mut out_row,
+                )
+                .unwrap();
+            for (c, (a, b)) in
+                out_row.iter().zip(&expected.data[i * dv..(i + 1) * dv]).enumerate()
+            {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "{backend:?}: token {i} col {c}: streaming {a} vs batched {b}"
+                );
+            }
+        }
+        assert_eq!(state.len(), n);
+        // the session still matches its twin after all the interleaving
+        let after = session.forward(&q, &k, &v).unwrap();
+        assert!(after.max_abs_diff(&expected) < 1e-7, "{backend:?}: session state corrupted");
+    }
+}
+
 #[test]
 fn device_backend_gates_off_cleanly() {
     // Building a device session works (the map draw is host-side); every

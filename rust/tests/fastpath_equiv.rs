@@ -1,12 +1,19 @@
 //! Fast-vs-oracle equivalence: the `fastpath` tier must reproduce the
-//! `reference` tier — bit-for-bit for the RMF feature map (pure layout
-//! change), within 1e-5 for the attention kernels (same math, different
-//! blocking), and exactly for parallel-vs-sequential (same code, sharded).
+//! `reference` tier. The contract is split by SIMD dispatch arm:
 //!
-//! Pure host math — no PJRT, safe to run multi-threaded.
+//! * **scalar arm** (`MACFORMER_NO_SIMD=1`, or hosts without AVX2+FMA) —
+//!   bit-for-bit for the RMF feature map (pure layout change), within
+//!   1e-5 for the attention kernels (same math, different blocking);
+//! * **AVX2+FMA arm** — everything within 1e-5 (lane-parallel
+//!   accumulation reassociates addition);
+//! * parallel-vs-sequential stays exact on both arms (same code,
+//!   sharded over the persistent pool).
+//!
+//! CI runs this suite once per arm. Pure host math — no PJRT, safe to
+//! run multi-threaded.
 
 use macformer::attn::Kernel;
-use macformer::fastpath::{self, FlatRmfMap};
+use macformer::fastpath::{self, simd, FlatRmfMap};
 use macformer::reference::{attention, rmf::RmfMap};
 use macformer::tensor::Tensor;
 use macformer::util::proptest::{check, PropResult};
@@ -16,10 +23,11 @@ fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
     Tensor::randn(rng, shape, scale)
 }
 
-/// FlatRmfMap::apply is bit-for-bit identical to RmfMap::apply after
-/// conversion, for every Table-1 kernel and shapes down to n=1, D=1.
+/// FlatRmfMap::apply vs RmfMap::apply after conversion, for every
+/// Table-1 kernel and shapes down to n=1, D=1: bit-for-bit on the
+/// scalar arm, within 1e-5 on the SIMD arm.
 #[test]
-fn prop_flat_rmf_apply_bit_for_bit() {
+fn prop_flat_rmf_apply_matches_reference() {
     check(
         40,
         |rng| {
@@ -44,11 +52,65 @@ fn prop_flat_rmf_apply_bit_for_bit() {
             if a.shape != b.shape {
                 return Err(format!("shape {:?} vs {:?}", a.shape, b.shape));
             }
+            let simd_arm = simd::active();
             for (i, (p, q)) in a.data.iter().zip(&b.data).enumerate() {
-                if p.to_bits() != q.to_bits() {
+                if simd_arm {
+                    // phi values are unnormalized, so scale the 1e-5
+                    // contract by magnitude for the rare large features
+                    if (p - q).abs() > 1e-5 * p.abs().max(1.0) {
+                        return Err(format!(
+                            "{kernel} n={n} d={d} D={feat} [simd]: element {i}: {p} vs {q}"
+                        ));
+                    }
+                } else if p.to_bits() != q.to_bits() {
                     return Err(format!(
                         "{kernel} n={n} d={d} D={feat}: element {i}: {p} vs {q} (bits differ)"
                     ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The dispatched GEMMs stay within 1e-5 of their scalar anchors over
+/// random shapes — exercised regardless of which arm `active()` picks
+/// (on the scalar arm the comparison is trivially exact).
+#[test]
+fn prop_dispatched_matmuls_match_scalar_anchor() {
+    check(
+        40,
+        |rng| {
+            let m = rng.range(1, 12);
+            let k = rng.range(1, 40);
+            let n = rng.range(1, 12);
+            let seed = rng.next_u64() as f32;
+            vec![vec![m as f32, k as f32, n as f32, seed]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let p = &input[0];
+            let (m, k, n) =
+                ((p[0] as usize).max(1), (p[1] as usize).max(1), (p[2] as usize).max(1));
+            let mut rng = Rng::new(p[3] as u64);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() * 0.5).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal() * 0.5).collect();
+            let mut anchor = vec![0.0f32; m * n];
+            macformer::tensor::matmul_nt_scalar_into(&a, m, k, &b, n, &mut anchor);
+            let mut dispatched = vec![f32::NAN; m * n];
+            macformer::tensor::matmul_nt_into(&a, m, k, &b, n, &mut dispatched);
+            for (i, (x, y)) in anchor.iter().zip(&dispatched).enumerate() {
+                if (x - y).abs() > 1e-5 * x.abs().max(1.0) {
+                    return Err(format!("nt ({m},{k},{n}) elem {i}: {x} vs {y}"));
+                }
+            }
+            // reuse the same draws for the tn kernel: a as (k x m), b as (k x n)
+            let mut anchor_tn = vec![0.0f32; m * n];
+            macformer::tensor::matmul_tn_scalar_into(&a, k, m, &b, n, &mut anchor_tn);
+            let mut disp_tn = vec![f32::NAN; m * n];
+            macformer::tensor::matmul_tn_into(&a, k, m, &b, n, &mut disp_tn);
+            for (i, (x, y)) in anchor_tn.iter().zip(&disp_tn).enumerate() {
+                if (x - y).abs() > 1e-5 * x.abs().max(1.0) {
+                    return Err(format!("tn ({k},{m},{n}) elem {i}: {x} vs {y}"));
                 }
             }
             Ok(())
@@ -182,7 +244,7 @@ fn prop_fast_kernelized_matches_oracle() {
     );
 }
 
-/// The scoped-thread batched drivers produce EXACTLY the per-problem
+/// The pooled batched drivers produce EXACTLY the per-problem
 /// single-thread results (same kernel code, disjoint output shards),
 /// and stay within 1e-5 of the oracle — across g down to 1 (single
 /// head), n down to 1, and d != dv.

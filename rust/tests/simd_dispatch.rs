@@ -1,0 +1,47 @@
+//! SIMD dispatch-arm control: `set_active` / `reset` are process-global,
+//! so this file owns a whole test binary (one test) — flipping arms here
+//! cannot race with any other test's reads of the dispatch state.
+
+use macformer::attn::Kernel;
+use macformer::fastpath::{simd, FlatRmfMap};
+use macformer::reference::rmf::RmfMap;
+use macformer::tensor::Tensor;
+use macformer::util::rng::Rng;
+
+#[test]
+fn arm_switching_controls_the_equivalence_contract() {
+    // resolve, then force the scalar arm
+    let _ = simd::active();
+    assert!(!simd::set_active(false));
+    assert!(!simd::active());
+
+    // scalar arm: the flat map is bit-for-bit the reference map
+    let mut rng = Rng::new(0x51D);
+    let map = RmfMap::sample(&mut rng, Kernel::Exp, 40, 6, 2.0, 8);
+    let flat = FlatRmfMap::from(&map);
+    let x = Tensor::randn(&mut rng, &[9, 6], 0.5);
+    let reference = map.apply(&x);
+    let scalar_arm = flat.apply(&x);
+    for (i, (a, b)) in reference.data.iter().zip(&scalar_arm.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "scalar arm element {i}: {a} vs {b}");
+    }
+
+    // vector arm (where the host supports it): within the 1e-5 contract
+    let vector_on = simd::set_active(true);
+    assert_eq!(vector_on, simd::supported());
+    assert_eq!(simd::active(), vector_on);
+    if vector_on {
+        let vector_arm = flat.apply(&x);
+        for (i, (a, b)) in scalar_arm.data.iter().zip(&vector_arm.data).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-5 * a.abs().max(1.0),
+                "vector arm element {i} drifted: {a} vs {b}"
+            );
+        }
+    }
+
+    // reset re-resolves from the environment/CPU without panicking
+    simd::reset();
+    let resolved = simd::active();
+    assert!(resolved == simd::supported() || !resolved);
+}
