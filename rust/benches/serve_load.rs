@@ -1,0 +1,103 @@
+//! Bench §Serve — the closed-loop multi-stream decode load generator.
+//!
+//! Drives the `serve` subsystem (StreamPool + micro-batching Scheduler)
+//! through one scenario per arrival pattern at the configured stream
+//! count, with bit-exact verification against independent single-stream
+//! decodes enabled, and writes every report (plus the engine telemetry
+//! snapshots) to `BENCH_serve.json` so latency/throughput are diffable
+//! across PRs. The default scenario sustains 64 concurrent streams on
+//! the host tier — the ISSUE's acceptance load.
+//!
+//! Knobs (env): MACFORMER_SERVE_STREAMS (64), MACFORMER_SERVE_TOKENS
+//! (64), MACFORMER_SERVE_D (32), MACFORMER_SERVE_DV (32),
+//! MACFORMER_SERVE_FEATURES (64), MACFORMER_SERVE_MIN_BATCH (2),
+//! MACFORMER_SERVE_ARRIVALS (csv of closed|staggered|bursty; default
+//! all), MACFORMER_BENCH_KERNEL (exp), MACFORMER_BENCH_BACKEND (host),
+//! MACFORMER_THREADS.
+//!
+//! Run with: `cargo bench --bench serve_load`
+
+use std::str::FromStr;
+
+use anyhow::{anyhow, Result};
+
+use macformer::attn::{Backend, Kernel};
+use macformer::fastpath;
+use macformer::serve::loadgen::{run, Arrival, LoadConfig};
+use macformer::util::json::Value;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_parse<T: FromStr>(name: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match std::env::var(name) {
+        Err(_) => Ok(default),
+        Ok(raw) => T::from_str(&raw).map_err(|e| anyhow!("{name}={raw:?}: {e}")),
+    }
+}
+
+fn main() -> Result<()> {
+    macformer::util::logging::init();
+    let streams = env_usize("MACFORMER_SERVE_STREAMS", 64);
+    let tokens = env_usize("MACFORMER_SERVE_TOKENS", 64);
+    let kernel: Kernel = env_parse("MACFORMER_BENCH_KERNEL", Kernel::Exp)?;
+    let backend: Backend = env_parse("MACFORMER_BENCH_BACKEND", Backend::HostFast)?;
+    let arrivals: Vec<Arrival> = match std::env::var("MACFORMER_SERVE_ARRIVALS") {
+        Err(_) => Arrival::ALL.to_vec(),
+        Ok(raw) => raw
+            .split(',')
+            .map(|s| Arrival::from_str(s.trim()).map_err(|e| anyhow!("{e}")))
+            .collect::<Result<_>>()?,
+    };
+    let base = LoadConfig {
+        streams,
+        tokens,
+        head_dim: env_usize("MACFORMER_SERVE_D", 32),
+        dv: env_usize("MACFORMER_SERVE_DV", 32),
+        num_features: env_usize("MACFORMER_SERVE_FEATURES", 64),
+        kernel,
+        backend,
+        min_batch: env_usize("MACFORMER_SERVE_MIN_BATCH", 2),
+        verify: true,
+        ..LoadConfig::default()
+    };
+    println!(
+        "=== §Serve load: {streams} streams x {tokens} tokens, kernel {kernel}, backend {backend}, {} threads ===",
+        fastpath::parallel::num_threads()
+    );
+    let mut scenarios = Vec::new();
+    let mut worst_errors = 0u64;
+    let mut all_verified = true;
+    for arrival in arrivals {
+        let report = run(&LoadConfig { arrival, ..base.clone() })?;
+        println!("{}\n", report.render());
+        worst_errors = worst_errors.max(report.stream_errors);
+        all_verified &= report.verified == Some(true);
+        scenarios.push(report.to_json());
+    }
+    let doc = Value::obj(vec![
+        ("streams", Value::num(streams as f64)),
+        ("tokens_per_stream", Value::num(tokens as f64)),
+        ("kernel", Value::str(kernel.name())),
+        (
+            "threads",
+            Value::num(fastpath::parallel::num_threads() as f64),
+        ),
+        ("simd_supported", Value::Bool(fastpath::simd::supported())),
+        ("all_verified", Value::Bool(all_verified)),
+        ("max_stream_errors", Value::num(worst_errors as f64)),
+        ("scenarios", Value::Arr(scenarios)),
+    ]);
+    std::fs::write("BENCH_serve.json", doc.to_string())?;
+    println!("serve load reports written to BENCH_serve.json");
+    if !all_verified || worst_errors > 0 {
+        return Err(anyhow!(
+            "serve load degraded: verified {all_verified}, max stream errors {worst_errors}"
+        ));
+    }
+    Ok(())
+}

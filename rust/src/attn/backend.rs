@@ -151,6 +151,26 @@ pub trait AttentionBackend: Send + Sync {
         out.copy_from_slice(&r);
         Ok(())
     }
+
+    /// phi over `rows` pre-scaled `d`-length rows into a caller-owned
+    /// `rows * D` buffer — the serve scheduler's micro-batched decode
+    /// step, equivalent to `rows` independent [`phi_row_into`]
+    /// (row-for-row bit-identical on both host tiers) but dispatched as
+    /// one `(rows, 1, d)` batched feature call so the host tier shards
+    /// it over the persistent worker pool with zero steady-state
+    /// allocations. Tiers with a cheaper whole-batch path may override.
+    ///
+    /// [`phi_row_into`]: AttentionBackend::phi_row_into
+    fn phi_rows_into(
+        &self,
+        map: &FeatureMap,
+        x_scaled: &[f32],
+        rows: usize,
+        d: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.features_into(map, x_scaled, rows, 1, d, out)
+    }
 }
 
 fn batched_dims(t: &Tensor, what: &str) -> Result<(usize, usize, usize)> {
@@ -502,6 +522,37 @@ mod tests {
         let t = Tensor::zeros(&[1, 2, 3]);
         let err = dev.softmax(&t, &t, &t, false).unwrap_err();
         assert!(err.to_string().contains("device backend"), "{err}");
+    }
+
+    #[test]
+    fn phi_rows_into_is_row_for_row_phi_row() {
+        use crate::reference::rmf::RmfMap;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xBA7C);
+        let reference = RmfMap::sample(&mut rng, Kernel::Exp, 20, 4, 2.0, 8);
+        let flat = crate::fastpath::FlatRmfMap::from(&reference);
+        let map = FeatureMap { reference, flat };
+        let feat = map.reference.num_features();
+        let rows = 6usize;
+        let x: Vec<f32> = (0..rows * 4).map(|_| rng.normal() * 0.5).collect();
+        let tiers: [&dyn AttentionBackend; 2] = [&ReferenceBackend, &HostFastBackend];
+        for b in tiers {
+            let mut batched = vec![0.0f32; rows * feat];
+            b.phi_rows_into(&map, &x, rows, 4, &mut batched).unwrap();
+            for r in 0..rows {
+                let mut one = vec![0.0f32; feat];
+                b.phi_row_into(&map, &x[r * 4..(r + 1) * 4], &mut one).unwrap();
+                let rows_eq = batched[r * feat..(r + 1) * feat].iter().zip(&one);
+                for (j, (a, e)) in rows_eq.enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        e.to_bits(),
+                        "{}: row {r} feature {j}: {a} vs {e}",
+                        b.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //! [`Backend::Auto`] resolves to the best tier that can actually
 //! execute (today: the host fast path). Every future backend (SIMD,
 //! sharded, batching servers) implements [`AttentionBackend`] and plugs
-//! into the same sessions.
+//! into the same sessions. The serving layer ([`crate::serve`])
+//! multiplexes many concurrent [`CausalState`] decode streams over one
+//! session as dynamic micro-batches, via the batched single-token
+//! entry point [`AttentionSession::phi_rows_into`].
 //!
 //! # Migration from the old free functions
 //!

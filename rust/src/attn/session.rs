@@ -302,6 +302,46 @@ impl AttentionSession {
         }
     }
 
+    /// Batched single-token phi: `rows` pre-scaled rows of length
+    /// `head_dim` (one flat `rows * head_dim` slice) mapped to `rows *
+    /// D` features. This is the serve scheduler's batched decode entry
+    /// point — one `(g, 1, d)` feature step across a micro-batch of
+    /// streams, dispatched through the backend (the host tier shards
+    /// rows over the persistent worker pool with zero steady-state
+    /// allocations). Row `i` of the output is bit-identical to what the
+    /// single-stream decode path computes for the same input row.
+    pub fn phi_rows_into(&self, x_scaled: &[f32], rows: usize, out: &mut [f32]) -> Result<()> {
+        let map = self.map.as_ref().ok_or_else(|| {
+            anyhow!("phi_rows_into: kernel {} has no feature map", self.spec.kernel)
+        })?;
+        let d = self.spec.head_dim;
+        if x_scaled.len() != rows * d {
+            bail!(
+                "phi_rows_into: expected {rows} rows x head_dim {d} = {} inputs, got {}",
+                rows * d,
+                x_scaled.len()
+            );
+        }
+        let feat = map.flat.num_features();
+        if out.len() != rows * feat {
+            bail!(
+                "phi_rows_into: expected {rows} rows x {feat} features = {} outputs, got {}",
+                rows * feat,
+                out.len()
+            );
+        }
+        self.backend.phi_rows_into(map, x_scaled, rows, d, out)
+    }
+
+    /// The pre-phi input scale for this session's `head_dim` —
+    /// `d^(-1/4)`, applied to q/k rows before the feature map so the
+    /// phi dot product estimates the kernel at attention-score scale.
+    /// The serve scheduler scales its gathered micro-batch with this,
+    /// matching [`CausalState::append_token_into`] bit for bit.
+    pub(crate) fn decode_scale(&self) -> f32 {
+        self.input_scale(self.spec.head_dim)
+    }
+
     /// The quadratic oracle this session's `forward` approximates:
     /// exact softmax for `Kernel::Softmax`, otherwise Definition-2
     /// kernelized attention with the session's kernel (O(n^2)). Useful
@@ -384,6 +424,36 @@ pub struct CausalState<'s> {
     len: usize,
 }
 
+/// Key half of the `(S, z)` update: fold `phi(k')` and `v` into the
+/// running accumulators. Shared verbatim by the single-stream
+/// [`CausalState::append_token_into`] path and the serve scheduler's
+/// micro-batched [`CausalState::fold_token_into`] path, so the two can
+/// never drift.
+fn fold_key(phi_k: &[f32], v: &[f32], z: &mut [f32], s: &mut [f32], dv: usize) {
+    for (f, &pkf) in phi_k.iter().enumerate() {
+        z[f] += pkf;
+        if pkf == 0.0 {
+            continue;
+        }
+        simd::axpy(pkf, v, &mut s[f * dv..(f + 1) * dv]);
+    }
+}
+
+/// Query half: contract `phi(q')` against the running `(S, z)` state
+/// into one normalized `dv`-length output row. See [`fold_key`].
+fn fold_query(phi_q: &[f32], z: &[f32], s: &[f32], dv: usize, eps: f32, out: &mut [f32]) {
+    let mut den = 0.0f32;
+    out.fill(0.0);
+    for (f, &pqf) in phi_q.iter().enumerate() {
+        den += pqf * z[f];
+        if pqf == 0.0 {
+            continue;
+        }
+        simd::axpy(pqf, &s[f * dv..(f + 1) * dv], out);
+    }
+    simd::div_assign(out, den + eps);
+}
+
 impl CausalState<'_> {
     /// Tokens consumed so far.
     pub fn len(&self) -> usize {
@@ -393,6 +463,21 @@ impl CausalState<'_> {
     /// True before the first token.
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// Output row length this state was started with.
+    pub fn dv(&self) -> usize {
+        self.dv
+    }
+
+    /// Rewind to the empty prefix: zero the `(S, z)` accumulators and
+    /// the token count, keeping every buffer (so a serve slot can be
+    /// retired and re-admitted without reallocating). Equivalent to a
+    /// fresh [`AttentionSession::begin_decode`] on the same session.
+    pub fn reset(&mut self) {
+        self.s.fill(0.0);
+        self.z.fill(0.0);
+        self.len = 0;
     }
 
     /// Fold in one token and return its attention output (length `dv`).
@@ -442,26 +527,37 @@ impl CausalState<'_> {
         simd::scaled_copy(q, scale, &mut self.q_scaled);
         simd::scaled_copy(k, scale, &mut self.k_scaled);
         self.session.backend.phi_row_into(map, &self.k_scaled, &mut self.phi)?;
-        for (f, &pkf) in self.phi.iter().enumerate() {
-            self.z[f] += pkf;
-            if pkf == 0.0 {
-                continue;
-            }
-            simd::axpy(pkf, v, &mut self.s[f * self.dv..(f + 1) * self.dv]);
-        }
+        fold_key(&self.phi, v, &mut self.z, &mut self.s, self.dv);
         self.session.backend.phi_row_into(map, &self.q_scaled, &mut self.phi)?;
-        let mut den = 0.0f32;
-        out.fill(0.0);
-        for (f, &pqf) in self.phi.iter().enumerate() {
-            den += pqf * self.z[f];
-            if pqf == 0.0 {
-                continue;
-            }
-            simd::axpy(pqf, &self.s[f * self.dv..(f + 1) * self.dv], out);
-        }
-        simd::div_assign(out, den + spec.eps);
+        fold_query(&self.phi, &self.z, &self.s, self.dv, spec.eps, out);
         self.len += 1;
         Ok(())
+    }
+
+    /// Fold in one token whose phi rows were already computed (the
+    /// serve scheduler's path: phi over the whole micro-batch in one
+    /// `(g, 1, d)` backend step, then this per-stream fold). Runs the
+    /// exact same [`fold_key`]/[`fold_query`] code as
+    /// [`append_token_into`](Self::append_token_into), so batched and
+    /// single-stream decode are bit-identical by construction.
+    ///
+    /// Lengths are the caller's contract (`debug_assert`ed): `phi_k`
+    /// and `phi_q` are `D`-length feature rows of the *scaled* k/q
+    /// rows, `v` and `out` are `dv`-length.
+    pub(crate) fn fold_token_into(
+        &mut self,
+        phi_k: &[f32],
+        phi_q: &[f32],
+        v: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(phi_k.len(), self.z.len(), "fold_token_into: phi_k len");
+        debug_assert_eq!(phi_q.len(), self.z.len(), "fold_token_into: phi_q len");
+        debug_assert_eq!(v.len(), self.dv, "fold_token_into: v len");
+        debug_assert_eq!(out.len(), self.dv, "fold_token_into: out len");
+        fold_key(phi_k, v, &mut self.z, &mut self.s, self.dv);
+        fold_query(phi_q, &self.z, &self.s, self.dv, self.session.spec().eps, out);
+        self.len += 1;
     }
 }
 
@@ -563,6 +659,136 @@ mod tests {
             .unwrap();
         let state = ok.begin_decode(3).unwrap();
         assert!(state.is_empty());
+    }
+
+    #[test]
+    fn begin_decode_rejects_dv_zero() {
+        // regression: a dv = 0 decode state would hold empty (S, z)
+        // accumulators and emit zero-length "outputs" forever
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(8)
+            .causal(true)
+            .build()
+            .unwrap();
+        let err = sess.begin_decode(0).unwrap_err();
+        assert!(err.to_string().contains("dv"), "{err}");
+    }
+
+    #[test]
+    fn append_token_rejects_mismatched_v_len() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(2)
+            .num_features(8)
+            .causal(true)
+            .build()
+            .unwrap();
+        let mut state = sess.begin_decode(3).unwrap();
+        // v shorter and longer than the dv the state was started with
+        for bad_v in [vec![1.0f32; 2], vec![1.0f32; 4]] {
+            let err = state.append_token(&[0.1, 0.2], &[0.3, 0.4], &bad_v).unwrap_err();
+            assert!(err.to_string().contains("dv"), "{err}");
+            assert!(state.is_empty(), "a rejected token must not advance the state");
+        }
+    }
+
+    #[test]
+    fn append_token_and_append_token_into_cannot_drift() {
+        // drift guard: the alloc path delegates to the no-alloc path, so
+        // two states fed the same random stream must agree bit for bit
+        let sess = AttentionSpec::new(Kernel::Inv)
+            .head_dim(5)
+            .num_features(24)
+            .causal(true)
+            .seed(21)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let (d, dv, n) = (5usize, 3usize, 40usize);
+        let mut rng = Rng::new(0xD21F7);
+        let q = randn(&mut rng, &[n, d], 0.5);
+        let k = randn(&mut rng, &[n, d], 0.5);
+        let v = randn(&mut rng, &[n, dv], 1.0);
+        let mut a = sess.begin_decode(dv).unwrap();
+        let mut b = sess.begin_decode(dv).unwrap();
+        let mut row = vec![0.0f32; dv];
+        for i in 0..n {
+            let qr = &q.data[i * d..(i + 1) * d];
+            let kr = &k.data[i * d..(i + 1) * d];
+            let vr = &v.data[i * dv..(i + 1) * dv];
+            let out_a = a.append_token(qr, kr, vr).unwrap();
+            b.append_token_into(qr, kr, vr, &mut row).unwrap();
+            for (j, (x, y)) in out_a.iter().zip(&row).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "token {i} element {j}: {x} vs {y}");
+            }
+        }
+        assert_eq!((a.len(), b.len()), (n, n));
+    }
+
+    #[test]
+    fn reset_rewinds_to_a_fresh_decode() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(3)
+            .num_features(16)
+            .causal(true)
+            .seed(4)
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(77);
+        let q = randn(&mut rng, &[6, 3], 0.5);
+        let k = randn(&mut rng, &[6, 3], 0.5);
+        let v = randn(&mut rng, &[6, 2], 1.0);
+        let mut state = sess.begin_decode(2).unwrap();
+        let feed = |state: &mut CausalState<'_>| -> Vec<Vec<f32>> {
+            (0..6)
+                .map(|i| {
+                    let qr = &q.data[i * 3..(i + 1) * 3];
+                    let kr = &k.data[i * 3..(i + 1) * 3];
+                    let vr = &v.data[i * 2..(i + 1) * 2];
+                    state.append_token(qr, kr, vr).unwrap()
+                })
+                .collect()
+        };
+        let first = feed(&mut state);
+        state.reset();
+        assert!(state.is_empty());
+        let second = feed(&mut state);
+        assert_eq!(first, second, "reset must reproduce the fresh-state outputs");
+    }
+
+    #[test]
+    fn phi_rows_into_matches_per_row_decode_phi() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(16)
+            .causal(true)
+            .seed(8)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let map = sess.feature_map().unwrap();
+        let feat = map.flat.num_features();
+        let mut rng = Rng::new(12);
+        let rows = 5usize;
+        let x = randn(&mut rng, &[rows, 4], 0.5);
+        let mut batched = vec![0.0f32; rows * feat];
+        sess.phi_rows_into(&x.data, rows, &mut batched).unwrap();
+        for r in 0..rows {
+            let one = map.reference.apply_row(&x.data[r * 4..(r + 1) * 4]);
+            // host tier vs scalar reference: bit-for-bit on the scalar
+            // dispatch arm, within the SIMD contract otherwise
+            for (j, (a, b)) in batched[r * feat..(r + 1) * feat].iter().zip(&one).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5 * b.abs().max(1.0),
+                    "row {r} feature {j}: {a} vs {b}"
+                );
+            }
+        }
+        // shape errors are clean Errs, not panics
+        assert!(sess.phi_rows_into(&x.data[..3], 1, &mut batched[..feat]).is_err());
+        assert!(sess.phi_rows_into(&x.data[..4], 1, &mut batched[..feat - 1]).is_err());
+        let softmax = AttentionSpec::new(Kernel::Softmax).build().unwrap();
+        assert!(softmax.phi_rows_into(&[0.0; 4], 1, &mut [0.0; 4]).is_err());
     }
 
     #[test]

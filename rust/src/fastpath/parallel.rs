@@ -7,11 +7,14 @@
 //! wide pool of resident workers instead (created once, on the first
 //! parallel call) and feeds them through a claim-based task slot:
 //!
-//! * the caller publishes one type-erased task (raw closure + output
-//!   pointers) under the pool mutex and wakes the workers;
+//! * the caller publishes one type-erased task (a raw closure pointer)
+//!   under the pool mutex and wakes the workers;
 //! * workers (and the caller itself) repeatedly claim the next unclaimed
-//!   problem index and run it on a disjoint `out` chunk;
-//! * the caller blocks until every claimed problem has finished before
+//!   index and run it — [`for_each_index`] is this primitive, and
+//!   [`for_each_problem`] layers the disjoint-`out`-chunk contract on
+//!   top (the serve scheduler uses the primitive directly to fold
+//!   micro-batched decode streams);
+//! * the caller blocks until every claimed index has finished before
 //!   returning, which is what makes the borrowed-data-behind-raw-
 //!   pointers scheme sound (the borrows strictly outlive every worker
 //!   access).
@@ -98,24 +101,20 @@ pub fn num_threads() -> usize {
     })
 }
 
-/// One published batch, type-erased. The pointers borrow the publishing
-/// call's stack frame; soundness comes from `for_each_problem` blocking
+/// One published batch, type-erased. The pointer borrows the publishing
+/// call's stack frame; soundness comes from `for_each_index` blocking
 /// until `in_flight == 0` with every index claimed before it returns.
 #[derive(Clone, Copy)]
 struct Task {
     /// `&F` erased to a thin pointer.
     f: *const (),
-    /// Monomorphized trampoline that re-types `f` and runs one problem.
-    call: unsafe fn(*const (), usize, *mut f32, usize),
-    /// Base of the output buffer; problem `i` owns
-    /// `[i * stride, (i + 1) * stride)`.
-    out: *mut f32,
-    stride: usize,
+    /// Monomorphized trampoline that re-types `f` and runs one index.
+    call: unsafe fn(*const (), usize),
     count: usize,
 }
 
-// SAFETY: the raw pointers are only dereferenced between publication and
-// completion of the owning `for_each_problem` call, which outlives every
+// SAFETY: the raw pointer is only dereferenced between publication and
+// completion of the owning `for_each_index` call, which outlives every
 // worker access by construction (the caller waits on `done`).
 unsafe impl Send for Task {}
 
@@ -171,10 +170,10 @@ fn pool() -> &'static Pool {
 /// claimant) and run it, catching panics so the pool survives.
 fn run_claimed(pool: &Pool, task: Task, index: usize) {
     let result = catch_unwind(AssertUnwindSafe(|| {
-        // SAFETY: `index < task.count` was checked under the pool lock,
-        // chunks of distinct indices are disjoint, and the publishing
-        // caller keeps the buffers alive until `in_flight` drains.
-        unsafe { (task.call)(task.f, index, task.out.add(index * task.stride), task.stride) }
+        // SAFETY: `index < task.count` was checked under the pool lock
+        // and the publishing caller keeps the closure alive until
+        // `in_flight` drains.
+        unsafe { (task.call)(task.f, index) }
     }));
     let mut st = pool.state.lock().unwrap();
     st.in_flight -= 1;
@@ -208,57 +207,52 @@ fn worker_loop(pool: &'static Pool) {
     }
 }
 
-/// Run `f(problem_index, out_chunk)` for each of `count` problems, where
-/// `out` is `count * out_stride` long and chunk `i` is the sub-slice
-/// `[i * out_stride, (i + 1) * out_stride)`. Problems are claimed one at
-/// a time by the resident pool workers plus the calling thread; with one
-/// worker (or one problem, or a pool already busy with another batch)
-/// everything runs on the calling thread.
-pub fn for_each_problem<F>(count: usize, out: &mut [f32], out_stride: usize, f: F)
+/// Run `f(index)` for each index in `0..count`, claiming indices one at
+/// a time across the resident pool workers plus the calling thread.
+/// This is the pool's primitive: [`for_each_problem`] layers the
+/// disjoint-output-chunk contract on top, and the serve scheduler uses
+/// it directly to fold a micro-batch of decode streams (each index
+/// touching its own stream slot). With one worker (or one index, or a
+/// pool already busy with another batch) everything runs sequentially
+/// on the calling thread — so `f` must be correct, not merely tolerant,
+/// when called from the publishing thread itself.
+///
+/// Panics in `f` are caught per index so the pool survives; the first
+/// panic payload is re-raised on the calling thread after the batch
+/// drains. Zero heap allocations: the closure is published by
+/// reference, never boxed.
+pub fn for_each_index<F>(count: usize, f: F)
 where
-    F: Fn(usize, &mut [f32]) + Sync,
+    F: Fn(usize) + Sync,
 {
-    assert_eq!(out.len(), count * out_stride, "for_each_problem: out len");
     if count == 0 {
         return;
     }
-    if out_stride == 0 {
-        for g in 0..count {
-            f(g, &mut []);
-        }
-        return;
-    }
     let threads = num_threads().min(count);
-    if threads <= 1 {
-        for (g, chunk) in out.chunks_mut(out_stride).enumerate() {
-            f(g, chunk);
+    let sequential = |f: &F| {
+        for i in 0..count {
+            f(i);
         }
+    };
+    if threads <= 1 {
+        sequential(&f);
         return;
     }
     let pool = pool();
     if pool.workers == 0 {
-        for (g, chunk) in out.chunks_mut(out_stride).enumerate() {
-            f(g, chunk);
-        }
+        sequential(&f);
         return;
     }
 
-    /// Re-type the erased closure pointer and run one problem.
-    unsafe fn trampoline<F: Fn(usize, &mut [f32]) + Sync>(
-        f: *const (),
-        index: usize,
-        chunk: *mut f32,
-        len: usize,
-    ) {
+    /// Re-type the erased closure pointer and run one index.
+    unsafe fn trampoline<F: Fn(usize) + Sync>(f: *const (), index: usize) {
         let f = &*(f as *const F);
-        f(index, std::slice::from_raw_parts_mut(chunk, len));
+        f(index);
     }
 
     let task = Task {
         f: &f as *const F as *const (),
         call: trampoline::<F>,
-        out: out.as_mut_ptr(),
-        stride: out_stride,
         count,
     };
 
@@ -267,9 +261,7 @@ where
         let mut st = pool.state.lock().unwrap();
         if st.slot.is_some() {
             drop(st);
-            for (g, chunk) in out.chunks_mut(out_stride).enumerate() {
-                f(g, chunk);
-            }
+            sequential(&f);
             return;
         }
         debug_assert_eq!(st.in_flight, 0, "stale in_flight with an empty slot");
@@ -312,6 +304,54 @@ where
         // re-raise the first shard panic with its original payload
         resume_unwind(payload);
     }
+}
+
+/// A `*mut T` that may cross to the pool workers during a
+/// [`for_each_index`] dispatch. Soundness is the caller's contract:
+/// every index dereferences a disjoint region behind the pointer, and
+/// the underlying exclusive borrow outlives the dispatch call. Used by
+/// [`for_each_problem`] for output chunks and by the serve scheduler
+/// for per-stream slots.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> SendPtr<T> {
+        *self
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+// SAFETY: see the struct docs — disjoint per-index access under a live
+// exclusive borrow held by the publishing caller.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Run `f(problem_index, out_chunk)` for each of `count` problems, where
+/// `out` is `count * out_stride` long and chunk `i` is the sub-slice
+/// `[i * out_stride, (i + 1) * out_stride)`. Built on
+/// [`for_each_index`]; see there for the claiming, fallback, and panic
+/// semantics.
+pub fn for_each_problem<F>(count: usize, out: &mut [f32], out_stride: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), count * out_stride, "for_each_problem: out len");
+    if out_stride == 0 {
+        for g in 0..count {
+            f(g, &mut []);
+        }
+        return;
+    }
+    let base = SendPtr(out.as_mut_ptr());
+    for_each_index(count, |g| {
+        // SAFETY: chunks of distinct indices are disjoint, each index is
+        // claimed exactly once, and the exclusive borrow of `out` is
+        // held across the whole for_each_index call.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(g * out_stride), out_stride) };
+        f(g, chunk);
+    });
 }
 
 fn batched_dims(t: &Tensor, what: &str) -> (usize, usize, usize) {
@@ -548,6 +588,21 @@ mod tests {
         for (i, &x) in out.iter().enumerate() {
             assert_eq!(x, i as f32);
         }
+    }
+
+    #[test]
+    fn for_each_index_claims_every_index_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = 37;
+        let hits: Vec<AtomicUsize> = (0..count).map(|_| AtomicUsize::new(0)).collect();
+        for_each_index(count, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+        // zero indices: the closure must never run
+        for_each_index(0, |_| panic!("must not run"));
     }
 
     #[test]

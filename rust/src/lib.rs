@@ -17,7 +17,9 @@
 //! Attention itself has one public API: the typed engine in [`attn`]
 //! (a `Kernel` enum, an `AttentionSpec` builder, pluggable
 //! `AttentionBackend` tiers, and streaming decode sessions). The
-//! `reference` and `fastpath` modules are the tiers behind it.
+//! `reference` and `fastpath` modules are the tiers behind it, and
+//! [`serve`] multiplexes many concurrent decode streams over them as
+//! dynamic micro-batches (`macformer serve`, `benches/serve_load.rs`).
 //!
 //! Quickstart (see `examples/quickstart.rs`):
 //! ```no_run
@@ -40,6 +42,7 @@ pub mod fastpath;
 pub mod metrics;
 pub mod reference;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

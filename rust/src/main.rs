@@ -7,6 +7,9 @@
 //!   microbench                   Fig-4 RMFA-vs-softmax grid (--kernel exp|inv|log|trigh|sqrt,
 //!                                --backend auto|reference|host|device)
 //!   fig3                         ppSBN translation ablation
+//!   serve                        closed-loop multi-stream decode load run
+//!                                (--streams, --tokens, --arrival closed|staggered|bursty,
+//!                                --kernel, --backend, --verify)
 //!   datagen                      dump synthetic dataset samples
 //!
 //! Every run prints a human summary to stdout and (with --out-json) a
@@ -43,16 +46,17 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("microbench") => cmd_microbench(args),
         Some("fig3") => cmd_fig3(args),
+        Some("serve") => cmd_serve(args),
         Some("datagen") => cmd_datagen(args),
         Some(other) => bail!(
-            "unknown subcommand {other:?}; try: info, train, sweep, microbench, fig3, datagen"
+            "unknown subcommand {other:?}; try: info, train, sweep, microbench, fig3, serve, datagen"
         ),
         None => {
             println!(
                 "macformer v{} — Random Maclaurin Feature Attention",
                 macformer::VERSION
             );
-            println!("usage: macformer <info|train|sweep|microbench|fig3|datagen> [flags]");
+            println!("usage: macformer <info|train|sweep|microbench|fig3|serve|datagen> [flags]");
             Ok(())
         }
     }
@@ -211,6 +215,45 @@ fn cmd_fig3(args: &Args) -> Result<()> {
     println!("{}", fig3::render(&result));
     if let Some(path) = out_json {
         std::fs::write(&path, fig3::to_json(&result).to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use macformer::serve::loadgen::{self, Arrival, LoadConfig};
+    use std::str::FromStr;
+    let kernel_flag = args.str_flag("kernel", "exp");
+    let kernel = Kernel::from_str(&kernel_flag).map_err(|e| anyhow!("--kernel: {e}"))?;
+    let backend_flag = args.str_flag("backend", "host");
+    let backend = Backend::from_str(&backend_flag).map_err(|e| anyhow!("--backend: {e}"))?;
+    let arrival_flag = args.str_flag("arrival", "closed");
+    let arrival = Arrival::from_str(&arrival_flag).map_err(|e| anyhow!("--arrival: {e}"))?;
+    let cfg = LoadConfig {
+        streams: args.usize_flag("streams", 64).map_err(|e| anyhow!(e))?,
+        tokens: args.usize_flag("tokens", 128).map_err(|e| anyhow!(e))?,
+        head_dim: args.usize_flag("head-dim", 32).map_err(|e| anyhow!(e))?,
+        dv: args.usize_flag("dv", 32).map_err(|e| anyhow!(e))?,
+        num_features: args.usize_flag("features", 64).map_err(|e| anyhow!(e))?,
+        kernel,
+        backend,
+        arrival,
+        min_batch: args.usize_flag("min-batch", 2).map_err(|e| anyhow!(e))?,
+        seed: args.u64_flag("seed", 7).map_err(|e| anyhow!(e))?,
+        verify: args.switch("verify"),
+    };
+    let out_json = args.opt_flag("out-json");
+    args.check_unknown().map_err(|e| anyhow!(e))?;
+    let report = loadgen::run(&cfg)?;
+    println!("{}", report.render());
+    if let Some(path) = out_json {
+        std::fs::write(&path, report.to_json().to_string())?;
+    }
+    if report.verified == Some(false) || report.stream_errors > 0 {
+        bail!(
+            "serve run degraded: verified {:?}, {} stream errors",
+            report.verified,
+            report.stream_errors
+        );
     }
     Ok(())
 }

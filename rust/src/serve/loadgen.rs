@@ -1,0 +1,481 @@
+//! Closed-loop load generator for the serving subsystem — the engine
+//! behind the `macformer serve` subcommand and the `serve_load` bench.
+//!
+//! "Closed loop" means each stream keeps exactly one token in flight:
+//! it submits, waits for the scheduler tick to serve it, takes the
+//! output, and immediately submits the next token. Throughput is then
+//! limited by the engine, not by an open-loop arrival process, which
+//! makes `tokens/sec` comparable across runs. The [`Arrival`] pattern
+//! controls *which* streams participate each tick:
+//!
+//! * [`Arrival::Closed`] — every stream is admitted up front and always
+//!   has a token in flight: steady full-occupancy batches.
+//! * [`Arrival::Staggered`] — one new stream is admitted per tick: the
+//!   batch ramps 1, 2, 3, ... and exercises the degenerate-batch
+//!   sequential fallback on the early ticks.
+//! * [`Arrival::Bursty`] — streams alternate 4-ticks-on / 4-ticks-off
+//!   phases (offset by stream index): ragged occupancy, the
+//!   micro-batch size breathing tick to tick.
+//!
+//! With [`LoadConfig::verify`] the run is re-decoded stream by stream
+//! through the plain single-stream [`CausalState`] path and compared
+//! **bit for bit** — the acceptance criterion that micro-batched
+//! serving changes throughput, never outputs.
+//!
+//! [`CausalState`]: crate::attn::CausalState
+
+use std::fmt;
+use std::str::FromStr;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::attn::{AttentionSpec, Backend, Kernel};
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+use super::pool::{StreamId, StreamPool};
+use super::scheduler::Scheduler;
+use super::telemetry::Telemetry;
+use super::ServeConfig;
+
+/// When streams enter (and pause) the closed loop. See the
+/// [`crate::serve::loadgen`] module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    Closed,
+    Staggered,
+    Bursty,
+}
+
+impl Arrival {
+    pub const ALL: [Arrival; 3] = [Arrival::Closed, Arrival::Staggered, Arrival::Bursty];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arrival::Closed => "closed",
+            Arrival::Staggered => "staggered",
+            Arrival::Bursty => "bursty",
+        }
+    }
+}
+
+impl fmt::Display for Arrival {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.name())
+    }
+}
+
+impl FromStr for Arrival {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Arrival, String> {
+        match s {
+            "closed" => Ok(Arrival::Closed),
+            "staggered" => Ok(Arrival::Staggered),
+            "bursty" => Ok(Arrival::Bursty),
+            other => {
+                Err(format!(
+                    "unknown arrival pattern {other:?}; expected one of: closed, staggered, bursty"
+                ))
+            }
+        }
+    }
+}
+
+/// One load scenario: how many streams, how much work per stream, the
+/// attention config they share, and the arrival pattern.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub streams: usize,
+    /// Sequence length each stream decodes (tokens per stream).
+    pub tokens: usize,
+    pub head_dim: usize,
+    pub dv: usize,
+    pub num_features: usize,
+    pub kernel: Kernel,
+    pub backend: Backend,
+    pub arrival: Arrival,
+    /// Batches below this run the sequential fallback (see
+    /// [`ServeConfig::min_batch`]).
+    pub min_batch: usize,
+    pub seed: u64,
+    /// Re-decode every stream through the single-stream path and
+    /// require bit-identical outputs.
+    pub verify: bool,
+}
+
+impl Default for LoadConfig {
+    fn default() -> LoadConfig {
+        LoadConfig {
+            streams: 64,
+            tokens: 64,
+            head_dim: 32,
+            dv: 32,
+            num_features: 64,
+            kernel: Kernel::Exp,
+            backend: Backend::HostFast,
+            arrival: Arrival::Closed,
+            min_batch: 2,
+            seed: 7,
+            verify: true,
+        }
+    }
+}
+
+/// Outcome of one [`run`]: throughput/latency plus the engine's own
+/// telemetry snapshot and the verification verdict.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub streams: usize,
+    pub tokens_per_stream: usize,
+    pub arrival: Arrival,
+    pub kernel: Kernel,
+    /// Resolved backend tier name (`Auto` resolves at session build).
+    pub backend: String,
+    pub head_dim: usize,
+    pub dv: usize,
+    pub num_features: usize,
+    pub min_batch: usize,
+    /// Wall-clock seconds of the drive loop (excludes setup, data
+    /// generation, and verification).
+    pub elapsed_s: f64,
+    pub tokens_total: u64,
+    pub tokens_per_sec: f64,
+    /// Streams that hit an unexpected `ServeError` mid-run (0 on any
+    /// healthy run; the CI smoke gate asserts this).
+    pub stream_errors: u64,
+    /// `Some(true)` when every re-decoded output matched bit for bit;
+    /// `None` when verification was not requested.
+    pub verified: Option<bool>,
+    /// Largest |serve - single-stream| over all outputs (0.0 when
+    /// bit-identical).
+    pub max_abs_diff: f64,
+    /// Engine telemetry, snapshotted at the end of the drive loop
+    /// (before teardown and the verification replay).
+    pub telemetry: Telemetry,
+}
+
+impl LoadReport {
+    pub fn render(&self) -> String {
+        let verified = match self.verified {
+            Some(true) => "bit-identical to single-stream decode".to_string(),
+            Some(false) => {
+                format!("MISMATCH vs single-stream (max |diff| {})", self.max_abs_diff)
+            }
+            None => "skipped".to_string(),
+        };
+        format!(
+            "serve: {} streams x {} tokens ({} arrival, kernel {}, backend {}, d={} dv={} D={})\n\
+             {:>10.0} tokens/sec  ({} tokens in {:.3}s, {} stream errors)\n\
+             latency   p50 {:.6}s  p90 {:.6}s  p99 {:.6}s  max {:.6}s\n\
+             occupancy mean {:.2} max {}  |  queue mean {:.2} max {}  |  ticks {} ({} seq, {} idle)\n\
+             verify    {}",
+            self.streams,
+            self.tokens_per_stream,
+            self.arrival,
+            self.kernel,
+            self.backend,
+            self.head_dim,
+            self.dv,
+            self.num_features,
+            self.tokens_per_sec,
+            self.tokens_total,
+            self.elapsed_s,
+            self.stream_errors,
+            self.telemetry.latency_percentile(50.0),
+            self.telemetry.latency_percentile(90.0),
+            self.telemetry.latency_percentile(99.0),
+            self.telemetry.latency_max(),
+            self.telemetry.mean_batch(),
+            self.telemetry.max_batch(),
+            self.telemetry.mean_queue_depth(),
+            self.telemetry.max_queue_depth(),
+            self.telemetry.ticks(),
+            self.telemetry.sequential_ticks(),
+            self.telemetry.idle_ticks(),
+            verified,
+        )
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("streams", Value::num(self.streams as f64)),
+            ("tokens_per_stream", Value::num(self.tokens_per_stream as f64)),
+            ("arrival", Value::str(self.arrival.name())),
+            ("kernel", Value::str(self.kernel.name())),
+            ("backend", Value::str(self.backend.clone())),
+            ("head_dim", Value::num(self.head_dim as f64)),
+            ("dv", Value::num(self.dv as f64)),
+            ("num_features", Value::num(self.num_features as f64)),
+            ("min_batch", Value::num(self.min_batch as f64)),
+            ("elapsed_s", Value::num(self.elapsed_s)),
+            ("tokens_total", Value::num(self.tokens_total as f64)),
+            ("tokens_per_sec", Value::num(self.tokens_per_sec)),
+            ("stream_errors", Value::num(self.stream_errors as f64)),
+            (
+                "verified",
+                match self.verified {
+                    Some(b) => Value::Bool(b),
+                    None => Value::Null,
+                },
+            ),
+            ("max_abs_diff", Value::num(self.max_abs_diff)),
+            ("telemetry", self.telemetry.to_json()),
+        ])
+    }
+}
+
+/// Row layout of one pre-generated token: `[q(d) | k(d) | v(dv)]`.
+fn token_stride(cfg: &LoadConfig) -> usize {
+    2 * cfg.head_dim + cfg.dv
+}
+
+/// Pre-generate every stream's token rows (deterministic per stream, so
+/// verification replays the identical inputs).
+fn generate_tokens(cfg: &LoadConfig) -> Vec<Vec<f32>> {
+    (0..cfg.streams)
+        .map(|i| {
+            let mut rng = Rng::new(cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+            let mut data = Vec::with_capacity(cfg.tokens * token_stride(cfg));
+            for _ in 0..cfg.tokens {
+                for _ in 0..cfg.head_dim {
+                    data.push(rng.normal() * 0.5);
+                }
+                for _ in 0..cfg.head_dim {
+                    data.push(rng.normal() * 0.5);
+                }
+                for _ in 0..cfg.dv {
+                    data.push(rng.normal());
+                }
+            }
+            data
+        })
+        .collect()
+}
+
+/// May stream `i` submit at tick `tick_no` under this arrival pattern?
+/// (Admission is separate: staggered streams are admitted one per tick.)
+fn may_submit(arrival: Arrival, tick_no: usize, stream: usize) -> bool {
+    match arrival {
+        Arrival::Closed | Arrival::Staggered => true,
+        Arrival::Bursty => ((tick_no + stream) / 4) % 2 == 0,
+    }
+}
+
+/// Drive one closed-loop load scenario end to end and report.
+pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
+    if cfg.streams == 0 || cfg.tokens == 0 {
+        bail!("loadgen: streams and tokens must be > 0");
+    }
+    let session = AttentionSpec::new(cfg.kernel)
+        .head_dim(cfg.head_dim)
+        .num_features(cfg.num_features)
+        .causal(true)
+        .seed(cfg.seed)
+        .backend(cfg.backend)
+        .build()
+        .context("loadgen: building the shared session")?;
+    let serve_cfg = ServeConfig {
+        max_streams: cfg.streams,
+        max_pending: 0,
+        min_batch: cfg.min_batch,
+        dv: cfg.dv,
+    };
+    let mut pool = StreamPool::new(&session, serve_cfg)?;
+    let mut scheduler = Scheduler::new();
+
+    let stride = token_stride(cfg);
+    let (d, dv) = (cfg.head_dim, cfg.dv);
+    let tokens = generate_tokens(cfg);
+    let mut outs: Vec<Vec<f32>> = (0..cfg.streams).map(|_| vec![0.0; cfg.tokens * dv]).collect();
+    let mut ids: Vec<Option<StreamId>> = vec![None; cfg.streams];
+    let mut produced = vec![0usize; cfg.streams];
+    let mut in_flight = vec![false; cfg.streams];
+    let mut failed = vec![false; cfg.streams];
+    let mut stream_errors = 0u64;
+    let mut done = 0usize;
+    let target = cfg.streams * cfg.tokens;
+    // generous livelock guard: bursty gaps are <= 4 ticks per token
+    let max_ticks = 16 * (cfg.tokens + cfg.streams) + 1024;
+
+    let t0 = Instant::now();
+    let mut tick_no = 0usize;
+    while done < target {
+        if tick_no >= max_ticks {
+            bail!("loadgen: no progress after {max_ticks} ticks ({done}/{target} tokens served)");
+        }
+        // admission
+        for i in 0..cfg.streams {
+            if ids[i].is_some() || failed[i] {
+                continue;
+            }
+            let due = match cfg.arrival {
+                Arrival::Staggered => tick_no >= i,
+                Arrival::Closed | Arrival::Bursty => true,
+            };
+            if !due {
+                continue;
+            }
+            match pool.admit() {
+                Ok(id) => ids[i] = Some(id),
+                Err(e) => {
+                    log::warn!("loadgen: stream {i} admit failed: {e}");
+                    stream_errors += 1;
+                    failed[i] = true;
+                    done += cfg.tokens - produced[i];
+                }
+            }
+        }
+        // submit phase (closed loop: at most one token in flight each)
+        for i in 0..cfg.streams {
+            let Some(id) = ids[i] else { continue };
+            if failed[i] || in_flight[i] || produced[i] >= cfg.tokens {
+                continue;
+            }
+            if !may_submit(cfg.arrival, tick_no, i) {
+                continue;
+            }
+            let row = &tokens[i][produced[i] * stride..(produced[i] + 1) * stride];
+            match pool.submit(id, &row[..d], &row[d..2 * d], &row[2 * d..]) {
+                Ok(()) => in_flight[i] = true,
+                Err(e) => {
+                    log::warn!("loadgen: stream {i} submit failed: {e}");
+                    stream_errors += 1;
+                    failed[i] = true;
+                    done += cfg.tokens - produced[i];
+                }
+            }
+        }
+        scheduler.tick(&mut pool)?;
+        // collect phase
+        for i in 0..cfg.streams {
+            if !in_flight[i] {
+                continue;
+            }
+            let id = ids[i].expect("in-flight stream has an id");
+            let t = produced[i];
+            match pool.take_output(id, &mut outs[i][t * dv..(t + 1) * dv]) {
+                Ok(()) => {
+                    produced[i] = t + 1;
+                    in_flight[i] = false;
+                    done += 1;
+                }
+                Err(e) => {
+                    log::warn!("loadgen: stream {i} take_output failed: {e}");
+                    stream_errors += 1;
+                    failed[i] = true;
+                    in_flight[i] = false;
+                    done += cfg.tokens - produced[i];
+                }
+            }
+        }
+        tick_no += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    // Snapshot now, before teardown and the verification replay, so the
+    // telemetry block reflects the drive loop only (the PERF.md
+    // methodology); `Telemetry::to_json` is time-independent, so the
+    // snapshot serializes identically whenever the report is written.
+    let telemetry = pool.telemetry().clone();
+    for (i, id) in ids.iter().enumerate() {
+        if let Some(id) = id {
+            if pool.retire(*id).is_err() {
+                log::warn!("loadgen: stream {i} retire failed");
+                stream_errors += 1;
+            }
+        }
+    }
+
+    let tokens_total: u64 = produced.iter().map(|&p| p as u64).sum();
+    let (verified, max_abs_diff) = if cfg.verify {
+        let mut ok = stream_errors == 0;
+        let mut max_diff = 0.0f64;
+        let mut row = vec![0.0f32; dv];
+        for i in 0..cfg.streams {
+            if failed[i] {
+                ok = false;
+                continue;
+            }
+            let mut state = session.begin_decode(dv)?;
+            for t in 0..produced[i] {
+                let tok = &tokens[i][t * stride..(t + 1) * stride];
+                state.append_token_into(&tok[..d], &tok[d..2 * d], &tok[2 * d..], &mut row)?;
+                for (a, b) in outs[i][t * dv..(t + 1) * dv].iter().zip(&row) {
+                    if a.to_bits() != b.to_bits() {
+                        ok = false;
+                        max_diff = max_diff.max((a - b).abs() as f64);
+                    }
+                }
+            }
+        }
+        (Some(ok), max_diff)
+    } else {
+        (None, 0.0)
+    };
+
+    Ok(LoadReport {
+        streams: cfg.streams,
+        tokens_per_stream: cfg.tokens,
+        arrival: cfg.arrival,
+        kernel: cfg.kernel,
+        backend: session.backend_name().to_string(),
+        head_dim: cfg.head_dim,
+        dv: cfg.dv,
+        num_features: cfg.num_features,
+        min_batch: cfg.min_batch,
+        elapsed_s: elapsed,
+        tokens_total,
+        tokens_per_sec: if elapsed > 0.0 { tokens_total as f64 / elapsed } else { 0.0 },
+        stream_errors,
+        verified,
+        max_abs_diff,
+        telemetry,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(arrival: Arrival) -> LoadConfig {
+        LoadConfig {
+            streams: 5,
+            tokens: 6,
+            head_dim: 4,
+            dv: 3,
+            num_features: 16,
+            arrival,
+            seed: 11,
+            ..LoadConfig::default()
+        }
+    }
+
+    #[test]
+    fn arrival_parse_round_trips() {
+        for a in Arrival::ALL {
+            assert_eq!(Arrival::from_str(a.name()), Ok(a));
+        }
+        assert!(Arrival::from_str("poisson").is_err());
+    }
+
+    #[test]
+    fn every_arrival_pattern_completes_and_verifies() {
+        for arrival in Arrival::ALL {
+            let report = run(&tiny(arrival)).unwrap();
+            assert_eq!(report.tokens_total, 30, "{arrival}");
+            assert_eq!(report.stream_errors, 0, "{arrival}");
+            assert_eq!(report.verified, Some(true), "{arrival}");
+            assert_eq!(report.max_abs_diff, 0.0, "{arrival}");
+            let json = report.to_json();
+            assert_eq!(json.get("stream_errors").as_usize(), Some(0));
+            assert!(report.render().contains("tokens/sec"));
+        }
+    }
+
+    #[test]
+    fn loadgen_rejects_empty_scenarios() {
+        assert!(run(&LoadConfig { streams: 0, ..tiny(Arrival::Closed) }).is_err());
+        assert!(run(&LoadConfig { tokens: 0, ..tiny(Arrival::Closed) }).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! The serving subsystem: many concurrent decode streams, scheduled as
+//! dynamic micro-batches over the existing attention tiers.
+//!
+//! RMFA's per-token decode state `(S, z)` is constant-size (the
+//! recurrent-state view of linear attention from RFA/Performer), which
+//! is exactly what a high-throughput server wants: admitting one more
+//! stream costs `O(D * dv)` memory, not `O(n)`. This module turns that
+//! property into a subsystem:
+//!
+//! * [`StreamPool`] — admits/retires decode streams, each holding one
+//!   [`CausalState`](crate::attn::CausalState). Every stream shares the
+//!   pool's single [`AttentionSession`](crate::attn::AttentionSession)
+//!   (one feature-map draw per kernel config), so admitting a stream
+//!   never resamples features. Admission control is explicit: a full
+//!   pool or a full submit queue is a typed [`ServeError`] carrying the
+//!   reason — never a panic.
+//! * [`Scheduler`] — every [`Scheduler::tick`], gathers the pending
+//!   `append_token` submissions across streams into one batched
+//!   `(g, 1, d)` feature step dispatched through the fastpath worker
+//!   pool, then folds each stream's `(S, z)` update in parallel via
+//!   [`for_each_index`](crate::fastpath::parallel::for_each_index).
+//!   Degenerate batches (fewer than [`ServeConfig::min_batch`] pending
+//!   streams) fall back to the per-stream sequential decode path. Both
+//!   paths produce bit-identical outputs to a lone single-stream decode
+//!   — they run the same fold code — and the steady-state tick makes
+//!   zero heap allocations (enforced by `tests/alloc_free.rs`).
+//! * [`Telemetry`] — per-token latency histogram (log2 buckets),
+//!   tokens/sec, batch occupancy, queue depth, and rejection counters,
+//!   owned by the pool and updated by the scheduler.
+//! * [`loadgen`] — the closed-loop load generator behind the
+//!   `macformer serve` subcommand and the `serve_load` bench
+//!   (`BENCH_serve.json`): configurable stream count, tokens per
+//!   stream, arrival pattern, kernel, and backend, with optional
+//!   bit-exact verification against independent single-stream decodes.
+//!
+//! # Lifecycle
+//!
+//! ```
+//! use macformer::attn::{AttentionSpec, Backend, Kernel};
+//! use macformer::serve::{Scheduler, ServeConfig, StreamPool};
+//!
+//! let session = AttentionSpec::new(Kernel::Exp)
+//!     .head_dim(2)
+//!     .num_features(16)
+//!     .causal(true)
+//!     .backend(Backend::HostFast)
+//!     .build()
+//!     .unwrap();
+//! let mut pool = StreamPool::new(&session, ServeConfig::new(4, 1)).unwrap();
+//! let mut scheduler = Scheduler::new();
+//!
+//! let a = pool.admit().unwrap();
+//! let b = pool.admit().unwrap();
+//! pool.submit(a, &[0.1, -0.2], &[0.3, 0.0], &[1.0]).unwrap();
+//! pool.submit(b, &[0.0, 0.2], &[-0.1, 0.1], &[2.0]).unwrap();
+//! let stats = scheduler.tick(&mut pool).unwrap();
+//! assert_eq!(stats.batch, 2);
+//!
+//! let mut out = [0.0f32; 1];
+//! pool.take_output(a, &mut out).unwrap();
+//! // the first token of a stream attends only to itself
+//! assert!((out[0] - 1.0).abs() < 1e-3);
+//! pool.retire(a).unwrap();
+//! pool.retire(b).unwrap();
+//! ```
+
+use std::fmt;
+
+pub mod loadgen;
+pub mod pool;
+pub mod scheduler;
+pub mod telemetry;
+
+pub use loadgen::{Arrival, LoadConfig, LoadReport};
+pub use pool::{StreamId, StreamPool};
+pub use scheduler::{Scheduler, TickStats};
+pub use telemetry::Telemetry;
+
+/// Capacity and scheduling knobs for one [`StreamPool`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Maximum concurrently admitted streams; [`StreamPool::admit`]
+    /// beyond this is rejected with [`ServeError::PoolFull`].
+    pub max_streams: usize,
+    /// Bound on tokens queued for one tick across all streams;
+    /// [`StreamPool::submit`] beyond this is rejected with
+    /// [`ServeError::Backpressure`]. `0` means "same as `max_streams`".
+    pub max_pending: usize,
+    /// Batches smaller than this run the per-stream sequential decode
+    /// path instead of the gathered `(g, 1, d)` step (a one-stream
+    /// "batch" would only pay gather/dispatch overhead). `0` acts as 1.
+    pub min_batch: usize,
+    /// Value/output row length shared by every stream in the pool.
+    pub dv: usize,
+}
+
+impl ServeConfig {
+    /// A config with `max_pending = max_streams` and `min_batch = 2`.
+    pub fn new(max_streams: usize, dv: usize) -> ServeConfig {
+        ServeConfig { max_streams, max_pending: 0, min_batch: 2, dv }
+    }
+
+    /// The effective submit-queue bound (see [`ServeConfig::max_pending`]).
+    pub fn pending_bound(&self) -> usize {
+        if self.max_pending == 0 {
+            self.max_streams
+        } else {
+            self.max_pending
+        }
+    }
+
+    /// The effective sequential-fallback threshold (>= 1).
+    pub fn batch_threshold(&self) -> usize {
+        self.min_batch.max(1)
+    }
+}
+
+/// Why the pool rejected a request. Every admission-control and
+/// stale-handle failure is one of these — reject-with-reason, never a
+/// panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// [`StreamPool::admit`] with every slot occupied.
+    PoolFull {
+        /// The pool's `max_streams`.
+        capacity: usize,
+    },
+    /// [`StreamPool::submit`] with the tick queue at its bound.
+    Backpressure {
+        /// The pool's effective `max_pending`.
+        max_pending: usize,
+    },
+    /// The [`StreamId`] does not name a live stream (never admitted,
+    /// already retired, or a stale generation after slot reuse).
+    UnknownStream,
+    /// Closed-loop violation: the stream already has a token pending or
+    /// an output waiting to be taken.
+    StreamBusy,
+    /// [`StreamPool::take_output`] before a tick served the stream's
+    /// pending token.
+    NoOutput,
+    /// A submitted row has the wrong length for this pool's session.
+    BadRow {
+        /// Which row (`"q"`, `"k"`, `"v"`, or `"out"`).
+        what: &'static str,
+        /// Required length.
+        expected: usize,
+        /// Submitted length.
+        got: usize,
+    },
+    /// The underlying session rejected the stream (backend/spec error).
+    Session(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::PoolFull { capacity } => {
+                write!(f, "pool full: all {capacity} stream slots are admitted")
+            }
+            ServeError::Backpressure { max_pending } => {
+                write!(f, "backpressure: {max_pending} tokens already queued for this tick")
+            }
+            ServeError::UnknownStream => {
+                write!(f, "unknown stream: the id is not live (retired or never admitted)")
+            }
+            ServeError::StreamBusy => {
+                write!(f, "stream busy: one token in flight per stream (take the output first)")
+            }
+            ServeError::NoOutput => {
+                write!(f, "no output ready: the pending token has not been ticked yet")
+            }
+            ServeError::BadRow { what, expected, got } => {
+                write!(f, "bad {what} row: expected length {expected}, got {got}")
+            }
+            ServeError::Session(reason) => write!(f, "session rejected the stream: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

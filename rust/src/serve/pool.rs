@@ -1,0 +1,348 @@
+//! [`StreamPool`] — slot-based admission, per-stream staging, and
+//! output hand-off for the serving subsystem.
+//!
+//! The pool owns `max_streams` pre-allocated slots. Each live slot
+//! holds one [`CausalState`] (sharing the pool's single
+//! [`AttentionSession`] feature-map draw), fixed-size staging rows for
+//! the one in-flight `(q, k, v)` submission, and the served output row.
+//! Slots are reused across retire/admit cycles — the decode state is
+//! [`reset`](CausalState::reset) instead of rebuilt — so a long-running
+//! pool stops allocating once every slot has been warmed.
+//!
+//! Handles are generation-checked: [`StreamId`] is `(slot, generation)`
+//! and retiring a stream bumps the slot's generation, so a stale handle
+//! from a retired stream is a clean [`ServeError::UnknownStream`], not
+//! silent cross-talk with whoever reuses the slot.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::attn::{AttentionSession, CausalState};
+
+use super::telemetry::Telemetry;
+use super::{ServeConfig, ServeError};
+
+/// Opaque handle to one admitted stream: slot index + generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamId {
+    pub(super) slot: u32,
+    pub(super) gen: u32,
+}
+
+/// One stream slot. Staging buffers are sized once at pool build
+/// (`head_dim` / `dv` rows) and never reallocated.
+pub(super) struct Slot<'s> {
+    pub(super) gen: u32,
+    pub(super) active: bool,
+    /// Present from the slot's first admission onward (kept across
+    /// retire for reuse).
+    pub(super) state: Option<CausalState<'s>>,
+    /// A submitted token is waiting for the next tick.
+    pub(super) pending: bool,
+    /// `out` holds a served row the caller has not taken yet.
+    pub(super) has_output: bool,
+    pub(super) q: Vec<f32>,
+    pub(super) k: Vec<f32>,
+    pub(super) v: Vec<f32>,
+    pub(super) out: Vec<f32>,
+    pub(super) submitted_at: Instant,
+}
+
+/// The pool of decode streams behind one shared [`AttentionSession`].
+/// See [`crate::serve`] for the lifecycle.
+pub struct StreamPool<'s> {
+    pub(super) session: &'s AttentionSession,
+    pub(super) cfg: ServeConfig,
+    pub(super) slots: Vec<Slot<'s>>,
+    /// Free slot indices (stack).
+    pub(super) free: Vec<u32>,
+    pub(super) active: usize,
+    /// Tokens currently staged for the next tick, across all streams.
+    pub(super) pending: usize,
+    pub(super) tel: Telemetry,
+}
+
+impl<'s> StreamPool<'s> {
+    /// Build a pool over `session` (which must be causal with a
+    /// Table-1 kernel — the same contract as
+    /// [`AttentionSession::begin_decode`], surfaced here at build time
+    /// rather than on the first admit).
+    pub fn new(session: &'s AttentionSession, cfg: ServeConfig) -> Result<StreamPool<'s>> {
+        if cfg.max_streams == 0 {
+            bail!("StreamPool: max_streams must be > 0");
+        }
+        if cfg.max_streams > u32::MAX as usize {
+            bail!("StreamPool: max_streams {} exceeds the slot index range", cfg.max_streams);
+        }
+        // Validates causal + kernel + dv + backend phi availability once,
+        // with begin_decode's own error messages.
+        session
+            .begin_decode(cfg.dv)
+            .context("StreamPool: session cannot stream-decode")?;
+        let d = session.spec().head_dim;
+        let now = Instant::now();
+        let slots = (0..cfg.max_streams)
+            .map(|_| Slot {
+                gen: 0,
+                active: false,
+                state: None,
+                pending: false,
+                has_output: false,
+                q: vec![0.0; d],
+                k: vec![0.0; d],
+                v: vec![0.0; cfg.dv],
+                out: vec![0.0; cfg.dv],
+                submitted_at: now,
+            })
+            .collect();
+        let free = (0..cfg.max_streams as u32).rev().collect();
+        Ok(StreamPool {
+            session,
+            cfg,
+            slots,
+            free,
+            active: 0,
+            pending: 0,
+            tel: Telemetry::new(),
+        })
+    }
+
+    /// The shared session every stream decodes through.
+    pub fn session(&self) -> &'s AttentionSession {
+        self.session
+    }
+
+    /// The pool's config (normalized accessors: see
+    /// [`ServeConfig::pending_bound`] / [`ServeConfig::batch_threshold`]).
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Currently admitted streams.
+    pub fn active_streams(&self) -> usize {
+        self.active
+    }
+
+    /// Tokens staged for the next tick.
+    pub fn pending_tokens(&self) -> usize {
+        self.pending
+    }
+
+    /// The pool's telemetry (latency histogram, throughput, occupancy,
+    /// rejection counters).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    fn resolve(&self, id: StreamId) -> Result<usize, ServeError> {
+        let si = id.slot as usize;
+        match self.slots.get(si) {
+            Some(slot) if slot.active && slot.gen == id.gen => Ok(si),
+            _ => Err(ServeError::UnknownStream),
+        }
+    }
+
+    /// Admit one stream. Fails with [`ServeError::PoolFull`] when every
+    /// slot is live, and [`ServeError::Session`] if the shared session
+    /// refuses a fresh decode state (validated at pool build, so this
+    /// is unreachable in practice).
+    pub fn admit(&mut self) -> Result<StreamId, ServeError> {
+        let Some(si) = self.free.pop() else {
+            self.tel.record_admit_rejected();
+            return Err(ServeError::PoolFull { capacity: self.cfg.max_streams });
+        };
+        let slot = &mut self.slots[si as usize];
+        match slot.state.as_mut() {
+            Some(state) => state.reset(),
+            None => match self.session.begin_decode(self.cfg.dv) {
+                Ok(state) => slot.state = Some(state),
+                Err(e) => {
+                    self.free.push(si);
+                    self.tel.record_admit_rejected();
+                    return Err(ServeError::Session(format!("{e:#}")));
+                }
+            },
+        }
+        slot.active = true;
+        slot.pending = false;
+        slot.has_output = false;
+        self.active += 1;
+        self.tel.record_admit();
+        Ok(StreamId { slot: si, gen: slot.gen })
+    }
+
+    /// Retire a stream, freeing its slot (any pending token or untaken
+    /// output is dropped). The handle is dead afterwards.
+    pub fn retire(&mut self, id: StreamId) -> Result<(), ServeError> {
+        let si = self.resolve(id)?;
+        let slot = &mut self.slots[si];
+        if slot.pending {
+            self.pending -= 1;
+        }
+        slot.active = false;
+        slot.pending = false;
+        slot.has_output = false;
+        slot.gen = slot.gen.wrapping_add(1);
+        self.active -= 1;
+        self.free.push(si as u32);
+        Ok(())
+    }
+
+    /// Stage one `(q, k, v)` token for `id`, to be served by the next
+    /// [`Scheduler::tick`](super::Scheduler::tick). Closed-loop: each
+    /// stream has at most one token in flight ([`ServeError::StreamBusy`]
+    /// until the previous output is taken), and the pool-wide queue is
+    /// bounded ([`ServeError::Backpressure`]).
+    pub fn submit(
+        &mut self,
+        id: StreamId,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(), ServeError> {
+        let si = self.resolve(id)?;
+        if self.slots[si].pending || self.slots[si].has_output {
+            return Err(ServeError::StreamBusy);
+        }
+        if self.pending >= self.cfg.pending_bound() {
+            self.tel.record_submit_rejected();
+            return Err(ServeError::Backpressure { max_pending: self.cfg.pending_bound() });
+        }
+        let d = self.session.spec().head_dim;
+        let check = |what: &'static str, got: usize, expected: usize| {
+            if got == expected {
+                Ok(())
+            } else {
+                Err(ServeError::BadRow { what, expected, got })
+            }
+        };
+        check("q", q.len(), d)?;
+        check("k", k.len(), d)?;
+        check("v", v.len(), self.cfg.dv)?;
+        let slot = &mut self.slots[si];
+        slot.q.copy_from_slice(q);
+        slot.k.copy_from_slice(k);
+        slot.v.copy_from_slice(v);
+        slot.submitted_at = Instant::now();
+        slot.pending = true;
+        self.pending += 1;
+        Ok(())
+    }
+
+    /// True when a served output row is waiting to be taken.
+    pub fn has_output(&self, id: StreamId) -> bool {
+        self.resolve(id).map(|si| self.slots[si].has_output).unwrap_or(false)
+    }
+
+    /// Tokens this stream has decoded so far.
+    pub fn stream_len(&self, id: StreamId) -> Result<usize, ServeError> {
+        let si = self.resolve(id)?;
+        Ok(self.slots[si].state.as_ref().map(|s| s.len()).unwrap_or(0))
+    }
+
+    /// Copy the served output row into `out` (length `dv`) and clear
+    /// the slot for the stream's next submission.
+    pub fn take_output(&mut self, id: StreamId, out: &mut [f32]) -> Result<(), ServeError> {
+        let si = self.resolve(id)?;
+        if !self.slots[si].has_output {
+            return Err(ServeError::NoOutput);
+        }
+        if out.len() != self.cfg.dv {
+            return Err(ServeError::BadRow { what: "out", expected: self.cfg.dv, got: out.len() });
+        }
+        let slot = &mut self.slots[si];
+        out.copy_from_slice(&slot.out);
+        slot.has_output = false;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::{AttentionSpec, Backend, Kernel};
+
+    fn session() -> AttentionSession {
+        AttentionSpec::new(Kernel::Exp)
+            .head_dim(3)
+            .num_features(8)
+            .causal(true)
+            .seed(2)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn pool_rejects_non_streaming_sessions() {
+        let not_causal = AttentionSpec::new(Kernel::Exp)
+            .head_dim(3)
+            .num_features(8)
+            .build()
+            .unwrap();
+        assert!(StreamPool::new(&not_causal, ServeConfig::new(2, 1)).is_err());
+        let sess = session();
+        // dv = 0 surfaces begin_decode's rejection at pool build
+        assert!(StreamPool::new(&sess, ServeConfig::new(2, 0)).is_err());
+        let zero_capacity = ServeConfig { max_streams: 0, ..ServeConfig::new(2, 1) };
+        assert!(StreamPool::new(&sess, zero_capacity).is_err());
+    }
+
+    #[test]
+    fn admission_is_bounded_with_reasoned_rejection() {
+        let sess = session();
+        let mut pool = StreamPool::new(&sess, ServeConfig::new(2, 1)).unwrap();
+        let a = pool.admit().unwrap();
+        let _b = pool.admit().unwrap();
+        assert_eq!(pool.active_streams(), 2);
+        assert_eq!(pool.admit().unwrap_err(), ServeError::PoolFull { capacity: 2 });
+        // retiring frees the slot for a new admission
+        pool.retire(a).unwrap();
+        let c = pool.admit().unwrap();
+        assert_eq!(pool.active_streams(), 2);
+        // the retired handle is dead even though its slot was reused
+        assert_eq!(pool.retire(a).unwrap_err(), ServeError::UnknownStream);
+        assert_eq!(pool.stream_len(c).unwrap(), 0);
+        assert_eq!(pool.telemetry().rejected_admits(), 1);
+    }
+
+    #[test]
+    fn submit_validates_rows_and_closed_loop() {
+        let sess = session();
+        let mut pool = StreamPool::new(&sess, ServeConfig::new(2, 1)).unwrap();
+        let a = pool.admit().unwrap();
+        assert_eq!(
+            pool.submit(a, &[0.0; 2], &[0.0; 3], &[0.0]).unwrap_err(),
+            ServeError::BadRow { what: "q", expected: 3, got: 2 }
+        );
+        assert_eq!(
+            pool.submit(a, &[0.0; 3], &[0.0; 3], &[0.0; 2]).unwrap_err(),
+            ServeError::BadRow { what: "v", expected: 1, got: 2 }
+        );
+        pool.submit(a, &[0.0; 3], &[0.0; 3], &[0.5]).unwrap();
+        assert_eq!(pool.pending_tokens(), 1);
+        // one token in flight per stream
+        assert_eq!(
+            pool.submit(a, &[0.0; 3], &[0.0; 3], &[0.5]).unwrap_err(),
+            ServeError::StreamBusy
+        );
+        // nothing served yet
+        assert_eq!(pool.take_output(a, &mut [0.0]).unwrap_err(), ServeError::NoOutput);
+    }
+
+    #[test]
+    fn submit_queue_is_bounded() {
+        let sess = session();
+        let cfg = ServeConfig { max_pending: 2, ..ServeConfig::new(3, 1) };
+        let mut pool = StreamPool::new(&sess, cfg).unwrap();
+        let ids: Vec<_> = (0..3).map(|_| pool.admit().unwrap()).collect();
+        pool.submit(ids[0], &[0.0; 3], &[0.0; 3], &[0.5]).unwrap();
+        pool.submit(ids[1], &[0.0; 3], &[0.0; 3], &[0.5]).unwrap();
+        assert_eq!(
+            pool.submit(ids[2], &[0.0; 3], &[0.0; 3], &[0.5]).unwrap_err(),
+            ServeError::Backpressure { max_pending: 2 }
+        );
+        assert_eq!(pool.telemetry().rejected_submits(), 1);
+    }
+}

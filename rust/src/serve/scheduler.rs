@@ -1,0 +1,260 @@
+//! [`Scheduler`] — the dynamic micro-batching tick.
+//!
+//! Each [`Scheduler::tick`] drains every pending submission in the pool
+//! as one micro-batch:
+//!
+//! 1. **Gather** — the pending streams' staged q/k rows are scaled to
+//!    score scale (`d^(-1/4)`, same as the single-stream path) into the
+//!    scheduler's grow-only scratch, forming one `(g, 1, d)` problem
+//!    set.
+//! 2. **Feature step** — one
+//!    [`AttentionSession::phi_rows_into`](crate::attn::AttentionSession::phi_rows_into)
+//!    call per side (k, then q) maps the whole batch through the
+//!    session's feature draw; on the host tier this shards rows over
+//!    the persistent fastpath worker pool.
+//! 3. **Fold** — each stream's `(S, z)` update + output row runs via
+//!    [`for_each_index`](crate::fastpath::parallel::for_each_index)
+//!    over the same pool, one stream per claimed index (disjoint slots,
+//!    so the parallel fold is race-free and order-independent).
+//!
+//! Degenerate batches — fewer than
+//! [`batch_threshold`](super::ServeConfig::batch_threshold) pending
+//! streams — skip the gather/dispatch machinery and serve each stream
+//! on the calling thread, with the same two-phase order per token
+//! (both fallible phi rows first, then the infallible fold). Both
+//! paths run the same per-row phi kernels and the same fold code as
+//! [`append_token_into`](crate::attn::CausalState::append_token_into),
+//! so serve outputs are **bit-identical** to lone single-stream
+//! decodes (proved by `tests/serve_streams.rs` on both SIMD arms).
+//!
+//! Steady-state ticks make **zero heap allocations**: the scratch and
+//! schedule vectors are grow-only, telemetry buckets are fixed-size,
+//! and both dispatch layers are the allocation-free fastpath pool
+//! (enforced by `tests/alloc_free.rs`).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::fastpath::parallel::SendPtr;
+use crate::fastpath::{grow, parallel, simd};
+
+use super::pool::StreamPool;
+
+/// What one [`Scheduler::tick`] did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TickStats {
+    /// Streams served this tick (0 = idle tick).
+    pub batch: usize,
+    /// True when the degenerate-batch sequential path ran instead of
+    /// the gathered `(g, 1, d)` step.
+    pub sequential: bool,
+}
+
+/// The micro-batch scheduler. Owns only grow-only scratch, so one
+/// scheduler can serve any number of pools (though one pool per
+/// scheduler is the typical shape).
+#[derive(Default)]
+pub struct Scheduler {
+    /// Slot indices scheduled this tick.
+    scheduled: Vec<u32>,
+    /// Scaled q rows, `g * d`.
+    qs: Vec<f32>,
+    /// Scaled k rows, `g * d`.
+    ks: Vec<f32>,
+    /// phi(q'), `g * D`.
+    phi_q: Vec<f32>,
+    /// phi(k'), `g * D`.
+    phi_k: Vec<f32>,
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler::default()
+    }
+
+    /// Serve every pending submission in `pool` as one micro-batch (see
+    /// the [`crate::serve::scheduler`] module docs). Idle ticks (nothing
+    /// pending) are cheap and recorded as such. On error (a backend
+    /// refusing a step, e.g. the device tier losing its runtime) the
+    /// un-served streams keep their pending submissions and the next
+    /// tick retries them; no stream's state is ever advanced twice for
+    /// one token — the batched path folds only after every phi row
+    /// exists, and the sequential path marks each stream served as it
+    /// folds.
+    pub fn tick(&mut self, pool: &mut StreamPool<'_>) -> Result<TickStats> {
+        let queue_depth = pool.pending;
+        self.scheduled.clear();
+        for (i, slot) in pool.slots.iter().enumerate() {
+            if slot.active && slot.pending {
+                self.scheduled.push(i as u32);
+            }
+        }
+        let g = self.scheduled.len();
+        debug_assert_eq!(g, pool.pending, "pending count out of sync with slots");
+        if g == 0 {
+            pool.tel.record_tick(0, queue_depth, false);
+            return Ok(TickStats { batch: 0, sequential: false });
+        }
+        let sequential = g < pool.cfg.batch_threshold();
+        let session = pool.session;
+        let d = session.spec().head_dim;
+        let map = session.feature_map().expect("streaming pool implies a Maclaurin session");
+        let feat = map.flat.num_features();
+        let scale = session.decode_scale();
+        if sequential {
+            // Degenerate batch: the gathered step would only add
+            // dispatch overhead — serve each stream on the calling
+            // thread. Same two-phase order per token as the batched
+            // path (both fallible phi rows first, then the infallible
+            // fold), and each stream is marked served as soon as its
+            // token folds — so an error mid-loop leaves exactly the
+            // un-served streams pending and no token is ever folded
+            // twice.
+            grow(&mut self.qs, d);
+            grow(&mut self.ks, d);
+            grow(&mut self.phi_q, feat);
+            grow(&mut self.phi_k, feat);
+            let mut served = 0usize;
+            for &si in &self.scheduled {
+                let slot = &mut pool.slots[si as usize];
+                simd::scaled_copy(&slot.q, scale, &mut self.qs[..d]);
+                simd::scaled_copy(&slot.k, scale, &mut self.ks[..d]);
+                let mut phi = session.phi_rows_into(&self.ks[..d], 1, &mut self.phi_k[..feat]);
+                if phi.is_ok() {
+                    phi = session.phi_rows_into(&self.qs[..d], 1, &mut self.phi_q[..feat]);
+                }
+                if let Err(e) = phi {
+                    // account for the streams this tick did serve
+                    if served > 0 {
+                        pool.tel.record_tick(served, queue_depth, sequential);
+                    }
+                    return Err(e);
+                }
+                let state = slot.state.as_mut().expect("active slot always has a state");
+                state.fold_token_into(
+                    &self.phi_k[..feat],
+                    &self.phi_q[..feat],
+                    &slot.v,
+                    &mut slot.out,
+                );
+                slot.pending = false;
+                slot.has_output = true;
+                pool.pending -= 1;
+                let latency = Instant::now().duration_since(slot.submitted_at);
+                pool.tel.record_token_latency(latency);
+                served += 1;
+            }
+            pool.tel.record_tick(g, queue_depth, sequential);
+            return Ok(TickStats { batch: g, sequential });
+        }
+        {
+            grow(&mut self.qs, g * d);
+            grow(&mut self.ks, g * d);
+            grow(&mut self.phi_q, g * feat);
+            grow(&mut self.phi_k, g * feat);
+            for (j, &si) in self.scheduled.iter().enumerate() {
+                let slot = &pool.slots[si as usize];
+                simd::scaled_copy(&slot.q, scale, &mut self.qs[j * d..(j + 1) * d]);
+                simd::scaled_copy(&slot.k, scale, &mut self.ks[j * d..(j + 1) * d]);
+            }
+            // One (g, 1, d) feature step per side across the whole
+            // micro-batch, sharded over the fastpath worker pool.
+            session.phi_rows_into(&self.ks[..g * d], g, &mut self.phi_k[..g * feat])?;
+            session.phi_rows_into(&self.qs[..g * d], g, &mut self.phi_q[..g * feat])?;
+            // Parallel per-stream fold: index j owns slot scheduled[j].
+            let slots = SendPtr(pool.slots.as_mut_ptr());
+            let scheduled = &self.scheduled[..g];
+            let phi_k = &self.phi_k[..g * feat];
+            let phi_q = &self.phi_q[..g * feat];
+            parallel::for_each_index(g, |j| {
+                // SAFETY: `scheduled` holds distinct indices, each
+                // claimed exactly once, and the exclusive borrow of
+                // `pool` is held across this call (see SendPtr).
+                let slot = unsafe { &mut *slots.0.add(scheduled[j] as usize) };
+                let state = slot.state.as_mut().expect("active slot always has a state");
+                state.fold_token_into(
+                    &phi_k[j * feat..(j + 1) * feat],
+                    &phi_q[j * feat..(j + 1) * feat],
+                    &slot.v,
+                    &mut slot.out,
+                );
+            });
+        }
+        // Hand outputs over and record per-token latency (queue wait +
+        // compute, measured submit -> served).
+        let served_at = Instant::now();
+        for &si in &self.scheduled {
+            let slot = &mut pool.slots[si as usize];
+            slot.pending = false;
+            slot.has_output = true;
+            pool.tel.record_token_latency(served_at.duration_since(slot.submitted_at));
+        }
+        pool.pending -= g;
+        pool.tel.record_tick(g, queue_depth, sequential);
+        Ok(TickStats { batch: g, sequential })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::{AttentionSpec, Backend, Kernel};
+    use crate::serve::ServeConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tick_serves_all_pending_and_idles_cleanly() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(16)
+            .causal(true)
+            .seed(3)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let mut pool = StreamPool::new(&sess, ServeConfig::new(5, 2)).unwrap();
+        let mut sched = Scheduler::new();
+        // idle tick first
+        let stats = sched.tick(&mut pool).unwrap();
+        assert_eq!(stats, TickStats { batch: 0, sequential: false });
+        let ids: Vec<_> = (0..5).map(|_| pool.admit().unwrap()).collect();
+        let mut rng = Rng::new(9);
+        for &id in &ids {
+            let q: Vec<f32> = (0..4).map(|_| rng.normal() * 0.5).collect();
+            let k: Vec<f32> = (0..4).map(|_| rng.normal() * 0.5).collect();
+            let v: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
+            pool.submit(id, &q, &k, &v).unwrap();
+        }
+        let stats = sched.tick(&mut pool).unwrap();
+        assert_eq!(stats, TickStats { batch: 5, sequential: false });
+        assert_eq!(pool.pending_tokens(), 0);
+        let mut out = [0.0f32; 2];
+        for &id in &ids {
+            pool.take_output(id, &mut out).unwrap();
+            assert!(out.iter().all(|x| x.is_finite()));
+            assert_eq!(pool.stream_len(id).unwrap(), 1);
+        }
+        assert_eq!(pool.telemetry().tokens(), 5);
+    }
+
+    #[test]
+    fn degenerate_batch_falls_back_to_sequential() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(16)
+            .causal(true)
+            .seed(3)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let cfg = ServeConfig { min_batch: 3, ..ServeConfig::new(4, 2) };
+        let mut pool = StreamPool::new(&sess, cfg).unwrap();
+        let mut sched = Scheduler::new();
+        let a = pool.admit().unwrap();
+        pool.submit(a, &[0.1; 4], &[0.2; 4], &[1.0, 2.0]).unwrap();
+        let stats = sched.tick(&mut pool).unwrap();
+        assert_eq!(stats, TickStats { batch: 1, sequential: true });
+        assert!(pool.has_output(a));
+    }
+}

@@ -1,0 +1,358 @@
+//! [`Telemetry`] — fixed-footprint serving metrics.
+//!
+//! Everything here is counters and a log2-bucketed latency histogram:
+//! no growth, no allocation, so the scheduler can record into it from
+//! the steady-state tick without breaking the zero-alloc contract.
+//! Percentiles are reconstructed from the histogram (reported as each
+//! bucket's upper bound, i.e. conservatively rounded up by at most 2x);
+//! the max is tracked exactly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+
+/// Latency buckets: bucket `b` covers `[2^b, 2^(b+1))` nanoseconds.
+/// 48 buckets span 1 ns .. ~78 hours — everything a serving tick can
+/// plausibly produce.
+const BUCKETS: usize = 48;
+
+// `percentile` computes bucket upper bounds as `1 << (idx + 1)`;
+// keep the bucket count inside the u64 shift range.
+const _: () = assert!(BUCKETS < 64);
+
+#[derive(Debug, Clone)]
+struct Histogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram { buckets: [0; BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    fn record(&mut self, ns: u64) {
+        let idx = (63 - ns.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Upper bound of the bucket holding the p-th percentile sample, in
+    /// seconds (0.0 with no samples).
+    fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // idx <= BUCKETS - 1, and BUCKETS < 64 (asserted above)
+                let upper_ns = 1u64 << (idx + 1);
+                return upper_ns.min(self.max_ns.max(1)) as f64 * 1e-9;
+            }
+        }
+        self.max_ns as f64 * 1e-9
+    }
+
+    fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64 * 1e-9
+        }
+    }
+}
+
+/// Serving metrics for one [`StreamPool`](super::StreamPool): per-token
+/// latency histogram, throughput, batch occupancy, queue depth, and
+/// admission-control rejection counters.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    created: Instant,
+    tokens: u64,
+    ticks: u64,
+    idle_ticks: u64,
+    batched_ticks: u64,
+    sequential_ticks: u64,
+    batch_sum: u64,
+    batch_max: usize,
+    depth_sum: u64,
+    depth_max: usize,
+    admits: u64,
+    rejected_admits: u64,
+    rejected_submits: u64,
+    latency: Histogram,
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::new()
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry {
+            created: Instant::now(),
+            tokens: 0,
+            ticks: 0,
+            idle_ticks: 0,
+            batched_ticks: 0,
+            sequential_ticks: 0,
+            batch_sum: 0,
+            batch_max: 0,
+            depth_sum: 0,
+            depth_max: 0,
+            admits: 0,
+            rejected_admits: 0,
+            rejected_submits: 0,
+            latency: Histogram::new(),
+        }
+    }
+
+    pub(super) fn record_admit(&mut self) {
+        self.admits += 1;
+    }
+
+    pub(super) fn record_admit_rejected(&mut self) {
+        self.rejected_admits += 1;
+    }
+
+    pub(super) fn record_submit_rejected(&mut self) {
+        self.rejected_submits += 1;
+    }
+
+    pub(super) fn record_tick(&mut self, batch: usize, queue_depth: usize, sequential: bool) {
+        self.ticks += 1;
+        self.depth_sum += queue_depth as u64;
+        self.depth_max = self.depth_max.max(queue_depth);
+        if batch == 0 {
+            self.idle_ticks += 1;
+            return;
+        }
+        if sequential {
+            self.sequential_ticks += 1;
+        } else {
+            self.batched_ticks += 1;
+        }
+        self.batch_sum += batch as u64;
+        self.batch_max = self.batch_max.max(batch);
+        self.tokens += batch as u64;
+    }
+
+    pub(super) fn record_token_latency(&mut self, latency: Duration) {
+        self.latency.record(latency.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Tokens served (across all streams).
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    /// Scheduler ticks observed (including idle ones).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Ticks that served nothing.
+    pub fn idle_ticks(&self) -> u64 {
+        self.idle_ticks
+    }
+
+    /// Ticks that ran the gathered `(g, 1, d)` micro-batch step.
+    pub fn batched_ticks(&self) -> u64 {
+        self.batched_ticks
+    }
+
+    /// Ticks that fell back to the per-stream sequential path.
+    pub fn sequential_ticks(&self) -> u64 {
+        self.sequential_ticks
+    }
+
+    /// Streams admitted.
+    pub fn admits(&self) -> u64 {
+        self.admits
+    }
+
+    /// Admissions rejected with [`PoolFull`](super::ServeError::PoolFull).
+    pub fn rejected_admits(&self) -> u64 {
+        self.rejected_admits
+    }
+
+    /// Submissions rejected with
+    /// [`Backpressure`](super::ServeError::Backpressure).
+    pub fn rejected_submits(&self) -> u64 {
+        self.rejected_submits
+    }
+
+    /// Mean streams per non-idle tick (batch occupancy).
+    pub fn mean_batch(&self) -> f64 {
+        let serving = self.batched_ticks + self.sequential_ticks;
+        if serving == 0 {
+            0.0
+        } else {
+            self.batch_sum as f64 / serving as f64
+        }
+    }
+
+    /// Largest micro-batch served by one tick.
+    pub fn max_batch(&self) -> usize {
+        self.batch_max
+    }
+
+    /// Mean queue depth at tick start.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.ticks == 0 {
+            0.0
+        } else {
+            self.depth_sum as f64 / self.ticks as f64
+        }
+    }
+
+    /// Deepest queue seen at a tick start.
+    pub fn max_queue_depth(&self) -> usize {
+        self.depth_max
+    }
+
+    /// Wall-clock seconds since this telemetry (i.e. its pool) was
+    /// created.
+    pub fn elapsed(&self) -> f64 {
+        self.created.elapsed().as_secs_f64()
+    }
+
+    /// Served tokens per wall-clock second since pool creation.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let dt = self.elapsed();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / dt
+        }
+    }
+
+    /// p-th percentile of per-token latency (submit -> served), seconds.
+    /// Bucketed: see the module docs for rounding semantics.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.latency.percentile(p)
+    }
+
+    /// Mean per-token latency in seconds (exact, not bucketed).
+    pub fn latency_mean(&self) -> f64 {
+        self.latency.mean()
+    }
+
+    /// Worst per-token latency in seconds (exact).
+    pub fn latency_max(&self) -> f64 {
+        self.latency.max_ns as f64 * 1e-9
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        format!(
+            "tokens {:>8}  |  {:>10.0} tok/s  |  latency p50 {:>9.6}s p99 {:>9.6}s max {:>9.6}s\n\
+             ticks  {:>8}  (batched {}, sequential {}, idle {})\n\
+             batch  mean {:>6.2} max {:>4}  |  queue mean {:>6.2} max {:>4}\n\
+             admits {:>8}  rejected: admit {} submit {}",
+            self.tokens,
+            self.tokens_per_sec(),
+            self.latency_percentile(50.0),
+            self.latency_percentile(99.0),
+            self.latency_max(),
+            self.ticks,
+            self.batched_ticks,
+            self.sequential_ticks,
+            self.idle_ticks,
+            self.mean_batch(),
+            self.batch_max,
+            self.mean_queue_depth(),
+            self.depth_max,
+            self.admits,
+            self.rejected_admits,
+            self.rejected_submits,
+        )
+    }
+
+    /// Machine-readable snapshot (the `telemetry` block of
+    /// `BENCH_serve.json`). Deliberately time-independent — pure
+    /// counters and the histogram, so a cloned `Telemetry` serializes
+    /// the same no matter when. Rates need a measurement window only
+    /// the caller knows (the load generator reports tokens/sec over
+    /// its drive loop; [`Telemetry::tokens_per_sec`] measures since
+    /// pool creation).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("tokens", Value::num(self.tokens as f64)),
+            ("ticks", Value::num(self.ticks as f64)),
+            ("idle_ticks", Value::num(self.idle_ticks as f64)),
+            ("batched_ticks", Value::num(self.batched_ticks as f64)),
+            ("sequential_ticks", Value::num(self.sequential_ticks as f64)),
+            ("batch_mean", Value::num(self.mean_batch())),
+            ("batch_max", Value::num(self.batch_max as f64)),
+            ("queue_depth_mean", Value::num(self.mean_queue_depth())),
+            ("queue_depth_max", Value::num(self.depth_max as f64)),
+            ("admits", Value::num(self.admits as f64)),
+            ("rejected_admits", Value::num(self.rejected_admits as f64)),
+            ("rejected_submits", Value::num(self.rejected_submits as f64)),
+            (
+                "latency_s",
+                Value::obj(vec![
+                    ("mean", Value::num(self.latency_mean())),
+                    ("p50", Value::num(self.latency_percentile(50.0))),
+                    ("p90", Value::num(self.latency_percentile(90.0))),
+                    ("p99", Value::num(self.latency_percentile(99.0))),
+                    ("max", Value::num(self.latency_max())),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_bracket_the_samples() {
+        let mut h = Histogram::new();
+        // 100 samples at ~1us, one at ~1ms
+        for _ in 0..100 {
+            h.record(1_000);
+        }
+        h.record(1_000_000);
+        let p50 = h.percentile(50.0);
+        assert!(p50 >= 1e-6 && p50 <= 4e-6, "p50 {p50}");
+        let p100 = h.percentile(100.0);
+        assert!((p100 - 1e-3).abs() < 2e-3, "p100 {p100}");
+        assert_eq!(h.count, 101);
+        // zero-duration samples land in the bottom bucket, no panic
+        h.record(0);
+        assert_eq!(h.count, 102);
+    }
+
+    #[test]
+    fn tick_accounting_separates_idle_batched_sequential() {
+        let mut t = Telemetry::new();
+        t.record_tick(0, 0, false);
+        t.record_tick(4, 4, false);
+        t.record_tick(1, 3, true);
+        assert_eq!(t.ticks(), 3);
+        assert_eq!(t.idle_ticks(), 1);
+        assert_eq!(t.batched_ticks(), 1);
+        assert_eq!(t.sequential_ticks(), 1);
+        assert_eq!(t.tokens(), 5);
+        assert!((t.mean_batch() - 2.5).abs() < 1e-12);
+        assert_eq!(t.max_batch(), 4);
+        assert_eq!(t.max_queue_depth(), 4);
+        t.record_token_latency(Duration::from_micros(3));
+        let json = t.to_json();
+        assert_eq!(json.get("tokens").as_usize(), Some(5));
+        assert!(json.get("latency_s").get("max").as_f64().unwrap() > 0.0);
+        assert!(t.render().contains("tokens"));
+    }
+}

@@ -1,9 +1,10 @@
 //! Steady-state allocation audit (the ISSUE's heap-profile acceptance
-//! criterion): after a warmup call, `AttentionSession::forward_into`
-//! and `CausalState::append_token_into` must make ZERO heap
-//! allocations — the scratch arena, the thread-local kernel
-//! workspaces, and the claim-based worker pool leave nothing to
-//! allocate per call.
+//! criterion): after a warmup call, `AttentionSession::forward_into`,
+//! `CausalState::append_token_into`, and the serve subsystem's
+//! submit/tick/take_output loop must make ZERO heap allocations — the
+//! scratch arena, the thread-local kernel workspaces, the claim-based
+//! worker pool, the scheduler's grow-only gather buffers, and the
+//! fixed-bucket telemetry leave nothing to allocate per call.
 //!
 //! A counting `#[global_allocator]` wraps the system allocator; this
 //! file owns its whole test binary so the counter sees only this
@@ -18,6 +19,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use macformer::attn::{AttentionSpec, Backend, Kernel};
+use macformer::serve::{Scheduler, ServeConfig, StreamPool};
 use macformer::tensor::Tensor;
 use macformer::util::rng::Rng;
 
@@ -129,6 +131,70 @@ fn forward_into_batched_through_the_pool_is_allocation_free_after_warmup() {
         zero_window,
         "pooled forward_into never reached an allocation-free steady state"
     );
+}
+
+/// The serve loop: once every stream slot, the scheduler's gather
+/// scratch, and the worker-pool thread locals have warmed up, a full
+/// submit-all / tick / take-all cycle over the micro-batching scheduler
+/// allocates nothing (the ISSUE's steady-state serving criterion).
+#[test]
+fn serve_tick_cycle_is_allocation_free_after_warmup() {
+    let _serial = TEST_LOCK.lock().unwrap();
+    let session = AttentionSpec::new(Kernel::Exp)
+        .head_dim(8)
+        .num_features(32)
+        .causal(true)
+        .seed(9)
+        .backend(Backend::HostFast)
+        .build()
+        .unwrap();
+    let (d, dv, streams) = (8usize, 4usize, 8usize);
+    let mut pool = StreamPool::new(&session, ServeConfig::new(streams, dv)).unwrap();
+    let mut scheduler = Scheduler::new();
+    let ids: Vec<_> = (0..streams).map(|_| pool.admit().unwrap()).collect();
+    let mut rng = Rng::new(6);
+    let q = Tensor::randn(&mut rng, &[streams, d], 0.4);
+    let k = Tensor::randn(&mut rng, &[streams, d], 0.4);
+    let v = Tensor::randn(&mut rng, &[streams, dv], 1.0);
+    let mut row = vec![0.0f32; dv];
+    let mut cycle = |pool: &mut StreamPool<'_>, scheduler: &mut Scheduler| {
+        for (i, &id) in ids.iter().enumerate() {
+            pool.submit(
+                id,
+                &q.data[i * d..(i + 1) * d],
+                &k.data[i * d..(i + 1) * d],
+                &v.data[i * dv..(i + 1) * dv],
+            )
+            .unwrap();
+        }
+        let stats = scheduler.tick(pool).unwrap();
+        assert_eq!(stats.batch, streams);
+        for &id in &ids {
+            pool.take_output(id, &mut row).unwrap();
+        }
+    };
+    // warmup: scheduler scratch + every pool worker's thread locals
+    for _ in 0..20 {
+        cycle(&mut pool, &mut scheduler);
+    }
+    // claiming is dynamic (see the batched forward test): demonstrate
+    // ONE fully allocation-free window
+    let mut zero_window = false;
+    for _attempt in 0..5 {
+        let before = allocations();
+        for _ in 0..10 {
+            cycle(&mut pool, &mut scheduler);
+        }
+        if allocations() == before {
+            zero_window = true;
+            break;
+        }
+    }
+    assert!(
+        zero_window,
+        "steady-state serve submit/tick/take cycle never reached an allocation-free window"
+    );
+    assert!(row.iter().all(|x| x.is_finite()));
 }
 
 /// Streaming decode: after `begin_decode` (which owns all per-token

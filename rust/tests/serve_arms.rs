@@ -1,0 +1,51 @@
+//! Serve-vs-single-stream equivalence with the SIMD dispatch pinned to
+//! each arm. `set_active`/`reset` are process-global, so this file owns
+//! a whole test binary with one test (the `simd_dispatch.rs`
+//! convention) — flipping arms here cannot race with any other test's
+//! dispatch reads.
+//!
+//! On both arms the micro-batched serve path and the lone
+//! single-stream decode run the *same* phi kernels and the *same* fold
+//! code on identical inputs, so the outputs must be bit-identical —
+//! not merely close — scalar and AVX2+FMA alike.
+
+use macformer::fastpath::simd;
+use macformer::serve::loadgen::{run, Arrival, LoadConfig};
+
+#[test]
+fn serve_is_bit_identical_to_single_stream_on_both_arms() {
+    let cfg = LoadConfig {
+        streams: 16,
+        tokens: 10,
+        head_dim: 6,
+        dv: 5,
+        num_features: 24,
+        arrival: Arrival::Bursty,
+        seed: 0xA4A5,
+        ..LoadConfig::default()
+    };
+    // scalar arm: always available
+    assert!(!simd::set_active(false));
+    let scalar = run(&cfg).unwrap();
+    assert_eq!(scalar.stream_errors, 0);
+    assert_eq!(
+        scalar.verified,
+        Some(true),
+        "scalar arm: serve diverged from single-stream (max |diff| {})",
+        scalar.max_abs_diff
+    );
+    // vector arm, where the host supports it
+    let vector_on = simd::set_active(true);
+    assert_eq!(vector_on, simd::supported());
+    if vector_on {
+        let vector = run(&cfg).unwrap();
+        assert_eq!(vector.stream_errors, 0);
+        assert_eq!(
+            vector.verified,
+            Some(true),
+            "vector arm: serve diverged from single-stream (max |diff| {})",
+            vector.max_abs_diff
+        );
+    }
+    simd::reset();
+}

@@ -1,0 +1,252 @@
+//! Multi-stream serving correctness on the default SIMD dispatch arm
+//! (CI re-runs this whole binary with `MACFORMER_NO_SIMD=1` to pin the
+//! scalar arm; `tests/serve_arms.rs` additionally pins each arm
+//! in-process).
+//!
+//! The core property: N streams interleaved through the serve
+//! subsystem — random admission order, random per-tick participation,
+//! micro-batched and sequential-fallback ticks mixed — produce
+//! per-token outputs **bit-identical** to N independent single-stream
+//! `CausalState` decodes of the same token streams. Plus the typed
+//! admission-control/backpressure behaviors of the pool.
+
+use std::str::FromStr;
+
+use macformer::attn::{AttentionSpec, Backend, Kernel};
+use macformer::serve::{Scheduler, ServeConfig, ServeError, StreamPool};
+use macformer::util::proptest::{check, PropResult};
+use macformer::util::rng::Rng;
+
+fn build_session(
+    kernel: Kernel,
+    backend: Backend,
+    d: usize,
+    feat: usize,
+    seed: u64,
+) -> macformer::attn::AttentionSession {
+    AttentionSpec::new(kernel)
+        .head_dim(d)
+        .num_features(feat)
+        .causal(true)
+        .eps(1e-6)
+        .seed(seed)
+        .backend(backend)
+        .build()
+        .unwrap()
+}
+
+/// N interleaved serve streams == N independent single-stream decodes,
+/// bit for bit, across kernels, backends, batch thresholds, and ragged
+/// per-tick participation.
+#[test]
+fn prop_interleaved_serve_streams_match_single_stream_decode() {
+    check(
+        25,
+        |rng| {
+            vec![vec![
+                rng.below(5) as f32,            // kernel
+                rng.below(2) as f32,            // backend
+                rng.range(1, 7) as f32,         // streams
+                rng.range(1, 9) as f32,         // tokens per stream
+                rng.range(1, 6) as f32,         // d
+                rng.range(1, 5) as f32,         // dv
+                rng.range(1, 24) as f32,        // feat
+                rng.range(1, 5) as f32,         // min_batch
+                (rng.next_u32() >> 8) as f32,   // seed (exact in f32)
+            ]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            // shrink candidates may drop elements; a truncated input is
+            // vacuously fine
+            let Some(p) = input.first() else { return Ok(()) };
+            if p.len() < 9 {
+                return Ok(());
+            }
+            let kernel = Kernel::MACLAURIN[p[0] as usize % 5];
+            let backend = if p[1] as usize == 0 { Backend::Reference } else { Backend::HostFast };
+            let streams = (p[2] as usize).max(1);
+            let tokens = (p[3] as usize).max(1);
+            let d = (p[4] as usize).max(1);
+            let dv = (p[5] as usize).max(1);
+            let feat = (p[6] as usize).max(1);
+            let min_batch = (p[7] as usize).max(1);
+            let seed = p[8] as u64;
+            let session = build_session(kernel, backend, d, feat, seed);
+            let cfg = ServeConfig { min_batch, ..ServeConfig::new(streams, dv) };
+            let mut pool = StreamPool::new(&session, cfg).map_err(|e| format!("pool: {e}"))?;
+            let mut scheduler = Scheduler::new();
+
+            // pre-generate every stream's tokens
+            let mut rng = Rng::new(seed ^ 0x5E44E);
+            let stride = 2 * d + dv;
+            let data: Vec<Vec<f32>> = (0..streams)
+                .map(|_| (0..tokens * stride).map(|_| rng.normal() * 0.5).collect())
+                .collect();
+
+            // interleaved serve pass: random subset of ready streams
+            // submits each tick
+            let ids: Vec<_> = (0..streams)
+                .map(|i| pool.admit().map_err(|e| format!("admit {i}: {e}")))
+                .collect::<Result<_, _>>()?;
+            let mut produced = vec![0usize; streams];
+            let mut in_flight = vec![false; streams];
+            let mut outs = vec![vec![0.0f32; tokens * dv]; streams];
+            let mut guard = 0usize;
+            while produced.iter().any(|&t| t < tokens) {
+                guard += 1;
+                if guard > 64 * (tokens + streams) {
+                    return Err("livelock: no progress".into());
+                }
+                for i in 0..streams {
+                    if in_flight[i] || produced[i] >= tokens {
+                        continue;
+                    }
+                    // ragged participation: ~70% of ready streams per
+                    // tick (idle ticks are legal too)
+                    if !rng.bernoulli(0.7) {
+                        continue;
+                    }
+                    let t = produced[i];
+                    let row = &data[i][t * stride..(t + 1) * stride];
+                    pool.submit(ids[i], &row[..d], &row[d..2 * d], &row[2 * d..])
+                        .map_err(|e| format!("submit {i}@{t}: {e}"))?;
+                    in_flight[i] = true;
+                }
+                scheduler.tick(&mut pool).map_err(|e| format!("tick: {e}"))?;
+                for i in 0..streams {
+                    if !in_flight[i] {
+                        continue;
+                    }
+                    let t = produced[i];
+                    pool.take_output(ids[i], &mut outs[i][t * dv..(t + 1) * dv])
+                        .map_err(|e| format!("take {i}@{t}: {e}"))?;
+                    produced[i] = t + 1;
+                    in_flight[i] = false;
+                }
+            }
+            for (i, &id) in ids.iter().enumerate() {
+                if pool.stream_len(id) != Ok(tokens) {
+                    return Err(format!("stream {i} len {:?} != {tokens}", pool.stream_len(id)));
+                }
+                pool.retire(id).map_err(|e| format!("retire {i}: {e}"))?;
+            }
+            if pool.telemetry().tokens() != (streams * tokens) as u64 {
+                return Err(format!(
+                    "telemetry counted {} tokens, expected {}",
+                    pool.telemetry().tokens(),
+                    streams * tokens
+                ));
+            }
+
+            // independent single-stream decodes must match bit for bit
+            let mut row = vec![0.0f32; dv];
+            for i in 0..streams {
+                let mut state = session.begin_decode(dv).map_err(|e| format!("decode: {e}"))?;
+                for t in 0..tokens {
+                    let tok = &data[i][t * stride..(t + 1) * stride];
+                    state
+                        .append_token_into(&tok[..d], &tok[d..2 * d], &tok[2 * d..], &mut row)
+                        .map_err(|e| format!("single {i}@{t}: {e}"))?;
+                    let served = outs[i][t * dv..(t + 1) * dv].iter();
+                    for (c, (a, b)) in served.zip(&row).enumerate() {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "{kernel} {backend:?} streams={streams} tokens={tokens} d={d} \
+                                 dv={dv} D={feat} min_batch={min_batch}: stream {i} token {t} \
+                                 col {c}: serve {a} vs single-stream {b}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// 64 concurrent streams through the micro-batched host tier — the
+/// ISSUE's sustained-load shape — stay bit-identical to single-stream
+/// decode (deterministic spot check; the bench runs the same load with
+/// telemetry).
+#[test]
+fn serve_sustains_64_streams_bit_identical() {
+    use macformer::serve::loadgen::{run, Arrival, LoadConfig};
+    let report = run(&LoadConfig {
+        streams: 64,
+        tokens: 12,
+        head_dim: 8,
+        dv: 6,
+        num_features: 32,
+        arrival: Arrival::Closed,
+        seed: 0x5EED,
+        ..LoadConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.tokens_total, 64 * 12);
+    assert_eq!(report.stream_errors, 0);
+    assert_eq!(report.verified, Some(true), "max |diff| {}", report.max_abs_diff);
+    // the closed pattern must actually exercise the batched path
+    assert!(report.telemetry.batched_ticks() > 0);
+    assert_eq!(report.telemetry.max_batch(), 64);
+}
+
+/// The CLI's --arrival values parse and the staggered ramp exercises
+/// both scheduler paths in one run.
+#[test]
+fn staggered_ramp_mixes_sequential_and_batched_ticks() {
+    use macformer::serve::loadgen::{run, Arrival, LoadConfig};
+    assert!(macformer::serve::Arrival::from_str("staggered").is_ok());
+    let report = run(&LoadConfig {
+        streams: 6,
+        tokens: 8,
+        head_dim: 4,
+        dv: 3,
+        num_features: 16,
+        arrival: Arrival::Staggered,
+        min_batch: 3,
+        seed: 3,
+        ..LoadConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.verified, Some(true));
+    assert!(report.telemetry.sequential_ticks() > 0);
+    assert!(report.telemetry.batched_ticks() > 0);
+}
+
+/// Admission control rejects with typed reasons, never panics, and the
+/// queue bound produces real backpressure under load.
+#[test]
+fn backpressure_and_stale_handles_are_clean_errors() {
+    let session = build_session(Kernel::Exp, Backend::HostFast, 4, 16, 9);
+    let cfg = ServeConfig { max_pending: 1, ..ServeConfig::new(2, 2) };
+    let mut pool = StreamPool::new(&session, cfg).unwrap();
+    let mut scheduler = Scheduler::new();
+    let a = pool.admit().unwrap();
+    let b = pool.admit().unwrap();
+    assert!(matches!(pool.admit().unwrap_err(), ServeError::PoolFull { capacity: 2 }));
+    pool.submit(a, &[0.1; 4], &[0.2; 4], &[1.0, 2.0]).unwrap();
+    // the queue bound (1) pushes back on the second stream this tick
+    let err = pool.submit(b, &[0.1; 4], &[0.2; 4], &[1.0, 2.0]).unwrap_err();
+    assert!(matches!(err, ServeError::Backpressure { max_pending: 1 }), "{err}");
+    assert!(err.to_string().contains("backpressure"), "{err}");
+    scheduler.tick(&mut pool).unwrap();
+    // after the tick drains the queue, the stream can submit again
+    let mut out = [0.0f32; 2];
+    pool.take_output(a, &mut out).unwrap();
+    pool.submit(b, &[0.1; 4], &[0.2; 4], &[1.0, 2.0]).unwrap();
+    scheduler.tick(&mut pool).unwrap();
+    pool.take_output(b, &mut out).unwrap();
+    // stale handle after retire + slot reuse
+    pool.retire(a).unwrap();
+    let c = pool.admit().unwrap();
+    assert_eq!(
+        pool.submit(a, &[0.0; 4], &[0.0; 4], &[0.0; 2]).unwrap_err(),
+        ServeError::UnknownStream
+    );
+    assert_eq!(pool.take_output(a, &mut out).unwrap_err(), ServeError::UnknownStream);
+    assert!(pool.retire(c).is_ok());
+    assert!(pool.retire(b).is_ok());
+    assert_eq!(pool.active_streams(), 0);
+    assert_eq!(pool.telemetry().rejected_admits(), 1);
+    assert_eq!(pool.telemetry().rejected_submits(), 1);
+}
