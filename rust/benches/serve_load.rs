@@ -9,7 +9,9 @@
 //! the host tier — the ISSUE's acceptance load.
 //!
 //! Knobs (env): MACFORMER_SERVE_STREAMS (64), MACFORMER_SERVE_TOKENS
-//! (64), MACFORMER_SERVE_D (32), MACFORMER_SERVE_DV (32),
+//! (64), MACFORMER_SERVE_PROMPT (0, prompt tokens chunk-prefilled at
+//! admission — off by default so throughput stays comparable across
+//! PRs), MACFORMER_SERVE_D (32), MACFORMER_SERVE_DV (32),
 //! MACFORMER_SERVE_FEATURES (64), MACFORMER_SERVE_MIN_BATCH (2),
 //! MACFORMER_SERVE_ARRIVALS (csv of closed|staggered|bursty; default
 //! all), MACFORMER_BENCH_KERNEL (exp), MACFORMER_BENCH_BACKEND (host),
@@ -56,6 +58,11 @@ fn main() -> Result<()> {
     let base = LoadConfig {
         streams,
         tokens,
+        // default 0 so BENCH_serve.json throughput stays comparable
+        // with pre-prefill baselines (prefill wall time lands in the
+        // drive loop but prompt tokens are not decode tokens); CI's
+        // serve smoke opts in explicitly
+        prompt: env_usize("MACFORMER_SERVE_PROMPT", 0),
         head_dim: env_usize("MACFORMER_SERVE_D", 32),
         dv: env_usize("MACFORMER_SERVE_DV", 32),
         num_features: env_usize("MACFORMER_SERVE_FEATURES", 64),

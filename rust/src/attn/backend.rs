@@ -153,12 +153,13 @@ pub trait AttentionBackend: Send + Sync {
     }
 
     /// phi over `rows` pre-scaled `d`-length rows into a caller-owned
-    /// `rows * D` buffer — the serve scheduler's micro-batched decode
-    /// step, equivalent to `rows` independent [`phi_row_into`]
-    /// (row-for-row bit-identical on both host tiers) but dispatched as
-    /// one `(rows, 1, d)` batched feature call so the host tier shards
-    /// it over the persistent worker pool with zero steady-state
-    /// allocations. Tiers with a cheaper whole-batch path may override.
+    /// `rows * D` buffer — the batched single-token step behind the
+    /// serve scheduler's micro-batches and the prefill feature pass.
+    /// Equivalent to `rows` independent [`phi_row_into`] (row-for-row
+    /// bit-identical on both host tiers). The default dispatches one
+    /// `(rows, 1, d)` batched feature call; the host tier overrides
+    /// with row-blocked sharding over the persistent worker pool (zero
+    /// steady-state allocations either way).
     ///
     /// [`phi_row_into`]: AttentionBackend::phi_row_into
     fn phi_rows_into(
@@ -170,6 +171,54 @@ pub trait AttentionBackend: Send + Sync {
         out: &mut [f32],
     ) -> Result<()> {
         self.features_into(map, x_scaled, rows, 1, d, out)
+    }
+
+    /// Causal prefill fold over one problem's precomputed phi rows:
+    /// advance the running `(s, z)` decode state (`s` is `feat x dv`
+    /// row-major, `z` is `feat`) by `n` tokens and write every
+    /// position's normalized output. Pure host math over
+    /// already-computed features — infallible and allocation-free on
+    /// every tier.
+    ///
+    /// `chunk` is the blocked-kernel width; the default folds token by
+    /// token (the oracle semantics, exactly the streaming decode fold)
+    /// and ignores it. The host tier overrides with the chunkwise GEMM
+    /// kernel, whose **state advance stays bit-identical to this
+    /// fold** on the same SIMD dispatch arm — so prefill-then-decode
+    /// continues bit-compatibly regardless of tier or chunk width.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_fold_into(
+        &self,
+        phi_q: &[f32],
+        phi_k: &[f32],
+        v: &[f32],
+        n: usize,
+        feat: usize,
+        dv: usize,
+        chunk: usize,
+        eps: f32,
+        s: &mut [f32],
+        z: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let _ = chunk;
+        for i in 0..n {
+            fastpath::attention::causal_fold_key(
+                &phi_k[i * feat..(i + 1) * feat],
+                &v[i * dv..(i + 1) * dv],
+                z,
+                s,
+                dv,
+            );
+            fastpath::attention::causal_fold_query(
+                &phi_q[i * feat..(i + 1) * feat],
+                z,
+                s,
+                dv,
+                eps,
+                &mut out[i * dv..(i + 1) * dv],
+            );
+        }
     }
 }
 
@@ -396,6 +445,42 @@ impl AttentionBackend for HostFastBackend {
         map.flat.apply_into(x_scaled, 1, out);
         Ok(())
     }
+
+    fn phi_rows_into(
+        &self,
+        map: &FeatureMap,
+        x_scaled: &[f32],
+        rows: usize,
+        d: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        // Row blocks over the pool instead of `rows` one-row problems:
+        // small micro-batches behave as before (block width 1 at low
+        // rows-per-thread), prompt-sized row sets become a handful of
+        // healthy GEMM shards. Row-for-row bit-identical either way.
+        fastpath::parallel::apply_map_rows_into(&map.flat, x_scaled, rows, d, out);
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_fold_into(
+        &self,
+        phi_q: &[f32],
+        phi_k: &[f32],
+        v: &[f32],
+        n: usize,
+        feat: usize,
+        dv: usize,
+        chunk: usize,
+        eps: f32,
+        s: &mut [f32],
+        z: &mut [f32],
+        out: &mut [f32],
+    ) {
+        fastpath::attention::causal_prefill_fold_into(
+            phi_q, phi_k, v, n, feat, dv, chunk, eps, s, z, out,
+        );
+    }
 }
 
 /// PJRT device execution.
@@ -551,6 +636,36 @@ mod tests {
                         b.name()
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_fold_state_is_bit_compatible_across_tiers_and_chunks() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xF01D);
+        let (n, feat, dv) = (23usize, 7usize, 3usize);
+        let phi_q: Vec<f32> = (0..n * feat).map(|_| rng.normal().abs()).collect();
+        let phi_k: Vec<f32> = (0..n * feat).map(|_| rng.normal().abs()).collect();
+        let v: Vec<f32> = (0..n * dv).map(|_| rng.normal()).collect();
+        // the oracle fold (trait default on the reference tier)
+        let mut s0 = vec![0.0f32; feat * dv];
+        let mut z0 = vec![0.0f32; feat];
+        let mut out0 = vec![0.0f32; n * dv];
+        ReferenceBackend.prefill_fold_into(
+            &phi_q, &phi_k, &v, n, feat, dv, 8, 1e-6, &mut s0, &mut z0, &mut out0,
+        );
+        for chunk in [1usize, 4, 9, 64] {
+            let mut s = vec![0.0f32; feat * dv];
+            let mut z = vec![0.0f32; feat];
+            let mut out = vec![0.0f32; n * dv];
+            HostFastBackend.prefill_fold_into(
+                &phi_q, &phi_k, &v, n, feat, dv, chunk, 1e-6, &mut s, &mut z, &mut out,
+            );
+            assert_eq!(s, s0, "chunk {chunk}: S state drifted from the fold");
+            assert_eq!(z, z0, "chunk {chunk}: z state drifted from the fold");
+            for (i, (a, b)) in out.iter().zip(&out0).enumerate() {
+                assert!((a - b).abs() < 1e-5, "chunk {chunk} elem {i}: {a} vs {b}");
             }
         }
     }

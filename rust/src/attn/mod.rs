@@ -40,6 +40,7 @@
 //! | `fastpath::kernelized_attention_batched("exp", ..)` | session with [`Backend::HostFast`], `forward_exact(..)` |
 //! | hand-rolled `phi_q`/`phi_k` + `linear_attention(..)` | `session.forward(..)` |
 //! | (not expressible before) O(1)-per-token decode | [`AttentionSession::begin_decode`] + [`CausalState::append_token`] |
+//! | (not expressible before) chunked prompt prefill | [`CausalState::prefill_into`] (whole prompt in `MACFORMER_CHUNK`-token GEMM chunks, then stream) |
 //!
 //! Kernel parsing never panics: `Kernel::from_str("bogus")` is a plain
 //! `Err`, so CLI surfaces report bad `--kernel` values cleanly.

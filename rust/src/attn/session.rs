@@ -25,6 +25,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::fastpath::attention::{causal_chunk, causal_fold_key, causal_fold_query};
 use crate::fastpath::{grow, simd, FlatRmfMap};
 use crate::reference::rmf::RmfMap;
 use crate::tensor::Tensor;
@@ -395,6 +396,9 @@ impl AttentionSession {
             q_scaled: vec![0.0f32; self.spec.head_dim],
             k_scaled: vec![0.0f32; self.spec.head_dim],
             phi: vec![0.0f32; feat],
+            prefill_x: Vec::new(),
+            prefill_phi_q: Vec::new(),
+            prefill_phi_k: Vec::new(),
             len: 0,
         })
     }
@@ -409,6 +413,12 @@ impl AttentionSession {
 /// All per-token staging (scaled rows, the phi row) is owned by the
 /// state and reused, so [`CausalState::append_token_into`] is
 /// allocation-free after construction.
+///
+/// Whole prompts are ingested in one call by the chunkwise-parallel
+/// [`CausalState::prefill_into`] — GEMM-dominated blocked compute over
+/// `MACFORMER_CHUNK`-token chunks that leaves the state bit-identical
+/// to having folded the prompt token by token, so streaming
+/// `append_token` continues seamlessly.
 pub struct CausalState<'s> {
     session: &'s AttentionSession,
     dv: usize,
@@ -421,38 +431,22 @@ pub struct CausalState<'s> {
     k_scaled: Vec<f32>,
     /// Reused per-token phi staging row (first phi(k'), then phi(q')).
     phi: Vec<f32>,
+    /// Grow-only prefill staging: score-scaled prompt rows (n x d),
+    /// reused for k then q. Empty until the first prefill.
+    prefill_x: Vec<f32>,
+    /// Grow-only prefill staging: phi(q') prompt rows (n x D).
+    prefill_phi_q: Vec<f32>,
+    /// Grow-only prefill staging: phi(k') prompt rows (n x D).
+    prefill_phi_k: Vec<f32>,
     len: usize,
 }
 
-/// Key half of the `(S, z)` update: fold `phi(k')` and `v` into the
-/// running accumulators. Shared verbatim by the single-stream
-/// [`CausalState::append_token_into`] path and the serve scheduler's
-/// micro-batched [`CausalState::fold_token_into`] path, so the two can
-/// never drift.
-fn fold_key(phi_k: &[f32], v: &[f32], z: &mut [f32], s: &mut [f32], dv: usize) {
-    for (f, &pkf) in phi_k.iter().enumerate() {
-        z[f] += pkf;
-        if pkf == 0.0 {
-            continue;
-        }
-        simd::axpy(pkf, v, &mut s[f * dv..(f + 1) * dv]);
-    }
-}
-
-/// Query half: contract `phi(q')` against the running `(S, z)` state
-/// into one normalized `dv`-length output row. See [`fold_key`].
-fn fold_query(phi_q: &[f32], z: &[f32], s: &[f32], dv: usize, eps: f32, out: &mut [f32]) {
-    let mut den = 0.0f32;
-    out.fill(0.0);
-    for (f, &pqf) in phi_q.iter().enumerate() {
-        den += pqf * z[f];
-        if pqf == 0.0 {
-            continue;
-        }
-        simd::axpy(pqf, &s[f * dv..(f + 1) * dv], out);
-    }
-    simd::div_assign(out, den + eps);
-}
+// The `(S, z)` fold halves live in `crate::fastpath::attention`
+// ([`causal_fold_key`] / [`causal_fold_query`]) and are shared verbatim
+// by the single-stream [`CausalState::append_token_into`] path, the
+// serve scheduler's micro-batched [`CausalState::fold_token_into`]
+// path, and the sequential arm of the chunked prefill kernel — so no
+// causal path can drift from another.
 
 impl CausalState<'_> {
     /// Tokens consumed so far.
@@ -484,6 +478,13 @@ impl CausalState<'_> {
     /// Allocates the output row; use
     /// [`append_token_into`](Self::append_token_into) for the
     /// allocation-free form.
+    ///
+    /// Serve-adjacent code must not call this: anything on a
+    /// steady-state serving path goes through
+    /// [`append_token_into`](Self::append_token_into) /
+    /// [`prefill_into`](Self::prefill_into) so the zero-allocation
+    /// contract (`tests/alloc_free.rs`) holds. This allocating form
+    /// exists for exploratory and test code only.
     pub fn append_token(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
         let mut out = vec![0.0f32; self.dv];
         self.append_token_into(q, k, v, &mut out)?;
@@ -527,9 +528,9 @@ impl CausalState<'_> {
         simd::scaled_copy(q, scale, &mut self.q_scaled);
         simd::scaled_copy(k, scale, &mut self.k_scaled);
         self.session.backend.phi_row_into(map, &self.k_scaled, &mut self.phi)?;
-        fold_key(&self.phi, v, &mut self.z, &mut self.s, self.dv);
+        causal_fold_key(&self.phi, v, &mut self.z, &mut self.s, self.dv);
         self.session.backend.phi_row_into(map, &self.q_scaled, &mut self.phi)?;
-        fold_query(&self.phi, &self.z, &self.s, self.dv, spec.eps, out);
+        causal_fold_query(&self.phi, &self.z, &self.s, self.dv, spec.eps, out);
         self.len += 1;
         Ok(())
     }
@@ -537,7 +538,7 @@ impl CausalState<'_> {
     /// Fold in one token whose phi rows were already computed (the
     /// serve scheduler's path: phi over the whole micro-batch in one
     /// `(g, 1, d)` backend step, then this per-stream fold). Runs the
-    /// exact same [`fold_key`]/[`fold_query`] code as
+    /// exact same [`causal_fold_key`]/[`causal_fold_query`] code as
     /// [`append_token_into`](Self::append_token_into), so batched and
     /// single-stream decode are bit-identical by construction.
     ///
@@ -555,9 +556,167 @@ impl CausalState<'_> {
         debug_assert_eq!(phi_q.len(), self.z.len(), "fold_token_into: phi_q len");
         debug_assert_eq!(v.len(), self.dv, "fold_token_into: v len");
         debug_assert_eq!(out.len(), self.dv, "fold_token_into: out len");
-        fold_key(phi_k, v, &mut self.z, &mut self.s, self.dv);
-        fold_query(phi_q, &self.z, &self.s, self.dv, self.session.spec().eps, out);
+        causal_fold_key(phi_k, v, &mut self.z, &mut self.s, self.dv);
+        causal_fold_query(phi_q, &self.z, &self.s, self.dv, self.session.spec().eps, out);
         self.len += 1;
+    }
+
+    /// Ingest a whole prompt in chunks (the chunkwise-parallel prefill),
+    /// leaving the state positioned for streaming
+    /// [`append_token_into`](Self::append_token_into) of the
+    /// continuation. Returns every prompt position's attention output
+    /// (`n * dv`). Allocates the output; use
+    /// [`prefill_into`](Self::prefill_into) for the steady-state
+    /// allocation-free form.
+    pub fn prefill(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let d = self.session.spec().head_dim;
+        let n = q.len() / d.max(1);
+        let mut out = vec![0.0f32; n * self.dv];
+        self.prefill_into(q, k, v, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`prefill`](Self::prefill) into a caller-owned `n * dv` output
+    /// buffer, with the chunk width from `MACFORMER_CHUNK` (see
+    /// `fastpath::attention::causal_chunk`; width 1 degenerates to the
+    /// sequential token-by-token fold).
+    ///
+    /// `q` and `k` are `n * head_dim` row-major prompt rows, `v` is
+    /// `n * dv`. The prompt is scaled and phi-mapped in bulk (the host
+    /// tier shards feature rows over the persistent worker pool), then
+    /// folded chunkwise into the running `(S, z)` state. After a warmup
+    /// call per prompt shape, repeated prefill makes **zero heap
+    /// allocations** (grow-only staging owned by this state).
+    ///
+    /// The state this leaves behind is **bit-identical** to
+    /// `append_token`-ing the same prompt row by row on the same
+    /// backend and SIMD arm, so a prefixed stream's continuation
+    /// decodes bit-compatibly with a decode-from-scratch stream. The
+    /// prompt *outputs* carry the chunked kernel's `1e-5` equivalence
+    /// contract instead (chunk width 1 reproduces the fold bit for
+    /// bit). On error the state is unchanged.
+    pub fn prefill_into(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.prefill_with_chunk_into(q, k, v, causal_chunk(), out)
+    }
+
+    /// [`prefill_into`](Self::prefill_into) with an explicit chunk
+    /// width (clamped to >= 1) — the chunk-sweep entry point for tests
+    /// and benches.
+    pub fn prefill_with_chunk_into(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        chunk: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let spec = self.session.spec();
+        let d = spec.head_dim;
+        if q.len() != k.len() || q.len() % d != 0 {
+            bail!(
+                "prefill: q/k must hold whole rows of head_dim = {d}, got lengths {} and {}",
+                q.len(),
+                k.len()
+            );
+        }
+        let n = q.len() / d;
+        if v.len() != n * self.dv {
+            bail!(
+                "prefill: v must hold {n} rows of dv = {}, got length {}",
+                self.dv,
+                v.len()
+            );
+        }
+        if out.len() != n * self.dv {
+            bail!(
+                "prefill: out must hold {n} rows of dv = {}, got length {}",
+                self.dv,
+                out.len()
+            );
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        let map = self.session.feature_map().expect("decode state implies a map");
+        let feat = self.z.len();
+        let scale = self.session.input_scale(d);
+        grow(&mut self.prefill_x, n * d);
+        grow(&mut self.prefill_phi_q, n * feat);
+        grow(&mut self.prefill_phi_k, n * feat);
+        // Both fallible phi passes complete before the state is
+        // touched, so an error leaves the state exactly as it was.
+        simd::scaled_copy(k, scale, &mut self.prefill_x[..n * d]);
+        self.session.backend.phi_rows_into(
+            map,
+            &self.prefill_x[..n * d],
+            n,
+            d,
+            &mut self.prefill_phi_k[..n * feat],
+        )?;
+        simd::scaled_copy(q, scale, &mut self.prefill_x[..n * d]);
+        self.session.backend.phi_rows_into(
+            map,
+            &self.prefill_x[..n * d],
+            n,
+            d,
+            &mut self.prefill_phi_q[..n * feat],
+        )?;
+        self.session.backend.prefill_fold_into(
+            &self.prefill_phi_q[..n * feat],
+            &self.prefill_phi_k[..n * feat],
+            v,
+            n,
+            feat,
+            self.dv,
+            chunk.max(1),
+            spec.eps,
+            &mut self.s,
+            &mut self.z,
+            out,
+        );
+        self.len += n;
+        Ok(())
+    }
+
+    /// Chunked prefill over already-computed phi rows (the serve
+    /// scheduler's path: the prompt is scaled and phi-mapped in the
+    /// scheduler's scratch, then folded here). Lengths are the caller's
+    /// contract (`debug_assert`ed): `phi_q`/`phi_k` are `n * D`, `v`
+    /// and `out` are `n * dv`.
+    pub(crate) fn prefill_phi_into(
+        &mut self,
+        phi_q: &[f32],
+        phi_k: &[f32],
+        v: &[f32],
+        n: usize,
+        chunk: usize,
+        out: &mut [f32],
+    ) {
+        let feat = self.z.len();
+        debug_assert_eq!(phi_q.len(), n * feat, "prefill_phi_into: phi_q len");
+        debug_assert_eq!(phi_k.len(), n * feat, "prefill_phi_into: phi_k len");
+        debug_assert_eq!(v.len(), n * self.dv, "prefill_phi_into: v len");
+        debug_assert_eq!(out.len(), n * self.dv, "prefill_phi_into: out len");
+        self.session.backend.prefill_fold_into(
+            phi_q,
+            phi_k,
+            v,
+            n,
+            feat,
+            self.dv,
+            chunk.max(1),
+            self.session.spec().eps,
+            &mut self.s,
+            &mut self.z,
+            out,
+        );
+        self.len += n;
     }
 }
 
@@ -806,6 +965,66 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("out row"), "{err}");
         assert!(state.is_empty(), "a rejected token must not advance the state");
+    }
+
+    #[test]
+    fn prefill_validates_row_shapes_without_touching_state() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(3)
+            .num_features(8)
+            .causal(true)
+            .build()
+            .unwrap();
+        let mut state = sess.begin_decode(2).unwrap();
+        let mut out = [0.0f32; 4];
+        // ragged q, mismatched k, short v, short out — all clean Errs
+        let err = state.prefill_into(&[0.0; 4], &[0.0; 4], &[0.0; 2], &mut out[..2]).unwrap_err();
+        assert!(err.to_string().contains("head_dim"), "{err}");
+        let err = state.prefill_into(&[0.0; 6], &[0.0; 3], &[0.0; 4], &mut out).unwrap_err();
+        assert!(err.to_string().contains("head_dim"), "{err}");
+        let err = state.prefill_into(&[0.0; 6], &[0.0; 6], &[0.0; 3], &mut out).unwrap_err();
+        assert!(err.to_string().contains("v must"), "{err}");
+        let err = state.prefill_into(&[0.0; 6], &[0.0; 6], &[0.0; 4], &mut out[..3]).unwrap_err();
+        assert!(err.to_string().contains("out must"), "{err}");
+        assert!(state.is_empty(), "a rejected prefill must not advance the state");
+        // the empty prompt is a clean no-op
+        state.prefill_into(&[], &[], &[], &mut []).unwrap();
+        assert!(state.is_empty());
+    }
+
+    #[test]
+    fn prefill_chunk_one_is_the_append_chain_bit_for_bit() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(24)
+            .causal(true)
+            .seed(13)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let (d, dv, n) = (4usize, 3usize, 11usize);
+        let mut rng = Rng::new(0xC1);
+        let q = randn(&mut rng, &[n, d], 0.5);
+        let k = randn(&mut rng, &[n, d], 0.5);
+        let v = randn(&mut rng, &[n, dv], 1.0);
+        let mut pre = sess.begin_decode(dv).unwrap();
+        let mut out = vec![0.0f32; n * dv];
+        pre.prefill_with_chunk_into(&q.data, &k.data, &v.data, 1, &mut out).unwrap();
+        assert_eq!(pre.len(), n);
+        let mut seq = sess.begin_decode(dv).unwrap();
+        let mut row = vec![0.0f32; dv];
+        for i in 0..n {
+            seq.append_token_into(
+                &q.data[i * d..(i + 1) * d],
+                &k.data[i * d..(i + 1) * d],
+                &v.data[i * dv..(i + 1) * dv],
+                &mut row,
+            )
+            .unwrap();
+            for (j, (a, b)) in out[i * dv..(i + 1) * dv].iter().zip(&row).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "token {i} elem {j}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

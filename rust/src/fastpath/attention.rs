@@ -13,6 +13,17 @@
 //! parallel driver can shard one batched tensor into per-problem
 //! sub-slices without copies.
 //!
+//! The causal linear path is **chunkwise-parallel**
+//! ([`causal_prefill_fold_into`]): instead of a strictly sequential
+//! token-by-token `(S, z)` fold, the sequence is processed
+//! `MACFORMER_CHUNK` tokens at a time with the inter-chunk
+//! contribution, the intra-chunk causal correction, and the state
+//! advance all expressed as dispatched GEMMs plus the
+//! [`simd::tril_accum`] masked fold. Chunk width 1 reproduces the
+//! original sequential fold exactly; the fold halves themselves
+//! ([`causal_fold_key`] / [`causal_fold_query`]) are shared with the
+//! streaming decode state in `crate::attn`, so no causal path drifts.
+//!
 //! # Scratch discipline
 //!
 //! The logits / score blocks and the linear-attention `(S, z)`
@@ -25,15 +36,80 @@
 //! state bleeds between calls of different shapes.
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::attn::Kernel;
-use crate::tensor::{matmul_nt_into, matmul_tn_into, Tensor};
+use crate::tensor::{matmul_nt_into, matmul_tn_accum_into, matmul_tn_into, Tensor};
 
 use super::{grow, simd};
 
 /// Rows of the score matrix materialized at a time: 32 rows x n=4096
 /// cols of f32 is 512 KiB, comfortably L2-resident.
 const ROW_BLOCK: usize = 32;
+
+/// Default causal chunk width: 64 tokens keeps the intra-chunk score
+/// block (64 x 64 f32 = 16 KiB) L1-resident while amortizing the
+/// per-chunk state transpose to `feat * dv / 64` copies per token.
+pub const DEFAULT_CHUNK: usize = 64;
+
+/// Chunk-width cache: 0 = unresolved (read `MACFORMER_CHUNK` on first
+/// use), otherwise the width in effect (>= 1; 1 = sequential fold).
+static CHUNK: AtomicUsize = AtomicUsize::new(0);
+
+/// Validate a raw `MACFORMER_CHUNK` value: `0` clamps to 1 (the
+/// sequential fold — a zero-token chunk cannot make progress), malformed
+/// values are `None` (the caller warns and uses [`DEFAULT_CHUNK`]).
+/// Pure, so the policy is unit-testable.
+pub fn parse_chunk_override(raw: &str) -> Option<usize> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Some(1),
+        Ok(c) => Some(c),
+        Err(_) => None,
+    }
+}
+
+/// The causal chunk width in effect. Resolved once per process from
+/// `MACFORMER_CHUNK` (default [`DEFAULT_CHUNK`]; `1` pins the
+/// token-by-token sequential fold). Flipping the env var mid-process
+/// has no effect — use [`set_causal_chunk`] for in-process sweeps
+/// (benches, chunk-size tests).
+pub fn causal_chunk() -> usize {
+    match CHUNK.load(Ordering::Relaxed) {
+        0 => {
+            let c = match std::env::var("MACFORMER_CHUNK") {
+                Ok(raw) => match parse_chunk_override(&raw) {
+                    Some(c) => c,
+                    None => {
+                        log::warn!(
+                            "MACFORMER_CHUNK={raw:?} is not a chunk width; \
+                             using the default of {DEFAULT_CHUNK}"
+                        );
+                        DEFAULT_CHUNK
+                    }
+                },
+                Err(_) => DEFAULT_CHUNK,
+            };
+            CHUNK.store(c, Ordering::Relaxed);
+            c
+        }
+        c => c,
+    }
+}
+
+/// Force the causal chunk width for this process (clamped to >= 1).
+/// Returns the width in effect. Global: do not call concurrently with
+/// compute whose chunking must be deterministic.
+pub fn set_causal_chunk(chunk: usize) -> usize {
+    let c = chunk.max(1);
+    CHUNK.store(c, Ordering::Relaxed);
+    c
+}
+
+/// Drop any cached/forced chunk width; the next [`causal_chunk`] call
+/// re-resolves from `MACFORMER_CHUNK`.
+pub fn reset_causal_chunk() {
+    CHUNK.store(0, Ordering::Relaxed);
+}
 
 /// Grow-only per-thread scratch for the attention kernels.
 struct Workspace {
@@ -50,6 +126,175 @@ thread_local! {
         logits: Vec::new(),
         s: Vec::new(),
         z: Vec::new(),
+    });
+}
+
+/// Grow-only per-thread scratch for the chunked causal kernel — a
+/// separate thread-local from [`WORKSPACE`] because the chunked kernel
+/// runs while `linear_attention_into` still holds the main workspace
+/// borrow (its `(S, z)` state lives there).
+struct ChunkWorkspace {
+    /// dv x feat transposed state staged for the inter-chunk GEMM.
+    st: Vec<f32>,
+    /// chunk x chunk intra-chunk score block.
+    scores: Vec<f32>,
+    /// chunk per-row denominators.
+    den: Vec<f32>,
+}
+
+thread_local! {
+    static CHUNK_WS: RefCell<ChunkWorkspace> = RefCell::new(ChunkWorkspace {
+        st: Vec::new(),
+        scores: Vec::new(),
+        den: Vec::new(),
+    });
+}
+
+/// Key half of the streaming causal `(S, z)` update: fold `phi(k')`
+/// and `v` into the running accumulators (`S += phi_k v^T`, `z +=
+/// phi_k`). Shared verbatim by `attn::CausalState` (single-stream
+/// decode and the serve scheduler's micro-batched fold) and the
+/// sequential arm of [`causal_prefill_fold_into`], so no causal path
+/// can drift from another.
+pub fn causal_fold_key(phi_k: &[f32], v: &[f32], z: &mut [f32], s: &mut [f32], dv: usize) {
+    for (f, &pkf) in phi_k.iter().enumerate() {
+        z[f] += pkf;
+        if pkf == 0.0 {
+            continue;
+        }
+        simd::axpy(pkf, v, &mut s[f * dv..(f + 1) * dv]);
+    }
+}
+
+/// Query half: contract `phi(q')` against the running `(S, z)` state
+/// into one normalized `dv`-length output row. See [`causal_fold_key`].
+pub fn causal_fold_query(
+    phi_q: &[f32],
+    z: &[f32],
+    s: &[f32],
+    dv: usize,
+    eps: f32,
+    out: &mut [f32],
+) {
+    let mut den = 0.0f32;
+    out.fill(0.0);
+    for (f, &pqf) in phi_q.iter().enumerate() {
+        den += pqf * z[f];
+        if pqf == 0.0 {
+            continue;
+        }
+        simd::axpy(pqf, &s[f * dv..(f + 1) * dv], out);
+    }
+    simd::div_assign(out, den + eps);
+}
+
+/// Chunkwise-parallel causal linear attention with a caller-owned
+/// running state — the GEMM-dominated prefill kernel.
+///
+/// Folds `n` tokens of `(phi_q, phi_k, v)` rows into the running
+/// `(s, z)` prefix state (`s` is `feat x dv` row-major, `z` is `feat`)
+/// and writes every position's normalized attention output. Sequence
+/// positions are processed `chunk` tokens at a time:
+///
+/// 1. **inter-chunk** — `out_chunk = phi_q_chunk · S_prev` and
+///    `den = phi_q_chunk · z_prev` via the dispatched `matmul_nt`
+///    (the state is staged transposed once per chunk);
+/// 2. **intra-chunk** — the raw `chunk x chunk` score block
+///    `phi_q_chunk · phi_k_chunk^T` via `matmul_nt`, masked and folded
+///    by [`simd::tril_accum`] (position `i` sees keys `<= i` only);
+/// 3. **state advance** — `z += colsum(phi_k_chunk)` and
+///    `S += phi_k_chunk^T · V_chunk` via the accumulating
+///    `matmul_tn_accum`, both applied token-ordered.
+///
+/// `chunk <= 1` runs the token-by-token sequential fold
+/// ([`causal_fold_key`] / [`causal_fold_query`]) — exactly the
+/// streaming decode path. For `chunk > 1` the **state advance is
+/// bit-identical to the sequential fold on the same dispatch arm**
+/// (token-ordered rank-1 updates and column adds, see
+/// `matmul_tn_accum_into` / [`simd::colsum`]), so prefill-then-decode
+/// continues bit-compatibly from decode-from-scratch; the prefill
+/// *outputs* regroup their reductions per chunk and carry the usual
+/// `1e-5` equivalence contract against the sequential fold.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_prefill_fold_into(
+    phi_q: &[f32],
+    phi_k: &[f32],
+    v: &[f32],
+    n: usize,
+    feat: usize,
+    dv: usize,
+    chunk: usize,
+    eps: f32,
+    s: &mut [f32],
+    z: &mut [f32],
+    out: &mut [f32],
+) {
+    assert_eq!(phi_q.len(), n * feat, "causal prefill: phi_q len");
+    assert_eq!(phi_k.len(), n * feat, "causal prefill: phi_k len");
+    assert_eq!(v.len(), n * dv, "causal prefill: v len");
+    assert_eq!(out.len(), n * dv, "causal prefill: out len");
+    assert_eq!(s.len(), feat * dv, "causal prefill: s len");
+    assert_eq!(z.len(), feat, "causal prefill: z len");
+    if n == 0 {
+        return;
+    }
+    if chunk <= 1 {
+        for i in 0..n {
+            causal_fold_key(&phi_k[i * feat..(i + 1) * feat], &v[i * dv..(i + 1) * dv], z, s, dv);
+            causal_fold_query(
+                &phi_q[i * feat..(i + 1) * feat],
+                z,
+                s,
+                dv,
+                eps,
+                &mut out[i * dv..(i + 1) * dv],
+            );
+        }
+        return;
+    }
+    // An oversized width degenerates to "one chunk = the whole
+    // sequence"; clamp before sizing the scratch so MACFORMER_CHUNK
+    // values far beyond n cannot balloon the chunk*chunk score block.
+    let chunk = chunk.min(n);
+    CHUNK_WS.with(|ws| {
+        let ws = &mut *ws.borrow_mut();
+        grow(&mut ws.st, feat * dv);
+        grow(&mut ws.scores, chunk * chunk);
+        grow(&mut ws.den, chunk);
+        let st = &mut ws.st[..feat * dv];
+        let mut t0 = 0;
+        while t0 < n {
+            let c = chunk.min(n - t0);
+            let pq = &phi_q[t0 * feat..(t0 + c) * feat];
+            let pk = &phi_k[t0 * feat..(t0 + c) * feat];
+            let vc = &v[t0 * dv..(t0 + c) * dv];
+            let oc = &mut out[t0 * dv..(t0 + c) * dv];
+            let scores = &mut ws.scores[..c * c];
+            let den = &mut ws.den[..c];
+            // Stage S_prev transposed (dv x feat) so the inter-chunk
+            // contraction is one matmul_nt; a feat*dv copy per chunk,
+            // amortized to feat*dv/chunk per token.
+            for f in 0..feat {
+                for (x, &sv) in s[f * dv..(f + 1) * dv].iter().enumerate() {
+                    st[x * feat + f] = sv;
+                }
+            }
+            // inter-chunk: every element of oc / den is overwritten
+            matmul_nt_into(pq, c, feat, st, dv, oc);
+            matmul_nt_into(pq, c, feat, z, 1, den);
+            // intra-chunk: raw score block, then the masked fold (the
+            // strictly-upper triangle is computed but never read)
+            matmul_nt_into(pq, c, feat, pk, c, scores);
+            simd::tril_accum(scores, c, vc, dv, oc, den);
+            for (ii, &d) in den.iter().enumerate() {
+                simd::div_assign(&mut oc[ii * dv..(ii + 1) * dv], d + eps);
+            }
+            // state advance, token-ordered — bit-compatible with the
+            // sequential fold on the same dispatch arm
+            simd::colsum(pk, c, z);
+            matmul_tn_accum_into(pk, c, feat, vc, dv, s);
+            t0 += c;
+        }
     });
 }
 
@@ -264,40 +509,32 @@ pub fn linear_attention_into(
         let s = &mut ws.s[..feat * dv];
         let z = &mut ws.z[..feat];
         if causal {
+            // Chunkwise-parallel prefill over a zeroed local state; the
+            // chunk width comes from MACFORMER_CHUNK (1 = the original
+            // token-by-token fold, reproduced exactly).
             s.fill(0.0);
             z.fill(0.0);
-            for i in 0..n {
-                let pk = &phi_k[i * feat..(i + 1) * feat];
-                let vi = &v[i * dv..(i + 1) * dv];
-                for (f, &pkf) in pk.iter().enumerate() {
-                    z[f] += pkf;
-                    if pkf == 0.0 {
-                        continue;
-                    }
-                    simd::axpy(pkf, vi, &mut s[f * dv..(f + 1) * dv]);
-                }
-                let pq = &phi_q[i * feat..(i + 1) * feat];
-                let mut den = 0.0f32;
-                let orow = &mut out[i * dv..(i + 1) * dv];
-                orow.fill(0.0);
-                for (f, &pqf) in pq.iter().enumerate() {
-                    den += pqf * z[f];
-                    if pqf == 0.0 {
-                        continue;
-                    }
-                    simd::axpy(pqf, &s[f * dv..(f + 1) * dv], orow);
-                }
-                simd::div_assign(orow, den + eps);
-            }
+            causal_prefill_fold_into(
+                phi_q,
+                phi_k,
+                v,
+                n,
+                feat,
+                dv,
+                causal_chunk(),
+                eps,
+                s,
+                z,
+                out,
+            );
         } else {
             // S = phi_k^T v (feat x dv) via the dispatched rank-1-update
-            // GEMM and z = colsum(phi_k) — same accumulation order over
-            // keys as the fused reference loop.
+            // GEMM and z = colsum(phi_k) — one column-sum primitive,
+            // same accumulation order over keys as the fused reference
+            // loop (and as the m-sequential-axpy loop it replaced).
             matmul_tn_into(phi_k, m, feat, v, dv, s);
             z.fill(0.0);
-            for j in 0..m {
-                simd::axpy(1.0, &phi_k[j * feat..(j + 1) * feat], z);
-            }
+            simd::colsum(phi_k, m, z);
             for i in 0..n {
                 let pq = &phi_q[i * feat..(i + 1) * feat];
                 let den = simd::dot(pq, z);
@@ -370,6 +607,125 @@ mod tests {
             let a = oracle::linear_attention(&phi_q, &phi_k, &v, causal, 1e-6);
             let b = linear_attention(&phi_q, &phi_k, &v, causal, 1e-6);
             assert!(a.max_abs_diff(&b) < 1e-5, "causal={causal}: {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn chunk_override_parsing_policy() {
+        // malformed values are rejected (causal_chunk warns + defaults)
+        assert_eq!(parse_chunk_override("abc"), None);
+        assert_eq!(parse_chunk_override(""), None);
+        assert_eq!(parse_chunk_override("-3"), None);
+        assert_eq!(parse_chunk_override("2.5"), None);
+        // zero cannot chunk: clamped to the sequential fold
+        assert_eq!(parse_chunk_override("0"), Some(1));
+        // honest values pass through, whitespace tolerated
+        assert_eq!(parse_chunk_override("1"), Some(1));
+        assert_eq!(parse_chunk_override(" 64 "), Some(64));
+    }
+
+    /// Chunked causal prefill vs the sequential fold: outputs within
+    /// 1e-5 for every chunk width (including widths that don't divide
+    /// n and widths larger than n), final `(S, z)` state bit-identical,
+    /// and `chunk = 1` reproducing the fold's outputs bit for bit.
+    #[test]
+    fn chunked_causal_prefill_matches_sequential_fold() {
+        let mut rng = Rng::new(25);
+        let (n, feat, dv) = (70usize, 12usize, 5usize);
+        let phi_q = randn(&mut rng, &[n, feat], 0.8).map(f32::abs);
+        let phi_k = randn(&mut rng, &[n, feat], 0.8).map(f32::abs);
+        let v = randn(&mut rng, &[n, dv], 1.0);
+        let (pq, pk, vd) = (&phi_q.data[..], &phi_k.data[..], &v.data[..]);
+        let mut s_seq = vec![0.0f32; feat * dv];
+        let mut z_seq = vec![0.0f32; feat];
+        let mut out_seq = vec![0.0f32; n * dv];
+        causal_prefill_fold_into(
+            pq, pk, vd, n, feat, dv, 1, 1e-6, &mut s_seq, &mut z_seq, &mut out_seq,
+        );
+        let oracle = crate::reference::attention::linear_attention(&phi_q, &phi_k, &v, true, 1e-6);
+        for chunk in [1usize, 2, 3, 7, 16, 64, 70, 200] {
+            let mut s = vec![0.0f32; feat * dv];
+            let mut z = vec![0.0f32; feat];
+            let mut out = vec![0.0f32; n * dv];
+            causal_prefill_fold_into(
+                pq, pk, vd, n, feat, dv, chunk, 1e-6, &mut s, &mut z, &mut out,
+            );
+            // the running state is bit-compatible with the fold's
+            for (i, (a, b)) in s.iter().zip(&s_seq).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk {chunk}: S elem {i}: {a} vs {b}");
+            }
+            for (i, (a, b)) in z.iter().zip(&z_seq).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk {chunk}: z elem {i}: {a} vs {b}");
+            }
+            for (i, (a, b)) in out.iter().zip(&out_seq).enumerate() {
+                if chunk <= 1 {
+                    assert_eq!(a.to_bits(), b.to_bits(), "chunk 1 must BE the fold: elem {i}");
+                } else {
+                    assert!((a - b).abs() < 1e-5, "chunk {chunk} elem {i}: {a} vs {b}");
+                }
+                assert!(
+                    (a - oracle.data[i]).abs() < 1e-5,
+                    "chunk {chunk} elem {i} vs oracle: {a} vs {}",
+                    oracle.data[i]
+                );
+            }
+        }
+    }
+
+    /// A prefill split across two calls (carrying the state) equals one
+    /// whole-stream prefill — the chunked state hand-off is seamless at
+    /// arbitrary boundaries.
+    #[test]
+    fn chunked_prefill_state_carries_across_calls() {
+        let mut rng = Rng::new(26);
+        let (n, feat, dv, cut) = (41usize, 9usize, 4usize, 17usize);
+        let phi_q = randn(&mut rng, &[n, feat], 0.8).map(f32::abs);
+        let phi_k = randn(&mut rng, &[n, feat], 0.8).map(f32::abs);
+        let v = randn(&mut rng, &[n, dv], 1.0);
+        let (pq, pk, vd) = (&phi_q.data[..], &phi_k.data[..], &v.data[..]);
+        for chunk in [1usize, 5, 16] {
+            let mut s1 = vec![0.0f32; feat * dv];
+            let mut z1 = vec![0.0f32; feat];
+            let mut whole = vec![0.0f32; n * dv];
+            causal_prefill_fold_into(
+                pq, pk, vd, n, feat, dv, chunk, 1e-6, &mut s1, &mut z1, &mut whole,
+            );
+            let mut s2 = vec![0.0f32; feat * dv];
+            let mut z2 = vec![0.0f32; feat];
+            let mut split = vec![0.0f32; n * dv];
+            causal_prefill_fold_into(
+                &phi_q.data[..cut * feat],
+                &phi_k.data[..cut * feat],
+                &v.data[..cut * dv],
+                cut,
+                feat,
+                dv,
+                chunk,
+                1e-6,
+                &mut s2,
+                &mut z2,
+                &mut split[..cut * dv],
+            );
+            causal_prefill_fold_into(
+                &phi_q.data[cut * feat..],
+                &phi_k.data[cut * feat..],
+                &v.data[cut * dv..],
+                n - cut,
+                feat,
+                dv,
+                chunk,
+                1e-6,
+                &mut s2,
+                &mut z2,
+                &mut split[cut * dv..],
+            );
+            assert_eq!(s1, s2, "chunk {chunk}: split S drifted");
+            assert_eq!(z1, z2, "chunk {chunk}: split z drifted");
+            // outputs may regroup at the cut (chunk boundaries shift):
+            // within the chunked equivalence contract
+            for (i, (a, b)) in split.iter().zip(&whole).enumerate() {
+                assert!((a - b).abs() < 1e-5, "chunk {chunk} elem {i}: {a} vs {b}");
+            }
         }
     }
 

@@ -536,6 +536,37 @@ pub fn apply_map_batched_into(
     });
 }
 
+/// Row-blocked phi over `rows` independent pre-scaled rows of ONE
+/// problem: contiguous row blocks are sharded over the pool (block
+/// width scaled to the worker count, capped at 64 rows so every shard
+/// is a healthy GEMM instead of `rows` tiny one-row problems — the
+/// chunked-prefill feature step). Row `i` of the output is
+/// bit-identical to `map.apply_into` of that row alone (`FlatRmfMap`
+/// rows are independent), so callers may mix this freely with per-row
+/// phi — the prefill/decode bit-compat contract relies on that.
+pub fn apply_map_rows_into(map: &FlatRmfMap, x: &[f32], rows: usize, d: usize, out: &mut [f32]) {
+    assert_eq!(d, map.dim_in, "input dim vs map dim");
+    assert_eq!(x.len(), rows * d, "apply_map rows: x len");
+    let feat = map.num_features();
+    assert_eq!(out.len(), rows * feat, "apply_map rows: out len");
+    if rows == 0 {
+        return;
+    }
+    let block = rows.div_ceil(num_threads()).clamp(1, 64);
+    let blocks = rows.div_ceil(block);
+    let base = SendPtr(out.as_mut_ptr());
+    for_each_index(blocks, |b| {
+        let r0 = b * block;
+        let rb = block.min(rows - r0);
+        // SAFETY: blocks of distinct indices cover disjoint out rows,
+        // each index is claimed exactly once, and the exclusive borrow
+        // of `out` is held across the whole for_each_index call.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * feat), rb * feat) };
+        map.apply_into(&x[r0 * d..(r0 + rb) * d], rb, chunk);
+    });
+}
+
 /// phi over a batched `(g, n, d)` tensor -> `(g, n, D)`, one problem per
 /// shard (each problem is itself a short GEMM sequence).
 pub fn apply_map_batched(map: &FlatRmfMap, x: &Tensor) -> Tensor {
@@ -687,6 +718,29 @@ mod tests {
         });
         for (i, &x) in out2.iter().enumerate() {
             assert_eq!(x, (i / stride) as f32);
+        }
+    }
+
+    #[test]
+    fn row_blocked_phi_is_row_for_row_sequential() {
+        use crate::reference::rmf::RmfMap;
+        let mut rng = Rng::new(33);
+        let map = RmfMap::sample(&mut rng, Kernel::Exp, 20, 5, 2.0, 8);
+        let flat = FlatRmfMap::from(&map);
+        let feat = flat.num_features();
+        // rows crossing the 64-row block cap, plus tiny and empty sets
+        for rows in [0usize, 1, 3, 64, 65, 150] {
+            let x: Vec<f32> = (0..rows * 5).map(|_| rng.normal() * 0.5).collect();
+            let mut blocked = vec![0.0f32; rows * feat];
+            apply_map_rows_into(&flat, &x, rows, 5, &mut blocked);
+            for r in 0..rows {
+                let mut one = vec![0.0f32; feat];
+                flat.apply_into(&x[r * 5..(r + 1) * 5], 1, &mut one);
+                let row = &blocked[r * feat..(r + 1) * feat];
+                for (j, (a, b)) in row.iter().zip(&one).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "rows={rows} row {r} feature {j}");
+                }
+            }
         }
     }
 

@@ -188,6 +188,84 @@ pub fn scaled_copy_scalar(src: &[f32], scale: f32, dst: &mut [f32]) {
     }
 }
 
+/// `out[f] += sum_p x[p * cols + f]` over `rows` row-major rows, where
+/// `cols = out.len()` — the column-sum accumulate behind the linear-
+/// attention normalizer `z = colsum(phi_k)`. Rows are folded in order
+/// on both arms and each per-element add rounds identically, so this
+/// primitive is **bit-for-bit** across dispatch (the chunked causal
+/// prefill relies on that for its `z` state advance).
+pub fn colsum(x: &[f32], rows: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * out.len(), "colsum: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        unsafe { x86::colsum(x, rows, out) };
+        return;
+    }
+    colsum_scalar(x, rows, out);
+}
+
+/// Scalar arm of [`colsum`] — the exact accumulation the pre-SIMD
+/// `m`-sequential-`axpy` loop performed (`1.0 * x` is exact).
+pub fn colsum_scalar(x: &[f32], rows: usize, out: &mut [f32]) {
+    let cols = out.len();
+    for p in 0..rows {
+        let row = &x[p * cols..(p + 1) * cols];
+        for (o, xv) in out.iter_mut().zip(row) {
+            *o += xv;
+        }
+    }
+}
+
+/// Lower-triangular masked accumulate — the intra-chunk causal
+/// correction of the chunked prefill. `scores` is a `c x c` block of
+/// raw phi-dot weights; for each row `ii` the weights `jj <= ii` are
+/// folded into `den[ii]` and `out[ii * dv ..] += w * v[jj * dv ..]`.
+/// The strictly-upper triangle of `scores` is never read (future
+/// positions stay masked). `den` accumulates scalar adds in identical
+/// order on both arms; the row updates are the dispatched [`axpy`]
+/// loop, so the vector arm carries the usual `1e-5` contract.
+pub fn tril_accum(
+    scores: &[f32],
+    c: usize,
+    v: &[f32],
+    dv: usize,
+    out: &mut [f32],
+    den: &mut [f32],
+) {
+    debug_assert_eq!(scores.len(), c * c, "tril_accum: scores length");
+    debug_assert_eq!(v.len(), c * dv, "tril_accum: v length");
+    debug_assert_eq!(out.len(), c * dv, "tril_accum: out length");
+    debug_assert_eq!(den.len(), c, "tril_accum: den length");
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        unsafe { x86::tril_accum(scores, c, v, dv, out, den) };
+        return;
+    }
+    tril_accum_scalar(scores, c, v, dv, out, den);
+}
+
+/// Scalar arm of [`tril_accum`] — the masked weight-fold written as
+/// plain loops.
+pub fn tril_accum_scalar(
+    scores: &[f32],
+    c: usize,
+    v: &[f32],
+    dv: usize,
+    out: &mut [f32],
+    den: &mut [f32],
+) {
+    for ii in 0..c {
+        let orow = &mut out[ii * dv..(ii + 1) * dv];
+        for jj in 0..=ii {
+            let w = scores[ii * c + jj];
+            den[ii] += w;
+            axpy_scalar(w, &v[jj * dv..(jj + 1) * dv], orow);
+        }
+    }
+}
+
 /// One row's degree-bucket pass of the RMF feature map: for each of the
 /// bucket's `s = scales.len()` features (shared degree `g >= 1`),
 /// multiply its `g` contiguous dot products out of `dots` (laid out
@@ -319,6 +397,93 @@ mod tests {
             // SAFETY: supported() checked above.
             unsafe { x86::scaled_copy(&x, 0.3, &mut cv) };
             assert_eq!(cs, cv, "scaled_copy n={n}");
+        }
+    }
+
+    #[test]
+    fn colsum_scalar_matches_sequential_axpy_ones() {
+        // satellite contract: the dedicated colsum reproduces the old
+        // m-sequential-axpy(1.0, ..) accumulation bit for bit
+        let mut rng = Rng::new(44);
+        for (rows, cols) in [(1usize, 1usize), (3, 7), (5, 8), (4, 19)] {
+            let x = fill(&mut rng, rows * cols);
+            let mut expect = fill(&mut rng, cols);
+            let mut got = expect.clone();
+            for p in 0..rows {
+                axpy_scalar(1.0, &x[p * cols..(p + 1) * cols], &mut expect);
+            }
+            colsum_scalar(&x, rows, &mut got);
+            for (i, (a, b)) in got.iter().zip(&expect).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "({rows},{cols}) col {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn tril_accum_scalar_matches_explicit_masked_sums() {
+        let mut rng = Rng::new(45);
+        for (c, dv) in [(1usize, 1usize), (3, 4), (5, 9), (8, 3)] {
+            let scores = fill(&mut rng, c * c);
+            let v = fill(&mut rng, c * dv);
+            let mut out = fill(&mut rng, c * dv);
+            let mut den = fill(&mut rng, c);
+            let (out0, den0) = (out.clone(), den.clone());
+            tril_accum_scalar(&scores, c, &v, dv, &mut out, &mut den);
+            for ii in 0..c {
+                let mut dref = den0[ii];
+                let mut oref = out0[ii * dv..(ii + 1) * dv].to_vec();
+                for jj in 0..=ii {
+                    let w = scores[ii * c + jj];
+                    dref += w;
+                    for (o, x) in oref.iter_mut().zip(&v[jj * dv..(jj + 1) * dv]) {
+                        *o += w * x;
+                    }
+                }
+                assert_eq!(den[ii].to_bits(), dref.to_bits(), "({c},{dv}) den {ii}");
+                for (x, y) in out[ii * dv..(ii + 1) * dv].iter().zip(&oref) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "({c},{dv}) row {ii}");
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn vector_colsum_and_tril_match_scalar() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(46);
+        for (rows, cols) in [(1usize, 1usize), (3, 8), (5, 7), (6, 23)] {
+            let x = fill(&mut rng, rows * cols);
+            let base = fill(&mut rng, cols);
+            let mut s = base.clone();
+            colsum_scalar(&x, rows, &mut s);
+            let mut vctr = base.clone();
+            // SAFETY: supported() checked above.
+            unsafe { x86::colsum(&x, rows, &mut vctr) };
+            for (i, (a, b)) in s.iter().zip(&vctr).enumerate() {
+                // lane adds round like scalar adds: bit-for-bit
+                assert_eq!(a.to_bits(), b.to_bits(), "colsum ({rows},{cols}) col {i}");
+            }
+        }
+        for (c, dv) in [(1usize, 1usize), (4, 8), (5, 11), (9, 16)] {
+            let scores = fill(&mut rng, c * c);
+            let v = fill(&mut rng, c * dv);
+            let out0 = fill(&mut rng, c * dv);
+            let den0 = fill(&mut rng, c);
+            let (mut out_s, mut den_s) = (out0.clone(), den0.clone());
+            tril_accum_scalar(&scores, c, &v, dv, &mut out_s, &mut den_s);
+            let (mut out_v, mut den_v) = (out0.clone(), den0.clone());
+            // SAFETY: supported() checked above.
+            unsafe { x86::tril_accum(&scores, c, &v, dv, &mut out_v, &mut den_v) };
+            for (i, (a, b)) in den_s.iter().zip(&den_v).enumerate() {
+                // den accumulates in identical scalar order on both arms
+                assert_eq!(a.to_bits(), b.to_bits(), "tril den ({c},{dv}) row {i}");
+            }
+            for (i, (a, b)) in out_s.iter().zip(&out_v).enumerate() {
+                assert!((a - b).abs() < 1e-5, "tril out ({c},{dv}) elem {i}: {a} vs {b}");
+            }
         }
     }
 

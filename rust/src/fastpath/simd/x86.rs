@@ -121,10 +121,20 @@ pub unsafe fn matmul_nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out:
 /// contiguous); each update row is vectorized over n with FMA.
 #[target_feature(enable = "avx2,fma")]
 pub unsafe fn matmul_tn(a: &[f32], r: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), m * n, "simd matmul_tn: out len");
+    out.fill(0.0);
+    matmul_tn_accum(a, r, m, b, n, out);
+}
+
+/// Accumulating form of [`matmul_tn`] (`out += A^T · B`, no zero-fill).
+/// Each rank-1 update row is exactly the [`axpy`] loop, applied in `r`
+/// order — so accumulating a chunk of rows into a running state is
+/// bit-identical to folding them one `axpy` at a time on this arm.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn matmul_tn_accum(a: &[f32], r: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), r * m, "simd matmul_tn: lhs len");
     assert_eq!(b.len(), r * n, "simd matmul_tn: rhs len");
     assert_eq!(out.len(), m * n, "simd matmul_tn: out len");
-    out.fill(0.0);
     let nv = n - n % 8;
     for p in 0..r {
         let arow = &a[p * m..(p + 1) * m];
@@ -256,6 +266,77 @@ pub unsafe fn scaled_copy(src: &[f32], scale: f32, dst: &mut [f32]) {
     while c < n {
         *dp.add(c) = *sp.add(c) * scale;
         c += 1;
+    }
+}
+
+/// `out[f] += sum_p x[p * cols + f]` over `rows` row-major rows
+/// (`cols = out.len()`) — the column-sum accumulate behind the linear-
+/// attention `z` normalizer. Rows are folded in order and every lane
+/// add rounds exactly like the scalar add, so this primitive is
+/// **bit-for-bit** across dispatch arms (like `scaled_copy`).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn colsum(x: &[f32], rows: usize, out: &mut [f32]) {
+    let cols = out.len();
+    assert_eq!(x.len(), rows * cols, "simd colsum: input len");
+    let cv = cols - cols % 8;
+    let op = out.as_mut_ptr();
+    for p in 0..rows {
+        let row = x.as_ptr().add(p * cols);
+        let mut c = 0;
+        while c < cv {
+            _mm256_storeu_ps(
+                op.add(c),
+                _mm256_add_ps(_mm256_loadu_ps(op.add(c)), _mm256_loadu_ps(row.add(c))),
+            );
+            c += 8;
+        }
+        while c < cols {
+            *op.add(c) += *row.add(c);
+            c += 1;
+        }
+    }
+}
+
+/// Lower-triangular masked accumulate (see [`super::tril_accum`]): for
+/// each row `ii`, fold the weights `scores[ii * c + jj]` for `jj <= ii`
+/// into `den[ii]` (scalar adds, same order as the scalar twin) and
+/// `out[ii] += w * v[jj]` (each row update is the [`axpy`] loop,
+/// vectorized over `dv` with FMA).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn tril_accum(
+    scores: &[f32],
+    c: usize,
+    v: &[f32],
+    dv: usize,
+    out: &mut [f32],
+    den: &mut [f32],
+) {
+    assert_eq!(scores.len(), c * c, "simd tril_accum: scores len");
+    assert_eq!(v.len(), c * dv, "simd tril_accum: v len");
+    assert_eq!(out.len(), c * dv, "simd tril_accum: out len");
+    assert_eq!(den.len(), c, "simd tril_accum: den len");
+    let nv = dv - dv % 8;
+    for ii in 0..c {
+        let orow = out.as_mut_ptr().add(ii * dv);
+        for jj in 0..=ii {
+            let w = scores[ii * c + jj];
+            den[ii] += w;
+            let vrow = v.as_ptr().add(jj * dv);
+            let wv = _mm256_set1_ps(w);
+            let mut x = 0;
+            while x < nv {
+                let cur = _mm256_loadu_ps(orow.add(x));
+                _mm256_storeu_ps(
+                    orow.add(x),
+                    _mm256_fmadd_ps(wv, _mm256_loadu_ps(vrow.add(x)), cur),
+                );
+                x += 8;
+            }
+            while x < dv {
+                *orow.add(x) += w * *vrow.add(x);
+                x += 1;
+            }
+        }
     }
 }
 

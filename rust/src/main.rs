@@ -8,8 +8,10 @@
 //!                                --backend auto|reference|host|device)
 //!   fig3                         ppSBN translation ablation
 //!   serve                        closed-loop multi-stream decode load run
-//!                                (--streams, --tokens, --arrival closed|staggered|bursty,
-//!                                --kernel, --backend, --verify)
+//!                                (--streams, --tokens, --prompt n for chunked
+//!                                prompt prefill at admission, --arrival
+//!                                closed|staggered|bursty, --kernel, --backend,
+//!                                --verify)
 //!   datagen                      dump synthetic dataset samples
 //!
 //! Every run prints a human summary to stdout and (with --out-json) a
@@ -231,6 +233,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = LoadConfig {
         streams: args.usize_flag("streams", 64).map_err(|e| anyhow!(e))?,
         tokens: args.usize_flag("tokens", 128).map_err(|e| anyhow!(e))?,
+        prompt: args.usize_flag("prompt", 0).map_err(|e| anyhow!(e))?,
         head_dim: args.usize_flag("head-dim", 32).map_err(|e| anyhow!(e))?,
         dv: args.usize_flag("dv", 32).map_err(|e| anyhow!(e))?,
         num_features: args.usize_flag("features", 64).map_err(|e| anyhow!(e))?,

@@ -90,6 +90,15 @@ pub struct LoadConfig {
     pub streams: usize,
     /// Sequence length each stream decodes (tokens per stream).
     pub tokens: usize,
+    /// Prompt tokens chunk-prefilled at admission, before the decode
+    /// loop (0 = no prompt). Prefill goes through
+    /// [`Scheduler::prefill`] — chunkwise GEMM compute, not `n`
+    /// single-token ticks — and with [`LoadConfig::verify`] the decode
+    /// outputs after the prompt must still be **bit-identical** to a
+    /// single-stream `append_token` replay of prompt + decode (the
+    /// prefilled state is bit-compatible by construction); the prompt's
+    /// own last output carries the chunked 1e-5 contract.
+    pub prompt: usize,
     pub head_dim: usize,
     pub dv: usize,
     pub num_features: usize,
@@ -110,6 +119,7 @@ impl Default for LoadConfig {
         LoadConfig {
             streams: 64,
             tokens: 64,
+            prompt: 0,
             head_dim: 32,
             dv: 32,
             num_features: 64,
@@ -129,6 +139,8 @@ impl Default for LoadConfig {
 pub struct LoadReport {
     pub streams: usize,
     pub tokens_per_stream: usize,
+    /// Prompt tokens chunk-prefilled per stream at admission.
+    pub prompt_tokens: usize,
     pub arrival: Arrival,
     pub kernel: Kernel,
     /// Resolved backend tier name (`Auto` resolves at session build).
@@ -151,6 +163,10 @@ pub struct LoadReport {
     /// Largest |serve - single-stream| over all outputs (0.0 when
     /// bit-identical).
     pub max_abs_diff: f64,
+    /// Largest magnitude-scaled |prefill - single-stream| over the
+    /// prompt's last output row — `|a - b| / max(1, |b|)`, the chunked
+    /// kernel's 1e-5 contract (0.0 with no prompt).
+    pub prefill_max_scaled_diff: f64,
     /// Engine telemetry, snapshotted at the end of the drive loop
     /// (before teardown and the verification replay).
     pub telemetry: Telemetry,
@@ -166,13 +182,14 @@ impl LoadReport {
             None => "skipped".to_string(),
         };
         format!(
-            "serve: {} streams x {} tokens ({} arrival, kernel {}, backend {}, d={} dv={} D={})\n\
+            "serve: {} streams x {} tokens (+{} prompt, {} arrival, kernel {}, backend {}, d={} dv={} D={})\n\
              {:>10.0} tokens/sec  ({} tokens in {:.3}s, {} stream errors)\n\
              latency   p50 {:.6}s  p90 {:.6}s  p99 {:.6}s  max {:.6}s\n\
              occupancy mean {:.2} max {}  |  queue mean {:.2} max {}  |  ticks {} ({} seq, {} idle)\n\
              verify    {}",
             self.streams,
             self.tokens_per_stream,
+            self.prompt_tokens,
             self.arrival,
             self.kernel,
             self.backend,
@@ -202,6 +219,7 @@ impl LoadReport {
         Value::obj(vec![
             ("streams", Value::num(self.streams as f64)),
             ("tokens_per_stream", Value::num(self.tokens_per_stream as f64)),
+            ("prompt_tokens", Value::num(self.prompt_tokens as f64)),
             ("arrival", Value::str(self.arrival.name())),
             ("kernel", Value::str(self.kernel.name())),
             ("backend", Value::str(self.backend.clone())),
@@ -221,6 +239,7 @@ impl LoadReport {
                 },
             ),
             ("max_abs_diff", Value::num(self.max_abs_diff)),
+            ("prefill_max_scaled_diff", Value::num(self.prefill_max_scaled_diff)),
             ("telemetry", self.telemetry.to_json()),
         ])
     }
@@ -250,6 +269,25 @@ fn generate_tokens(cfg: &LoadConfig) -> Vec<Vec<f32>> {
                 }
             }
             data
+        })
+        .collect()
+}
+
+/// Pre-generate every stream's prompt as contiguous `(q, k, v)` row
+/// sets (the layout [`Scheduler::prefill`] takes), deterministic per
+/// stream so verification replays the identical prompt.
+fn generate_prompts(cfg: &LoadConfig) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    (0..cfg.streams)
+        .map(|i| {
+            let mut rng =
+                Rng::new(cfg.seed ^ (i as u64 + 1).wrapping_mul(0xD1B54A32D192ED03));
+            let fill = |rng: &mut Rng, len: usize, scale: f32| -> Vec<f32> {
+                (0..len).map(|_| rng.normal() * scale).collect()
+            };
+            let q = fill(&mut rng, cfg.prompt * cfg.head_dim, 0.5);
+            let k = fill(&mut rng, cfg.prompt * cfg.head_dim, 0.5);
+            let v = fill(&mut rng, cfg.prompt * cfg.dv, 1.0);
+            (q, k, v)
         })
         .collect()
 }
@@ -288,7 +326,10 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
     let stride = token_stride(cfg);
     let (d, dv) = (cfg.head_dim, cfg.dv);
     let tokens = generate_tokens(cfg);
+    let prompts = generate_prompts(cfg);
     let mut outs: Vec<Vec<f32>> = (0..cfg.streams).map(|_| vec![0.0; cfg.tokens * dv]).collect();
+    // last prompt position's output per stream (chunked prefill)
+    let mut prompt_last: Vec<Vec<f32>> = (0..cfg.streams).map(|_| vec![0.0; dv]).collect();
     let mut ids: Vec<Option<StreamId>> = vec![None; cfg.streams];
     let mut produced = vec![0usize; cfg.streams];
     let mut in_flight = vec![false; cfg.streams];
@@ -318,7 +359,26 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                 continue;
             }
             match pool.admit() {
-                Ok(id) => ids[i] = Some(id),
+                Ok(id) => {
+                    ids[i] = Some(id);
+                    if cfg.prompt > 0 {
+                        // chunked prompt admission: prefill, then take
+                        // the prompt's last output so the closed loop
+                        // can start submitting decode tokens
+                        let (pq, pk, pv) = &prompts[i];
+                        let ingested = scheduler
+                            .prefill(&mut pool, id, pq, pk, pv)
+                            .and_then(|n| {
+                                pool.take_output(id, &mut prompt_last[i]).map(|()| n)
+                            });
+                        if let Err(e) = ingested {
+                            log::warn!("loadgen: stream {i} prefill failed: {e}");
+                            stream_errors += 1;
+                            failed[i] = true;
+                            done += cfg.tokens - produced[i];
+                        }
+                    }
+                }
                 Err(e) => {
                     log::warn!("loadgen: stream {i} admit failed: {e}");
                     stream_errors += 1;
@@ -388,16 +448,44 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
     }
 
     let tokens_total: u64 = produced.iter().map(|&p| p as u64).sum();
-    let (verified, max_abs_diff) = if cfg.verify {
+    let (verified, max_abs_diff, prefill_max_scaled_diff) = if cfg.verify {
         let mut ok = stream_errors == 0;
         let mut max_diff = 0.0f64;
+        let mut prefill_diff = 0.0f64;
         let mut row = vec![0.0f32; dv];
         for i in 0..cfg.streams {
             if failed[i] {
                 ok = false;
                 continue;
             }
+            // Replay the whole stream — prompt, then decode — through
+            // the plain single-stream append path. The prompt's last
+            // output carries the chunked kernel's 1e-5 contract; every
+            // decode output after it must be bit-identical (the
+            // prefilled state is bit-compatible by construction).
             let mut state = session.begin_decode(dv)?;
+            let (pq, pk, pv) = &prompts[i];
+            for t in 0..cfg.prompt {
+                state.append_token_into(
+                    &pq[t * d..(t + 1) * d],
+                    &pk[t * d..(t + 1) * d],
+                    &pv[t * dv..(t + 1) * dv],
+                    &mut row,
+                )?;
+            }
+            if cfg.prompt > 0 {
+                for (a, b) in prompt_last[i].iter().zip(&row) {
+                    // magnitude-scaled like the chunked-kernel contract;
+                    // the reported metric and the pass/fail gate use the
+                    // same scaled quantity so a verified run never shows
+                    // a diff above the documented 1e-5
+                    let diff = ((a - b).abs() / b.abs().max(1.0)) as f64;
+                    prefill_diff = prefill_diff.max(diff);
+                    if !diff.is_finite() || diff > 1e-5 {
+                        ok = false;
+                    }
+                }
+            }
             for t in 0..produced[i] {
                 let tok = &tokens[i][t * stride..(t + 1) * stride];
                 state.append_token_into(&tok[..d], &tok[d..2 * d], &tok[2 * d..], &mut row)?;
@@ -409,14 +497,15 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                 }
             }
         }
-        (Some(ok), max_diff)
+        (Some(ok), max_diff, prefill_diff)
     } else {
-        (None, 0.0)
+        (None, 0.0, 0.0)
     };
 
     Ok(LoadReport {
         streams: cfg.streams,
         tokens_per_stream: cfg.tokens,
+        prompt_tokens: cfg.prompt,
         arrival: cfg.arrival,
         kernel: cfg.kernel,
         backend: session.backend_name().to_string(),
@@ -430,6 +519,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         stream_errors,
         verified,
         max_abs_diff,
+        prefill_max_scaled_diff,
         telemetry,
     })
 }
@@ -470,6 +560,24 @@ mod tests {
             let json = report.to_json();
             assert_eq!(json.get("stream_errors").as_usize(), Some(0));
             assert!(report.render().contains("tokens/sec"));
+        }
+    }
+
+    #[test]
+    fn prompted_streams_prefill_then_decode_bit_compatibly() {
+        for arrival in [Arrival::Closed, Arrival::Staggered] {
+            let report = run(&LoadConfig { prompt: 7, ..tiny(arrival) }).unwrap();
+            assert_eq!(report.tokens_total, 30, "{arrival}");
+            assert_eq!(report.stream_errors, 0, "{arrival}");
+            // decode tokens after the prefilled prompt stay bit-exact
+            assert_eq!(report.verified, Some(true), "{arrival}");
+            assert_eq!(report.max_abs_diff, 0.0, "{arrival}");
+            // the prompt's own last output carries the 1e-5 contract
+            assert!(report.prefill_max_scaled_diff < 1e-5, "{arrival}");
+            assert_eq!(report.telemetry.prefills(), 5, "{arrival}");
+            assert_eq!(report.telemetry.prefill_tokens(), 35, "{arrival}");
+            let json = report.to_json();
+            assert_eq!(json.get("prompt_tokens").as_usize(), Some(7));
         }
     }
 

@@ -24,6 +24,10 @@
 //!   paths produce bit-identical outputs to a lone single-stream decode
 //!   — they run the same fold code — and the steady-state tick makes
 //!   zero heap allocations (enforced by `tests/alloc_free.rs`).
+//!   Prompts are ingested through [`Scheduler::prefill`]: chunkwise-
+//!   parallel GEMM compute over `MACFORMER_CHUNK`-token chunks instead
+//!   of `n` single-token ticks, leaving the stream's `(S, z)` state
+//!   bit-identical to token-by-token submission.
 //! * [`Telemetry`] — per-token latency histogram (log2 buckets),
 //!   tokens/sec, batch occupancy, queue depth, and rejection counters,
 //!   owned by the pool and updated by the scheduler.
@@ -139,9 +143,11 @@ pub enum ServeError {
     /// [`StreamPool::take_output`] before a tick served the stream's
     /// pending token.
     NoOutput,
-    /// A submitted row has the wrong length for this pool's session.
+    /// A submitted row (or prompt row set) has the wrong length for
+    /// this pool's session.
     BadRow {
-        /// Which row (`"q"`, `"k"`, `"v"`, or `"out"`).
+        /// Which row (`"q"`, `"k"`, `"v"`, `"out"`, or `"prompt q"` /
+        /// `"prompt v"` for [`Scheduler::prefill`] row sets).
         what: &'static str,
         /// Required length.
         expected: usize,

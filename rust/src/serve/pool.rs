@@ -135,7 +135,7 @@ impl<'s> StreamPool<'s> {
         &self.tel
     }
 
-    fn resolve(&self, id: StreamId) -> Result<usize, ServeError> {
+    pub(super) fn resolve(&self, id: StreamId) -> Result<usize, ServeError> {
         let si = id.slot as usize;
         match self.slots.get(si) {
             Some(slot) if slot.active && slot.gen == id.gen => Ok(si),

@@ -31,15 +31,23 @@
 //! schedule vectors are grow-only, telemetry buckets are fixed-size,
 //! and both dispatch layers are the allocation-free fastpath pool
 //! (enforced by `tests/alloc_free.rs`).
+//!
+//! Prompts enter through [`Scheduler::prefill`] instead of `n`
+//! single-token ticks: one bulk phi pass plus the chunkwise-parallel
+//! `(S, z)` fold (`MACFORMER_CHUNK` tokens per chunk, GEMM-dominated),
+//! leaving the stream's state bit-identical to token-by-token
+//! submission and its output slot holding the prompt's last position.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::fastpath::attention::causal_chunk;
 use crate::fastpath::parallel::SendPtr;
 use crate::fastpath::{grow, parallel, simd};
 
-use super::pool::StreamPool;
+use super::pool::{StreamId, StreamPool};
+use super::ServeError;
 
 /// What one [`Scheduler::tick`] did.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,11 +74,94 @@ pub struct Scheduler {
     phi_q: Vec<f32>,
     /// phi(k'), `g * D`.
     phi_k: Vec<f32>,
+    /// Per-position prefill outputs, `n * dv` (only the last row is
+    /// handed to the stream's output slot).
+    prefill_out: Vec<f32>,
 }
 
 impl Scheduler {
     pub fn new() -> Scheduler {
         Scheduler::default()
+    }
+
+    /// Ingest a whole prompt for one admitted stream — the
+    /// prompt-admission path. Instead of queueing `n` single-token
+    /// ticks, the prompt is scaled and phi-mapped in bulk in this
+    /// scheduler's grow-only scratch (feature rows sharded over the
+    /// fastpath worker pool), then folded chunkwise
+    /// (`MACFORMER_CHUNK` tokens at a time) into the stream's `(S, z)`
+    /// state. The last prompt position's attention output lands in the
+    /// stream's output slot, taken with
+    /// [`take_output`](StreamPool::take_output) like any served token.
+    ///
+    /// `q`/`k` are `n * head_dim` row-major prompt rows, `v` is
+    /// `n * dv`; returns the number of prompt tokens ingested. The
+    /// state after prefill is **bit-identical** to having submitted
+    /// the prompt token by token through ticks, so subsequent decode
+    /// continues bit-compatibly. Closed-loop: a stream with a pending
+    /// token or an untaken output cannot prefill
+    /// ([`ServeError::StreamBusy`]). On error no state is advanced.
+    ///
+    /// Unlike the session-level `CausalState::prefill_into` (where an
+    /// empty prompt is a no-op), an empty or ragged prompt is a
+    /// [`ServeError::BadRow`] here — a prompt admission must leave an
+    /// output to take. For prompt rows, `BadRow` reports
+    /// `expected` = the row quantum (`head_dim`, or `n * dv` for `v`)
+    /// and `got` = the whole buffer's length.
+    pub fn prefill(
+        &mut self,
+        pool: &mut StreamPool<'_>,
+        id: StreamId,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<usize, ServeError> {
+        let si = pool.resolve(id)?;
+        if pool.slots[si].pending || pool.slots[si].has_output {
+            return Err(ServeError::StreamBusy);
+        }
+        let session = pool.session;
+        let d = session.spec().head_dim;
+        if q.len() != k.len() || q.len() % d != 0 || q.is_empty() {
+            return Err(ServeError::BadRow { what: "prompt q", expected: d, got: q.len() });
+        }
+        let n = q.len() / d;
+        let dv = pool.cfg.dv;
+        if v.len() != n * dv {
+            return Err(ServeError::BadRow { what: "prompt v", expected: n * dv, got: v.len() });
+        }
+        let map = session.feature_map().expect("streaming pool implies a Maclaurin session");
+        let feat = map.flat.num_features();
+        let scale = session.decode_scale();
+        grow(&mut self.qs, n * d);
+        grow(&mut self.ks, n * d);
+        grow(&mut self.phi_q, n * feat);
+        grow(&mut self.phi_k, n * feat);
+        grow(&mut self.prefill_out, n * dv);
+        simd::scaled_copy(q, scale, &mut self.qs[..n * d]);
+        simd::scaled_copy(k, scale, &mut self.ks[..n * d]);
+        // both fallible phi passes complete before any state is touched
+        let mut phi = session.phi_rows_into(&self.ks[..n * d], n, &mut self.phi_k[..n * feat]);
+        if phi.is_ok() {
+            phi = session.phi_rows_into(&self.qs[..n * d], n, &mut self.phi_q[..n * feat]);
+        }
+        if let Err(e) = phi {
+            return Err(ServeError::Session(format!("{e:#}")));
+        }
+        let slot = &mut pool.slots[si];
+        let state = slot.state.as_mut().expect("active slot always has a state");
+        state.prefill_phi_into(
+            &self.phi_q[..n * feat],
+            &self.phi_k[..n * feat],
+            v,
+            n,
+            causal_chunk(),
+            &mut self.prefill_out[..n * dv],
+        );
+        slot.out.copy_from_slice(&self.prefill_out[(n - 1) * dv..n * dv]);
+        slot.has_output = true;
+        pool.tel.record_prefill(n);
+        Ok(n)
     }
 
     /// Serve every pending submission in `pool` as one micro-batch (see
@@ -236,6 +327,57 @@ mod tests {
             assert_eq!(pool.stream_len(id).unwrap(), 1);
         }
         assert_eq!(pool.telemetry().tokens(), 5);
+    }
+
+    #[test]
+    fn prefill_ingests_a_prompt_and_leaves_decode_ready() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(16)
+            .causal(true)
+            .seed(5)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let mut pool = StreamPool::new(&sess, ServeConfig::new(2, 2)).unwrap();
+        let mut sched = Scheduler::new();
+        let id = pool.admit().unwrap();
+        let mut rng = Rng::new(17);
+        let n = 9usize;
+        let q: Vec<f32> = (0..n * 4).map(|_| rng.normal() * 0.5).collect();
+        let k: Vec<f32> = (0..n * 4).map(|_| rng.normal() * 0.5).collect();
+        let v: Vec<f32> = (0..n * 2).map(|_| rng.normal()).collect();
+        assert_eq!(sched.prefill(&mut pool, id, &q, &k, &v).unwrap(), n);
+        assert_eq!(pool.stream_len(id).unwrap(), n);
+        assert!(pool.has_output(id));
+        assert_eq!(pool.telemetry().prefills(), 1);
+        assert_eq!(pool.telemetry().prefill_tokens(), n as u64);
+        // the untaken prompt output blocks both submit and re-prefill
+        assert_eq!(
+            pool.submit(id, &[0.0; 4], &[0.0; 4], &[0.0; 2]).unwrap_err(),
+            crate::serve::ServeError::StreamBusy
+        );
+        assert_eq!(
+            sched.prefill(&mut pool, id, &q, &k, &v).unwrap_err(),
+            crate::serve::ServeError::StreamBusy
+        );
+        let mut out = [0.0f32; 2];
+        pool.take_output(id, &mut out).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()));
+        // decode continues normally after the prompt
+        pool.submit(id, &[0.1; 4], &[0.2; 4], &[1.0, -1.0]).unwrap();
+        sched.tick(&mut pool).unwrap();
+        pool.take_output(id, &mut out).unwrap();
+        assert_eq!(pool.stream_len(id).unwrap(), n + 1);
+        // ragged prompt rows are clean typed errors
+        assert!(matches!(
+            sched.prefill(&mut pool, id, &q[..5], &k[..5], &v).unwrap_err(),
+            crate::serve::ServeError::BadRow { what: "prompt q", .. }
+        ));
+        assert!(matches!(
+            sched.prefill(&mut pool, id, &q, &k, &v[..3]).unwrap_err(),
+            crate::serve::ServeError::BadRow { what: "prompt v", .. }
+        ));
     }
 
     #[test]

@@ -87,6 +87,8 @@ pub struct Telemetry {
     admits: u64,
     rejected_admits: u64,
     rejected_submits: u64,
+    prefills: u64,
+    prefill_tokens: u64,
     latency: Histogram,
 }
 
@@ -112,6 +114,8 @@ impl Telemetry {
             admits: 0,
             rejected_admits: 0,
             rejected_submits: 0,
+            prefills: 0,
+            prefill_tokens: 0,
             latency: Histogram::new(),
         }
     }
@@ -148,6 +152,11 @@ impl Telemetry {
 
     pub(super) fn record_token_latency(&mut self, latency: Duration) {
         self.latency.record(latency.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub(super) fn record_prefill(&mut self, tokens: usize) {
+        self.prefills += 1;
+        self.prefill_tokens += tokens as u64;
     }
 
     /// Tokens served (across all streams).
@@ -189,6 +198,18 @@ impl Telemetry {
     /// [`Backpressure`](super::ServeError::Backpressure).
     pub fn rejected_submits(&self) -> u64 {
         self.rejected_submits
+    }
+
+    /// Prompt prefills performed (one per
+    /// [`Scheduler::prefill`](super::Scheduler::prefill) call).
+    pub fn prefills(&self) -> u64 {
+        self.prefills
+    }
+
+    /// Prompt tokens ingested by chunked prefill (counted separately
+    /// from [`tokens`](Self::tokens), which tracks per-tick decode).
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefill_tokens
     }
 
     /// Mean streams per non-idle tick (batch occupancy).
@@ -258,7 +279,7 @@ impl Telemetry {
             "tokens {:>8}  |  {:>10.0} tok/s  |  latency p50 {:>9.6}s p99 {:>9.6}s max {:>9.6}s\n\
              ticks  {:>8}  (batched {}, sequential {}, idle {})\n\
              batch  mean {:>6.2} max {:>4}  |  queue mean {:>6.2} max {:>4}\n\
-             admits {:>8}  rejected: admit {} submit {}",
+             admits {:>8}  rejected: admit {} submit {}  |  prefills {} ({} tokens)",
             self.tokens,
             self.tokens_per_sec(),
             self.latency_percentile(50.0),
@@ -275,6 +296,8 @@ impl Telemetry {
             self.admits,
             self.rejected_admits,
             self.rejected_submits,
+            self.prefills,
+            self.prefill_tokens,
         )
     }
 
@@ -299,6 +322,8 @@ impl Telemetry {
             ("admits", Value::num(self.admits as f64)),
             ("rejected_admits", Value::num(self.rejected_admits as f64)),
             ("rejected_submits", Value::num(self.rejected_submits as f64)),
+            ("prefills", Value::num(self.prefills as f64)),
+            ("prefill_tokens", Value::num(self.prefill_tokens as f64)),
             (
                 "latency_s",
                 Value::obj(vec![

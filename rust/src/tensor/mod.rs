@@ -86,10 +86,41 @@ pub fn matmul_tn_into(a: &[f32], r: usize, m: usize, b: &[f32], n: usize, out: &
 /// over r matches `transpose2().matmul(..)` exactly, including its
 /// zero-skip.
 pub fn matmul_tn_scalar_into(a: &[f32], r: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), m * n, "matmul_tn_into: out len");
+    out.fill(0.0);
+    matmul_tn_accum_scalar_into(a, r, m, b, n, out);
+}
+
+/// `out += A^T · B` — the accumulating form of [`matmul_tn_into`],
+/// dispatched the same way. Because both arms apply the rank-1 updates
+/// row by row in `r` order (vectorized only along `n`, exactly like the
+/// dispatched `axpy`), accumulating a chunk of rows into a running
+/// state is **bit-identical** to folding those rows in one `axpy` at a
+/// time on the same arm — the property the chunked causal prefill's
+/// `(S, z)` state advance relies on.
+pub fn matmul_tn_accum_into(a: &[f32], r: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if crate::fastpath::simd::active() {
+        // SAFETY: active() implies AVX2+FMA were detected on this CPU.
+        unsafe { crate::fastpath::simd::x86::matmul_tn_accum(a, r, m, b, n, out) };
+        return;
+    }
+    matmul_tn_accum_scalar_into(a, r, m, b, n, out);
+}
+
+/// Scalar arm of [`matmul_tn_accum_into`] — the exact
+/// [`matmul_tn_scalar_into`] loop without the zero-fill.
+pub fn matmul_tn_accum_scalar_into(
+    a: &[f32],
+    r: usize,
+    m: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
     assert_eq!(a.len(), r * m, "matmul_tn_into: lhs len");
     assert_eq!(b.len(), r * n, "matmul_tn_into: rhs len");
     assert_eq!(out.len(), m * n, "matmul_tn_into: out len");
-    out.fill(0.0);
     for p in 0..r {
         let arow = &a[p * m..(p + 1) * m];
         let brow = &b[p * n..(p + 1) * n];
@@ -423,6 +454,37 @@ mod tests {
             let mut anchor = Tensor::zeros(&[m, n]);
             matmul_tn_scalar_into(&a.data, r, m, &b.data, n, &mut anchor.data);
             assert_eq!(anchor.max_abs_diff(&slow), 0.0, "scalar ({r},{m},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_tn_accum_equals_chunked_rank1_folds() {
+        // the chunked-prefill contract: accumulating a block of rows via
+        // matmul_tn_accum_into is bit-identical to folding the same rows
+        // one rank-1 update at a time on the same dispatch arm
+        let mut rng = crate::util::rng::Rng::new(19);
+        for (r, m, n) in [(1, 1, 1), (5, 3, 4), (9, 2, 17), (6, 7, 8)] {
+            let a: Vec<f32> = (0..r * m).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..r * n).map(|_| rng.normal()).collect();
+            let mut state: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut folded = state.clone();
+            for p in 0..r {
+                for f in 0..m {
+                    let av = a[p * m + f];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    crate::fastpath::simd::axpy(
+                        av,
+                        &b[p * n..(p + 1) * n],
+                        &mut folded[f * n..(f + 1) * n],
+                    );
+                }
+            }
+            matmul_tn_accum_into(&a, r, m, &b, n, &mut state);
+            for (i, (x, y)) in state.iter().zip(&folded).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "({r},{m},{n}) elem {i}: {x} vs {y}");
+            }
         }
     }
 

@@ -197,6 +197,131 @@ fn serve_tick_cycle_is_allocation_free_after_warmup() {
     assert!(row.iter().all(|x| x.is_finite()));
 }
 
+/// Chunked prompt prefill + streaming decode: after one warmup prefill
+/// per prompt shape (state-owned grow-only staging + the chunked
+/// kernel's thread-local scratch), a full `reset` + `prefill_into` +
+/// decode window makes ZERO heap allocations.
+#[test]
+fn prefill_then_decode_window_is_allocation_free_after_warmup() {
+    let _serial = TEST_LOCK.lock().unwrap();
+    let session = AttentionSpec::new(Kernel::Exp)
+        .head_dim(8)
+        .num_features(32)
+        .causal(true)
+        .seed(11)
+        .backend(Backend::HostFast)
+        .build()
+        .unwrap();
+    let (d, dv, prompt, decode) = (8usize, 4usize, 70usize, 16usize);
+    let mut rng = Rng::new(8);
+    let n = prompt + decode;
+    let q = Tensor::randn(&mut rng, &[n, d], 0.4);
+    let k = Tensor::randn(&mut rng, &[n, d], 0.4);
+    let v = Tensor::randn(&mut rng, &[n, dv], 1.0);
+    let mut state = session.begin_decode(dv).unwrap();
+    let mut prompt_out = vec![0.0f32; prompt * dv];
+    let mut row = vec![0.0f32; dv];
+    let mut cycle = |state: &mut macformer::attn::CausalState<'_>| {
+        state.reset();
+        state
+            .prefill_into(
+                &q.data[..prompt * d],
+                &k.data[..prompt * d],
+                &v.data[..prompt * dv],
+                &mut prompt_out,
+            )
+            .unwrap();
+        for i in prompt..n {
+            state
+                .append_token_into(
+                    &q.data[i * d..(i + 1) * d],
+                    &k.data[i * d..(i + 1) * d],
+                    &v.data[i * dv..(i + 1) * dv],
+                    &mut row,
+                )
+                .unwrap();
+        }
+    };
+    // warmup: state staging + chunk workspace + pool worker thread locals
+    for _ in 0..10 {
+        cycle(&mut state);
+    }
+    // claiming across the pool is dynamic (see the batched forward
+    // test): demonstrate ONE fully allocation-free window
+    let mut zero_window = false;
+    for _attempt in 0..5 {
+        let before = allocations();
+        for _ in 0..5 {
+            cycle(&mut state);
+        }
+        if allocations() == before {
+            zero_window = true;
+            break;
+        }
+    }
+    assert!(
+        zero_window,
+        "steady-state prefill + decode window never reached an allocation-free state"
+    );
+    assert!(prompt_out.iter().all(|x| x.is_finite()));
+    assert_eq!(state.len(), n);
+}
+
+/// Serve prompt admission: once the scheduler's prefill scratch and the
+/// slot states are warm, a full retire / admit / prefill / take /
+/// decode-tick cycle allocates nothing.
+#[test]
+fn serve_prefill_cycle_is_allocation_free_after_warmup() {
+    let _serial = TEST_LOCK.lock().unwrap();
+    let session = AttentionSpec::new(Kernel::Exp)
+        .head_dim(8)
+        .num_features(32)
+        .causal(true)
+        .seed(13)
+        .backend(Backend::HostFast)
+        .build()
+        .unwrap();
+    let (d, dv, prompt) = (8usize, 4usize, 40usize);
+    let mut pool = StreamPool::new(&session, ServeConfig::new(2, dv)).unwrap();
+    let mut scheduler = Scheduler::new();
+    let mut rng = Rng::new(9);
+    let pq = Tensor::randn(&mut rng, &[prompt, d], 0.4);
+    let pk = Tensor::randn(&mut rng, &[prompt, d], 0.4);
+    let pv = Tensor::randn(&mut rng, &[prompt, dv], 1.0);
+    let q1 = Tensor::randn(&mut rng, &[1, d], 0.4);
+    let k1 = Tensor::randn(&mut rng, &[1, d], 0.4);
+    let v1 = Tensor::randn(&mut rng, &[1, dv], 1.0);
+    let mut row = vec![0.0f32; dv];
+    let mut cycle = |pool: &mut StreamPool<'_>, scheduler: &mut Scheduler| {
+        let id = pool.admit().unwrap();
+        scheduler.prefill(pool, id, &pq.data, &pk.data, &pv.data).unwrap();
+        pool.take_output(id, &mut row).unwrap();
+        pool.submit(id, &q1.data, &k1.data, &v1.data).unwrap();
+        scheduler.tick(pool).unwrap();
+        pool.take_output(id, &mut row).unwrap();
+        pool.retire(id).unwrap();
+    };
+    for _ in 0..10 {
+        cycle(&mut pool, &mut scheduler);
+    }
+    let mut zero_window = false;
+    for _attempt in 0..5 {
+        let before = allocations();
+        for _ in 0..5 {
+            cycle(&mut pool, &mut scheduler);
+        }
+        if allocations() == before {
+            zero_window = true;
+            break;
+        }
+    }
+    assert!(
+        zero_window,
+        "steady-state serve admit/prefill/decode cycle never reached an allocation-free window"
+    );
+    assert!(row.iter().all(|x| x.is_finite()));
+}
+
 /// Streaming decode: after `begin_decode` (which owns all per-token
 /// scratch), `append_token_into` is allocation-free from token one.
 #[test]

@@ -92,7 +92,11 @@ fn prop_streaming_decode_matches_batched_causal() {
                     .map_err(|e| format!("token {i}: {e}"))?;
                 for (c, (a, b)) in out.iter().zip(&batched.data[i * dv..(i + 1) * dv]).enumerate()
                 {
-                    if (a - b).abs() > 1e-5 {
+                    // magnitude-scaled like the fastpath_equiv phi
+                    // contract: the batched causal path is chunked
+                    // (MACFORMER_CHUNK), which regroups the den/num
+                    // reductions relative to the streaming fold
+                    if (a - b).abs() > 1e-5 * a.abs().max(1.0) {
                         return Err(format!(
                             "{kernel} {backend:?} n={n} d={d} dv={dv} D={feat}: token {i} \
                              col {c}: streaming {a} vs batched {b}"
@@ -140,7 +144,8 @@ fn streaming_matches_batched_all_kernels_long_sequence() {
                     )
                     .unwrap();
                 for (a, b) in out.iter().zip(&batched.data[i * dv..(i + 1) * dv]) {
-                    worst = worst.max((a - b).abs());
+                    // magnitude-scaled: the batched path is chunked
+                    worst = worst.max((a - b).abs() / a.abs().max(1.0));
                 }
             }
             assert!(worst < 1e-5, "{kernel} {backend:?}: max streaming drift {worst}");
@@ -182,9 +187,15 @@ fn prop_backends_agree_through_dispatch() {
             let v = randn(&mut rng, &[g, n, dv], 1.0);
             let a = reference.forward(&q, &k, &v).map_err(|e| e.to_string())?;
             let b = fast.forward(&q, &k, &v).map_err(|e| e.to_string())?;
-            let diff = a.max_abs_diff(&b);
-            if diff > 1e-5 {
-                return Err(format!("{kernel} causal={causal} g={g} n={n}: tiers differ {diff}"));
+            // magnitude-scaled elementwise: the host tier's causal path
+            // is chunked, so its reductions regroup relative to the
+            // reference fold (same contract as the phi comparisons)
+            for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+                if (x - y).abs() > 1e-5 * x.abs().max(1.0) {
+                    return Err(format!(
+                        "{kernel} causal={causal} g={g} n={n}: tiers differ at {i}: {x} vs {y}"
+                    ));
+                }
             }
             // the quadratic oracle path agrees across tiers too
             let ea = reference.forward_exact(&q, &k, &v).map_err(|e| e.to_string())?;

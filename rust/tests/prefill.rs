@@ -1,0 +1,394 @@
+//! Chunkwise-parallel causal prefill: the equivalence and continuation
+//! contract.
+//!
+//! * the chunked kernel's outputs stay within 1e-5 of the sequential
+//!   `(S, z)` fold and the reference oracle for every chunk width
+//!   (widths that don't divide n, widths larger than n), and chunk
+//!   width 1 *is* the sequential fold, bit for bit;
+//! * the running state left by a chunked prefill is **bit-identical**
+//!   to the fold's, so `prefill(prompt)` + `append_token`(suffix) is
+//!   bit-identical to `append_token`-ing the whole stream — for every
+//!   Table-1 kernel, both host backends, several chunk widths;
+//! * the `den + eps` normalization guard: a query whose `phi_q . z`
+//!   denominator is ~0 produces finite output for every Table-1
+//!   kernel on every causal/non-causal/chunked path;
+//! * the serve scheduler's prompt prefill leaves streams bit-compatible
+//!   with single-stream decode.
+//!
+//! CI runs this suite on both SIMD dispatch arms (`MACFORMER_NO_SIMD`
+//! matrix) and under a `MACFORMER_CHUNK` sweep ({1, 16, 64}). Pure
+//! host math — no PJRT, safe to run multi-threaded.
+
+use macformer::attn::{AttentionSpec, Backend, Kernel};
+use macformer::fastpath::attention::causal_prefill_fold_into;
+use macformer::fastpath::FlatRmfMap;
+use macformer::reference::{attention as oracle, rmf::RmfMap};
+use macformer::serve::{Scheduler, ServeConfig, StreamPool};
+use macformer::tensor::Tensor;
+use macformer::util::proptest::{check, PropResult};
+use macformer::util::rng::Rng;
+
+fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+    Tensor::randn(rng, shape, scale)
+}
+
+/// Chunked prefill vs the sequential fold vs the oracle, over random
+/// shapes and chunk widths (including widths > n and widths that do
+/// not divide n). The final `(S, z)` state must be bit-identical to
+/// the fold's on every width; outputs within 1e-5 (bit-identical for
+/// width 1).
+#[test]
+fn prop_chunked_prefill_matches_fold_and_oracle() {
+    check(
+        30,
+        |rng| {
+            let n = rng.range(1, 40);
+            let feat = rng.range(1, 12);
+            let dv = rng.range(1, 6);
+            let chunk = rng.range(1, 50);
+            let seed = rng.next_u64() as f32;
+            vec![vec![n as f32, feat as f32, dv as f32, chunk as f32, seed]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let p = &input[0];
+            let (n, feat, dv, chunk) = (
+                (p[0] as usize).max(1),
+                (p[1] as usize).max(1),
+                (p[2] as usize).max(1),
+                (p[3] as usize).max(1),
+            );
+            let mut rng = Rng::new(p[4] as u64);
+            let phi_q = randn(&mut rng, &[n, feat], 0.8).map(f32::abs);
+            let phi_k = randn(&mut rng, &[n, feat], 0.8).map(f32::abs);
+            let v = randn(&mut rng, &[n, dv], 1.0);
+            let (pq, pk, vd) = (&phi_q.data[..], &phi_k.data[..], &v.data[..]);
+            let mut s_seq = vec![0.0f32; feat * dv];
+            let mut z_seq = vec![0.0f32; feat];
+            let mut out_seq = vec![0.0f32; n * dv];
+            causal_prefill_fold_into(
+                pq, pk, vd, n, feat, dv, 1, 1e-6, &mut s_seq, &mut z_seq, &mut out_seq,
+            );
+            let mut s = vec![0.0f32; feat * dv];
+            let mut z = vec![0.0f32; feat];
+            let mut out = vec![0.0f32; n * dv];
+            causal_prefill_fold_into(
+                pq, pk, vd, n, feat, dv, chunk, 1e-6, &mut s, &mut z, &mut out,
+            );
+            for (i, (a, b)) in s.iter().zip(&s_seq).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("n={n} chunk={chunk}: S elem {i}: {a} vs {b}"));
+                }
+            }
+            for (i, (a, b)) in z.iter().zip(&z_seq).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("n={n} chunk={chunk}: z elem {i}: {a} vs {b}"));
+                }
+            }
+            let ora = oracle::linear_attention(&phi_q, &phi_k, &v, true, 1e-6);
+            for (i, (a, b)) in out.iter().zip(&out_seq).enumerate() {
+                if chunk <= 1 {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("chunk 1 must BE the fold: elem {i}: {a} vs {b}"));
+                    }
+                } else if (a - b).abs() > 1e-5 {
+                    return Err(format!(
+                        "n={n} feat={feat} dv={dv} chunk={chunk}: elem {i}: {a} vs {b}"
+                    ));
+                }
+                if (a - ora.data[i]).abs() > 1e-5 {
+                    return Err(format!(
+                        "n={n} chunk={chunk} vs oracle elem {i}: {a} vs {}",
+                        ora.data[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The continuation property (the PR's bit-compat acceptance
+/// criterion): `prefill(prompt)` followed by `append_token` of a
+/// suffix is bit-identical to `append_token`-ing the whole stream —
+/// for every Table-1 kernel, both host backends, chunk widths
+/// including 1 and widths that do not divide the prompt length.
+#[test]
+fn prop_prefill_then_decode_equals_full_decode_bitwise() {
+    check(
+        25,
+        |rng| {
+            let kernel_idx = rng.below(5);
+            let backend_idx = rng.below(2);
+            let prompt = rng.range(1, 40);
+            let suffix = rng.range(1, 10);
+            let d = rng.range(1, 6);
+            let dv = rng.range(1, 5);
+            let feat = rng.range(1, 24);
+            let chunk_idx = rng.below(4);
+            let seed = rng.next_u64() as f32;
+            vec![vec![
+                kernel_idx as f32,
+                backend_idx as f32,
+                prompt as f32,
+                suffix as f32,
+                d as f32,
+                dv as f32,
+                feat as f32,
+                chunk_idx as f32,
+                seed,
+            ]]
+        },
+        |input: &Vec<Vec<f32>>| -> PropResult {
+            let p = &input[0];
+            let kernel = Kernel::MACLAURIN[p[0] as usize % 5];
+            let backend = if p[1] as usize == 0 { Backend::Reference } else { Backend::HostFast };
+            let prompt = (p[2] as usize).max(1);
+            let suffix = (p[3] as usize).max(1);
+            let d = (p[4] as usize).max(1);
+            let dv = (p[5] as usize).max(1);
+            let feat = (p[6] as usize).max(1);
+            // widths 3 and 16 rarely divide the prompt length; 64 is
+            // usually larger than it; 1 is the sequential fold
+            let chunk = [1usize, 3, 16, 64][p[7] as usize % 4];
+            let seed = p[8] as u64;
+            let n = prompt + suffix;
+            let sess = AttentionSpec::new(kernel)
+                .head_dim(d)
+                .num_features(feat)
+                .causal(true)
+                .seed(seed ^ 0xA5)
+                .backend(backend)
+                .build()
+                .map_err(|e| format!("build: {e}"))?;
+            let mut rng = Rng::new(seed);
+            let q = randn(&mut rng, &[n, d], 0.5);
+            let k = randn(&mut rng, &[n, d], 0.5);
+            let v = randn(&mut rng, &[n, dv], 1.0);
+            // the whole stream, token by token
+            let mut full = sess.begin_decode(dv).map_err(|e| format!("decode: {e}"))?;
+            let mut full_rows = vec![0.0f32; n * dv];
+            for i in 0..n {
+                full.append_token_into(
+                    &q.data[i * d..(i + 1) * d],
+                    &k.data[i * d..(i + 1) * d],
+                    &v.data[i * dv..(i + 1) * dv],
+                    &mut full_rows[i * dv..(i + 1) * dv],
+                )
+                .map_err(|e| format!("append: {e}"))?;
+            }
+            // prefill the prompt, then stream the suffix
+            let mut pre = sess.begin_decode(dv).map_err(|e| format!("decode: {e}"))?;
+            let mut prompt_out = vec![0.0f32; prompt * dv];
+            pre.prefill_with_chunk_into(
+                &q.data[..prompt * d],
+                &k.data[..prompt * d],
+                &v.data[..prompt * dv],
+                chunk,
+                &mut prompt_out,
+            )
+            .map_err(|e| format!("prefill: {e}"))?;
+            if pre.len() != prompt {
+                return Err(format!("prefill len {} != prompt {prompt}", pre.len()));
+            }
+            // prompt outputs: chunked contract (bitwise at chunk 1;
+            // magnitude-scaled otherwise, like the phi contract)
+            for (i, (a, b)) in prompt_out.iter().zip(&full_rows[..prompt * dv]).enumerate() {
+                if chunk <= 1 {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{kernel} {backend:?} chunk 1 prompt elem {i}: {a} vs {b}"
+                        ));
+                    }
+                } else if (a - b).abs() > 1e-5 * a.abs().max(1.0) {
+                    return Err(format!(
+                        "{kernel} {backend:?} chunk {chunk} prompt elem {i}: {a} vs {b}"
+                    ));
+                }
+            }
+            // suffix: bit-identical continuation at EVERY chunk width
+            let mut row = vec![0.0f32; dv];
+            for i in prompt..n {
+                pre.append_token_into(
+                    &q.data[i * d..(i + 1) * d],
+                    &k.data[i * d..(i + 1) * d],
+                    &v.data[i * dv..(i + 1) * dv],
+                    &mut row,
+                )
+                .map_err(|e| format!("append: {e}"))?;
+                let expect = &full_rows[i * dv..(i + 1) * dv];
+                for (j, (a, b)) in row.iter().zip(expect).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{kernel} {backend:?} chunk {chunk} prompt {prompt}: \
+                             suffix token {i} elem {j}: {a} vs {b} (state drifted)"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The `den + eps` normalization guard (regression): a query whose
+/// `phi_q . z` denominator is ~0 — here exactly 0, via an all-zero
+/// phi_q row against each kernel's real phi_k draw — must produce
+/// finite output (no NaN/inf) for every Table-1 kernel on the oracle,
+/// the fastpath (causal and non-causal), and every chunked width.
+#[test]
+fn eps_guard_keeps_vanishing_denominators_finite() {
+    let mut rng = Rng::new(0xE9A);
+    for kernel in Kernel::MACLAURIN {
+        let (n, d, feat, dv) = (9usize, 4usize, 12usize, 3usize);
+        let map = RmfMap::sample(&mut rng, kernel, feat, d, 2.0, 8);
+        let flat = FlatRmfMap::from(&map);
+        let keys = randn(&mut rng, &[n, d], 0.5);
+        let phi_k = flat.apply(&keys);
+        let phi_q = Tensor::zeros(&[n, feat]);
+        let v = randn(&mut rng, &[n, dv], 1.0);
+        for causal in [false, true] {
+            for out in [
+                oracle::linear_attention(&phi_q, &phi_k, &v, causal, 1e-6),
+                macformer::fastpath::attention::linear_attention(
+                    &phi_q, &phi_k, &v, causal, 1e-6,
+                ),
+            ] {
+                for (i, x) in out.data.iter().enumerate() {
+                    assert!(
+                        x.is_finite(),
+                        "{kernel} causal={causal}: elem {i} = {x} (den+eps guard broken)"
+                    );
+                }
+            }
+        }
+        for chunk in [1usize, 2, 4, 16] {
+            let mut s = vec![0.0f32; feat * dv];
+            let mut z = vec![0.0f32; feat];
+            let mut out = vec![0.0f32; n * dv];
+            let (pq, pk, vd) = (&phi_q.data[..], &phi_k.data[..], &v.data[..]);
+            causal_prefill_fold_into(
+                pq, pk, vd, n, feat, dv, chunk, 1e-6, &mut s, &mut z, &mut out,
+            );
+            for (i, x) in out.iter().enumerate() {
+                assert!(x.is_finite(), "{kernel} chunk {chunk}: elem {i} = {x}");
+            }
+        }
+    }
+}
+
+/// Serve-side prompt prefill: a stream admitted with a prompt through
+/// `Scheduler::prefill`, then decoded through ticks, must match a
+/// single-stream `prefill_into` + `append_token_into` replay exactly
+/// (and the decode suffix must be bit-identical to a no-prefill
+/// append-everything replay, proving the serve state is bit-compatible).
+#[test]
+fn serve_prefill_matches_single_stream_decode() {
+    let sess = AttentionSpec::new(Kernel::Exp)
+        .head_dim(6)
+        .num_features(24)
+        .causal(true)
+        .seed(31)
+        .backend(Backend::HostFast)
+        .build()
+        .unwrap();
+    let (d, dv, prompt, decode) = (6usize, 4usize, 23usize, 8usize);
+    let mut rng = Rng::new(0x5E12);
+    let n = prompt + decode;
+    let q = randn(&mut rng, &[n, d], 0.5);
+    let k = randn(&mut rng, &[n, d], 0.5);
+    let v = randn(&mut rng, &[n, dv], 1.0);
+
+    // serve path: admit + prefill + ticks
+    let mut pool = StreamPool::new(&sess, ServeConfig::new(2, dv)).unwrap();
+    let mut sched = Scheduler::new();
+    let id = pool.admit().unwrap();
+    sched
+        .prefill(
+            &mut pool,
+            id,
+            &q.data[..prompt * d],
+            &k.data[..prompt * d],
+            &v.data[..prompt * dv],
+        )
+        .unwrap();
+    let mut prompt_last = vec![0.0f32; dv];
+    pool.take_output(id, &mut prompt_last).unwrap();
+    let mut served = vec![0.0f32; decode * dv];
+    for t in 0..decode {
+        let i = prompt + t;
+        pool.submit(
+            id,
+            &q.data[i * d..(i + 1) * d],
+            &k.data[i * d..(i + 1) * d],
+            &v.data[i * dv..(i + 1) * dv],
+        )
+        .unwrap();
+        sched.tick(&mut pool).unwrap();
+        pool.take_output(id, &mut served[t * dv..(t + 1) * dv]).unwrap();
+    }
+    assert_eq!(pool.stream_len(id).unwrap(), n);
+
+    // single-stream prefill replay: bit-identical end to end (same
+    // chunked kernel, same phi rows)
+    let mut state = sess.begin_decode(dv).unwrap();
+    let mut prompt_out = vec![0.0f32; prompt * dv];
+    state
+        .prefill_into(
+            &q.data[..prompt * d],
+            &k.data[..prompt * d],
+            &v.data[..prompt * dv],
+            &mut prompt_out,
+        )
+        .unwrap();
+    for (j, (a, b)) in prompt_last.iter().zip(&prompt_out[(prompt - 1) * dv..]).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "prompt last row elem {j}: {a} vs {b}");
+    }
+    let mut row = vec![0.0f32; dv];
+    for t in 0..decode {
+        let i = prompt + t;
+        state
+            .append_token_into(
+                &q.data[i * d..(i + 1) * d],
+                &k.data[i * d..(i + 1) * d],
+                &v.data[i * dv..(i + 1) * dv],
+                &mut row,
+            )
+            .unwrap();
+        for (j, (a, b)) in served[t * dv..(t + 1) * dv].iter().zip(&row).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "decode token {t} elem {j}: {a} vs {b}");
+        }
+    }
+
+    // and against a never-prefilled stream: the decode suffix is still
+    // bit-identical (state bit-compat), the prompt row within 1e-5
+    let mut scratch = sess.begin_decode(dv).unwrap();
+    for i in 0..n {
+        scratch
+            .append_token_into(
+                &q.data[i * d..(i + 1) * d],
+                &k.data[i * d..(i + 1) * d],
+                &v.data[i * dv..(i + 1) * dv],
+                &mut row,
+            )
+            .unwrap();
+        if i == prompt - 1 {
+            for (j, (a, b)) in prompt_last.iter().zip(&row).enumerate() {
+                // chunked-vs-fold contract, magnitude-scaled
+                assert!(
+                    (a - b).abs() < 1e-5 * b.abs().max(1.0),
+                    "prompt last row elem {j}: {a} vs {b}"
+                );
+            }
+        }
+        if i >= prompt {
+            let t = i - prompt;
+            for (j, (a, b)) in served[t * dv..(t + 1) * dv].iter().zip(&row).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "decode token {t} elem {j} vs scratch decode: {a} vs {b}"
+                );
+            }
+        }
+    }
+}

@@ -17,6 +17,10 @@ fn serve_is_bit_identical_to_single_stream_on_both_arms() {
     let cfg = LoadConfig {
         streams: 16,
         tokens: 10,
+        // chunked prompt prefill at admission: decode after the prompt
+        // must STILL be bit-identical on both arms (the prefilled
+        // state is bit-compatible with the fold per arm)
+        prompt: 9,
         head_dim: 6,
         dv: 5,
         num_features: 24,
