@@ -1,12 +1,13 @@
 //! Bench §Serve — the closed-loop multi-stream decode load generator.
 //!
-//! Drives the `serve` subsystem (StreamPool + micro-batching Scheduler)
-//! through one scenario per arrival pattern at the configured stream
-//! count, with bit-exact verification against independent single-stream
-//! decodes enabled, and writes every report (plus the engine telemetry
-//! snapshots) to `BENCH_serve.json` so latency/throughput are diffable
-//! across PRs. The default scenario sustains 64 concurrent streams on
-//! the host tier — the ISSUE's acceptance load.
+//! Drives the `serve` subsystem (resilience Supervisor over StreamPool +
+//! micro-batching Scheduler) through one scenario per arrival pattern at
+//! the configured stream count, with bit-exact verification against
+//! independent single-stream decodes enabled, and writes every report
+//! (plus the engine telemetry snapshots) to `BENCH_serve.json` so
+//! latency/throughput are diffable across PRs. The default scenario
+//! sustains 64 concurrent streams on the host tier — the ISSUE's
+//! acceptance load.
 //!
 //! Knobs (env): MACFORMER_SERVE_STREAMS (64), MACFORMER_SERVE_TOKENS
 //! (64), MACFORMER_SERVE_PROMPT (0, prompt tokens chunk-prefilled at
@@ -17,6 +18,15 @@
 //! all), MACFORMER_BENCH_KERNEL (exp), MACFORMER_BENCH_BACKEND (host),
 //! MACFORMER_THREADS.
 //!
+//! Chaos knobs (all default off, so the plain bench is a clean run):
+//! MACFORMER_FAULT_SEED / _NAN_EVERY / _PANICS / _HIBERNATE_EVERY /
+//! _DELAY_EVERY / _DELAY_TICKS pick the deterministic fault plan
+//! ([`FaultPlan::from_env`]); MACFORMER_SERVE_IDLE_HIBERNATE /
+//! _HIBERNATE_EXPIRE / _OUTPUT_DEADLINE / _SHED_PENDING set the
+//! supervisor deadlines/governor; MACFORMER_SERVE_SPILL_DIR spills
+//! hibernated records to disk instead of RAM. The CI chaos-smoke job
+//! pins a plan and greps the top-level aggregates below.
+//!
 //! Run with: `cargo bench --bench serve_load`
 
 use std::str::FromStr;
@@ -26,9 +36,14 @@ use anyhow::{anyhow, Result};
 use macformer::attn::{Backend, Kernel};
 use macformer::fastpath;
 use macformer::serve::loadgen::{run, Arrival, LoadConfig};
+use macformer::serve::{FaultPlan, ResilienceConfig, SpillMode};
 use macformer::util::json::Value;
 
 fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
@@ -55,6 +70,17 @@ fn main() -> Result<()> {
             .map(|s| Arrival::from_str(s.trim()).map_err(|e| anyhow!("{e}")))
             .collect::<Result<_>>()?,
     };
+    let faults = FaultPlan::from_env();
+    let resilience = ResilienceConfig {
+        idle_hibernate_ticks: env_u64("MACFORMER_SERVE_IDLE_HIBERNATE", 0),
+        hibernate_expire_ticks: env_u64("MACFORMER_SERVE_HIBERNATE_EXPIRE", 0),
+        output_deadline_ticks: env_u64("MACFORMER_SERVE_OUTPUT_DEADLINE", 0),
+        shed_pending: env_usize("MACFORMER_SERVE_SHED_PENDING", 0),
+        spill: match std::env::var("MACFORMER_SERVE_SPILL_DIR") {
+            Ok(dir) if !dir.is_empty() => SpillMode::Disk(dir.into()),
+            _ => SpillMode::Memory,
+        },
+    };
     let base = LoadConfig {
         streams,
         tokens,
@@ -70,20 +96,31 @@ fn main() -> Result<()> {
         backend,
         min_batch: env_usize("MACFORMER_SERVE_MIN_BATCH", 2),
         verify: true,
+        faults,
+        resilience,
         ..LoadConfig::default()
     };
     println!(
-        "=== §Serve load: {streams} streams x {tokens} tokens, kernel {kernel}, backend {backend}, {} threads ===",
-        fastpath::parallel::num_threads()
+        "=== §Serve load: {streams} streams x {tokens} tokens, kernel {kernel}, backend {backend}, {} threads{} ===",
+        fastpath::parallel::num_threads(),
+        if faults.is_active() { " [CHAOS PLAN ACTIVE]" } else { "" }
     );
     let mut scenarios = Vec::new();
     let mut worst_errors = 0u64;
     let mut all_verified = true;
+    let mut faulted_streams = 0u64;
+    let mut poisoned_streams = 0u64;
+    let mut hibernations = 0u64;
+    let mut restores = 0u64;
     for arrival in arrivals {
         let report = run(&LoadConfig { arrival, ..base.clone() })?;
         println!("{}\n", report.render());
         worst_errors = worst_errors.max(report.stream_errors);
         all_verified &= report.verified == Some(true);
+        faulted_streams += report.faulted_streams;
+        poisoned_streams += report.poisoned_streams;
+        hibernations += report.telemetry.hibernations();
+        restores += report.telemetry.restores();
         scenarios.push(report.to_json());
     }
     let doc = Value::obj(vec![
@@ -95,15 +132,24 @@ fn main() -> Result<()> {
             Value::num(fastpath::parallel::num_threads() as f64),
         ),
         ("simd_supported", Value::Bool(fastpath::simd::supported())),
+        ("chaos_active", Value::Bool(faults.is_active())),
         ("all_verified", Value::Bool(all_verified)),
         ("max_stream_errors", Value::num(worst_errors as f64)),
+        // aggregates across scenarios, grepped by the CI chaos gate
+        ("faulted_streams", Value::num(faulted_streams as f64)),
+        ("poisoned_streams", Value::num(poisoned_streams as f64)),
+        ("hibernations", Value::num(hibernations as f64)),
+        ("restores", Value::num(restores as f64)),
         ("scenarios", Value::Arr(scenarios)),
     ]);
     std::fs::write("BENCH_serve.json", doc.to_string())?;
     println!("serve load reports written to BENCH_serve.json");
-    if !all_verified || worst_errors > 0 {
+    // Planned chaos casualties are expected under an active plan;
+    // escaped poison or unexpected stream errors are never OK.
+    if !all_verified || worst_errors > 0 || poisoned_streams > 0 {
         return Err(anyhow!(
-            "serve load degraded: verified {all_verified}, max stream errors {worst_errors}"
+            "serve load degraded: verified {all_verified}, max stream errors {worst_errors}, \
+             {poisoned_streams} poisoned streams"
         ));
     }
     Ok(())

@@ -545,20 +545,52 @@ impl CausalState<'_> {
     /// Lengths are the caller's contract (`debug_assert`ed): `phi_k`
     /// and `phi_q` are `D`-length feature rows of the *scaled* k/q
     /// rows, `v` and `out` are `dv`-length.
+    /// Returns the raw fold denominator `phi_q . z` so the serve
+    /// scheduler can run its denominator-health check.
     pub(crate) fn fold_token_into(
         &mut self,
         phi_k: &[f32],
         phi_q: &[f32],
         v: &[f32],
         out: &mut [f32],
-    ) {
+    ) -> f32 {
         debug_assert_eq!(phi_k.len(), self.z.len(), "fold_token_into: phi_k len");
         debug_assert_eq!(phi_q.len(), self.z.len(), "fold_token_into: phi_q len");
         debug_assert_eq!(v.len(), self.dv, "fold_token_into: v len");
         debug_assert_eq!(out.len(), self.dv, "fold_token_into: out len");
         causal_fold_key(phi_k, v, &mut self.z, &mut self.s, self.dv);
-        causal_fold_query(phi_q, &self.z, &self.s, self.dv, self.session.spec().eps, out);
+        let den =
+            causal_fold_query(phi_q, &self.z, &self.s, self.dv, self.session.spec().eps, out);
         self.len += 1;
+        den
+    }
+
+    /// Exact byte length of this stream's snapshot record:
+    /// `D*dv + D` floats plus an O(1) header/checksum (see
+    /// `tensor::io::state_record_len`).
+    pub fn snapshot_len(&self) -> usize {
+        crate::tensor::io::state_record_len(self.z.len(), self.dv)
+    }
+
+    /// Serialize the full decode state — `(S, z)` and the token count —
+    /// into `buf` as a versioned, checksummed record (cleared first;
+    /// capacity is reused across calls, so a warm hibernation arena
+    /// makes no allocations). The record restores **bit-identically**:
+    /// a stream that hibernates and resumes produces the same output
+    /// bits as one that never left RAM.
+    pub fn snapshot_into(&self, buf: &mut Vec<u8>) {
+        crate::tensor::io::write_state_record(buf, self.len as u64, &self.s, &self.z);
+    }
+
+    /// Restore a snapshot taken by [`snapshot_into`](Self::snapshot_into)
+    /// on a state with the same `(D, dv)` geometry (same session spec).
+    /// The record is validated in full before anything is written, so a
+    /// corrupt or mismatched record leaves the state untouched.
+    pub fn restore_from(&mut self, bytes: &[u8]) -> Result<()> {
+        let step = crate::tensor::io::read_state_record(bytes, &mut self.s, &mut self.z)
+            .map_err(|e| anyhow!("restore_from: {e}"))?;
+        self.len = step as usize;
+        Ok(())
     }
 
     /// Ingest a whole prompt in chunks (the chunkwise-parallel prefill),
@@ -913,6 +945,67 @@ mod tests {
         assert!(state.is_empty());
         let second = feed(&mut state);
         assert_eq!(first, second, "reset must reproduce the fresh-state outputs");
+    }
+
+    /// A mid-decode snapshot restored into a reset state continues
+    /// bit-identically to the stream that never hibernated — including
+    /// restoring into a state that decoded something else in between.
+    #[test]
+    fn snapshot_restore_continues_bit_identically() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(3)
+            .num_features(16)
+            .causal(true)
+            .seed(4)
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(78);
+        let q = randn(&mut rng, &[8, 3], 0.5);
+        let k = randn(&mut rng, &[8, 3], 0.5);
+        let v = randn(&mut rng, &[8, 2], 1.0);
+        let tok = |i: usize| {
+            (&q.data[i * 3..(i + 1) * 3], &k.data[i * 3..(i + 1) * 3], &v.data[i * 2..(i + 1) * 2])
+        };
+        let mut state = sess.begin_decode(2).unwrap();
+        for i in 0..4 {
+            let (qr, kr, vr) = tok(i);
+            state.append_token(qr, kr, vr).unwrap();
+        }
+        let mut buf = Vec::new();
+        state.snapshot_into(&mut buf);
+        assert_eq!(buf.len(), state.snapshot_len());
+        // never-hibernated continuation
+        let baseline: Vec<Vec<f32>> = (4..8)
+            .map(|i| {
+                let (qr, kr, vr) = tok(i);
+                state.append_token(qr, kr, vr).unwrap()
+            })
+            .collect();
+        // poison the state with unrelated tokens, then restore
+        state.reset();
+        let (qr, kr, vr) = tok(7);
+        state.append_token(qr, kr, vr).unwrap();
+        state.restore_from(&buf).unwrap();
+        assert_eq!(state.len(), 4);
+        let resumed: Vec<Vec<f32>> = (4..8)
+            .map(|i| {
+                let (qr, kr, vr) = tok(i);
+                state.append_token(qr, kr, vr).unwrap()
+            })
+            .collect();
+        for (a, b) in baseline.iter().flatten().zip(resumed.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "restored stream diverged: {a} vs {b}");
+        }
+        // a mismatched-geometry record fails closed
+        let other = AttentionSpec::new(Kernel::Exp)
+            .head_dim(3)
+            .num_features(8)
+            .causal(true)
+            .seed(4)
+            .build()
+            .unwrap();
+        let mut narrow = other.begin_decode(2).unwrap();
+        assert!(narrow.restore_from(&buf).is_err());
     }
 
     #[test]

@@ -56,15 +56,27 @@ pub const DEFAULT_CHUNK: usize = 64;
 /// use), otherwise the width in effect (>= 1; 1 = sequential fold).
 static CHUNK: AtomicUsize = AtomicUsize::new(0);
 
-/// Validate a raw `MACFORMER_CHUNK` value: `0` clamps to 1 (the
-/// sequential fold — a zero-token chunk cannot make progress), malformed
-/// values are `None` (the caller warns and uses [`DEFAULT_CHUNK`]).
-/// Pure, so the policy is unit-testable.
-pub fn parse_chunk_override(raw: &str) -> Option<usize> {
+/// Outcome of validating a raw `MACFORMER_CHUNK` value — mirrors
+/// `parallel::ThreadOverride` so every env knob follows the same
+/// warn-and-clamp policy. Pure, so the policy is unit-testable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkOverride {
+    /// A usable chunk width (>= 1).
+    Count(usize),
+    /// `0` was requested: a zero-token chunk cannot make progress, so
+    /// the caller warns and clamps to 1 (the sequential fold).
+    ClampedToOne,
+    /// Not a number at all (empty, negative, fractional, or beyond
+    /// `usize`): the caller warns and uses [`DEFAULT_CHUNK`].
+    Malformed,
+}
+
+/// Validate a raw `MACFORMER_CHUNK` value. See [`ChunkOverride`].
+pub fn parse_chunk_override(raw: &str) -> ChunkOverride {
     match raw.trim().parse::<usize>() {
-        Ok(0) => Some(1),
-        Ok(c) => Some(c),
-        Err(_) => None,
+        Ok(0) => ChunkOverride::ClampedToOne,
+        Ok(c) => ChunkOverride::Count(c),
+        Err(_) => ChunkOverride::Malformed,
     }
 }
 
@@ -78,8 +90,15 @@ pub fn causal_chunk() -> usize {
         0 => {
             let c = match std::env::var("MACFORMER_CHUNK") {
                 Ok(raw) => match parse_chunk_override(&raw) {
-                    Some(c) => c,
-                    None => {
+                    ChunkOverride::Count(c) => c,
+                    ChunkOverride::ClampedToOne => {
+                        log::warn!(
+                            "MACFORMER_CHUNK={raw:?} requests a zero-token \
+                             chunk; clamping to 1 (the sequential fold)"
+                        );
+                        1
+                    }
+                    ChunkOverride::Malformed => {
                         log::warn!(
                             "MACFORMER_CHUNK={raw:?} is not a chunk width; \
                              using the default of {DEFAULT_CHUNK}"
@@ -168,6 +187,9 @@ pub fn causal_fold_key(phi_k: &[f32], v: &[f32], z: &mut [f32], s: &mut [f32], d
 
 /// Query half: contract `phi(q')` against the running `(S, z)` state
 /// into one normalized `dv`-length output row. See [`causal_fold_key`].
+/// Returns the raw (pre-`eps`) denominator `phi_q . z` so callers can
+/// run a health check on the fold (a non-finite denominator means phi
+/// overflowed and the output row is garbage).
 pub fn causal_fold_query(
     phi_q: &[f32],
     z: &[f32],
@@ -175,7 +197,7 @@ pub fn causal_fold_query(
     dv: usize,
     eps: f32,
     out: &mut [f32],
-) {
+) -> f32 {
     let mut den = 0.0f32;
     out.fill(0.0);
     for (f, &pqf) in phi_q.iter().enumerate() {
@@ -186,6 +208,7 @@ pub fn causal_fold_query(
         simd::axpy(pqf, &s[f * dv..(f + 1) * dv], out);
     }
     simd::div_assign(out, den + eps);
+    den
 }
 
 /// Chunkwise-parallel causal linear attention with a caller-owned
@@ -612,16 +635,22 @@ mod tests {
 
     #[test]
     fn chunk_override_parsing_policy() {
-        // malformed values are rejected (causal_chunk warns + defaults)
-        assert_eq!(parse_chunk_override("abc"), None);
-        assert_eq!(parse_chunk_override(""), None);
-        assert_eq!(parse_chunk_override("-3"), None);
-        assert_eq!(parse_chunk_override("2.5"), None);
-        // zero cannot chunk: clamped to the sequential fold
-        assert_eq!(parse_chunk_override("0"), Some(1));
-        // honest values pass through, whitespace tolerated
-        assert_eq!(parse_chunk_override("1"), Some(1));
-        assert_eq!(parse_chunk_override(" 64 "), Some(64));
+        use ChunkOverride::*;
+        // malformed values are typed (causal_chunk warns + defaults)
+        assert_eq!(parse_chunk_override("abc"), Malformed);
+        assert_eq!(parse_chunk_override(""), Malformed);
+        assert_eq!(parse_chunk_override("-3"), Malformed);
+        assert_eq!(parse_chunk_override("2.5"), Malformed);
+        // beyond usize is malformed, not wrapped
+        assert_eq!(parse_chunk_override("184467440737095516160"), Malformed);
+        // zero cannot chunk: typed clamp so causal_chunk warns about it
+        assert_eq!(parse_chunk_override("0"), ClampedToOne);
+        assert_eq!(parse_chunk_override(" 0 "), ClampedToOne);
+        // honest values pass through, whitespace tolerated; huge-but-
+        // representable widths are legal (the kernel clamps to n)
+        assert_eq!(parse_chunk_override("1"), Count(1));
+        assert_eq!(parse_chunk_override(" 64 "), Count(64));
+        assert_eq!(parse_chunk_override(&usize::MAX.to_string()), Count(usize::MAX));
     }
 
     /// Chunked causal prefill vs the sequential fold: outputs within

@@ -223,6 +223,7 @@ fn cmd_fig3(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use macformer::serve::loadgen::{self, Arrival, LoadConfig};
+    use macformer::serve::{FaultPlan, ResilienceConfig, SpillMode};
     use std::str::FromStr;
     let kernel_flag = args.str_flag("kernel", "exp");
     let kernel = Kernel::from_str(&kernel_flag).map_err(|e| anyhow!("--kernel: {e}"))?;
@@ -230,6 +231,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend = Backend::from_str(&backend_flag).map_err(|e| anyhow!("--backend: {e}"))?;
     let arrival_flag = args.str_flag("arrival", "closed");
     let arrival = Arrival::from_str(&arrival_flag).map_err(|e| anyhow!("--arrival: {e}"))?;
+    // Chaos plan: MACFORMER_FAULT_* env vars seed the defaults, flags
+    // override — so CI can pin a plan in the environment and a human
+    // can still tweak one knob from the command line.
+    let env_plan = FaultPlan::from_env();
+    let faults = FaultPlan {
+        seed: args.u64_flag("fault-seed", env_plan.seed).map_err(|e| anyhow!(e))?,
+        nan_every: args.u64_flag("fault-nan-every", env_plan.nan_every).map_err(|e| anyhow!(e))?,
+        panics: args.u64_flag("fault-panics", env_plan.panics).map_err(|e| anyhow!(e))?,
+        hibernate_every: args
+            .u64_flag("fault-hibernate-every", env_plan.hibernate_every)
+            .map_err(|e| anyhow!(e))?,
+        delay_every: args
+            .u64_flag("fault-delay-every", env_plan.delay_every)
+            .map_err(|e| anyhow!(e))?,
+        delay_ticks: args
+            .u64_flag("fault-delay-ticks", env_plan.delay_ticks)
+            .map_err(|e| anyhow!(e))?,
+    };
+    let spill = match args.opt_flag("spill-dir") {
+        Some(dir) => SpillMode::Disk(std::path::PathBuf::from(dir)),
+        None => SpillMode::Memory,
+    };
+    let resilience = ResilienceConfig {
+        idle_hibernate_ticks: args.u64_flag("idle-hibernate-ticks", 0).map_err(|e| anyhow!(e))?,
+        hibernate_expire_ticks: args
+            .u64_flag("hibernate-expire-ticks", 0)
+            .map_err(|e| anyhow!(e))?,
+        output_deadline_ticks: args
+            .u64_flag("output-deadline-ticks", 0)
+            .map_err(|e| anyhow!(e))?,
+        shed_pending: args.usize_flag("shed-pending", 0).map_err(|e| anyhow!(e))?,
+        spill,
+    };
     let cfg = LoadConfig {
         streams: args.usize_flag("streams", 64).map_err(|e| anyhow!(e))?,
         tokens: args.usize_flag("tokens", 128).map_err(|e| anyhow!(e))?,
@@ -243,6 +277,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         min_batch: args.usize_flag("min-batch", 2).map_err(|e| anyhow!(e))?,
         seed: args.u64_flag("seed", 7).map_err(|e| anyhow!(e))?,
         verify: args.switch("verify"),
+        faults,
+        resilience,
     };
     let out_json = args.opt_flag("out-json");
     args.check_unknown().map_err(|e| anyhow!(e))?;
@@ -251,11 +287,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(path) = out_json {
         std::fs::write(&path, report.to_json().to_string())?;
     }
-    if report.verified == Some(false) || report.stream_errors > 0 {
+    // Planned chaos casualties (faulted_streams) are not a failure;
+    // poison escaping isolation or any unexpected stream error is.
+    if report.verified == Some(false) || report.stream_errors > 0 || report.poisoned_streams > 0 {
         bail!(
-            "serve run degraded: verified {:?}, {} stream errors",
+            "serve run degraded: verified {:?}, {} stream errors, {} poisoned streams",
             report.verified,
-            report.stream_errors
+            report.stream_errors,
+            report.poisoned_streams
         );
     }
     Ok(())

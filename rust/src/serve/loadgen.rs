@@ -17,10 +17,19 @@
 //!   phases (offset by stream index): ragged occupancy, the
 //!   micro-batch size breathing tick to tick.
 //!
+//! The drive loop runs on the resilience [`Supervisor`], so a
+//! [`LoadConfig::resilience`] config exercises hibernation/deadline
+//! behavior under load, and a seeded [`LoadConfig::faults`] plan turns
+//! the run into a **deterministic chaos test**: NaN tokens (must be
+//! screened), forced fold panics (planned casualties, isolated from
+//! the rest of the batch), forced hibernate/restore cycles (must be
+//! bit-exact), and stalled clients (exercise idle deadlines).
+//!
 //! With [`LoadConfig::verify`] the run is re-decoded stream by stream
 //! through the plain single-stream [`CausalState`] path and compared
-//! **bit for bit** — the acceptance criterion that micro-batched
-//! serving changes throughput, never outputs.
+//! **bit for bit** — including every surviving prefix of a chaos run.
+//! The acceptance criterion: micro-batched serving, hibernation, and
+//! fault isolation change throughput, never outputs.
 //!
 //! [`CausalState`]: crate::attn::CausalState
 
@@ -34,10 +43,9 @@ use crate::attn::{AttentionSpec, Backend, Kernel};
 use crate::util::json::Value;
 use crate::util::rng::Rng;
 
-use super::pool::{StreamId, StreamPool};
-use super::scheduler::Scheduler;
+use super::resilience::{FaultPlan, ResilienceConfig, SessionId, Supervisor};
 use super::telemetry::Telemetry;
-use super::ServeConfig;
+use super::{ServeConfig, ServeError};
 
 /// When streams enter (and pause) the closed loop. See the
 /// [`crate::serve::loadgen`] module docs.
@@ -84,7 +92,8 @@ impl FromStr for Arrival {
 }
 
 /// One load scenario: how many streams, how much work per stream, the
-/// attention config they share, and the arrival pattern.
+/// attention config they share, the arrival pattern, and (for chaos
+/// runs) the fault plan + resilience knobs.
 #[derive(Debug, Clone)]
 pub struct LoadConfig {
     pub streams: usize,
@@ -92,12 +101,13 @@ pub struct LoadConfig {
     pub tokens: usize,
     /// Prompt tokens chunk-prefilled at admission, before the decode
     /// loop (0 = no prompt). Prefill goes through
-    /// [`Scheduler::prefill`] — chunkwise GEMM compute, not `n`
-    /// single-token ticks — and with [`LoadConfig::verify`] the decode
-    /// outputs after the prompt must still be **bit-identical** to a
-    /// single-stream `append_token` replay of prompt + decode (the
-    /// prefilled state is bit-compatible by construction); the prompt's
-    /// own last output carries the chunked 1e-5 contract.
+    /// [`Scheduler::prefill`](super::Scheduler::prefill) — chunkwise
+    /// GEMM compute, not `n` single-token ticks — and with
+    /// [`LoadConfig::verify`] the decode outputs after the prompt must
+    /// still be **bit-identical** to a single-stream `append_token`
+    /// replay of prompt + decode (the prefilled state is bit-compatible
+    /// by construction); the prompt's own last output carries the
+    /// chunked 1e-5 contract.
     pub prompt: usize,
     pub head_dim: usize,
     pub dv: usize,
@@ -110,8 +120,12 @@ pub struct LoadConfig {
     pub min_batch: usize,
     pub seed: u64,
     /// Re-decode every stream through the single-stream path and
-    /// require bit-identical outputs.
+    /// require bit-identical outputs (surviving prefixes included).
     pub verify: bool,
+    /// Deterministic chaos schedule ([`FaultPlan::none`] = clean run).
+    pub faults: FaultPlan,
+    /// Supervisor deadline/governor/spill knobs (default = all off).
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for LoadConfig {
@@ -129,6 +143,8 @@ impl Default for LoadConfig {
             min_batch: 2,
             seed: 7,
             verify: true,
+            faults: FaultPlan::none(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -157,6 +173,14 @@ pub struct LoadReport {
     /// Streams that hit an unexpected `ServeError` mid-run (0 on any
     /// healthy run; the CI smoke gate asserts this).
     pub stream_errors: u64,
+    /// Planned chaos casualties: streams killed by an injected fold
+    /// panic, isolated by the supervisor. Their surviving output
+    /// prefixes still verify bit-identically.
+    pub faulted_streams: u64,
+    /// Streams whose outputs diverged from the single-stream replay
+    /// (or that failed unexpectedly): poison that escaped isolation.
+    /// The chaos CI gate asserts 0.
+    pub poisoned_streams: u64,
     /// `Some(true)` when every re-decoded output matched bit for bit;
     /// `None` when verification was not requested.
     pub verified: Option<bool>,
@@ -186,6 +210,7 @@ impl LoadReport {
              {:>10.0} tokens/sec  ({} tokens in {:.3}s, {} stream errors)\n\
              latency   p50 {:.6}s  p90 {:.6}s  p99 {:.6}s  max {:.6}s\n\
              occupancy mean {:.2} max {}  |  queue mean {:.2} max {}  |  ticks {} ({} seq, {} idle)\n\
+             resil     {} faulted (planned), {} poisoned | hibernations {} restores {} shed {}\n\
              verify    {}",
             self.streams,
             self.tokens_per_stream,
@@ -211,6 +236,11 @@ impl LoadReport {
             self.telemetry.ticks(),
             self.telemetry.sequential_ticks(),
             self.telemetry.idle_ticks(),
+            self.faulted_streams,
+            self.poisoned_streams,
+            self.telemetry.hibernations(),
+            self.telemetry.restores(),
+            self.telemetry.shed(),
             verified,
         )
     }
@@ -231,6 +261,12 @@ impl LoadReport {
             ("tokens_total", Value::num(self.tokens_total as f64)),
             ("tokens_per_sec", Value::num(self.tokens_per_sec)),
             ("stream_errors", Value::num(self.stream_errors as f64)),
+            ("faulted_streams", Value::num(self.faulted_streams as f64)),
+            ("poisoned_streams", Value::num(self.poisoned_streams as f64)),
+            // duplicated from the nested telemetry block so the chaos
+            // CI gate can grep them at the top level
+            ("hibernations", Value::num(self.telemetry.hibernations() as f64)),
+            ("restores", Value::num(self.telemetry.restores() as f64)),
             (
                 "verified",
                 match self.verified {
@@ -274,8 +310,9 @@ fn generate_tokens(cfg: &LoadConfig) -> Vec<Vec<f32>> {
 }
 
 /// Pre-generate every stream's prompt as contiguous `(q, k, v)` row
-/// sets (the layout [`Scheduler::prefill`] takes), deterministic per
-/// stream so verification replays the identical prompt.
+/// sets (the layout [`Scheduler::prefill`](super::Scheduler::prefill)
+/// takes), deterministic per stream so verification replays the
+/// identical prompt.
 fn generate_prompts(cfg: &LoadConfig) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
     (0..cfg.streams)
         .map(|i| {
@@ -319,26 +356,39 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         max_pending: 0,
         min_batch: cfg.min_batch,
         dv: cfg.dv,
+        screen_inputs: true,
     };
-    let mut pool = StreamPool::new(&session, serve_cfg)?;
-    let mut scheduler = Scheduler::new();
+    let mut sup = Supervisor::new(&session, serve_cfg, cfg.resilience.clone())?;
 
     let stride = token_stride(cfg);
     let (d, dv) = (cfg.head_dim, cfg.dv);
+    let plan = cfg.faults;
     let tokens = generate_tokens(cfg);
     let prompts = generate_prompts(cfg);
     let mut outs: Vec<Vec<f32>> = (0..cfg.streams).map(|_| vec![0.0; cfg.tokens * dv]).collect();
     // last prompt position's output per stream (chunked prefill)
     let mut prompt_last: Vec<Vec<f32>> = (0..cfg.streams).map(|_| vec![0.0; dv]).collect();
-    let mut ids: Vec<Option<StreamId>> = vec![None; cfg.streams];
+    let mut ids: Vec<Option<SessionId>> = vec![None; cfg.streams];
     let mut produced = vec![0usize; cfg.streams];
     let mut in_flight = vec![false; cfg.streams];
     let mut failed = vec![false; cfg.streams];
+    // planned chaos casualties (injected fold panics) — tracked apart
+    // from `failed`, which is unexpected breakage
+    let mut faulted = vec![false; cfg.streams];
+    let mut expect_fault = vec![false; cfg.streams];
+    // stalled-client injection: token index delayed, and until when
+    let mut delayed_token: Vec<Option<usize>> = vec![None; cfg.streams];
+    let mut delayed_until = vec![0u64; cfg.streams];
+    let mut nan_q = vec![0.0f32; d];
     let mut stream_errors = 0u64;
     let mut done = 0usize;
     let target = cfg.streams * cfg.tokens;
     // generous livelock guard: bursty gaps are <= 4 ticks per token
-    let max_ticks = 16 * (cfg.tokens + cfg.streams) + 1024;
+    let mut max_ticks = 16 * (cfg.tokens + cfg.streams) + 1024;
+    if plan.delay_every != 0 {
+        // stalled-client injections push tokens past their usual tick
+        max_ticks += 2 * cfg.tokens * plan.delay_ticks as usize + 64;
+    }
 
     let t0 = Instant::now();
     let mut tick_no = 0usize;
@@ -346,7 +396,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         if tick_no >= max_ticks {
             bail!("loadgen: no progress after {max_ticks} ticks ({done}/{target} tokens served)");
         }
-        // admission
+        // admission (a SessionId is sticky: it survives hibernation)
         for i in 0..cfg.streams {
             if ids[i].is_some() || failed[i] {
                 continue;
@@ -358,7 +408,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
             if !due {
                 continue;
             }
-            match pool.admit() {
+            match sup.open() {
                 Ok(id) => {
                     ids[i] = Some(id);
                     if cfg.prompt > 0 {
@@ -366,11 +416,9 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                         // the prompt's last output so the closed loop
                         // can start submitting decode tokens
                         let (pq, pk, pv) = &prompts[i];
-                        let ingested = scheduler
-                            .prefill(&mut pool, id, pq, pk, pv)
-                            .and_then(|n| {
-                                pool.take_output(id, &mut prompt_last[i]).map(|()| n)
-                            });
+                        let ingested = sup.prefill(id, pq, pk, pv).and_then(|n| {
+                            sup.take_output(id, &mut prompt_last[i]).map(|()| n)
+                        });
                         if let Err(e) = ingested {
                             log::warn!("loadgen: stream {i} prefill failed: {e}");
                             stream_errors += 1;
@@ -380,7 +428,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                     }
                 }
                 Err(e) => {
-                    log::warn!("loadgen: stream {i} admit failed: {e}");
+                    log::warn!("loadgen: stream {i} open failed: {e}");
                     stream_errors += 1;
                     failed[i] = true;
                     done += cfg.tokens - produced[i];
@@ -390,15 +438,59 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         // submit phase (closed loop: at most one token in flight each)
         for i in 0..cfg.streams {
             let Some(id) = ids[i] else { continue };
-            if failed[i] || in_flight[i] || produced[i] >= cfg.tokens {
+            if failed[i] || faulted[i] || in_flight[i] || produced[i] >= cfg.tokens {
                 continue;
             }
             if !may_submit(cfg.arrival, tick_no, i) {
                 continue;
             }
-            let row = &tokens[i][produced[i] * stride..(produced[i] + 1) * stride];
-            match pool.submit(id, &row[..d], &row[d..2 * d], &row[2 * d..]) {
-                Ok(()) => in_flight[i] = true,
+            if (tick_no as u64) < delayed_until[i] {
+                continue;
+            }
+            let t = produced[i];
+            let delay = plan.submit_delay(i as u64, t as u64);
+            if delay > 0 && delayed_token[i] != Some(t) {
+                // stalled client: this token waits out its delay (each
+                // token stalls at most once)
+                delayed_token[i] = Some(t);
+                delayed_until[i] = tick_no as u64 + delay;
+                continue;
+            }
+            let row = &tokens[i][t * stride..(t + 1) * stride];
+            if plan.inject_nan(i as u64, t as u64) {
+                // poisoned copy first: the input screen must reject it
+                // with the stream untouched; the real token follows
+                nan_q.copy_from_slice(&row[..d]);
+                nan_q[t % d] = f32::NAN;
+                match sup.submit(id, &nan_q, &row[d..2 * d], &row[2 * d..]) {
+                    Err(ServeError::NonFinite { .. }) => {}
+                    // governor shed beat the screen: retry the whole
+                    // token (poisoned copy first) next tick
+                    Err(e) if e.is_retryable() => continue,
+                    other => {
+                        log::warn!(
+                            "loadgen: stream {i} NaN injection was not screened: {other:?}"
+                        );
+                        stream_errors += 1;
+                        failed[i] = true;
+                        done += cfg.tokens - produced[i];
+                        continue;
+                    }
+                }
+            }
+            match sup.submit(id, &row[..d], &row[d..2 * d], &row[2 * d..]) {
+                Ok(()) => {
+                    in_flight[i] = true;
+                    if plan.inject_panic(i as u64, t as u64, cfg.tokens as u64) {
+                        // planned casualty: the tick's guarded fold
+                        // isolates this stream from the batch
+                        sup.arm_fault(id).expect("stream is active after submit");
+                        expect_fault[i] = true;
+                    }
+                }
+                Err(e) if e.is_retryable() => {
+                    // governor shed / backpressure: retry next tick
+                }
                 Err(e) => {
                     log::warn!("loadgen: stream {i} submit failed: {e}");
                     stream_errors += 1;
@@ -407,7 +499,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                 }
             }
         }
-        scheduler.tick(&mut pool)?;
+        sup.tick()?;
         // collect phase
         for i in 0..cfg.streams {
             if !in_flight[i] {
@@ -415,11 +507,26 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
             }
             let id = ids[i].expect("in-flight stream has an id");
             let t = produced[i];
-            match pool.take_output(id, &mut outs[i][t * dv..(t + 1) * dv]) {
+            match sup.take_output(id, &mut outs[i][t * dv..(t + 1) * dv]) {
                 Ok(()) => {
                     produced[i] = t + 1;
                     in_flight[i] = false;
                     done += 1;
+                    if plan.force_hibernate(i as u64, t as u64) {
+                        // forced spill: the next submit must restore
+                        // this stream bit-identically
+                        if let Err(e) = sup.hibernate(id) {
+                            log::warn!("loadgen: stream {i} forced hibernate failed: {e}");
+                            stream_errors += 1;
+                        }
+                    }
+                }
+                Err(ServeError::Faulted) if expect_fault[i] => {
+                    // the planned casualty landed; its produced prefix
+                    // is still verified below
+                    faulted[i] = true;
+                    in_flight[i] = false;
+                    done += cfg.tokens - produced[i];
                 }
                 Err(e) => {
                     log::warn!("loadgen: stream {i} take_output failed: {e}");
@@ -437,17 +544,19 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
     // telemetry block reflects the drive loop only (the PERF.md
     // methodology); `Telemetry::to_json` is time-independent, so the
     // snapshot serializes identically whenever the report is written.
-    let telemetry = pool.telemetry().clone();
+    let telemetry = sup.telemetry().clone();
     for (i, id) in ids.iter().enumerate() {
         if let Some(id) = id {
-            if pool.retire(*id).is_err() {
-                log::warn!("loadgen: stream {i} retire failed");
+            if sup.close(*id).is_err() {
+                log::warn!("loadgen: stream {i} close failed");
                 stream_errors += 1;
             }
         }
     }
 
     let tokens_total: u64 = produced.iter().map(|&p| p as u64).sum();
+    let faulted_streams = faulted.iter().filter(|&&f| f).count() as u64;
+    let mut poisoned_streams = failed.iter().filter(|&&f| f).count() as u64;
     let (verified, max_abs_diff, prefill_max_scaled_diff) = if cfg.verify {
         let mut ok = stream_errors == 0;
         let mut max_diff = 0.0f64;
@@ -462,7 +571,10 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
             // the plain single-stream append path. The prompt's last
             // output carries the chunked kernel's 1e-5 contract; every
             // decode output after it must be bit-identical (the
-            // prefilled state is bit-compatible by construction).
+            // prefilled state is bit-compatible by construction). For
+            // chaos casualties only the produced prefix exists, and it
+            // must match exactly like any survivor's full run.
+            let mut stream_poisoned = false;
             let mut state = session.begin_decode(dv)?;
             let (pq, pk, pv) = &prompts[i];
             for t in 0..cfg.prompt {
@@ -483,6 +595,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                     prefill_diff = prefill_diff.max(diff);
                     if !diff.is_finite() || diff > 1e-5 {
                         ok = false;
+                        stream_poisoned = true;
                     }
                 }
             }
@@ -492,9 +605,13 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                 for (a, b) in outs[i][t * dv..(t + 1) * dv].iter().zip(&row) {
                     if a.to_bits() != b.to_bits() {
                         ok = false;
+                        stream_poisoned = true;
                         max_diff = max_diff.max((a - b).abs() as f64);
                     }
                 }
+            }
+            if stream_poisoned {
+                poisoned_streams += 1;
             }
         }
         (Some(ok), max_diff, prefill_diff)
@@ -517,6 +634,8 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         tokens_total,
         tokens_per_sec: if elapsed > 0.0 { tokens_total as f64 / elapsed } else { 0.0 },
         stream_errors,
+        faulted_streams,
+        poisoned_streams,
         verified,
         max_abs_diff,
         prefill_max_scaled_diff,
@@ -557,8 +676,11 @@ mod tests {
             assert_eq!(report.stream_errors, 0, "{arrival}");
             assert_eq!(report.verified, Some(true), "{arrival}");
             assert_eq!(report.max_abs_diff, 0.0, "{arrival}");
+            assert_eq!(report.faulted_streams, 0, "{arrival}");
+            assert_eq!(report.poisoned_streams, 0, "{arrival}");
             let json = report.to_json();
             assert_eq!(json.get("stream_errors").as_usize(), Some(0));
+            assert_eq!(json.get("poisoned_streams").as_usize(), Some(0));
             assert!(report.render().contains("tokens/sec"));
         }
     }
@@ -579,6 +701,68 @@ mod tests {
             let json = report.to_json();
             assert_eq!(json.get("prompt_tokens").as_usize(), Some(7));
         }
+    }
+
+    /// The full chaos gauntlet on one small run: NaN tokens screened,
+    /// two planned panic casualties isolated, forced hibernate/restore
+    /// cycles, stalled clients — and every surviving output prefix
+    /// still bit-identical to a fault-free single-stream decode.
+    #[test]
+    fn chaos_run_keeps_survivors_bit_identical() {
+        let faults = FaultPlan {
+            seed: 42,
+            nan_every: 2,
+            panics: 2,
+            hibernate_every: 2,
+            delay_every: 4,
+            delay_ticks: 3,
+        };
+        let report = run(&LoadConfig { faults, ..tiny(Arrival::Closed) }).unwrap();
+        assert_eq!(report.stream_errors, 0);
+        assert_eq!(report.faulted_streams, 2, "exactly the planned casualties");
+        assert_eq!(report.poisoned_streams, 0, "no poison escaped isolation");
+        assert_eq!(report.verified, Some(true));
+        assert_eq!(report.max_abs_diff, 0.0);
+        // the two killed streams produced partial prefixes
+        assert!(report.tokens_total < 30, "{}", report.tokens_total);
+        assert!(report.tokens_total > 0);
+        assert_eq!(report.telemetry.faults(), 2);
+        assert_eq!(report.telemetry.quarantines(), 0);
+        assert!(report.telemetry.nonfinite_rejects() > 0, "NaN injections were screened");
+        assert!(report.telemetry.hibernations() > 0);
+        assert!(report.telemetry.restores() > 0);
+        let json = report.to_json();
+        assert_eq!(json.get("faulted_streams").as_usize(), Some(2));
+        assert_eq!(json.get("poisoned_streams").as_usize(), Some(0));
+        assert!(json.get("restores").as_usize().unwrap() > 0);
+    }
+
+    /// Chaos + resilience deadlines + governor together: stalled
+    /// clients trip the idle-hibernate sweep, the governor sheds under
+    /// the tightened queue bound, and the run still completes with
+    /// bit-identical survivors.
+    #[test]
+    fn chaos_with_deadlines_and_governor_still_verifies() {
+        let faults = FaultPlan {
+            seed: 9,
+            nan_every: 0,
+            panics: 1,
+            hibernate_every: 3,
+            delay_every: 3,
+            delay_ticks: 6,
+        };
+        let resilience = ResilienceConfig {
+            idle_hibernate_ticks: 2,
+            shed_pending: 4,
+            ..ResilienceConfig::default()
+        };
+        let report =
+            run(&LoadConfig { faults, resilience, ..tiny(Arrival::Closed) }).unwrap();
+        assert_eq!(report.stream_errors, 0);
+        assert_eq!(report.faulted_streams, 1);
+        assert_eq!(report.poisoned_streams, 0);
+        assert_eq!(report.verified, Some(true));
+        assert!(report.telemetry.restores() > 0);
     }
 
     #[test]

@@ -28,14 +28,57 @@
 //!   parallel GEMM compute over `MACFORMER_CHUNK`-token chunks instead
 //!   of `n` single-token ticks, leaving the stream's `(S, z)` state
 //!   bit-identical to token-by-token submission.
+//! * [`resilience`] — the [`Supervisor`] wraps the pool + scheduler
+//!   with stream hibernation (snapshot/restore of the `(S, z)` state
+//!   through the versioned `tensor::io` record, to RAM or a spill
+//!   directory), tick-deadline enforcement, an overload governor, and
+//!   a seeded deterministic [`FaultPlan`] for chaos testing.
 //! * [`Telemetry`] — per-token latency histogram (log2 buckets),
-//!   tokens/sec, batch occupancy, queue depth, and rejection counters,
-//!   owned by the pool and updated by the scheduler.
+//!   tokens/sec, batch occupancy, queue depth, rejection counters, and
+//!   the resilience counters (hibernations, restores, evictions,
+//!   expirations, shed, faults, quarantines), owned by the pool and
+//!   updated by the scheduler/supervisor.
 //! * [`loadgen`] — the closed-loop load generator behind the
 //!   `macformer serve` subcommand and the `serve_load` bench
 //!   (`BENCH_serve.json`): configurable stream count, tokens per
-//!   stream, arrival pattern, kernel, and backend, with optional
-//!   bit-exact verification against independent single-stream decodes.
+//!   stream, arrival pattern, kernel, backend, and fault plan, with
+//!   optional bit-exact verification against independent single-stream
+//!   decodes.
+//!
+//! # Stream lifecycle state machine
+//!
+//! A supervised stream moves through these states (tracked per
+//! [`SessionId`](resilience::SessionId); the plain pool knows only
+//! "admitted or not"):
+//!
+//! ```text
+//!               open()                    idle deadline / hibernate()
+//!   (vacant) ──────────► Active ───────────────────────► Hibernated
+//!               ▲          │ ▲                                │
+//!     restore on│submit ───┘ └────────────────────────────────┘
+//!               │          │                         hibernate-expire
+//!               │          │ fold panic / non-finite den       │
+//!               │          ▼                                   ▼
+//!               │       Faulted                            Expired
+//!               │          │                                   │
+//!               └──────────┴──────────── close() ──────────────┘
+//!                                     (slot/arena reclaimed)
+//! ```
+//!
+//! * **Active** — holds a pool slot; submits and ticks flow normally.
+//! * **Hibernated** — the `(S, z, step)` state lives in the spill arena
+//!   (or on disk); the pool slot is free for other streams. The next
+//!   [`submit`](resilience::Supervisor::submit) transparently re-admits
+//!   and restores, **bit-identically** — so pool capacity bounds
+//!   *active* streams, not total users.
+//! * **Faulted** — a poisoned fold (panic or non-finite denominator)
+//!   was isolated: the slot was retired before the bad state could
+//!   propagate; the stream answers [`ServeError::Faulted`] until
+//!   closed. Inputs with non-finite q/k/v never get this far — they
+//!   are rejected at submit with [`ServeError::NonFinite`], leaving
+//!   the stream healthy ("quarantine, don't poison").
+//! * **Expired** — a deadline fired (untaken output, or hibernated too
+//!   long); the stream answers [`ServeError::Expired`] until closed.
 //!
 //! # Lifecycle
 //!
@@ -72,11 +115,13 @@ use std::fmt;
 
 pub mod loadgen;
 pub mod pool;
+pub mod resilience;
 pub mod scheduler;
 pub mod telemetry;
 
 pub use loadgen::{Arrival, LoadConfig, LoadReport};
 pub use pool::{StreamId, StreamPool};
+pub use resilience::{FaultPlan, ResilienceConfig, SessionId, SpillMode, StreamStatus, Supervisor};
 pub use scheduler::{Scheduler, TickStats};
 pub use telemetry::Telemetry;
 
@@ -96,12 +141,20 @@ pub struct ServeConfig {
     pub min_batch: usize,
     /// Value/output row length shared by every stream in the pool.
     pub dv: usize,
+    /// Screen submitted q/k/v rows (and prompt row sets) for non-finite
+    /// values before they can reach a fold. A rejected token is a typed
+    /// [`ServeError::NonFinite`]; the stream's state is untouched.
+    /// Costs one pass over `2*d + dv` floats per token — negligible
+    /// next to the phi compute — and is on by default because a single
+    /// NaN poisons a stream's `(S, z)` state forever.
+    pub screen_inputs: bool,
 }
 
 impl ServeConfig {
-    /// A config with `max_pending = max_streams` and `min_batch = 2`.
+    /// A config with `max_pending = max_streams`, `min_batch = 2`, and
+    /// input screening on.
     pub fn new(max_streams: usize, dv: usize) -> ServeConfig {
-        ServeConfig { max_streams, max_pending: 0, min_batch: 2, dv }
+        ServeConfig { max_streams, max_pending: 0, min_batch: 2, dv, screen_inputs: true }
     }
 
     /// The effective submit-queue bound (see [`ServeConfig::max_pending`]).
@@ -119,9 +172,9 @@ impl ServeConfig {
     }
 }
 
-/// Why the pool rejected a request. Every admission-control and
-/// stale-handle failure is one of these — reject-with-reason, never a
-/// panic.
+/// Why the pool rejected a request. Every admission-control,
+/// stale-handle, and stream-health failure is one of these —
+/// reject-with-reason, never a panic.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
     /// [`StreamPool::admit`] with every slot occupied.
@@ -129,10 +182,15 @@ pub enum ServeError {
         /// The pool's `max_streams`.
         capacity: usize,
     },
-    /// [`StreamPool::submit`] with the tick queue at its bound.
+    /// [`StreamPool::submit`] with the tick queue at its bound, or the
+    /// supervisor's overload governor shedding newest-first.
     Backpressure {
-        /// The pool's effective `max_pending`.
+        /// The bound that was hit (the pool's effective `max_pending`,
+        /// or the governor's shed threshold).
         max_pending: usize,
+        /// Backoff hint: the queue drains at tick granularity, so
+        /// retrying sooner than this many ticks cannot succeed.
+        retry_after_ticks: u64,
     },
     /// The [`StreamId`] does not name a live stream (never admitted,
     /// already retired, or a stale generation after slot reuse).
@@ -154,8 +212,60 @@ pub enum ServeError {
         /// Submitted length.
         got: usize,
     },
+    /// A submitted row contains NaN/inf. The token was rejected before
+    /// any fold, so the stream's `(S, z)` state is untouched — resubmit
+    /// a finite token and the stream continues unharmed.
+    NonFinite {
+        /// Which row (`"q"`, `"k"`, `"v"`, or the prompt equivalents).
+        what: &'static str,
+    },
+    /// A supervisor deadline fired (untaken output or hibernated too
+    /// long); the stream's state has been reclaimed.
+    Expired,
+    /// The stream's fold panicked or produced a non-finite denominator;
+    /// the slot was retired before the poison could spread. Terminal
+    /// for the stream.
+    Faulted,
     /// The underlying session rejected the stream (backend/spec error).
     Session(String),
+}
+
+impl ServeError {
+    /// Whether the caller can expect the same request to succeed later
+    /// without changing it: capacity/timing conditions are retryable,
+    /// bad inputs and dead streams are fatal. Stable contract for the
+    /// future network frontend's wire mapping.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            ServeError::PoolFull { .. }
+            | ServeError::Backpressure { .. }
+            | ServeError::StreamBusy
+            | ServeError::NoOutput => true,
+            ServeError::UnknownStream
+            | ServeError::BadRow { .. }
+            | ServeError::NonFinite { .. }
+            | ServeError::Expired
+            | ServeError::Faulted
+            | ServeError::Session(_) => false,
+        }
+    }
+
+    /// A stable machine-readable token per variant (wire code for the
+    /// future network frontend; also the grep key in chaos logs).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::PoolFull { .. } => "pool_full",
+            ServeError::Backpressure { .. } => "backpressure",
+            ServeError::UnknownStream => "unknown_stream",
+            ServeError::StreamBusy => "stream_busy",
+            ServeError::NoOutput => "no_output",
+            ServeError::BadRow { .. } => "bad_row",
+            ServeError::NonFinite { .. } => "non_finite",
+            ServeError::Expired => "expired",
+            ServeError::Faulted => "faulted",
+            ServeError::Session(_) => "session",
+        }
+    }
 }
 
 impl fmt::Display for ServeError {
@@ -164,8 +274,12 @@ impl fmt::Display for ServeError {
             ServeError::PoolFull { capacity } => {
                 write!(f, "pool full: all {capacity} stream slots are admitted")
             }
-            ServeError::Backpressure { max_pending } => {
-                write!(f, "backpressure: {max_pending} tokens already queued for this tick")
+            ServeError::Backpressure { max_pending, retry_after_ticks } => {
+                write!(
+                    f,
+                    "backpressure: {max_pending} tokens already queued for this tick \
+                     (retry after {retry_after_ticks} ticks)"
+                )
             }
             ServeError::UnknownStream => {
                 write!(f, "unknown stream: the id is not live (retired or never admitted)")
@@ -178,6 +292,15 @@ impl fmt::Display for ServeError {
             }
             ServeError::BadRow { what, expected, got } => {
                 write!(f, "bad {what} row: expected length {expected}, got {got}")
+            }
+            ServeError::NonFinite { what } => {
+                write!(f, "non-finite {what} row: token rejected before the fold (stream intact)")
+            }
+            ServeError::Expired => {
+                write!(f, "stream expired: a deadline fired and the state was reclaimed")
+            }
+            ServeError::Faulted => {
+                write!(f, "stream faulted: the fold was isolated and the slot retired")
             }
             ServeError::Session(reason) => write!(f, "session rejected the stream: {reason}"),
         }

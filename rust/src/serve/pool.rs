@@ -30,6 +30,18 @@ pub struct StreamId {
     pub(super) gen: u32,
 }
 
+/// How a stream's fold went bad — recorded by the scheduler's fault
+/// isolation, consumed when the slot is retired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum FaultKind {
+    /// The fold panicked (caught; the payload never crossed the tick).
+    Panic,
+    /// The denominator-health / phi screening check tripped before the
+    /// bad values could enter (or after they produced a non-finite
+    /// denominator in) the `(S, z)` state.
+    Quarantine,
+}
+
 /// One stream slot. Staging buffers are sized once at pool build
 /// (`head_dim` / `dv` rows) and never reallocated.
 pub(super) struct Slot<'s> {
@@ -47,6 +59,12 @@ pub(super) struct Slot<'s> {
     pub(super) v: Vec<f32>,
     pub(super) out: Vec<f32>,
     pub(super) submitted_at: Instant,
+    /// Chaos hook: the next fold for this slot panics deliberately
+    /// (exercises the scheduler's panic isolation deterministically).
+    pub(super) fault_armed: bool,
+    /// Set by the tick's fold phase when this stream's fold was
+    /// isolated; the tick retires the slot before returning.
+    pub(super) fault: Option<FaultKind>,
 }
 
 /// The pool of decode streams behind one shared [`AttentionSession`].
@@ -94,6 +112,8 @@ impl<'s> StreamPool<'s> {
                 v: vec![0.0; cfg.dv],
                 out: vec![0.0; cfg.dv],
                 submitted_at: now,
+                fault_armed: false,
+                fault: None,
             })
             .collect();
         let free = (0..cfg.max_streams as u32).rev().collect();
@@ -167,6 +187,11 @@ impl<'s> StreamPool<'s> {
         slot.active = true;
         slot.pending = false;
         slot.has_output = false;
+        slot.fault_armed = false;
+        slot.fault = None;
+        // a reused slot must not inherit the previous stream's submit
+        // timestamp into latency accounting (also cleared on retire)
+        slot.submitted_at = Instant::now();
         self.active += 1;
         self.tel.record_admit();
         Ok(StreamId { slot: si, gen: slot.gen })
@@ -176,6 +201,13 @@ impl<'s> StreamPool<'s> {
     /// output is dropped). The handle is dead afterwards.
     pub fn retire(&mut self, id: StreamId) -> Result<(), ServeError> {
         let si = self.resolve(id)?;
+        self.release_slot(si);
+        Ok(())
+    }
+
+    /// Shared retire bookkeeping: drop pending/output, kill the handle
+    /// generation, clear latency/fault residue, free the slot.
+    fn release_slot(&mut self, si: usize) {
         let slot = &mut self.slots[si];
         if slot.pending {
             self.pending -= 1;
@@ -183,9 +215,29 @@ impl<'s> StreamPool<'s> {
         slot.active = false;
         slot.pending = false;
         slot.has_output = false;
+        slot.fault_armed = false;
+        slot.fault = None;
+        slot.submitted_at = Instant::now();
         slot.gen = slot.gen.wrapping_add(1);
         self.active -= 1;
         self.free.push(si as u32);
+    }
+
+    /// Retire a slot whose fold was isolated this tick (see
+    /// [`Slot::fault`]): fault counters, then the normal release path.
+    /// The caller (the scheduler's fault reconciliation) has already
+    /// left `slot.pending` set, so the queue bookkeeping balances here.
+    pub(super) fn retire_faulted(&mut self, si: usize, kind: FaultKind) {
+        self.tel.record_fault(kind == FaultKind::Quarantine);
+        self.release_slot(si);
+    }
+
+    /// Arm the chaos hook: the next fold for `id` panics deliberately
+    /// inside the tick, exercising the scheduler's panic isolation.
+    /// Deterministic fault injection only — never fires on its own.
+    pub fn arm_fault(&mut self, id: StreamId) -> Result<(), ServeError> {
+        let si = self.resolve(id)?;
+        self.slots[si].fault_armed = true;
         Ok(())
     }
 
@@ -207,7 +259,11 @@ impl<'s> StreamPool<'s> {
         }
         if self.pending >= self.cfg.pending_bound() {
             self.tel.record_submit_rejected();
-            return Err(ServeError::Backpressure { max_pending: self.cfg.pending_bound() });
+            // the queue drains every tick, so one tick is the honest hint
+            return Err(ServeError::Backpressure {
+                max_pending: self.cfg.pending_bound(),
+                retry_after_ticks: 1,
+            });
         }
         let d = self.session.spec().head_dim;
         let check = |what: &'static str, got: usize, expected: usize| {
@@ -220,6 +276,17 @@ impl<'s> StreamPool<'s> {
         check("q", q.len(), d)?;
         check("k", k.len(), d)?;
         check("v", v.len(), self.cfg.dv)?;
+        if self.cfg.screen_inputs {
+            // reject-before-fold: a NaN/inf anywhere in the token would
+            // poison the (S, z) accumulators irreversibly (ppSBN needs
+            // finite inputs); the stream stays healthy after this error
+            for (what, row) in [("q", q), ("k", k), ("v", v)] {
+                if !all_finite(row) {
+                    self.tel.record_nonfinite_reject();
+                    return Err(ServeError::NonFinite { what });
+                }
+            }
+        }
         let slot = &mut self.slots[si];
         slot.q.copy_from_slice(q);
         slot.k.copy_from_slice(k);
@@ -256,6 +323,12 @@ impl<'s> StreamPool<'s> {
         slot.has_output = false;
         Ok(())
     }
+}
+
+/// True iff every value is finite (no NaN/inf). Shared by the submit
+/// and prefill screens and the scheduler's phi-row quarantine check.
+pub(super) fn all_finite(xs: &[f32]) -> bool {
+    xs.iter().all(|x| x.is_finite())
 }
 
 #[cfg(test)]
@@ -341,8 +414,32 @@ mod tests {
         pool.submit(ids[1], &[0.0; 3], &[0.0; 3], &[0.5]).unwrap();
         assert_eq!(
             pool.submit(ids[2], &[0.0; 3], &[0.0; 3], &[0.5]).unwrap_err(),
-            ServeError::Backpressure { max_pending: 2 }
+            ServeError::Backpressure { max_pending: 2, retry_after_ticks: 1 }
         );
         assert_eq!(pool.telemetry().rejected_submits(), 1);
+    }
+
+    #[test]
+    fn non_finite_tokens_are_rejected_before_the_fold() {
+        let sess = session();
+        let mut pool = StreamPool::new(&sess, ServeConfig::new(2, 1)).unwrap();
+        let a = pool.admit().unwrap();
+        for (what, q, k, v) in [
+            ("q", [f32::NAN, 0.0, 0.0], [0.0; 3], [0.5]),
+            ("k", [0.0; 3], [0.0, f32::INFINITY, 0.0], [0.5]),
+            ("v", [0.0; 3], [0.0; 3], [f32::NEG_INFINITY]),
+        ] {
+            assert_eq!(
+                pool.submit(a, &q, &k, &v).unwrap_err(),
+                ServeError::NonFinite { what },
+                "{what}"
+            );
+        }
+        assert_eq!(pool.telemetry().nonfinite_rejects(), 3);
+        // the stream is intact: nothing pending, nothing folded, and a
+        // finite token still goes through
+        assert_eq!(pool.pending_tokens(), 0);
+        assert_eq!(pool.stream_len(a).unwrap(), 0);
+        pool.submit(a, &[0.1; 3], &[0.1; 3], &[0.5]).unwrap();
     }
 }

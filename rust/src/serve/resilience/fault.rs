@@ -1,0 +1,195 @@
+//! [`FaultPlan`] — seeded, deterministic fault injection.
+//!
+//! Every decision is a pure function of `(seed, stream, token)`: no
+//! RNG state, no wall clock. Two runs with the same plan inject the
+//! same faults at the same points, so CI can replay a chaos run and
+//! assert that every surviving stream's output is **bit-identical** to
+//! the fault-free run (injected-NaN tokens are rejected before any
+//! fold, injected panics kill their stream before it produces the
+//! token, and hibernate/restore cycles are bit-exact — none of them
+//! may perturb a survivor).
+
+/// The chaos schedule threaded through the load generator (env- or
+/// CLI-driven; see [`FaultPlan::from_env`] and the `serve` subcommand's
+/// `--fault-*` flags). All-zero = no faults.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed mixed into every decision.
+    pub seed: u64,
+    /// Inject a NaN-corrupted copy of roughly one in `nan_every`
+    /// submitted tokens (rejected by the input screen; the real token
+    /// follows). 0 = off.
+    pub nan_every: u64,
+    /// Kill this many streams with a forced fold panic, one mid-stream
+    /// token each (streams `0..panics`). 0 = off.
+    pub panics: u64,
+    /// Force-hibernate a stream after roughly one in `hibernate_every`
+    /// collected tokens (restored transparently on its next submit).
+    /// 0 = off.
+    pub hibernate_every: u64,
+    /// Delay roughly one in `delay_every` submissions by
+    /// [`delay_ticks`](FaultPlan::delay_ticks) ticks (a stalled
+    /// client; lets idle-deadline sweeps fire naturally). 0 = off.
+    pub delay_every: u64,
+    /// How many ticks a delayed submission stalls.
+    pub delay_ticks: u64,
+}
+
+impl FaultPlan {
+    /// No faults at all (the default).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            nan_every: 0,
+            panics: 0,
+            hibernate_every: 0,
+            delay_every: 0,
+            delay_ticks: 0,
+        }
+    }
+
+    /// True when any fault class is enabled.
+    pub fn is_active(&self) -> bool {
+        self.nan_every != 0
+            || self.panics != 0
+            || self.hibernate_every != 0
+            || self.delay_every != 0
+    }
+
+    /// Read a plan from `MACFORMER_FAULT_{SEED, NAN_EVERY, PANICS,
+    /// HIBERNATE_EVERY, DELAY_EVERY, DELAY_TICKS}` (each optional,
+    /// default 0; malformed values warn and stay 0 — chaos must be
+    /// opted into exactly, never guessed).
+    pub fn from_env() -> FaultPlan {
+        let read = |name: &str| -> u64 {
+            match std::env::var(name) {
+                Ok(raw) => match raw.trim().parse::<u64>() {
+                    Ok(v) => v,
+                    Err(_) => {
+                        log::warn!("{name}={raw:?} is not a count; ignoring");
+                        0
+                    }
+                },
+                Err(_) => 0,
+            }
+        };
+        FaultPlan {
+            seed: read("MACFORMER_FAULT_SEED"),
+            nan_every: read("MACFORMER_FAULT_NAN_EVERY"),
+            panics: read("MACFORMER_FAULT_PANICS"),
+            hibernate_every: read("MACFORMER_FAULT_HIBERNATE_EVERY"),
+            delay_every: read("MACFORMER_FAULT_DELAY_EVERY"),
+            delay_ticks: read("MACFORMER_FAULT_DELAY_TICKS"),
+        }
+    }
+
+    /// splitmix64-style avalanche over `(seed, salt, stream, token)` —
+    /// decisions for nearby streams/tokens are uncorrelated.
+    fn mix(&self, salt: u64, stream: u64, token: u64) -> u64 {
+        let mut x = self
+            .seed
+            .wrapping_add(salt.wrapping_mul(0x2545F4914F6CDD1D))
+            ^ stream.wrapping_mul(0x9E3779B97F4A7C15)
+            ^ token.wrapping_mul(0xD1B54A32D192ED03);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D049BB133111EB);
+        x ^= x >> 31;
+        x
+    }
+
+    /// Should a NaN-corrupted copy precede this token's submission?
+    pub fn inject_nan(&self, stream: u64, token: u64) -> bool {
+        self.nan_every != 0 && self.mix(1, stream, token) % self.nan_every == 0
+    }
+
+    /// Should this stream's fold panic at this token? Exactly the
+    /// first [`panics`](FaultPlan::panics) streams die, each at a
+    /// seed-chosen mid-stream token (never token 0, so a killed stream
+    /// still has a surviving output prefix to verify).
+    pub fn inject_panic(&self, stream: u64, token: u64, tokens_per_stream: u64) -> bool {
+        if stream >= self.panics || tokens_per_stream == 0 {
+            return false;
+        }
+        let at = 1 + self.mix(2, stream, 0) % tokens_per_stream.max(2).saturating_sub(1);
+        token == at.min(tokens_per_stream - 1)
+    }
+
+    /// Should this stream force-hibernate after collecting this token?
+    pub fn force_hibernate(&self, stream: u64, token: u64) -> bool {
+        self.hibernate_every != 0 && self.mix(3, stream, token) % self.hibernate_every == 0
+    }
+
+    /// Ticks this submission stalls (0 = no delay).
+    pub fn submit_delay(&self, stream: u64, token: u64) -> u64 {
+        if self.delay_every != 0 && self.mix(4, stream, token) % self.delay_every == 0 {
+            self.delay_ticks
+        } else {
+            0
+        }
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan { seed: 7, nan_every: 3, ..FaultPlan::none() };
+        let b = FaultPlan { seed: 7, nan_every: 3, ..FaultPlan::none() };
+        let c = FaultPlan { seed: 8, nan_every: 3, ..FaultPlan::none() };
+        let hits = |p: &FaultPlan| -> Vec<(u64, u64)> {
+            let mut v = Vec::new();
+            for s in 0..8u64 {
+                for t in 0..32u64 {
+                    if p.inject_nan(s, t) {
+                        v.push((s, t));
+                    }
+                }
+            }
+            v
+        };
+        assert_eq!(hits(&a), hits(&b), "same plan, same decisions");
+        assert_ne!(hits(&a), hits(&c), "a different seed moves the faults");
+        assert!(!hits(&a).is_empty(), "nan_every=3 over 256 points must fire");
+    }
+
+    #[test]
+    fn panic_budget_kills_exactly_the_first_streams_once() {
+        let p = FaultPlan { seed: 11, panics: 2, ..FaultPlan::none() };
+        let tokens = 10u64;
+        for s in 0..6u64 {
+            let kill_tokens: Vec<u64> =
+                (0..tokens).filter(|&t| p.inject_panic(s, t, tokens)).collect();
+            if s < 2 {
+                assert_eq!(kill_tokens.len(), 1, "stream {s} dies exactly once");
+                assert!(kill_tokens[0] >= 1, "never the first token");
+                assert!(kill_tokens[0] < tokens);
+            } else {
+                assert!(kill_tokens.is_empty(), "stream {s} survives");
+            }
+        }
+    }
+
+    #[test]
+    fn inactive_plan_injects_nothing() {
+        let p = FaultPlan::none();
+        assert!(!p.is_active());
+        for s in 0..4u64 {
+            for t in 0..16u64 {
+                assert!(!p.inject_nan(s, t));
+                assert!(!p.inject_panic(s, t, 16));
+                assert!(!p.force_hibernate(s, t));
+                assert_eq!(p.submit_delay(s, t), 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! [`Hibernator`] — spill arena for evicted stream state.
+//!
+//! A hibernated stream's entire decode history collapses to one
+//! versioned, checksummed state record (the `(S, z)` summary plus the
+//! step counter — see [`crate::tensor::io::write_state_record`]), so
+//! "spilling" a stream costs `4·(D·dv + D) + O(1)` bytes no matter how
+//! many tokens it has decoded. The arena hands out generation-tagged
+//! [`Ticket`]s: a stale ticket (slot reused after discard) can never
+//! resurrect the wrong stream.
+//!
+//! Two spill targets, chosen by [`SpillMode`]:
+//!
+//! - [`SpillMode::Memory`]: records live in grow-only byte buffers
+//!   that are reused across hibernate cycles (steady-state hibernation
+//!   of same-geometry streams stops allocating once each arena slot
+//!   has grown to one record's length).
+//! - [`SpillMode::Disk`]: records are written to
+//!   `dir/stream_{idx}_{gen}.macz` and deleted on restore/discard —
+//!   state survives in files, RAM holds only scratch.
+
+use std::path::PathBuf;
+
+use crate::attn::CausalState;
+
+use super::super::ServeError;
+
+/// Where hibernated state records are spilled.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpillMode {
+    /// Keep records in an in-RAM arena (default).
+    Memory,
+    /// Write each record to a file under this directory. The
+    /// directory is created on first spill if missing.
+    Disk(PathBuf),
+}
+
+/// Handle to one hibernated state record. Single-use: redeemed (or
+/// discarded) exactly once; the generation tag invalidates copies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) struct Ticket {
+    idx: u32,
+    gen: u32,
+}
+
+struct ArenaSlot {
+    gen: u32,
+    /// Record bytes (Memory mode) or read-back scratch (Disk mode,
+    /// empty between uses so RAM stays bounded).
+    buf: Vec<u8>,
+    occupied: bool,
+}
+
+/// The spill arena. One per [`super::Supervisor`].
+pub(super) struct Hibernator {
+    mode: SpillMode,
+    slots: Vec<ArenaSlot>,
+    free: Vec<u32>,
+    stored: usize,
+}
+
+impl Hibernator {
+    pub(super) fn new(mode: SpillMode) -> Hibernator {
+        Hibernator { mode, slots: Vec::new(), free: Vec::new(), stored: 0 }
+    }
+
+    /// Number of records currently hibernated.
+    pub(super) fn stored(&self) -> usize {
+        self.stored
+    }
+
+    fn path_for(dir: &std::path::Path, t: Ticket) -> PathBuf {
+        dir.join(format!("stream_{}_{}.macz", t.idx, t.gen))
+    }
+
+    /// Snapshot `state` into the arena and return the ticket for it.
+    pub(super) fn store(&mut self, state: &CausalState<'_>) -> Result<Ticket, ServeError> {
+        let idx = match self.free.pop() {
+            Some(i) => i as usize,
+            None => {
+                self.slots.push(ArenaSlot { gen: 0, buf: Vec::new(), occupied: false });
+                self.slots.len() - 1
+            }
+        };
+        let slot = &mut self.slots[idx];
+        debug_assert!(!slot.occupied, "free list handed out an occupied slot");
+        let ticket = Ticket { idx: idx as u32, gen: slot.gen };
+        state.snapshot_into(&mut slot.buf);
+        if let SpillMode::Disk(dir) = &self.mode {
+            let write = || -> std::io::Result<()> {
+                std::fs::create_dir_all(dir)?;
+                std::fs::write(Self::path_for(dir, ticket), &self.slots[idx].buf)
+            };
+            if let Err(e) = write() {
+                // The slot was never marked occupied; put it back.
+                self.slots[idx].buf.clear();
+                self.free.push(idx as u32);
+                return Err(ServeError::Session(format!("hibernate spill failed: {e}")));
+            }
+            self.slots[idx].buf.clear(); // RAM holds nothing in disk mode
+        }
+        self.slots[idx].occupied = true;
+        self.stored += 1;
+        Ok(ticket)
+    }
+
+    /// Redeem `ticket`: restore its record into `state` and release
+    /// the arena slot. The record is fully validated (magic, version,
+    /// geometry, checksum) before a single float lands in `state`.
+    pub(super) fn restore(
+        &mut self,
+        ticket: Ticket,
+        state: &mut CausalState<'_>,
+    ) -> Result<(), ServeError> {
+        let slot = self
+            .slots
+            .get_mut(ticket.idx as usize)
+            .filter(|s| s.occupied && s.gen == ticket.gen)
+            .ok_or_else(|| ServeError::Session("stale hibernation ticket".into()))?;
+        if let SpillMode::Disk(dir) = &self.mode {
+            let path = Self::path_for(dir, ticket);
+            slot.buf = std::fs::read(&path).map_err(|e| {
+                ServeError::Session(format!(
+                    "hibernated record {} unreadable: {e}",
+                    path.display()
+                ))
+            })?;
+            let _ = std::fs::remove_file(&path);
+        }
+        let restored = state
+            .restore_from(&self.slots[ticket.idx as usize].buf)
+            .map_err(|e| ServeError::Session(format!("hibernated record corrupt: {e}")));
+        // The slot is released either way: a corrupt record is not
+        // going to get better, and the caller faults the stream.
+        self.release(ticket.idx as usize);
+        restored
+    }
+
+    /// Drop a record without restoring it (expiry, close).
+    pub(super) fn discard(&mut self, ticket: Ticket) {
+        let valid = self
+            .slots
+            .get(ticket.idx as usize)
+            .is_some_and(|s| s.occupied && s.gen == ticket.gen);
+        if valid {
+            if let SpillMode::Disk(dir) = &self.mode {
+                let _ = std::fs::remove_file(Self::path_for(dir, ticket));
+            }
+            self.release(ticket.idx as usize);
+        }
+    }
+
+    fn release(&mut self, idx: usize) {
+        let slot = &mut self.slots[idx];
+        slot.occupied = false;
+        slot.gen = slot.gen.wrapping_add(1);
+        if matches!(self.mode, SpillMode::Disk(_)) {
+            self.slots[idx].buf = Vec::new(); // drop any read-back allocation
+        } else {
+            self.slots[idx].buf.clear(); // keep capacity for the next cycle
+        }
+        self.free.push(idx as u32);
+        self.stored -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::{AttentionSession, AttentionSpec, Backend, CausalState, Kernel};
+
+    fn session() -> AttentionSession {
+        AttentionSpec::new(Kernel::Exp)
+            .head_dim(3)
+            .num_features(8)
+            .causal(true)
+            .seed(21)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap()
+    }
+
+    fn folded_state(session: &AttentionSession, tokens: usize) -> CausalState<'_> {
+        let mut st = session.begin_decode(2).unwrap();
+        for t in 0..tokens {
+            let x = [t as f32 * 0.3 - 0.5, 0.25 * t as f32, -0.1];
+            let v = [1.0 + t as f32, -0.5 * t as f32];
+            st.append_token(&x, &x, &v).unwrap();
+        }
+        st
+    }
+
+    #[test]
+    fn memory_arena_round_trips_and_reuses_slots() {
+        let sess = session();
+        let mut hib = Hibernator::new(SpillMode::Memory);
+
+        let mut orig = folded_state(&sess, 5);
+        let t1 = hib.store(&orig).unwrap();
+        assert_eq!(hib.stored(), 1);
+
+        let mut back = sess.begin_decode(2).unwrap();
+        hib.restore(t1, &mut back).unwrap();
+        assert_eq!(hib.stored(), 0);
+        assert_eq!(back.len(), orig.len());
+
+        // Both continue identically after the round trip.
+        let x = [0.4f32, 0.1, 0.9];
+        let v = [2.0f32, 3.0];
+        let a = orig.append_token(&x, &x, &v).unwrap();
+        let b = back.append_token(&x, &x, &v).unwrap();
+        assert_eq!(a[0].to_bits(), b[0].to_bits());
+        assert_eq!(a[1].to_bits(), b[1].to_bits());
+
+        // A stale ticket must not resurrect anything.
+        assert!(hib.restore(t1, &mut back).is_err());
+
+        // The released slot is reused, not grown.
+        let t2 = hib.store(&back).unwrap();
+        hib.discard(t2);
+        assert_eq!(hib.slots.len(), 1, "arena reuses released slots");
+    }
+
+    #[test]
+    fn disk_arena_spills_files_and_cleans_up() {
+        let dir = std::env::temp_dir().join(format!("macformer_hib_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sess = session();
+        let mut hib = Hibernator::new(SpillMode::Disk(dir.clone()));
+
+        let st = folded_state(&sess, 7);
+        let t = hib.store(&st).unwrap();
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(files.len(), 1, "one record file per hibernated stream");
+
+        let mut back = sess.begin_decode(2).unwrap();
+        hib.restore(t, &mut back).unwrap();
+        assert_eq!(back.len(), 7);
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert!(files.is_empty(), "restore deletes the spill file");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

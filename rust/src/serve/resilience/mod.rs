@@ -1,0 +1,81 @@
+//! Serve resilience: hibernation & snapshot/restore, tick deadlines,
+//! poison-state isolation, and deterministic fault injection.
+//!
+//! The linear-attention serving story makes resilience unusually
+//! cheap: a stream's entire decode history is one constant-size
+//! `(S, z, step)` summary, so snapshotting a stream is `O(D * dv)`
+//! bytes (not `O(n)` KV cache), restoring is bit-exact, and a
+//! poisoned state is caught by screening one denominator rather than
+//! auditing a growing cache. This module turns those properties into
+//! the [`Supervisor`] layer:
+//!
+//! * **Hibernation** ([`SpillMode`], the arena in `hibernate.rs`):
+//!   idle streams are snapshotted through the versioned, checksummed
+//!   `tensor::io` state record into RAM or a spill directory, freeing
+//!   their pool slot; the next submit restores them transparently and
+//!   **bit-identically**, so pool capacity bounds active streams, not
+//!   total clients.
+//! * **Deadlines & degradation** ([`ResilienceConfig`]): idle-
+//!   hibernate, hibernate-expire, and untaken-output deadlines —
+//!   counted in ticks, never wall clock, so chaos runs replay
+//!   deterministically — plus a reject-newest overload governor with
+//!   a typed [`ServeError::Backpressure`](super::ServeError)
+//!   retry hint.
+//! * **Poison isolation**: non-finite inputs are rejected at submit
+//!   (the pool's screen), non-finite phi rows and fold denominators
+//!   quarantine their stream before the `(S, z)` state can spread the
+//!   poison, and a panicking fold is caught and retired without
+//!   taking down the tick (the scheduler's `guarded_fold`). The
+//!   supervised handle reports a terminal
+//!   [`ServeError::Faulted`](super::ServeError).
+//! * **Fault injection** ([`FaultPlan`]): a seeded, pure-function
+//!   chaos schedule (NaN tokens, forced fold panics, forced
+//!   hibernations, stalled clients) threaded through the load
+//!   generator, so CI replays identical chaos runs and asserts that
+//!   survivors are bit-identical to the fault-free run.
+
+mod fault;
+mod hibernate;
+mod supervisor;
+
+pub use fault::FaultPlan;
+pub use hibernate::SpillMode;
+pub use supervisor::{SessionId, StreamStatus, Supervisor};
+
+/// Deadline, governor, and spill knobs for one [`Supervisor`]. Every
+/// deadline is a tick count (deterministic under replay); `0` disables
+/// that mechanism. The default is everything off with RAM spill — the
+/// supervisor then behaves exactly like the bare pool + scheduler,
+/// plus fault isolation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResilienceConfig {
+    /// Hibernate an active stream after this many ticks without a
+    /// lifecycle event while idle (no pending token, no untaken
+    /// output). 0 = never.
+    pub idle_hibernate_ticks: u64,
+    /// Expire a hibernated stream after this many ticks in the arena
+    /// (its record is discarded; the handle answers
+    /// [`ServeError::Expired`](super::ServeError)). 0 = never.
+    pub hibernate_expire_ticks: u64,
+    /// Expire a stream whose served output sits untaken for this many
+    /// ticks (a vanished client must not pin a slot). 0 = never.
+    pub output_deadline_ticks: u64,
+    /// Overload governor: shed (reject-newest) submissions once the
+    /// tick queue holds this many tokens, with a typed retry hint.
+    /// 0 = off (the pool's own backpressure bound still applies).
+    pub shed_pending: usize,
+    /// Where hibernated state records live.
+    pub spill: SpillMode,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> ResilienceConfig {
+        ResilienceConfig {
+            idle_hibernate_ticks: 0,
+            hibernate_expire_ticks: 0,
+            output_deadline_ticks: 0,
+            shed_pending: 0,
+            spill: SpillMode::Memory,
+        }
+    }
+}

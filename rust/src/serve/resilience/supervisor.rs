@@ -1,0 +1,651 @@
+//! [`Supervisor`] — the resilience layer over pool + scheduler.
+//!
+//! The supervisor owns a [`StreamPool`], a [`Scheduler`], and a
+//! [`Hibernator`], and tracks every client stream as a [`SessionId`]
+//! entry that outlives its pool slot. Pool capacity bounds *active*
+//! streams; total supervised streams are bounded only by the spill
+//! arena. See the state machine in the [`crate::serve`] module docs.
+//!
+//! Everything here is tick-granular and deterministic: deadlines are
+//! counted in [`Supervisor::tick`] calls (never wall clock), eviction
+//! picks the coldest idle entry by tick age with index order as the
+//! tie-break, and the steady-state deadline sweep makes zero heap
+//! allocations (it walks the fixed entry table; enforced by
+//! `tests/alloc_free.rs`).
+
+use anyhow::Result;
+
+use crate::attn::AttentionSession;
+
+use super::super::pool::{StreamId, StreamPool};
+use super::super::scheduler::{Scheduler, TickStats};
+use super::super::telemetry::Telemetry;
+use super::super::{ServeConfig, ServeError};
+use super::hibernate::{Hibernator, Ticket};
+use super::ResilienceConfig;
+
+/// Opaque handle to one supervised stream: entry index + generation.
+/// Unlike a raw [`StreamId`], it stays valid across hibernate/restore
+/// cycles — the pool slot underneath may change or disappear entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SessionId {
+    idx: u32,
+    gen: u32,
+}
+
+/// Where a supervised stream currently is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamStatus {
+    /// Holds a pool slot; submits and ticks flow normally.
+    Active,
+    /// State spilled to the arena; the next submit restores it.
+    Hibernated,
+    /// A poisoned fold was isolated (or a spill record went corrupt);
+    /// terminal until [`Supervisor::close`].
+    Faulted,
+    /// A deadline fired and the state was reclaimed; terminal until
+    /// [`Supervisor::close`].
+    Expired,
+}
+
+#[derive(Clone, Copy)]
+enum EntryState {
+    Vacant,
+    Active(StreamId),
+    Hibernated(Ticket),
+    Faulted,
+    Expired,
+}
+
+struct Entry {
+    gen: u32,
+    state: EntryState,
+    /// Tick of the last lifecycle event (open / submit / take /
+    /// restore / hibernate) — the basis for every deadline.
+    last_event_tick: u64,
+}
+
+/// The resilience supervisor. One per served model; wraps the whole
+/// pool + scheduler pair, so callers interact only with [`SessionId`]s.
+pub struct Supervisor<'s> {
+    pool: StreamPool<'s>,
+    scheduler: Scheduler,
+    hibernator: Hibernator,
+    cfg: ResilienceConfig,
+    entries: Vec<Entry>,
+    /// Free entry indices (stack).
+    free: Vec<u32>,
+    tick_no: u64,
+}
+
+impl<'s> Supervisor<'s> {
+    /// Build a supervisor over `session` (same contract as
+    /// [`StreamPool::new`]).
+    pub fn new(
+        session: &'s AttentionSession,
+        serve: ServeConfig,
+        cfg: ResilienceConfig,
+    ) -> Result<Supervisor<'s>> {
+        let pool = StreamPool::new(session, serve)?;
+        let hibernator = Hibernator::new(cfg.spill.clone());
+        Ok(Supervisor {
+            pool,
+            scheduler: Scheduler::new(),
+            hibernator,
+            cfg,
+            entries: Vec::new(),
+            free: Vec::new(),
+            tick_no: 0,
+        })
+    }
+
+    /// Ticks elapsed (one per [`Supervisor::tick`] call).
+    pub fn tick_no(&self) -> u64 {
+        self.tick_no
+    }
+
+    /// The underlying serve config.
+    pub fn config(&self) -> &ServeConfig {
+        self.pool.config()
+    }
+
+    /// The resilience config this supervisor enforces.
+    pub fn resilience_config(&self) -> &ResilienceConfig {
+        &self.cfg
+    }
+
+    /// Shared telemetry (pool counters + resilience counters).
+    pub fn telemetry(&self) -> &Telemetry {
+        self.pool.telemetry()
+    }
+
+    /// Streams currently holding a pool slot.
+    pub fn active_streams(&self) -> usize {
+        self.pool.active_streams()
+    }
+
+    /// Streams currently hibernated in the spill arena.
+    pub fn hibernated_streams(&self) -> usize {
+        self.hibernator.stored()
+    }
+
+    fn resolve_entry(&self, id: SessionId) -> Result<usize, ServeError> {
+        let ei = id.idx as usize;
+        match self.entries.get(ei) {
+            Some(e) if e.gen == id.gen && !matches!(e.state, EntryState::Vacant) => Ok(ei),
+            _ => Err(ServeError::UnknownStream),
+        }
+    }
+
+    /// Open a supervised stream. When the pool is full, the coldest
+    /// idle active stream is evicted to the arena first; only if no
+    /// stream is evictable does this surface [`ServeError::PoolFull`].
+    pub fn open(&mut self) -> Result<SessionId, ServeError> {
+        let sid = self.admit_or_evict()?;
+        let ei = match self.free.pop() {
+            Some(i) => i as usize,
+            None => {
+                self.entries.push(Entry {
+                    gen: 0,
+                    state: EntryState::Vacant,
+                    last_event_tick: 0,
+                });
+                self.entries.len() - 1
+            }
+        };
+        let tick_no = self.tick_no;
+        let e = &mut self.entries[ei];
+        e.state = EntryState::Active(sid);
+        e.last_event_tick = tick_no;
+        Ok(SessionId { idx: ei as u32, gen: e.gen })
+    }
+
+    /// Where `id` currently is in its lifecycle.
+    pub fn status(&self, id: SessionId) -> Result<StreamStatus, ServeError> {
+        let ei = self.resolve_entry(id)?;
+        Ok(match self.entries[ei].state {
+            EntryState::Active(_) => StreamStatus::Active,
+            EntryState::Hibernated(_) => StreamStatus::Hibernated,
+            EntryState::Faulted => StreamStatus::Faulted,
+            EntryState::Expired => StreamStatus::Expired,
+            EntryState::Vacant => unreachable!("resolve_entry rejects vacant entries"),
+        })
+    }
+
+    /// Stage one `(q, k, v)` token. A hibernated stream is restored
+    /// transparently first (bit-identically); a faulted/expired stream
+    /// answers its terminal error; the overload governor sheds newest
+    /// work with a typed retry hint when the queue is past
+    /// [`ResilienceConfig::shed_pending`].
+    pub fn submit(
+        &mut self,
+        id: SessionId,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(), ServeError> {
+        let ei = self.resolve_entry(id)?;
+        let sid = match self.entries[ei].state {
+            EntryState::Faulted => return Err(ServeError::Faulted),
+            EntryState::Expired => return Err(ServeError::Expired),
+            EntryState::Active(sid) => {
+                self.shed_check()?;
+                sid
+            }
+            EntryState::Hibernated(ticket) => {
+                self.shed_check()?;
+                self.thaw(ei, ticket)?
+            }
+            EntryState::Vacant => unreachable!("resolve_entry rejects vacant entries"),
+        };
+        self.pool.submit(sid, q, k, v)?;
+        self.entries[ei].last_event_tick = self.tick_no;
+        Ok(())
+    }
+
+    /// Ingest a whole prompt (see [`Scheduler::prefill`]). Restores a
+    /// hibernated stream first, like [`Supervisor::submit`].
+    pub fn prefill(
+        &mut self,
+        id: SessionId,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<usize, ServeError> {
+        let ei = self.resolve_entry(id)?;
+        let sid = match self.entries[ei].state {
+            EntryState::Faulted => return Err(ServeError::Faulted),
+            EntryState::Expired => return Err(ServeError::Expired),
+            EntryState::Active(sid) => sid,
+            EntryState::Hibernated(ticket) => self.thaw(ei, ticket)?,
+            EntryState::Vacant => unreachable!("resolve_entry rejects vacant entries"),
+        };
+        let n = self.scheduler.prefill(&mut self.pool, sid, q, k, v)?;
+        self.entries[ei].last_event_tick = self.tick_no;
+        Ok(n)
+    }
+
+    /// Copy a served output row out (see [`StreamPool::take_output`]).
+    pub fn take_output(&mut self, id: SessionId, out: &mut [f32]) -> Result<(), ServeError> {
+        let ei = self.resolve_entry(id)?;
+        match self.entries[ei].state {
+            EntryState::Faulted => Err(ServeError::Faulted),
+            EntryState::Expired => Err(ServeError::Expired),
+            // a hibernated stream is idle by construction
+            EntryState::Hibernated(_) => Err(ServeError::NoOutput),
+            EntryState::Active(sid) => {
+                self.pool.take_output(sid, out)?;
+                self.entries[ei].last_event_tick = self.tick_no;
+                Ok(())
+            }
+            EntryState::Vacant => unreachable!("resolve_entry rejects vacant entries"),
+        }
+    }
+
+    /// Explicitly hibernate an idle active stream (snapshot to the
+    /// arena, free the pool slot). Idempotent for already-hibernated
+    /// streams; a stream with a pending token or an untaken output is
+    /// [`ServeError::StreamBusy`].
+    pub fn hibernate(&mut self, id: SessionId) -> Result<(), ServeError> {
+        let ei = self.resolve_entry(id)?;
+        match self.entries[ei].state {
+            EntryState::Faulted => Err(ServeError::Faulted),
+            EntryState::Expired => Err(ServeError::Expired),
+            EntryState::Hibernated(_) => Ok(()),
+            EntryState::Active(_) => self.hibernate_entry(ei),
+            EntryState::Vacant => unreachable!("resolve_entry rejects vacant entries"),
+        }
+    }
+
+    /// Arm the deterministic chaos hook: the stream's next fold panics
+    /// inside the tick (must be active — arm after the submit that
+    /// should die).
+    pub fn arm_fault(&mut self, id: SessionId) -> Result<(), ServeError> {
+        let ei = self.resolve_entry(id)?;
+        match self.entries[ei].state {
+            EntryState::Active(sid) => self.pool.arm_fault(sid),
+            EntryState::Faulted => Err(ServeError::Faulted),
+            EntryState::Expired => Err(ServeError::Expired),
+            EntryState::Hibernated(_) => Err(ServeError::NoOutput),
+            EntryState::Vacant => unreachable!("resolve_entry rejects vacant entries"),
+        }
+    }
+
+    /// Close a supervised stream in any state, reclaiming whatever it
+    /// still holds (pool slot, arena record, or nothing).
+    pub fn close(&mut self, id: SessionId) -> Result<(), ServeError> {
+        let ei = self.resolve_entry(id)?;
+        match self.entries[ei].state {
+            EntryState::Active(sid) => {
+                let _ = self.pool.retire(sid);
+            }
+            EntryState::Hibernated(ticket) => self.hibernator.discard(ticket),
+            EntryState::Faulted | EntryState::Expired => {}
+            EntryState::Vacant => unreachable!("resolve_entry rejects vacant entries"),
+        }
+        let e = &mut self.entries[ei];
+        e.state = EntryState::Vacant;
+        e.gen = e.gen.wrapping_add(1);
+        self.free.push(ei as u32);
+        Ok(())
+    }
+
+    /// One supervised tick: run the deadline sweep (idle hibernation,
+    /// output expiry, hibernation expiry — all tick-count based, so
+    /// deterministic), then the scheduler's micro-batch tick, then
+    /// reconcile entries whose stream was fault-isolated inside the
+    /// tick. Steady state (no deadline fires, no faults) allocates
+    /// nothing beyond the scheduler's own guarantee.
+    pub fn tick(&mut self) -> Result<TickStats> {
+        self.sweep_deadlines();
+        let stats = self.scheduler.tick(&mut self.pool)?;
+        if stats.faulted > 0 {
+            // the scheduler retired the faulted slots; find the
+            // entries whose handles just died and mark them terminal
+            for ei in 0..self.entries.len() {
+                if let EntryState::Active(sid) = self.entries[ei].state {
+                    if self.pool.resolve(sid).is_err() {
+                        self.entries[ei].state = EntryState::Faulted;
+                    }
+                }
+            }
+        }
+        self.tick_no += 1;
+        Ok(stats)
+    }
+
+    /// The tick-boundary deadline sweep. Walks the entry table once;
+    /// nothing fires in steady state, and the walk itself is
+    /// allocation-free.
+    fn sweep_deadlines(&mut self) {
+        for ei in 0..self.entries.len() {
+            let age = self.tick_no.saturating_sub(self.entries[ei].last_event_tick);
+            match self.entries[ei].state {
+                EntryState::Active(sid) => {
+                    let Ok(si) = self.pool.resolve(sid) else { continue };
+                    let idle = !self.pool.slots[si].pending;
+                    let has_output = self.pool.slots[si].has_output;
+                    if self.cfg.output_deadline_ticks != 0
+                        && has_output
+                        && age >= self.cfg.output_deadline_ticks
+                    {
+                        // the client never took its output: reclaim
+                        let _ = self.pool.retire(sid);
+                        self.entries[ei].state = EntryState::Expired;
+                        self.pool.tel.record_expiration();
+                    } else if self.cfg.idle_hibernate_ticks != 0
+                        && idle
+                        && !has_output
+                        && age >= self.cfg.idle_hibernate_ticks
+                    {
+                        // cold stream: spill it so the slot can serve
+                        // someone who is actually decoding
+                        if self.hibernate_entry(ei).is_ok() {
+                            self.pool.tel.record_eviction();
+                        }
+                    }
+                }
+                EntryState::Hibernated(ticket) => {
+                    if self.cfg.hibernate_expire_ticks != 0
+                        && age >= self.cfg.hibernate_expire_ticks
+                    {
+                        self.hibernator.discard(ticket);
+                        self.entries[ei].state = EntryState::Expired;
+                        self.pool.tel.record_expiration();
+                    }
+                }
+                EntryState::Vacant | EntryState::Faulted | EntryState::Expired => {}
+            }
+        }
+    }
+
+    /// Overload governor: reject-newest once the tick queue is past
+    /// the shed threshold. The queue drains every tick, so one tick is
+    /// the honest retry hint.
+    fn shed_check(&mut self) -> Result<(), ServeError> {
+        if self.cfg.shed_pending != 0 && self.pool.pending_tokens() >= self.cfg.shed_pending {
+            self.pool.tel.record_shed();
+            return Err(ServeError::Backpressure {
+                max_pending: self.cfg.shed_pending,
+                retry_after_ticks: 1,
+            });
+        }
+        Ok(())
+    }
+
+    /// Admit a pool stream, evicting the coldest idle entry to the
+    /// arena if the pool is full.
+    fn admit_or_evict(&mut self) -> Result<StreamId, ServeError> {
+        match self.pool.admit() {
+            Ok(sid) => Ok(sid),
+            Err(ServeError::PoolFull { capacity }) => {
+                let Some(victim) = self.coldest_idle_entry() else {
+                    return Err(ServeError::PoolFull { capacity });
+                };
+                self.hibernate_entry(victim)?;
+                self.pool.tel.record_eviction();
+                self.pool.admit()
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// The active entry that has gone longest without a lifecycle
+    /// event and is idle (no pending token, no untaken output) —
+    /// deterministic: age-descending, entry index as tie-break.
+    fn coldest_idle_entry(&self) -> Option<usize> {
+        let mut best: Option<(usize, u64)> = None;
+        for (ei, e) in self.entries.iter().enumerate() {
+            let EntryState::Active(sid) = e.state else { continue };
+            let Ok(si) = self.pool.resolve(sid) else { continue };
+            let slot = &self.pool.slots[si];
+            if slot.pending || slot.has_output {
+                continue;
+            }
+            let age = self.tick_no.saturating_sub(e.last_event_tick);
+            let better = match best {
+                None => true,
+                Some((_, best_age)) => age > best_age,
+            };
+            if better {
+                best = Some((ei, age));
+            }
+        }
+        best.map(|(ei, _)| ei)
+    }
+
+    /// Snapshot an active entry's state into the arena and release its
+    /// pool slot.
+    fn hibernate_entry(&mut self, ei: usize) -> Result<(), ServeError> {
+        let EntryState::Active(sid) = self.entries[ei].state else {
+            return Err(ServeError::UnknownStream);
+        };
+        let si = self.pool.resolve(sid)?;
+        let slot = &self.pool.slots[si];
+        if slot.pending || slot.has_output {
+            return Err(ServeError::StreamBusy);
+        }
+        let state = slot.state.as_ref().expect("active slot always has a state");
+        let ticket = self.hibernator.store(state)?;
+        self.pool.retire(sid).expect("resolved stream retires");
+        let tick_no = self.tick_no;
+        let e = &mut self.entries[ei];
+        e.state = EntryState::Hibernated(ticket);
+        e.last_event_tick = tick_no;
+        self.pool.tel.record_hibernation();
+        Ok(())
+    }
+
+    /// Restore a hibernated entry into a (possibly evicted-for) fresh
+    /// pool slot, bit-identically. A corrupt record faults the entry
+    /// instead of half-restoring it.
+    fn thaw(&mut self, ei: usize, ticket: Ticket) -> Result<StreamId, ServeError> {
+        let sid = self.admit_or_evict()?;
+        let si = self.pool.resolve(sid).expect("fresh admit resolves");
+        let state = self.pool.slots[si].state.as_mut().expect("admitted slot has a state");
+        match self.hibernator.restore(ticket, state) {
+            Ok(()) => {
+                let tick_no = self.tick_no;
+                let e = &mut self.entries[ei];
+                e.state = EntryState::Active(sid);
+                e.last_event_tick = tick_no;
+                self.pool.tel.record_restore();
+                Ok(sid)
+            }
+            Err(e) => {
+                let _ = self.pool.retire(sid);
+                self.pool.tel.record_fault(false);
+                self.entries[ei].state = EntryState::Faulted;
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::{AttentionSession, AttentionSpec, Backend, Kernel};
+    use crate::serve::SpillMode;
+
+    fn session(seed: u64) -> AttentionSession {
+        AttentionSpec::new(Kernel::Exp)
+            .head_dim(3)
+            .num_features(8)
+            .causal(true)
+            .seed(seed)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap()
+    }
+
+    fn token(t: usize) -> ([f32; 3], [f32; 2]) {
+        let x = [0.3 * t as f32 - 0.4, 0.1 * t as f32, -0.2];
+        let v = [1.0 + t as f32, -0.5 * t as f32];
+        (x, v)
+    }
+
+    /// One stream hibernates (and restores) mid-decode, the other
+    /// never does; identical token sequences must produce bit-identical
+    /// outputs at every step.
+    #[test]
+    fn hibernate_restore_is_bit_identical_mid_decode() {
+        let sess = session(13);
+        let mut sup =
+            Supervisor::new(&sess, ServeConfig::new(2, 2), ResilienceConfig::default()).unwrap();
+        let control = sup.open().unwrap();
+        let roaming = sup.open().unwrap();
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        for t in 0..8 {
+            if t == 3 || t == 6 {
+                sup.hibernate(roaming).unwrap();
+                assert_eq!(sup.status(roaming).unwrap(), StreamStatus::Hibernated);
+            }
+            let (x, v) = token(t);
+            sup.submit(control, &x, &x, &v).unwrap();
+            // restores transparently on submit
+            sup.submit(roaming, &x, &x, &v).unwrap();
+            sup.tick().unwrap();
+            sup.take_output(control, &mut a).unwrap();
+            sup.take_output(roaming, &mut b).unwrap();
+            assert_eq!(a.map(f32::to_bits), b.map(f32::to_bits), "token {t}");
+        }
+        assert_eq!(sup.telemetry().hibernations(), 2);
+        assert_eq!(sup.telemetry().restores(), 2);
+        sup.close(control).unwrap();
+        sup.close(roaming).unwrap();
+        assert!(matches!(sup.status(control), Err(ServeError::UnknownStream)));
+    }
+
+    /// More supervised streams than pool slots: opens and submits evict
+    /// the coldest idle stream automatically, and every stream still
+    /// decodes correctly through the churn.
+    #[test]
+    fn eviction_lets_streams_outnumber_slots() {
+        let sess = session(5);
+        let serve = ServeConfig { min_batch: 1, ..ServeConfig::new(2, 2) };
+        let mut sup = Supervisor::new(&sess, serve, ResilienceConfig::default()).unwrap();
+        let ids: Vec<SessionId> = (0..5).map(|_| sup.open().unwrap()).collect();
+        assert_eq!(sup.active_streams(), 2);
+        assert_eq!(sup.hibernated_streams(), 3);
+        let mut out = [0.0f32; 2];
+        for t in 0..4 {
+            for &id in &ids {
+                let (x, v) = token(t);
+                sup.submit(id, &x, &x, &v).unwrap();
+                sup.tick().unwrap();
+                sup.take_output(id, &mut out).unwrap();
+                assert!(out.iter().all(|x| x.is_finite()));
+            }
+        }
+        assert!(sup.telemetry().evictions() > 0);
+        assert!(sup.telemetry().restores() > 0);
+        for &id in &ids {
+            sup.close(id).unwrap();
+        }
+    }
+
+    /// Tick-count deadlines: an untaken output expires its stream, an
+    /// idle stream hibernates, and a hibernated stream expires — all
+    /// surfaced as typed terminal errors.
+    #[test]
+    fn deadlines_fire_at_tick_boundaries() {
+        let sess = session(9);
+        let cfg = ResilienceConfig {
+            idle_hibernate_ticks: 2,
+            hibernate_expire_ticks: 3,
+            output_deadline_ticks: 4,
+            ..ResilienceConfig::default()
+        };
+        let mut sup = Supervisor::new(&sess, ServeConfig::new(4, 2), cfg).unwrap();
+
+        // idle -> hibernated -> expired
+        let idle = sup.open().unwrap();
+        for _ in 0..3 {
+            sup.tick().unwrap();
+        }
+        assert_eq!(sup.status(idle).unwrap(), StreamStatus::Hibernated);
+        for _ in 0..4 {
+            sup.tick().unwrap();
+        }
+        assert_eq!(sup.status(idle).unwrap(), StreamStatus::Expired);
+        let (x, v) = token(0);
+        assert_eq!(sup.submit(idle, &x, &x, &v).unwrap_err(), ServeError::Expired);
+        sup.close(idle).unwrap();
+
+        // untaken output -> expired
+        let slow = sup.open().unwrap();
+        sup.submit(slow, &x, &x, &v).unwrap();
+        for _ in 0..6 {
+            sup.tick().unwrap();
+        }
+        assert_eq!(sup.status(slow).unwrap(), StreamStatus::Expired);
+        assert_eq!(sup.take_output(slow, &mut [0.0; 2]).unwrap_err(), ServeError::Expired);
+        assert_eq!(sup.telemetry().expirations(), 2);
+    }
+
+    /// The governor sheds newest-first with a retry hint; a fold fault
+    /// surfaces as a terminal typed error on the supervised handle.
+    #[test]
+    fn governor_sheds_and_faults_are_terminal() {
+        let sess = session(3);
+        let serve = ServeConfig { min_batch: 1, ..ServeConfig::new(4, 2) };
+        let cfg = ResilienceConfig { shed_pending: 1, ..ResilienceConfig::default() };
+        let mut sup = Supervisor::new(&sess, serve, cfg).unwrap();
+        let a = sup.open().unwrap();
+        let b = sup.open().unwrap();
+        let (x, v) = token(1);
+        sup.submit(a, &x, &x, &v).unwrap();
+        let shed = sup.submit(b, &x, &x, &v).unwrap_err();
+        assert_eq!(shed, ServeError::Backpressure { max_pending: 1, retry_after_ticks: 1 });
+        assert!(shed.is_retryable());
+        assert_eq!(sup.telemetry().shed(), 1);
+
+        // kill a's next fold; the supervised handle goes terminal
+        sup.arm_fault(a).unwrap();
+        sup.tick().unwrap();
+        assert_eq!(sup.status(a).unwrap(), StreamStatus::Faulted);
+        assert_eq!(sup.submit(a, &x, &x, &v).unwrap_err(), ServeError::Faulted);
+        assert!(!ServeError::Faulted.is_retryable());
+        // b is unharmed
+        sup.submit(b, &x, &x, &v).unwrap();
+        sup.tick().unwrap();
+        sup.take_output(b, &mut [0.0; 2]).unwrap();
+        sup.close(a).unwrap();
+        sup.close(b).unwrap();
+    }
+
+    /// Disk spill: hibernated state survives as a file and restores
+    /// bit-identically from it.
+    #[test]
+    fn disk_spill_round_trips_through_the_supervisor() {
+        let dir = std::env::temp_dir().join(format!("macformer_sup_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sess = session(13);
+        let cfg = ResilienceConfig {
+            spill: SpillMode::Disk(dir.clone()),
+            ..ResilienceConfig::default()
+        };
+        let mut sup = Supervisor::new(&sess, ServeConfig::new(2, 2), cfg).unwrap();
+        let control = sup.open().unwrap();
+        let roaming = sup.open().unwrap();
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        for t in 0..5 {
+            if t == 2 {
+                sup.hibernate(roaming).unwrap();
+                let files = std::fs::read_dir(&dir).unwrap().count();
+                assert_eq!(files, 1, "hibernated record spilled to disk");
+            }
+            let (x, v) = token(t);
+            sup.submit(control, &x, &x, &v).unwrap();
+            sup.submit(roaming, &x, &x, &v).unwrap();
+            sup.tick().unwrap();
+            sup.take_output(control, &mut a).unwrap();
+            sup.take_output(roaming, &mut b).unwrap();
+            assert_eq!(a.map(f32::to_bits), b.map(f32::to_bits), "token {t}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -38,6 +38,7 @@
 //! leaving the stream's state bit-identical to token-by-token
 //! submission and its output slot holding the prompt's last position.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -46,7 +47,7 @@ use crate::fastpath::attention::causal_chunk;
 use crate::fastpath::parallel::SendPtr;
 use crate::fastpath::{grow, parallel, simd};
 
-use super::pool::{StreamId, StreamPool};
+use super::pool::{all_finite, FaultKind, Slot, StreamId, StreamPool};
 use super::ServeError;
 
 /// What one [`Scheduler::tick`] did.
@@ -57,6 +58,48 @@ pub struct TickStats {
     /// True when the degenerate-batch sequential path ran instead of
     /// the gathered `(g, 1, d)` step.
     pub sequential: bool,
+    /// Streams whose fold was isolated this tick (panic or quarantine)
+    /// and whose slots were retired — no output, handle dead.
+    pub faulted: usize,
+}
+
+/// One stream's guarded `(S, z)` fold: screen the phi rows for
+/// non-finite values *before* the key fold can poison the state, run
+/// the fold under `catch_unwind` so a panic in one stream cannot take
+/// down the tick (or the worker pool — the payload never crosses this
+/// frame), and check the fold denominator's health afterwards.
+/// `Some(kind)` means the fold was isolated and the slot must be
+/// retired; `None` means `slot.out` holds the served row.
+///
+/// On the non-panic path `catch_unwind` costs nothing (no allocation,
+/// no unwinding machinery engaged), so this guard is free at steady
+/// state.
+fn guarded_fold(slot: &mut Slot<'_>, phi_k: &[f32], phi_q: &[f32], eps: f32) -> Option<FaultKind> {
+    if !all_finite(phi_k) || !all_finite(phi_q) {
+        // phi overflowed on screened-finite inputs (huge magnitudes
+        // through a high-degree feature): quarantine before the key
+        // fold touches (S, z)
+        return Some(FaultKind::Quarantine);
+    }
+    let armed = slot.fault_armed;
+    let state = slot.state.as_mut().expect("active slot always has a state");
+    let v = &slot.v;
+    let out = &mut slot.out;
+    let folded = catch_unwind(AssertUnwindSafe(|| {
+        if armed {
+            panic!("injected slot fault (fault_armed)");
+        }
+        state.fold_token_into(phi_k, phi_q, v, out)
+    }));
+    match folded {
+        Err(_payload) => Some(FaultKind::Panic),
+        // a non-finite denominator means the key fold overflowed the
+        // accumulators: the state is poisoned, retire it before the
+        // next token reads it (finite-but-small denominators are
+        // legitimate — Maclaurin features carry signs)
+        Ok(den) if !(den + eps).is_finite() => Some(FaultKind::Quarantine),
+        Ok(_) => None,
+    }
 }
 
 /// The micro-batch scheduler. Owns only grow-only scratch, so one
@@ -185,11 +228,12 @@ impl Scheduler {
         debug_assert_eq!(g, pool.pending, "pending count out of sync with slots");
         if g == 0 {
             pool.tel.record_tick(0, queue_depth, false);
-            return Ok(TickStats { batch: 0, sequential: false });
+            return Ok(TickStats { batch: 0, sequential: false, faulted: 0 });
         }
         let sequential = g < pool.cfg.batch_threshold();
         let session = pool.session;
         let d = session.spec().head_dim;
+        let eps = session.spec().eps;
         let map = session.feature_map().expect("streaming pool implies a Maclaurin session");
         let feat = map.flat.num_features();
         let scale = session.decode_scale();
@@ -207,6 +251,7 @@ impl Scheduler {
             grow(&mut self.phi_q, feat);
             grow(&mut self.phi_k, feat);
             let mut served = 0usize;
+            let mut faulted = 0usize;
             for &si in &self.scheduled {
                 let slot = &mut pool.slots[si as usize];
                 simd::scaled_copy(&slot.q, scale, &mut self.qs[..d]);
@@ -222,13 +267,15 @@ impl Scheduler {
                     }
                     return Err(e);
                 }
-                let state = slot.state.as_mut().expect("active slot always has a state");
-                state.fold_token_into(
-                    &self.phi_k[..feat],
-                    &self.phi_q[..feat],
-                    &slot.v,
-                    &mut slot.out,
-                );
+                if let Some(kind) = guarded_fold(slot, &self.phi_k[..feat], &self.phi_q[..feat], eps)
+                {
+                    // isolate immediately: the token is dropped with
+                    // its stream, never re-scheduled
+                    pool.retire_faulted(si as usize, kind);
+                    faulted += 1;
+                    continue;
+                }
+                let slot = &mut pool.slots[si as usize];
                 slot.pending = false;
                 slot.has_output = true;
                 pool.pending -= 1;
@@ -236,8 +283,8 @@ impl Scheduler {
                 pool.tel.record_token_latency(latency);
                 served += 1;
             }
-            pool.tel.record_tick(g, queue_depth, sequential);
-            return Ok(TickStats { batch: g, sequential });
+            pool.tel.record_tick(served, queue_depth, sequential);
+            return Ok(TickStats { batch: served, sequential, faulted });
         }
         {
             grow(&mut self.qs, g * d);
@@ -254,6 +301,10 @@ impl Scheduler {
             session.phi_rows_into(&self.ks[..g * d], g, &mut self.phi_k[..g * feat])?;
             session.phi_rows_into(&self.qs[..g * d], g, &mut self.phi_q[..g * feat])?;
             // Parallel per-stream fold: index j owns slot scheduled[j].
+            // Each fold is individually guarded (phi screen, panic
+            // catch, denominator health); a fault is recorded on the
+            // slot — disjoint writes, so still race-free — and the
+            // hand-over loop below retires it.
             let slots = SendPtr(pool.slots.as_mut_ptr());
             let scheduled = &self.scheduled[..g];
             let phi_k = &self.phi_k[..g * feat];
@@ -263,27 +314,37 @@ impl Scheduler {
                 // claimed exactly once, and the exclusive borrow of
                 // `pool` is held across this call (see SendPtr).
                 let slot = unsafe { &mut *slots.0.add(scheduled[j] as usize) };
-                let state = slot.state.as_mut().expect("active slot always has a state");
-                state.fold_token_into(
+                slot.fault = guarded_fold(
+                    slot,
                     &phi_k[j * feat..(j + 1) * feat],
                     &phi_q[j * feat..(j + 1) * feat],
-                    &slot.v,
-                    &mut slot.out,
+                    eps,
                 );
             });
         }
-        // Hand outputs over and record per-token latency (queue wait +
-        // compute, measured submit -> served).
+        // Hand outputs over, retire isolated folds, and record
+        // per-token latency (queue wait + compute, submit -> served).
         let served_at = Instant::now();
+        let mut served = 0usize;
+        let mut faulted = 0usize;
         for &si in &self.scheduled {
-            let slot = &mut pool.slots[si as usize];
+            let si = si as usize;
+            if let Some(kind) = pool.slots[si].fault {
+                // retire_faulted balances the queue bookkeeping (the
+                // slot's pending flag is still set)
+                pool.retire_faulted(si, kind);
+                faulted += 1;
+                continue;
+            }
+            let slot = &mut pool.slots[si];
             slot.pending = false;
             slot.has_output = true;
             pool.tel.record_token_latency(served_at.duration_since(slot.submitted_at));
+            served += 1;
         }
-        pool.pending -= g;
-        pool.tel.record_tick(g, queue_depth, sequential);
-        Ok(TickStats { batch: g, sequential })
+        pool.pending -= served;
+        pool.tel.record_tick(served, queue_depth, sequential);
+        Ok(TickStats { batch: served, sequential, faulted })
     }
 }
 
@@ -308,7 +369,7 @@ mod tests {
         let mut sched = Scheduler::new();
         // idle tick first
         let stats = sched.tick(&mut pool).unwrap();
-        assert_eq!(stats, TickStats { batch: 0, sequential: false });
+        assert_eq!(stats, TickStats { batch: 0, sequential: false, faulted: 0 });
         let ids: Vec<_> = (0..5).map(|_| pool.admit().unwrap()).collect();
         let mut rng = Rng::new(9);
         for &id in &ids {
@@ -318,7 +379,7 @@ mod tests {
             pool.submit(id, &q, &k, &v).unwrap();
         }
         let stats = sched.tick(&mut pool).unwrap();
-        assert_eq!(stats, TickStats { batch: 5, sequential: false });
+        assert_eq!(stats, TickStats { batch: 5, sequential: false, faulted: 0 });
         assert_eq!(pool.pending_tokens(), 0);
         let mut out = [0.0f32; 2];
         for &id in &ids {
@@ -396,7 +457,94 @@ mod tests {
         let a = pool.admit().unwrap();
         pool.submit(a, &[0.1; 4], &[0.2; 4], &[1.0, 2.0]).unwrap();
         let stats = sched.tick(&mut pool).unwrap();
-        assert_eq!(stats, TickStats { batch: 1, sequential: true });
+        assert_eq!(stats, TickStats { batch: 1, sequential: true, faulted: 0 });
         assert!(pool.has_output(a));
+    }
+
+    /// An injected fold panic in one stream is isolated: that slot is
+    /// retired, every other stream in the same micro-batch is served
+    /// normally, and the scheduler (and its worker pool) survive for
+    /// the next tick — on both the batched and sequential paths.
+    #[test]
+    fn fold_panic_is_isolated_to_its_stream() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(16)
+            .causal(true)
+            .seed(3)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        for min_batch in [1usize, 8] {
+            let cfg = ServeConfig { min_batch, ..ServeConfig::new(4, 2) };
+            let mut pool = StreamPool::new(&sess, cfg).unwrap();
+            let mut sched = Scheduler::new();
+            let ids: Vec<_> = (0..3).map(|_| pool.admit().unwrap()).collect();
+            for &id in &ids {
+                pool.submit(id, &[0.1; 4], &[0.2; 4], &[1.0, -1.0]).unwrap();
+            }
+            pool.arm_fault(ids[1]).unwrap();
+            let stats = sched.tick(&mut pool).unwrap();
+            assert_eq!(stats.batch, 2, "min_batch {min_batch}");
+            assert_eq!(stats.faulted, 1, "min_batch {min_batch}");
+            assert_eq!(pool.pending_tokens(), 0);
+            // the faulted stream's handle is dead, its slot reclaimed
+            assert_eq!(
+                pool.take_output(ids[1], &mut [0.0; 2]).unwrap_err(),
+                crate::serve::ServeError::UnknownStream
+            );
+            assert_eq!(pool.active_streams(), 2);
+            assert_eq!(pool.telemetry().faults(), 1);
+            assert_eq!(pool.telemetry().quarantines(), 0);
+            // survivors are served this tick and keep ticking
+            let mut out = [0.0f32; 2];
+            for &id in [ids[0], ids[2]].iter() {
+                pool.take_output(id, &mut out).unwrap();
+                assert!(out.iter().all(|x| x.is_finite()));
+                pool.submit(id, &[0.1; 4], &[0.2; 4], &[1.0, -1.0]).unwrap();
+            }
+            let stats = sched.tick(&mut pool).unwrap();
+            assert_eq!(stats.faulted, 0);
+            assert_eq!(stats.batch, 2);
+        }
+    }
+
+    /// Finite-but-huge inputs that overflow phi (or the fold
+    /// denominator) quarantine the stream instead of serving NaN — and
+    /// instead of poisoning the tick for everyone else.
+    #[test]
+    fn overflowing_phi_quarantines_the_stream() {
+        let sess = AttentionSpec::new(Kernel::Exp)
+            .head_dim(4)
+            .num_features(24)
+            .causal(true)
+            .seed(7)
+            .backend(Backend::HostFast)
+            .build()
+            .unwrap();
+        let cfg = ServeConfig { min_batch: 1, ..ServeConfig::new(4, 2) };
+        let mut pool = StreamPool::new(&sess, cfg).unwrap();
+        let mut sched = Scheduler::new();
+        let good = pool.admit().unwrap();
+        let bad = pool.admit().unwrap();
+        pool.submit(good, &[0.1; 4], &[0.2; 4], &[1.0, -1.0]).unwrap();
+        // finite values (they pass the submit screen) whose huge
+        // magnitudes overflow f32 in phi (degree>=2 features) or in the
+        // fold denominator; non-uniform so no Rademacher +/- draw can
+        // cancel w.x to zero
+        let huge = [1e25f32, 1.3e25, 1.7e25, 2.9e25];
+        pool.submit(bad, &huge, &huge, &[1.0, -1.0]).unwrap();
+        let stats = sched.tick(&mut pool).unwrap();
+        assert_eq!(stats.faulted, 1, "{stats:?}");
+        assert_eq!(stats.batch, 1);
+        assert_eq!(pool.telemetry().quarantines(), 1);
+        assert_eq!(
+            pool.take_output(bad, &mut [0.0; 2]).unwrap_err(),
+            crate::serve::ServeError::UnknownStream
+        );
+        // the survivor's output is clean
+        let mut out = [0.0f32; 2];
+        pool.take_output(good, &mut out).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()), "{out:?}");
     }
 }

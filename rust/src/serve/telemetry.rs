@@ -89,6 +89,15 @@ pub struct Telemetry {
     rejected_submits: u64,
     prefills: u64,
     prefill_tokens: u64,
+    // resilience counters (supervisor/scheduler events)
+    hibernations: u64,
+    restores: u64,
+    evictions: u64,
+    expirations: u64,
+    shed: u64,
+    faults: u64,
+    quarantines: u64,
+    nonfinite_rejects: u64,
     latency: Histogram,
 }
 
@@ -116,6 +125,14 @@ impl Telemetry {
             rejected_submits: 0,
             prefills: 0,
             prefill_tokens: 0,
+            hibernations: 0,
+            restores: 0,
+            evictions: 0,
+            expirations: 0,
+            shed: 0,
+            faults: 0,
+            quarantines: 0,
+            nonfinite_rejects: 0,
             latency: Histogram::new(),
         }
     }
@@ -157,6 +174,37 @@ impl Telemetry {
     pub(super) fn record_prefill(&mut self, tokens: usize) {
         self.prefills += 1;
         self.prefill_tokens += tokens as u64;
+    }
+
+    pub(super) fn record_hibernation(&mut self) {
+        self.hibernations += 1;
+    }
+
+    pub(super) fn record_restore(&mut self) {
+        self.restores += 1;
+    }
+
+    pub(super) fn record_eviction(&mut self) {
+        self.evictions += 1;
+    }
+
+    pub(super) fn record_expiration(&mut self) {
+        self.expirations += 1;
+    }
+
+    pub(super) fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    pub(super) fn record_fault(&mut self, quarantine: bool) {
+        self.faults += 1;
+        if quarantine {
+            self.quarantines += 1;
+        }
+    }
+
+    pub(super) fn record_nonfinite_reject(&mut self) {
+        self.nonfinite_rejects += 1;
     }
 
     /// Tokens served (across all streams).
@@ -210,6 +258,53 @@ impl Telemetry {
     /// from [`tokens`](Self::tokens), which tracks per-tick decode).
     pub fn prefill_tokens(&self) -> u64 {
         self.prefill_tokens
+    }
+
+    /// Streams hibernated (idle-deadline sweeps, capacity evictions,
+    /// and explicit/forced hibernations alike).
+    pub fn hibernations(&self) -> u64 {
+        self.hibernations
+    }
+
+    /// Hibernated streams restored on a later submit.
+    pub fn restores(&self) -> u64 {
+        self.restores
+    }
+
+    /// Hibernations forced by pool pressure (a subset of
+    /// [`hibernations`](Self::hibernations)): an idle stream was
+    /// evicted to make room for an admission/restore.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Streams expired by a deadline (untaken output, or hibernated
+    /// past the hibernate-expire bound).
+    pub fn expirations(&self) -> u64 {
+        self.expirations
+    }
+
+    /// Submissions shed by the overload governor (reject-newest).
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// Streams retired by fault isolation (fold panics plus
+    /// quarantines).
+    pub fn faults(&self) -> u64 {
+        self.faults
+    }
+
+    /// Streams quarantined by the denominator-health / phi screening
+    /// checks (a subset of [`faults`](Self::faults)).
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines
+    }
+
+    /// Tokens rejected at submit/prefill for non-finite q/k/v values
+    /// (the stream survives these).
+    pub fn nonfinite_rejects(&self) -> u64 {
+        self.nonfinite_rejects
     }
 
     /// Mean streams per non-idle tick (batch occupancy).
@@ -279,7 +374,9 @@ impl Telemetry {
             "tokens {:>8}  |  {:>10.0} tok/s  |  latency p50 {:>9.6}s p99 {:>9.6}s max {:>9.6}s\n\
              ticks  {:>8}  (batched {}, sequential {}, idle {})\n\
              batch  mean {:>6.2} max {:>4}  |  queue mean {:>6.2} max {:>4}\n\
-             admits {:>8}  rejected: admit {} submit {}  |  prefills {} ({} tokens)",
+             admits {:>8}  rejected: admit {} submit {}  |  prefills {} ({} tokens)\n\
+             resil  hibernations {} (evictions {}) restores {} expirations {} shed {}  |  \
+             faults {} (quarantines {}) nonfinite {}",
             self.tokens,
             self.tokens_per_sec(),
             self.latency_percentile(50.0),
@@ -298,6 +395,14 @@ impl Telemetry {
             self.rejected_submits,
             self.prefills,
             self.prefill_tokens,
+            self.hibernations,
+            self.evictions,
+            self.restores,
+            self.expirations,
+            self.shed,
+            self.faults,
+            self.quarantines,
+            self.nonfinite_rejects,
         )
     }
 
@@ -324,6 +429,14 @@ impl Telemetry {
             ("rejected_submits", Value::num(self.rejected_submits as f64)),
             ("prefills", Value::num(self.prefills as f64)),
             ("prefill_tokens", Value::num(self.prefill_tokens as f64)),
+            ("hibernations", Value::num(self.hibernations as f64)),
+            ("restores", Value::num(self.restores as f64)),
+            ("evictions", Value::num(self.evictions as f64)),
+            ("expirations", Value::num(self.expirations as f64)),
+            ("shed", Value::num(self.shed as f64)),
+            ("faults", Value::num(self.faults as f64)),
+            ("quarantines", Value::num(self.quarantines as f64)),
+            ("nonfinite_rejects", Value::num(self.nonfinite_rejects as f64)),
             (
                 "latency_s",
                 Value::obj(vec![

@@ -1,12 +1,25 @@
-//! Checkpoint serialization: a simple length-prefixed binary bundle.
+//! Checkpoint serialization: a simple length-prefixed binary bundle,
+//! plus the versioned stream-state record behind serve hibernation.
 //!
-//! Format (little-endian):
+//! Bundle format (little-endian):
 //!   magic "MACT" | u32 version | u32 count |
 //!   per tensor: u32 name_len | name bytes | u32 rank | u64 dims... |
 //!               f32 data...
 //!
 //! Used by coordinator::checkpoint to persist the opaque device-state
 //! buffer list between runs (and by tests for golden data).
+//!
+//! State-record format (little-endian, see [`write_state_record`]):
+//!   magic "MACS" | u32 version | u32 feat | u32 dv | u64 step |
+//!   z: feat f32 | S: feat*dv f32 | u32 fnv1a-32 checksum
+//!
+//! The record is the byte-exact `(S, z, step)` snapshot of one
+//! [`CausalState`](crate::attn::CausalState): `f32::to_le_bytes` round-
+//! trips every bit pattern (including non-finite ones), so a restored
+//! stream continues **bit-identically** to one that never left RAM.
+//! Everything is validated — magic, version, dimensions, length,
+//! checksum — before a single float is written into the caller's
+//! state, so a corrupt record can never half-restore a stream.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Result, Write};
@@ -16,6 +29,11 @@ use super::Tensor;
 
 const MAGIC: &[u8; 4] = b"MACT";
 const VERSION: u32 = 1;
+
+const STATE_MAGIC: &[u8; 4] = b"MACS";
+/// Version tag of the stream-state record (bump on layout change; old
+/// records are rejected, never misread).
+pub const STATE_VERSION: u32 = 1;
 
 pub fn write_bundle(path: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
     let mut w = BufWriter::new(File::create(path)?);
@@ -66,7 +84,15 @@ pub fn read_bundle(path: &Path) -> Result<Vec<(String, Tensor)>> {
         for _ in 0..rank {
             shape.push(read_u64(&mut r)? as usize);
         }
-        let numel: usize = shape.iter().product();
+        // checked: a hostile header can pick dims whose product wraps
+        // in release builds (e.g. [2^16; 4] wraps u64/usize to 0) and
+        // would sail under the size guard below
+        let mut numel: usize = 1;
+        for &d in &shape {
+            numel = numel
+                .checked_mul(d)
+                .ok_or_else(|| bad("tensor shape overflows"))?;
+        }
         if numel > 1 << 31 {
             return Err(bad("absurd tensor size"));
         }
@@ -92,6 +118,89 @@ pub fn read_tensor(path: &Path) -> Result<Tensor> {
         return Err(bad("expected single-tensor bundle"));
     }
     Ok(v.pop().unwrap().1)
+}
+
+/// Exact byte length of a state record for `feat` features and value
+/// width `dv`: header (magic + version + feat + dv + step) + payload
+/// (`z` then `S`) + trailing checksum.
+pub fn state_record_len(feat: usize, dv: usize) -> usize {
+    4 + 4 + 4 + 4 + 8 + 4 * feat + 4 * feat * dv + 4
+}
+
+/// Serialize a `(S, z, step)` stream snapshot into `buf` (cleared
+/// first; capacity is reused across calls, so a warm hibernation arena
+/// never reallocates). `s.len()` must be a multiple of `z.len()`.
+pub fn write_state_record(buf: &mut Vec<u8>, step: u64, s: &[f32], z: &[f32]) {
+    let feat = z.len();
+    assert!(feat > 0, "state record needs at least one feature");
+    assert_eq!(s.len() % feat, 0, "S is feat x dv");
+    let dv = s.len() / feat;
+    buf.clear();
+    buf.reserve(state_record_len(feat, dv));
+    buf.extend_from_slice(STATE_MAGIC);
+    buf.extend_from_slice(&STATE_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(feat as u32).to_le_bytes());
+    buf.extend_from_slice(&(dv as u32).to_le_bytes());
+    buf.extend_from_slice(&step.to_le_bytes());
+    for x in z {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    for x in s {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    let sum = fnv1a(buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+}
+
+/// Deserialize a state record into `s`/`z`, returning the step count.
+/// The record is validated in full — magic, version, dimensions,
+/// length, checksum — **before** either slice is written, so an error
+/// leaves the caller's state untouched.
+pub fn read_state_record(bytes: &[u8], s: &mut [f32], z: &mut [f32]) -> Result<u64> {
+    let feat = z.len();
+    if feat == 0 || s.len() % feat != 0 {
+        return Err(bad("state buffers are not feat x dv"));
+    }
+    let dv = s.len() / feat;
+    if bytes.len() != state_record_len(feat, dv) {
+        return Err(bad("state record length mismatch"));
+    }
+    if &bytes[..4] != STATE_MAGIC {
+        return Err(bad("not a MACS state record"));
+    }
+    let word = |at: usize| u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+    if word(4) != STATE_VERSION {
+        return Err(bad("unsupported state record version"));
+    }
+    if word(8) as usize != feat || word(12) as usize != dv {
+        return Err(bad("state record dims do not match the stream"));
+    }
+    let body = bytes.len() - 4;
+    if fnv1a(&bytes[..body]) != word(body) {
+        return Err(bad("state record checksum mismatch"));
+    }
+    let step = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let mut at = 24;
+    for x in z.iter_mut() {
+        *x = f32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+        at += 4;
+    }
+    for x in s.iter_mut() {
+        *x = f32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+        at += 4;
+    }
+    Ok(step)
+}
+
+/// FNV-1a (32-bit) over the record body — cheap corruption tripwire,
+/// not a cryptographic seal.
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -149,5 +258,99 @@ mod tests {
         write_tensor(&path, &t).unwrap();
         assert_eq!(read_tensor(&path).unwrap(), t);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// Regression: an adversarial header whose dims product wraps the
+    /// usize multiply exactly to 0 (2^16 ^ 4 = 2^64) must be rejected,
+    /// not silently read as a zero-element tensor with an absurd shape.
+    #[test]
+    fn rejects_overflowing_shape_header() {
+        let path = tmp("overflow");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.push(b'x');
+        bytes.extend_from_slice(&4u32.to_le_bytes()); // rank 4
+        for _ in 0..4 {
+            bytes.extend_from_slice(&(1u64 << 16).to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_bundle(&path).unwrap_err();
+        assert!(err.to_string().contains("overflows"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn state_record_round_trips_bit_exactly() {
+        let (feat, dv) = (5, 3);
+        // include non-finite and signed-zero payloads: hibernation must
+        // preserve the exact bit pattern, whatever the fold produced
+        let s: Vec<f32> = (0..feat * dv)
+            .map(|i| match i % 4 {
+                0 => -0.0,
+                1 => f32::NAN,
+                2 => f32::INFINITY,
+                _ => (i as f32).sin() * 1e-3,
+            })
+            .collect();
+        let z: Vec<f32> = (0..feat).map(|i| (i as f32) - 2.5).collect();
+        let mut buf = Vec::new();
+        write_state_record(&mut buf, 42, &s, &z);
+        assert_eq!(buf.len(), state_record_len(feat, dv));
+        let mut s2 = vec![0.0f32; feat * dv];
+        let mut z2 = vec![0.0f32; feat];
+        assert_eq!(read_state_record(&buf, &mut s2, &mut z2).unwrap(), 42);
+        for (a, b) in s.iter().zip(&s2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in z.iter().zip(&z2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// Corrupt/mismatched records fail closed and leave the target
+    /// state untouched.
+    #[test]
+    fn state_record_validates_before_writing() {
+        let (feat, dv) = (4, 2);
+        let s: Vec<f32> = (0..feat * dv).map(|i| i as f32).collect();
+        let z: Vec<f32> = (0..feat).map(|i| 0.5 + i as f32).collect();
+        let mut buf = Vec::new();
+        write_state_record(&mut buf, 7, &s, &z);
+
+        let sentinel_s = vec![99.0f32; feat * dv];
+        let sentinel_z = vec![-99.0f32; feat];
+        let check_untouched = |bytes: &[u8], what: &str| {
+            let mut s2 = sentinel_s.clone();
+            let mut z2 = sentinel_z.clone();
+            assert!(read_state_record(bytes, &mut s2, &mut z2).is_err(), "{what}");
+            assert_eq!(s2, sentinel_s, "{what} half-wrote S");
+            assert_eq!(z2, sentinel_z, "{what} half-wrote z");
+        };
+        // flipped payload byte -> checksum mismatch
+        let mut bitflip = buf.clone();
+        bitflip[30] ^= 0x40;
+        check_untouched(&bitflip, "bitflip");
+        // truncated record
+        check_untouched(&buf[..buf.len() - 5], "truncated");
+        // wrong magic / version
+        let mut magic = buf.clone();
+        magic[0] = b'Z';
+        check_untouched(&magic, "magic");
+        let mut ver = buf.clone();
+        ver[4] = 0xFE;
+        check_untouched(&ver, "version");
+        // dims that disagree with the destination stream
+        let mut s_wide = vec![0.0f32; feat * (dv + 1)];
+        let mut z_ok = vec![0.0f32; feat];
+        assert!(read_state_record(&buf, &mut s_wide, &mut z_ok).is_err());
+        // the pristine record still restores
+        let mut s2 = sentinel_s.clone();
+        let mut z2 = sentinel_z.clone();
+        assert_eq!(read_state_record(&buf, &mut s2, &mut z2).unwrap(), 7);
+        assert_eq!(s2, s);
+        assert_eq!(z2, z);
     }
 }

@@ -11,6 +11,55 @@
 
 use macformer::fastpath::simd;
 use macformer::serve::loadgen::{run, Arrival, LoadConfig};
+use macformer::serve::{FaultPlan, ResilienceConfig};
+
+/// Chaos variant of the arms check: a fixed fault plan (NaN tokens,
+/// one planned panic casualty, forced hibernate/restore cycles,
+/// stalled clients) plus an aggressive idle-hibernate deadline. On
+/// each arm, every surviving output prefix must still be bit-identical
+/// to that arm's own single-stream decode — i.e. hibernation snapshots
+/// round-trip bit-exactly under both the scalar and AVX2+FMA folds —
+/// and the planned casualty count is arm-independent because the fault
+/// plan is a pure function of (seed, stream, token).
+fn chaos_cfg() -> LoadConfig {
+    LoadConfig {
+        streams: 8,
+        tokens: 8,
+        head_dim: 6,
+        dv: 5,
+        num_features: 24,
+        arrival: Arrival::Closed,
+        seed: 0xC4A0,
+        faults: FaultPlan {
+            seed: 77,
+            nan_every: 3,
+            panics: 1,
+            hibernate_every: 2,
+            delay_every: 5,
+            delay_ticks: 2,
+        },
+        resilience: ResilienceConfig {
+            idle_hibernate_ticks: 2,
+            ..ResilienceConfig::default()
+        },
+        ..LoadConfig::default()
+    }
+}
+
+fn run_chaos(arm: &str) {
+    let report = run(&chaos_cfg()).unwrap();
+    assert_eq!(report.stream_errors, 0, "{arm} arm");
+    assert_eq!(report.faulted_streams, 1, "{arm} arm: exactly the planned casualty");
+    assert_eq!(report.poisoned_streams, 0, "{arm} arm: no poison escaped");
+    assert_eq!(
+        report.verified,
+        Some(true),
+        "{arm} arm: chaos survivors diverged (max |diff| {})",
+        report.max_abs_diff
+    );
+    assert!(report.telemetry.hibernations() > 0, "{arm} arm");
+    assert!(report.telemetry.restores() > 0, "{arm} arm");
+}
 
 #[test]
 fn serve_is_bit_identical_to_single_stream_on_both_arms() {
@@ -30,6 +79,7 @@ fn serve_is_bit_identical_to_single_stream_on_both_arms() {
     };
     // scalar arm: always available
     assert!(!simd::set_active(false));
+    run_chaos("scalar");
     let scalar = run(&cfg).unwrap();
     assert_eq!(scalar.stream_errors, 0);
     assert_eq!(
@@ -42,6 +92,7 @@ fn serve_is_bit_identical_to_single_stream_on_both_arms() {
     let vector_on = simd::set_active(true);
     assert_eq!(vector_on, simd::supported());
     if vector_on {
+        run_chaos("vector");
         let vector = run(&cfg).unwrap();
         assert_eq!(vector.stream_errors, 0);
         assert_eq!(

@@ -1,0 +1,175 @@
+//! Integration coverage for the serve resilience layer through the
+//! public API only: hibernation round trips are bit-identical (with a
+//! real disk spill directory), retired slots leak no latency residue
+//! into their successors (the telemetry-correctness fix), and the
+//! [`ServeError`] contract (Display / `code()` / `is_retryable()`) is
+//! pinned by an exhaustive match, so adding a variant without extending
+//! the contract table is a compile error here.
+
+use macformer::attn::{AttentionSession, AttentionSpec, Backend, Kernel};
+use macformer::serve::{
+    ResilienceConfig, Scheduler, ServeConfig, ServeError, SpillMode, StreamPool, StreamStatus,
+    Supervisor,
+};
+use macformer::util::rng::Rng;
+
+fn session(seed: u64) -> AttentionSession {
+    AttentionSpec::new(Kernel::Exp)
+        .head_dim(5)
+        .num_features(16)
+        .causal(true)
+        .seed(seed)
+        .backend(Backend::HostFast)
+        .build()
+        .unwrap()
+}
+
+/// Two streams fed identical tokens; one hibernates to a real spill
+/// directory twice mid-decode while the other never leaves its slot.
+/// Every output must match bit for bit — the snapshot/restore cycle
+/// (versioned record, file round trip, state rebuild) must be exact,
+/// not approximate — and the spill directory must hold a record file
+/// exactly while the stream is hibernated.
+#[test]
+fn disk_hibernation_round_trip_is_bit_identical_mid_decode() {
+    let dir = std::env::temp_dir().join(format!("macformer_resil_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sess = session(31);
+    let resilience =
+        ResilienceConfig { spill: SpillMode::Disk(dir.clone()), ..ResilienceConfig::default() };
+    let mut sup = Supervisor::new(&sess, ServeConfig::new(2, 3), resilience).unwrap();
+
+    let control = sup.open().unwrap();
+    let roamer = sup.open().unwrap();
+    assert_eq!(sup.status(control), Ok(StreamStatus::Active));
+
+    let mut rng = Rng::new(77);
+    let mut out_c = [0.0f32; 3];
+    let mut out_r = [0.0f32; 3];
+    for t in 0..10 {
+        let q: Vec<f32> = (0..5).map(|_| rng.normal() * 0.5).collect();
+        let k: Vec<f32> = (0..5).map(|_| rng.normal() * 0.5).collect();
+        let v: Vec<f32> = (0..3).map(|_| rng.normal()).collect();
+        // the roamer's submit transparently restores it when hibernated
+        sup.submit(control, &q, &k, &v).unwrap();
+        sup.submit(roamer, &q, &k, &v).unwrap();
+        sup.tick().unwrap();
+        sup.take_output(control, &mut out_c).unwrap();
+        sup.take_output(roamer, &mut out_r).unwrap();
+        for (a, b) in out_c.iter().zip(&out_r) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "token {t}: hibernated stream diverged ({a} vs {b})"
+            );
+        }
+        if t == 3 || t == 6 {
+            sup.hibernate(roamer).unwrap();
+            assert_eq!(sup.status(roamer), Ok(StreamStatus::Hibernated));
+            assert_eq!(sup.hibernated_streams(), 1);
+            assert_eq!(sup.active_streams(), 1);
+            let files = std::fs::read_dir(&dir).unwrap().count();
+            assert_eq!(files, 1, "one spill file while hibernated");
+        }
+    }
+    assert_eq!(sup.telemetry().hibernations(), 2);
+    assert_eq!(sup.telemetry().restores(), 2);
+    let files = std::fs::read_dir(&dir).unwrap().count();
+    assert_eq!(files, 0, "restore reclaims the spill file");
+    sup.close(control).unwrap();
+    sup.close(roamer).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A retired stream's submit timestamp must not leak into the latency
+/// accounting of the stream that reuses its slot. The first stream
+/// submits and then sits un-ticked for ~150ms before being retired; the
+/// successor submits and is served immediately — so the histogram's max
+/// must reflect only the successor's microseconds, not the orphaned
+/// 150ms.
+#[test]
+fn retired_slot_leaks_no_latency_residue_into_its_successor() {
+    let sess = session(32);
+    let mut pool = StreamPool::new(&sess, ServeConfig::new(1, 2)).unwrap();
+    let mut scheduler = Scheduler::new();
+
+    let orphan = pool.admit().unwrap();
+    pool.submit(orphan, &[0.1; 5], &[0.2; 5], &[1.0, -1.0]).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    // retire with the token still pending: the submission is dropped
+    // un-served, so its age must never reach the histogram
+    pool.retire(orphan).unwrap();
+
+    let heir = pool.admit().unwrap();
+    pool.submit(heir, &[0.1; 5], &[0.2; 5], &[1.0, -1.0]).unwrap();
+    scheduler.tick(&mut pool).unwrap();
+    let mut out = [0.0f32; 2];
+    pool.take_output(heir, &mut out).unwrap();
+
+    let tel = pool.telemetry();
+    assert_eq!(tel.tokens(), 1, "only the heir's token was served");
+    assert!(
+        tel.latency_max() < 0.1,
+        "stale submit timestamp leaked into latency: max {}s",
+        tel.latency_max()
+    );
+    pool.retire(heir).unwrap();
+}
+
+/// Every [`ServeError`] variant's wire contract in one table: stable
+/// `code()`, `is_retryable()` verdict, and a Display phrase. The match
+/// below lists every variant by name — no wildcard — so a new variant
+/// fails compilation here until the table (and the wire mapping it
+/// pins) is extended.
+#[test]
+fn serve_error_contract_is_exhaustive_and_stable() {
+    let cases: Vec<(ServeError, &str, bool, &str)> = vec![
+        (ServeError::PoolFull { capacity: 4 }, "pool_full", true, "pool full"),
+        (
+            ServeError::Backpressure { max_pending: 8, retry_after_ticks: 1 },
+            "backpressure",
+            true,
+            "backpressure",
+        ),
+        (ServeError::UnknownStream, "unknown_stream", false, "unknown stream"),
+        (ServeError::StreamBusy, "stream_busy", true, "stream busy"),
+        (ServeError::NoOutput, "no_output", true, "no output"),
+        (
+            ServeError::BadRow { what: "q", expected: 5, got: 3 },
+            "bad_row",
+            false,
+            "bad q row",
+        ),
+        (ServeError::NonFinite { what: "v" }, "non_finite", false, "non-finite v"),
+        (ServeError::Expired, "expired", false, "expired"),
+        (ServeError::Faulted, "faulted", false, "faulted"),
+        (ServeError::Session("backend refused".into()), "session", false, "backend refused"),
+    ];
+    for (err, code, retryable, phrase) in &cases {
+        // exhaustiveness guard: every variant, no `_` arm
+        match err {
+            ServeError::PoolFull { .. } => {}
+            ServeError::Backpressure { .. } => {}
+            ServeError::UnknownStream => {}
+            ServeError::StreamBusy => {}
+            ServeError::NoOutput => {}
+            ServeError::BadRow { .. } => {}
+            ServeError::NonFinite { .. } => {}
+            ServeError::Expired => {}
+            ServeError::Faulted => {}
+            ServeError::Session(_) => {}
+        }
+        assert_eq!(err.code(), *code);
+        assert_eq!(err.is_retryable(), *retryable, "{code}");
+        let rendered = err.to_string();
+        assert!(rendered.contains(phrase), "{code}: {rendered:?} missing {phrase:?}");
+        // the trait-object path (anyhow interop) renders identically
+        let dynamic: &dyn std::error::Error = err;
+        assert_eq!(dynamic.to_string(), rendered);
+    }
+    // one code per variant, and the table covers all ten
+    let mut codes: Vec<&str> = cases.iter().map(|c| c.1).collect();
+    codes.sort_unstable();
+    codes.dedup();
+    assert_eq!(codes.len(), cases.len());
+}

@@ -227,7 +227,7 @@ fn backpressure_and_stale_handles_are_clean_errors() {
     pool.submit(a, &[0.1; 4], &[0.2; 4], &[1.0, 2.0]).unwrap();
     // the queue bound (1) pushes back on the second stream this tick
     let err = pool.submit(b, &[0.1; 4], &[0.2; 4], &[1.0, 2.0]).unwrap_err();
-    assert!(matches!(err, ServeError::Backpressure { max_pending: 1 }), "{err}");
+    assert!(matches!(err, ServeError::Backpressure { max_pending: 1, .. }), "{err}");
     assert!(err.to_string().contains("backpressure"), "{err}");
     scheduler.tick(&mut pool).unwrap();
     // after the tick drains the queue, the stream can submit again
