@@ -1,0 +1,171 @@
+//! Bench §Serve/net — the HTTP/1.1 gateway vs in-process decode.
+//!
+//! Runs the same closed-loop workload twice — once through the
+//! in-process load generator (the serve subsystem's floor) and once
+//! through real TCP connections against an in-process [`Server`] — and
+//! writes both to `BENCH_serve_net.json` so the protocol overhead
+//! (tokens/sec ratio, added per-token latency) is diffable across PRs.
+//! Both runs verify bit-exact against independent single-stream
+//! decodes; the socket run must also finish with zero 5xx answers
+//! (the CI socket-smoke job greps `"verified":true` and
+//! `"http_5xx":0`).
+//!
+//! Knobs (env): MACFORMER_SERVE_STREAMS (16), MACFORMER_SERVE_TOKENS
+//! (48), MACFORMER_SERVE_PROMPT (8), MACFORMER_SERVE_D (16),
+//! MACFORMER_SERVE_DV (16), MACFORMER_SERVE_FEATURES (32),
+//! MACFORMER_SERVE_MIN_BATCH (2), MACFORMER_SERVE_WORKERS (4),
+//! MACFORMER_BENCH_KERNEL (exp), MACFORMER_BENCH_BACKEND (host),
+//! MACFORMER_THREADS. The chaos MACFORMER_FAULT_* env knobs apply to
+//! the socket arm ([`FaultPlan::from_env`]); NaN injection is ignored
+//! over the wire (the JSON grammar cannot spell it).
+//!
+//! Run with: `cargo bench --bench serve_net`
+//!
+//! [`Server`]: macformer::serve::Server
+
+use std::str::FromStr;
+
+use anyhow::{anyhow, Result};
+
+use macformer::attn::{Backend, Kernel};
+use macformer::fastpath;
+use macformer::serve::loadgen::{run, LoadConfig};
+use macformer::serve::net::{run_socket, NetConfig};
+use macformer::serve::{EngineSpec, FaultPlan, ServeConfig, Server};
+use macformer::util::json::Value;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_parse<T: FromStr>(name: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match std::env::var(name) {
+        Err(_) => Ok(default),
+        Ok(raw) => T::from_str(&raw).map_err(|e| anyhow!("{name}={raw:?}: {e}")),
+    }
+}
+
+fn main() -> Result<()> {
+    macformer::util::logging::init();
+    let streams = env_usize("MACFORMER_SERVE_STREAMS", 16);
+    let tokens = env_usize("MACFORMER_SERVE_TOKENS", 48);
+    let kernel: Kernel = env_parse("MACFORMER_BENCH_KERNEL", Kernel::Exp)?;
+    let backend: Backend = env_parse("MACFORMER_BENCH_BACKEND", Backend::HostFast)?;
+    let faults = FaultPlan::from_env();
+    let cfg = LoadConfig {
+        streams,
+        tokens,
+        prompt: env_usize("MACFORMER_SERVE_PROMPT", 8),
+        head_dim: env_usize("MACFORMER_SERVE_D", 16),
+        dv: env_usize("MACFORMER_SERVE_DV", 16),
+        num_features: env_usize("MACFORMER_SERVE_FEATURES", 32),
+        kernel,
+        backend,
+        min_batch: env_usize("MACFORMER_SERVE_MIN_BATCH", 2),
+        verify: true,
+        faults,
+        ..LoadConfig::default()
+    };
+    println!(
+        "=== §Serve/net: {streams} streams x {tokens} tokens, kernel {kernel}, \
+         backend {backend}, {} threads{} ===",
+        fastpath::parallel::num_threads(),
+        if faults.is_active() { " [CHAOS PLAN ACTIVE]" } else { "" }
+    );
+
+    // --- arm 1: in-process loadgen (the floor the gateway must chase) ---
+    // chaos off here: the in-process arm is the clean baseline
+    let inproc_cfg = LoadConfig { faults: FaultPlan::none(), ..cfg.clone() };
+    let inproc = run(&inproc_cfg)?;
+    println!("{}\n", inproc.render());
+
+    // --- arm 2: the same workload over real TCP ---
+    let spec = EngineSpec {
+        kernel,
+        backend,
+        head_dim: cfg.head_dim,
+        dv: cfg.dv,
+        num_features: cfg.num_features,
+        seed: cfg.seed,
+    };
+    let net = NetConfig {
+        workers: env_usize("MACFORMER_SERVE_WORKERS", 4),
+        ..NetConfig::default()
+    };
+    let serve_cfg = ServeConfig { min_batch: cfg.min_batch, ..ServeConfig::new(streams, cfg.dv) };
+    let server = Server::start(net, spec, serve_cfg, cfg.resilience.clone())?;
+    let addr = server.local_addr().to_string();
+    let socket = run_socket(&cfg, &addr)?;
+    println!("{}\n", socket.render());
+    server.shutdown();
+
+    let inproc_p50 = inproc.telemetry.latency_percentile(50.0);
+    let inproc_p99 = inproc.telemetry.latency_percentile(99.0);
+    let overhead = if socket.tokens_per_sec > 0.0 {
+        inproc.tokens_per_sec / socket.tokens_per_sec
+    } else {
+        f64::INFINITY
+    };
+    println!(
+        "socket {:.0} tok/s vs in-process {:.0} tok/s ({overhead:.2}x); \
+         added latency p50 {:+.6}s p99 {:+.6}s",
+        socket.tokens_per_sec,
+        inproc.tokens_per_sec,
+        socket.latency_p50 - inproc_p50,
+        socket.latency_p99 - inproc_p99,
+    );
+
+    let doc = Value::obj(vec![
+        ("streams", Value::num(streams as f64)),
+        ("tokens_per_stream", Value::num(tokens as f64)),
+        ("kernel", Value::str(kernel.name())),
+        ("threads", Value::num(fastpath::parallel::num_threads() as f64)),
+        ("simd_supported", Value::Bool(fastpath::simd::supported())),
+        ("chaos_active", Value::Bool(faults.is_active())),
+        ("inproc_tokens_per_sec", Value::num(inproc.tokens_per_sec)),
+        ("socket_tokens_per_sec", Value::num(socket.tokens_per_sec)),
+        ("throughput_overhead", Value::num(overhead)),
+        ("inproc_latency_p50_s", Value::num(inproc_p50)),
+        ("inproc_latency_p99_s", Value::num(inproc_p99)),
+        ("socket_latency_p50_s", Value::num(socket.latency_p50)),
+        ("socket_latency_p99_s", Value::num(socket.latency_p99)),
+        ("added_latency_p50_s", Value::num(socket.latency_p50 - inproc_p50)),
+        ("added_latency_p99_s", Value::num(socket.latency_p99 - inproc_p99)),
+        // CI socket-smoke greps the three below
+        ("verified", Value::Bool(inproc.verified == Some(true) && socket.verified == Some(true))),
+        ("http_5xx", Value::num(socket.http_5xx as f64)),
+        ("http_429", Value::num(socket.http_429 as f64)),
+        ("stream_errors", Value::num(inproc.stream_errors as f64 + socket.stream_errors as f64)),
+        ("faulted_streams", Value::num(socket.faulted_streams as f64)),
+        ("poisoned_streams", Value::num(socket.poisoned_streams as f64)),
+        ("inproc", inproc.to_json()),
+        ("socket", socket.to_json()),
+    ]);
+    std::fs::write("BENCH_serve_net.json", doc.to_string())?;
+    println!("serve/net reports written to BENCH_serve_net.json");
+
+    // Planned chaos casualties are expected under an active plan;
+    // escaped poison, unexpected errors, or any 5xx are never OK.
+    let degraded = inproc.verified != Some(true)
+        || socket.verified != Some(true)
+        || inproc.stream_errors > 0
+        || socket.stream_errors > 0
+        || socket.poisoned_streams > 0
+        || socket.http_5xx > 0;
+    if degraded {
+        return Err(anyhow!(
+            "serve/net degraded: in-process verified {:?} ({} errors), socket verified {:?} \
+             ({} errors, {} poisoned, {} x 5xx)",
+            inproc.verified,
+            inproc.stream_errors,
+            socket.verified,
+            socket.stream_errors,
+            socket.poisoned_streams,
+            socket.http_5xx
+        ));
+    }
+    Ok(())
+}

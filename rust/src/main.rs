@@ -11,7 +11,10 @@
 //!                                (--streams, --tokens, --prompt n for chunked
 //!                                prompt prefill at admission, --arrival
 //!                                closed|staggered|bursty, --kernel, --backend,
-//!                                --verify)
+//!                                --verify); --listen ADDR starts the HTTP/1.1
+//!                                gateway instead (--port-file writes the
+//!                                resolved port), --connect ADDR drives a
+//!                                running gateway over TCP
 //!   datagen                      dump synthetic dataset samples
 //!
 //! Every run prints a human summary to stdout and (with --out-json) a
@@ -281,7 +284,73 @@ fn cmd_serve(args: &Args) -> Result<()> {
         resilience,
     };
     let out_json = args.opt_flag("out-json");
+    let listen = args.opt_flag("listen");
+    let connect = args.opt_flag("connect");
+    let port_file = args.opt_flag("port-file");
+    let workers = args.usize_flag("workers", 4).map_err(|e| anyhow!(e))?;
+    let queue_depth = args.usize_flag("queue-depth", 128).map_err(|e| anyhow!(e))?;
+    let max_pending = args.usize_flag("max-pending", 0).map_err(|e| anyhow!(e))?;
     args.check_unknown().map_err(|e| anyhow!(e))?;
+    if listen.is_some() && connect.is_some() {
+        bail!("--listen and --connect are mutually exclusive");
+    }
+
+    // --listen: run the HTTP/1.1 gateway until killed
+    if let Some(addr) = listen {
+        use macformer::serve::net::NetConfig;
+        use macformer::serve::{EngineSpec, ServeConfig, Server};
+        let spec = EngineSpec {
+            kernel: cfg.kernel,
+            backend: cfg.backend,
+            head_dim: cfg.head_dim,
+            dv: cfg.dv,
+            num_features: cfg.num_features,
+            seed: cfg.seed,
+        };
+        let serve_cfg = ServeConfig {
+            max_pending,
+            min_batch: cfg.min_batch,
+            ..ServeConfig::new(cfg.streams, cfg.dv)
+        };
+        let net = NetConfig { addr, workers, queue_depth, ..NetConfig::default() };
+        let server = Server::start(net, spec, serve_cfg, cfg.resilience.clone())?;
+        let local = server.local_addr();
+        if let Some(path) = port_file {
+            std::fs::write(&path, local.port().to_string())?;
+        }
+        println!(
+            "serving on http://{local}  (kernel {}, d {}, dv {}, features {}, seed {}, {} streams)",
+            cfg.kernel, cfg.head_dim, cfg.dv, cfg.num_features, cfg.seed, cfg.streams
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    // --connect: drive a running gateway over TCP (socket loadgen)
+    if let Some(addr) = connect {
+        let report = macformer::serve::net::run_socket(&cfg, &addr)?;
+        println!("{}", report.render());
+        if let Some(path) = out_json {
+            std::fs::write(&path, report.to_json().to_string())?;
+        }
+        if report.verified == Some(false)
+            || report.stream_errors > 0
+            || report.poisoned_streams > 0
+            || report.http_5xx > 0
+        {
+            bail!(
+                "socket serve run degraded: verified {:?}, {} stream errors, \
+                 {} poisoned streams, {} x 5xx",
+                report.verified,
+                report.stream_errors,
+                report.poisoned_streams,
+                report.http_5xx
+            );
+        }
+        return Ok(());
+    }
+
     let report = loadgen::run(&cfg)?;
     println!("{}", report.render());
     if let Some(path) = out_json {

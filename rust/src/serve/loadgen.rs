@@ -282,13 +282,13 @@ impl LoadReport {
 }
 
 /// Row layout of one pre-generated token: `[q(d) | k(d) | v(dv)]`.
-fn token_stride(cfg: &LoadConfig) -> usize {
+pub(crate) fn token_stride(cfg: &LoadConfig) -> usize {
     2 * cfg.head_dim + cfg.dv
 }
 
 /// Pre-generate every stream's token rows (deterministic per stream, so
 /// verification replays the identical inputs).
-fn generate_tokens(cfg: &LoadConfig) -> Vec<Vec<f32>> {
+pub(crate) fn generate_tokens(cfg: &LoadConfig) -> Vec<Vec<f32>> {
     (0..cfg.streams)
         .map(|i| {
             let mut rng = Rng::new(cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
@@ -313,7 +313,7 @@ fn generate_tokens(cfg: &LoadConfig) -> Vec<Vec<f32>> {
 /// sets (the layout [`Scheduler::prefill`](super::Scheduler::prefill)
 /// takes), deterministic per stream so verification replays the
 /// identical prompt.
-fn generate_prompts(cfg: &LoadConfig) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+pub(crate) fn generate_prompts(cfg: &LoadConfig) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
     (0..cfg.streams)
         .map(|i| {
             let mut rng =

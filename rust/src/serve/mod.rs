@@ -44,6 +44,55 @@
 //!   stream, arrival pattern, kernel, backend, and fault plan, with
 //!   optional bit-exact verification against independent single-stream
 //!   decodes.
+//! * [`net`] — the dependency-free HTTP/1.1 frontend: a blocking
+//!   [`net::Server`] that parses requests incrementally, maps every
+//!   [`ServeError`] to an HTTP status + machine-readable body, and
+//!   streams decode tokens as Server-Sent Events over chunked
+//!   transfer encoding. `loadgen`'s socket mode
+//!   ([`net::run_socket`]) replays the same closed-loop workload over
+//!   real TCP connections and verifies survivors bit-identical to
+//!   in-process decode.
+//!
+//! # Quickstart over the wire
+//!
+//! Start a server (`--port-file` writes the resolved port when using
+//! port 0):
+//!
+//! ```text
+//! macformer serve --listen 127.0.0.1:8077 --streams 8
+//! ```
+//!
+//! then drive it with curl:
+//!
+//! ```text
+//! # liveness + engine counters
+//! curl -s http://127.0.0.1:8077/healthz
+//!
+//! # the model spec the server was built with (kernel, d, dv, seed...)
+//! curl -s http://127.0.0.1:8077/v1/spec
+//!
+//! # open a stream -> {"stream":"s-0"}
+//! curl -s -X POST http://127.0.0.1:8077/v1/streams
+//!
+//! # prefill a 2-token prompt (d = 4, dv = 2 here); returns the last
+//! # prompt row's attention output
+//! curl -s -X POST http://127.0.0.1:8077/v1/streams/s-0/prefill \
+//!   -d '{"q":[0.1,0,0,0, 0,0.1,0,0],"k":[0.2,0,0,0, 0,0.2,0,0],"v":[1,0, 0,1]}'
+//!
+//! # decode 1 token; the response is an SSE stream of
+//! #   data: {"t":0,"out":[...]}
+//! # frames followed by "event: done"
+//! curl -sN -X POST http://127.0.0.1:8077/v1/streams/s-0/decode \
+//!   -d '{"q":[0.3,0,0,0],"k":[0.1,0,0,0],"v":[0.5,0.5]}'
+//!
+//! # close the stream
+//! curl -s -X DELETE http://127.0.0.1:8077/v1/streams/s-0
+//! ```
+//!
+//! Errors are JSON with the stable [`ServeError::code`] token, e.g.
+//! `{"error":"backpressure","message":"...","retryable":true,
+//! "retry_after_ticks":1}` with HTTP status 429 and a `Retry-After`
+//! header.
 //!
 //! # Stream lifecycle state machine
 //!
@@ -114,12 +163,14 @@
 use std::fmt;
 
 pub mod loadgen;
+pub mod net;
 pub mod pool;
 pub mod resilience;
 pub mod scheduler;
 pub mod telemetry;
 
 pub use loadgen::{Arrival, LoadConfig, LoadReport};
+pub use net::{EngineSpec, NetConfig, NetLoadReport, Server};
 pub use pool::{StreamId, StreamPool};
 pub use resilience::{FaultPlan, ResilienceConfig, SessionId, SpillMode, StreamStatus, Supervisor};
 pub use scheduler::{Scheduler, TickStats};
@@ -170,6 +221,21 @@ impl ServeConfig {
     pub fn batch_threshold(&self) -> usize {
         self.min_batch.max(1)
     }
+
+    /// Reject configs that cannot admit a single stream or describe a
+    /// zero-length output row. Checked at [`StreamPool::new`] and
+    /// [`net::Server::start`] so a bad config is a typed
+    /// [`ServeError::InvalidConfig`] at construction, not a panic (or
+    /// a divide-by-zero) at first use.
+    pub fn validate(&self) -> Result<(), ServeError> {
+        if self.max_streams == 0 {
+            return Err(ServeError::InvalidConfig { what: "max_streams must be > 0" });
+        }
+        if self.dv == 0 {
+            return Err(ServeError::InvalidConfig { what: "dv must be > 0" });
+        }
+        Ok(())
+    }
 }
 
 /// Why the pool rejected a request. Every admission-control,
@@ -177,6 +243,12 @@ impl ServeConfig {
 /// reject-with-reason, never a panic.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
+    /// A [`ServeConfig`] that cannot work was rejected at construction
+    /// ([`ServeConfig::validate`]): `max_streams == 0` or `dv == 0`.
+    InvalidConfig {
+        /// Which knob was rejected and why.
+        what: &'static str,
+    },
     /// [`StreamPool::admit`] with every slot occupied.
     PoolFull {
         /// The pool's `max_streams`.
@@ -241,7 +313,8 @@ impl ServeError {
             | ServeError::Backpressure { .. }
             | ServeError::StreamBusy
             | ServeError::NoOutput => true,
-            ServeError::UnknownStream
+            ServeError::InvalidConfig { .. }
+            | ServeError::UnknownStream
             | ServeError::BadRow { .. }
             | ServeError::NonFinite { .. }
             | ServeError::Expired
@@ -254,6 +327,7 @@ impl ServeError {
     /// future network frontend; also the grep key in chaos logs).
     pub fn code(&self) -> &'static str {
         match self {
+            ServeError::InvalidConfig { .. } => "invalid_config",
             ServeError::PoolFull { .. } => "pool_full",
             ServeError::Backpressure { .. } => "backpressure",
             ServeError::UnknownStream => "unknown_stream",
@@ -271,6 +345,9 @@ impl ServeError {
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
+            ServeError::InvalidConfig { what } => {
+                write!(f, "invalid serve config: {what}")
+            }
             ServeError::PoolFull { capacity } => {
                 write!(f, "pool full: all {capacity} stream slots are admitted")
             }

@@ -1,0 +1,791 @@
+//! Socket mode for the load generator: drive a running [`Server`]
+//! over real TCP with one closed-loop client thread per stream, and
+//! verify survivor outputs **bit-identical** to in-process decode.
+//!
+//! The clients generate exactly the same deterministic token/prompt
+//! data as the in-process loadgen (same per-stream seeds), so the
+//! verification replay is the same too: every output row that crossed
+//! the wire — shortest round-trip f32 decimal both ways — must match
+//! the single-stream [`CausalState`](crate::attn::CausalState) replay
+//! bit for bit.
+//!
+//! Chaos over the wire reuses the seeded [`FaultPlan`], with two
+//! differences from the in-process drive loop, both forced by the
+//! protocol:
+//!
+//! * NaN injection is skipped — the JSON number grammar cannot spell
+//!   non-finite values, so the wire layer structurally rejects them
+//!   before the input screen ever runs (`tests/serve_net.rs` pins the
+//!   400 instead).
+//! * Planned fold panics and forced hibernations are driven through
+//!   the explicit `arm_fault` / `hibernate` endpoints at the planned
+//!   token positions, by splitting each stream's decode into segments
+//!   around them. The casualty then lands mid-stream as an
+//!   `event: error` frame on an already-committed 200 response —
+//!   never a 5xx status — and the surviving prefix still verifies.
+//!
+//! [`Server`]: super::Server
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::attn::AttentionSpec;
+use crate::serve::loadgen::{generate_prompts, generate_tokens, token_stride, LoadConfig};
+use crate::util::json::Value;
+
+use super::wire::{Scan, TokenBody};
+
+/// Give up on a retryable status after this many attempts — keeps a
+/// misbehaving server from hanging the generator.
+const MAX_RETRIES: usize = 100_000;
+
+// ---------------------------------------------------------------------------
+// a minimal blocking HTTP/1.1 client (keep-alive, chunked-aware)
+// ---------------------------------------------------------------------------
+
+struct Http {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    pos: usize,
+    out: String,
+}
+
+struct Head {
+    status: u16,
+    content_length: usize,
+    chunked: bool,
+    retry_after: Option<u64>,
+}
+
+impl Http {
+    fn connect(addr: &str) -> Result<Http> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_nodelay(true)?;
+        Ok(Http { stream, buf: Vec::with_capacity(4096), pos: 0, out: String::new() })
+    }
+
+    fn send(&mut self, method: &str, path: &str, body: &str) -> Result<()> {
+        use std::fmt::Write as _;
+        self.out.clear();
+        let _ = write!(
+            self.out,
+            "{method} {path} HTTP/1.1\r\nHost: macformer\r\nContent-Length: {}\r\n",
+            body.len()
+        );
+        if !body.is_empty() {
+            self.out.push_str("Content-Type: application/json\r\n");
+        }
+        self.out.push_str("\r\n");
+        self.out.push_str(body);
+        self.stream.write_all(self.out.as_bytes())?;
+        Ok(())
+    }
+
+    fn fill(&mut self) -> Result<()> {
+        // compact the consumed prefix before growing
+        if self.pos > 0 && self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk)?;
+        if n == 0 {
+            bail!("server closed the connection mid-response");
+        }
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(())
+    }
+
+    /// One `\n`-terminated line (CR stripped), as an owned string.
+    fn line(&mut self) -> Result<String> {
+        loop {
+            if let Some(off) = self.buf[self.pos..].iter().position(|&b| b == b'\n') {
+                let line = &self.buf[self.pos..self.pos + off];
+                let line = line.strip_suffix(b"\r").unwrap_or(line);
+                let s = String::from_utf8(line.to_vec()).context("non-UTF8 response line")?;
+                self.pos += off + 1;
+                return Ok(s);
+            }
+            self.fill()?;
+        }
+    }
+
+    /// Exactly `n` body bytes, owned.
+    fn take(&mut self, n: usize) -> Result<Vec<u8>> {
+        while self.buf.len() - self.pos < n {
+            self.fill()?;
+        }
+        let bytes = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(bytes)
+    }
+
+    fn read_head(&mut self) -> Result<Head> {
+        let status_line = self.line()?;
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad status line {status_line:?}"))?;
+        let mut head = Head { status, content_length: 0, chunked: false, retry_after: None };
+        loop {
+            let line = self.line()?;
+            if line.is_empty() {
+                return Ok(head);
+            }
+            let Some((name, value)) = line.split_once(':') else { continue };
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                head.content_length = value.parse().context("bad Content-Length")?;
+            } else if name.eq_ignore_ascii_case("transfer-encoding") {
+                head.chunked = value.eq_ignore_ascii_case("chunked");
+            } else if name.eq_ignore_ascii_case("retry-after") {
+                head.retry_after = value.parse().ok();
+            }
+        }
+    }
+
+    /// The next chunk payload of a chunked response; `None` at the
+    /// terminal chunk.
+    fn read_chunk(&mut self) -> Result<Option<Vec<u8>>> {
+        let size_line = self.line()?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .with_context(|| format!("bad chunk size {size_line:?}"))?;
+        if size == 0 {
+            let _ = self.line()?; // trailing CRLF
+            return Ok(None);
+        }
+        let payload = self.take(size)?;
+        let _ = self.line()?; // chunk-terminating CRLF
+        Ok(Some(payload))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SSE frames (the server writes exactly one frame per chunk)
+// ---------------------------------------------------------------------------
+
+enum Frame {
+    Token { t: usize, out: Vec<f32> },
+    Done,
+    Error { code: String, message: String },
+}
+
+fn parse_frame(payload: &[u8], dv: usize) -> Result<Frame> {
+    let text = std::str::from_utf8(payload).context("non-UTF8 SSE frame")?;
+    let mut event = "message";
+    let mut data = "";
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("event: ") {
+            event = rest.trim();
+        } else if let Some(rest) = line.strip_prefix("data: ") {
+            data = rest;
+        }
+    }
+    match event {
+        "done" => Ok(Frame::Done),
+        "error" => {
+            let mut scan = Scan::object(data.as_bytes()).map_err(|e| anyhow!("{e}"))?;
+            let (mut code, mut message) = (String::new(), String::new());
+            while let Some(key) = scan.next_key().map_err(|e| anyhow!("{e}"))? {
+                match key {
+                    b"error" => code = scan.str_value("error").map_err(|e| anyhow!("{e}"))?.into(),
+                    b"message" => {
+                        message = scan.str_value("message").map_err(|e| anyhow!("{e}"))?.into()
+                    }
+                    _ => scan.skip_value().map_err(|e| anyhow!("{e}"))?,
+                }
+            }
+            Ok(Frame::Error { code, message })
+        }
+        _ => {
+            let mut scan = Scan::object(data.as_bytes()).map_err(|e| anyhow!("{e}"))?;
+            let mut t = usize::MAX;
+            let mut out = Vec::with_capacity(dv);
+            while let Some(key) = scan.next_key().map_err(|e| anyhow!("{e}"))? {
+                match key {
+                    b"t" => t = scan.usize_value("t").map_err(|e| anyhow!("{e}"))?,
+                    b"out" => scan.f32_array_into("out", &mut out).map_err(|e| anyhow!("{e}"))?,
+                    _ => scan.skip_value().map_err(|e| anyhow!("{e}"))?,
+                }
+            }
+            if t == usize::MAX || out.len() != dv {
+                bail!("malformed token frame {data:?}");
+            }
+            Ok(Frame::Token { t, out })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the per-stream closed-loop client
+// ---------------------------------------------------------------------------
+
+/// What one stream's client thread brings home.
+struct StreamOutcome {
+    /// Decode output rows actually produced (prefix on a casualty).
+    outs: Vec<f32>,
+    produced: usize,
+    /// Last prompt-position output from prefill (empty without prompt).
+    prompt_last: Vec<f32>,
+    /// The planned fold panic landed (as an in-stream error frame).
+    faulted: bool,
+    /// Unexpected failures (protocol errors, wrong error codes, ...).
+    errors: u64,
+    http_429: u64,
+    http_5xx: u64,
+    /// Client-observed seconds between consecutive token frames.
+    latencies: Vec<f64>,
+}
+
+/// Where a stream's decode must pause for an out-of-band action.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Action {
+    ArmFault,
+    Hibernate,
+}
+
+/// Decode segment cut points for stream `i` under the fault plan:
+/// hibernate after its planned tokens, arm the fold panic right
+/// before its planned token (everything after the panic is moot).
+fn plan_cuts(cfg: &LoadConfig, i: usize) -> Vec<(usize, Action)> {
+    let plan = &cfg.faults;
+    let panic_at = (0..cfg.tokens)
+        .find(|&t| plan.inject_panic(i as u64, t as u64, cfg.tokens as u64));
+    let mut cuts = Vec::new();
+    for t in 0..cfg.tokens {
+        if plan.force_hibernate(i as u64, t as u64) {
+            let cut = t + 1;
+            if panic_at.is_none_or(|p| cut < p) && cut < cfg.tokens {
+                cuts.push((cut, Action::Hibernate));
+            }
+        }
+    }
+    if let Some(p) = panic_at {
+        cuts.push((p, Action::ArmFault));
+    }
+    cuts.sort_by_key(|&(c, _)| c);
+    cuts
+}
+
+/// Issue `method path` with retry on retryable admission statuses
+/// (429 ingress/backpressure, 503 pool-full). Returns the final head
+/// + body for the caller to interpret.
+fn request_with_retry(
+    http: &mut Http,
+    method: &str,
+    path: &str,
+    body: &str,
+    outcome: &mut StreamOutcome,
+) -> Result<(Head, Vec<u8>)> {
+    for _ in 0..MAX_RETRIES {
+        http.send(method, path, body)?;
+        let head = http.read_head()?;
+        if head.chunked {
+            // callers that expect a stream never come through here
+            bail!("unexpected chunked response for {method} {path}");
+        }
+        let resp_body = http.take(head.content_length)?;
+        match head.status {
+            429 => outcome.http_429 += 1,
+            503 => outcome.http_5xx += 1,
+            _ => return Ok((head, resp_body)),
+        }
+        let ticks = head.retry_after.unwrap_or(1).max(1);
+        std::thread::sleep(Duration::from_millis(ticks.min(50)));
+    }
+    bail!("{method} {path}: still rejected after {MAX_RETRIES} retries")
+}
+
+fn body_for(tokens: &[f32], d: usize, dv: usize, range: std::ops::Range<usize>) -> String {
+    let stride = 2 * d + dv;
+    let mut q = Vec::with_capacity(range.len() * d);
+    let mut k = Vec::with_capacity(range.len() * d);
+    let mut v = Vec::with_capacity(range.len() * dv);
+    for t in range {
+        let row = &tokens[t * stride..(t + 1) * stride];
+        q.extend_from_slice(&row[..d]);
+        k.extend_from_slice(&row[d..2 * d]);
+        v.extend_from_slice(&row[2 * d..]);
+    }
+    let mut body = String::with_capacity((q.len() + k.len() + v.len()) * 12);
+    body.push_str("{\"q\":");
+    super::wire::write_f32_array(&mut body, &q);
+    body.push_str(",\"k\":");
+    super::wire::write_f32_array(&mut body, &k);
+    body.push_str(",\"v\":");
+    super::wire::write_f32_array(&mut body, &v);
+    body.push('}');
+    body
+}
+
+/// Drive one stream end to end over its own connection.
+fn drive_stream(
+    addr: &str,
+    cfg: &LoadConfig,
+    i: usize,
+    tokens: &[f32],
+    prompt: &(Vec<f32>, Vec<f32>, Vec<f32>),
+) -> Result<StreamOutcome> {
+    let (d, dv) = (cfg.head_dim, cfg.dv);
+    let mut outcome = StreamOutcome {
+        outs: vec![0.0; cfg.tokens * dv],
+        produced: 0,
+        prompt_last: Vec::new(),
+        faulted: false,
+        errors: 0,
+        http_429: 0,
+        http_5xx: 0,
+        latencies: Vec::new(),
+    };
+    let mut http = Http::connect(addr)?;
+
+    // open
+    let (head, resp) = request_with_retry(&mut http, "POST", "/v1/streams", "{}", &mut outcome)?;
+    if head.status != 201 {
+        bail!("open: expected 201, got {}", head.status);
+    }
+    let mut scan = Scan::object(&resp).map_err(|e| anyhow!("open body: {e}"))?;
+    let mut sid = String::new();
+    while let Some(key) = scan.next_key().map_err(|e| anyhow!("open body: {e}"))? {
+        match key {
+            b"stream" => sid = scan.str_value("stream").map_err(|e| anyhow!("{e}"))?.into(),
+            _ => scan.skip_value().map_err(|e| anyhow!("{e}"))?,
+        }
+    }
+    if sid.is_empty() {
+        bail!("open: no stream id in response");
+    }
+
+    // prefill
+    if cfg.prompt > 0 {
+        let (pq, pk, pv) = prompt;
+        let mut body = String::new();
+        body.push_str("{\"q\":");
+        super::wire::write_f32_array(&mut body, pq);
+        body.push_str(",\"k\":");
+        super::wire::write_f32_array(&mut body, pk);
+        body.push_str(",\"v\":");
+        super::wire::write_f32_array(&mut body, pv);
+        body.push('}');
+        let path = format!("/v1/streams/{sid}/prefill");
+        let (head, resp) = request_with_retry(&mut http, "POST", &path, &body, &mut outcome)?;
+        if head.status != 200 {
+            bail!("prefill: expected 200, got {}", head.status);
+        }
+        let mut scan = Scan::object(&resp).map_err(|e| anyhow!("prefill body: {e}"))?;
+        while let Some(key) = scan.next_key().map_err(|e| anyhow!("prefill body: {e}"))? {
+            match key {
+                b"out" => scan
+                    .f32_array_into("out", &mut outcome.prompt_last)
+                    .map_err(|e| anyhow!("{e}"))?,
+                _ => scan.skip_value().map_err(|e| anyhow!("{e}"))?,
+            }
+        }
+        if outcome.prompt_last.len() != dv {
+            bail!("prefill: expected {dv} output values, got {}", outcome.prompt_last.len());
+        }
+    }
+
+    // decode, split into segments around planned chaos actions
+    let cuts = plan_cuts(cfg, i);
+    let mut expect_fault = false;
+    let decode_path = format!("/v1/streams/{sid}/decode");
+    let mut segments: Vec<(std::ops::Range<usize>, Option<Action>)> = Vec::new();
+    let mut prev = 0usize;
+    for &(cut, action) in &cuts {
+        segments.push((prev..cut, Some(action)));
+        prev = cut;
+    }
+    segments.push((prev..cfg.tokens, None));
+
+    'segments: for (range, action) in segments {
+        if !range.is_empty() {
+            let body = body_for(tokens, d, dv, range.clone());
+            // admission retry loop: a 429/503 answer means nothing
+            // streamed yet, so the whole segment can be re-sent
+            let mut streamed = false;
+            for _ in 0..MAX_RETRIES {
+                http.send("POST", &decode_path, &body)?;
+                let head = http.read_head()?;
+                if !head.chunked {
+                    let _resp = http.take(head.content_length)?;
+                    match head.status {
+                        429 => outcome.http_429 += 1,
+                        503 => outcome.http_5xx += 1,
+                        s => bail!("decode: unexpected status {s}"),
+                    }
+                    let ticks = head.retry_after.unwrap_or(1).max(1);
+                    std::thread::sleep(Duration::from_millis(ticks.min(50)));
+                    continue;
+                }
+                // committed stream: read frames until done/error
+                let mut last = Instant::now();
+                while let Some(payload) = http.read_chunk()? {
+                    match parse_frame(&payload, dv)? {
+                        Frame::Token { t, out } => {
+                            let now = Instant::now();
+                            outcome.latencies.push((now - last).as_secs_f64());
+                            last = now;
+                            let abs = range.start + t;
+                            if abs >= cfg.tokens {
+                                bail!("decode: token index {t} out of segment range");
+                            }
+                            outcome.outs[abs * dv..(abs + 1) * dv].copy_from_slice(&out);
+                            outcome.produced = abs + 1;
+                        }
+                        Frame::Done => {}
+                        Frame::Error { code, message } => {
+                            if expect_fault && code == "faulted" {
+                                outcome.faulted = true;
+                            } else {
+                                log::warn!(
+                                    "socket loadgen: stream {i} unexpected error frame \
+                                     {code}: {message}"
+                                );
+                                outcome.errors += 1;
+                            }
+                        }
+                    }
+                }
+                streamed = true;
+                break;
+            }
+            if !streamed {
+                bail!("decode: still rejected after {MAX_RETRIES} retries");
+            }
+            if outcome.faulted || outcome.errors > 0 {
+                break 'segments;
+            }
+        }
+        match action {
+            None => {}
+            Some(Action::Hibernate) => {
+                let path = format!("/v1/streams/{sid}/hibernate");
+                let (head, _) = request_with_retry(&mut http, "POST", &path, "{}", &mut outcome)?;
+                if head.status != 200 {
+                    log::warn!("socket loadgen: stream {i} hibernate got {}", head.status);
+                    outcome.errors += 1;
+                }
+            }
+            Some(Action::ArmFault) => {
+                let path = format!("/v1/streams/{sid}/arm_fault");
+                let (head, _) = request_with_retry(&mut http, "POST", &path, "{}", &mut outcome)?;
+                if head.status != 200 {
+                    log::warn!("socket loadgen: stream {i} arm_fault got {}", head.status);
+                    outcome.errors += 1;
+                }
+                expect_fault = true;
+            }
+        }
+    }
+
+    // close works in any state, faulted included
+    let path = format!("/v1/streams/{sid}");
+    let (head, _) = request_with_retry(&mut http, "DELETE", &path, "", &mut outcome)?;
+    if head.status != 200 {
+        log::warn!("socket loadgen: stream {i} close got {}", head.status);
+        outcome.errors += 1;
+    }
+    Ok(outcome)
+}
+
+// ---------------------------------------------------------------------------
+// the report
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`run_socket`] drive: like
+/// [`LoadReport`](crate::serve::loadgen::LoadReport) but measured from
+/// the client side of real TCP connections.
+#[derive(Debug, Clone)]
+pub struct NetLoadReport {
+    pub streams: usize,
+    pub tokens_per_stream: usize,
+    pub prompt_tokens: usize,
+    pub elapsed_s: f64,
+    pub tokens_total: u64,
+    pub tokens_per_sec: f64,
+    /// Client-observed per-token latency percentiles (seconds).
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+    pub latency_max: f64,
+    /// Backpressure/ingress rejects answered `429` (then retried).
+    pub http_429: u64,
+    /// `5xx` answers observed (zero on a clean run; the CI socket
+    /// smoke greps this).
+    pub http_5xx: u64,
+    /// Unexpected failures across all streams (zero on any run whose
+    /// chaos stayed contained).
+    pub stream_errors: u64,
+    /// Planned fold-panic casualties, surfaced as in-stream error
+    /// frames.
+    pub faulted_streams: u64,
+    /// Streams whose wire outputs diverged from the single-stream
+    /// replay.
+    pub poisoned_streams: u64,
+    pub verified: Option<bool>,
+    pub max_abs_diff: f64,
+    pub prefill_max_scaled_diff: f64,
+}
+
+impl NetLoadReport {
+    pub fn render(&self) -> String {
+        let verified = match self.verified {
+            Some(true) => "bit-identical to in-process decode".to_string(),
+            Some(false) => format!("MISMATCH (max |diff| {})", self.max_abs_diff),
+            None => "skipped".to_string(),
+        };
+        format!(
+            "serve/net: {} streams x {} tokens (+{} prompt) over TCP\n\
+             {:>10.0} tokens/sec  ({} tokens in {:.3}s)\n\
+             latency   p50 {:.6}s  p99 {:.6}s  max {:.6}s  (client-observed)\n\
+             http      {} x 429 (retried), {} x 5xx, {} stream errors\n\
+             resil     {} faulted (planned), {} poisoned\n\
+             verify    {}",
+            self.streams,
+            self.tokens_per_stream,
+            self.prompt_tokens,
+            self.tokens_per_sec,
+            self.tokens_total,
+            self.elapsed_s,
+            self.latency_p50,
+            self.latency_p99,
+            self.latency_max,
+            self.http_429,
+            self.http_5xx,
+            self.stream_errors,
+            self.faulted_streams,
+            self.poisoned_streams,
+            verified,
+        )
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("streams", Value::num(self.streams as f64)),
+            ("tokens_per_stream", Value::num(self.tokens_per_stream as f64)),
+            ("prompt_tokens", Value::num(self.prompt_tokens as f64)),
+            ("elapsed_s", Value::num(self.elapsed_s)),
+            ("tokens_total", Value::num(self.tokens_total as f64)),
+            ("tokens_per_sec", Value::num(self.tokens_per_sec)),
+            ("latency_p50_s", Value::num(self.latency_p50)),
+            ("latency_p99_s", Value::num(self.latency_p99)),
+            ("latency_max_s", Value::num(self.latency_max)),
+            ("http_429", Value::num(self.http_429 as f64)),
+            ("http_5xx", Value::num(self.http_5xx as f64)),
+            ("stream_errors", Value::num(self.stream_errors as f64)),
+            ("faulted_streams", Value::num(self.faulted_streams as f64)),
+            ("poisoned_streams", Value::num(self.poisoned_streams as f64)),
+            (
+                "verified",
+                match self.verified {
+                    Some(b) => Value::Bool(b),
+                    None => Value::Null,
+                },
+            ),
+            ("max_abs_diff", Value::num(self.max_abs_diff)),
+            ("prefill_max_scaled_diff", Value::num(self.prefill_max_scaled_diff)),
+        ])
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Drive a running server at `addr` with `cfg.streams` concurrent TCP
+/// clients and verify survivors bit-identical to in-process decode.
+///
+/// The server must have been started with the same attention spec and
+/// seed (`GET /v1/spec` is checked first, so a mismatch is a clear
+/// error instead of a verification mystery).
+pub fn run_socket(cfg: &LoadConfig, addr: &str) -> Result<NetLoadReport> {
+    if cfg.streams == 0 || cfg.tokens == 0 {
+        bail!("socket loadgen: streams and tokens must be > 0");
+    }
+    check_spec(cfg, addr)?;
+    let tokens = generate_tokens(cfg);
+    let prompts = generate_prompts(cfg);
+
+    let t0 = Instant::now();
+    let outcomes: Vec<Result<StreamOutcome>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.streams)
+            .map(|i| {
+                let tokens = &tokens[i];
+                let prompt = &prompts[i];
+                scope.spawn(move || drive_stream(addr, cfg, i, tokens, prompt))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("client thread panicked"))))
+            .collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut stream_errors = 0u64;
+    let mut http_429 = 0u64;
+    let mut http_5xx = 0u64;
+    let mut faulted_streams = 0u64;
+    let mut failed = vec![false; cfg.streams];
+    let mut produced = vec![0usize; cfg.streams];
+    let mut outs: Vec<Vec<f32>> = vec![Vec::new(); cfg.streams];
+    let mut prompt_last: Vec<Vec<f32>> = vec![Vec::new(); cfg.streams];
+    let mut latencies: Vec<f64> = Vec::new();
+    for (i, res) in outcomes.into_iter().enumerate() {
+        match res {
+            Ok(o) => {
+                stream_errors += o.errors;
+                http_429 += o.http_429;
+                http_5xx += o.http_5xx;
+                if o.faulted {
+                    faulted_streams += 1;
+                }
+                failed[i] = o.errors > 0;
+                produced[i] = o.produced;
+                outs[i] = o.outs;
+                prompt_last[i] = o.prompt_last;
+                latencies.extend(o.latencies);
+            }
+            Err(e) => {
+                log::warn!("socket loadgen: stream {i} client failed: {e}");
+                stream_errors += 1;
+                failed[i] = true;
+            }
+        }
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+
+    // replay every survivor through the single-stream path
+    let (d, dv, stride) = (cfg.head_dim, cfg.dv, token_stride(cfg));
+    let (verified, max_abs_diff, prefill_max_scaled_diff, poisoned_streams) = if cfg.verify {
+        let session = AttentionSpec::new(cfg.kernel)
+            .head_dim(d)
+            .num_features(cfg.num_features)
+            .causal(true)
+            .seed(cfg.seed)
+            .backend(cfg.backend)
+            .build()
+            .context("socket loadgen: building the verification session")?;
+        let mut ok = stream_errors == 0;
+        let mut max_diff = 0.0f64;
+        let mut prefill_diff = 0.0f64;
+        let mut poisoned = 0u64;
+        let mut row = vec![0.0f32; dv];
+        for i in 0..cfg.streams {
+            if failed[i] {
+                ok = false;
+                continue;
+            }
+            let mut stream_poisoned = false;
+            let mut state = session.begin_decode(dv)?;
+            let (pq, pk, pv) = &prompts[i];
+            for t in 0..cfg.prompt {
+                state.append_token_into(
+                    &pq[t * d..(t + 1) * d],
+                    &pk[t * d..(t + 1) * d],
+                    &pv[t * dv..(t + 1) * dv],
+                    &mut row,
+                )?;
+            }
+            if cfg.prompt > 0 {
+                for (a, b) in prompt_last[i].iter().zip(&row) {
+                    let diff = ((a - b).abs() / b.abs().max(1.0)) as f64;
+                    prefill_diff = prefill_diff.max(diff);
+                    if !diff.is_finite() || diff > 1e-5 {
+                        ok = false;
+                        stream_poisoned = true;
+                    }
+                }
+            }
+            for t in 0..produced[i] {
+                let tok = &tokens[i][t * stride..(t + 1) * stride];
+                state.append_token_into(&tok[..d], &tok[d..2 * d], &tok[2 * d..], &mut row)?;
+                for (a, b) in outs[i][t * dv..(t + 1) * dv].iter().zip(&row) {
+                    if a.to_bits() != b.to_bits() {
+                        ok = false;
+                        stream_poisoned = true;
+                        max_diff = max_diff.max((a - b).abs() as f64);
+                    }
+                }
+            }
+            if stream_poisoned {
+                poisoned += 1;
+            }
+        }
+        (Some(ok), max_diff, prefill_diff, poisoned)
+    } else {
+        (None, 0.0, 0.0, failed.iter().filter(|&&f| f).count() as u64)
+    };
+
+    let tokens_total: u64 = produced.iter().map(|&p| p as u64).sum();
+    Ok(NetLoadReport {
+        streams: cfg.streams,
+        tokens_per_stream: cfg.tokens,
+        prompt_tokens: cfg.prompt,
+        elapsed_s: elapsed,
+        tokens_total,
+        tokens_per_sec: if elapsed > 0.0 { tokens_total as f64 / elapsed } else { 0.0 },
+        latency_p50: percentile(&latencies, 50.0),
+        latency_p99: percentile(&latencies, 99.0),
+        latency_max: latencies.last().copied().unwrap_or(0.0),
+        http_429,
+        http_5xx,
+        stream_errors,
+        faulted_streams,
+        poisoned_streams,
+        verified,
+        max_abs_diff,
+        prefill_max_scaled_diff,
+    })
+}
+
+/// Assert the server's `/v1/spec` matches the generator config, so
+/// bit-exact verification is comparing like with like.
+fn check_spec(cfg: &LoadConfig, addr: &str) -> Result<()> {
+    let mut http = Http::connect(addr)?;
+    http.send("GET", "/v1/spec", "")?;
+    let head = http.read_head()?;
+    if head.status != 200 {
+        bail!("GET /v1/spec: status {}", head.status);
+    }
+    let body = http.take(head.content_length)?;
+    let mut scan = Scan::object(&body).map_err(|e| anyhow!("spec body: {e}"))?;
+    let mut fields: Vec<(String, String)> = Vec::new();
+    while let Some(key) = scan.next_key().map_err(|e| anyhow!("spec body: {e}"))? {
+        let name = String::from_utf8_lossy(key).into_owned();
+        match key {
+            b"kernel" | b"backend" => {
+                let v = scan.str_value("spec").map_err(|e| anyhow!("{e}"))?;
+                fields.push((name, v.to_string()));
+            }
+            b"head_dim" | b"dv" | b"num_features" | b"seed" => {
+                let v = scan.usize_value("spec").map_err(|e| anyhow!("{e}"))?;
+                fields.push((name, v.to_string()));
+            }
+            _ => scan.skip_value().map_err(|e| anyhow!("{e}"))?,
+        }
+    }
+    let expect = [
+        ("kernel", cfg.kernel.name().to_string()),
+        ("head_dim", cfg.head_dim.to_string()),
+        ("dv", cfg.dv.to_string()),
+        ("num_features", cfg.num_features.to_string()),
+        ("seed", cfg.seed.to_string()),
+    ];
+    for (name, want) in expect {
+        let got = fields.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str());
+        if got != Some(want.as_str()) {
+            bail!("spec mismatch: server {name}={got:?}, loadgen expects {want:?}");
+        }
+    }
+    Ok(())
+}

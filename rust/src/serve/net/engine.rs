@@ -1,0 +1,446 @@
+//! The engine thread: owns the [`AttentionSession`] + [`Supervisor`]
+//! and runs the scheduler tick loop, fed by a **bounded** ingress
+//! queue of [`Cmd`]s from the connection workers.
+//!
+//! The compute side is single-threaded by design — the scheduler's
+//! micro-batch tick already spreads the fold across the fastpath
+//! worker pool — so the network frontend's only job is to get typed
+//! commands onto this thread cheaply and stream results back. The
+//! ingress queue is a `sync_channel`: when it fills, workers answer
+//! `429 ingress_full` instead of queueing unbounded memory.
+//!
+//! Decode requests become [`Job`]s driven closed-loop (one token in
+//! flight per job, exactly like the in-process loadgen): submit →
+//! tick → collect → next token, with one tick serving every job's
+//! pending token as a micro-batch. Error policy, which the e2e tests
+//! pin down:
+//!
+//! * **Before the first token** ships, any submit error — including
+//!   retryable backpressure — is reported as a typed
+//!   [`Event::Reject`], so the worker can answer a real HTTP status
+//!   (`429` + `Retry-After`, `409`, ...) and the client decides when
+//!   to retry.
+//! * **After streaming starts** the response is committed (`200`
+//!   chunked), so retryable errors are retried here transparently,
+//!   and terminal errors become an in-stream [`Event::Error`].
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::time::Duration;
+
+use crate::attn::{AttentionSession, AttentionSpec};
+use crate::serve::resilience::{ResilienceConfig, SessionId, Supervisor};
+use crate::serve::{ServeConfig, ServeError, Telemetry};
+
+/// Everything the engine needs to build its session: the attention
+/// spec fields the wire protocol exposes via `GET /v1/spec`.
+#[derive(Debug, Clone)]
+pub struct EngineSpec {
+    pub kernel: crate::attn::Kernel,
+    pub backend: crate::attn::Backend,
+    pub head_dim: usize,
+    pub dv: usize,
+    pub num_features: usize,
+    pub seed: u64,
+}
+
+/// A command from a connection worker. Every variant carries its own
+/// reply channel; the engine never blocks on a worker.
+pub enum Cmd {
+    Open { reply: Sender<Result<u64, ServeError>> },
+    Close { sid: u64, reply: Sender<Result<(), ServeError>> },
+    Prefill {
+        sid: u64,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        reply: Sender<Result<(usize, Vec<f32>), ServeError>>,
+    },
+    Decode { sid: u64, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>, events: Sender<Event> },
+    ArmFault { sid: u64, reply: Sender<Result<(), ServeError>> },
+    Hibernate { sid: u64, reply: Sender<Result<(), ServeError>> },
+    Health { reply: Sender<Health> },
+    Shutdown,
+}
+
+/// One streamed decode event (one SSE frame).
+pub enum Event {
+    /// The request failed before any token was produced; the worker
+    /// still owns the HTTP status line.
+    Reject(ServeError),
+    /// Output row for relative token `t` of this request.
+    Token { t: usize, out: Vec<f32> },
+    /// All requested tokens produced.
+    Done,
+    /// Terminal mid-stream failure; the stream stays open for
+    /// `DELETE` but will not produce further tokens.
+    Error(ServeError),
+}
+
+/// Snapshot answered to `GET /healthz`.
+pub struct Health {
+    pub tick_no: u64,
+    pub active_streams: usize,
+    pub hibernated_streams: usize,
+    pub jobs: usize,
+    pub telemetry: Telemetry,
+}
+
+/// One in-flight decode request (closed loop: at most one token
+/// pending per job).
+struct Job {
+    sid: u64,
+    id: SessionId,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Tokens in this request.
+    n: usize,
+    /// Next token to submit / collect.
+    t: usize,
+    in_flight: bool,
+    /// At least one token has shipped — the HTTP response is
+    /// committed, so errors are now in-stream events.
+    started: bool,
+    events: Sender<Event>,
+    dead: bool,
+}
+
+/// The engine thread's whole mutable state: supervisor, the wire-id
+/// map, and the in-flight decode jobs.
+struct Engine<'s> {
+    sup: Supervisor<'s>,
+    /// wire id -> supervised session; u64 keys keep SessionId private
+    sessions: HashMap<u64, SessionId>,
+    next_sid: u64,
+    /// one decode job per stream at a time (closed-loop per session)
+    busy: HashSet<u64>,
+    jobs: Vec<Job>,
+    d: usize,
+    dv: usize,
+}
+
+/// Run the engine loop until [`Cmd::Shutdown`] or every sender hangs
+/// up. `ready` reports session construction (the only fallible setup)
+/// back to [`Server::start`](super::Server::start).
+pub(super) fn run(
+    spec: EngineSpec,
+    serve: ServeConfig,
+    resilience: ResilienceConfig,
+    ingress: Receiver<Cmd>,
+    ready: Sender<Result<(), String>>,
+) {
+    if let Err(e) = serve.validate() {
+        let _ = ready.send(Err(e.to_string()));
+        return;
+    }
+    let session: AttentionSession = match AttentionSpec::new(spec.kernel)
+        .head_dim(spec.head_dim)
+        .num_features(spec.num_features)
+        .causal(true)
+        .seed(spec.seed)
+        .backend(spec.backend)
+        .build()
+    {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready.send(Err(format!("building the attention session: {e}")));
+            return;
+        }
+    };
+    let sup = match Supervisor::new(&session, serve, resilience) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready.send(Err(format!("building the supervisor: {e}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+
+    let mut eng = Engine {
+        sup,
+        sessions: HashMap::new(),
+        next_sid: 1,
+        busy: HashSet::new(),
+        jobs: Vec::new(),
+        d: spec.head_dim,
+        dv: spec.dv,
+    };
+
+    loop {
+        // --- ingest: block when idle, drain without blocking otherwise ---
+        if eng.jobs.is_empty() {
+            match ingress.recv() {
+                Ok(cmd) => {
+                    if eng.handle_cmd(cmd) {
+                        return;
+                    }
+                }
+                Err(_) => return, // every worker is gone
+            }
+        }
+        while let Ok(cmd) = ingress.try_recv() {
+            if eng.handle_cmd(cmd) {
+                return;
+            }
+        }
+
+        let submitted = eng.submit_phase();
+        if submitted {
+            eng.tick_or_fail_all();
+        } else if !eng.jobs.iter().all(|j| j.dead) {
+            // jobs exist but none could submit (backpressure/shed with
+            // no queue drain pending): tick to advance deadlines, and
+            // breathe so the retry loop is not a hot spin
+            let _ = eng.sup.tick();
+            match ingress.recv_timeout(Duration::from_micros(200)) {
+                Ok(cmd) => {
+                    if eng.handle_cmd(cmd) {
+                        return;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+
+        eng.collect_phase();
+        eng.reap();
+    }
+}
+
+impl Engine<'_> {
+    /// Stage each live job's next token. Returns whether anything was
+    /// submitted (i.e. the tick has work to do).
+    fn submit_phase(&mut self) -> bool {
+        let (d, dv) = (self.d, self.dv);
+        let mut submitted = false;
+        for job in self.jobs.iter_mut() {
+            if job.dead || job.in_flight || job.t >= job.n {
+                continue;
+            }
+            let t = job.t;
+            let q = &job.q[t * d..(t + 1) * d];
+            let k = &job.k[t * d..(t + 1) * d];
+            let v = &job.v[t * dv..(t + 1) * dv];
+            match self.sup.submit(job.id, q, k, v) {
+                Ok(()) => {
+                    job.in_flight = true;
+                    submitted = true;
+                }
+                Err(e) if !job.started => {
+                    // no bytes shipped yet: the worker can still answer
+                    // a real status line (429/409/...)
+                    let _ = job.events.send(Event::Reject(e));
+                    job.dead = true;
+                }
+                Err(e) if e.is_retryable() => {
+                    // mid-stream backpressure: retry next iteration
+                }
+                Err(e) => {
+                    let _ = job.events.send(Event::Error(e));
+                    job.dead = true;
+                }
+            }
+        }
+        submitted
+    }
+
+    /// Run one scheduler tick; a tick-level failure (not a per-stream
+    /// fault — those are isolated inside the tick) fails every job.
+    fn tick_or_fail_all(&mut self) {
+        if self.sup.tick().is_ok() {
+            return;
+        }
+        for job in self.jobs.iter_mut().filter(|j| !j.dead) {
+            let e = ServeError::Session("scheduler tick failed".into());
+            let _ = job.events.send(Event::Error(e));
+            job.dead = true;
+        }
+    }
+
+    /// Stream out every token the tick served.
+    fn collect_phase(&mut self) {
+        let dv = self.dv;
+        for job in self.jobs.iter_mut() {
+            if job.dead || !job.in_flight {
+                continue;
+            }
+            let mut out = vec![0.0f32; dv];
+            match self.sup.take_output(job.id, &mut out) {
+                Ok(()) => {
+                    job.in_flight = false;
+                    let t = job.t;
+                    job.t += 1;
+                    job.started = true;
+                    if job.events.send(Event::Token { t, out }).is_err() {
+                        // client hung up mid-stream: abandon the job
+                        job.dead = true;
+                        continue;
+                    }
+                    if job.t >= job.n {
+                        let _ = job.events.send(Event::Done);
+                        job.dead = true;
+                    }
+                }
+                Err(e) if e.is_retryable() => {
+                    // a delayed/hibernating tick path: collect later
+                }
+                Err(e) => {
+                    // fold-time failure (isolated fault, fired deadline):
+                    // the submit was accepted, so this is an in-stream
+                    // event even on the first token — the worker opens
+                    // the committed 200 stream and reports it there,
+                    // never a 5xx status line
+                    let _ = job.events.send(Event::Error(e));
+                    job.dead = true;
+                }
+            }
+        }
+    }
+
+    /// Drop finished/abandoned jobs and release their busy marks.
+    fn reap(&mut self) {
+        for job in self.jobs.iter().filter(|j| j.dead) {
+            self.busy.remove(&job.sid);
+        }
+        self.jobs.retain(|j| !j.dead);
+    }
+
+    /// Apply one control command. Returns `true` on shutdown.
+    fn handle_cmd(&mut self, cmd: Cmd) -> bool {
+        match cmd {
+            Cmd::Shutdown => return true,
+            Cmd::Open { reply } => {
+                let res = self.sup.open().map(|id| {
+                    let sid = self.next_sid;
+                    self.next_sid += 1;
+                    self.sessions.insert(sid, id);
+                    sid
+                });
+                let _ = reply.send(res);
+            }
+            Cmd::Close { sid, reply } => {
+                let res = match self.sessions.remove(&sid) {
+                    None => Err(ServeError::UnknownStream),
+                    Some(id) => {
+                        // a close abandons any in-flight decode job
+                        for job in self.jobs.iter_mut().filter(|j| j.sid == sid) {
+                            let _ = job.events.send(Event::Error(ServeError::UnknownStream));
+                            job.dead = true;
+                        }
+                        self.busy.remove(&sid);
+                        self.sup.close(id)
+                    }
+                };
+                let _ = reply.send(res);
+            }
+            Cmd::Prefill { sid, q, k, v, reply } => {
+                let res = match self.sessions.get(&sid) {
+                    None => Err(ServeError::UnknownStream),
+                    Some(_) if self.busy.contains(&sid) => Err(ServeError::StreamBusy),
+                    Some(&id) => self.sup.prefill(id, &q, &k, &v).and_then(|n| {
+                        let mut last = vec![0.0f32; self.dv];
+                        self.sup.take_output(id, &mut last)?;
+                        Ok((n, last))
+                    }),
+                };
+                let _ = reply.send(res);
+            }
+            Cmd::Decode { sid, q, k, v, events } => self.start_decode(sid, q, k, v, events),
+            Cmd::ArmFault { sid, reply } => {
+                let res = match self.sessions.get(&sid) {
+                    None => Err(ServeError::UnknownStream),
+                    Some(&id) => self.sup.arm_fault(id),
+                };
+                let _ = reply.send(res);
+            }
+            Cmd::Hibernate { sid, reply } => {
+                let res = match self.sessions.get(&sid) {
+                    None => Err(ServeError::UnknownStream),
+                    Some(&id) => self.sup.hibernate(id),
+                };
+                let _ = reply.send(res);
+            }
+            Cmd::Health { reply } => {
+                let _ = reply.send(Health {
+                    tick_no: self.sup.tick_no(),
+                    active_streams: self.sup.active_streams(),
+                    hibernated_streams: self.sup.hibernated_streams(),
+                    jobs: self.jobs.iter().filter(|j| !j.dead).count(),
+                    telemetry: self.sup.telemetry().clone(),
+                });
+            }
+        }
+        false
+    }
+
+    /// Validate a decode request's shape and queue it as a [`Job`].
+    fn start_decode(
+        &mut self,
+        sid: u64,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        events: Sender<Event>,
+    ) {
+        let Some(&id) = self.sessions.get(&sid) else {
+            let _ = events.send(Event::Reject(ServeError::UnknownStream));
+            return;
+        };
+        if self.busy.contains(&sid) {
+            let _ = events.send(Event::Reject(ServeError::StreamBusy));
+            return;
+        }
+        // shape check up front: one consistent token count
+        let (d, dv) = (self.d, self.dv);
+        let n = q.len() / d.max(1);
+        let shape_err = if d == 0 || q.len() % d != 0 {
+            Some(ServeError::BadRow { what: "q", expected: d.max(1), got: q.len() })
+        } else if k.len() != n * d {
+            Some(ServeError::BadRow { what: "k", expected: n * d, got: k.len() })
+        } else if v.len() != n * dv {
+            Some(ServeError::BadRow { what: "v", expected: n * dv, got: v.len() })
+        } else if n == 0 {
+            Some(ServeError::BadRow { what: "q", expected: d, got: 0 })
+        } else {
+            None
+        };
+        if let Some(e) = shape_err {
+            let _ = events.send(Event::Reject(e));
+            return;
+        }
+        self.busy.insert(sid);
+        self.jobs.push(Job {
+            sid,
+            id,
+            q,
+            k,
+            v,
+            n,
+            t: 0,
+            in_flight: false,
+            started: false,
+            events,
+            dead: false,
+        });
+    }
+}
+
+/// Try to enqueue a command; a full ingress queue is typed admission
+/// control for the worker (`429 ingress_full`), not a block.
+pub(super) fn try_enqueue(ingress: &SyncSender<Cmd>, cmd: Cmd) -> Result<(), IngressError> {
+    match ingress.try_send(cmd) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Full(_)) => Err(IngressError::Full),
+        Err(TrySendError::Disconnected(_)) => Err(IngressError::Down),
+    }
+}
+
+/// Why a command could not be enqueued.
+pub(super) enum IngressError {
+    /// Bounded queue at capacity → `429` + `Retry-After`.
+    Full,
+    /// Engine thread gone → `503`.
+    Down,
+}

@@ -1,0 +1,335 @@
+//! Minimal HTTP/1.1 connection handling: incremental request reading
+//! with hard limits, and plain + chunked (SSE) response writing.
+//!
+//! This is deliberately not a general HTTP implementation — it is the
+//! exact subset the serve API needs, hardened against the classic
+//! abuse shapes:
+//!
+//! * **Header limit** — a request head larger than
+//!   [`HttpConfig::max_head`] is `431` and the connection closes.
+//! * **Body limit** — a `Content-Length` past
+//!   [`HttpConfig::max_body`] is `413` *before* any body byte is read.
+//! * **Read deadline** — one wall-clock budget
+//!   ([`HttpConfig::read_timeout`]) covers the whole request
+//!   (head + body), so a slow-loris drip cannot hold a worker past it:
+//!   the socket read timeout is re-armed with the *remaining* budget
+//!   each iteration. A connection that goes quiet *between* requests
+//!   is simply closed (keep-alive idle-out), not errored.
+//!
+//! All failures are typed [`HttpError`]s that map to a 4xx close-delta
+//! response in the dispatch layer — never a panic, never an unbounded
+//! buffer.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Connection-level limits. Defaults are generous for the API's real
+/// payloads and tight against abuse.
+#[derive(Debug, Clone, Copy)]
+pub struct HttpConfig {
+    /// Maximum request-head bytes (request line + headers).
+    pub max_head: usize,
+    /// Maximum request-body bytes (declared or actual).
+    pub max_body: usize,
+    /// Wall-clock budget for reading one full request.
+    pub read_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            max_head: 8 * 1024,
+            max_body: 4 * 1024 * 1024,
+            read_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Why a request could not be read. Each variant carries its HTTP
+/// answer; `Closed` means the peer hung up cleanly between requests.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Head grew past [`HttpConfig::max_head`] → 431.
+    HeadTooLarge,
+    /// Declared body length past [`HttpConfig::max_body`] → 413.
+    BodyTooLarge { limit: usize },
+    /// A body-bearing method without `Content-Length` (or with
+    /// `Transfer-Encoding`, which this server does not accept on
+    /// requests) → 411.
+    LengthRequired,
+    /// Malformed request line / headers / truncated body → 400.
+    BadRequest(&'static str),
+    /// The read deadline elapsed mid-request (slow loris) → 408.
+    Timeout,
+    /// Clean disconnect with no request bytes pending.
+    Closed,
+    /// Transport error; the connection is dropped silently.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// `(status, reason, machine code)` for the variants that get an
+    /// HTTP answer; `None` for the ones that just drop the connection.
+    pub fn status(&self) -> Option<(u16, &'static str, &'static str)> {
+        match self {
+            HttpError::HeadTooLarge => {
+                Some((431, "Request Header Fields Too Large", "head_too_large"))
+            }
+            HttpError::BodyTooLarge { .. } => Some((413, "Payload Too Large", "body_too_large")),
+            HttpError::LengthRequired => Some((411, "Length Required", "length_required")),
+            HttpError::BadRequest(_) => Some((400, "Bad Request", "bad_request")),
+            HttpError::Timeout => Some((408, "Request Timeout", "timeout")),
+            HttpError::Closed | HttpError::Io(_) => None,
+        }
+    }
+
+    /// Human detail for the error body.
+    pub fn detail(&self) -> String {
+        match self {
+            HttpError::HeadTooLarge => "request head exceeds the configured limit".into(),
+            HttpError::BodyTooLarge { limit } => {
+                format!("request body exceeds the {limit}-byte limit")
+            }
+            HttpError::LengthRequired => {
+                "a body-bearing request needs Content-Length (chunked requests not accepted)"
+                    .into()
+            }
+            HttpError::BadRequest(what) => (*what).into(),
+            HttpError::Timeout => "request not completed within the read deadline".into(),
+            HttpError::Closed => "connection closed".into(),
+            HttpError::Io(e) => e.to_string(),
+        }
+    }
+}
+
+/// Request method — only what the API routes on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+    Delete,
+    Other,
+}
+
+/// One parsed request: method + borrowed ranges into the connection
+/// buffer (the head and body are never copied out).
+pub struct Request {
+    pub method: Method,
+    path: (usize, usize),
+    body: (usize, usize),
+    pub keep_alive: bool,
+}
+
+/// One client connection: the socket plus reusable read/write buffers
+/// (steady-state request handling re-reads into the same allocations).
+pub struct Conn {
+    stream: TcpStream,
+    cfg: HttpConfig,
+    buf: Vec<u8>,
+    out: String,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, cfg: HttpConfig) -> Conn {
+        Conn { stream, cfg, buf: Vec::with_capacity(4096), out: String::with_capacity(1024) }
+    }
+
+    /// The request path for `req` (ASCII; enforced during parse).
+    pub fn path<'a>(&'a self, req: &Request) -> &'a str {
+        std::str::from_utf8(&self.buf[req.path.0..req.path.1]).unwrap_or("")
+    }
+
+    /// The request body for `req`.
+    pub fn body<'a>(&'a self, req: &Request) -> &'a [u8] {
+        &self.buf[req.body.0..req.body.1]
+    }
+
+    /// Read one full request (head + body) within the deadline.
+    pub fn read_request(&mut self) -> Result<Request, HttpError> {
+        self.buf.clear();
+        let start = Instant::now();
+
+        // --- head: read until \r\n\r\n, bounded by max_head ---
+        let head_end = loop {
+            if let Some(pos) = find_head_end(&self.buf) {
+                // enforce the limit even when the whole head landed in
+                // one read, so it cannot be dodged by fast delivery
+                if pos > self.cfg.max_head {
+                    return Err(HttpError::HeadTooLarge);
+                }
+                break pos;
+            }
+            if self.buf.len() > self.cfg.max_head {
+                return Err(HttpError::HeadTooLarge);
+            }
+            self.fill(start, self.buf.is_empty())?;
+        };
+
+        // --- parse request line + the headers we honor ---
+        let head = &self.buf[..head_end];
+        let mut lines = head.split(|&b| b == b'\n').map(|l| l.strip_suffix(b"\r").unwrap_or(l));
+        let req_line = lines.next().ok_or(HttpError::BadRequest("empty request"))?;
+        let req_line =
+            std::str::from_utf8(req_line).map_err(|_| HttpError::BadRequest("non-ASCII head"))?;
+        let mut parts = req_line.split(' ');
+        let method = match parts.next() {
+            Some("GET") => Method::Get,
+            Some("POST") => Method::Post,
+            Some("DELETE") => Method::Delete,
+            Some(m) if !m.is_empty() && m.chars().all(|c| c.is_ascii_uppercase()) => Method::Other,
+            _ => return Err(HttpError::BadRequest("malformed request line")),
+        };
+        let path = parts.next().ok_or(HttpError::BadRequest("missing request path"))?;
+        let version = parts.next().ok_or(HttpError::BadRequest("missing HTTP version"))?;
+        if !version.starts_with("HTTP/1.") || parts.next().is_some() {
+            return Err(HttpError::BadRequest("malformed request line"));
+        }
+        let path_start = req_line.find(' ').expect("split found a space") + 1;
+        let path_range = (path_start, path_start + path.len());
+
+        let mut content_length: Option<usize> = None;
+        let mut keep_alive = version == "HTTP/1.1";
+        let mut expect_continue = false;
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let Ok(line) = std::str::from_utf8(line) else {
+                return Err(HttpError::BadRequest("non-ASCII header"));
+            };
+            let Some((name, value)) = line.split_once(':') else {
+                return Err(HttpError::BadRequest("malformed header"));
+            };
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length =
+                    Some(value.parse().map_err(|_| HttpError::BadRequest("bad Content-Length"))?);
+            } else if name.eq_ignore_ascii_case("transfer-encoding") {
+                // requests must be Content-Length framed
+                return Err(HttpError::LengthRequired);
+            } else if name.eq_ignore_ascii_case("connection") {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            } else if name.eq_ignore_ascii_case("expect")
+                && value.eq_ignore_ascii_case("100-continue")
+            {
+                expect_continue = true;
+            }
+        }
+
+        // --- body: bounded by max_body, within the same deadline ---
+        let body_len = match content_length {
+            Some(n) => n,
+            None if method == Method::Post => return Err(HttpError::LengthRequired),
+            None => 0,
+        };
+        if body_len > self.cfg.max_body {
+            return Err(HttpError::BodyTooLarge { limit: self.cfg.max_body });
+        }
+        if expect_continue && body_len > 0 {
+            self.stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").map_err(HttpError::Io)?;
+        }
+        let body_start = head_end + 4;
+        while self.buf.len() < body_start + body_len {
+            self.fill(start, false)?;
+        }
+        if self.buf.len() > body_start + body_len {
+            // pipelined extra bytes: this server answers one request
+            // per read, so trailing bytes are a protocol error
+            return Err(HttpError::BadRequest("unexpected bytes after body"));
+        }
+        let body = (body_start, body_start + body_len);
+        Ok(Request { method, path: path_range, body, keep_alive })
+    }
+
+    /// One bounded read into `buf`, re-arming the socket timeout with
+    /// the remaining deadline budget. `idle` marks the gap between
+    /// keep-alive requests, where silence is a clean close rather than
+    /// a timeout.
+    fn fill(&mut self, start: Instant, idle: bool) -> Result<(), HttpError> {
+        let remaining = self
+            .cfg
+            .read_timeout
+            .checked_sub(start.elapsed())
+            .filter(|d| !d.is_zero())
+            .ok_or(HttpError::Timeout)?;
+        self.stream.set_read_timeout(Some(remaining)).map_err(HttpError::Io)?;
+        let mut chunk = [0u8; 4096];
+        match self.stream.read(&mut chunk) {
+            Ok(0) if idle => Err(HttpError::Closed),
+            Ok(0) => Err(HttpError::BadRequest("truncated request")),
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(())
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if idle {
+                    // keep-alive connection idled out quietly
+                    Err(HttpError::Closed)
+                } else {
+                    Err(HttpError::Timeout)
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => Ok(()),
+            Err(e) => Err(HttpError::Io(e)),
+        }
+    }
+
+    /// Write one fixed-length response. `extra` headers are appended
+    /// verbatim (e.g. `("Retry-After", "1")`).
+    pub fn write_response(
+        &mut self,
+        status: u16,
+        reason: &str,
+        content_type: &str,
+        body: &str,
+        extra: &[(&str, &str)],
+    ) -> Result<(), HttpError> {
+        use std::fmt::Write as _;
+        self.out.clear();
+        let _ = write!(
+            self.out,
+            "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
+            body.len()
+        );
+        for (name, value) in extra {
+            let _ = write!(self.out, "{name}: {value}\r\n");
+        }
+        self.out.push_str("\r\n");
+        self.out.push_str(body);
+        self.stream.write_all(self.out.as_bytes()).map_err(HttpError::Io)
+    }
+
+    /// Start a chunked `200` response (the SSE token stream).
+    pub fn begin_chunked(&mut self, content_type: &str) -> Result<(), HttpError> {
+        use std::fmt::Write as _;
+        self.out.clear();
+        let _ = write!(
+            self.out,
+            "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nCache-Control: no-store\r\n\r\n"
+        );
+        self.stream.write_all(self.out.as_bytes()).map_err(HttpError::Io)
+    }
+
+    /// Write one chunk (one SSE event).
+    pub fn write_chunk(&mut self, payload: &str) -> Result<(), HttpError> {
+        use std::fmt::Write as _;
+        self.out.clear();
+        let _ = write!(self.out, "{:x}\r\n{payload}\r\n", payload.len());
+        self.stream.write_all(self.out.as_bytes()).map_err(HttpError::Io)
+    }
+
+    /// Terminate the chunked response.
+    pub fn end_chunked(&mut self) -> Result<(), HttpError> {
+        self.stream.write_all(b"0\r\n\r\n").map_err(HttpError::Io)
+    }
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if complete.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}

@@ -1,0 +1,597 @@
+//! The network serving frontend: a dependency-free HTTP/1.1 gateway
+//! over the [`serve`](crate::serve) subsystem.
+//!
+//! Architecture (one process, plain `std::net` blocking I/O):
+//!
+//! ```text
+//!             TcpListener (shared, SO_REUSE via try_clone)
+//!   ┌───────────┬───────────┬───────────┐
+//!   │ worker 0  │ worker 1  │ worker N  │   blocking accept + HTTP/1.1
+//!   └─────┬─────┴─────┬─────┴─────┬─────┘   parse ([`http`]) + lazy
+//!         │           │           │          JSON scan ([`wire`])
+//!         └────── bounded ingress queue ─────────┐ (sync_channel;
+//!                                                │  full → 429)
+//!                                       ┌────────▼────────┐
+//!                                       │  engine thread  │ Supervisor
+//!                                       │ ([`engine`])    │ + Scheduler
+//!                                       └─────────────────┘ tick loop
+//! ```
+//!
+//! Connection workers never touch the pool: they parse requests,
+//! enqueue typed [`engine::Cmd`]s, and stream replies back over
+//! per-request channels. The engine thread owns the session +
+//! [`Supervisor`](crate::serve::Supervisor) and runs the micro-batch
+//! tick loop; hibernation, deadlines, and fault isolation all apply to
+//! socket clients exactly as to in-process callers.
+//!
+//! # Wire protocol
+//!
+//! | Route | Body | Answer |
+//! |---|---|---|
+//! | `GET /healthz` | — | `200` engine/telemetry snapshot |
+//! | `GET /v1/spec` | — | `200` kernel/dims/seed (clients verify against it) |
+//! | `POST /v1/streams` | `{}` | `201 {"stream":"s-1"}` |
+//! | `POST /v1/streams/{id}/prefill` | `{"q":[..],"k":[..],"v":[..]}` | `200 {"tokens":n,"out":[..]}` |
+//! | `POST /v1/streams/{id}/decode` | `{"q":[..],"k":[..],"v":[..]}` | `200` chunked SSE, one `data:` frame per token |
+//! | `POST /v1/streams/{id}/arm_fault` | `{}` | `200` (chaos hook: next fold panics) |
+//! | `POST /v1/streams/{id}/hibernate` | `{}` | `200` (snapshot to the spill arena) |
+//! | `DELETE /v1/streams/{id}` | — | `200` (any state) |
+//!
+//! `q`/`k`/`v` are row-major flattened `n x d` / `n x d` / `n x dv`
+//! token rows. Decode responses are `text/event-stream` frames:
+//! `data: {"t":0,"out":[..]}`, then `event: done` — or `event: error`
+//! with the typed error body if the stream dies mid-response (the
+//! status line is already committed by then; error *before* the first
+//! token is a real HTTP status). Every [`ServeError`] maps to a stable
+//! `(status, code)` pair via [`http_status`] + [`ServeError::code`] —
+//! pinned exhaustively by `tests/serve_net.rs` — and backpressure
+//! carries its `retry_after_ticks` hint as a `Retry-After` header.
+//! Floats cross the wire in shortest round-trip decimal, so decode
+//! outputs are **bit-identical** to in-process decode (the socket
+//! loadgen's verification is exact, not approximate).
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::serve::{ResilienceConfig, ServeConfig, ServeError};
+use crate::util::json::Value;
+
+pub mod client;
+pub mod engine;
+pub mod http;
+pub mod wire;
+
+pub use client::{run_socket, NetLoadReport};
+pub use engine::EngineSpec;
+use engine::{Cmd, Event, IngressError};
+use http::{Conn, HttpConfig, HttpError, Method, Request};
+use wire::TokenBody;
+
+/// Frontend knobs (the compute config lives in [`EngineSpec`] /
+/// [`ServeConfig`]).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:0` (0 = kernel-assigned port).
+    pub addr: String,
+    /// Blocking connection workers sharing the listener.
+    pub workers: usize,
+    /// Bound on queued engine commands; a full queue answers
+    /// `429 ingress_full` instead of growing.
+    pub queue_depth: usize,
+    /// Per-connection HTTP limits.
+    pub http: HttpConfig,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            queue_depth: 128,
+            http: HttpConfig::default(),
+        }
+    }
+}
+
+/// The HTTP status (code + reason) for every typed [`ServeError`].
+/// Exhaustive by construction — adding a variant without deciding its
+/// wire mapping is a compile error, and `tests/serve_net.rs` pins
+/// each pair so it cannot drift silently.
+pub fn http_status(e: &ServeError) -> (u16, &'static str) {
+    match e {
+        ServeError::InvalidConfig { .. } => (500, "Internal Server Error"),
+        ServeError::PoolFull { .. } => (503, "Service Unavailable"),
+        ServeError::Backpressure { .. } => (429, "Too Many Requests"),
+        ServeError::UnknownStream => (404, "Not Found"),
+        ServeError::StreamBusy => (409, "Conflict"),
+        ServeError::NoOutput => (409, "Conflict"),
+        ServeError::BadRow { .. } => (400, "Bad Request"),
+        ServeError::NonFinite { .. } => (422, "Unprocessable Entity"),
+        ServeError::Expired => (410, "Gone"),
+        ServeError::Faulted => (500, "Internal Server Error"),
+        ServeError::Session(_) => (500, "Internal Server Error"),
+    }
+}
+
+/// The `Retry-After` value (in scheduler ticks; documented in the
+/// module docs) for errors that are worth retrying on a timer.
+pub fn retry_after_ticks(e: &ServeError) -> Option<u64> {
+    match e {
+        ServeError::Backpressure { retry_after_ticks, .. } => Some((*retry_after_ticks).max(1)),
+        ServeError::PoolFull { .. } => Some(1),
+        _ => None,
+    }
+}
+
+/// Serialize the machine-readable error body shared by plain error
+/// responses and in-stream `event: error` frames.
+fn error_json(buf: &mut String, code: &str, message: &str, retryable: bool, retry: Option<u64>) {
+    use std::fmt::Write as _;
+    buf.clear();
+    buf.push_str("{\"error\":");
+    wire::write_str(buf, code);
+    buf.push_str(",\"message\":");
+    wire::write_str(buf, message);
+    let _ = write!(buf, ",\"retryable\":{retryable}");
+    if let Some(t) = retry {
+        let _ = write!(buf, ",\"retry_after_ticks\":{t}");
+    }
+    buf.push('}');
+}
+
+struct Shared {
+    ingress: SyncSender<Cmd>,
+    spec: EngineSpec,
+    serve: ServeConfig,
+    stop: AtomicBool,
+}
+
+/// A running gateway: engine thread + worker pool, shut down
+/// explicitly (or on drop).
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    engine: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, start the engine thread (building the attention session
+    /// on it), and start the worker pool. Fails fast on a bad address,
+    /// an invalid [`ServeConfig`], or a session the backend rejects.
+    pub fn start(
+        net: NetConfig,
+        spec: EngineSpec,
+        serve: ServeConfig,
+        resilience: ResilienceConfig,
+    ) -> Result<Server> {
+        serve.validate().map_err(|e| anyhow!(e))?;
+        let listener =
+            TcpListener::bind(&net.addr).with_context(|| format!("binding {}", net.addr))?;
+        let addr = listener.local_addr()?;
+        let (ingress, rx) = sync_channel(net.queue_depth.max(1));
+        let (ready_tx, ready_rx) = channel();
+        let engine_spec = spec.clone();
+        let engine = std::thread::Builder::new()
+            .name("serve-engine".into())
+            .spawn(move || engine::run(engine_spec, serve, resilience, rx, ready_tx))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => {
+                let _ = engine.join();
+                bail!("serve engine failed to start: {msg}");
+            }
+            Err(_) => bail!("serve engine died during startup"),
+        }
+        let shared = Arc::new(Shared { ingress, spec, serve, stop: AtomicBool::new(false) });
+        let mut workers = Vec::with_capacity(net.workers.max(1));
+        for w in 0..net.workers.max(1) {
+            let listener = listener.try_clone()?;
+            let shared = Arc::clone(&shared);
+            let http = net.http;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{w}"))
+                    .spawn(move || worker_loop(listener, shared, http))?,
+            );
+        }
+        Ok(Server { addr, shared, workers, engine: Some(engine) })
+    }
+
+    /// The bound address (resolves `:0` to the kernel-assigned port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain the workers, and stop the engine.
+    pub fn shutdown(mut self) {
+        self.stop_all();
+    }
+
+    fn stop_all(&mut self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // wake every accept-blocked worker with a throwaway connect
+        for _ in 0..self.workers.len() {
+            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let _ = self.shared.ingress.send(Cmd::Shutdown);
+        if let Some(engine) = self.engine.take() {
+            let _ = engine.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_all();
+    }
+}
+
+/// One worker: accept connections and serve keep-alive request loops
+/// until the stop flag flips.
+fn worker_loop(listener: TcpListener, shared: Arc<Shared>, http: HttpConfig) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        serve_connection(Conn::new(stream, http), &shared);
+    }
+}
+
+/// The keep-alive request loop for one connection. Any request-read
+/// error answers its status (when it has one) and closes.
+fn serve_connection(mut conn: Conn, shared: &Shared) {
+    let mut body = TokenBody::default();
+    let mut scratch = String::new();
+    loop {
+        let req = match conn.read_request() {
+            Ok(req) => req,
+            Err(e) => {
+                if let Some((status, reason, code)) = e.status() {
+                    error_json(&mut scratch, code, &e.detail(), false, None);
+                    let _ = conn.write_response(status, reason, "application/json", &scratch, &[]);
+                }
+                return;
+            }
+        };
+        let keep_alive = req.keep_alive;
+        let served = dispatch(&mut conn, &req, shared, &mut body, &mut scratch);
+        if served.is_err() || !keep_alive {
+            return;
+        }
+    }
+}
+
+/// What `/v1/streams/...` names: the stream plus an optional action.
+enum Route {
+    Health,
+    Spec,
+    Streams,
+    Stream { sid: u64, action: Option<StreamAction> },
+    NotFound,
+}
+
+enum StreamAction {
+    Prefill,
+    Decode,
+    ArmFault,
+    Hibernate,
+}
+
+fn parse_route(path: &str) -> Route {
+    match path {
+        "/healthz" => return Route::Health,
+        "/v1/spec" => return Route::Spec,
+        "/v1/streams" => return Route::Streams,
+        _ => {}
+    }
+    let Some(rest) = path.strip_prefix("/v1/streams/") else {
+        return Route::NotFound;
+    };
+    let (id_part, action_part) = match rest.split_once('/') {
+        Some((id, action)) => (id, Some(action)),
+        None => (rest, None),
+    };
+    let Some(sid) = id_part.strip_prefix("s-").and_then(|s| s.parse::<u64>().ok()) else {
+        return Route::NotFound;
+    };
+    let action = match action_part {
+        None => None,
+        Some("prefill") => Some(StreamAction::Prefill),
+        Some("decode") => Some(StreamAction::Decode),
+        Some("arm_fault") => Some(StreamAction::ArmFault),
+        Some("hibernate") => Some(StreamAction::Hibernate),
+        Some(_) => return Route::NotFound,
+    };
+    Route::Stream { sid, action }
+}
+
+/// Answer one request. `Err` means the transport broke (the
+/// connection closes); protocol-level failures are proper responses.
+fn dispatch(
+    conn: &mut Conn,
+    req: &Request,
+    shared: &Shared,
+    body: &mut TokenBody,
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    let route = parse_route(conn.path(req));
+    match (req.method, route) {
+        (Method::Get, Route::Health) => health(conn, shared, scratch),
+        (Method::Get, Route::Spec) => spec(conn, shared),
+        (Method::Post, Route::Streams) => open_stream(conn, shared, scratch),
+        (Method::Post, Route::Stream { sid, action: Some(StreamAction::Prefill) }) => {
+            prefill(conn, req, shared, sid, body, scratch)
+        }
+        (Method::Post, Route::Stream { sid, action: Some(StreamAction::Decode) }) => {
+            decode(conn, req, shared, sid, body, scratch)
+        }
+        (Method::Post, Route::Stream { sid, action: Some(StreamAction::ArmFault) }) => {
+            simple_cmd(conn, shared, scratch, |reply| Cmd::ArmFault { sid, reply })
+        }
+        (Method::Post, Route::Stream { sid, action: Some(StreamAction::Hibernate) }) => {
+            simple_cmd(conn, shared, scratch, |reply| Cmd::Hibernate { sid, reply })
+        }
+        (Method::Delete, Route::Stream { sid, action: None }) => {
+            simple_cmd(conn, shared, scratch, |reply| Cmd::Close { sid, reply })
+        }
+        _ => {
+            error_json(scratch, "not_found", "no such route", false, None);
+            conn.write_response(404, "Not Found", "application/json", scratch, &[])
+        }
+    }
+}
+
+/// Answer an enqueue failure (bounded queue full / engine gone).
+fn ingress_error(conn: &mut Conn, e: IngressError, scratch: &mut String) -> Result<(), HttpError> {
+    match e {
+        IngressError::Full => {
+            error_json(scratch, "ingress_full", "engine ingress queue is full", true, Some(1));
+            conn.write_response(
+                429,
+                "Too Many Requests",
+                "application/json",
+                scratch,
+                &[("Retry-After", "1")],
+            )
+        }
+        IngressError::Down => {
+            error_json(scratch, "engine_down", "engine thread is not running", false, None);
+            conn.write_response(503, "Service Unavailable", "application/json", scratch, &[])
+        }
+    }
+}
+
+/// Answer a typed [`ServeError`] as its mapped status + error body.
+fn serve_error(conn: &mut Conn, e: &ServeError, scratch: &mut String) -> Result<(), HttpError> {
+    let (status, reason) = http_status(e);
+    let retry = retry_after_ticks(e);
+    error_json(scratch, e.code(), &e.to_string(), e.is_retryable(), retry);
+    let ticks;
+    let mut extra: Vec<(&str, &str)> = Vec::new();
+    if let Some(t) = retry {
+        ticks = t.to_string();
+        extra.push(("Retry-After", &ticks));
+    }
+    conn.write_response(status, reason, "application/json", scratch, &extra)
+}
+
+fn engine_gone(conn: &mut Conn, scratch: &mut String) -> Result<(), HttpError> {
+    error_json(scratch, "engine_down", "engine thread is not running", false, None);
+    conn.write_response(503, "Service Unavailable", "application/json", scratch, &[])
+}
+
+fn health(conn: &mut Conn, shared: &Shared, scratch: &mut String) -> Result<(), HttpError> {
+    let (reply, rx) = channel();
+    if let Err(e) = engine::try_enqueue(&shared.ingress, Cmd::Health { reply }) {
+        return ingress_error(conn, e, scratch);
+    }
+    match rx.recv() {
+        Err(_) => engine_gone(conn, scratch),
+        Ok(h) => {
+            let doc = Value::obj(vec![
+                ("status", Value::str("ok")),
+                ("tick_no", Value::num(h.tick_no as f64)),
+                ("active_streams", Value::num(h.active_streams as f64)),
+                ("hibernated_streams", Value::num(h.hibernated_streams as f64)),
+                ("decode_jobs", Value::num(h.jobs as f64)),
+                ("telemetry", h.telemetry.to_json()),
+            ]);
+            conn.write_response(200, "OK", "application/json", &doc.to_string(), &[])
+        }
+    }
+}
+
+fn spec(conn: &mut Conn, shared: &Shared) -> Result<(), HttpError> {
+    let doc = Value::obj(vec![
+        ("kernel", Value::str(shared.spec.kernel.name())),
+        ("backend", Value::str(shared.spec.backend.to_string())),
+        ("head_dim", Value::num(shared.spec.head_dim as f64)),
+        ("dv", Value::num(shared.spec.dv as f64)),
+        ("num_features", Value::num(shared.spec.num_features as f64)),
+        ("seed", Value::num(shared.spec.seed as f64)),
+        ("max_streams", Value::num(shared.serve.max_streams as f64)),
+        ("max_pending", Value::num(shared.serve.pending_bound() as f64)),
+    ]);
+    conn.write_response(200, "OK", "application/json", &doc.to_string(), &[])
+}
+
+fn open_stream(conn: &mut Conn, shared: &Shared, scratch: &mut String) -> Result<(), HttpError> {
+    let (reply, rx) = channel();
+    if let Err(e) = engine::try_enqueue(&shared.ingress, Cmd::Open { reply }) {
+        return ingress_error(conn, e, scratch);
+    }
+    match rx.recv() {
+        Err(_) => engine_gone(conn, scratch),
+        Ok(Err(e)) => serve_error(conn, &e, scratch),
+        Ok(Ok(sid)) => {
+            scratch.clear();
+            scratch.push_str("{\"stream\":\"s-");
+            scratch.push_str(&sid.to_string());
+            scratch.push_str("\"}");
+            conn.write_response(201, "Created", "application/json", scratch, &[])
+        }
+    }
+}
+
+/// Route a one-shot stream command (arm_fault / hibernate / close).
+fn simple_cmd(
+    conn: &mut Conn,
+    shared: &Shared,
+    scratch: &mut String,
+    make: impl FnOnce(std::sync::mpsc::Sender<Result<(), ServeError>>) -> Cmd,
+) -> Result<(), HttpError> {
+    let (reply, rx) = channel();
+    if let Err(e) = engine::try_enqueue(&shared.ingress, make(reply)) {
+        return ingress_error(conn, e, scratch);
+    }
+    match rx.recv() {
+        Err(_) => engine_gone(conn, scratch),
+        Ok(Err(e)) => serve_error(conn, &e, scratch),
+        Ok(Ok(())) => {
+            conn.write_response(200, "OK", "application/json", "{\"ok\":true}", &[])
+        }
+    }
+}
+
+fn prefill(
+    conn: &mut Conn,
+    req: &Request,
+    shared: &Shared,
+    sid: u64,
+    body: &mut TokenBody,
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    if let Err(e) = body.parse_into(conn.body(req)) {
+        error_json(scratch, "bad_body", &e.to_string(), false, None);
+        return conn.write_response(400, "Bad Request", "application/json", scratch, &[]);
+    }
+    let (reply, rx) = channel();
+    let cmd = Cmd::Prefill {
+        sid,
+        q: std::mem::take(&mut body.q),
+        k: std::mem::take(&mut body.k),
+        v: std::mem::take(&mut body.v),
+        reply,
+    };
+    if let Err(e) = engine::try_enqueue(&shared.ingress, cmd) {
+        return ingress_error(conn, e, scratch);
+    }
+    match rx.recv() {
+        Err(_) => engine_gone(conn, scratch),
+        Ok(Err(e)) => serve_error(conn, &e, scratch),
+        Ok(Ok((n, last))) => {
+            use std::fmt::Write as _;
+            scratch.clear();
+            let _ = write!(scratch, "{{\"tokens\":{n},\"out\":");
+            wire::write_f32_array(scratch, &last);
+            scratch.push('}');
+            conn.write_response(200, "OK", "application/json", scratch, &[])
+        }
+    }
+}
+
+fn decode(
+    conn: &mut Conn,
+    req: &Request,
+    shared: &Shared,
+    sid: u64,
+    body: &mut TokenBody,
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    if let Err(e) = body.parse_into(conn.body(req)) {
+        error_json(scratch, "bad_body", &e.to_string(), false, None);
+        return conn.write_response(400, "Bad Request", "application/json", scratch, &[]);
+    }
+    let (events, rx) = channel();
+    let cmd = Cmd::Decode {
+        sid,
+        q: std::mem::take(&mut body.q),
+        k: std::mem::take(&mut body.k),
+        v: std::mem::take(&mut body.v),
+        events,
+    };
+    if let Err(e) = engine::try_enqueue(&shared.ingress, cmd) {
+        return ingress_error(conn, e, scratch);
+    }
+    // first event decides the status line
+    let first = match rx.recv() {
+        Err(_) => return engine_gone(conn, scratch),
+        Ok(Event::Reject(e)) => return serve_error(conn, &e, scratch),
+        Ok(ev) => ev,
+    };
+    conn.begin_chunked("text/event-stream")?;
+    let mut frame = String::new();
+    let mut ev = Some(first);
+    let mut served = 0usize;
+    loop {
+        let event = match ev.take() {
+            Some(ev) => ev,
+            None => match rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => {
+                    error_json(scratch, "engine_down", "engine stopped mid-stream", false, None);
+                    frame.clear();
+                    frame.push_str("event: error\ndata: ");
+                    frame.push_str(scratch);
+                    frame.push_str("\n\n");
+                    conn.write_chunk(&frame)?;
+                    break;
+                }
+            },
+        };
+        match event {
+            Event::Token { t, out } => {
+                use std::fmt::Write as _;
+                frame.clear();
+                let _ = write!(frame, "data: {{\"t\":{t},\"out\":");
+                wire::write_f32_array(&mut frame, &out);
+                frame.push_str("}\n\n");
+                conn.write_chunk(&frame)?;
+                served += 1;
+            }
+            Event::Done => {
+                use std::fmt::Write as _;
+                frame.clear();
+                let _ = write!(frame, "event: done\ndata: {{\"tokens\":{served}}}\n\n");
+                conn.write_chunk(&frame)?;
+                break;
+            }
+            Event::Error(e) | Event::Reject(e) => {
+                error_json(scratch, e.code(), &e.to_string(), e.is_retryable(), None);
+                frame.clear();
+                frame.push_str("event: error\ndata: ");
+                frame.push_str(scratch);
+                frame.push_str("\n\n");
+                conn.write_chunk(&frame)?;
+                break;
+            }
+        }
+    }
+    conn.end_chunked()
+}

@@ -1,0 +1,510 @@
+//! The lazy JSON wire layer: a borrowing scanner over the request
+//! buffer plus an allocation-conscious response serializer.
+//!
+//! The frontend must stay off the compute hot path, so request bodies
+//! are never parsed into a DOM (`util::json::Value` allocates a node
+//! per number — a 4k-token prompt would be ~500k allocations). Instead
+//! [`Scan`] walks the raw bytes once, in the spirit of squirrel-json's
+//! sparse scanning: the caller names the fields it needs (`"q"`,
+//! `"k"`, `"v"`, …), numbers are parsed straight into a reusable
+//! `Vec<f32>`, and every other value is skipped structurally without
+//! materializing anything.
+//!
+//! Robustness contract (enforced by `tests/serve_net.rs`): truncated
+//! input, non-UTF8 bytes, deeply nested containers, and arbitrary
+//! garbage are all typed [`WireError`]s — never a panic, never
+//! unbounded recursion (the skipper is iterative with a hard depth
+//! cap), never an out-of-bounds read.
+//!
+//! On the response side, floats are written with Rust's shortest
+//! round-trip formatting, so an `f32` crossing the wire twice comes
+//! back **bit-identical** — the property the socket load generator's
+//! verification leans on ([`write_f32`], round-trip proved in the
+//! tests below).
+
+use std::fmt;
+
+/// Hard nesting cap for skipped values. Deeper input is hostile (the
+/// API's own payloads are depth 1) and is rejected before it can cost
+/// anything.
+const MAX_DEPTH: usize = 64;
+
+/// Why a request body was rejected by the scanner. Every variant maps
+/// to a 400-family response in the HTTP layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Malformed JSON at `pos` (byte offset into the body).
+    Syntax { pos: usize, what: &'static str },
+    /// Containers nested past [`MAX_DEPTH`].
+    TooDeep,
+    /// A required field is absent.
+    Missing { field: &'static str },
+    /// A field exists but has the wrong shape (e.g. `"q": "hi"`).
+    BadField { field: &'static str },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Syntax { pos, what } => write!(f, "bad JSON at byte {pos}: {what}"),
+            WireError::TooDeep => write!(f, "JSON nested deeper than {MAX_DEPTH} levels"),
+            WireError::Missing { field } => write!(f, "missing field {field:?}"),
+            WireError::BadField { field } => write!(f, "field {field:?} has the wrong type"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// A single-pass, borrowing scanner over one JSON object body.
+pub struct Scan<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    /// Start scanning `body`, which must hold exactly one top-level
+    /// JSON object (the shape of every API request).
+    pub fn object(body: &'a [u8]) -> Result<Scan<'a>, WireError> {
+        let mut s = Scan { bytes: body, pos: 0 };
+        s.skip_ws();
+        s.expect(b'{', "expected '{'")?;
+        Ok(s)
+    }
+
+    fn err(&self, what: &'static str) -> WireError {
+        WireError::Syntax { pos: self.pos, what }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8, what: &'static str) -> Result<(), WireError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(what))
+        }
+    }
+
+    /// Advance to the next key in the top-level object. Returns the
+    /// raw key bytes (no unescaping — the API's field names are plain
+    /// ASCII, so an escaped key simply matches nothing and its value
+    /// is skipped), or `None` at the closing `}`.
+    ///
+    /// The caller must consume the value after a `Some` key — with
+    /// [`Scan::f32_array_into`], [`Scan::str_value`],
+    /// [`Scan::usize_value`], or [`Scan::skip_value`] — before calling
+    /// `next_key` again.
+    pub fn next_key(&mut self) -> Result<Option<&'a [u8]>, WireError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'}') => {
+                self.pos += 1;
+                return Ok(None);
+            }
+            Some(b',') => {
+                self.pos += 1;
+                self.skip_ws();
+            }
+            _ => {}
+        }
+        let key = self.raw_string()?;
+        self.skip_ws();
+        self.expect(b':', "expected ':' after key")?;
+        self.skip_ws();
+        Ok(Some(key))
+    }
+
+    /// The raw contents of a JSON string (between the quotes, escapes
+    /// left as-is). Bounded by the body; never reads past it.
+    fn raw_string(&mut self) -> Result<&'a [u8], WireError> {
+        self.expect(b'"', "expected '\"'")?;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let s = &self.bytes[start..self.pos];
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    // skip the escape and the escaped byte (\uXXXX's
+                    // hex digits are ordinary bytes to the skipper)
+                    self.pos += 2;
+                    if self.pos > self.bytes.len() {
+                        return Err(self.err("truncated escape"));
+                    }
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    /// Consume a string value and return it as UTF-8. Escapes are
+    /// rejected (the API's string fields are opaque handles like
+    /// `"s-12"` which never need them).
+    pub fn str_value(&mut self, field: &'static str) -> Result<&'a str, WireError> {
+        let raw = self.raw_string().map_err(|_| WireError::BadField { field })?;
+        if raw.contains(&b'\\') {
+            return Err(WireError::BadField { field });
+        }
+        std::str::from_utf8(raw).map_err(|_| WireError::BadField { field })
+    }
+
+    /// Consume a non-negative integer value.
+    pub fn usize_value(&mut self, field: &'static str) -> Result<usize, WireError> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(WireError::BadField { field });
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .ok_or(WireError::BadField { field })
+    }
+
+    /// Consume a `[...]` of numbers, parsed straight into `out`
+    /// (cleared first; grows only past its previous high-water mark).
+    /// The JSON number grammar cannot spell NaN/inf, so the wire layer
+    /// structurally never admits a non-finite float — the pool's
+    /// `screen_inputs` stays on as defense in depth, not first line.
+    pub fn f32_array_into(
+        &mut self,
+        field: &'static str,
+        out: &mut Vec<f32>,
+    ) -> Result<(), WireError> {
+        out.clear();
+        if self.peek() != Some(b'[') {
+            return Err(WireError::BadField { field });
+        }
+        self.pos += 1;
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.number(field)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    /// One JSON number, returned as f32. The token span is matched
+    /// against the JSON grammar first, so `f32::from_str` never sees
+    /// `inf`/`NaN` spellings.
+    fn number(&mut self, field: &'static str) -> Result<f32, WireError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut saw_digit = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => {
+                    saw_digit = true;
+                    self.pos += 1;
+                }
+                b'.' | b'e' | b'E' | b'+' | b'-' => self.pos += 1,
+                _ => break,
+            }
+        }
+        if !saw_digit {
+            return Err(WireError::BadField { field });
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f32>().ok())
+            .filter(|x| x.is_finite())
+            .ok_or(WireError::BadField { field })
+    }
+
+    /// Skip one value of any shape — iteratively, with a hard depth
+    /// cap, so hostile nesting can neither overflow the stack nor loop
+    /// forever.
+    pub fn skip_value(&mut self) -> Result<(), WireError> {
+        let mut depth = 0usize;
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                None => return Err(self.err("truncated value")),
+                Some(b'{') | Some(b'[') => {
+                    depth += 1;
+                    if depth > MAX_DEPTH {
+                        return Err(WireError::TooDeep);
+                    }
+                    self.pos += 1;
+                }
+                Some(b'"') => {
+                    self.raw_string()?;
+                }
+                Some(_) => {
+                    // number / literal / garbage token: consume until a
+                    // structural byte (validity doesn't matter — the
+                    // field was not requested)
+                    let start = self.pos;
+                    while let Some(c) = self.peek() {
+                        if matches!(c, b',' | b']' | b'}' | b'{' | b'[' | b'"')
+                            || c.is_ascii_whitespace()
+                        {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    if self.pos == start {
+                        return Err(self.err("unexpected byte"));
+                    }
+                }
+            }
+            // unwind closers / separators until this value is done
+            loop {
+                self.skip_ws();
+                match self.peek() {
+                    Some(b']') | Some(b'}') if depth > 0 => {
+                        depth -= 1;
+                        self.pos += 1;
+                    }
+                    Some(b',') if depth > 0 => {
+                        self.pos += 1;
+                        break; // next element of the open container
+                    }
+                    _ => {
+                        if depth == 0 {
+                            return Ok(());
+                        }
+                        break; // first value of a just-opened container
+                    }
+                }
+            }
+            if depth == 0 {
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// The `(q, k, v)` row sets every submit/prefill/decode request
+/// carries, parsed into reusable buffers.
+#[derive(Default)]
+pub struct TokenBody {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl TokenBody {
+    /// Scan `body` for the `q`/`k`/`v` arrays (all required), skipping
+    /// every other field. The buffers are reused across requests on
+    /// the same connection.
+    pub fn parse_into(&mut self, body: &[u8]) -> Result<(), WireError> {
+        let mut scan = Scan::object(body)?;
+        let (mut got_q, mut got_k, mut got_v) = (false, false, false);
+        while let Some(key) = scan.next_key()? {
+            match key {
+                b"q" => {
+                    scan.f32_array_into("q", &mut self.q)?;
+                    got_q = true;
+                }
+                b"k" => {
+                    scan.f32_array_into("k", &mut self.k)?;
+                    got_k = true;
+                }
+                b"v" => {
+                    scan.f32_array_into("v", &mut self.v)?;
+                    got_v = true;
+                }
+                _ => scan.skip_value()?,
+            }
+        }
+        for (field, got) in [("q", got_q), ("k", got_k), ("v", got_v)] {
+            if !got {
+                return Err(WireError::Missing { field });
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// response serialization
+// ---------------------------------------------------------------------------
+
+/// Append one f32 in shortest round-trip form. Rust's `{}` formatting
+/// for `f32` prints the shortest decimal that parses back to exactly
+/// the same bits, and [`Scan::number`] parses it back with
+/// `f32::from_str` — so outputs cross the wire losslessly.
+pub fn write_f32(buf: &mut String, x: f32) {
+    use fmt::Write;
+    if x.is_finite() {
+        let _ = write!(buf, "{x}");
+    } else {
+        // JSON cannot spell non-finite values; the serve layer screens
+        // them out long before here, but a serializer must still be
+        // total
+        buf.push_str("null");
+    }
+}
+
+/// Append `[x0,x1,...]`.
+pub fn write_f32_array(buf: &mut String, xs: &[f32]) {
+    buf.push('[');
+    for (i, &x) in xs.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        write_f32(buf, x);
+    }
+    buf.push(']');
+}
+
+/// Append a JSON string (the subset the API emits: handles and error
+/// text; control characters and quotes escaped).
+pub fn write_str(buf: &mut String, s: &str) {
+    use fmt::Write;
+    buf.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => buf.push_str("\\\""),
+            '\\' => buf.push_str("\\\\"),
+            '\n' => buf.push_str("\\n"),
+            '\r' => buf.push_str("\\r"),
+            '\t' => buf.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(buf, "\\u{:04x}", c as u32);
+            }
+            c => buf.push(c),
+        }
+    }
+    buf.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn token_body_extracts_only_requested_fields() {
+        let mut body = TokenBody::default();
+        body.parse_into(
+            br#"{"session":"s-3","q":[1,2.5,-3e-2],"ignored":{"a":[1,2]},"k":[0],"v":[],"flag":true}"#,
+        )
+        .unwrap();
+        assert_eq!(body.q, vec![1.0, 2.5, -3e-2]);
+        assert_eq!(body.k, vec![0.0]);
+        assert!(body.v.is_empty());
+    }
+
+    #[test]
+    fn missing_and_mistyped_fields_are_typed_errors() {
+        let mut body = TokenBody::default();
+        assert_eq!(
+            body.parse_into(br#"{"q":[1],"k":[1]}"#),
+            Err(WireError::Missing { field: "v" })
+        );
+        assert_eq!(
+            body.parse_into(br#"{"q":"hi","k":[1],"v":[1]}"#),
+            Err(WireError::BadField { field: "q" })
+        );
+        // NaN/inf are unrepresentable in the JSON number grammar
+        assert_eq!(
+            body.parse_into(br#"{"q":[NaN],"k":[1],"v":[1]}"#),
+            Err(WireError::BadField { field: "q" })
+        );
+        // a finite-overflow literal (1e999 -> inf) is rejected too
+        assert_eq!(
+            body.parse_into(br#"{"q":[1e999],"k":[1],"v":[1]}"#),
+            Err(WireError::BadField { field: "q" })
+        );
+    }
+
+    #[test]
+    fn truncated_and_garbage_bodies_never_panic() {
+        let mut body = TokenBody::default();
+        for bad in [
+            &b""[..],
+            b"{",
+            b"{\"q\":[1,",
+            b"{\"q\":[1]",
+            b"not json at all",
+            b"{\"q\":[1],\"k\":[1],\"v\":[1]",
+            b"{\"x\": \"unterminated",
+            b"{\"x\": \"trailing escape\\",
+            b"\xff\xfe{\"q\":[1]}",
+        ] {
+            assert!(body.parse_into(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn hostile_nesting_hits_the_depth_cap_not_the_stack() {
+        let mut evil = String::from("{\"x\":");
+        for _ in 0..100_000 {
+            evil.push('[');
+        }
+        let mut body = TokenBody::default();
+        assert_eq!(body.parse_into(evil.as_bytes()), Err(WireError::TooDeep));
+    }
+
+    #[test]
+    fn skipper_handles_nested_values_between_wanted_fields() {
+        let mut body = TokenBody::default();
+        body.parse_into(
+            br#"{"a":{"b":[{"c":"}]"},null,-1.5e3],"d":{}},"q":[7],"e":[[],[[]]],"k":[8],"v":[9]}"#,
+        )
+        .unwrap();
+        assert_eq!((body.q[0], body.k[0], body.v[0]), (7.0, 8.0, 9.0));
+    }
+
+    /// The load generator's bit-exact verification depends on this:
+    /// f32 -> shortest decimal -> f32 is the identity, for any bits.
+    #[test]
+    fn f32_round_trips_bit_exactly_through_the_wire() {
+        let mut rng = Rng::new(77);
+        let mut buf = String::new();
+        let mut vals = vec![0.0f32, -0.0, 1.0, f32::MIN_POSITIVE, f32::MAX, 1e-40];
+        for _ in 0..2000 {
+            let x = f32::from_bits(rng.next_u32());
+            if x.is_finite() {
+                vals.push(x);
+            }
+        }
+        buf.push_str("{\"q\":");
+        write_f32_array(&mut buf, &vals);
+        buf.push_str(",\"k\":[],\"v\":[]}");
+        let mut body = TokenBody::default();
+        body.parse_into(buf.as_bytes()).unwrap();
+        assert_eq!(body.q.len(), vals.len());
+        for (a, b) in vals.iter().zip(&body.q) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} round-trip");
+        }
+    }
+
+    #[test]
+    fn string_writer_escapes_control_bytes() {
+        let mut buf = String::new();
+        write_str(&mut buf, "a\"b\\c\nd\u{1}");
+        assert_eq!(buf, r#""a\"b\\c\nd\u0001""#);
+    }
+}

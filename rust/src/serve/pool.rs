@@ -87,9 +87,10 @@ impl<'s> StreamPool<'s> {
     /// [`AttentionSession::begin_decode`], surfaced here at build time
     /// rather than on the first admit).
     pub fn new(session: &'s AttentionSession, cfg: ServeConfig) -> Result<StreamPool<'s>> {
-        if cfg.max_streams == 0 {
-            bail!("StreamPool: max_streams must be > 0");
-        }
+        // Typed as ServeError::InvalidConfig at the source; callers that
+        // need the structured form use `ServeConfig::validate` directly
+        // (the network frontend does, before binding a socket).
+        cfg.validate()?;
         if cfg.max_streams > u32::MAX as usize {
             bail!("StreamPool: max_streams {} exceeds the slot index range", cfg.max_streams);
         }
@@ -356,10 +357,14 @@ mod tests {
             .unwrap();
         assert!(StreamPool::new(&not_causal, ServeConfig::new(2, 1)).is_err());
         let sess = session();
-        // dv = 0 surfaces begin_decode's rejection at pool build
-        assert!(StreamPool::new(&sess, ServeConfig::new(2, 0)).is_err());
+        // dv = 0 and max_streams = 0 are typed InvalidConfig rejections
+        // at construction; through the anyhow boundary the stable
+        // Display phrase is the contract.
+        let err = StreamPool::new(&sess, ServeConfig::new(2, 0)).unwrap_err();
+        assert_eq!(err.to_string(), "invalid serve config: dv must be > 0");
         let zero_capacity = ServeConfig { max_streams: 0, ..ServeConfig::new(2, 1) };
-        assert!(StreamPool::new(&sess, zero_capacity).is_err());
+        let err = StreamPool::new(&sess, zero_capacity).unwrap_err();
+        assert_eq!(err.to_string(), "invalid serve config: max_streams must be > 0");
     }
 
     #[test]

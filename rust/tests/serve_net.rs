@@ -1,0 +1,505 @@
+//! Integration tests for the HTTP/1.1 serving gateway (`serve::net`).
+//!
+//! Four layers of coverage:
+//!
+//! 1. The exhaustive `ServeError -> (HTTP status, code, Retry-After)`
+//!    wire mapping, pinned variant by variant (no wildcard arm, so a
+//!    new variant fails compilation here until its mapping is decided).
+//! 2. Typed [`ServeConfig`] validation at construction.
+//! 3. Adversarial raw-socket inputs — truncated, oversized, non-UTF8,
+//!    depth-bombed, slow-loris — all answered with a 4xx within the
+//!    read deadline, never a panic or a hang.
+//! 4. End-to-end: N concurrent TCP clients (prefill + decode, chaos
+//!    fault plan) whose surviving outputs must be bit-identical to the
+//!    single-stream in-process decode, with backpressure rejects
+//!    surfaced as `429` + `Retry-After` and zero 5xx.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use macformer::serve::net::http::HttpConfig;
+use macformer::serve::net::{http_status, retry_after_ticks, run_socket};
+use macformer::serve::{
+    EngineSpec, FaultPlan, LoadConfig, NetConfig, ServeConfig, ServeError, Server,
+};
+
+// ---------------------------------------------------------------------------
+// satellite: the exhaustive ServeError wire mapping
+// ---------------------------------------------------------------------------
+
+/// Every [`ServeError`] variant's HTTP mapping in one table: status,
+/// reason, machine code, and `Retry-After` ticks. The match below has
+/// no wildcard, so a new variant cannot ship without a pinned mapping.
+#[test]
+fn serve_error_wire_mapping_is_exhaustive_and_stable() {
+    let cases: Vec<(ServeError, u16, &str, &str, Option<u64>)> = vec![
+        (
+            ServeError::InvalidConfig { what: "dv must be > 0" },
+            500,
+            "Internal Server Error",
+            "invalid_config",
+            None,
+        ),
+        (ServeError::PoolFull { capacity: 8 }, 503, "Service Unavailable", "pool_full", Some(1)),
+        (
+            ServeError::Backpressure { max_pending: 4, retry_after_ticks: 3 },
+            429,
+            "Too Many Requests",
+            "backpressure",
+            Some(3),
+        ),
+        (
+            // a zero hint still advertises a strictly positive wait
+            ServeError::Backpressure { max_pending: 4, retry_after_ticks: 0 },
+            429,
+            "Too Many Requests",
+            "backpressure",
+            Some(1),
+        ),
+        (ServeError::UnknownStream, 404, "Not Found", "unknown_stream", None),
+        (ServeError::StreamBusy, 409, "Conflict", "stream_busy", None),
+        (ServeError::NoOutput, 409, "Conflict", "no_output", None),
+        (
+            ServeError::BadRow { what: "q", expected: 8, got: 3 },
+            400,
+            "Bad Request",
+            "bad_row",
+            None,
+        ),
+        (ServeError::NonFinite { what: "v" }, 422, "Unprocessable Entity", "non_finite", None),
+        (ServeError::Expired, 410, "Gone", "expired", None),
+        (ServeError::Faulted, 500, "Internal Server Error", "faulted", None),
+        (
+            ServeError::Session("backend refused".into()),
+            500,
+            "Internal Server Error",
+            "session",
+            None,
+        ),
+    ];
+    for (err, status, reason, code, retry) in &cases {
+        // exhaustiveness guard: every variant by name, no `_` arm
+        match err {
+            ServeError::InvalidConfig { .. } => {}
+            ServeError::PoolFull { .. } => {}
+            ServeError::Backpressure { .. } => {}
+            ServeError::UnknownStream => {}
+            ServeError::StreamBusy => {}
+            ServeError::NoOutput => {}
+            ServeError::BadRow { .. } => {}
+            ServeError::NonFinite { .. } => {}
+            ServeError::Expired => {}
+            ServeError::Faulted => {}
+            ServeError::Session(_) => {}
+        }
+        assert_eq!(http_status(err), (*status, *reason), "{code}");
+        assert_eq!(err.code(), *code);
+        assert_eq!(retry_after_ticks(err), *retry, "{code}");
+        // a Retry-After only makes sense on statuses clients may retry
+        if retry.is_some() {
+            assert!(matches!(status, 429 | 503), "{code}: Retry-After on {status}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// satellite: typed ServeConfig validation at construction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_config_validation_rejects_degenerate_configs_with_typed_errors() {
+    assert_eq!(
+        ServeConfig::new(0, 4).validate(),
+        Err(ServeError::InvalidConfig { what: "max_streams must be > 0" })
+    );
+    assert_eq!(
+        ServeConfig::new(4, 0).validate(),
+        Err(ServeError::InvalidConfig { what: "dv must be > 0" })
+    );
+    assert_eq!(ServeConfig::new(1, 1).validate(), Ok(()));
+
+    // the gateway refuses to bind at all on an invalid config
+    let cfg = small_cfg();
+    let spec = spec_for(&cfg);
+    let bad = ServeConfig { max_streams: 0, ..ServeConfig::new(1, cfg.dv) };
+    let err = Server::start(NetConfig::default(), spec, bad, cfg.resilience.clone())
+        .err()
+        .expect("zero-capacity config must not start a server");
+    assert_eq!(err.to_string(), "invalid serve config: max_streams must be > 0");
+}
+
+// ---------------------------------------------------------------------------
+// shared fixtures
+// ---------------------------------------------------------------------------
+
+/// A small, fast engine shape shared by the gateway tests.
+fn small_cfg() -> LoadConfig {
+    LoadConfig {
+        streams: 4,
+        tokens: 12,
+        prompt: 4,
+        head_dim: 8,
+        dv: 8,
+        num_features: 16,
+        min_batch: 2,
+        ..LoadConfig::default()
+    }
+}
+
+fn spec_for(cfg: &LoadConfig) -> EngineSpec {
+    EngineSpec {
+        kernel: cfg.kernel,
+        backend: cfg.backend,
+        head_dim: cfg.head_dim,
+        dv: cfg.dv,
+        num_features: cfg.num_features,
+        seed: cfg.seed,
+    }
+}
+
+fn server_for(cfg: &LoadConfig, net: NetConfig) -> Server {
+    let serve = ServeConfig { min_batch: cfg.min_batch, ..ServeConfig::new(cfg.streams, cfg.dv) };
+    Server::start(net, spec_for(cfg), serve, cfg.resilience.clone()).expect("server start")
+}
+
+struct RawResponse {
+    status: u16,
+    /// Lower-cased head (status line + headers).
+    head: String,
+    body: String,
+}
+
+/// One raw request on a fresh connection, read to connection close.
+/// `half_close` shuts the write side after sending, which a keep-alive
+/// server treats as a clean end-of-session once it has answered.
+fn one_shot(addr: SocketAddr, payload: &[u8], half_close: bool) -> RawResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    stream.write_all(payload).expect("send request");
+    if half_close {
+        let _ = stream.shutdown(Shutdown::Write);
+    }
+    let mut buf = Vec::new();
+    // tolerate a reset after the response has been received in full
+    let _ = stream.read_to_end(&mut buf);
+    let text = String::from_utf8_lossy(&buf).into_owned();
+    let split = text.find("\r\n\r\n").unwrap_or_else(|| panic!("no response head in {text:?}"));
+    let head = text[..split].to_ascii_lowercase();
+    let status = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+    RawResponse { status, head, body: text[split + 4..].to_string() }
+}
+
+/// A keep-alive client for hammering one connection with many GETs.
+struct RawClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl RawClient {
+    fn connect(addr: SocketAddr) -> RawClient {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+        let _ = stream.set_nodelay(true);
+        RawClient { stream, buf: Vec::new() }
+    }
+
+    fn get(&mut self, path: &str) -> (u16, String, String) {
+        self.request("GET", path, "")
+    }
+
+    /// One request on the persistent connection: (status, lowercased
+    /// head, body), leaving the connection open for the next request.
+    fn request(&mut self, method: &str, path: &str, body: &str) -> (u16, String, String) {
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.stream.write_all(req.as_bytes()).expect("send request");
+        let head_end = loop {
+            if let Some(pos) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break pos + 4;
+            }
+            self.read_more("head");
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).to_ascii_lowercase();
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("content-length:"))
+            .map(|v| v.trim().parse().expect("content-length"))
+            .unwrap_or(0);
+        while self.buf.len() < head_end + len {
+            self.read_more("body");
+        }
+        let body = String::from_utf8_lossy(&self.buf[head_end..head_end + len]).into_owned();
+        self.buf.drain(..head_end + len);
+        (status, head, body)
+    }
+
+    fn read_more(&mut self, what: &str) {
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk).expect("read response");
+        assert!(n > 0, "server closed mid-{what}");
+        self.buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// routing + typed errors over a real socket
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gateway_serves_health_spec_and_typed_errors() {
+    let cfg = small_cfg();
+    let server = server_for(&cfg, NetConfig::default());
+    let addr = server.local_addr();
+
+    let health = one_shot(addr, b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n", true);
+    assert_eq!(health.status, 200);
+    assert!(health.body.contains("\"status\":\"ok\""), "{}", health.body);
+    assert!(health.body.contains("\"tick_no\""), "{}", health.body);
+
+    let spec = one_shot(addr, b"GET /v1/spec HTTP/1.1\r\nHost: t\r\n\r\n", true);
+    assert_eq!(spec.status, 200);
+    assert!(spec.body.contains("\"kernel\":\"exp\""), "{}", spec.body);
+    assert!(spec.body.contains("\"backend\":\"host\""), "{}", spec.body);
+    assert!(spec.body.contains("\"head_dim\":8"), "{}", spec.body);
+
+    let missing = one_shot(addr, b"GET /v1/nope HTTP/1.1\r\nHost: t\r\n\r\n", true);
+    assert_eq!(missing.status, 404);
+    assert!(missing.body.contains("\"error\":\"not_found\""), "{}", missing.body);
+
+    // a typed ServeError crossing the wire: decode on a never-opened
+    // stream maps to 404 unknown_stream (mapping pinned above)
+    let body = r#"{"q":[1,0,0,0,0,0,0,0],"k":[1,0,0,0,0,0,0,0],"v":[1,0,0,0,0,0,0,0]}"#;
+    let req = format!(
+        "POST /v1/streams/s-999/decode HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let unknown = one_shot(addr, req.as_bytes(), true);
+    assert_eq!(unknown.status, 404);
+    assert!(unknown.body.contains("\"error\":\"unknown_stream\""), "{}", unknown.body);
+    assert!(unknown.body.contains("\"retryable\":false"), "{}", unknown.body);
+
+    let gone = one_shot(addr, b"DELETE /v1/streams/s-999 HTTP/1.1\r\nHost: t\r\n\r\n", true);
+    assert_eq!(gone.status, 404);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// satellite: adversarial wire inputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adversarial_wire_inputs_answer_4xx_without_panic_or_hang() {
+    let cfg = small_cfg();
+    let http = HttpConfig {
+        max_head: 1024,
+        max_body: 64 * 1024,
+        read_timeout: Duration::from_millis(400),
+    };
+    let server = server_for(&cfg, NetConfig { http, ..NetConfig::default() });
+    let addr = server.local_addr();
+
+    // garbage request line
+    let r = one_shot(addr, b"GARBAGE\r\n\r\n", true);
+    assert_eq!(r.status, 400);
+    assert!(r.body.contains("\"error\":\"bad_request\""), "{}", r.body);
+
+    // non-UTF8 bytes in the head
+    let r = one_shot(addr, b"GET /healthz\xff HTTP/1.1\r\nHost: t\r\n\r\n", true);
+    assert_eq!(r.status, 400);
+
+    // peer gives up mid-Content-Length: truncated body
+    let r = one_shot(addr, b"POST /v1/streams HTTP/1.1\r\nContent-Length: 50\r\n\r\n{}", true);
+    assert_eq!(r.status, 400);
+    assert!(r.body.contains("truncated"), "{}", r.body);
+
+    // oversized declared Content-Length is refused before any body read
+    let r = one_shot(addr, b"POST /v1/streams HTTP/1.1\r\nContent-Length: 10000000\r\n\r\n", true);
+    assert_eq!(r.status, 413);
+    assert!(r.body.contains("\"error\":\"body_too_large\""), "{}", r.body);
+
+    // a body-bearing method must declare Content-Length
+    let r = one_shot(addr, b"POST /v1/streams HTTP/1.1\r\nHost: t\r\n\r\n", true);
+    assert_eq!(r.status, 411);
+
+    // head past max_head, even when it arrives complete in one read
+    let huge = format!("GET /healthz HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(1100));
+    let r = one_shot(addr, huge.as_bytes(), true);
+    assert_eq!(r.status, 431);
+
+    // depth-bombed JSON: the borrowing scanner is depth-capped and
+    // iterative, so 40k open brackets cannot overflow the stack
+    let mut nested = String::from("{\"q\":");
+    nested.push_str(&"[".repeat(40_000));
+    let req = format!(
+        "POST /v1/streams/s-1/decode HTTP/1.1\r\nContent-Length: {}\r\n\r\n{nested}",
+        nested.len()
+    );
+    let r = one_shot(addr, req.as_bytes(), true);
+    assert_eq!(r.status, 400);
+    assert!(r.body.contains("\"error\":\"bad_body\""), "{}", r.body);
+
+    // the JSON grammar cannot spell NaN; it dies in parse, not the fold
+    let body = r#"{"q":[NaN],"k":[],"v":[]}"#;
+    let req = format!(
+        "POST /v1/streams/s-1/decode HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let r = one_shot(addr, req.as_bytes(), true);
+    assert_eq!(r.status, 400);
+    assert!(r.body.contains("\"error\":\"bad_body\""), "{}", r.body);
+
+    // slow loris: a partial head then silence is cut off by the read
+    // deadline, not held open
+    let started = Instant::now();
+    let r = one_shot(addr, b"POST /v1/streams HTTP/1.1\r\nHost: t", false);
+    assert_eq!(r.status, 408);
+    assert!(
+        started.elapsed() < Duration::from_secs(5),
+        "slow-loris connection held past the read deadline"
+    );
+
+    // after all that abuse the gateway still answers cleanly
+    let r = one_shot(addr, b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n", true);
+    assert_eq!(r.status, 200);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// backpressure over the wire: 429 + Retry-After
+// ---------------------------------------------------------------------------
+
+/// With a depth-1 ingress queue and eight connections hammering it,
+/// some requests must be bounced with `429` + `Retry-After` (never a
+/// hang, never a 5xx), and the gateway recovers to clean service.
+#[test]
+fn ingress_backpressure_surfaces_as_429_with_retry_after() {
+    let cfg = small_cfg();
+    let net = NetConfig { queue_depth: 1, workers: 10, ..NetConfig::default() };
+    let server = server_for(&cfg, net);
+    let addr = server.local_addr();
+
+    let got_429 = AtomicU64::new(0);
+    let unexpected = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        // park the engine in long synchronous prefills: while one runs,
+        // the depth-1 ingress queue holds at most one waiting command
+        // and every further healthz below must bounce with a 429
+        scope.spawn(|| {
+            let mut client = RawClient::connect(addr);
+            let mut row = "0.5,".repeat(2048 * 8);
+            row.pop(); // drop the trailing comma
+            let body = format!("{{\"q\":[{row}],\"k\":[{row}],\"v\":[{row}]}}");
+            for _ in 0..4 {
+                let (status, _, resp) = client.request("POST", "/v1/streams", "{}");
+                if status != 201 {
+                    continue; // bounced by our own flood; try the next slot
+                }
+                let sid = resp.split('"').nth(3).unwrap_or("s-1").to_string();
+                for _ in 0..50 {
+                    let path = format!("/v1/streams/{sid}/prefill");
+                    if client.request("POST", &path, &body).0 != 429 {
+                        break;
+                    }
+                }
+            }
+        });
+        for _ in 0..8 {
+            scope.spawn(|| {
+                let mut client = RawClient::connect(addr);
+                for _ in 0..2000 {
+                    let (status, head, body) = client.get("/healthz");
+                    match status {
+                        200 => assert!(body.contains("\"status\":\"ok\""), "{body}"),
+                        429 => {
+                            assert!(head.contains("retry-after: 1"), "429 without Retry-After");
+                            assert!(body.contains("\"error\":\"ingress_full\""), "{body}");
+                            assert!(body.contains("\"retryable\":true"), "{body}");
+                            got_429.fetch_add(1, Ordering::Relaxed);
+                        }
+                        _ => {
+                            unexpected.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    if got_429.load(Ordering::Relaxed) >= 4 {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(unexpected.load(Ordering::Relaxed), 0, "non-200/429 answer under flood");
+    assert!(
+        got_429.load(Ordering::Relaxed) >= 1,
+        "no 429 from an 8-way flood of a depth-1 ingress queue"
+    );
+
+    // the queue drains and service is clean again
+    let mut client = RawClient::connect(addr);
+    let ok = (0..50).any(|_| client.get("/healthz").0 == 200);
+    assert!(ok, "gateway did not recover after the flood");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end: concurrent chaos clients, bit-identical survivors
+// ---------------------------------------------------------------------------
+
+/// A clean multi-client run over real sockets: every stream prefills a
+/// prompt, decodes to completion, and the gateway's outputs verify
+/// bit-identical against the single-stream in-process decode.
+#[test]
+fn concurrent_socket_decode_is_bit_identical_to_in_process() {
+    let cfg = small_cfg();
+    let net = NetConfig { workers: cfg.streams, ..NetConfig::default() };
+    let server = server_for(&cfg, net);
+    let addr = server.local_addr().to_string();
+    let report = run_socket(&cfg, &addr).expect("socket load run");
+    server.shutdown();
+    assert_eq!(report.verified, Some(true), "socket outputs diverged from in-process decode");
+    assert_eq!(report.stream_errors, 0);
+    assert_eq!(report.http_5xx, 0);
+    assert_eq!(report.faulted_streams, 0);
+    assert_eq!(report.poisoned_streams, 0);
+    assert_eq!(report.tokens_total, (cfg.streams * cfg.tokens) as u64);
+}
+
+/// The acceptance run: six concurrent TCP clients under a chaos plan
+/// (two planned fold panics, forced hibernations mid-decode). The
+/// survivors — and every casualty's surviving prefix — must be
+/// bit-identical to the in-process single-stream decode, the planned
+/// faults must land as in-stream typed error frames (never a 5xx),
+/// and no fault may leak into a neighbour stream.
+#[test]
+fn concurrent_chaos_clients_verify_bit_identical_with_zero_5xx() {
+    let cfg = LoadConfig {
+        streams: 6,
+        tokens: 24,
+        prompt: 5,
+        faults: FaultPlan { seed: 11, panics: 2, hibernate_every: 3, ..FaultPlan::none() },
+        ..small_cfg()
+    };
+    let net = NetConfig { workers: cfg.streams, queue_depth: 64, ..NetConfig::default() };
+    let server = server_for(&cfg, net);
+    let addr = server.local_addr().to_string();
+    let report = run_socket(&cfg, &addr).expect("socket chaos run");
+    server.shutdown();
+    assert_eq!(report.verified, Some(true), "survivors diverged from in-process decode");
+    assert_eq!(report.stream_errors, 0, "unexpected stream errors under chaos");
+    assert_eq!(report.http_5xx, 0, "chaos must surface as typed frames, not 5xx");
+    assert_eq!(report.faulted_streams, 2, "exactly the planned fold panics land");
+    assert_eq!(report.poisoned_streams, 0, "a fault leaked into a neighbour stream");
+    assert!(report.tokens_total > 0);
+}

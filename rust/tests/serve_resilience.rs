@@ -124,6 +124,12 @@ fn retired_slot_leaks_no_latency_residue_into_its_successor() {
 #[test]
 fn serve_error_contract_is_exhaustive_and_stable() {
     let cases: Vec<(ServeError, &str, bool, &str)> = vec![
+        (
+            ServeError::InvalidConfig { what: "max_streams must be > 0" },
+            "invalid_config",
+            false,
+            "invalid serve config",
+        ),
         (ServeError::PoolFull { capacity: 4 }, "pool_full", true, "pool full"),
         (
             ServeError::Backpressure { max_pending: 8, retry_after_ticks: 1 },
@@ -148,6 +154,7 @@ fn serve_error_contract_is_exhaustive_and_stable() {
     for (err, code, retryable, phrase) in &cases {
         // exhaustiveness guard: every variant, no `_` arm
         match err {
+            ServeError::InvalidConfig { .. } => {}
             ServeError::PoolFull { .. } => {}
             ServeError::Backpressure { .. } => {}
             ServeError::UnknownStream => {}
@@ -167,7 +174,7 @@ fn serve_error_contract_is_exhaustive_and_stable() {
         let dynamic: &dyn std::error::Error = err;
         assert_eq!(dynamic.to_string(), rendered);
     }
-    // one code per variant, and the table covers all ten
+    // one code per variant, and the table covers all eleven
     let mut codes: Vec<&str> = cases.iter().map(|c| c.1).collect();
     codes.sort_unstable();
     codes.dedup();
