@@ -1,0 +1,181 @@
+//! Bench §Serve/durable — the write-ahead journal's cost over the
+//! gateway.
+//!
+//! Runs the same closed-loop socket workload twice against an
+//! in-process [`Server`] — once with durability off (the floor) and
+//! once journaling every accepted op to a scratch data dir with the
+//! production group-commit cadence — and writes both to
+//! `BENCH_serve_durable.json`. The acceptance bar for the durability
+//! layer is `within_10pct`: journal-on throughput must stay within 10%
+//! of the journal-off floor. Both arms must verify bit-exact with zero
+//! 5xx; a perf miss is reported in the JSON, never a bench failure
+//! (CI timing noise must not mask a correctness signal).
+//!
+//! Knobs (env): the MACFORMER_SERVE_* shape knobs from `serve_net`,
+//! plus MACFORMER_SERVE_SYNC_EVERY (32) and MACFORMER_SERVE_CKPT_EVERY
+//! (1024).
+//!
+//! Run with: `cargo bench --bench serve_durable`
+//!
+//! [`Server`]: macformer::serve::Server
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{anyhow, Result};
+
+use macformer::attn::{Backend, Kernel};
+use macformer::fastpath;
+use macformer::serve::loadgen::LoadConfig;
+use macformer::serve::net::{run_socket, NetConfig};
+use macformer::serve::{DurabilityConfig, EngineSpec, FaultPlan, ServeConfig, Server};
+use macformer::util::json::Value;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_parse<T: FromStr>(name: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match std::env::var(name) {
+        Err(_) => Ok(default),
+        Ok(raw) => T::from_str(&raw).map_err(|e| anyhow!("{name}={raw:?}: {e}")),
+    }
+}
+
+fn server_for(cfg: &LoadConfig, durability: Option<DurabilityConfig>) -> Result<Server> {
+    let spec = EngineSpec {
+        kernel: cfg.kernel,
+        backend: cfg.backend,
+        head_dim: cfg.head_dim,
+        dv: cfg.dv,
+        num_features: cfg.num_features,
+        seed: cfg.seed,
+    };
+    let net = NetConfig {
+        workers: env_usize("MACFORMER_SERVE_WORKERS", 4),
+        ..NetConfig::default()
+    };
+    let serve = ServeConfig { min_batch: cfg.min_batch, ..ServeConfig::new(cfg.streams, cfg.dv) };
+    Server::start(net, spec, serve, cfg.resilience.clone(), durability)
+}
+
+/// Total bytes left in the data dir (journal epochs + checkpoint).
+fn dir_bytes(dir: &Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    entries.flatten().filter_map(|e| e.metadata().ok()).map(|m| m.len()).sum()
+}
+
+fn main() -> Result<()> {
+    macformer::util::logging::init();
+    let streams = env_usize("MACFORMER_SERVE_STREAMS", 16);
+    let tokens = env_usize("MACFORMER_SERVE_TOKENS", 48);
+    let kernel: Kernel = env_parse("MACFORMER_BENCH_KERNEL", Kernel::Exp)?;
+    let backend: Backend = env_parse("MACFORMER_BENCH_BACKEND", Backend::HostFast)?;
+    let sync_every = env_u64("MACFORMER_SERVE_SYNC_EVERY", 32);
+    let ckpt_every = env_u64("MACFORMER_SERVE_CKPT_EVERY", 1024);
+    let cfg = LoadConfig {
+        streams,
+        tokens,
+        prompt: env_usize("MACFORMER_SERVE_PROMPT", 8),
+        head_dim: env_usize("MACFORMER_SERVE_D", 16),
+        dv: env_usize("MACFORMER_SERVE_DV", 16),
+        num_features: env_usize("MACFORMER_SERVE_FEATURES", 32),
+        kernel,
+        backend,
+        min_batch: env_usize("MACFORMER_SERVE_MIN_BATCH", 2),
+        verify: true,
+        faults: FaultPlan::none(),
+        ..LoadConfig::default()
+    };
+    println!(
+        "=== §Serve/durable: {streams} streams x {tokens} tokens, kernel {kernel}, \
+         backend {backend}, {} threads, sync every {sync_every} tick(s) ===",
+        fastpath::parallel::num_threads()
+    );
+
+    // --- arm 1: journal off (the floor the durable arm must chase) ---
+    let server = server_for(&cfg, None)?;
+    let addr = server.local_addr().to_string();
+    let floor = run_socket(&cfg, &addr)?;
+    println!("{}\n", floor.render());
+    server.shutdown();
+
+    // --- arm 2: every accepted op journaled with group commit ---
+    let dir = std::env::temp_dir().join(format!("macformer_bench_durable_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let durability = DurabilityConfig {
+        sync_every_ticks: sync_every,
+        checkpoint_every_ticks: ckpt_every,
+        ..DurabilityConfig::new(&dir)
+    };
+    let server = server_for(&cfg, Some(durability))?;
+    let addr = server.local_addr().to_string();
+    let durable = run_socket(&cfg, &addr)?;
+    println!("{}\n", durable.render());
+    server.shutdown();
+    let journal_bytes = dir_bytes(&dir);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let overhead = if durable.tokens_per_sec > 0.0 {
+        floor.tokens_per_sec / durable.tokens_per_sec
+    } else {
+        f64::INFINITY
+    };
+    let within_10pct = durable.tokens_per_sec >= 0.9 * floor.tokens_per_sec;
+    println!(
+        "journal-on {:.0} tok/s vs journal-off {:.0} tok/s ({overhead:.3}x, within 10%: \
+         {within_10pct}); {journal_bytes} journal+checkpoint bytes at shutdown",
+        durable.tokens_per_sec,
+        floor.tokens_per_sec,
+    );
+
+    let doc = Value::obj(vec![
+        ("streams", Value::num(streams as f64)),
+        ("tokens_per_stream", Value::num(tokens as f64)),
+        ("kernel", Value::str(kernel.name())),
+        ("threads", Value::num(fastpath::parallel::num_threads() as f64)),
+        ("simd_supported", Value::Bool(fastpath::simd::supported())),
+        ("sync_every_ticks", Value::num(sync_every as f64)),
+        ("checkpoint_every_ticks", Value::num(ckpt_every as f64)),
+        ("floor_tokens_per_sec", Value::num(floor.tokens_per_sec)),
+        ("durable_tokens_per_sec", Value::num(durable.tokens_per_sec)),
+        ("journal_overhead", Value::num(overhead)),
+        ("journal_bytes", Value::num(journal_bytes as f64)),
+        // CI greps the three below
+        ("within_10pct", Value::Bool(within_10pct)),
+        ("verified", Value::Bool(floor.verified == Some(true) && durable.verified == Some(true))),
+        ("http_5xx", Value::num((floor.http_5xx + durable.http_5xx) as f64)),
+        ("stream_errors", Value::num((floor.stream_errors + durable.stream_errors) as f64)),
+        ("floor", floor.to_json()),
+        ("durable", durable.to_json()),
+    ]);
+    std::fs::write("BENCH_serve_durable.json", doc.to_string())?;
+    println!("serve/durable report written to BENCH_serve_durable.json");
+
+    let degraded = floor.verified != Some(true)
+        || durable.verified != Some(true)
+        || floor.stream_errors > 0
+        || durable.stream_errors > 0
+        || floor.http_5xx > 0
+        || durable.http_5xx > 0;
+    if degraded {
+        return Err(anyhow!(
+            "serve/durable degraded: floor verified {:?} ({} errors, {} x 5xx), durable \
+             verified {:?} ({} errors, {} x 5xx)",
+            floor.verified,
+            floor.stream_errors,
+            floor.http_5xx,
+            durable.verified,
+            durable.stream_errors,
+            durable.http_5xx
+        ));
+    }
+    Ok(())
+}

@@ -96,7 +96,7 @@ fn main() -> Result<()> {
         ..NetConfig::default()
     };
     let serve_cfg = ServeConfig { min_batch: cfg.min_batch, ..ServeConfig::new(streams, cfg.dv) };
-    let server = Server::start(net, spec, serve_cfg, cfg.resilience.clone())?;
+    let server = Server::start(net, spec, serve_cfg, cfg.resilience.clone(), None)?;
     let addr = server.local_addr().to_string();
     let socket = run_socket(&cfg, &addr)?;
     println!("{}\n", socket.render());

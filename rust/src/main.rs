@@ -13,8 +13,12 @@
 //!                                closed|staggered|bursty, --kernel, --backend,
 //!                                --verify); --listen ADDR starts the HTTP/1.1
 //!                                gateway instead (--port-file writes the
-//!                                resolved port), --connect ADDR drives a
-//!                                running gateway over TCP
+//!                                resolved port once the gateway is ready,
+//!                                --data-dir PATH journals streams durably and
+//!                                recovers them on restart, SIGTERM drains
+//!                                gracefully), --connect ADDR drives a running
+//!                                gateway over TCP, --kill-restart --data-dir
+//!                                PATH runs the crash-restart chaos drill
 //!   datagen                      dump synthetic dataset samples
 //!
 //! Every run prints a human summary to stdout and (with --out-json) a
@@ -224,6 +228,23 @@ fn cmd_fig3(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Flipped by the `SIGTERM` handler; polled by the `serve --listen`
+/// drain loop.
+static SIGTERM_SEEN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_sigterm(_signum: libc::c_int) {
+    // async-signal-safe: a single atomic store
+    SIGTERM_SEEN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+fn install_sigterm_handler() {
+    // SAFETY: registers an async-signal-safe handler (one atomic store)
+    // for SIGTERM; the previous disposition is not needed.
+    unsafe {
+        libc::signal(libc::SIGTERM, on_sigterm as libc::sighandler_t);
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use macformer::serve::loadgen::{self, Arrival, LoadConfig};
     use macformer::serve::{FaultPlan, ResilienceConfig, SpillMode};
@@ -290,15 +311,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_flag("workers", 4).map_err(|e| anyhow!(e))?;
     let queue_depth = args.usize_flag("queue-depth", 128).map_err(|e| anyhow!(e))?;
     let max_pending = args.usize_flag("max-pending", 0).map_err(|e| anyhow!(e))?;
+    let data_dir = args.opt_flag("data-dir");
+    let sync_every = args.u64_flag("sync-every", 32).map_err(|e| anyhow!(e))?;
+    let checkpoint_every = args.u64_flag("checkpoint-every", 1024).map_err(|e| anyhow!(e))?;
+    let kill_restart = args.switch("kill-restart");
     args.check_unknown().map_err(|e| anyhow!(e))?;
     if listen.is_some() && connect.is_some() {
         bail!("--listen and --connect are mutually exclusive");
     }
 
-    // --listen: run the HTTP/1.1 gateway until killed
+    // --kill-restart: SIGKILL a child gateway mid-load, restart it on
+    // the same data-dir, verify recovery bit-identical
+    if kill_restart {
+        if listen.is_some() || connect.is_some() {
+            bail!("--kill-restart runs its own server; drop --listen/--connect");
+        }
+        let dir = data_dir
+            .as_deref()
+            .ok_or_else(|| anyhow!("--kill-restart needs --data-dir for the durable store"))?;
+        let report = macformer::serve::net::run_kill_restart(&cfg, std::path::Path::new(dir))?;
+        println!("{}", report.render());
+        if let Some(path) = out_json {
+            std::fs::write(&path, report.to_json().to_string())?;
+        }
+        if !report.verified || report.stream_errors > 0 || report.http_5xx > 0 {
+            bail!(
+                "kill-restart degraded: verified {}, {} stream errors, {} x 5xx",
+                report.verified,
+                report.stream_errors,
+                report.http_5xx
+            );
+        }
+        return Ok(());
+    }
+
+    // --listen: run the HTTP/1.1 gateway until SIGTERM / drain
     if let Some(addr) = listen {
         use macformer::serve::net::NetConfig;
-        use macformer::serve::{EngineSpec, ServeConfig, Server};
+        use macformer::serve::{DurabilityConfig, EngineSpec, ServeConfig, Server};
         let spec = EngineSpec {
             kernel: cfg.kernel,
             backend: cfg.backend,
@@ -313,8 +363,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ..ServeConfig::new(cfg.streams, cfg.dv)
         };
         let net = NetConfig { addr, workers, queue_depth, ..NetConfig::default() };
-        let server = Server::start(net, spec, serve_cfg, cfg.resilience.clone())?;
+        let durability = data_dir.map(|dir| {
+            let mut d = DurabilityConfig::new(dir);
+            d.sync_every_ticks = sync_every.max(1);
+            d.checkpoint_every_ticks = checkpoint_every.max(1);
+            d
+        });
+        let server = Server::start(net, spec, serve_cfg, cfg.resilience.clone(), durability)?;
         let local = server.local_addr();
+        // written only after Server::start returns, i.e. once the
+        // gateway is accepting and the engine (recovery included)
+        // reported ready — harnesses key off this file
         if let Some(path) = port_file {
             std::fs::write(&path, local.port().to_string())?;
         }
@@ -322,8 +381,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "serving on http://{local}  (kernel {}, d {}, dv {}, features {}, seed {}, {} streams)",
             cfg.kernel, cfg.head_dim, cfg.dv, cfg.num_features, cfg.seed, cfg.streams
         );
+        // SIGTERM or POST /admin/drain flips the gateway into graceful
+        // drain: stop admitting, finish in-flight decodes, write a
+        // final checkpoint, exit 0
+        install_sigterm_handler();
         loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+            let term = SIGTERM_SEEN.load(std::sync::atomic::Ordering::SeqCst);
+            if term || server.drain_requested() {
+                eprintln!("draining: finishing in-flight work and checkpointing");
+                server.drain();
+                return Ok(());
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
         }
     }
 

@@ -1,0 +1,165 @@
+//! Compacting checkpoints — the Supervisor's full durable state as a
+//! sequence of framed MACJ records in one file.
+//!
+//! Layout: a `K_CKPT_META` frame (journal epoch, wire-id counter, tick
+//! clock, telemetry counters, stream count), one `K_CKPT_STREAM` frame
+//! per live stream (flags + the stream's MACS state record + any
+//! staged-but-unfolded token), and a terminating `K_CKPT_END` frame.
+//! The file is written to a temp name, fsynced, then atomically
+//! renamed over the previous checkpoint — so the on-disk checkpoint is
+//! always a complete last-good image, and any decode failure here is
+//! real corruption answered with a typed error, never a panic.
+
+use std::io::Result;
+
+use crate::serve::telemetry::Telemetry;
+use crate::tensor::io::{append_journal_record, read_journal_record, JournalFrame};
+
+use super::journal::{push_blob, push_row, Cursor, K_CKPT_END, K_CKPT_META, K_CKPT_STREAM};
+
+const FLAG_HIBERNATED: u8 = 1 << 0;
+const FLAG_PENDING: u8 = 1 << 1;
+
+/// One stream's entry in a checkpoint image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointStream {
+    /// Wire stream id (`s-{sid}`) — the handle clients hold across a
+    /// restart.
+    pub sid: u64,
+    /// Restore straight into the spill arena instead of a pool slot.
+    pub hibernated: bool,
+    /// The versioned MACS state record.
+    pub record: Vec<u8>,
+    /// A token staged at checkpoint time but not yet folded; recovery
+    /// replays it through the normal submit path.
+    pub pending: Option<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+}
+
+/// The Supervisor's full durable state at one checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointImage {
+    /// Journal epoch that starts after this checkpoint: recovery
+    /// replays `journal.{epoch}.macj` on top of the image.
+    pub epoch: u64,
+    /// The engine's next unassigned wire stream id.
+    pub next_sid: u64,
+    /// The supervisor tick clock.
+    pub tick_no: u64,
+    /// Durable telemetry counters (see [`Telemetry::export_counters`]).
+    pub counters: [u64; Telemetry::COUNTER_WORDS],
+    pub streams: Vec<CheckpointStream>,
+}
+
+impl CheckpointImage {
+    /// Serialize into `buf` (cleared first).
+    pub(super) fn encode_into(&self, buf: &mut Vec<u8>, scratch: &mut Vec<u8>) {
+        buf.clear();
+        scratch.clear();
+        scratch.extend_from_slice(&self.epoch.to_le_bytes());
+        scratch.extend_from_slice(&self.next_sid.to_le_bytes());
+        scratch.extend_from_slice(&self.tick_no.to_le_bytes());
+        scratch.extend_from_slice(&(self.counters.len() as u32).to_le_bytes());
+        for c in &self.counters {
+            scratch.extend_from_slice(&c.to_le_bytes());
+        }
+        scratch.extend_from_slice(&(self.streams.len() as u32).to_le_bytes());
+        append_journal_record(buf, K_CKPT_META, 0, scratch);
+        for s in &self.streams {
+            scratch.clear();
+            let mut flags = 0u8;
+            if s.hibernated {
+                flags |= FLAG_HIBERNATED;
+            }
+            if s.pending.is_some() {
+                flags |= FLAG_PENDING;
+            }
+            scratch.push(flags);
+            push_blob(scratch, &s.record);
+            if let Some((q, k, v)) = &s.pending {
+                push_row(scratch, q);
+                push_row(scratch, k);
+                push_row(scratch, v);
+            }
+            append_journal_record(buf, K_CKPT_STREAM, s.sid, scratch);
+        }
+        scratch.clear();
+        append_journal_record(buf, K_CKPT_END, 0, scratch);
+    }
+
+    /// Decode a checkpoint file. Everything is validated — frame
+    /// checksums, the advertised stream count, the terminator — before
+    /// the image is handed to recovery: a truncated or bit-flipped
+    /// checkpoint is a typed error, not a partial restore.
+    pub(super) fn decode(bytes: &[u8]) -> Result<CheckpointImage> {
+        let mut at = 0;
+
+        let (kind, _, payload) = next_frame(bytes, &mut at, "meta")?;
+        if kind != K_CKPT_META {
+            return Err(bad("checkpoint does not start with a meta record"));
+        }
+        let mut c = Cursor::new(payload);
+        let epoch = c.u64()?;
+        let next_sid = c.u64()?;
+        let tick_no = c.u64()?;
+        let n_counters = c.u32()? as usize;
+        if n_counters != Telemetry::COUNTER_WORDS {
+            return Err(bad("checkpoint counter set does not match this build"));
+        }
+        let mut counters = [0u64; Telemetry::COUNTER_WORDS];
+        for w in counters.iter_mut() {
+            *w = c.u64()?;
+        }
+        let n_streams = c.u32()? as usize;
+        c.finish()?;
+        if n_streams > 1 << 24 {
+            return Err(bad("checkpoint stream count is absurd"));
+        }
+
+        let mut streams = Vec::with_capacity(n_streams);
+        for _ in 0..n_streams {
+            let (kind, sid, payload) = next_frame(bytes, &mut at, "stream")?;
+            if kind != K_CKPT_STREAM {
+                return Err(bad("checkpoint stream section out of order"));
+            }
+            let mut c = Cursor::new(payload);
+            let flags = c.u8()?;
+            let record = c.blob()?.to_vec();
+            let pending = if flags & FLAG_PENDING != 0 {
+                Some((c.row()?, c.row()?, c.row()?))
+            } else {
+                None
+            };
+            c.finish()?;
+            streams.push(CheckpointStream {
+                sid,
+                hibernated: flags & FLAG_HIBERNATED != 0,
+                record,
+                pending,
+            });
+        }
+
+        let (kind, _, _) = next_frame(bytes, &mut at, "terminator")?;
+        if kind != K_CKPT_END {
+            return Err(bad("checkpoint missing its terminator"));
+        }
+        Ok(CheckpointImage { epoch, next_sid, tick_no, counters, streams })
+    }
+}
+
+/// Pull the next complete frame out of a checkpoint byte stream; a
+/// torn or missing frame is a typed truncation error (the checkpoint
+/// file is renamed into place atomically, so it is never legitimately
+/// incomplete).
+fn next_frame<'a>(bytes: &'a [u8], at: &mut usize, expect: &str) -> Result<(u32, u64, &'a [u8])> {
+    match read_journal_record(&bytes[*at..])? {
+        JournalFrame::Record { kind, sid, payload, consumed } => {
+            *at += consumed;
+            Ok((kind, sid, payload))
+        }
+        _ => Err(bad(&format!("checkpoint truncated (expected {expect} record)"))),
+    }
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}

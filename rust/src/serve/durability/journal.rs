@@ -1,0 +1,211 @@
+//! Journal operations — the write-ahead record types and their
+//! payload encoding.
+//!
+//! Each op is one framed MACJ record (see
+//! [`crate::tensor::io::append_journal_record`]): the frame carries
+//! `kind` + `sid` (the wire stream id, `s-{sid}`), the payload carries
+//! the op's rows. Replaying the ops in order through the normal
+//! supervisor path reproduces the engine's stream state bit-identically
+//! — the fold is deterministic in the admitted token sequence, so the
+//! journal is the only truth recovery needs beyond a checkpoint.
+
+use std::io::Result;
+
+use crate::tensor::io::{append_journal_record, read_journal_record, JournalFrame};
+
+/// Frame kinds. `1..=4` are write-ahead ops; `16..=18` are checkpoint
+/// sections (same framing, different file — see
+/// [`super::checkpoint`]).
+pub(super) const K_OPEN: u32 = 1;
+pub(super) const K_PREFILL: u32 = 2;
+pub(super) const K_TOKEN: u32 = 3;
+pub(super) const K_CLOSE: u32 = 4;
+pub(super) const K_CKPT_META: u32 = 16;
+pub(super) const K_CKPT_STREAM: u32 = 17;
+pub(super) const K_CKPT_END: u32 = 18;
+
+/// One decoded write-ahead operation, keyed by wire stream id.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalOp {
+    /// Stream `s-{sid}` was opened.
+    Open { sid: u64 },
+    /// Stream `s-{sid}` ingested a whole prompt.
+    Prefill { sid: u64, q: Vec<f32>, k: Vec<f32>, v: Vec<f32> },
+    /// Stream `s-{sid}` folded one decode token.
+    Token { sid: u64, q: Vec<f32>, k: Vec<f32>, v: Vec<f32> },
+    /// Stream `s-{sid}` was closed.
+    Close { sid: u64 },
+}
+
+impl JournalOp {
+    /// The wire stream id this op belongs to.
+    pub fn sid(&self) -> u64 {
+        match self {
+            JournalOp::Open { sid }
+            | JournalOp::Prefill { sid, .. }
+            | JournalOp::Token { sid, .. }
+            | JournalOp::Close { sid } => *sid,
+        }
+    }
+}
+
+/// Byte-stream cursor with bounds-checked reads — every decode error
+/// is a typed `InvalidData`, never a slice panic.
+pub(super) struct Cursor<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub(super) fn new(bytes: &'a [u8]) -> Cursor<'a> {
+        Cursor { bytes, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&end| end <= self.bytes.len())
+            .ok_or_else(|| bad("payload truncated"))?;
+        let got = &self.bytes[self.at..end];
+        self.at = end;
+        Ok(got)
+    }
+
+    pub(super) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(super) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(super) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A length-prefixed f32 row (`u32 n | n f32s`), with the length
+    /// validated against the remaining bytes before any allocation.
+    pub(super) fn row(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        if n > self.bytes.len().saturating_sub(self.at) / 4 {
+            return Err(bad("row length exceeds payload"));
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Raw length-prefixed bytes (`u32 n | n bytes`).
+    pub(super) fn blob(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        if n > self.bytes.len().saturating_sub(self.at) {
+            return Err(bad("blob length exceeds payload"));
+        }
+        self.take(n)
+    }
+
+    pub(super) fn finish(self) -> Result<()> {
+        if self.at == self.bytes.len() {
+            Ok(())
+        } else {
+            Err(bad("trailing bytes after payload"))
+        }
+    }
+}
+
+pub(super) fn push_row(buf: &mut Vec<u8>, row: &[f32]) {
+    buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
+    for x in row {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub(super) fn push_blob(buf: &mut Vec<u8>, blob: &[u8]) {
+    buf.extend_from_slice(&(blob.len() as u32).to_le_bytes());
+    buf.extend_from_slice(blob);
+}
+
+/// Append `op` as one framed record to `buf`, using `scratch` for the
+/// payload (both grow-only, reused across appends).
+pub(super) fn append_op(buf: &mut Vec<u8>, scratch: &mut Vec<u8>, op: OpRef<'_>) {
+    scratch.clear();
+    let (kind, sid) = match op {
+        OpRef::Open { sid } => (K_OPEN, sid),
+        OpRef::Close { sid } => (K_CLOSE, sid),
+        OpRef::Prefill { sid, q, k, v } => {
+            push_row(scratch, q);
+            push_row(scratch, k);
+            push_row(scratch, v);
+            (K_PREFILL, sid)
+        }
+        OpRef::Token { sid, q, k, v } => {
+            push_row(scratch, q);
+            push_row(scratch, k);
+            push_row(scratch, v);
+            (K_TOKEN, sid)
+        }
+    };
+    append_journal_record(buf, kind, sid, scratch);
+}
+
+/// Borrowed form of [`JournalOp`] for the append path (the engine
+/// journals rows it still owns; no clone until replay decode).
+#[derive(Clone, Copy)]
+pub(super) enum OpRef<'a> {
+    Open { sid: u64 },
+    Prefill { sid: u64, q: &'a [f32], k: &'a [f32], v: &'a [f32] },
+    Token { sid: u64, q: &'a [f32], k: &'a [f32], v: &'a [f32] },
+    Close { sid: u64 },
+}
+
+/// Result of scanning a journal byte stream.
+pub(super) struct JournalScan {
+    pub(super) ops: Vec<JournalOp>,
+    /// Byte offset of the end of the last good record. Anything past
+    /// it is a torn tail the writer should truncate before appending.
+    pub(super) good_len: usize,
+    pub(super) torn: bool,
+}
+
+/// Decode every good op from `bytes`, stopping at a torn tail
+/// (truncated or checksum-failed record — recover to last good).
+/// Structural corruption — wrong magic, stale version, absurd length,
+/// or a malformed payload inside a checksum-clean frame — is a typed
+/// error: the file cannot be trusted past that point and silently
+/// dropping it would break the bit-identity contract.
+pub(super) fn scan_journal(bytes: &[u8]) -> Result<JournalScan> {
+    let mut ops = Vec::new();
+    let mut at = 0;
+    loop {
+        match read_journal_record(&bytes[at..])? {
+            JournalFrame::End => return Ok(JournalScan { ops, good_len: at, torn: false }),
+            JournalFrame::Torn => return Ok(JournalScan { ops, good_len: at, torn: true }),
+            JournalFrame::Record { kind, sid, payload, consumed } => {
+                ops.push(decode_op(kind, sid, payload)?);
+                at += consumed;
+            }
+        }
+    }
+}
+
+fn decode_op(kind: u32, sid: u64, payload: &[u8]) -> Result<JournalOp> {
+    let mut c = Cursor::new(payload);
+    let op = match kind {
+        K_OPEN => JournalOp::Open { sid },
+        K_CLOSE => JournalOp::Close { sid },
+        K_PREFILL => {
+            JournalOp::Prefill { sid, q: c.row()?, k: c.row()?, v: c.row()? }
+        }
+        K_TOKEN => JournalOp::Token { sid, q: c.row()?, k: c.row()?, v: c.row()? },
+        other => return Err(bad(&format!("unknown journal op kind {other}"))),
+    };
+    c.finish()?;
+    Ok(op)
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}

@@ -1,0 +1,444 @@
+//! Durable serve: write-ahead journal + compacting checkpoints.
+//!
+//! The serve engine survives a process kill by writing every
+//! state-changing stream event ahead of (or batched just behind) the
+//! work itself, and periodically compacting the whole Supervisor state
+//! into one checkpoint file:
+//!
+//! ```text
+//! data-dir/
+//!   checkpoint.macc      last-good full image (atomic tmp+rename)
+//!   journal.{E}.macj     append-only op log for epoch E
+//! ```
+//!
+//! Both files are sequences of framed, checksummed MACJ records (see
+//! [`crate::tensor::io::append_journal_record`]). Recovery loads the
+//! checkpoint, restores every stream bit-identically from its MACS
+//! state record, then replays the journal tail through the *normal*
+//! fold path — the RMFA decode state is deterministic in the admitted
+//! token sequence, so a recovered stream is byte-for-byte the stream
+//! that never died, on either SIMD arm.
+//!
+//! Write-ahead discipline (what a crash can and cannot lose):
+//!
+//! - **Control ops** (open / prefill / close) are journaled and
+//!   fsynced *before* the reply leaves the engine: any stream id or
+//!   prompt ack a client holds is durable.
+//! - **Decode tokens** are journaled at submit-accept and fsynced by
+//!   group commit (every [`DurabilityConfig::sync_every_ticks`]
+//!   ticks). A crash may lose the tail of *delivered* decode rows —
+//!   but never bit-identity: the reconnecting client resubmits from
+//!   the server's recovered length and the deterministic fold
+//!   reproduces the lost rows exactly.
+//! - **Checkpoints** subsume everything before them: the image is
+//!   written to `checkpoint.tmp`, fsynced, renamed over the old
+//!   checkpoint, and only then is the previous journal epoch deleted.
+//!   A crash anywhere in that window recovers from whichever
+//!   checkpoint the rename left in place.
+//!
+//! A torn journal tail (truncated or checksum-failed final record) is
+//! silently truncated to the last good record on recovery. Structural
+//! corruption — wrong magic, stale version, absurd length header, a
+//! checkpoint that fails validation — is a typed error that refuses
+//! startup: serving from a half-trusted log would break the
+//! bit-identity contract.
+
+mod checkpoint;
+mod journal;
+
+pub use checkpoint::{CheckpointImage, CheckpointStream};
+pub use journal::JournalOp;
+
+use std::fs::{File, OpenOptions};
+use std::io::{Result, Write};
+use std::path::{Path, PathBuf};
+
+use journal::OpRef;
+
+/// Configuration for the durable store. `Default` is tuned for the
+/// serve bench shapes; only `dir` has no default.
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// Directory holding the checkpoint and journal files (created on
+    /// open).
+    pub dir: PathBuf,
+    /// Group-commit window for decode-token records: the journal is
+    /// fsynced at least every this many engine ticks (control ops
+    /// always sync immediately). 0 syncs every tick.
+    pub sync_every_ticks: u64,
+    /// Write a compacting checkpoint (and rotate the journal) every
+    /// this many ticks.
+    pub checkpoint_every_ticks: u64,
+}
+
+impl DurabilityConfig {
+    /// Durability rooted at `dir` with default cadences.
+    pub fn new(dir: impl Into<PathBuf>) -> DurabilityConfig {
+        DurabilityConfig { dir: dir.into(), sync_every_ticks: 32, checkpoint_every_ticks: 1024 }
+    }
+}
+
+/// What [`Store::open`] recovered from disk: the last good checkpoint
+/// (if any) plus every journaled op after it, ready to replay.
+pub struct Recovery {
+    pub checkpoint: Option<CheckpointImage>,
+    pub ops: Vec<JournalOp>,
+    /// Bytes of torn tail truncated from the journal (0 on a clean
+    /// shutdown) — surfaced so recovery can log what a crash cost.
+    pub truncated_bytes: u64,
+}
+
+impl Recovery {
+    /// True when there was nothing on disk — a fresh data dir.
+    pub fn is_empty(&self) -> bool {
+        self.checkpoint.is_none() && self.ops.is_empty()
+    }
+}
+
+/// The durable store: one open journal file plus the checkpoint
+/// machinery. Owned by the serve engine thread; every method is
+/// synchronous and returns typed I/O errors (the engine degrades to
+/// non-durable serving, loudly, if the disk goes bad mid-run).
+pub struct Store {
+    cfg: DurabilityConfig,
+    file: File,
+    epoch: u64,
+    /// Frames appended since the last sync (group commit buffer).
+    buf: Vec<u8>,
+    scratch: Vec<u8>,
+    last_sync_tick: u64,
+    last_ckpt_tick: u64,
+}
+
+impl Store {
+    fn journal_path(dir: &Path, epoch: u64) -> PathBuf {
+        dir.join(format!("journal.{epoch}.macj"))
+    }
+
+    fn checkpoint_path(dir: &Path) -> PathBuf {
+        dir.join("checkpoint.macc")
+    }
+
+    /// Open (or create) the store at `cfg.dir` and load whatever a
+    /// previous process left behind. The journal tail past the last
+    /// good record is truncated; stale journal epochs from interrupted
+    /// rotations are deleted.
+    pub fn open(cfg: DurabilityConfig) -> Result<(Store, Recovery)> {
+        std::fs::create_dir_all(&cfg.dir)?;
+        let ckpt_path = Self::checkpoint_path(&cfg.dir);
+        let checkpoint = match std::fs::read(&ckpt_path) {
+            Ok(bytes) => Some(CheckpointImage::decode(&bytes)?),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => return Err(e),
+        };
+        let epoch = checkpoint.as_ref().map(|c| c.epoch).unwrap_or(0);
+
+        let path = Self::journal_path(&cfg.dir, epoch);
+        let (ops, truncated_bytes) = match std::fs::read(&path) {
+            Ok(bytes) => {
+                let scan = journal::scan_journal(&bytes)?;
+                if scan.torn {
+                    // drop the torn tail so the reopened file appends
+                    // at a record boundary
+                    let f = OpenOptions::new().write(true).open(&path)?;
+                    f.set_len(scan.good_len as u64)?;
+                    f.sync_data()?;
+                }
+                (scan.ops, (bytes.len() - scan.good_len) as u64)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => (Vec::new(), 0),
+            Err(e) => return Err(e),
+        };
+
+        // interrupted rotations can leave older epochs behind; they are
+        // fully subsumed by the checkpoint, so clear them out
+        Self::remove_stale_journals(&cfg.dir, epoch);
+
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let store = Store {
+            cfg,
+            file,
+            epoch,
+            buf: Vec::new(),
+            scratch: Vec::new(),
+            last_sync_tick: 0,
+            last_ckpt_tick: 0,
+        };
+        Ok((store, Recovery { checkpoint, ops, truncated_bytes }))
+    }
+
+    fn remove_stale_journals(dir: &Path, keep_epoch: u64) {
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let stale = name
+                .strip_prefix("journal.")
+                .and_then(|rest| rest.strip_suffix(".macj"))
+                .and_then(|e| e.parse::<u64>().ok())
+                .is_some_and(|e| e != keep_epoch);
+            if stale {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+
+    /// The current journal epoch (bumped by every checkpoint).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Journal a stream open. Call [`Store::sync`] before replying.
+    pub fn record_open(&mut self, sid: u64) {
+        journal::append_op(&mut self.buf, &mut self.scratch, OpRef::Open { sid });
+    }
+
+    /// Journal a prompt prefill. Call [`Store::sync`] before replying.
+    pub fn record_prefill(&mut self, sid: u64, q: &[f32], k: &[f32], v: &[f32]) {
+        journal::append_op(&mut self.buf, &mut self.scratch, OpRef::Prefill { sid, q, k, v });
+    }
+
+    /// Journal one accepted decode token (group-committed by
+    /// [`Store::maybe_sync`]).
+    pub fn record_token(&mut self, sid: u64, q: &[f32], k: &[f32], v: &[f32]) {
+        journal::append_op(&mut self.buf, &mut self.scratch, OpRef::Token { sid, q, k, v });
+    }
+
+    /// Journal a stream close. Call [`Store::sync`] before replying.
+    pub fn record_close(&mut self, sid: u64) {
+        journal::append_op(&mut self.buf, &mut self.scratch, OpRef::Close { sid });
+    }
+
+    /// Flush and fsync every buffered frame.
+    pub fn sync(&mut self, tick_no: u64) -> Result<()> {
+        if !self.buf.is_empty() {
+            self.file.write_all(&self.buf)?;
+            self.file.sync_data()?;
+            self.buf.clear();
+        }
+        self.last_sync_tick = tick_no;
+        Ok(())
+    }
+
+    /// Group commit: sync if the window since the last sync has passed
+    /// and there is anything buffered.
+    pub fn maybe_sync(&mut self, tick_no: u64) -> Result<()> {
+        if !self.buf.is_empty()
+            && tick_no.saturating_sub(self.last_sync_tick) >= self.cfg.sync_every_ticks
+        {
+            self.sync(tick_no)?;
+        }
+        Ok(())
+    }
+
+    /// True when the checkpoint cadence has elapsed.
+    pub fn checkpoint_due(&self, tick_no: u64) -> bool {
+        tick_no.saturating_sub(self.last_ckpt_tick) >= self.cfg.checkpoint_every_ticks
+    }
+
+    /// Write `image` as the new last-good checkpoint and rotate the
+    /// journal to `image.epoch`. The caller builds the image *after*
+    /// applying every op currently buffered, so the buffer is subsumed
+    /// by the image and dropped instead of synced.
+    pub fn write_checkpoint(&mut self, image: &CheckpointImage, tick_no: u64) -> Result<()> {
+        let mut bytes = Vec::new();
+        image.encode_into(&mut bytes, &mut self.scratch);
+
+        let tmp = self.cfg.dir.join("checkpoint.tmp");
+        let final_path = Self::checkpoint_path(&self.cfg.dir);
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, &final_path)?;
+        // make the rename itself durable before retiring the old epoch
+        if let Ok(d) = File::open(&self.cfg.dir) {
+            let _ = d.sync_all();
+        }
+
+        let old_epoch = self.epoch;
+        self.epoch = image.epoch;
+        self.file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(Self::journal_path(&self.cfg.dir, self.epoch))?;
+        let _ = std::fs::remove_file(Self::journal_path(&self.cfg.dir, old_epoch));
+        // every buffered op predates the image; it is already durable
+        // inside the checkpoint
+        self.buf.clear();
+        self.last_ckpt_tick = tick_no;
+        self.last_sync_tick = tick_no;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::telemetry::Telemetry;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("macformer_durability_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn image(epoch: u64) -> CheckpointImage {
+        let mut counters = [0u64; Telemetry::COUNTER_WORDS];
+        counters[0] = 41;
+        let mut record = Vec::new();
+        crate::tensor::io::write_state_record(
+            &mut record,
+            3,
+            &[1.0, 2.0, -0.0, f32::NAN],
+            &[0.5, -0.5],
+        );
+        CheckpointImage {
+            epoch,
+            next_sid: 7,
+            tick_no: 99,
+            counters,
+            streams: vec![
+                CheckpointStream {
+                    sid: 1,
+                    hibernated: false,
+                    record: record.clone(),
+                    pending: None,
+                },
+                CheckpointStream {
+                    sid: 4,
+                    hibernated: true,
+                    record,
+                    pending: Some((vec![0.25, 0.5], vec![1.0, -1.0], vec![2.0])),
+                },
+            ],
+        }
+    }
+
+    /// Journal ops written, synced, and read back across a simulated
+    /// crash-restart: the reopened store replays exactly what was
+    /// synced, and a torn tail is truncated to the last good record.
+    #[test]
+    fn journal_round_trips_and_truncates_torn_tail() {
+        let dir = tmp_dir("journal");
+        let cfg = DurabilityConfig::new(&dir);
+        let (mut store, rec) = Store::open(cfg.clone()).unwrap();
+        assert!(rec.is_empty());
+        store.record_open(1);
+        store.record_prefill(1, &[0.1, 0.2], &[0.3, 0.4], &[0.5]);
+        store.record_token(1, &[1.0, 2.0], &[3.0, 4.0], &[5.0]);
+        store.record_close(1);
+        store.sync(1).unwrap();
+        drop(store);
+
+        // tear the tail: append half a record's worth of garbage and a
+        // few bytes of a real-looking frame
+        let path = Store::journal_path(&dir, 0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let good = bytes.len();
+        let mut torn = Vec::new();
+        crate::tensor::io::append_journal_record(&mut torn, 3, 9, &[0u8; 40]);
+        bytes.extend_from_slice(&torn[..torn.len() - 7]);
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (_store, rec) = Store::open(cfg).unwrap();
+        assert_eq!(rec.truncated_bytes, (bytes.len() - good) as u64);
+        assert_eq!(rec.ops.len(), 4);
+        assert_eq!(rec.ops[0], JournalOp::Open { sid: 1 });
+        assert_eq!(
+            rec.ops[2],
+            JournalOp::Token { sid: 1, q: vec![1.0, 2.0], k: vec![3.0, 4.0], v: vec![5.0] }
+        );
+        assert_eq!(rec.ops[3], JournalOp::Close { sid: 1 });
+        assert_eq!(std::fs::read(&path).unwrap().len(), good, "torn tail truncated");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A checkpoint image round-trips bit-exactly (including NaN state
+    /// payloads and a staged token), subsumes the journal, and rotates
+    /// the epoch; the adversarial variants are typed errors.
+    #[test]
+    fn checkpoint_round_trips_rotates_and_rejects_corruption() {
+        let dir = tmp_dir("ckpt");
+        let cfg = DurabilityConfig::new(&dir);
+        let (mut store, _) = Store::open(cfg.clone()).unwrap();
+        store.record_open(1);
+        store.sync(1).unwrap();
+        store.record_token(1, &[1.0], &[2.0], &[3.0]);
+        // the image is built after applying the buffered token, so the
+        // checkpoint subsumes it
+        let img = image(1);
+        store.write_checkpoint(&img, 10).unwrap();
+        assert_eq!(store.epoch(), 1);
+        assert!(!Store::journal_path(&dir, 0).exists(), "old epoch retired");
+        assert!(Store::journal_path(&dir, 1).exists(), "new epoch started");
+        drop(store);
+
+        let (_store, rec) = Store::open(cfg.clone()).unwrap();
+        let back = rec.checkpoint.expect("checkpoint loaded");
+        assert_eq!(back.epoch, 1);
+        assert_eq!(back.next_sid, 7);
+        assert_eq!(back.tick_no, 99);
+        assert_eq!(back.counters[0], 41);
+        assert_eq!(back.streams.len(), 2);
+        assert!(back.streams[1].hibernated);
+        assert_eq!(back.streams[1].pending, Some((vec![0.25, 0.5], vec![1.0, -1.0], vec![2.0])));
+        // NaN payload bits survived the trip
+        assert_eq!(back.streams[0].record, img.streams[0].record);
+        assert!(rec.ops.is_empty(), "journal ops were subsumed by the checkpoint");
+
+        // adversarial checkpoint files: bit-flip, truncation, stale
+        // version, absurd length — all typed errors, never panics
+        let path = Store::checkpoint_path(&dir);
+        let pristine = std::fs::read(&path).unwrap();
+        let cases: Vec<(&str, Vec<u8>)> = vec![
+            ("bitflip", {
+                let mut b = pristine.clone();
+                b[40] ^= 0x08;
+                b
+            }),
+            ("truncated", pristine[..pristine.len() - 9].to_vec()),
+            ("stale version", {
+                let mut b = pristine.clone();
+                b[4] = 0xEE;
+                b
+            }),
+            ("oversized length", {
+                let mut b = pristine.clone();
+                b[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+                b
+            }),
+        ];
+        for (what, bytes) in cases {
+            std::fs::write(&path, &bytes).unwrap();
+            let err = Store::open(cfg.clone()).expect_err(what);
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{what}: {err}");
+        }
+
+        // the pristine checkpoint still opens
+        std::fs::write(&path, &pristine).unwrap();
+        assert!(Store::open(cfg).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Group commit: tokens buffer until the sync window elapses;
+    /// control ops sync explicitly.
+    #[test]
+    fn group_commit_syncs_on_the_tick_window() {
+        let dir = tmp_dir("sync");
+        let cfg = DurabilityConfig { sync_every_ticks: 4, ..DurabilityConfig::new(&dir) };
+        let (mut store, _) = Store::open(cfg.clone()).unwrap();
+        let path = Store::journal_path(&dir, 0);
+        store.record_token(2, &[1.0], &[1.0], &[1.0]);
+        store.maybe_sync(2).unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0, "inside the window: buffered");
+        store.maybe_sync(4).unwrap();
+        assert!(std::fs::metadata(&path).unwrap().len() > 0, "window elapsed: synced");
+        drop(store);
+        let (_s, rec) = Store::open(cfg).unwrap();
+        assert_eq!(rec.ops.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -52,6 +52,12 @@
 //!   ([`net::run_socket`]) replays the same closed-loop workload over
 //!   real TCP connections and verifies survivors bit-identical to
 //!   in-process decode.
+//! * [`durability`] — write-ahead journal + compacting checkpoints
+//!   under `--data-dir`: every acked open/prefill/close is fsynced
+//!   before its reply, decode tokens are group-committed, and a
+//!   restarted process replays the log through the normal fold path,
+//!   so recovered streams are bit-identical to a process that never
+//!   died — on either SIMD arm.
 //!
 //! # Quickstart over the wire
 //!
@@ -129,6 +135,42 @@
 //! * **Expired** — a deadline fired (untaken output, or hibernated too
 //!   long); the stream answers [`ServeError::Expired`] until closed.
 //!
+//! # Gateway lifecycle: readiness, drain, and crash recovery
+//!
+//! The process around the engine has its own small state machine,
+//! reported by `GET /healthz`:
+//!
+//! ```text
+//!    start()           recovery done        SIGTERM / POST /admin/drain
+//!   ───────► starting ──────────────► ready ──────────────► draining
+//!             (503)                   (200)                   (503)
+//! ```
+//!
+//! * **starting** — the listener is already accepting (so health is
+//!   observable) but the engine is still constructing or replaying the
+//!   durable journal; `healthz` answers `503 {"status":"starting"}` +
+//!   `Retry-After`. The `--port-file` is written only after
+//!   [`net::Server::start`] returns, i.e. once recovery has finished
+//!   and the gateway is genuinely ready.
+//! * **ready** — normal service; `healthz` answers `200`.
+//! * **draining** — entered by SIGTERM or `POST /admin/drain`. New
+//!   stream opens answer a retryable `503 {"error":"draining"}` +
+//!   `Retry-After`, in-flight decodes finish, the engine writes a
+//!   final checkpoint (when durability is on), and the process exits
+//!   with status 0.
+//!
+//! With `--data-dir`, a SIGKILL (or power loss) is recoverable: on
+//! restart the engine loads the last good checkpoint, replays the
+//! journal tail through the normal fold path, and serves every acked
+//! stream bit-identically from where the crash left it. A group-commit
+//! window of *delivered* decode rows may be lost from the log — never
+//! bit-identity: the reconnecting client probes `GET /v1/streams/{id}`
+//! for the recovered length and the deterministic fold re-derives the
+//! missing rows exactly on resubmit. `serve --kill-restart --data-dir
+//! DIR` is the self-contained harness proving this end to end: SIGKILL
+//! mid-load at a seeded threshold, restart, resume every survivor, and
+//! verify all rows bit-identical with zero 5xx.
+//!
 //! # Lifecycle
 //!
 //! ```
@@ -162,6 +204,7 @@
 
 use std::fmt;
 
+pub mod durability;
 pub mod loadgen;
 pub mod net;
 pub mod pool;
@@ -169,6 +212,7 @@ pub mod resilience;
 pub mod scheduler;
 pub mod telemetry;
 
+pub use durability::DurabilityConfig;
 pub use loadgen::{Arrival, LoadConfig, LoadReport};
 pub use net::{EngineSpec, NetConfig, NetLoadReport, Server};
 pub use pool::{StreamId, StreamPool};

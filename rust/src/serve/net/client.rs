@@ -28,6 +28,9 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -39,8 +42,67 @@ use crate::util::json::Value;
 use super::wire::{Scan, TokenBody};
 
 /// Give up on a retryable status after this many attempts — keeps a
-/// misbehaving server from hanging the generator.
-const MAX_RETRIES: usize = 100_000;
+/// misbehaving server from hanging the generator. Together with the
+/// capped exponential backoff this bounds the total wait per request
+/// to a couple of minutes.
+const MAX_RETRIES: usize = 2048;
+
+/// Ceiling for a single backoff sleep, in milliseconds.
+const MAX_BACKOFF_MS: u64 = 50;
+
+/// A retryable request that exhausted its attempt budget. Typed (and
+/// surfaced through `anyhow`'s chain, so `downcast_ref` works) to keep
+/// "the server kept saying come back later" distinguishable from
+/// protocol failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryGaveUp {
+    pub method: String,
+    pub path: String,
+    pub attempts: usize,
+    /// The last retryable status observed before giving up.
+    pub last_status: u16,
+}
+
+impl std::fmt::Display for RetryGaveUp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} {}: still {} after {} attempts",
+            self.method, self.path, self.last_status, self.attempts
+        )
+    }
+}
+
+impl std::error::Error for RetryGaveUp {}
+
+/// Retryable-status tallies for one client connection. `http_5xx`
+/// only counts answers the client could *not* retry (no `Retry-After`
+/// hint, i.e. the server says the condition is final) — retried 429s
+/// and 503s land in their own buckets.
+#[derive(Debug, Default, Clone, Copy)]
+struct RetryCounts {
+    http_429: u64,
+    http_503: u64,
+    http_5xx: u64,
+}
+
+/// Sleep before retry `attempt` (0-based): exponential from the
+/// server's `Retry-After` hint (scheduler ticks, read as milliseconds,
+/// default 1), doubled per attempt, plus deterministic jitter from
+/// `salt` so a thundering herd of clients spreads out instead of
+/// re-colliding, capped at [`MAX_BACKOFF_MS`].
+fn backoff_ms(attempt: usize, retry_after: Option<u64>, salt: u64) -> u64 {
+    let base = retry_after.unwrap_or(1).clamp(1, MAX_BACKOFF_MS);
+    let exp = base.saturating_mul(1u64 << attempt.min(6)).min(MAX_BACKOFF_MS);
+    // splitmix64-style avalanche over (salt, attempt)
+    let mut x = salt ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (exp + x % (exp / 2 + 1)).min(MAX_BACKOFF_MS)
+}
 
 // ---------------------------------------------------------------------------
 // a minimal blocking HTTP/1.1 client (keep-alive, chunked-aware)
@@ -236,8 +298,7 @@ struct StreamOutcome {
     faulted: bool,
     /// Unexpected failures (protocol errors, wrong error codes, ...).
     errors: u64,
-    http_429: u64,
-    http_5xx: u64,
+    http: RetryCounts,
     /// Client-observed seconds between consecutive token frames.
     latencies: Vec<f64>,
 }
@@ -272,17 +333,22 @@ fn plan_cuts(cfg: &LoadConfig, i: usize) -> Vec<(usize, Action)> {
     cuts
 }
 
-/// Issue `method path` with retry on retryable admission statuses
-/// (429 ingress/backpressure, 503 pool-full). Returns the final head
-/// + body for the caller to interpret.
+/// Issue `method path` with exponential-backoff retry on retryable
+/// admission statuses: `429` (ingress/backpressure) and `503` carrying
+/// a `Retry-After` hint (pool-full, draining). A `503` *without* the
+/// hint is the server saying the condition is final (engine down) —
+/// that one counts as a real 5xx and fails immediately. Exhausting the
+/// attempt budget surfaces as a typed [`RetryGaveUp`] error.
 fn request_with_retry(
     http: &mut Http,
     method: &str,
     path: &str,
     body: &str,
-    outcome: &mut StreamOutcome,
+    counts: &mut RetryCounts,
+    salt: u64,
 ) -> Result<(Head, Vec<u8>)> {
-    for _ in 0..MAX_RETRIES {
+    let mut last_status = 0u16;
+    for attempt in 0..MAX_RETRIES {
         http.send(method, path, body)?;
         let head = http.read_head()?;
         if head.chunked {
@@ -290,15 +356,24 @@ fn request_with_retry(
             bail!("unexpected chunked response for {method} {path}");
         }
         let resp_body = http.take(head.content_length)?;
-        match head.status {
-            429 => outcome.http_429 += 1,
-            503 => outcome.http_5xx += 1,
+        match (head.status, head.retry_after) {
+            (429, _) => counts.http_429 += 1,
+            (503, Some(_)) => counts.http_503 += 1,
+            (503, None) => {
+                counts.http_5xx += 1;
+                bail!("{method} {path}: non-retryable 503 (engine down)");
+            }
             _ => return Ok((head, resp_body)),
         }
-        let ticks = head.retry_after.unwrap_or(1).max(1);
-        std::thread::sleep(Duration::from_millis(ticks.min(50)));
+        last_status = head.status;
+        std::thread::sleep(Duration::from_millis(backoff_ms(attempt, head.retry_after, salt)));
     }
-    bail!("{method} {path}: still rejected after {MAX_RETRIES} retries")
+    Err(anyhow::Error::new(RetryGaveUp {
+        method: method.into(),
+        path: path.into(),
+        attempts: MAX_RETRIES,
+        last_status,
+    }))
 }
 
 fn body_for(tokens: &[f32], d: usize, dv: usize, range: std::ops::Range<usize>) -> String {
@@ -338,14 +413,15 @@ fn drive_stream(
         prompt_last: Vec::new(),
         faulted: false,
         errors: 0,
-        http_429: 0,
-        http_5xx: 0,
+        http: RetryCounts::default(),
         latencies: Vec::new(),
     };
+    let salt = i as u64;
     let mut http = Http::connect(addr)?;
 
     // open
-    let (head, resp) = request_with_retry(&mut http, "POST", "/v1/streams", "{}", &mut outcome)?;
+    let (head, resp) =
+        request_with_retry(&mut http, "POST", "/v1/streams", "{}", &mut outcome.http, salt)?;
     if head.status != 201 {
         bail!("open: expected 201, got {}", head.status);
     }
@@ -373,7 +449,8 @@ fn drive_stream(
         super::wire::write_f32_array(&mut body, pv);
         body.push('}');
         let path = format!("/v1/streams/{sid}/prefill");
-        let (head, resp) = request_with_retry(&mut http, "POST", &path, &body, &mut outcome)?;
+        let (head, resp) =
+            request_with_retry(&mut http, "POST", &path, &body, &mut outcome.http, salt)?;
         if head.status != 200 {
             bail!("prefill: expected 200, got {}", head.status);
         }
@@ -409,18 +486,27 @@ fn drive_stream(
             // admission retry loop: a 429/503 answer means nothing
             // streamed yet, so the whole segment can be re-sent
             let mut streamed = false;
-            for _ in 0..MAX_RETRIES {
+            let mut last_status = 0u16;
+            for attempt in 0..MAX_RETRIES {
                 http.send("POST", &decode_path, &body)?;
                 let head = http.read_head()?;
                 if !head.chunked {
                     let _resp = http.take(head.content_length)?;
-                    match head.status {
-                        429 => outcome.http_429 += 1,
-                        503 => outcome.http_5xx += 1,
-                        s => bail!("decode: unexpected status {s}"),
+                    match (head.status, head.retry_after) {
+                        (429, _) => outcome.http.http_429 += 1,
+                        (503, Some(_)) => outcome.http.http_503 += 1,
+                        (503, None) => {
+                            outcome.http.http_5xx += 1;
+                            bail!("decode: non-retryable 503 (engine down)");
+                        }
+                        (s, _) => bail!("decode: unexpected status {s}"),
                     }
-                    let ticks = head.retry_after.unwrap_or(1).max(1);
-                    std::thread::sleep(Duration::from_millis(ticks.min(50)));
+                    last_status = head.status;
+                    std::thread::sleep(Duration::from_millis(backoff_ms(
+                        attempt,
+                        head.retry_after,
+                        salt,
+                    )));
                     continue;
                 }
                 // committed stream: read frames until done/error
@@ -456,7 +542,12 @@ fn drive_stream(
                 break;
             }
             if !streamed {
-                bail!("decode: still rejected after {MAX_RETRIES} retries");
+                return Err(anyhow::Error::new(RetryGaveUp {
+                    method: "POST".into(),
+                    path: decode_path.clone(),
+                    attempts: MAX_RETRIES,
+                    last_status,
+                }));
             }
             if outcome.faulted || outcome.errors > 0 {
                 break 'segments;
@@ -466,7 +557,8 @@ fn drive_stream(
             None => {}
             Some(Action::Hibernate) => {
                 let path = format!("/v1/streams/{sid}/hibernate");
-                let (head, _) = request_with_retry(&mut http, "POST", &path, "{}", &mut outcome)?;
+                let (head, _) =
+                    request_with_retry(&mut http, "POST", &path, "{}", &mut outcome.http, salt)?;
                 if head.status != 200 {
                     log::warn!("socket loadgen: stream {i} hibernate got {}", head.status);
                     outcome.errors += 1;
@@ -474,7 +566,8 @@ fn drive_stream(
             }
             Some(Action::ArmFault) => {
                 let path = format!("/v1/streams/{sid}/arm_fault");
-                let (head, _) = request_with_retry(&mut http, "POST", &path, "{}", &mut outcome)?;
+                let (head, _) =
+                    request_with_retry(&mut http, "POST", &path, "{}", &mut outcome.http, salt)?;
                 if head.status != 200 {
                     log::warn!("socket loadgen: stream {i} arm_fault got {}", head.status);
                     outcome.errors += 1;
@@ -486,7 +579,7 @@ fn drive_stream(
 
     // close works in any state, faulted included
     let path = format!("/v1/streams/{sid}");
-    let (head, _) = request_with_retry(&mut http, "DELETE", &path, "", &mut outcome)?;
+    let (head, _) = request_with_retry(&mut http, "DELETE", &path, "", &mut outcome.http, salt)?;
     if head.status != 200 {
         log::warn!("socket loadgen: stream {i} close got {}", head.status);
         outcome.errors += 1;
@@ -515,8 +608,12 @@ pub struct NetLoadReport {
     pub latency_max: f64,
     /// Backpressure/ingress rejects answered `429` (then retried).
     pub http_429: u64,
-    /// `5xx` answers observed (zero on a clean run; the CI socket
-    /// smoke greps this).
+    /// Retryable `503`s (pool-full, draining — `Retry-After` present),
+    /// absorbed by backoff. Not failures, so not counted in
+    /// [`http_5xx`](NetLoadReport::http_5xx).
+    pub http_503_retried: u64,
+    /// Non-retryable `5xx` answers observed (zero on a clean run; the
+    /// CI socket smoke greps this).
     pub http_5xx: u64,
     /// Unexpected failures across all streams (zero on any run whose
     /// chaos stayed contained).
@@ -543,7 +640,7 @@ impl NetLoadReport {
             "serve/net: {} streams x {} tokens (+{} prompt) over TCP\n\
              {:>10.0} tokens/sec  ({} tokens in {:.3}s)\n\
              latency   p50 {:.6}s  p99 {:.6}s  max {:.6}s  (client-observed)\n\
-             http      {} x 429 (retried), {} x 5xx, {} stream errors\n\
+             http      {} x 429 (retried), {} x 503 (retried), {} x 5xx, {} stream errors\n\
              resil     {} faulted (planned), {} poisoned\n\
              verify    {}",
             self.streams,
@@ -556,6 +653,7 @@ impl NetLoadReport {
             self.latency_p99,
             self.latency_max,
             self.http_429,
+            self.http_503_retried,
             self.http_5xx,
             self.stream_errors,
             self.faulted_streams,
@@ -576,6 +674,7 @@ impl NetLoadReport {
             ("latency_p99_s", Value::num(self.latency_p99)),
             ("latency_max_s", Value::num(self.latency_max)),
             ("http_429", Value::num(self.http_429 as f64)),
+            ("http_503_retried", Value::num(self.http_503_retried as f64)),
             ("http_5xx", Value::num(self.http_5xx as f64)),
             ("stream_errors", Value::num(self.stream_errors as f64)),
             ("faulted_streams", Value::num(self.faulted_streams as f64)),
@@ -633,6 +732,7 @@ pub fn run_socket(cfg: &LoadConfig, addr: &str) -> Result<NetLoadReport> {
 
     let mut stream_errors = 0u64;
     let mut http_429 = 0u64;
+    let mut http_503 = 0u64;
     let mut http_5xx = 0u64;
     let mut faulted_streams = 0u64;
     let mut failed = vec![false; cfg.streams];
@@ -644,8 +744,9 @@ pub fn run_socket(cfg: &LoadConfig, addr: &str) -> Result<NetLoadReport> {
         match res {
             Ok(o) => {
                 stream_errors += o.errors;
-                http_429 += o.http_429;
-                http_5xx += o.http_5xx;
+                http_429 += o.http.http_429;
+                http_503 += o.http.http_503;
+                http_5xx += o.http.http_5xx;
                 if o.faulted {
                     faulted_streams += 1;
                 }
@@ -738,6 +839,7 @@ pub fn run_socket(cfg: &LoadConfig, addr: &str) -> Result<NetLoadReport> {
         latency_p99: percentile(&latencies, 99.0),
         latency_max: latencies.last().copied().unwrap_or(0.0),
         http_429,
+        http_503_retried: http_503,
         http_5xx,
         stream_errors,
         faulted_streams,
@@ -788,4 +890,687 @@ fn check_spec(cfg: &LoadConfig, addr: &str) -> Result<()> {
         }
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// kill-restart chaos: SIGKILL the serve process mid-load, restart it on
+// the same data-dir, resume every stream, verify bit-identity
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`run_kill_restart`] drive — the crash-restart
+/// counterpart of [`NetLoadReport`]. The CI kill-restart smoke greps
+/// `verified` and `http_5xx` out of the JSON form.
+#[derive(Debug, Clone)]
+pub struct KillRestartReport {
+    pub streams: usize,
+    pub tokens_per_stream: usize,
+    /// Seeded produced-token threshold at which the serve process took
+    /// its SIGKILL.
+    pub kill_at_tokens: u64,
+    /// Tokens actually streamed back when the kill landed (can exceed
+    /// the threshold by whatever was in flight).
+    pub killed_at_tokens: u64,
+    /// Streams whose open was acked before the kill (everything else
+    /// is a true casualty with nothing durable to recover).
+    pub admitted: usize,
+    /// Admitted streams the restarted server recovered (resume probe
+    /// answered 200).
+    pub recovered: usize,
+    /// Recovered streams that resumed decode to completion.
+    pub resumed: usize,
+    /// Journal-synced tokens the restarted server reported across all
+    /// recovered streams (trails `killed_at_tokens` by at most the
+    /// group-commit window).
+    pub recovered_tokens: u64,
+    pub http_429: u64,
+    pub http_503_retried: u64,
+    pub http_5xx: u64,
+    pub stream_errors: u64,
+    /// Every admitted stream recovered and resumed, and every wire
+    /// output row — before the kill and after the restart — matched
+    /// the single-stream replay bit for bit.
+    pub verified: bool,
+    pub elapsed_s: f64,
+}
+
+impl KillRestartReport {
+    pub fn render(&self) -> String {
+        format!(
+            "serve/net kill-restart: {} streams x {} tokens, SIGKILL at {} produced tokens\n\
+             phase 1   {} tokens streamed before the kill, {} / {} streams admitted\n\
+             recover   {} / {} streams recovered ({} journal-synced tokens), {} resumed\n\
+             http      {} x 429 (retried), {} x 503 (retried), {} x 5xx, {} stream errors\n\
+             verify    {}",
+            self.streams,
+            self.tokens_per_stream,
+            self.kill_at_tokens,
+            self.killed_at_tokens,
+            self.admitted,
+            self.streams,
+            self.recovered,
+            self.admitted,
+            self.recovered_tokens,
+            self.resumed,
+            self.http_429,
+            self.http_503_retried,
+            self.http_5xx,
+            self.stream_errors,
+            if self.verified {
+                "bit-identical to a process that never died"
+            } else {
+                "FAILED (see warnings above)"
+            },
+        )
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("streams", Value::num(self.streams as f64)),
+            ("tokens_per_stream", Value::num(self.tokens_per_stream as f64)),
+            ("kill_at_tokens", Value::num(self.kill_at_tokens as f64)),
+            ("killed_at_tokens", Value::num(self.killed_at_tokens as f64)),
+            ("admitted", Value::num(self.admitted as f64)),
+            ("recovered", Value::num(self.recovered as f64)),
+            ("resumed", Value::num(self.resumed as f64)),
+            ("recovered_tokens", Value::num(self.recovered_tokens as f64)),
+            ("http_429", Value::num(self.http_429 as f64)),
+            ("http_503_retried", Value::num(self.http_503_retried as f64)),
+            ("http_5xx", Value::num(self.http_5xx as f64)),
+            ("stream_errors", Value::num(self.stream_errors as f64)),
+            ("verified", Value::Bool(self.verified)),
+            ("elapsed_s", Value::num(self.elapsed_s)),
+        ])
+    }
+}
+
+/// The seeded kill point: a splitmix64 of the load seed mapped into
+/// the middle half of the run, `[total/4, 3*total/4)` produced tokens
+/// — late enough that streams have durable state, early enough that
+/// every stream still has tokens left to resume.
+fn kill_point(cfg: &LoadConfig) -> u64 {
+    let total = (cfg.streams * cfg.tokens) as u64;
+    let mut x = cfg.seed.wrapping_add(0x2545_F491_4F6C_DD1D);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    total / 4 + x % (total / 2).max(1)
+}
+
+/// Spawn `macformer serve --listen` as a child process on `data_dir`
+/// and wait until `/healthz` answers ready. Stdout is discarded (the
+/// parent prints its own report); stderr is inherited so a child-side
+/// failure surfaces in CI logs.
+fn spawn_serve(cfg: &LoadConfig, data_dir: &Path) -> Result<(Child, String)> {
+    let exe = std::env::current_exe().context("resolving the serve binary")?;
+    let port_file = data_dir.join("port.txt");
+    let _ = std::fs::remove_file(&port_file);
+    let mut child = Command::new(&exe)
+        .arg("serve")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--port-file")
+        .arg(&port_file)
+        .arg("--data-dir")
+        .arg(data_dir)
+        .arg("--kernel")
+        .arg(cfg.kernel.name())
+        .arg("--backend")
+        .arg(cfg.backend.to_string())
+        .arg("--head-dim")
+        .arg(cfg.head_dim.to_string())
+        .arg("--dv")
+        .arg(cfg.dv.to_string())
+        .arg("--features")
+        .arg(cfg.num_features.to_string())
+        .arg("--seed")
+        .arg(cfg.seed.to_string())
+        .arg("--streams")
+        .arg(cfg.streams.to_string())
+        .arg("--min-batch")
+        .arg(cfg.min_batch.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning {} serve", exe.display()))?;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let addr = loop {
+        if let Some(status) = child.try_wait()? {
+            bail!("serve child exited during startup: {status}");
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("serve child wrote no port file within 60s");
+        }
+        match std::fs::read_to_string(&port_file) {
+            Ok(s) if !s.trim().is_empty() => break format!("127.0.0.1:{}", s.trim()),
+            _ => std::thread::sleep(Duration::from_millis(5)),
+        }
+    };
+    // the port file is written only once the gateway is ready, but a
+    // healthz poll keeps this robust if that contract ever loosens
+    loop {
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("serve child on {addr} never answered /healthz ready");
+        }
+        if let Ok(mut http) = Http::connect(&addr) {
+            if http.send("GET", "/healthz", "").is_ok() {
+                if let Ok(head) = http.read_head() {
+                    let _ = http.take(head.content_length);
+                    if head.status == 200 {
+                        break;
+                    }
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    Ok((child, addr))
+}
+
+/// What one stream's client holds when the kill lands.
+struct KillPhase {
+    /// Empty when the open was never acked (a true casualty).
+    sid: String,
+    outs: Vec<f32>,
+    produced: usize,
+    http: RetryCounts,
+    /// A failure observed while the server was still alive — anything
+    /// after the kill flag flips is an expected casualty, not an error.
+    error: Option<String>,
+}
+
+/// What one stream's client brings home from the restarted server.
+struct ResumePhase {
+    /// Token count the resume probe reported (`None` = not probed:
+    /// either a casualty skip or a probe failure, see `error`).
+    probed: Option<u64>,
+    outs: Vec<f32>,
+    resumed_from: usize,
+    produced: usize,
+    http: RetryCounts,
+    error: Option<String>,
+}
+
+fn sid_from_open(resp: &[u8]) -> Result<String> {
+    let mut scan = Scan::object(resp).map_err(|e| anyhow!("open body: {e}"))?;
+    let mut sid = String::new();
+    while let Some(key) = scan.next_key().map_err(|e| anyhow!("open body: {e}"))? {
+        match key {
+            b"stream" => sid = scan.str_value("stream").map_err(|e| anyhow!("{e}"))?.into(),
+            _ => scan.skip_value().map_err(|e| anyhow!("{e}"))?,
+        }
+    }
+    if sid.is_empty() {
+        bail!("open: no stream id in response");
+    }
+    Ok(sid)
+}
+
+/// Stream `tokens[start..]` through one decode request, storing rows
+/// at their absolute positions and bumping the shared produced-token
+/// counter the killer thread watches.
+#[allow(clippy::too_many_arguments)]
+fn decode_into(
+    http: &mut Http,
+    cfg: &LoadConfig,
+    sid: &str,
+    tokens: &[f32],
+    start: usize,
+    outs: &mut [f32],
+    produced: &mut usize,
+    counter: &AtomicU64,
+    counts: &mut RetryCounts,
+    salt: u64,
+) -> Result<()> {
+    let (d, dv) = (cfg.head_dim, cfg.dv);
+    if start >= cfg.tokens {
+        return Ok(());
+    }
+    let path = format!("/v1/streams/{sid}/decode");
+    let body = body_for(tokens, d, dv, start..cfg.tokens);
+    let mut last_status = 0u16;
+    for attempt in 0..MAX_RETRIES {
+        http.send("POST", &path, &body)?;
+        let head = http.read_head()?;
+        if head.chunked {
+            while let Some(payload) = http.read_chunk()? {
+                match parse_frame(&payload, dv)? {
+                    Frame::Token { t, out } => {
+                        let abs = start + t;
+                        if abs >= cfg.tokens {
+                            bail!("decode: token index {t} out of range");
+                        }
+                        outs[abs * dv..(abs + 1) * dv].copy_from_slice(&out);
+                        *produced = abs + 1;
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Frame::Done => {}
+                    Frame::Error { code, message } => {
+                        bail!("decode: unexpected error frame {code}: {message}")
+                    }
+                }
+            }
+            return Ok(());
+        }
+        let _ = http.take(head.content_length)?;
+        match (head.status, head.retry_after) {
+            (429, _) => counts.http_429 += 1,
+            (503, Some(_)) => counts.http_503 += 1,
+            (503, None) => {
+                counts.http_5xx += 1;
+                bail!("decode: non-retryable 503 (engine down)");
+            }
+            (s, _) => bail!("decode: unexpected status {s}"),
+        }
+        last_status = head.status;
+        std::thread::sleep(Duration::from_millis(backoff_ms(attempt, head.retry_after, salt)));
+    }
+    Err(anyhow::Error::new(RetryGaveUp {
+        method: "POST".into(),
+        path,
+        attempts: MAX_RETRIES,
+        last_status,
+    }))
+}
+
+fn drive_to_kill(
+    addr: &str,
+    cfg: &LoadConfig,
+    i: usize,
+    tokens: &[f32],
+    counter: &AtomicU64,
+    killed: &AtomicBool,
+    done: &AtomicUsize,
+) -> KillPhase {
+    let mut out = KillPhase {
+        sid: String::new(),
+        outs: vec![0.0; cfg.tokens * cfg.dv],
+        produced: 0,
+        http: RetryCounts::default(),
+        error: None,
+    };
+    let result = (|| -> Result<()> {
+        let mut http = Http::connect(addr)?;
+        let (head, resp) =
+            request_with_retry(&mut http, "POST", "/v1/streams", "{}", &mut out.http, i as u64)?;
+        if head.status != 201 {
+            bail!("open: expected 201, got {}", head.status);
+        }
+        out.sid = sid_from_open(&resp)?;
+        // no close afterwards: streams stay open so phase 2 can probe
+        // and resume every one of them
+        decode_into(
+            &mut http,
+            cfg,
+            &out.sid,
+            tokens,
+            0,
+            &mut out.outs,
+            &mut out.produced,
+            counter,
+            &mut out.http,
+            i as u64,
+        )
+    })();
+    if let Err(e) = result {
+        if killed.load(Ordering::SeqCst) {
+            // cut off by the SIGKILL: the received prefix is the point
+            log::debug!("kill-restart: stream {i} cut off by the kill: {e:#}");
+        } else {
+            out.error = Some(format!("{e:#}"));
+        }
+    }
+    done.fetch_add(1, Ordering::SeqCst);
+    out
+}
+
+fn resume_stream(addr: &str, cfg: &LoadConfig, i: usize, sid: &str, tokens: &[f32]) -> ResumePhase {
+    let mut out = ResumePhase {
+        probed: None,
+        outs: vec![0.0; cfg.tokens * cfg.dv],
+        resumed_from: 0,
+        produced: 0,
+        http: RetryCounts::default(),
+        error: None,
+    };
+    let counter = AtomicU64::new(0); // nobody watches phase-2 progress
+    let result = (|| -> Result<()> {
+        let mut http = Http::connect(addr)?;
+        let path = format!("/v1/streams/{sid}");
+        let (head, resp) =
+            request_with_retry(&mut http, "GET", &path, "", &mut out.http, i as u64)?;
+        if head.status != 200 {
+            bail!("resume probe: expected 200 for {sid}, got {}", head.status);
+        }
+        let mut scan = Scan::object(&resp).map_err(|e| anyhow!("probe body: {e}"))?;
+        let mut status = String::new();
+        let mut recovered = u64::MAX;
+        while let Some(key) = scan.next_key().map_err(|e| anyhow!("probe body: {e}"))? {
+            match key {
+                b"status" => status = scan.str_value("status").map_err(|e| anyhow!("{e}"))?.into(),
+                b"tokens" => {
+                    recovered = scan.usize_value("tokens").map_err(|e| anyhow!("{e}"))? as u64
+                }
+                _ => scan.skip_value().map_err(|e| anyhow!("{e}"))?,
+            }
+        }
+        if recovered == u64::MAX {
+            bail!("resume probe: no token count for {sid}");
+        }
+        if status != "active" && status != "hibernated" {
+            bail!("resume probe: {sid} recovered as {status:?}");
+        }
+        if recovered > cfg.tokens as u64 {
+            bail!("resume probe: {sid} reports {recovered} tokens, expected <= {}", cfg.tokens);
+        }
+        out.probed = Some(recovered);
+        out.resumed_from = recovered as usize;
+        out.produced = out.resumed_from;
+        decode_into(
+            &mut http,
+            cfg,
+            sid,
+            tokens,
+            out.resumed_from,
+            &mut out.outs,
+            &mut out.produced,
+            &counter,
+            &mut out.http,
+            i as u64,
+        )?;
+        if out.produced != cfg.tokens {
+            bail!("resume: {sid} stopped at {} of {} tokens", out.produced, cfg.tokens);
+        }
+        let (head, _) =
+            request_with_retry(&mut http, "DELETE", &path, "", &mut out.http, i as u64)?;
+        if head.status != 200 {
+            bail!("close: expected 200 for {sid}, got {}", head.status);
+        }
+        Ok(())
+    })();
+    if let Err(e) = result {
+        out.error = Some(format!("{e:#}"));
+    }
+    out
+}
+
+/// Kill-restart chaos: spawn the serve gateway as a child process on
+/// `data_dir`, drive `cfg.streams` concurrent clients, SIGKILL the
+/// child at a seeded produced-token threshold, restart it on the same
+/// data-dir, resume every admitted stream from the journal-recovered
+/// length, and verify every output row — from before the kill and
+/// after the restart — bit-identical to the single-stream replay.
+///
+/// Existing durable state under `data_dir` (checkpoint + journals) is
+/// cleared first so "recovered" can only mean "recovered from *this*
+/// run's crash".
+pub fn run_kill_restart(cfg: &LoadConfig, data_dir: &Path) -> Result<KillRestartReport> {
+    if cfg.streams == 0 || cfg.tokens < 2 {
+        bail!("kill-restart: needs streams > 0 and at least 2 tokens per stream");
+    }
+    if cfg.prompt != 0 {
+        bail!("kill-restart: --prompt is not supported here (decode-only recovery drill)");
+    }
+    if cfg.faults.is_active() {
+        bail!("kill-restart: runs its own chaos; drop the --fault-* flags");
+    }
+    std::fs::create_dir_all(data_dir)
+        .with_context(|| format!("creating data dir {}", data_dir.display()))?;
+    for entry in std::fs::read_dir(data_dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name == "checkpoint.macc"
+            || name == "checkpoint.tmp"
+            || name == "port.txt"
+            || (name.starts_with("journal.") && name.ends_with(".macj"))
+        {
+            std::fs::remove_file(entry.path()).with_context(|| format!("clearing stale {name}"))?;
+        }
+    }
+
+    let tokens = generate_tokens(cfg);
+    let kill_at = kill_point(cfg);
+    let t0 = Instant::now();
+
+    // phase 1: serve, load, SIGKILL at the seeded threshold
+    log::info!(
+        "kill-restart: phase 1 — serving on {}, SIGKILL at {kill_at} produced tokens",
+        data_dir.display()
+    );
+    let (mut child, addr) = spawn_serve(cfg, data_dir)?;
+    check_spec(cfg, &addr)?;
+    let counter = AtomicU64::new(0);
+    let killed = AtomicBool::new(false);
+    let done = AtomicUsize::new(0);
+    let phase1: Vec<KillPhase> = std::thread::scope(|scope| {
+        let addr = addr.as_str();
+        let handles: Vec<_> = (0..cfg.streams)
+            .map(|i| {
+                let tokens = &tokens[i];
+                let (counter, killed, done) = (&counter, &killed, &done);
+                scope.spawn(move || drive_to_kill(addr, cfg, i, tokens, counter, killed, done))
+            })
+            .collect();
+        // the killer: flag first, then SIGKILL, so clients can tell an
+        // expected cut-off from a real failure
+        loop {
+            if counter.load(Ordering::SeqCst) >= kill_at {
+                killed.store(true, Ordering::SeqCst);
+                let _ = child.kill();
+                break;
+            }
+            if done.load(Ordering::SeqCst) == cfg.streams {
+                break; // every client ended early — no kill happened
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| KillPhase {
+                    sid: String::new(),
+                    outs: Vec::new(),
+                    produced: 0,
+                    http: RetryCounts::default(),
+                    error: Some("client thread panicked".into()),
+                })
+            })
+            .collect()
+    });
+    let _ = child.wait();
+    if !killed.load(Ordering::SeqCst) {
+        let first = phase1.iter().find_map(|p| p.error.clone()).unwrap_or_default();
+        bail!(
+            "kill-restart: clients finished before the {kill_at}-token kill threshold \
+             ({} produced); first error: {first:?}",
+            counter.load(Ordering::SeqCst)
+        );
+    }
+    let killed_at = counter.load(Ordering::SeqCst);
+
+    // phase 2: restart on the same data-dir, probe + resume + close
+    log::info!("kill-restart: phase 2 — restarting on the same data-dir");
+    let (mut child2, addr2) = spawn_serve(cfg, data_dir)?;
+    let phase2: Vec<ResumePhase> = std::thread::scope(|scope| {
+        let addr2 = addr2.as_str();
+        let handles: Vec<_> = (0..cfg.streams)
+            .map(|i| {
+                let tokens = &tokens[i];
+                let sid = phase1[i].sid.as_str();
+                scope.spawn(move || {
+                    if sid.is_empty() {
+                        // open never acked: nothing durable to recover
+                        return ResumePhase {
+                            probed: None,
+                            outs: Vec::new(),
+                            resumed_from: 0,
+                            produced: 0,
+                            http: RetryCounts::default(),
+                            error: None,
+                        };
+                    }
+                    resume_stream(addr2, cfg, i, sid, tokens)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| ResumePhase {
+                    probed: None,
+                    outs: Vec::new(),
+                    resumed_from: 0,
+                    produced: 0,
+                    http: RetryCounts::default(),
+                    error: Some("client thread panicked".into()),
+                })
+            })
+            .collect()
+    });
+    let _ = child2.kill();
+    let _ = child2.wait();
+
+    // verify: one deterministic replay covers both phases
+    let (d, dv, stride) = (cfg.head_dim, cfg.dv, token_stride(cfg));
+    let session = AttentionSpec::new(cfg.kernel)
+        .head_dim(d)
+        .num_features(cfg.num_features)
+        .causal(true)
+        .seed(cfg.seed)
+        .backend(cfg.backend)
+        .build()
+        .context("kill-restart: building the verification session")?;
+    let mut stream_errors = 0u64;
+    let mut admitted = 0usize;
+    let mut recovered = 0usize;
+    let mut resumed = 0usize;
+    let mut recovered_tokens = 0u64;
+    let mut outputs_ok = true;
+    let mut row = vec![0.0f32; dv];
+    for i in 0..cfg.streams {
+        let (p1, p2) = (&phase1[i], &phase2[i]);
+        if let Some(e) = &p1.error {
+            log::warn!("kill-restart: stream {i} failed before the kill: {e}");
+            stream_errors += 1;
+            continue;
+        }
+        if p1.sid.is_empty() {
+            continue; // casualty: the kill beat the open ack
+        }
+        admitted += 1;
+        if let Some(e) = &p2.error {
+            log::warn!("kill-restart: stream {i} ({}) failed to resume: {e}", p1.sid);
+            stream_errors += 1;
+            continue;
+        }
+        let Some(probe) = p2.probed else { continue };
+        recovered += 1;
+        recovered_tokens += probe;
+        resumed += 1;
+        let mut state = session.begin_decode(dv)?;
+        let mut mismatched = false;
+        for t in 0..cfg.tokens {
+            let tok = &tokens[i][t * stride..(t + 1) * stride];
+            state.append_token_into(&tok[..d], &tok[d..2 * d], &tok[2 * d..], &mut row)?;
+            if t < p1.produced {
+                for (a, b) in p1.outs[t * dv..(t + 1) * dv].iter().zip(&row) {
+                    if a.to_bits() != b.to_bits() {
+                        mismatched = true;
+                    }
+                }
+            }
+            if t >= p2.resumed_from {
+                for (a, b) in p2.outs[t * dv..(t + 1) * dv].iter().zip(&row) {
+                    if a.to_bits() != b.to_bits() {
+                        mismatched = true;
+                    }
+                }
+            }
+        }
+        if mismatched {
+            log::warn!("kill-restart: stream {i} ({}) diverged from the replay", p1.sid);
+            outputs_ok = false;
+        }
+    }
+    let http_429: u64 = phase1.iter().map(|p| p.http.http_429).sum::<u64>()
+        + phase2.iter().map(|p| p.http.http_429).sum::<u64>();
+    let http_503: u64 = phase1.iter().map(|p| p.http.http_503).sum::<u64>()
+        + phase2.iter().map(|p| p.http.http_503).sum::<u64>();
+    let http_5xx: u64 = phase1.iter().map(|p| p.http.http_5xx).sum::<u64>()
+        + phase2.iter().map(|p| p.http.http_5xx).sum::<u64>();
+
+    let verified = outputs_ok && stream_errors == 0 && recovered == admitted && resumed == admitted;
+    Ok(KillRestartReport {
+        streams: cfg.streams,
+        tokens_per_stream: cfg.tokens,
+        kill_at_tokens: kill_at,
+        killed_at_tokens: killed_at,
+        admitted,
+        recovered,
+        resumed,
+        recovered_tokens,
+        http_429,
+        http_503_retried: http_503,
+        http_5xx,
+        stream_errors,
+        verified,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_jitters_and_caps() {
+        // deterministic: same inputs, same sleep
+        assert_eq!(backoff_ms(3, Some(2), 7), backoff_ms(3, Some(2), 7));
+        // attempt 0 starts from the server's hint (plus bounded jitter)
+        let first = backoff_ms(0, Some(4), 1);
+        assert!((4..=6).contains(&first), "got {first}");
+        // growth: by attempt 6 a 1ms base saturates the 50ms cap zone
+        let late = backoff_ms(6, Some(1), 1);
+        assert!(late >= 32, "got {late}");
+        // hard cap regardless of hint or attempt
+        for attempt in 0..20 {
+            for hint in [None, Some(1), Some(7), Some(10_000)] {
+                assert!(backoff_ms(attempt, hint, 42) <= MAX_BACKOFF_MS);
+                assert!(backoff_ms(attempt, hint, 42) >= 1);
+            }
+        }
+        // different salts actually spread (some pair must differ)
+        let spread: Vec<u64> = (0..16).map(|s| backoff_ms(2, Some(8), s)).collect();
+        assert!(spread.iter().any(|&v| v != spread[0]), "jitter is a no-op");
+    }
+
+    #[test]
+    fn kill_point_lands_mid_run() {
+        for seed in 0..64 {
+            let cfg = LoadConfig { streams: 8, tokens: 16, seed, ..LoadConfig::default() };
+            let total = (cfg.streams * cfg.tokens) as u64;
+            let at = kill_point(&cfg);
+            assert!(at >= total / 4 && at < total, "seed {seed}: kill at {at} of {total}");
+        }
+    }
+
+    #[test]
+    fn gave_up_error_downcasts_through_anyhow() {
+        let err = anyhow::Error::new(RetryGaveUp {
+            method: "POST".into(),
+            path: "/v1/streams".into(),
+            attempts: 3,
+            last_status: 503,
+        });
+        let typed = err.downcast_ref::<RetryGaveUp>().expect("typed give-up");
+        assert_eq!(typed.attempts, 3);
+        assert_eq!(typed.last_status, 503);
+        assert!(err.to_string().contains("after 3 attempts"));
+    }
 }

@@ -29,7 +29,10 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendErr
 use std::time::Duration;
 
 use crate::attn::{AttentionSession, AttentionSpec};
-use crate::serve::resilience::{ResilienceConfig, SessionId, Supervisor};
+use crate::serve::durability::{
+    CheckpointImage, CheckpointStream, DurabilityConfig, JournalOp, Recovery, Store,
+};
+use crate::serve::resilience::{ResilienceConfig, SessionId, StreamStatus, Supervisor};
 use crate::serve::{ServeConfig, ServeError, Telemetry};
 
 /// Everything the engine needs to build its session: the attention
@@ -60,6 +63,17 @@ pub enum Cmd {
     ArmFault { sid: u64, reply: Sender<Result<(), ServeError>> },
     Hibernate { sid: u64, reply: Sender<Result<(), ServeError>> },
     Health { reply: Sender<Health> },
+    /// Lifecycle + folded-token-count probe for `GET /v1/streams/s-N`
+    /// — how a reconnecting client finds where to resume after a
+    /// crash-restart.
+    Status { sid: u64, reply: Sender<Result<(StreamStatus, u64), ServeError>> },
+    /// Graceful drain: finish in-flight decode jobs, write a final
+    /// checkpoint, then exit the engine loop. The worker side stops
+    /// admitting new streams the moment drain is requested.
+    Drain,
+    /// Abrupt stop: no final checkpoint, no draining — exactly what a
+    /// crash looks like to the durable store (and therefore what the
+    /// recovery tests simulate in-process).
     Shutdown,
 }
 
@@ -107,7 +121,7 @@ struct Job {
 }
 
 /// The engine thread's whole mutable state: supervisor, the wire-id
-/// map, and the in-flight decode jobs.
+/// map, the in-flight decode jobs, and the durable store.
 struct Engine<'s> {
     sup: Supervisor<'s>,
     /// wire id -> supervised session; u64 keys keep SessionId private
@@ -118,15 +132,26 @@ struct Engine<'s> {
     jobs: Vec<Job>,
     d: usize,
     dv: usize,
+    /// Write-ahead journal + checkpoints. `None` when the server runs
+    /// without `--data-dir`, or after a disk error degraded durability
+    /// mid-run (logged loudly; serving continues).
+    store: Option<Store>,
+    /// [`Cmd::Drain`] was received: finish in-flight jobs, write a
+    /// final checkpoint, exit 0.
+    draining: bool,
 }
 
-/// Run the engine loop until [`Cmd::Shutdown`] or every sender hangs
-/// up. `ready` reports session construction (the only fallible setup)
-/// back to [`Server::start`](super::Server::start).
+/// Run the engine loop until [`Cmd::Shutdown`], [`Cmd::Drain`]
+/// completes, or every sender hangs up. `ready` reports session
+/// construction and crash-restart recovery (the fallible setup) back
+/// to [`Server::start`](super::Server::start) — recovery happens
+/// *before* ready, so a listener that accepts connections is always
+/// fully recovered.
 pub(super) fn run(
     spec: EngineSpec,
     serve: ServeConfig,
     resilience: ResilienceConfig,
+    durability: Option<DurabilityConfig>,
     ingress: Receiver<Cmd>,
     ready: Sender<Result<(), String>>,
 ) {
@@ -155,7 +180,16 @@ pub(super) fn run(
             return;
         }
     };
-    let _ = ready.send(Ok(()));
+    let (store, recovery) = match durability.map(Store::open).transpose() {
+        Ok(opened) => match opened {
+            Some((s, r)) => (Some(s), Some(r)),
+            None => (None, None),
+        },
+        Err(e) => {
+            let _ = ready.send(Err(format!("opening the durable store: {e}")));
+            return;
+        }
+    };
 
     let mut eng = Engine {
         sup,
@@ -165,11 +199,30 @@ pub(super) fn run(
         jobs: Vec::new(),
         d: spec.head_dim,
         dv: spec.dv,
+        store,
+        draining: false,
     };
 
+    if let Some(rec) = recovery {
+        if let Err(e) = eng.recover(rec) {
+            let _ = ready.send(Err(format!("recovering from the durable store: {e}")));
+            return;
+        }
+    }
+    let _ = ready.send(Ok(()));
+
     loop {
+        // --- drain: in-flight jobs finished, state checkpointed, out ---
+        if eng.draining && eng.jobs.is_empty() {
+            eng.final_checkpoint();
+            return;
+        }
+
         // --- ingest: block when idle, drain without blocking otherwise ---
         if eng.jobs.is_empty() {
+            // going idle: flush any group-commit buffer first, so a
+            // crash during the quiet period loses nothing
+            eng.sync_store();
             match ingress.recv() {
                 Ok(cmd) => {
                     if eng.handle_cmd(cmd) {
@@ -183,6 +236,10 @@ pub(super) fn run(
             if eng.handle_cmd(cmd) {
                 return;
             }
+        }
+        if eng.draining && eng.jobs.is_empty() {
+            eng.final_checkpoint();
+            return;
         }
 
         let submitted = eng.submit_phase();
@@ -206,6 +263,7 @@ pub(super) fn run(
 
         eng.collect_phase();
         eng.reap();
+        eng.pump_durability();
     }
 }
 
@@ -225,6 +283,11 @@ impl Engine<'_> {
             let v = &job.v[t * dv..(t + 1) * dv];
             match self.sup.submit(job.id, q, k, v) {
                 Ok(()) => {
+                    // journal the accepted token (group-committed by
+                    // pump_durability at the end of the loop turn)
+                    if let Some(store) = self.store.as_mut() {
+                        store.record_token(job.sid, q, k, v);
+                    }
                     job.in_flight = true;
                     submitted = true;
                 }
@@ -308,9 +371,15 @@ impl Engine<'_> {
     }
 
     /// Apply one control command. Returns `true` on shutdown.
+    ///
+    /// State-changing commands (open / prefill / close) journal and
+    /// **sync before replying**: any ack a client holds survives a
+    /// crash, so a recovered server never answers `unknown_stream` for
+    /// a stream it admitted or forgets a prompt it confirmed.
     fn handle_cmd(&mut self, cmd: Cmd) -> bool {
         match cmd {
             Cmd::Shutdown => return true,
+            Cmd::Drain => self.draining = true,
             Cmd::Open { reply } => {
                 let res = self.sup.open().map(|id| {
                     let sid = self.next_sid;
@@ -318,6 +387,12 @@ impl Engine<'_> {
                     self.sessions.insert(sid, id);
                     sid
                 });
+                if let Ok(sid) = res {
+                    if let Some(store) = self.store.as_mut() {
+                        store.record_open(sid);
+                    }
+                    self.sync_store();
+                }
                 let _ = reply.send(res);
             }
             Cmd::Close { sid, reply } => {
@@ -333,6 +408,12 @@ impl Engine<'_> {
                         self.sup.close(id)
                     }
                 };
+                if res.is_ok() {
+                    if let Some(store) = self.store.as_mut() {
+                        store.record_close(sid);
+                    }
+                    self.sync_store();
+                }
                 let _ = reply.send(res);
             }
             Cmd::Prefill { sid, q, k, v, reply } => {
@@ -345,6 +426,12 @@ impl Engine<'_> {
                         Ok((n, last))
                     }),
                 };
+                if res.is_ok() {
+                    if let Some(store) = self.store.as_mut() {
+                        store.record_prefill(sid, &q, &k, &v);
+                    }
+                    self.sync_store();
+                }
                 let _ = reply.send(res);
             }
             Cmd::Decode { sid, q, k, v, events } => self.start_decode(sid, q, k, v, events),
@@ -370,6 +457,17 @@ impl Engine<'_> {
                     jobs: self.jobs.iter().filter(|j| !j.dead).count(),
                     telemetry: self.sup.telemetry().clone(),
                 });
+            }
+            Cmd::Status { sid, reply } => {
+                let res = match self.sessions.get(&sid) {
+                    None => Err(ServeError::UnknownStream),
+                    Some(&id) => self.sup.status(id).map(|st| {
+                        // terminal streams hold no state: report len 0
+                        let len = self.sup.stream_len(id).unwrap_or(0);
+                        (st, len)
+                    }),
+                };
+                let _ = reply.send(res);
             }
         }
         false
@@ -424,6 +522,184 @@ impl Engine<'_> {
             events,
             dead: false,
         });
+    }
+
+    // --- durability: journal pumping, checkpoints, recovery ---
+
+    /// Fsync every buffered journal frame now. A disk error here (and
+    /// in the other store paths) degrades to non-durable serving with
+    /// one loud log line — the engine never fails live traffic because
+    /// the journal disk went bad.
+    fn sync_store(&mut self) {
+        if let Some(store) = self.store.as_mut() {
+            if let Err(e) = store.sync(self.sup.tick_no()) {
+                log::error!("durable journal sync failed ({e}); continuing without durability");
+                self.store = None;
+            }
+        }
+    }
+
+    /// Once per loop turn: group-commit the token journal, and write a
+    /// compacting checkpoint when the cadence comes due.
+    fn pump_durability(&mut self) {
+        let tick = self.sup.tick_no();
+        if self.store.as_ref().is_some_and(|s| s.checkpoint_due(tick)) {
+            self.write_checkpoint();
+        } else if let Some(store) = self.store.as_mut() {
+            if let Err(e) = store.maybe_sync(tick) {
+                log::error!("durable journal sync failed ({e}); continuing without durability");
+                self.store = None;
+            }
+        }
+    }
+
+    /// The drain-path checkpoint: capture whatever state remains so a
+    /// restart resumes exactly where the drained process stopped.
+    fn final_checkpoint(&mut self) {
+        self.write_checkpoint();
+    }
+
+    /// Write the Supervisor's full state as the new last-good
+    /// checkpoint and rotate the journal epoch.
+    fn write_checkpoint(&mut self) {
+        let Some(epoch) = self.store.as_ref().map(|s| s.epoch() + 1) else {
+            return;
+        };
+        let image = self.build_image(epoch);
+        let tick = self.sup.tick_no();
+        if let Some(store) = self.store.as_mut() {
+            if let Err(e) = store.write_checkpoint(&image, tick) {
+                log::error!("durable checkpoint failed ({e}); continuing without durability");
+                self.store = None;
+            }
+        }
+    }
+
+    /// Snapshot every live stream (active or hibernated; terminal
+    /// streams hold nothing worth persisting) into a checkpoint image.
+    /// Streams are ordered by wire id so the same state always encodes
+    /// to the same bytes.
+    fn build_image(&self, epoch: u64) -> CheckpointImage {
+        let mut streams: Vec<CheckpointStream> = self
+            .sessions
+            .iter()
+            .filter_map(|(&sid, &id)| {
+                let snap = self.sup.snapshot_stream(id).ok()?;
+                Some(CheckpointStream {
+                    sid,
+                    hibernated: snap.hibernated,
+                    record: snap.record,
+                    pending: snap.pending,
+                })
+            })
+            .collect();
+        streams.sort_by_key(|s| s.sid);
+        CheckpointImage {
+            epoch,
+            next_sid: self.next_sid,
+            tick_no: self.sup.tick_no(),
+            counters: self.sup.telemetry().export_counters(),
+            streams,
+        }
+    }
+
+    /// Crash-restart recovery: restore the checkpoint image, then
+    /// replay the journal tail **through the normal fold path** — the
+    /// deterministic fold makes the recovered streams bit-identical to
+    /// a process that never died. Any failure here is a typed startup
+    /// error: serving from a half-recovered state would silently break
+    /// that contract.
+    fn recover(&mut self, rec: Recovery) -> Result<(), String> {
+        if rec.is_empty() {
+            return Ok(());
+        }
+        if rec.truncated_bytes > 0 {
+            log::warn!(
+                "durable journal: dropped a {}-byte torn tail (crash mid-write); \
+                 clients re-derive the lost rows bit-identically on resubmit",
+                rec.truncated_bytes
+            );
+        }
+        if let Some(img) = &rec.checkpoint {
+            for s in &img.streams {
+                let id = self
+                    .sup
+                    .restore_stream(&s.record, s.hibernated)
+                    .map_err(|e| format!("checkpointed stream s-{}: {e}", s.sid))?;
+                self.sessions.insert(s.sid, id);
+            }
+            self.next_sid = img.next_sid;
+            // overwrite the restore churn with the checkpointed
+            // aggregates, and re-anchor every deadline to the
+            // checkpointed clock before any replay tick runs
+            self.sup.import_telemetry(&img.counters);
+            self.sup.restore_clock(img.tick_no);
+            for s in &img.streams {
+                if let Some((q, k, v)) = &s.pending {
+                    let id = self.sessions[&s.sid];
+                    self.replay_token(id, q, k, v)
+                        .map_err(|e| format!("staged token for s-{}: {e}", s.sid))?;
+                }
+            }
+        }
+        let replayed = rec.ops.len();
+        for op in &rec.ops {
+            self.apply_op(op).map_err(|e| format!("journal replay for s-{}: {e}", op.sid()))?;
+        }
+        // a recovered wire id must never be handed out twice
+        if let Some(&max) = self.sessions.keys().max() {
+            self.next_sid = self.next_sid.max(max + 1);
+        }
+        log::info!(
+            "recovered {} stream(s) from the durable store ({} journal op(s) replayed)",
+            self.sessions.len(),
+            replayed
+        );
+        Ok(())
+    }
+
+    /// Replay one journaled op through the same supervisor calls the
+    /// live path uses.
+    fn apply_op(&mut self, op: &JournalOp) -> Result<(), ServeError> {
+        match op {
+            JournalOp::Open { sid } => {
+                let id = self.sup.open()?;
+                self.sessions.insert(*sid, id);
+                Ok(())
+            }
+            JournalOp::Prefill { sid, q, k, v } => {
+                let id = *self.sessions.get(sid).ok_or(ServeError::UnknownStream)?;
+                self.sup.prefill(id, q, k, v)?;
+                let mut out = vec![0.0f32; self.dv];
+                self.sup.take_output(id, &mut out)
+            }
+            JournalOp::Token { sid, q, k, v } => {
+                let id = *self.sessions.get(sid).ok_or(ServeError::UnknownStream)?;
+                self.replay_token(id, q, k, v)
+            }
+            JournalOp::Close { sid } => {
+                let id = self.sessions.remove(sid).ok_or(ServeError::UnknownStream)?;
+                self.sup.close(id)
+            }
+        }
+    }
+
+    /// Fold one replayed token: submit → tick → take, exactly the live
+    /// closed loop (batching never changes a stream's fold, so
+    /// one-token ticks replay bit-identically to batched serving).
+    fn replay_token(
+        &mut self,
+        id: SessionId,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(), ServeError> {
+        self.sup.submit(id, q, k, v)?;
+        self.sup
+            .tick()
+            .map_err(|e| ServeError::Session(format!("replay tick failed: {e:#}")))?;
+        let mut out = vec![0.0f32; self.dv];
+        self.sup.take_output(id, &mut out)
     }
 }
 

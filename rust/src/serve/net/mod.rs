@@ -28,13 +28,15 @@
 //!
 //! | Route | Body | Answer |
 //! |---|---|---|
-//! | `GET /healthz` | — | `200` engine/telemetry snapshot |
+//! | `GET /healthz` | — | `200 {"status":"ready",...}` — or `503` with `"starting"` / `"draining"` |
 //! | `GET /v1/spec` | — | `200` kernel/dims/seed (clients verify against it) |
-//! | `POST /v1/streams` | `{}` | `201 {"stream":"s-1"}` |
+//! | `POST /v1/streams` | `{}` | `201 {"stream":"s-1"}` — `503 draining` + `Retry-After` mid-drain |
+//! | `GET /v1/streams/{id}` | — | `200 {"stream":..,"status":..,"tokens":n}` (crash-recovery resume probe) |
 //! | `POST /v1/streams/{id}/prefill` | `{"q":[..],"k":[..],"v":[..]}` | `200 {"tokens":n,"out":[..]}` |
 //! | `POST /v1/streams/{id}/decode` | `{"q":[..],"k":[..],"v":[..]}` | `200` chunked SSE, one `data:` frame per token |
 //! | `POST /v1/streams/{id}/arm_fault` | `{}` | `200` (chaos hook: next fold panics) |
 //! | `POST /v1/streams/{id}/hibernate` | `{}` | `200` (snapshot to the spill arena) |
+//! | `POST /admin/drain` | `{}` | `200` — flips the gateway to draining (see [`Server::drain`]) |
 //! | `DELETE /v1/streams/{id}` | — | `200` (any state) |
 //!
 //! `q`/`k`/`v` are row-major flattened `n x d` / `n x d` / `n x dv`
@@ -51,7 +53,7 @@
 //! loadgen's verification is exact, not approximate).
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, sync_channel, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -59,7 +61,8 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::serve::{ResilienceConfig, ServeConfig, ServeError};
+use crate::serve::resilience::StreamStatus;
+use crate::serve::{DurabilityConfig, ResilienceConfig, ServeConfig, ServeError};
 use crate::util::json::Value;
 
 pub mod client;
@@ -67,7 +70,7 @@ pub mod engine;
 pub mod http;
 pub mod wire;
 
-pub use client::{run_socket, NetLoadReport};
+pub use client::{run_kill_restart, run_socket, KillRestartReport, NetLoadReport, RetryGaveUp};
 pub use engine::EngineSpec;
 use engine::{Cmd, Event, IngressError};
 use http::{Conn, HttpConfig, HttpError, Method, Request};
@@ -145,11 +148,31 @@ fn error_json(buf: &mut String, code: &str, message: &str, retryable: bool, retr
     buf.push('}');
 }
 
+/// Gateway readiness, reported by `GET /healthz` and stored as one
+/// atomic byte in [`Shared`].
+const READY_STARTING: u8 = 0;
+const READY_READY: u8 = 1;
+const READY_DRAINING: u8 = 2;
+
 struct Shared {
     ingress: SyncSender<Cmd>,
     spec: EngineSpec,
     serve: ServeConfig,
     stop: AtomicBool,
+    /// `starting` → `ready` → `draining`: workers consult this before
+    /// touching the engine, so `healthz` answers during recovery and
+    /// stream opens are refused the moment a drain begins.
+    readiness: AtomicU8,
+    /// `POST /admin/drain` was received; the process supervisor (the
+    /// CLI's signal loop) polls [`Server::drain_requested`] and calls
+    /// [`Server::drain`].
+    drain_requested: AtomicBool,
+}
+
+impl Shared {
+    fn readiness(&self) -> u8 {
+        self.readiness.load(Ordering::SeqCst)
+    }
 }
 
 /// A running gateway: engine thread + worker pool, shut down
@@ -163,13 +186,23 @@ pub struct Server {
 
 impl Server {
     /// Bind, start the engine thread (building the attention session
-    /// on it), and start the worker pool. Fails fast on a bad address,
-    /// an invalid [`ServeConfig`], or a session the backend rejects.
+    /// on it, and — with `durability` — recovering from the data dir),
+    /// and start the worker pool. Fails fast on a bad address, an
+    /// invalid [`ServeConfig`], a session the backend rejects, or a
+    /// durable store that cannot be trusted (structural corruption is
+    /// a startup error, never a partial recovery).
+    ///
+    /// Workers accept connections while the engine is still
+    /// recovering: `healthz` answers `503 starting` during that
+    /// window, and flips to `200 ready` only once recovery completes
+    /// — so when `start` returns, the listener is accepting and the
+    /// engine is fully recovered.
     pub fn start(
         net: NetConfig,
         spec: EngineSpec,
         serve: ServeConfig,
         resilience: ResilienceConfig,
+        durability: Option<DurabilityConfig>,
     ) -> Result<Server> {
         serve.validate().map_err(|e| anyhow!(e))?;
         let listener =
@@ -180,16 +213,15 @@ impl Server {
         let engine_spec = spec.clone();
         let engine = std::thread::Builder::new()
             .name("serve-engine".into())
-            .spawn(move || engine::run(engine_spec, serve, resilience, rx, ready_tx))?;
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(msg)) => {
-                let _ = engine.join();
-                bail!("serve engine failed to start: {msg}");
-            }
-            Err(_) => bail!("serve engine died during startup"),
-        }
-        let shared = Arc::new(Shared { ingress, spec, serve, stop: AtomicBool::new(false) });
+            .spawn(move || engine::run(engine_spec, serve, resilience, durability, rx, ready_tx))?;
+        let shared = Arc::new(Shared {
+            ingress,
+            spec,
+            serve,
+            stop: AtomicBool::new(false),
+            readiness: AtomicU8::new(READY_STARTING),
+            drain_requested: AtomicBool::new(false),
+        });
         let mut workers = Vec::with_capacity(net.workers.max(1));
         for w in 0..net.workers.max(1) {
             let listener = listener.try_clone()?;
@@ -201,12 +233,50 @@ impl Server {
                     .spawn(move || worker_loop(listener, shared, http))?,
             );
         }
-        Ok(Server { addr, shared, workers, engine: Some(engine) })
+        let mut server = Server { addr, shared, workers, engine: Some(engine) };
+        let startup = match ready_rx.recv() {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(msg)) => Err(anyhow!("serve engine failed to start: {msg}")),
+            Err(_) => Err(anyhow!("serve engine died during startup")),
+        };
+        if let Err(e) = startup {
+            server.stop_all();
+            return Err(e);
+        }
+        server.shared.readiness.store(READY_READY, Ordering::SeqCst);
+        Ok(server)
     }
 
     /// The bound address (resolves `:0` to the kernel-assigned port).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Whether a client asked for a drain via `POST /admin/drain`.
+    /// The process supervisor polls this and calls [`Server::drain`].
+    pub fn drain_requested(&self) -> bool {
+        self.shared.drain_requested.load(Ordering::SeqCst)
+    }
+
+    /// Flip the gateway to draining without stopping anything yet: new
+    /// stream opens answer `503 draining` + `Retry-After`, `healthz`
+    /// reports `draining`, in-flight work keeps running. Idempotent;
+    /// [`Server::drain`] calls this first.
+    pub fn begin_drain(&self) {
+        self.shared.readiness.store(READY_DRAINING, Ordering::SeqCst);
+    }
+
+    /// Graceful drain: refuse new streams, let in-flight decodes
+    /// finish, checkpoint the remaining state to the data dir (when
+    /// durability is on), then stop workers and return. The caller
+    /// exits 0 afterwards.
+    pub fn drain(mut self) {
+        self.begin_drain();
+        let _ = self.shared.ingress.send(Cmd::Drain);
+        if let Some(engine) = self.engine.take() {
+            let _ = engine.join();
+        }
+        self.stop_all();
     }
 
     /// Stop accepting, drain the workers, and stop the engine.
@@ -292,6 +362,7 @@ enum Route {
     Health,
     Spec,
     Streams,
+    Drain,
     Stream { sid: u64, action: Option<StreamAction> },
     NotFound,
 }
@@ -308,6 +379,7 @@ fn parse_route(path: &str) -> Route {
         "/healthz" => return Route::Health,
         "/v1/spec" => return Route::Spec,
         "/v1/streams" => return Route::Streams,
+        "/admin/drain" => return Route::Drain,
         _ => {}
     }
     let Some(rest) = path.strip_prefix("/v1/streams/") else {
@@ -345,6 +417,10 @@ fn dispatch(
         (Method::Get, Route::Health) => health(conn, shared, scratch),
         (Method::Get, Route::Spec) => spec(conn, shared),
         (Method::Post, Route::Streams) => open_stream(conn, shared, scratch),
+        (Method::Post, Route::Drain) => admin_drain(conn, shared),
+        (Method::Get, Route::Stream { sid, action: None }) => {
+            stream_status(conn, shared, sid, scratch)
+        }
         (Method::Post, Route::Stream { sid, action: Some(StreamAction::Prefill) }) => {
             prefill(conn, req, shared, sid, body, scratch)
         }
@@ -406,23 +482,92 @@ fn engine_gone(conn: &mut Conn, scratch: &mut String) -> Result<(), HttpError> {
     conn.write_response(503, "Service Unavailable", "application/json", scratch, &[])
 }
 
+/// The readiness state machine behind `GET /healthz`: `starting`
+/// (engine still constructing/recovering) and `draining` answer `503`
+/// immediately — no engine round trip, so health stays observable even
+/// while the engine replays a long journal — and `ready` answers `200`
+/// with the live engine/telemetry snapshot.
 fn health(conn: &mut Conn, shared: &Shared, scratch: &mut String) -> Result<(), HttpError> {
+    match shared.readiness() {
+        READY_STARTING => {
+            conn.write_response(
+                503,
+                "Service Unavailable",
+                "application/json",
+                "{\"status\":\"starting\"}",
+                &[("Retry-After", "1")],
+            )
+        }
+        READY_DRAINING => conn.write_response(
+            503,
+            "Service Unavailable",
+            "application/json",
+            "{\"status\":\"draining\"}",
+            &[],
+        ),
+        _ => {
+            let (reply, rx) = channel();
+            if let Err(e) = engine::try_enqueue(&shared.ingress, Cmd::Health { reply }) {
+                return ingress_error(conn, e, scratch);
+            }
+            match rx.recv() {
+                Err(_) => engine_gone(conn, scratch),
+                Ok(h) => {
+                    let doc = Value::obj(vec![
+                        ("status", Value::str("ready")),
+                        ("tick_no", Value::num(h.tick_no as f64)),
+                        ("active_streams", Value::num(h.active_streams as f64)),
+                        ("hibernated_streams", Value::num(h.hibernated_streams as f64)),
+                        ("decode_jobs", Value::num(h.jobs as f64)),
+                        ("telemetry", h.telemetry.to_json()),
+                    ]);
+                    conn.write_response(200, "OK", "application/json", &doc.to_string(), &[])
+                }
+            }
+        }
+    }
+}
+
+/// `POST /admin/drain`: flip to draining and flag the process
+/// supervisor. The actual teardown (finish jobs, final checkpoint,
+/// exit 0) runs on the CLI thread via [`Server::drain`]; this handler
+/// only makes the intent durable in [`Shared`] so new opens start
+/// refusing immediately.
+fn admin_drain(conn: &mut Conn, shared: &Shared) -> Result<(), HttpError> {
+    shared.readiness.store(READY_DRAINING, Ordering::SeqCst);
+    shared.drain_requested.store(true, Ordering::SeqCst);
+    conn.write_response(200, "OK", "application/json", "{\"draining\":true}", &[])
+}
+
+/// `GET /v1/streams/s-N`: lifecycle + folded-token count — how a
+/// reconnecting client finds where to resume after a crash-restart.
+fn stream_status(
+    conn: &mut Conn,
+    shared: &Shared,
+    sid: u64,
+    scratch: &mut String,
+) -> Result<(), HttpError> {
     let (reply, rx) = channel();
-    if let Err(e) = engine::try_enqueue(&shared.ingress, Cmd::Health { reply }) {
+    if let Err(e) = engine::try_enqueue(&shared.ingress, Cmd::Status { sid, reply }) {
         return ingress_error(conn, e, scratch);
     }
     match rx.recv() {
         Err(_) => engine_gone(conn, scratch),
-        Ok(h) => {
-            let doc = Value::obj(vec![
-                ("status", Value::str("ok")),
-                ("tick_no", Value::num(h.tick_no as f64)),
-                ("active_streams", Value::num(h.active_streams as f64)),
-                ("hibernated_streams", Value::num(h.hibernated_streams as f64)),
-                ("decode_jobs", Value::num(h.jobs as f64)),
-                ("telemetry", h.telemetry.to_json()),
-            ]);
-            conn.write_response(200, "OK", "application/json", &doc.to_string(), &[])
+        Ok(Err(e)) => serve_error(conn, &e, scratch),
+        Ok(Ok((status, tokens))) => {
+            use std::fmt::Write as _;
+            let name = match status {
+                StreamStatus::Active => "active",
+                StreamStatus::Hibernated => "hibernated",
+                StreamStatus::Faulted => "faulted",
+                StreamStatus::Expired => "expired",
+            };
+            scratch.clear();
+            let _ = write!(
+                scratch,
+                "{{\"stream\":\"s-{sid}\",\"status\":\"{name}\",\"tokens\":{tokens}}}"
+            );
+            conn.write_response(200, "OK", "application/json", scratch, &[])
         }
     }
 }
@@ -442,6 +587,18 @@ fn spec(conn: &mut Conn, shared: &Shared) -> Result<(), HttpError> {
 }
 
 fn open_stream(conn: &mut Conn, shared: &Shared, scratch: &mut String) -> Result<(), HttpError> {
+    if shared.readiness() == READY_DRAINING {
+        // retryable by design: the client backs off and lands on the
+        // replacement instance (or this one after a restart)
+        error_json(scratch, "draining", "server is draining; retry later", true, Some(1));
+        return conn.write_response(
+            503,
+            "Service Unavailable",
+            "application/json",
+            scratch,
+            &[("Retry-After", "1")],
+        );
+    }
     let (reply, rx) = channel();
     if let Err(e) = engine::try_enqueue(&shared.ingress, Cmd::Open { reply }) {
         return ingress_error(conn, e, scratch);

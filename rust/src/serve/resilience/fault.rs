@@ -35,6 +35,27 @@ pub struct FaultPlan {
     pub delay_ticks: u64,
 }
 
+/// Outcome of validating one raw `MACFORMER_FAULT_*` value — mirrors
+/// `parallel::ThreadOverride` and `attention::ChunkOverride` so every
+/// env knob in the crate follows the same warn-and-fall-back contract
+/// (and stays unit-testable without touching the process environment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKnob {
+    /// A well-formed count (`0` keeps that fault class off).
+    Count(u64),
+    /// Not a `u64` — warn and stay 0; chaos must be opted into
+    /// exactly, never guessed from a typo.
+    Malformed,
+}
+
+/// Validate one raw `MACFORMER_FAULT_*` value. See [`FaultKnob`].
+pub fn parse_fault_knob(raw: &str) -> FaultKnob {
+    match raw.trim().parse::<u64>() {
+        Ok(v) => FaultKnob::Count(v),
+        Err(_) => FaultKnob::Malformed,
+    }
+}
+
 impl FaultPlan {
     /// No faults at all (the default).
     pub fn none() -> FaultPlan {
@@ -63,9 +84,9 @@ impl FaultPlan {
     pub fn from_env() -> FaultPlan {
         let read = |name: &str| -> u64 {
             match std::env::var(name) {
-                Ok(raw) => match raw.trim().parse::<u64>() {
-                    Ok(v) => v,
-                    Err(_) => {
+                Ok(raw) => match parse_fault_knob(&raw) {
+                    FaultKnob::Count(v) => v,
+                    FaultKnob::Malformed => {
                         log::warn!("{name}={raw:?} is not a count; ignoring");
                         0
                     }
@@ -177,6 +198,18 @@ mod tests {
                 assert!(kill_tokens.is_empty(), "stream {s} survives");
             }
         }
+    }
+
+    #[test]
+    fn fault_knobs_parse_like_the_other_env_overrides() {
+        assert_eq!(parse_fault_knob("0"), FaultKnob::Count(0));
+        assert_eq!(parse_fault_knob("42"), FaultKnob::Count(42));
+        assert_eq!(parse_fault_knob(" 12 "), FaultKnob::Count(12), "whitespace is trimmed");
+        assert_eq!(parse_fault_knob(""), FaultKnob::Malformed);
+        assert_eq!(parse_fault_knob("-1"), FaultKnob::Malformed, "no negative counts");
+        assert_eq!(parse_fault_knob("3.5"), FaultKnob::Malformed, "no fractional counts");
+        assert_eq!(parse_fault_knob("lots"), FaultKnob::Malformed);
+        assert_eq!(parse_fault_knob("0x10"), FaultKnob::Malformed, "decimal only");
     }
 
     #[test]

@@ -135,6 +135,31 @@ impl Hibernator {
         restored
     }
 
+    /// Copy `ticket`'s record bytes into `out` (cleared first) without
+    /// redeeming the ticket — the serve-checkpoint path, which must
+    /// capture hibernated state while leaving it hibernated.
+    pub(super) fn peek(&self, ticket: Ticket, out: &mut Vec<u8>) -> Result<(), ServeError> {
+        let slot = self
+            .slots
+            .get(ticket.idx as usize)
+            .filter(|s| s.occupied && s.gen == ticket.gen)
+            .ok_or_else(|| ServeError::Session("stale hibernation ticket".into()))?;
+        out.clear();
+        if let SpillMode::Disk(dir) = &self.mode {
+            let path = Self::path_for(dir, ticket);
+            let bytes = std::fs::read(&path).map_err(|e| {
+                ServeError::Session(format!(
+                    "hibernated record {} unreadable: {e}",
+                    path.display()
+                ))
+            })?;
+            out.extend_from_slice(&bytes);
+        } else {
+            out.extend_from_slice(&slot.buf);
+        }
+        Ok(())
+    }
+
     /// Drop a record without restoring it (expiry, close).
     pub(super) fn discard(&mut self, ticket: Ticket) {
         let valid = self

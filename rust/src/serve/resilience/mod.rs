@@ -38,7 +38,7 @@ mod fault;
 mod hibernate;
 mod supervisor;
 
-pub use fault::FaultPlan;
+pub use fault::{parse_fault_knob, FaultKnob, FaultPlan};
 pub use hibernate::SpillMode;
 pub use supervisor::{SessionId, StreamStatus, Supervisor};
 

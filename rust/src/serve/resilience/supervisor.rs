@@ -65,6 +65,21 @@ struct Entry {
     last_event_tick: u64,
 }
 
+/// One supervised stream's durable image, captured by
+/// [`Supervisor::snapshot_stream`] for a serve checkpoint. An untaken
+/// output row is deliberately not part of the image: the `(S, z)`
+/// state already includes that token's fold, and a recovered client
+/// re-derives the row by resubmitting from the recovered length.
+pub struct StreamSnapshot {
+    /// The versioned, checksummed MACS state record (see
+    /// [`crate::tensor::io::write_state_record`]).
+    pub record: Vec<u8>,
+    /// The stream sat in the spill arena at snapshot time.
+    pub hibernated: bool,
+    /// A staged-but-unfolded `(q, k, v)` token, if one was pending.
+    pub pending: Option<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+}
+
 /// The resilience supervisor. One per served model; wraps the whole
 /// pool + scheduler pair, so callers interact only with [`SessionId`]s.
 pub struct Supervisor<'s> {
@@ -460,6 +475,102 @@ impl<'s> Supervisor<'s> {
             }
         }
     }
+
+    // --- durability hooks (serve checkpoints + crash-restart recovery) ---
+
+    /// Capture `id`'s durable image for a checkpoint. Terminal streams
+    /// (faulted/expired) answer their terminal error — they hold no
+    /// state worth persisting, and a recovered process re-derives
+    /// nothing from them.
+    pub fn snapshot_stream(&self, id: SessionId) -> Result<StreamSnapshot, ServeError> {
+        let ei = self.resolve_entry(id)?;
+        match self.entries[ei].state {
+            EntryState::Faulted => Err(ServeError::Faulted),
+            EntryState::Expired => Err(ServeError::Expired),
+            EntryState::Hibernated(ticket) => {
+                let mut record = Vec::new();
+                self.hibernator.peek(ticket, &mut record)?;
+                Ok(StreamSnapshot { record, hibernated: true, pending: None })
+            }
+            EntryState::Active(sid) => {
+                let si = self.pool.resolve(sid)?;
+                let slot = &self.pool.slots[si];
+                let state = slot.state.as_ref().expect("active slot always has a state");
+                let mut record = Vec::new();
+                state.snapshot_into(&mut record);
+                let pending = slot
+                    .pending
+                    .then(|| (slot.q.clone(), slot.k.clone(), slot.v.clone()));
+                Ok(StreamSnapshot { record, hibernated: false, pending })
+            }
+            EntryState::Vacant => unreachable!("resolve_entry rejects vacant entries"),
+        }
+    }
+
+    /// Recreate one stream from a checkpointed state record: open a
+    /// fresh supervised entry, restore the record bit-identically into
+    /// its pool slot, and (when the checkpoint says so) put it straight
+    /// back into the spill arena. A corrupt record closes the entry
+    /// again and surfaces a typed error — recovery never half-restores.
+    pub fn restore_stream(
+        &mut self,
+        record: &[u8],
+        hibernated: bool,
+    ) -> Result<SessionId, ServeError> {
+        let id = self.open()?;
+        let ei = self.resolve_entry(id).expect("freshly opened entry resolves");
+        let EntryState::Active(sid) = self.entries[ei].state else {
+            unreachable!("open always yields an active entry");
+        };
+        let si = self.pool.resolve(sid).expect("fresh admit resolves");
+        let state = self.pool.slots[si].state.as_mut().expect("admitted slot has a state");
+        if let Err(e) = state.restore_from(record) {
+            let _ = self.close(id);
+            return Err(ServeError::Session(format!("checkpoint record corrupt: {e:#}")));
+        }
+        if hibernated {
+            self.hibernate_entry(ei)?;
+        }
+        Ok(id)
+    }
+
+    /// Tokens `id` has folded so far (prefill + decode), in any
+    /// non-terminal state — the recovery probe a reconnecting client
+    /// uses to find where to resume.
+    pub fn stream_len(&self, id: SessionId) -> Result<u64, ServeError> {
+        let ei = self.resolve_entry(id)?;
+        match self.entries[ei].state {
+            EntryState::Faulted => Err(ServeError::Faulted),
+            EntryState::Expired => Err(ServeError::Expired),
+            EntryState::Active(sid) => Ok(self.pool.stream_len(sid)? as u64),
+            EntryState::Hibernated(ticket) => {
+                let mut record = Vec::new();
+                self.hibernator.peek(ticket, &mut record)?;
+                crate::tensor::io::state_record_step(&record)
+                    .map_err(|e| ServeError::Session(format!("hibernated record corrupt: {e}")))
+            }
+            EntryState::Vacant => unreachable!("resolve_entry rejects vacant entries"),
+        }
+    }
+
+    /// Jump the tick clock to a checkpointed value (recovery only).
+    /// Every entry's deadline basis is re-anchored to the new clock, so
+    /// the first post-recovery sweep cannot see a bogus multi-thousand-
+    /// tick idle age and hibernate or expire freshly restored streams.
+    pub fn restore_clock(&mut self, tick_no: u64) {
+        self.tick_no = tick_no;
+        for e in &mut self.entries {
+            e.last_event_tick = tick_no;
+        }
+    }
+
+    /// Overwrite the telemetry counters from a checkpoint (recovery
+    /// only; see [`Telemetry::import_counters`]). Called after the
+    /// streams are restored so the restore churn does not pollute the
+    /// recovered aggregates.
+    pub fn import_telemetry(&mut self, counters: &[u64; Telemetry::COUNTER_WORDS]) {
+        self.pool.tel.import_counters(counters);
+    }
 }
 
 #[cfg(test)]
@@ -614,6 +725,81 @@ mod tests {
         sup.take_output(b, &mut [0.0; 2]).unwrap();
         sup.close(a).unwrap();
         sup.close(b).unwrap();
+    }
+
+    /// The durability hooks: snapshot/restore round-trips active and
+    /// hibernated streams bit-identically into a second supervisor,
+    /// carries a staged-but-unfolded token, and `stream_len` probes
+    /// both states without disturbing them.
+    #[test]
+    fn snapshot_restore_hooks_round_trip_bit_identically() {
+        let sess = session(17);
+        let serve = ServeConfig { min_batch: 1, ..ServeConfig::new(2, 2) };
+        let mut sup = Supervisor::new(&sess, serve, ResilienceConfig::default()).unwrap();
+        let awake = sup.open().unwrap();
+        let asleep = sup.open().unwrap();
+        let mut out = [0.0f32; 2];
+        for t in 0..4 {
+            let (x, v) = token(t);
+            sup.submit(awake, &x, &x, &v).unwrap();
+            sup.submit(asleep, &x, &x, &v).unwrap();
+            sup.tick().unwrap();
+            sup.take_output(awake, &mut out).unwrap();
+            sup.take_output(asleep, &mut out).unwrap();
+        }
+        sup.hibernate(asleep).unwrap();
+        // stage a token on the active stream but do not fold it yet
+        let (px, pv) = token(4);
+        sup.submit(awake, &px, &px, &pv).unwrap();
+
+        let snap_awake = sup.snapshot_stream(awake).unwrap();
+        let snap_asleep = sup.snapshot_stream(asleep).unwrap();
+        assert!(!snap_awake.hibernated);
+        assert!(snap_asleep.hibernated);
+        assert!(snap_asleep.pending.is_none());
+        let (pq, pk, pvv) = snap_awake.pending.clone().expect("staged token captured");
+        assert_eq!(pq, px.to_vec());
+        assert_eq!(sup.stream_len(awake).unwrap(), 4, "pending token not folded yet");
+        assert_eq!(sup.stream_len(asleep).unwrap(), 4);
+
+        // rebuild a fresh supervisor from the snapshots (the recovery path)
+        let mut back = Supervisor::new(&sess, serve, ResilienceConfig::default()).unwrap();
+        let r_awake = back.restore_stream(&snap_awake.record, false).unwrap();
+        let r_asleep = back.restore_stream(&snap_asleep.record, true).unwrap();
+        assert_eq!(back.status(r_asleep).unwrap(), StreamStatus::Hibernated);
+        assert_eq!(back.stream_len(r_awake).unwrap(), 4);
+        assert_eq!(back.stream_len(r_asleep).unwrap(), 4);
+
+        // replay the carried token, then both arms continue identically
+        back.submit(r_awake, &pq, &pk, &pvv).unwrap();
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        for t in 4..8 {
+            sup.tick().unwrap();
+            back.tick().unwrap();
+            sup.take_output(awake, &mut a).unwrap();
+            back.take_output(r_awake, &mut b).unwrap();
+            assert_eq!(a.map(f32::to_bits), b.map(f32::to_bits), "token {t}");
+            let (x, v) = token(t + 1);
+            sup.submit(awake, &x, &x, &v).unwrap();
+            back.submit(r_awake, &x, &x, &v).unwrap();
+            sup.submit(asleep, &x, &x, &v).unwrap();
+            back.submit(r_asleep, &x, &x, &v).unwrap();
+            sup.tick().unwrap();
+            back.tick().unwrap();
+            sup.take_output(asleep, &mut a).unwrap();
+            back.take_output(r_asleep, &mut b).unwrap();
+            assert_eq!(a.map(f32::to_bits), b.map(f32::to_bits), "hibernated arm, token {t}");
+        }
+
+        // a corrupt record is a typed error, and nothing half-restores
+        // (the failed open may have evicted an idle stream to the
+        // arena first, so the invariant is the total live count)
+        let mut corrupt = snap_awake.record.clone();
+        corrupt[28] ^= 0x10;
+        let live_before = back.active_streams() + back.hibernated_streams();
+        assert!(matches!(back.restore_stream(&corrupt, false), Err(ServeError::Session(_))));
+        assert_eq!(back.active_streams() + back.hibernated_streams(), live_before);
     }
 
     /// Disk spill: hibernated state survives as a file and restores

@@ -406,6 +406,72 @@ impl Telemetry {
         )
     }
 
+    /// Export every durable counter as one fixed-order word array (the
+    /// serve-checkpoint payload). The latency histogram and the
+    /// wall-clock origin stay behind: latencies are process-local
+    /// timings that would be meaningless stitched across a restart.
+    pub fn export_counters(&self) -> [u64; Telemetry::COUNTER_WORDS] {
+        [
+            self.tokens,
+            self.ticks,
+            self.idle_ticks,
+            self.batched_ticks,
+            self.sequential_ticks,
+            self.batch_sum,
+            self.batch_max as u64,
+            self.depth_sum,
+            self.depth_max as u64,
+            self.admits,
+            self.rejected_admits,
+            self.rejected_submits,
+            self.prefills,
+            self.prefill_tokens,
+            self.hibernations,
+            self.restores,
+            self.evictions,
+            self.expirations,
+            self.shed,
+            self.faults,
+            self.quarantines,
+            self.nonfinite_rejects,
+        ]
+    }
+
+    /// Overwrite the durable counters from an [`export_counters`]
+    /// array (crash-restart recovery). The inverse of the export, in
+    /// the same fixed order.
+    ///
+    /// [`export_counters`]: Telemetry::export_counters
+    pub fn import_counters(&mut self, c: &[u64; Telemetry::COUNTER_WORDS]) {
+        self.tokens = c[0];
+        self.ticks = c[1];
+        self.idle_ticks = c[2];
+        self.batched_ticks = c[3];
+        self.sequential_ticks = c[4];
+        self.batch_sum = c[5];
+        self.batch_max = c[6] as usize;
+        self.depth_sum = c[7];
+        self.depth_max = c[8] as usize;
+        self.admits = c[9];
+        self.rejected_admits = c[10];
+        self.rejected_submits = c[11];
+        self.prefills = c[12];
+        self.prefill_tokens = c[13];
+        self.hibernations = c[14];
+        self.restores = c[15];
+        self.evictions = c[16];
+        self.expirations = c[17];
+        self.shed = c[18];
+        self.faults = c[19];
+        self.quarantines = c[20];
+        self.nonfinite_rejects = c[21];
+    }
+
+    /// Number of words in an [`export_counters`] array.
+    ///
+    /// [`export_counters`]: Telemetry::export_counters
+    pub const COUNTER_WORDS: usize = 22;
+
     /// Machine-readable snapshot (the `telemetry` block of
     /// `BENCH_serve.json`). Deliberately time-independent — pure
     /// counters and the histogram, so a cloned `Telemetry` serializes
@@ -492,5 +558,33 @@ mod tests {
         assert_eq!(json.get("tokens").as_usize(), Some(5));
         assert!(json.get("latency_s").get("max").as_f64().unwrap() > 0.0);
         assert!(t.render().contains("tokens"));
+    }
+
+    /// Export -> import round-trips every durable counter (the
+    /// checkpoint path for crash-restart recovery).
+    #[test]
+    fn counter_export_import_round_trips() {
+        let mut t = Telemetry::new();
+        t.record_tick(4, 6, false);
+        t.record_tick(1, 1, true);
+        t.record_admit();
+        t.record_admit_rejected();
+        t.record_submit_rejected();
+        t.record_prefill(9);
+        t.record_hibernation();
+        t.record_restore();
+        t.record_eviction();
+        t.record_expiration();
+        t.record_shed();
+        t.record_fault(true);
+        t.record_nonfinite_reject();
+        let exported = t.export_counters();
+        let mut back = Telemetry::new();
+        back.import_counters(&exported);
+        assert_eq!(back.export_counters(), exported);
+        assert_eq!(back.tokens(), t.tokens());
+        assert_eq!(back.max_batch(), 4);
+        assert_eq!(back.max_queue_depth(), 6);
+        assert_eq!(back.quarantines(), 1);
     }
 }

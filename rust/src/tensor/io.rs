@@ -20,6 +20,20 @@
 //! Everything is validated — magic, version, dimensions, length,
 //! checksum — before a single float is written into the caller's
 //! state, so a corrupt record can never half-restore a stream.
+//!
+//! Journal-record format (little-endian, see
+//! [`append_journal_record`]):
+//!   magic "MACJ" | u32 version | u32 kind | u64 sid |
+//!   u32 payload_len | payload bytes | u32 fnv1a-32 checksum
+//!
+//! One framed record per serve durability event (stream open, prefill,
+//! decoded token, close, checkpoint section — the `kind` space belongs
+//! to [`crate::serve::durability`]). The frame is self-delimiting, so
+//! a journal file is just records back to back; [`read_journal_record`]
+//! distinguishes a clean end, a torn tail (truncated or checksum-failed
+//! record: recover to the last good record), and structural corruption
+//! (bad magic, stale version, absurd length: a typed error, because the
+//! file is not trustworthy past that point).
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Result, Write};
@@ -192,9 +206,126 @@ pub fn read_state_record(bytes: &[u8], s: &mut [f32], z: &mut [f32]) -> Result<u
     Ok(step)
 }
 
+/// Validate a state record's envelope — magic, version, advertised
+/// dims vs byte length, checksum — and return its step count without
+/// decoding any floats: the cheap "how many tokens has this stream
+/// folded" probe used by serve durability for hibernated streams.
+pub fn state_record_step(bytes: &[u8]) -> Result<u64> {
+    if bytes.len() < 28 {
+        return Err(bad("state record too short"));
+    }
+    if &bytes[..4] != STATE_MAGIC {
+        return Err(bad("not a MACS state record"));
+    }
+    let word = |at: usize| u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+    if word(4) != STATE_VERSION {
+        return Err(bad("unsupported state record version"));
+    }
+    let (feat, dv) = (word(8) as usize, word(12) as usize);
+    let payload = feat
+        .checked_mul(dv)
+        .and_then(|sdv| sdv.checked_add(feat))
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| bad("state record dims overflow"))?;
+    if feat == 0 || bytes.len() != 24 + payload + 4 {
+        return Err(bad("state record length mismatch"));
+    }
+    let body = bytes.len() - 4;
+    if fnv1a(&bytes[..body]) != word(body) {
+        return Err(bad("state record checksum mismatch"));
+    }
+    Ok(u64::from_le_bytes(bytes[16..24].try_into().unwrap()))
+}
+
+const JOURNAL_MAGIC: &[u8; 4] = b"MACJ";
+/// Version tag of the journal frame (bump on layout change; old
+/// journals are rejected with a typed error, never misread).
+pub const JOURNAL_VERSION: u32 = 1;
+/// Sanity cap on one frame's payload: anything larger is a corrupt
+/// length header, not a real record (the biggest real payload is one
+/// checkpointed stream state, well under a megabyte).
+pub const JOURNAL_MAX_PAYLOAD: usize = 1 << 28;
+
+/// Fixed bytes before the payload: magic + version + kind + sid + len.
+const JOURNAL_HEAD: usize = 4 + 4 + 4 + 8 + 4;
+
+/// Total frame length for a `payload_len`-byte payload.
+pub fn journal_record_len(payload_len: usize) -> usize {
+    JOURNAL_HEAD + payload_len + 4
+}
+
+/// Append one framed journal record to `buf` (not cleared: journal
+/// writers batch many frames into one buffer between fsyncs). The
+/// checksum covers the whole frame, so a torn or bit-flipped write is
+/// caught by [`read_journal_record`] before any payload is trusted.
+pub fn append_journal_record(buf: &mut Vec<u8>, kind: u32, sid: u64, payload: &[u8]) {
+    assert!(payload.len() <= JOURNAL_MAX_PAYLOAD, "journal payload too large");
+    let start = buf.len();
+    buf.reserve(journal_record_len(payload.len()));
+    buf.extend_from_slice(JOURNAL_MAGIC);
+    buf.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+    buf.extend_from_slice(&kind.to_le_bytes());
+    buf.extend_from_slice(&sid.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    let sum = fnv1a(&buf[start..]);
+    buf.extend_from_slice(&sum.to_le_bytes());
+}
+
+/// One parse step over a journal byte stream.
+#[derive(Debug)]
+pub enum JournalFrame<'a> {
+    /// A complete, checksum-clean record; advance by `consumed`.
+    Record { kind: u32, sid: u64, payload: &'a [u8], consumed: usize },
+    /// The bytes end mid-record or the trailing checksum disagrees: a
+    /// torn tail write. Everything before this offset is good.
+    Torn,
+    /// Clean end of the stream at a record boundary.
+    End,
+}
+
+/// Parse the journal record starting at `bytes[0]`.
+///
+/// Returns `Torn` for an incomplete or checksum-failed frame (the
+/// recover-to-last-good signal) and a typed [`std::io::Error`] for
+/// structural corruption that makes the rest of the file untrustworthy:
+/// wrong magic, stale version, or an absurd length header.
+pub fn read_journal_record(bytes: &[u8]) -> Result<JournalFrame<'_>> {
+    if bytes.is_empty() {
+        return Ok(JournalFrame::End);
+    }
+    if bytes.len() < JOURNAL_HEAD {
+        return Ok(JournalFrame::Torn);
+    }
+    if &bytes[..4] != JOURNAL_MAGIC {
+        return Err(bad("not a MACJ journal record"));
+    }
+    let word = |at: usize| u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+    if word(4) != JOURNAL_VERSION {
+        return Err(bad("unsupported journal record version"));
+    }
+    let payload_len = word(20) as usize;
+    if payload_len > JOURNAL_MAX_PAYLOAD {
+        return Err(bad("journal payload length is absurd"));
+    }
+    let total = journal_record_len(payload_len);
+    if bytes.len() < total {
+        return Ok(JournalFrame::Torn);
+    }
+    if fnv1a(&bytes[..total - 4]) != word(total - 4) {
+        return Ok(JournalFrame::Torn);
+    }
+    Ok(JournalFrame::Record {
+        kind: word(8),
+        sid: u64::from_le_bytes(bytes[12..20].try_into().unwrap()),
+        payload: &bytes[JOURNAL_HEAD..JOURNAL_HEAD + payload_len],
+        consumed: total,
+    })
+}
+
 /// FNV-1a (32-bit) over the record body — cheap corruption tripwire,
 /// not a cryptographic seal.
-fn fnv1a(bytes: &[u8]) -> u32 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u32 {
     let mut h: u32 = 0x811C_9DC5;
     for &b in bytes {
         h ^= b as u32;
@@ -352,5 +483,108 @@ mod tests {
         assert_eq!(read_state_record(&buf, &mut s2, &mut z2).unwrap(), 7);
         assert_eq!(s2, s);
         assert_eq!(z2, z);
+    }
+
+    #[test]
+    fn state_record_step_probe_matches_full_decode() {
+        let (feat, dv) = (3, 2);
+        let s: Vec<f32> = (0..feat * dv).map(|i| i as f32 * 0.5).collect();
+        let z: Vec<f32> = (0..feat).map(|i| i as f32).collect();
+        let mut buf = Vec::new();
+        write_state_record(&mut buf, 99, &s, &z);
+        assert_eq!(state_record_step(&buf).unwrap(), 99);
+        // the probe applies the same full validation as the decoder
+        let mut flip = buf.clone();
+        flip[25] ^= 0x01;
+        assert!(state_record_step(&flip).is_err());
+        assert!(state_record_step(&buf[..10]).is_err());
+        let mut ver = buf.clone();
+        ver[4] = 0xFE;
+        assert!(state_record_step(&ver).is_err());
+    }
+
+    /// One journal buffer holding several frames walks back out intact.
+    #[test]
+    fn journal_records_round_trip_back_to_back() {
+        let mut buf = Vec::new();
+        let frames: Vec<(u32, u64, Vec<u8>)> = vec![
+            (1, 7, vec![]),
+            (3, 7, (0u8..64).collect()),
+            (4, 9, vec![0xFF; 5]),
+        ];
+        for (kind, sid, payload) in &frames {
+            append_journal_record(&mut buf, *kind, *sid, payload);
+        }
+        let mut at = 0;
+        for (kind, sid, payload) in &frames {
+            match read_journal_record(&buf[at..]).unwrap() {
+                JournalFrame::Record { kind: k, sid: s, payload: p, consumed } => {
+                    assert_eq!((k, s, p), (*kind, *sid, payload.as_slice()));
+                    at += consumed;
+                }
+                other => panic!("expected a record, got {other:?}"),
+            }
+        }
+        assert!(matches!(read_journal_record(&buf[at..]).unwrap(), JournalFrame::End));
+    }
+
+    /// The adversarial journal surface: torn tails recover to the last
+    /// good record, structural corruption is a typed error, and none of
+    /// it panics.
+    #[test]
+    fn journal_reader_survives_torn_and_corrupt_tails() {
+        let mut buf = Vec::new();
+        append_journal_record(&mut buf, 1, 5, b"good");
+        let good = buf.len();
+        append_journal_record(&mut buf, 3, 5, b"tail payload");
+
+        // truncated tail at every cut point: the first record stays
+        // readable, the torn second one reports Torn (never an Err)
+        for cut in good + 1..buf.len() {
+            let bytes = &buf[..cut];
+            let first = read_journal_record(bytes).unwrap();
+            let consumed = match first {
+                JournalFrame::Record { consumed, payload, .. } => {
+                    assert_eq!(payload, b"good");
+                    consumed
+                }
+                other => panic!("first record lost at cut {cut}: {other:?}"),
+            };
+            assert!(
+                matches!(read_journal_record(&bytes[consumed..]).unwrap(), JournalFrame::Torn),
+                "cut {cut}"
+            );
+        }
+
+        // a bit-flipped byte inside the tail record fails its checksum
+        // -> Torn (recover to last good), leaving the first frame intact
+        let mut flip = buf.clone();
+        flip[good + 30] ^= 0x20;
+        match read_journal_record(&flip).unwrap() {
+            JournalFrame::Record { consumed, .. } => {
+                assert!(matches!(
+                    read_journal_record(&flip[consumed..]).unwrap(),
+                    JournalFrame::Torn
+                ));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // stale version: typed error, not a misread
+        let mut ver = buf.clone();
+        ver[4] = 0xFE;
+        let err = read_journal_record(&ver).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        // wrong magic: typed error
+        let mut magic = buf.clone();
+        magic[0] = b'Z';
+        assert!(read_journal_record(&magic).is_err());
+
+        // oversized length header: typed error before any allocation
+        let mut huge = buf.clone();
+        huge[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_journal_record(&huge).unwrap_err();
+        assert!(err.to_string().contains("absurd"), "{err}");
     }
 }

@@ -1,0 +1,242 @@
+//! Integration tests for durable serve: the write-ahead journal and
+//! checkpoint store (`serve::durability`) wired through the HTTP
+//! gateway.
+//!
+//! Three scenarios:
+//!
+//! 1. Crash-restart: a server is stopped abruptly (no drain, no final
+//!    checkpoint — exactly what `SIGKILL` looks like to the store),
+//!    restarted on the same data dir, and must answer the resume probe
+//!    for every acked stream and fold new rows **bit-identically** to
+//!    a reference server that never died.
+//! 2. Graceful drain: [`Server::drain`] leaves a final checkpoint that
+//!    a restart recovers from, with the journal fully subsumed.
+//! 3. Corruption: a bit-flipped checkpoint is a typed startup error,
+//!    never a partial recovery.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use macformer::serve::{DurabilityConfig, EngineSpec, LoadConfig, NetConfig, ServeConfig, Server};
+
+/// head_dim == dv for these shapes.
+const DIMS: usize = 8;
+/// Rows per prefill batch.
+const ROWS: usize = 4;
+
+fn data_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("macformer_durable_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spec() -> EngineSpec {
+    let cfg = LoadConfig::default();
+    EngineSpec {
+        kernel: cfg.kernel,
+        backend: cfg.backend,
+        head_dim: DIMS,
+        dv: DIMS,
+        num_features: 16,
+        seed: 7,
+    }
+}
+
+/// Start a gateway; `dir` turns durability on with tick-level sync, so
+/// an abrupt stop loses nothing that was acked.
+fn start(dir: Option<&Path>) -> Server {
+    let durability =
+        dir.map(|d| DurabilityConfig { sync_every_ticks: 0, ..DurabilityConfig::new(d) });
+    let serve = ServeConfig::new(8, DIMS);
+    Server::start(NetConfig::default(), spec(), serve, Default::default(), durability)
+        .expect("server start")
+}
+
+/// A minimal keep-alive HTTP client (Content-Length framing only; the
+/// routes used here never answer chunked).
+struct Client {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+        let _ = stream.set_nodelay(true);
+        Client { stream, buf: Vec::new() }
+    }
+
+    /// One request on the persistent connection: `(status, body)`.
+    fn request(&mut self, method: &str, path: &str, body: &str) -> (u16, String) {
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.stream.write_all(req.as_bytes()).expect("send request");
+        let head_end = loop {
+            if let Some(pos) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break pos + 4;
+            }
+            self.read_more();
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).to_ascii_lowercase();
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("content-length:"))
+            .map(|v| v.trim().parse().expect("content-length"))
+            .unwrap_or(0);
+        while self.buf.len() < head_end + len {
+            self.read_more();
+        }
+        let body = String::from_utf8_lossy(&self.buf[head_end..head_end + len]).into_owned();
+        self.buf.drain(..head_end + len);
+        (status, body)
+    }
+
+    fn read_more(&mut self) {
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk).expect("read response");
+        assert!(n > 0, "server closed mid-response");
+        self.buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// Deterministic small-integer token rows: identical JSON on every
+/// server, so response bodies compare byte-for-byte.
+fn rows_json(salt: i32) -> String {
+    let mut s = String::from("[");
+    for i in 0..(ROWS * DIMS) as i32 {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&(((salt + i) % 3) - 1).to_string());
+    }
+    s.push(']');
+    s
+}
+
+/// One prefill batch of [`ROWS`] q/k/v rows.
+fn batch(salt: i32) -> String {
+    let (q, k, v) = (rows_json(salt), rows_json(salt + 1), rows_json(salt + 2));
+    format!("{{\"q\":{q},\"k\":{k},\"v\":{v}}}")
+}
+
+#[test]
+fn crash_restart_recovers_streams_bit_identically_over_the_socket() {
+    let dir = data_dir("crash");
+
+    // reference run: a server that never dies folds both batches
+    let reference = start(None);
+    let mut c = Client::connect(reference.local_addr());
+    let (status, body) = c.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 201, "{body}");
+    let (status, ref_out1) = c.request("POST", "/v1/streams/s-1/prefill", &batch(1));
+    assert_eq!(status, 200, "{ref_out1}");
+    let (status, ref_out2) = c.request("POST", "/v1/streams/s-1/prefill", &batch(11));
+    assert_eq!(status, 200, "{ref_out2}");
+    drop(c);
+    reference.shutdown();
+
+    // durable run: same prompt, then an abrupt stop before batch two
+    let server = start(Some(&dir));
+    let mut c = Client::connect(server.local_addr());
+    let (status, body) = c.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 201, "{body}");
+    assert!(body.contains("\"stream\":\"s-1\""), "{body}");
+    let (status, out1) = c.request("POST", "/v1/streams/s-1/prefill", &batch(1));
+    assert_eq!(status, 200, "{out1}");
+    assert_eq!(out1, ref_out1, "pre-crash fold diverged from the reference server");
+    // a second stream whose open was acked but that never folded a row
+    let (status, body) = c.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 201, "{body}");
+    assert!(body.contains("\"stream\":\"s-2\""), "{body}");
+    drop(c);
+    server.shutdown(); // abrupt: no drain, no final checkpoint — a crash
+
+    // restart on the same data dir: both acked streams are recovered
+    let server = start(Some(&dir));
+    let mut c = Client::connect(server.local_addr());
+    let (status, body) = c.request("GET", "/v1/streams/s-1", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"active\""), "{body}");
+    assert!(body.contains(&format!("\"tokens\":{ROWS}")), "{body}");
+    let (status, body) = c.request("GET", "/v1/streams/s-2", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"tokens\":0"), "{body}");
+
+    // the recovered stream folds batch two bit-identically
+    let (status, out2) = c.request("POST", "/v1/streams/s-1/prefill", &batch(11));
+    assert_eq!(status, 200, "{out2}");
+    assert_eq!(out2, ref_out2, "recovered stream diverged from the never-died server");
+
+    // a recovered wire id is never handed out twice
+    let (status, body) = c.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 201, "{body}");
+    assert!(body.contains("\"stream\":\"s-3\""), "{body}");
+
+    drop(c);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn graceful_drain_writes_a_final_checkpoint_that_restart_recovers() {
+    let dir = data_dir("drain");
+    let server = start(Some(&dir));
+    let mut c = Client::connect(server.local_addr());
+    let (status, body) = c.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 201, "{body}");
+    let (status, body) = c.request("POST", "/v1/streams/s-1/prefill", &batch(5));
+    assert_eq!(status, 200, "{body}");
+    drop(c);
+    server.drain();
+    assert!(dir.join("checkpoint.macc").exists(), "drain must leave a final checkpoint");
+
+    // the restarted server resumes from the checkpoint alone
+    let server = start(Some(&dir));
+    let mut c = Client::connect(server.local_addr());
+    let (status, body) = c.request("GET", "/healthz", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"ready\""), "{body}");
+    let (status, body) = c.request("GET", "/v1/streams/s-1", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"active\""), "{body}");
+    assert!(body.contains(&format!("\"tokens\":{ROWS}")), "{body}");
+    drop(c);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_checkpoint_refuses_startup_with_a_typed_error() {
+    let dir = data_dir("corrupt");
+    let server = start(Some(&dir));
+    let mut c = Client::connect(server.local_addr());
+    let (status, body) = c.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 201, "{body}");
+    let (status, body) = c.request("POST", "/v1/streams/s-1/prefill", &batch(3));
+    assert_eq!(status, 200, "{body}");
+    drop(c);
+    server.drain(); // leaves checkpoint.macc behind
+
+    let path = dir.join("checkpoint.macc");
+    let mut bytes = std::fs::read(&path).expect("checkpoint written");
+    bytes[40] ^= 0x08;
+    std::fs::write(&path, &bytes).expect("rewrite checkpoint");
+
+    let durability = Some(DurabilityConfig::new(&dir));
+    let serve = ServeConfig::new(8, DIMS);
+    let err = Server::start(NetConfig::default(), spec(), serve, Default::default(), durability)
+        .err()
+        .expect("a corrupt checkpoint must refuse startup");
+    assert!(err.to_string().contains("durable store"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -124,7 +124,7 @@ fn serve_config_validation_rejects_degenerate_configs_with_typed_errors() {
     let cfg = small_cfg();
     let spec = spec_for(&cfg);
     let bad = ServeConfig { max_streams: 0, ..ServeConfig::new(1, cfg.dv) };
-    let err = Server::start(NetConfig::default(), spec, bad, cfg.resilience.clone())
+    let err = Server::start(NetConfig::default(), spec, bad, cfg.resilience.clone(), None)
         .err()
         .expect("zero-capacity config must not start a server");
     assert_eq!(err.to_string(), "invalid serve config: max_streams must be > 0");
@@ -161,7 +161,7 @@ fn spec_for(cfg: &LoadConfig) -> EngineSpec {
 
 fn server_for(cfg: &LoadConfig, net: NetConfig) -> Server {
     let serve = ServeConfig { min_batch: cfg.min_batch, ..ServeConfig::new(cfg.streams, cfg.dv) };
-    Server::start(net, spec_for(cfg), serve, cfg.resilience.clone()).expect("server start")
+    Server::start(net, spec_for(cfg), serve, cfg.resilience.clone(), None).expect("server start")
 }
 
 struct RawResponse {
@@ -266,7 +266,7 @@ fn gateway_serves_health_spec_and_typed_errors() {
 
     let health = one_shot(addr, b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n", true);
     assert_eq!(health.status, 200);
-    assert!(health.body.contains("\"status\":\"ok\""), "{}", health.body);
+    assert!(health.body.contains("\"status\":\"ready\""), "{}", health.body);
     assert!(health.body.contains("\"tick_no\""), "{}", health.body);
 
     let spec = one_shot(addr, b"GET /v1/spec HTTP/1.1\r\nHost: t\r\n\r\n", true);
@@ -422,7 +422,7 @@ fn ingress_backpressure_surfaces_as_429_with_retry_after() {
                 for _ in 0..2000 {
                     let (status, head, body) = client.get("/healthz");
                     match status {
-                        200 => assert!(body.contains("\"status\":\"ok\""), "{body}"),
+                        200 => assert!(body.contains("\"status\":\"ready\""), "{body}"),
                         429 => {
                             assert!(head.contains("retry-after: 1"), "429 without Retry-After");
                             assert!(body.contains("\"error\":\"ingress_full\""), "{body}");
@@ -502,4 +502,54 @@ fn concurrent_chaos_clients_verify_bit_identical_with_zero_5xx() {
     assert_eq!(report.faulted_streams, 2, "exactly the planned fold panics land");
     assert_eq!(report.poisoned_streams, 0, "a fault leaked into a neighbour stream");
     assert!(report.tokens_total > 0);
+}
+
+// ---------------------------------------------------------------------------
+// graceful drain: refuse new opens, keep serving admitted streams
+// ---------------------------------------------------------------------------
+
+/// [`Server::begin_drain`] flips the gateway without stopping it: new
+/// opens bounce with a retryable `503 draining` + `Retry-After`,
+/// `healthz` reports draining, and a stream admitted before the drain
+/// still prefills, answers its resume probe, and closes cleanly.
+#[test]
+fn draining_gateway_refuses_new_opens_but_finishes_admitted_work() {
+    let cfg = small_cfg();
+    let server = server_for(&cfg, NetConfig::default());
+    let addr = server.local_addr();
+
+    let mut client = RawClient::connect(addr);
+    let (status, _, resp) = client.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 201, "{resp}");
+    let sid = resp.split('"').nth(3).expect("stream id").to_string();
+
+    server.begin_drain();
+
+    let (status, _, body) = client.get("/healthz");
+    assert_eq!(status, 503);
+    assert!(body.contains("\"status\":\"draining\""), "{body}");
+
+    let (status, head, body) = client.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 503);
+    assert!(head.contains("retry-after: 1"), "draining 503 without Retry-After: {head}");
+    assert!(body.contains("\"error\":\"draining\""), "{body}");
+    assert!(body.contains("\"retryable\":true"), "{body}");
+
+    // the admitted stream is still served mid-drain: prefill one row...
+    let row = "[1,0,0,0,0,0,0,0]";
+    let body = format!("{{\"q\":{row},\"k\":{row},\"v\":{row}}}");
+    let (status, _, resp) = client.request("POST", &format!("/v1/streams/{sid}/prefill"), &body);
+    assert_eq!(status, 200, "{resp}");
+
+    // ...the resume probe sees it...
+    let (status, _, resp) = client.get(&format!("/v1/streams/{sid}"));
+    assert_eq!(status, 200, "{resp}");
+    assert!(resp.contains("\"status\":\"active\""), "{resp}");
+    assert!(resp.contains("\"tokens\":1"), "{resp}");
+
+    // ...and the close lands before the gateway winds down
+    let (status, _, _) = client.request("DELETE", &format!("/v1/streams/{sid}"), "");
+    assert_eq!(status, 200);
+    drop(client);
+    server.drain();
 }

@@ -1,6 +1,8 @@
 //! Minimal offline shim of `libc`: exactly the `getrusage` surface used
-//! by `macformer::util::peak_rss_bytes`. Struct layout matches glibc on
-//! 64-bit Linux (two `timeval`s followed by fourteen `c_long` fields).
+//! by `macformer::util::peak_rss_bytes`, plus the `signal(2)` surface
+//! the serve gateway uses to catch `SIGTERM` for graceful drain.
+//! Struct layout matches glibc on 64-bit Linux (two `timeval`s
+//! followed by fourteen `c_long` fields).
 
 #![allow(non_camel_case_types)]
 
@@ -46,8 +48,16 @@ pub struct rusage {
 
 pub const RUSAGE_SELF: c_int = 0;
 
+/// `SIGTERM` on Linux (the value is uniform across architectures).
+pub const SIGTERM: c_int = 15;
+
+/// A `signal(2)` disposition: the address of an `extern "C"` handler
+/// (or 0 / 1 for `SIG_DFL` / `SIG_IGN`).
+pub type sighandler_t = usize;
+
 extern "C" {
     pub fn getrusage(who: c_int, usage: *mut rusage) -> c_int;
+    pub fn signal(signum: c_int, handler: sighandler_t) -> sighandler_t;
 }
 
 #[cfg(test)]
