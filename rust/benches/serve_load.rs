@@ -36,6 +36,7 @@ use anyhow::{anyhow, Result};
 use macformer::attn::{Backend, Kernel};
 use macformer::fastpath;
 use macformer::serve::loadgen::{run, Arrival, LoadConfig};
+use macformer::serve::obs;
 use macformer::serve::{FaultPlan, ResilienceConfig, SpillMode};
 use macformer::util::json::Value;
 
@@ -59,6 +60,9 @@ where
 
 fn main() -> Result<()> {
     macformer::util::logging::init();
+    // clean slate so the per-stage breakdown below covers exactly the
+    // scenarios this run drives
+    obs::reset();
     let streams = env_usize("MACFORMER_SERVE_STREAMS", 64);
     let tokens = env_usize("MACFORMER_SERVE_TOKENS", 64);
     let kernel: Kernel = env_parse("MACFORMER_BENCH_KERNEL", Kernel::Exp)?;
@@ -140,6 +144,9 @@ fn main() -> Result<()> {
         ("poisoned_streams", Value::num(poisoned_streams as f64)),
         ("hibernations", Value::num(hibernations as f64)),
         ("restores", Value::num(restores as f64)),
+        // per-stage latency breakdown (tick gather / phi GEMM / state
+        // fold / journal ...) from the observability stage histograms
+        ("stage_breakdown", obs::stage_breakdown_json()),
         ("scenarios", Value::Arr(scenarios)),
     ]);
     std::fs::write("BENCH_serve.json", doc.to_string())?;

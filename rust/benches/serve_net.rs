@@ -31,6 +31,7 @@ use macformer::attn::{Backend, Kernel};
 use macformer::fastpath;
 use macformer::serve::loadgen::{run, LoadConfig};
 use macformer::serve::net::{run_socket, NetConfig};
+use macformer::serve::obs;
 use macformer::serve::{EngineSpec, FaultPlan, ServeConfig, Server};
 use macformer::util::json::Value;
 
@@ -50,6 +51,9 @@ where
 
 fn main() -> Result<()> {
     macformer::util::logging::init();
+    // clean slate so the per-stage breakdown below covers exactly this
+    // run (both arms share the process-wide stage histograms)
+    obs::reset();
     let streams = env_usize("MACFORMER_SERVE_STREAMS", 16);
     let tokens = env_usize("MACFORMER_SERVE_TOKENS", 48);
     let kernel: Kernel = env_parse("MACFORMER_BENCH_KERNEL", Kernel::Exp)?;
@@ -141,6 +145,9 @@ fn main() -> Result<()> {
         ("stream_errors", Value::num(inproc.stream_errors as f64 + socket.stream_errors as f64)),
         ("faulted_streams", Value::num(socket.faulted_streams as f64)),
         ("poisoned_streams", Value::num(socket.poisoned_streams as f64)),
+        // per-stage latency breakdown across both arms (the socket arm
+        // adds the HTTP stages: accept, head/body parse, SSE writes)
+        ("stage_breakdown", obs::stage_breakdown_json()),
         ("inproc", inproc.to_json()),
         ("socket", socket.to_json()),
     ]);

@@ -188,6 +188,7 @@ fn run_claimed(pool: &Pool, task: Task, index: usize) {
 }
 
 fn worker_loop(pool: &'static Pool) {
+    crate::serve::obs::register_thread();
     loop {
         let (task, index) = {
             let mut st = pool.state.lock().unwrap();

@@ -18,7 +18,9 @@
 //!                                recovers them on restart, SIGTERM drains
 //!                                gracefully), --connect ADDR drives a running
 //!                                gateway over TCP, --kill-restart --data-dir
-//!                                PATH runs the crash-restart chaos drill
+//!                                PATH runs the crash-restart chaos drill,
+//!                                --trace-out FILE dumps the recorded stage
+//!                                spans as Chrome trace JSON on exit
 //!   datagen                      dump synthetic dataset samples
 //!
 //! Every run prints a human summary to stdout and (with --out-json) a
@@ -315,10 +317,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sync_every = args.u64_flag("sync-every", 32).map_err(|e| anyhow!(e))?;
     let checkpoint_every = args.u64_flag("checkpoint-every", 1024).map_err(|e| anyhow!(e))?;
     let kill_restart = args.switch("kill-restart");
+    let trace_out = args.opt_flag("trace-out");
     args.check_unknown().map_err(|e| anyhow!(e))?;
     if listen.is_some() && connect.is_some() {
         bail!("--listen and --connect are mutually exclusive");
     }
+    // --trace-out: dump every recorded stage span as Chrome trace JSON
+    // (chrome://tracing / Perfetto) when the run ends. Written on the
+    // degraded paths too — a trace of a bad run is the useful one.
+    let write_trace = || -> Result<()> {
+        if let Some(path) = &trace_out {
+            macformer::serve::obs::trace::write(std::path::Path::new(path))?;
+            log::info!("stage trace written to {path}");
+        }
+        Ok(())
+    };
 
     // --kill-restart: SIGKILL a child gateway mid-load, restart it on
     // the same data-dir, verify recovery bit-identical
@@ -390,6 +403,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if term || server.drain_requested() {
                 eprintln!("draining: finishing in-flight work and checkpointing");
                 server.drain();
+                write_trace()?;
                 return Ok(());
             }
             std::thread::sleep(std::time::Duration::from_millis(50));
@@ -403,6 +417,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(path) = out_json {
             std::fs::write(&path, report.to_json().to_string())?;
         }
+        write_trace()?;
         if report.verified == Some(false)
             || report.stream_errors > 0
             || report.poisoned_streams > 0
@@ -425,6 +440,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(path) = out_json {
         std::fs::write(&path, report.to_json().to_string())?;
     }
+    write_trace()?;
     // Planned chaos casualties (faulted_streams) are not a failure;
     // poison escaping isolation or any unexpected stream error is.
     if report.verified == Some(false) || report.stream_errors > 0 || report.poisoned_streams > 0 {

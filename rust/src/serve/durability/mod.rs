@@ -53,6 +53,7 @@ use std::fs::{File, OpenOptions};
 use std::io::{Result, Write};
 use std::path::{Path, PathBuf};
 
+use crate::serve::obs::{self, Stage};
 use journal::OpRef;
 
 /// Configuration for the durable store. `Default` is tuned for the
@@ -190,28 +191,38 @@ impl Store {
 
     /// Journal a stream open. Call [`Store::sync`] before replying.
     pub fn record_open(&mut self, sid: u64) {
-        journal::append_op(&mut self.buf, &mut self.scratch, OpRef::Open { sid });
+        self.append(OpRef::Open { sid });
     }
 
     /// Journal a prompt prefill. Call [`Store::sync`] before replying.
     pub fn record_prefill(&mut self, sid: u64, q: &[f32], k: &[f32], v: &[f32]) {
-        journal::append_op(&mut self.buf, &mut self.scratch, OpRef::Prefill { sid, q, k, v });
+        self.append(OpRef::Prefill { sid, q, k, v });
     }
 
     /// Journal one accepted decode token (group-committed by
     /// [`Store::maybe_sync`]).
     pub fn record_token(&mut self, sid: u64, q: &[f32], k: &[f32], v: &[f32]) {
-        journal::append_op(&mut self.buf, &mut self.scratch, OpRef::Token { sid, q, k, v });
+        self.append(OpRef::Token { sid, q, k, v });
     }
 
     /// Journal a stream close. Call [`Store::sync`] before replying.
     pub fn record_close(&mut self, sid: u64) {
-        journal::append_op(&mut self.buf, &mut self.scratch, OpRef::Close { sid });
+        self.append(OpRef::Close { sid });
+    }
+
+    /// Encode one op into the group-commit buffer, under a
+    /// `journal_append` span, counting the appended bytes.
+    fn append(&mut self, op: OpRef<'_>) {
+        let _span = obs::span(Stage::JournalAppend);
+        let before = self.buf.len();
+        journal::append_op(&mut self.buf, &mut self.scratch, op);
+        obs::add_journal_bytes((self.buf.len() - before) as u64);
     }
 
     /// Flush and fsync every buffered frame.
     pub fn sync(&mut self, tick_no: u64) -> Result<()> {
         if !self.buf.is_empty() {
+            let _span = obs::span(Stage::Fsync);
             self.file.write_all(&self.buf)?;
             self.file.sync_data()?;
             self.buf.clear();
@@ -241,6 +252,7 @@ impl Store {
     /// applying every op currently buffered, so the buffer is subsumed
     /// by the image and dropped instead of synced.
     pub fn write_checkpoint(&mut self, image: &CheckpointImage, tick_no: u64) -> Result<()> {
+        let _span = obs::span(Stage::Checkpoint);
         let mut bytes = Vec::new();
         image.encode_into(&mut bytes, &mut self.scratch);
 

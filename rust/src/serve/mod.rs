@@ -58,6 +58,15 @@
 //!   restarted process replays the log through the normal fold path,
 //!   so recovered streams are bit-identical to a process that never
 //!   died — on either SIMD arm.
+//! * [`obs`] — zero-alloc, dependency-free observability threaded
+//!   through the whole request path: per-stage spans (accept, parse,
+//!   ingress wait, journal append, fsync, tick gather, phi GEMM,
+//!   state fold, SSE write, checkpoint) recorded into per-thread ring
+//!   buffers + lock-free log2 histograms, a hand-rolled Prometheus
+//!   `GET /metrics` endpoint ([`obs::prom`]), and Chrome-trace export
+//!   ([`obs::trace`]) with request IDs threaded from the
+//!   `x-request-id` HTTP header through the scheduler to the
+//!   response. `benches/serve_obs.rs` gates the overhead at 5%.
 //!
 //! # Quickstart over the wire
 //!
@@ -93,6 +102,33 @@
 //!
 //! # close the stream
 //! curl -s -X DELETE http://127.0.0.1:8077/v1/streams/s-0
+//! ```
+//!
+//! # Observability quickstart
+//!
+//! Scrape Prometheus text exposition (every [`Telemetry`] counter,
+//! per-stage latency histograms, durability + HTTP-class counters):
+//!
+//! ```text
+//! curl -s http://127.0.0.1:8077/metrics
+//! # macformer_tokens_total 4096
+//! # macformer_stage_duration_seconds_bucket{stage="state_fold",le="0.000002048"} 129
+//! # macformer_http_responses_total{class="5xx"} 0
+//! # ...
+//! ```
+//!
+//! Requests may carry an `x-request-id` header; the server echoes it
+//! on the response and threads it through every stage span it covers.
+//! Start the server with `--trace-out FILE` and the span rings are
+//! dumped at drain as Chrome-trace JSON — load the file in
+//! `chrome://tracing` (or Perfetto) to walk one slow request across
+//! the worker, engine, and compute threads:
+//!
+//! ```text
+//! macformer serve --listen 127.0.0.1:8077 --trace-out trace.json
+//! curl -s -X POST -H 'x-request-id: req-42' \
+//!   http://127.0.0.1:8077/v1/streams
+//! kill -TERM %1   # drain; trace.json now holds the span rings
 //! ```
 //!
 //! Errors are JSON with the stable [`ServeError::code`] token, e.g.
@@ -207,6 +243,7 @@ use std::fmt;
 pub mod durability;
 pub mod loadgen;
 pub mod net;
+pub mod obs;
 pub mod pool;
 pub mod resilience;
 pub mod scheduler;

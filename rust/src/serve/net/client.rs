@@ -113,6 +113,10 @@ struct Http {
     buf: Vec<u8>,
     pos: usize,
     out: String,
+    /// Sent as `x-request-id` on every request when non-empty, so the
+    /// server's stage spans (and an exported trace) carry the stream's
+    /// identity end to end.
+    req_id: String,
 }
 
 struct Head {
@@ -127,7 +131,13 @@ impl Http {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_read_timeout(Some(Duration::from_secs(30)))?;
         stream.set_nodelay(true)?;
-        Ok(Http { stream, buf: Vec::with_capacity(4096), pos: 0, out: String::new() })
+        Ok(Http {
+            stream,
+            buf: Vec::with_capacity(4096),
+            pos: 0,
+            out: String::new(),
+            req_id: String::new(),
+        })
     }
 
     fn send(&mut self, method: &str, path: &str, body: &str) -> Result<()> {
@@ -138,6 +148,9 @@ impl Http {
             "{method} {path} HTTP/1.1\r\nHost: macformer\r\nContent-Length: {}\r\n",
             body.len()
         );
+        if !self.req_id.is_empty() {
+            let _ = write!(self.out, "x-request-id: {}\r\n", self.req_id);
+        }
         if !body.is_empty() {
             self.out.push_str("Content-Type: application/json\r\n");
         }
@@ -418,6 +431,7 @@ fn drive_stream(
     };
     let salt = i as u64;
     let mut http = Http::connect(addr)?;
+    http.req_id = format!("s{i}");
 
     // open
     let (head, resp) =
@@ -1196,6 +1210,7 @@ fn drive_to_kill(
     };
     let result = (|| -> Result<()> {
         let mut http = Http::connect(addr)?;
+        http.req_id = format!("s{i}");
         let (head, resp) =
             request_with_retry(&mut http, "POST", "/v1/streams", "{}", &mut out.http, i as u64)?;
         if head.status != 201 {
@@ -1241,6 +1256,7 @@ fn resume_stream(addr: &str, cfg: &LoadConfig, i: usize, sid: &str, tokens: &[f3
     let counter = AtomicU64::new(0); // nobody watches phase-2 progress
     let result = (|| -> Result<()> {
         let mut http = Http::connect(addr)?;
+        http.req_id = format!("r{i}");
         let path = format!("/v1/streams/{sid}");
         let (head, resp) =
             request_with_retry(&mut http, "GET", &path, "", &mut out.http, i as u64)?;

@@ -32,6 +32,7 @@ use crate::attn::{AttentionSession, AttentionSpec};
 use crate::serve::durability::{
     CheckpointImage, CheckpointStream, DurabilityConfig, JournalOp, Recovery, Store,
 };
+use crate::serve::obs::{self, Stage};
 use crate::serve::resilience::{ResilienceConfig, SessionId, StreamStatus, Supervisor};
 use crate::serve::{ServeConfig, ServeError, Telemetry};
 
@@ -58,8 +59,24 @@ pub enum Cmd {
         k: Vec<f32>,
         v: Vec<f32>,
         reply: Sender<Result<(usize, Vec<f32>), ServeError>>,
+        /// Hashed `x-request-id` (0 = none) — spans the engine records
+        /// for this request carry it into `--trace-out`.
+        req: u64,
+        /// [`obs::now_ns`] at enqueue (0 = obs disabled); the engine
+        /// records the `ingress_wait` span from it at pickup.
+        enq_ns: u64,
     },
-    Decode { sid: u64, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>, events: Sender<Event> },
+    Decode {
+        sid: u64,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        events: Sender<Event>,
+        /// Hashed `x-request-id` (0 = none); same role as on `Prefill`.
+        req: u64,
+        /// Enqueue timestamp; same role as on `Prefill`.
+        enq_ns: u64,
+    },
     ArmFault { sid: u64, reply: Sender<Result<(), ServeError>> },
     Hibernate { sid: u64, reply: Sender<Result<(), ServeError>> },
     Health { reply: Sender<Health> },
@@ -105,6 +122,9 @@ pub struct Health {
 struct Job {
     sid: u64,
     id: SessionId,
+    /// Hashed `x-request-id` (0 = none) — tags the engine-side spans
+    /// (journal append) this job generates.
+    req: u64,
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
@@ -155,6 +175,7 @@ pub(super) fn run(
     ingress: Receiver<Cmd>,
     ready: Sender<Result<(), String>>,
 ) {
+    obs::register_thread();
     if let Err(e) = serve.validate() {
         let _ = ready.send(Err(e.to_string()));
         return;
@@ -286,7 +307,9 @@ impl Engine<'_> {
                     // journal the accepted token (group-committed by
                     // pump_durability at the end of the loop turn)
                     if let Some(store) = self.store.as_mut() {
+                        obs::set_request_id(job.req);
                         store.record_token(job.sid, q, k, v);
+                        obs::set_request_id(0);
                     }
                     job.in_flight = true;
                     submitted = true;
@@ -416,7 +439,11 @@ impl Engine<'_> {
                 }
                 let _ = reply.send(res);
             }
-            Cmd::Prefill { sid, q, k, v, reply } => {
+            Cmd::Prefill { sid, q, k, v, reply, req, enq_ns } => {
+                record_ingress_wait(enq_ns, req);
+                // prefill computes on this thread, so its GEMM/fold and
+                // journal spans can all carry the request id
+                obs::set_request_id(req);
                 let res = match self.sessions.get(&sid) {
                     None => Err(ServeError::UnknownStream),
                     Some(_) if self.busy.contains(&sid) => Err(ServeError::StreamBusy),
@@ -432,9 +459,13 @@ impl Engine<'_> {
                     }
                     self.sync_store();
                 }
+                obs::set_request_id(0);
                 let _ = reply.send(res);
             }
-            Cmd::Decode { sid, q, k, v, events } => self.start_decode(sid, q, k, v, events),
+            Cmd::Decode { sid, q, k, v, events, req, enq_ns } => {
+                record_ingress_wait(enq_ns, req);
+                self.start_decode(sid, q, k, v, events, req)
+            }
             Cmd::ArmFault { sid, reply } => {
                 let res = match self.sessions.get(&sid) {
                     None => Err(ServeError::UnknownStream),
@@ -481,6 +512,7 @@ impl Engine<'_> {
         k: Vec<f32>,
         v: Vec<f32>,
         events: Sender<Event>,
+        req: u64,
     ) {
         let Some(&id) = self.sessions.get(&sid) else {
             let _ = events.send(Event::Reject(ServeError::UnknownStream));
@@ -512,6 +544,7 @@ impl Engine<'_> {
         self.jobs.push(Job {
             sid,
             id,
+            req,
             q,
             k,
             v,
@@ -646,6 +679,7 @@ impl Engine<'_> {
         for op in &rec.ops {
             self.apply_op(op).map_err(|e| format!("journal replay for s-{}: {e}", op.sid()))?;
         }
+        obs::record_recovery(replayed as u64, rec.truncated_bytes as u64);
         // a recovered wire id must never be handed out twice
         if let Some(&max) = self.sessions.keys().max() {
             self.next_sid = self.next_sid.max(max + 1);
@@ -700,6 +734,16 @@ impl Engine<'_> {
             .map_err(|e| ServeError::Session(format!("replay tick failed: {e:#}")))?;
         let mut out = vec![0.0f32; self.dv];
         self.sup.take_output(id, &mut out)
+    }
+}
+
+/// Record how long a command sat in the bounded ingress queue between
+/// the worker's enqueue and the engine picking it up. `enq_ns == 0`
+/// means the worker enqueued with obs disabled — record nothing.
+#[inline]
+fn record_ingress_wait(enq_ns: u64, req: u64) {
+    if enq_ns != 0 {
+        obs::record_span(Stage::IngressWait, enq_ns, obs::now_ns(), req);
     }
 }
 

@@ -24,6 +24,12 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
+use crate::serve::obs::{self, Stage};
+
+/// Longest `x-request-id` value the server retains (longer values are
+/// truncated; the bound keeps the per-connection buffer fixed-size).
+pub const MAX_REQUEST_ID: usize = 64;
+
 /// Connection-level limits. Defaults are generous for the API's real
 /// payloads and tight against abuse.
 #[derive(Debug, Clone, Copy)]
@@ -128,11 +134,37 @@ pub struct Conn {
     cfg: HttpConfig,
     buf: Vec<u8>,
     out: String,
+    /// Sanitized `x-request-id` bytes of the request being served
+    /// (printable ASCII only; fixed buffer, no allocation per request).
+    req_id: [u8; MAX_REQUEST_ID],
+    req_id_len: usize,
+    /// FNV hash of the id ([`obs::hash_request_id`]; 0 = none).
+    req_hash: u64,
 }
 
 impl Conn {
     pub fn new(stream: TcpStream, cfg: HttpConfig) -> Conn {
-        Conn { stream, cfg, buf: Vec::with_capacity(4096), out: String::with_capacity(1024) }
+        Conn {
+            stream,
+            cfg,
+            buf: Vec::with_capacity(4096),
+            out: String::with_capacity(1024),
+            req_id: [0; MAX_REQUEST_ID],
+            req_id_len: 0,
+            req_hash: 0,
+        }
+    }
+
+    /// The sanitized `x-request-id` of the current request (empty when
+    /// the client sent none).
+    pub fn request_id(&self) -> &[u8] {
+        &self.req_id[..self.req_id_len]
+    }
+
+    /// Hashed request id ([`obs::hash_request_id`]; 0 = none) —
+    /// threaded through the engine so spans across threads correlate.
+    pub fn request_id_hash(&self) -> u64 {
+        self.req_hash
     }
 
     /// The request path for `req` (ASCII; enforced during parse).
@@ -148,7 +180,14 @@ impl Conn {
     /// Read one full request (head + body) within the deadline.
     pub fn read_request(&mut self) -> Result<Request, HttpError> {
         self.buf.clear();
+        self.req_id_len = 0;
+        self.req_hash = 0;
         let start = Instant::now();
+        let obs_on = obs::enabled();
+        // The head span opens at the first byte, not at function entry:
+        // a keep-alive connection sits idle here between requests, and
+        // that wait is not parse time.
+        let mut head_t0 = 0u64;
 
         // --- head: read until \r\n\r\n, bounded by max_head ---
         let head_end = loop {
@@ -164,6 +203,9 @@ impl Conn {
                 return Err(HttpError::HeadTooLarge);
             }
             self.fill(start, self.buf.is_empty())?;
+            if obs_on && head_t0 == 0 && !self.buf.is_empty() {
+                head_t0 = obs::now_ns();
+            }
         };
 
         // --- parse request line + the headers we honor ---
@@ -218,7 +260,25 @@ impl Conn {
                 && value.eq_ignore_ascii_case("100-continue")
             {
                 expect_continue = true;
+            } else if name.eq_ignore_ascii_case("x-request-id") {
+                // keep printable ASCII only (the value is echoed back
+                // verbatim in response headers), bounded by the buffer
+                let mut n = 0;
+                for &b in value.as_bytes() {
+                    if n == MAX_REQUEST_ID {
+                        break;
+                    }
+                    if (0x21..=0x7e).contains(&b) {
+                        self.req_id[n] = b;
+                        n += 1;
+                    }
+                }
+                self.req_id_len = n;
+                self.req_hash = obs::hash_request_id(&self.req_id[..n]);
             }
+        }
+        if obs_on {
+            obs::record_span(Stage::HeadParse, head_t0, obs::now_ns(), self.req_hash);
         }
 
         // --- body: bounded by max_body, within the same deadline ---
@@ -231,9 +291,11 @@ impl Conn {
             return Err(HttpError::BodyTooLarge { limit: self.cfg.max_body });
         }
         if expect_continue && body_len > 0 {
+            obs::record_http_response(100);
             self.stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").map_err(HttpError::Io)?;
         }
         let body_start = head_end + 4;
+        let body_t0 = if obs_on { obs::now_ns() } else { 0 };
         while self.buf.len() < body_start + body_len {
             self.fill(start, false)?;
         }
@@ -241,6 +303,9 @@ impl Conn {
             // pipelined extra bytes: this server answers one request
             // per read, so trailing bytes are a protocol error
             return Err(HttpError::BadRequest("unexpected bytes after body"));
+        }
+        if obs_on {
+            obs::record_span(Stage::BodyParse, body_t0, obs::now_ns(), self.req_hash);
         }
         let body = (body_start, body_start + body_len);
         Ok(Request { method, path: path_range, body, keep_alive })
@@ -296,12 +361,25 @@ impl Conn {
             "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
             body.len()
         );
+        self.echo_request_id();
         for (name, value) in extra {
             let _ = write!(self.out, "{name}: {value}\r\n");
         }
         self.out.push_str("\r\n");
         self.out.push_str(body);
+        obs::record_http_response(status);
         self.stream.write_all(self.out.as_bytes()).map_err(HttpError::Io)
+    }
+
+    /// Echo the client's `x-request-id` (sanitized) onto the response
+    /// being assembled in `out`.
+    fn echo_request_id(&mut self) {
+        if self.req_id_len > 0 {
+            self.out.push_str("x-request-id: ");
+            // printable ASCII by construction, so always valid UTF-8
+            self.out.push_str(std::str::from_utf8(&self.req_id[..self.req_id_len]).unwrap_or(""));
+            self.out.push_str("\r\n");
+        }
     }
 
     /// Start a chunked `200` response (the SSE token stream).
@@ -310,14 +388,18 @@ impl Conn {
         self.out.clear();
         let _ = write!(
             self.out,
-            "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nCache-Control: no-store\r\n\r\n"
+            "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nCache-Control: no-store\r\n"
         );
+        self.echo_request_id();
+        self.out.push_str("\r\n");
+        obs::record_http_response(200);
         self.stream.write_all(self.out.as_bytes()).map_err(HttpError::Io)
     }
 
     /// Write one chunk (one SSE event).
     pub fn write_chunk(&mut self, payload: &str) -> Result<(), HttpError> {
         use std::fmt::Write as _;
+        let _span = obs::span(Stage::SseWrite);
         self.out.clear();
         let _ = write!(self.out, "{:x}\r\n{payload}\r\n", payload.len());
         self.stream.write_all(self.out.as_bytes()).map_err(HttpError::Io)

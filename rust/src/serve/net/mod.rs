@@ -29,6 +29,7 @@
 //! | Route | Body | Answer |
 //! |---|---|---|
 //! | `GET /healthz` | — | `200 {"status":"ready",...}` — or `503` with `"starting"` / `"draining"` |
+//! | `GET /metrics` | — | `200` Prometheus text exposition ([`crate::serve::obs::prom`]) |
 //! | `GET /v1/spec` | — | `200` kernel/dims/seed (clients verify against it) |
 //! | `POST /v1/streams` | `{}` | `201 {"stream":"s-1"}` — `503 draining` + `Retry-After` mid-drain |
 //! | `GET /v1/streams/{id}` | — | `200 {"stream":..,"status":..,"tokens":n}` (crash-recovery resume probe) |
@@ -61,6 +62,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::serve::obs::{self, Stage};
 use crate::serve::resilience::StreamStatus;
 use crate::serve::{DurabilityConfig, ResilienceConfig, ServeConfig, ServeError};
 use crate::util::json::Value;
@@ -311,6 +313,7 @@ impl Drop for Server {
 /// One worker: accept connections and serve keep-alive request loops
 /// until the stop flag flips.
 fn worker_loop(listener: TcpListener, shared: Arc<Shared>, http: HttpConfig) {
+    obs::register_thread();
     loop {
         if shared.stop.load(Ordering::SeqCst) {
             return;
@@ -325,11 +328,19 @@ fn worker_loop(listener: TcpListener, shared: Arc<Shared>, http: HttpConfig) {
                 continue;
             }
         };
+        // span from accept *returning* to the connection being ready —
+        // wrapping the blocking accept itself would record idle time
+        let obs_on = obs::enabled();
+        let t_accept = if obs_on { obs::now_ns() } else { 0 };
         if shared.stop.load(Ordering::SeqCst) {
             return;
         }
         let _ = stream.set_nodelay(true);
-        serve_connection(Conn::new(stream, http), &shared);
+        let conn = Conn::new(stream, http);
+        if obs_on {
+            obs::record_span(Stage::Accept, t_accept, obs::now_ns(), 0);
+        }
+        serve_connection(conn, &shared);
     }
 }
 
@@ -350,7 +361,11 @@ fn serve_connection(mut conn: Conn, shared: &Shared) {
             }
         };
         let keep_alive = req.keep_alive;
+        // tag this worker thread's spans (SSE writes, etc.) with the
+        // request id until the next request replaces it
+        obs::set_request_id(conn.request_id_hash());
         let served = dispatch(&mut conn, &req, shared, &mut body, &mut scratch);
+        obs::set_request_id(0);
         if served.is_err() || !keep_alive {
             return;
         }
@@ -360,6 +375,7 @@ fn serve_connection(mut conn: Conn, shared: &Shared) {
 /// What `/v1/streams/...` names: the stream plus an optional action.
 enum Route {
     Health,
+    Metrics,
     Spec,
     Streams,
     Drain,
@@ -377,6 +393,7 @@ enum StreamAction {
 fn parse_route(path: &str) -> Route {
     match path {
         "/healthz" => return Route::Health,
+        "/metrics" => return Route::Metrics,
         "/v1/spec" => return Route::Spec,
         "/v1/streams" => return Route::Streams,
         "/admin/drain" => return Route::Drain,
@@ -415,6 +432,7 @@ fn dispatch(
     let route = parse_route(conn.path(req));
     match (req.method, route) {
         (Method::Get, Route::Health) => health(conn, shared, scratch),
+        (Method::Get, Route::Metrics) => metrics(conn, shared, scratch),
         (Method::Get, Route::Spec) => spec(conn, shared),
         (Method::Post, Route::Streams) => open_stream(conn, shared, scratch),
         (Method::Post, Route::Drain) => admin_drain(conn, shared),
@@ -524,6 +542,55 @@ fn health(conn: &mut Conn, shared: &Shared, scratch: &mut String) -> Result<(), 
                     conn.write_response(200, "OK", "application/json", &doc.to_string(), &[])
                 }
             }
+        }
+    }
+}
+
+/// `GET /metrics`: Prometheus text exposition ([`obs::prom`]) — every
+/// [`Telemetry`](crate::serve::Telemetry) counter, the per-stage
+/// duration histograms, durability counters, and HTTP response
+/// classes, plus live engine gauges from the same health snapshot the
+/// `/healthz` handler uses. Answers `503` while the engine is still
+/// starting (recovering), like `/healthz`.
+fn metrics(conn: &mut Conn, shared: &Shared, scratch: &mut String) -> Result<(), HttpError> {
+    if shared.readiness() == READY_STARTING {
+        return conn.write_response(
+            503,
+            "Service Unavailable",
+            "application/json",
+            "{\"status\":\"starting\"}",
+            &[("Retry-After", "1")],
+        );
+    }
+    let (reply, rx) = channel();
+    if let Err(e) = engine::try_enqueue(&shared.ingress, Cmd::Health { reply }) {
+        return ingress_error(conn, e, scratch);
+    }
+    match rx.recv() {
+        Err(_) => engine_gone(conn, scratch),
+        Ok(h) => {
+            let body = obs::prom::render(
+                &h.telemetry,
+                &[
+                    (
+                        "macformer_active_streams",
+                        "Streams currently holding a pool slot.",
+                        h.active_streams as f64,
+                    ),
+                    (
+                        "macformer_hibernated_streams",
+                        "Streams hibernated to the spill arena.",
+                        h.hibernated_streams as f64,
+                    ),
+                    (
+                        "macformer_decode_jobs",
+                        "Decode jobs in flight on the engine.",
+                        h.jobs as f64,
+                    ),
+                    ("macformer_tick_no", "Engine tick counter.", h.tick_no as f64),
+                ],
+            );
+            conn.write_response(200, "OK", obs::prom::CONTENT_TYPE, &body, &[])
         }
     }
 }
@@ -655,6 +722,8 @@ fn prefill(
         k: std::mem::take(&mut body.k),
         v: std::mem::take(&mut body.v),
         reply,
+        req: conn.request_id_hash(),
+        enq_ns: if obs::enabled() { obs::now_ns() } else { 0 },
     };
     if let Err(e) = engine::try_enqueue(&shared.ingress, cmd) {
         return ingress_error(conn, e, scratch);
@@ -692,6 +761,8 @@ fn decode(
         k: std::mem::take(&mut body.k),
         v: std::mem::take(&mut body.v),
         events,
+        req: conn.request_id_hash(),
+        enq_ns: if obs::enabled() { obs::now_ns() } else { 0 },
     };
     if let Err(e) = engine::try_enqueue(&shared.ingress, cmd) {
         return ingress_error(conn, e, scratch);

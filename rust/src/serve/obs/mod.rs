@@ -1,0 +1,638 @@
+//! Observability for the serve stack: per-stage spans, lock-free
+//! stage histograms, and the global counters behind `GET /metrics`
+//! and `--trace-out`.
+//!
+//! The design constraint is the same one the scheduler lives under:
+//! the hot path makes **zero heap allocations** in steady state
+//! (`tests/alloc_free.rs` enforces it with a counting global
+//! allocator). Recording a span therefore touches only
+//!
+//! * a fixed set of global [`AtomicHist`]s (relaxed atomics — the
+//!   HTTP workers, the engine thread, and the fastpath pool all
+//!   record concurrently, and `Telemetry` is `&mut`-owned by the
+//!   pool, so the stage histograms cannot live there), and
+//! * a per-thread fixed-capacity span ring behind a `thread_local`
+//!   `Arc` — registered (one bounded allocation) the first time a
+//!   thread records, then overwritten in place forever after.
+//!
+//! Stage taxonomy (one [`Stage`] per request-path phase):
+//!
+//! | stage | where it is recorded |
+//! |---|---|
+//! | `accept` | gateway worker: accepted socket → connection ready |
+//! | `head_parse` | HTTP head read + parse (`net/http.rs`) |
+//! | `body_parse` | HTTP body read (`net/http.rs`) |
+//! | `ingress_wait` | command enqueue (worker) → engine pickup |
+//! | `journal_append` | durability: op encoded into the journal buffer |
+//! | `fsync` | durability: journal write + `sync_data` |
+//! | `tick_gather` | scheduler: gather/scale rows into scratch |
+//! | `phi_gemm` | scheduler: the two `phi_rows_into` feature steps |
+//! | `state_fold` | scheduler: the parallel `(S, z)` fold |
+//! | `sse_write` | gateway worker: one SSE frame onto the socket |
+//! | `checkpoint` | durability: full checkpoint write + rotate |
+//!
+//! Request IDs: the gateway hashes the `x-request-id` header into a
+//! `u64` ([`hash_request_id`]) and threads it through the ingress
+//! queue, so engine-side spans (ingress wait, journal append) carry
+//! the same id as the HTTP worker's spans — `--trace-out` then shows
+//! one request crossing threads. [`set_request_id`] installs the id
+//! in a thread-local; [`span`] picks it up implicitly.
+//!
+//! Everything here is dependency-free, like the rest of the serve
+//! stack. The Prometheus encoder lives in [`prom`], the Chrome-trace
+//! exporter in [`trace`].
+
+pub mod prom;
+pub mod trace;
+
+use std::cell::{Cell, OnceCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+pub use super::telemetry::BUCKETS;
+
+/// The fixed stage taxonomy. Discriminants index the global histogram
+/// table, so they must stay dense from zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    Accept = 0,
+    HeadParse = 1,
+    BodyParse = 2,
+    IngressWait = 3,
+    JournalAppend = 4,
+    Fsync = 5,
+    TickGather = 6,
+    PhiGemm = 7,
+    StateFold = 8,
+    SseWrite = 9,
+    Checkpoint = 10,
+}
+
+/// Number of stages (the size of the global histogram table).
+pub const STAGES: usize = 11;
+
+impl Stage {
+    pub const ALL: [Stage; STAGES] = [
+        Stage::Accept,
+        Stage::HeadParse,
+        Stage::BodyParse,
+        Stage::IngressWait,
+        Stage::JournalAppend,
+        Stage::Fsync,
+        Stage::TickGather,
+        Stage::PhiGemm,
+        Stage::StateFold,
+        Stage::SseWrite,
+        Stage::Checkpoint,
+    ];
+
+    /// Stable label value for metrics and traces.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::HeadParse => "head_parse",
+            Stage::BodyParse => "body_parse",
+            Stage::IngressWait => "ingress_wait",
+            Stage::JournalAppend => "journal_append",
+            Stage::Fsync => "fsync",
+            Stage::TickGather => "tick_gather",
+            Stage::PhiGemm => "phi_gemm",
+            Stage::StateFold => "state_fold",
+            Stage::SseWrite => "sse_write",
+            Stage::Checkpoint => "checkpoint",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the monotonic clock
+// ---------------------------------------------------------------------------
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process-wide observability epoch (the first
+/// call wins the race to define t=0). Allocation-free.
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------------
+// per-stage histograms (lock-free, log2 buckets shared with Telemetry)
+// ---------------------------------------------------------------------------
+
+/// A log2 latency histogram every thread can record into concurrently.
+/// Bucket `b` covers `[2^b, 2^(b+1))` ns — the same bucketing as
+/// `Telemetry`'s latency histogram, so `/metrics` exposes one
+/// consistent `le` ladder. `bucket_max` tracks the exact observed
+/// maximum per bucket, which is what keeps reported percentiles
+/// honest (never above a value that actually occurred).
+struct AtomicHist {
+    buckets: [AtomicU64; BUCKETS],
+    bucket_max: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+
+impl AtomicHist {
+    const fn new() -> AtomicHist {
+        AtomicHist {
+            buckets: [ATOMIC_ZERO; BUCKETS],
+            bucket_max: [ATOMIC_ZERO; BUCKETS],
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn record(&self, ns: u64) {
+        let idx = (63 - ns.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.bucket_max[idx].fetch_max(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        for b in &self.bucket_max {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot {
+            buckets: [0; BUCKETS],
+            bucket_max: [0; BUCKETS],
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        };
+        for i in 0..BUCKETS {
+            s.buckets[i] = self.buckets[i].load(Ordering::Relaxed);
+            s.bucket_max[i] = self.bucket_max[i].load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+static HISTS: [AtomicHist; STAGES] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const H: AtomicHist = AtomicHist::new();
+    [H; STAGES]
+};
+
+/// A point-in-time copy of one histogram, safe to read at leisure.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub bucket_max: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistSnapshot {
+    /// The `p`-th percentile in seconds, clamped to the exact maximum
+    /// observed inside the bucket the rank lands in — never the bucket
+    /// upper bound (which over-reports by up to 2x).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return self.bucket_max[idx].clamp(1, self.max_ns.max(1)) as f64 * 1e-9;
+            }
+        }
+        self.max_ns as f64 * 1e-9
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 * 1e-9 / self.count as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("count", Value::num(self.count as f64)),
+            ("sum_s", Value::num(self.sum_ns as f64 * 1e-9)),
+            ("mean_s", Value::num(self.mean())),
+            ("p50_s", Value::num(self.percentile(50.0))),
+            ("p90_s", Value::num(self.percentile(90.0))),
+            ("p99_s", Value::num(self.percentile(99.0))),
+            ("max_s", Value::num(self.max_ns as f64 * 1e-9)),
+        ])
+    }
+}
+
+/// Snapshot one stage's histogram.
+pub fn snapshot(stage: Stage) -> HistSnapshot {
+    HISTS[stage as usize].snapshot()
+}
+
+/// The per-stage latency breakdown as one JSON object — the section
+/// `serve_load`/`serve_net`/`serve_obs` bench reports embed so a
+/// throughput regression can be localized to a stage.
+pub fn stage_breakdown_json() -> Value {
+    Value::Obj(
+        Stage::ALL.iter().map(|s| (s.name().to_string(), snapshot(*s).to_json())).collect(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// recording
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Is span recording on? (The `serve_obs` bench times the off arm.)
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Globally enable/disable span recording. Counters such as journal
+/// bytes and HTTP response classes keep counting either way — only
+/// the timestamp/histogram/ring work is gated.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+thread_local! {
+    static CURRENT_REQ: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Install the current request id on this thread (0 = none). Spans
+/// recorded afterwards carry it into the trace rings.
+#[inline]
+pub fn set_request_id(req: u64) {
+    CURRENT_REQ.with(|c| c.set(req));
+}
+
+/// The request id installed on this thread (0 = none).
+#[inline]
+pub fn request_id() -> u64 {
+    CURRENT_REQ.with(|c| c.get())
+}
+
+/// FNV-1a hash of an `x-request-id` header value into the `u64` form
+/// threaded through the engine. Empty input hashes to 0 ("no id").
+pub fn hash_request_id(bytes: &[u8]) -> u64 {
+    if bytes.is_empty() {
+        return 0;
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h.max(1)
+}
+
+/// Record one completed span: histogram + this thread's trace ring.
+/// Allocation-free except the first time a thread records (its ring
+/// is registered once and reused forever).
+#[inline]
+pub fn record_span(stage: Stage, start_ns: u64, end_ns: u64, req: u64) {
+    if !enabled() {
+        return;
+    }
+    let dur_ns = end_ns.saturating_sub(start_ns);
+    HISTS[stage as usize].record(dur_ns);
+    with_local_ring(|ring| ring.push(SpanRecord { stage: stage as u8, start_ns, dur_ns, req }));
+}
+
+/// An in-flight span; records on drop. Use [`span`] to start one.
+pub struct Span {
+    stage: Stage,
+    start_ns: u64,
+    req: u64,
+    armed: bool,
+}
+
+/// Start a span for `stage`, tagged with this thread's current
+/// request id. When recording is disabled the guard is inert (no
+/// clock read, nothing recorded on drop).
+#[inline]
+pub fn span(stage: Stage) -> Span {
+    if !enabled() {
+        return Span { stage, start_ns: 0, req: 0, armed: false };
+    }
+    Span { stage, start_ns: now_ns(), req: request_id(), armed: true }
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if self.armed {
+            record_span(self.stage, self.start_ns, now_ns(), self.req);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-thread span rings
+// ---------------------------------------------------------------------------
+
+/// Capacity of one thread's span ring. At ~10 spans per request this
+/// keeps the last few hundred requests per thread visible in a trace
+/// dump while bounding memory at `40 KiB` per recording thread.
+pub const RING_CAP: usize = 4096;
+
+/// One recorded span, as stored in the rings and dumped by
+/// [`trace::chrome_trace_json`].
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRecord {
+    /// `Stage` discriminant (kept as `u8` to keep the record 32 bytes).
+    pub stage: u8,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Hashed `x-request-id` (0 = none).
+    pub req: u64,
+}
+
+struct RingInner {
+    spans: Vec<SpanRecord>,
+    next: usize,
+}
+
+pub(crate) struct Ring {
+    name: String,
+    inner: Mutex<RingInner>,
+}
+
+impl Ring {
+    #[inline]
+    fn push(&self, rec: SpanRecord) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if inner.spans.len() < RING_CAP {
+            inner.spans.push(rec);
+        } else {
+            let at = inner.next;
+            inner.spans[at] = rec;
+        }
+        inner.next = (inner.next + 1) % RING_CAP;
+    }
+
+    /// Chronological copy of the ring's contents.
+    fn drain_ordered(&self) -> Vec<SpanRecord> {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if inner.spans.len() < RING_CAP {
+            inner.spans.clone()
+        } else {
+            let mut out = Vec::with_capacity(RING_CAP);
+            out.extend_from_slice(&inner.spans[inner.next..]);
+            out.extend_from_slice(&inner.spans[..inner.next]);
+            out
+        }
+    }
+}
+
+static RINGS: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL_RING: OnceCell<Arc<Ring>> = const { OnceCell::new() };
+}
+
+fn register_current_thread() -> Arc<Ring> {
+    let mut rings = RINGS.lock().unwrap_or_else(|e| e.into_inner());
+    let name = std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("thread-{}", rings.len()));
+    let ring = Arc::new(Ring {
+        name,
+        inner: Mutex::new(RingInner { spans: Vec::with_capacity(RING_CAP), next: 0 }),
+    });
+    rings.push(Arc::clone(&ring));
+    ring
+}
+
+#[inline]
+fn with_local_ring(f: impl FnOnce(&Ring)) {
+    LOCAL_RING.with(|cell| f(cell.get_or_init(register_current_thread)));
+}
+
+/// Pre-register this thread's span ring (named after the thread), so
+/// the one-time registration allocation happens at thread start
+/// instead of inside the first recorded span. Long-lived threads
+/// (gateway workers, the engine, the fastpath pool) call this on
+/// spawn; it also guarantees the thread shows up in `--trace-out`
+/// even before it records anything.
+pub fn register_thread() {
+    with_local_ring(|_| {});
+}
+
+/// Every registered ring's name + chronological span copy (the trace
+/// exporter's input).
+pub(crate) fn rings_snapshot() -> Vec<(String, Vec<SpanRecord>)> {
+    let rings = RINGS.lock().unwrap_or_else(|e| e.into_inner());
+    rings.iter().map(|r| (r.name.clone(), r.drain_ordered())).collect()
+}
+
+// ---------------------------------------------------------------------------
+// durability + HTTP counters
+// ---------------------------------------------------------------------------
+
+static JOURNAL_BYTES: AtomicU64 = AtomicU64::new(0);
+static RECOVERIES: AtomicU64 = AtomicU64::new(0);
+static RECOVERY_REPLAYED_OPS: AtomicU64 = AtomicU64::new(0);
+static RECOVERY_TRUNCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+/// Responses by status class: index 1..=5 for 1xx..5xx, 0 for other.
+static HTTP_RESPONSES: [AtomicU64; 6] = [ATOMIC_ZERO; 6];
+
+/// Count bytes appended to the write-ahead journal.
+#[inline]
+pub fn add_journal_bytes(n: u64) {
+    JOURNAL_BYTES.fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn journal_bytes() -> u64 {
+    JOURNAL_BYTES.load(Ordering::Relaxed)
+}
+
+/// Count one startup recovery: how many journal ops were replayed
+/// through the fold path and how many torn-tail bytes were truncated.
+pub fn record_recovery(replayed_ops: u64, truncated_bytes: u64) {
+    RECOVERIES.fetch_add(1, Ordering::Relaxed);
+    RECOVERY_REPLAYED_OPS.fetch_add(replayed_ops, Ordering::Relaxed);
+    RECOVERY_TRUNCATED_BYTES.fetch_add(truncated_bytes, Ordering::Relaxed);
+}
+
+pub fn recoveries() -> u64 {
+    RECOVERIES.load(Ordering::Relaxed)
+}
+
+pub fn recovery_replayed_ops() -> u64 {
+    RECOVERY_REPLAYED_OPS.load(Ordering::Relaxed)
+}
+
+pub fn recovery_truncated_bytes() -> u64 {
+    RECOVERY_TRUNCATED_BYTES.load(Ordering::Relaxed)
+}
+
+/// Count one HTTP response by status class (`429` → the 4xx bucket).
+#[inline]
+pub fn record_http_response(status: u16) {
+    let class = (status / 100) as usize;
+    HTTP_RESPONSES[if (1..=5).contains(&class) { class } else { 0 }]
+        .fetch_add(1, Ordering::Relaxed);
+}
+
+/// Responses served by class: `[other, 1xx, 2xx, 3xx, 4xx, 5xx]`.
+pub fn http_responses() -> [u64; 6] {
+    let mut out = [0u64; 6];
+    for (o, c) in out.iter_mut().zip(&HTTP_RESPONSES) {
+        *o = c.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Zero every histogram, counter, and span ring (rings stay
+/// registered). The bench uses this to isolate its obs-on/obs-off
+/// arms; production never calls it.
+pub fn reset() {
+    for h in &HISTS {
+        h.reset();
+    }
+    JOURNAL_BYTES.store(0, Ordering::Relaxed);
+    RECOVERIES.store(0, Ordering::Relaxed);
+    RECOVERY_REPLAYED_OPS.store(0, Ordering::Relaxed);
+    RECOVERY_TRUNCATED_BYTES.store(0, Ordering::Relaxed);
+    for c in &HTTP_RESPONSES {
+        c.store(0, Ordering::Relaxed);
+    }
+    let rings = RINGS.lock().unwrap_or_else(|e| e.into_inner());
+    for ring in rings.iter() {
+        let mut inner = ring.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.spans.clear();
+        inner.next = 0;
+    }
+}
+
+/// Tests (here and in the submodules) that toggle the process-global
+/// `ENABLED` flag or assert exact recording deltas serialize on this
+/// lock so the test harness's thread pool cannot interleave them.
+#[cfg(test)]
+static ENABLE_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Global state is shared across the test binary; these tests only
+    // assert relative deltas or properties that survive interleaving.
+
+    #[test]
+    fn stage_names_are_unique_and_snake_case() {
+        let mut seen = std::collections::HashSet::new();
+        for s in Stage::ALL {
+            assert!(seen.insert(s.name()), "duplicate stage name {}", s.name());
+            assert!(
+                s.name().bytes().all(|b| b.is_ascii_lowercase() || b == b'_'),
+                "{} is not snake_case",
+                s.name()
+            );
+        }
+        assert_eq!(Stage::ALL.len(), STAGES);
+    }
+
+    #[test]
+    fn span_recording_lands_in_the_stage_histogram() {
+        let _serial = ENABLE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        let before = snapshot(Stage::Checkpoint).count;
+        record_span(Stage::Checkpoint, 1_000, 2_500, 7);
+        let after = snapshot(Stage::Checkpoint);
+        assert_eq!(after.count, before + 1);
+        assert!(after.max_ns >= 1_500);
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _serial = ENABLE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        let before = snapshot(Stage::Accept).count;
+        {
+            let _s = span(Stage::Accept);
+        }
+        record_span(Stage::Accept, 0, 10_000, 0);
+        assert_eq!(snapshot(Stage::Accept).count, before);
+        set_enabled(true);
+    }
+
+    #[test]
+    fn percentile_clamps_to_observed_bucket_max() {
+        let h = AtomicHist::new();
+        // 100 samples at exactly 1000ns land in bucket [512, 1024);
+        // the naive upper bound would report 1024ns.
+        for _ in 0..100 {
+            h.record(1_000);
+        }
+        h.record(10_000); // pull max_ns far above the p50 bucket
+        let s = h.snapshot();
+        assert_eq!(s.percentile(50.0), 1e-6);
+        assert_eq!(s.max_ns, 10_000);
+    }
+
+    #[test]
+    fn request_id_is_thread_local_and_hash_is_stable() {
+        set_request_id(42);
+        assert_eq!(request_id(), 42);
+        set_request_id(0);
+        assert_eq!(hash_request_id(b""), 0);
+        assert_eq!(hash_request_id(b"req-1"), hash_request_id(b"req-1"));
+        assert_ne!(hash_request_id(b"req-1"), hash_request_id(b"req-2"));
+        assert_ne!(hash_request_id(b"req-1"), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_stays_bounded() {
+        let ring = Ring {
+            name: "test".into(),
+            inner: Mutex::new(RingInner { spans: Vec::with_capacity(RING_CAP), next: 0 }),
+        };
+        for i in 0..(RING_CAP as u64 + 10) {
+            ring.push(SpanRecord { stage: 0, start_ns: i, dur_ns: 1, req: 0 });
+        }
+        let spans = ring.drain_ordered();
+        assert_eq!(spans.len(), RING_CAP);
+        assert_eq!(spans[0].start_ns, 10, "oldest 10 overwritten");
+        assert_eq!(spans[RING_CAP - 1].start_ns, RING_CAP as u64 + 9);
+    }
+
+    #[test]
+    fn http_response_classes_bucket_correctly() {
+        let before = http_responses();
+        record_http_response(200);
+        record_http_response(201);
+        record_http_response(404);
+        record_http_response(77); // nonsense status → "other"
+        let after = http_responses();
+        assert_eq!(after[2] - before[2], 2);
+        assert_eq!(after[4] - before[4], 1);
+        assert_eq!(after[0] - before[0], 1);
+    }
+}

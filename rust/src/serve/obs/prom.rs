@@ -1,0 +1,381 @@
+//! Hand-rolled Prometheus text exposition (format version 0.0.4) —
+//! dependency-free, in the same spirit as `serve/net/wire.rs`.
+//!
+//! [`render`] produces the whole `GET /metrics` body: every
+//! [`Telemetry`] counter/gauge, the token-latency histogram, the
+//! per-stage duration histograms from [`super`], the durability
+//! counters (journal bytes, recovery replay), and the HTTP
+//! response-class counters. Structural correctness is by
+//! construction:
+//!
+//! * each metric family is emitted exactly once (`# HELP`/`# TYPE`
+//!   cannot duplicate because families are written by one call each;
+//!   labelled series share one family header),
+//! * histogram `le` buckets are cumulative and monotone (a running
+//!   sum over the log2 buckets), and the `+Inf` bucket is written
+//!   from the same `count` that becomes `_count`,
+//! * label values pass through [`escape_label`].
+//!
+//! `tests/serve_obs.rs` re-checks all of the above on a live
+//! `/metrics` response after a deterministic load.
+
+use std::fmt::Write as _;
+
+use crate::serve::telemetry::Telemetry;
+
+use super::{HistSnapshot, Stage, BUCKETS};
+
+/// The content type `/metrics` answers with.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and newline.
+pub fn escape_label(value: &str) -> String {
+    let mut out = String::with_capacity(value.len());
+    for c in value.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+struct Prom {
+    out: String,
+}
+
+impl Prom {
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.header(name, help, "counter");
+        let _ = writeln!(self.out, "{name} {value}");
+    }
+
+    fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        let _ = writeln!(self.out, "{name} {}", fmt_f64(value));
+    }
+
+    /// One counter family with a single label dimension — one
+    /// `# HELP`/`# TYPE` header shared by every labelled series.
+    fn counter_family(&mut self, name: &str, help: &str, label: &str, series: &[(&str, u64)]) {
+        self.header(name, help, "counter");
+        for (value, count) in series {
+            let _ = writeln!(self.out, "{name}{{{label}=\"{}\"}} {count}", escape_label(value));
+        }
+    }
+
+    /// One histogram family; `series` carries one snapshot per label
+    /// value (`label = None` for an unlabelled single histogram).
+    /// Buckets are emitted cumulatively over the shared log2 ladder,
+    /// `le` in seconds, closing with `+Inf` equal to `_count`.
+    fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        label: Option<&str>,
+        series: &[(&str, HistSnapshot)],
+    ) {
+        self.header(name, help, "histogram");
+        for (value, snap) in series {
+            let tag = match label {
+                Some(key) => format!("{key}=\"{}\",", escape_label(value)),
+                None => String::new(),
+            };
+            let mut cum = 0u64;
+            for (b, &c) in snap.buckets.iter().enumerate() {
+                cum += c;
+                let le = (1u64 << (b + 1)) as f64 * 1e-9;
+                let _ =
+                    writeln!(self.out, "{name}_bucket{{{tag}le=\"{}\"}} {cum}", fmt_f64(le));
+            }
+            let _ = writeln!(self.out, "{name}_bucket{{{tag}le=\"+Inf\"}} {}", snap.count);
+            let close = match label {
+                Some(key) => format!("{{{key}=\"{}\"}}", escape_label(value)),
+                None => String::new(),
+            };
+            let _ =
+                writeln!(self.out, "{name}_sum{close} {}", fmt_f64(snap.sum_ns as f64 * 1e-9));
+            let _ = writeln!(self.out, "{name}_count{close} {}", snap.count);
+        }
+    }
+}
+
+/// Prometheus floats: plain decimal via Rust's shortest round-trip
+/// `Display`; non-finite values spelled the exposition way.
+fn fmt_f64(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x.is_infinite() {
+        if x > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Render the full `/metrics` body. `extra_gauges` carries the
+/// engine-snapshot gauges only the caller holds (active streams,
+/// queued jobs, tick number): `(metric_name, help, value)` triples.
+pub fn render(tel: &Telemetry, extra_gauges: &[(&str, &str, f64)]) -> String {
+    let mut p = Prom { out: String::with_capacity(32 * 1024) };
+
+    // --- Telemetry counters ---
+    for (name, help, value) in [
+        ("macformer_tokens_total", "Decode tokens served across all streams.", tel.tokens()),
+        ("macformer_ticks_total", "Scheduler ticks observed (including idle).", tel.ticks()),
+        ("macformer_idle_ticks_total", "Ticks that served nothing.", tel.idle_ticks()),
+        (
+            "macformer_batched_ticks_total",
+            "Ticks that ran the gathered micro-batch step.",
+            tel.batched_ticks(),
+        ),
+        (
+            "macformer_sequential_ticks_total",
+            "Ticks that fell back to the per-stream sequential path.",
+            tel.sequential_ticks(),
+        ),
+        (
+            "macformer_batch_size_sum_total",
+            "Sum of micro-batch sizes over non-idle ticks.",
+            tel.batch_sum(),
+        ),
+        (
+            "macformer_queue_depth_sum_total",
+            "Sum of tick-start queue depths over all ticks.",
+            tel.queue_depth_sum(),
+        ),
+        ("macformer_admits_total", "Streams admitted.", tel.admits()),
+        (
+            "macformer_rejected_admits_total",
+            "Admissions rejected (pool full).",
+            tel.rejected_admits(),
+        ),
+        (
+            "macformer_rejected_submits_total",
+            "Submissions rejected (backpressure).",
+            tel.rejected_submits(),
+        ),
+        ("macformer_prefills_total", "Prompt prefills performed.", tel.prefills()),
+        (
+            "macformer_prefill_tokens_total",
+            "Prompt tokens ingested by chunked prefill.",
+            tel.prefill_tokens(),
+        ),
+        ("macformer_hibernations_total", "Streams hibernated.", tel.hibernations()),
+        ("macformer_restores_total", "Hibernated streams restored.", tel.restores()),
+        (
+            "macformer_evictions_total",
+            "Hibernations forced by pool pressure.",
+            tel.evictions(),
+        ),
+        ("macformer_expirations_total", "Streams expired by a deadline.", tel.expirations()),
+        (
+            "macformer_shed_total",
+            "Submissions shed by the overload governor.",
+            tel.shed(),
+        ),
+        ("macformer_faults_total", "Streams retired by fault isolation.", tel.faults()),
+        (
+            "macformer_quarantines_total",
+            "Streams quarantined by health screening.",
+            tel.quarantines(),
+        ),
+        (
+            "macformer_nonfinite_rejects_total",
+            "Tokens rejected for non-finite q/k/v values.",
+            tel.nonfinite_rejects(),
+        ),
+    ] {
+        p.counter(name, help, value);
+    }
+
+    // --- Telemetry gauges (high-water marks) ---
+    p.gauge(
+        "macformer_batch_max",
+        "Largest micro-batch served by one tick.",
+        tel.max_batch() as f64,
+    );
+    p.gauge(
+        "macformer_queue_depth_max",
+        "Deepest queue seen at a tick start.",
+        tel.max_queue_depth() as f64,
+    );
+    for (name, help, value) in extra_gauges {
+        p.gauge(name, help, *value);
+    }
+
+    // --- token latency + per-stage histograms ---
+    p.histogram(
+        "macformer_token_latency_seconds",
+        "Per-token latency, submit to served.",
+        None,
+        &[("", tel.latency_snapshot())],
+    );
+    let stages: Vec<(&str, HistSnapshot)> =
+        Stage::ALL.iter().map(|s| (s.name(), super::snapshot(*s))).collect();
+    p.histogram(
+        "macformer_stage_duration_seconds",
+        "Per-stage request-path durations (see the obs stage taxonomy).",
+        Some("stage"),
+        &stages,
+    );
+
+    // --- durability counters ---
+    p.counter(
+        "macformer_journal_bytes_total",
+        "Bytes appended to the write-ahead journal.",
+        super::journal_bytes(),
+    );
+    p.counter(
+        "macformer_recoveries_total",
+        "Crash-restart recoveries performed at startup.",
+        super::recoveries(),
+    );
+    p.counter(
+        "macformer_recovery_replayed_ops_total",
+        "Journal ops replayed through the fold path during recovery.",
+        super::recovery_replayed_ops(),
+    );
+    p.counter(
+        "macformer_recovery_truncated_bytes_total",
+        "Torn journal-tail bytes truncated during recovery.",
+        super::recovery_truncated_bytes(),
+    );
+
+    // --- HTTP response classes ---
+    let classes = super::http_responses();
+    p.counter_family(
+        "macformer_http_responses_total",
+        "HTTP responses served, by status class.",
+        "class",
+        &[
+            ("1xx", classes[1]),
+            ("2xx", classes[2]),
+            ("3xx", classes[3]),
+            ("4xx", classes[4]),
+            ("5xx", classes[5]),
+            ("other", classes[0]),
+        ],
+    );
+
+    p.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::time::Duration;
+
+    fn sample_body() -> String {
+        let mut tel = Telemetry::new();
+        tel.record_tick(3, 4, false);
+        tel.record_tick(1, 1, true);
+        tel.record_token_latency(Duration::from_micros(3));
+        tel.record_token_latency(Duration::from_micros(700));
+        super::super::record_span(Stage::StateFold, 0, 12_000, 0);
+        render(&tel, &[("macformer_active_streams", "Active streams.", 3.0)])
+    }
+
+    #[test]
+    fn no_duplicate_help_or_type_lines() {
+        let body = sample_body();
+        let mut seen = HashSet::new();
+        for line in body.lines() {
+            if line.starts_with("# HELP") || line.starts_with("# TYPE") {
+                let key: Vec<&str> = line.split_whitespace().take(3).collect();
+                assert!(seen.insert(key.join(" ")), "duplicate header: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_series_belongs_to_a_declared_family() {
+        let body = sample_body();
+        let mut declared = HashSet::new();
+        for line in body.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().unwrap();
+                let kind = it.next().unwrap();
+                declared.insert(name.to_string());
+                if kind == "histogram" {
+                    declared.insert(format!("{name}_bucket"));
+                    declared.insert(format!("{name}_sum"));
+                    declared.insert(format!("{name}_count"));
+                }
+            }
+        }
+        for line in body.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let name = line.split(['{', ' ']).next().unwrap();
+            assert!(declared.contains(name), "undeclared series {name}");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_inf_matches_count() {
+        let body = sample_body();
+        // the unlabelled token-latency histogram
+        let mut last = 0u64;
+        let mut inf = None;
+        let mut count = None;
+        for line in body.lines() {
+            if let Some(rest) = line.strip_prefix("macformer_token_latency_seconds_bucket{le=") {
+                let v: u64 = rest.split('}').nth(1).unwrap().trim().parse().unwrap();
+                if rest.starts_with("\"+Inf\"") {
+                    inf = Some(v);
+                } else {
+                    assert!(v >= last, "bucket series not monotone: {line}");
+                    last = v;
+                }
+            } else if let Some(rest) = line.strip_prefix("macformer_token_latency_seconds_count ")
+            {
+                count = Some(rest.trim().parse::<u64>().unwrap());
+            }
+        }
+        let (inf, count) = (inf.expect("+Inf bucket"), count.expect("_count"));
+        assert_eq!(inf, count, "+Inf bucket must equal _count");
+        assert!(inf >= last, "+Inf below the last finite bucket");
+        assert_eq!(count, 2, "two recorded latencies");
+    }
+
+    #[test]
+    fn stage_family_carries_every_stage_label_once() {
+        let body = sample_body();
+        for stage in Stage::ALL {
+            let needle = format!("macformer_stage_duration_seconds_count{{stage=\"{}\"}}", stage.name());
+            assert_eq!(
+                body.lines().filter(|l| l.starts_with(needle.as_str())).count(),
+                1,
+                "stage {} missing or duplicated",
+                stage.name()
+            );
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+    }
+
+    #[test]
+    fn floats_render_prometheus_style() {
+        assert_eq!(fmt_f64(1.5), "1.5");
+        assert_eq!(fmt_f64(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_f64(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_f64(f64::NAN), "NaN");
+    }
+}

@@ -1,0 +1,119 @@
+//! Chrome-trace export of the per-thread span rings.
+//!
+//! [`chrome_trace_json`] serializes every registered ring as
+//! `chrome://tracing` / Perfetto "Trace Event Format" JSON: one pid
+//! per worker thread (named via a `process_name` metadata event), one
+//! complete `"X"` duration event per recorded span, timestamps in
+//! microseconds relative to the process obs epoch. Spans that carried
+//! a request id (from the `x-request-id` HTTP header) expose it as
+//! `args.req`, so one slow request can be walked visually across the
+//! accept, parse, journal, compute, and SSE-write threads.
+//!
+//! Wired to `--trace-out FILE` in `main.rs`; the file is written once
+//! at shutdown (after drain) so the rings hold the tail of the run.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+use super::{rings_snapshot, SpanRecord, Stage};
+
+fn event(pid: u64, rec: &SpanRecord) -> Value {
+    let name = Stage::ALL
+        .get(rec.stage as usize)
+        .map(|s| s.name())
+        .unwrap_or("unknown");
+    let mut fields = vec![
+        ("ph", Value::str("X")),
+        ("name", Value::str(name)),
+        ("cat", Value::str("serve")),
+        ("pid", Value::num(pid as f64)),
+        ("tid", Value::num(0.0)),
+        ("ts", Value::num(rec.start_ns as f64 / 1000.0)),
+        ("dur", Value::num(rec.dur_ns as f64 / 1000.0)),
+    ];
+    if rec.req != 0 {
+        fields.push(("args", Value::obj(vec![("req", Value::str(format!("{:016x}", rec.req)))])));
+    }
+    Value::obj(fields)
+}
+
+fn process_name(pid: u64, name: &str) -> Value {
+    Value::obj(vec![
+        ("ph", Value::str("M")),
+        ("name", Value::str("process_name")),
+        ("pid", Value::num(pid as f64)),
+        ("args", Value::obj(vec![("name", Value::str(name))])),
+    ])
+}
+
+/// Render every registered span ring as a Trace Event Format
+/// document: `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+pub fn chrome_trace_json() -> String {
+    let mut events = Vec::new();
+    for (pid0, (thread, spans)) in rings_snapshot().into_iter().enumerate() {
+        let pid = pid0 as u64 + 1;
+        events.push(process_name(pid, &thread));
+        for rec in &spans {
+            events.push(event(pid, rec));
+        }
+    }
+    Value::obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", Value::str("ms")),
+    ])
+    .to_string()
+}
+
+/// Write the trace document to `path`.
+pub fn write(path: &Path) -> Result<()> {
+    std::fs::write(path, chrome_trace_json())
+        .with_context(|| format!("writing trace to {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn trace_round_trips_as_strict_json_with_request_ids() {
+        let _serial = super::super::ENABLE_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        super::super::set_enabled(true);
+        super::super::register_thread();
+        let t0 = super::super::now_ns();
+        super::super::record_span(Stage::PhiGemm, t0, t0 + 5_000, 0xabcd);
+        super::super::record_span(Stage::StateFold, t0 + 5_000, t0 + 6_000, 0);
+        let text = chrome_trace_json();
+        let doc = json::parse(&text).expect("trace must be strict JSON");
+        let Value::Obj(top) = doc else { panic!("top level must be an object") };
+        let Some(Value::Arr(events)) = top.get("traceEvents") else {
+            panic!("traceEvents array missing")
+        };
+        assert!(!events.is_empty());
+        let mut saw_meta = false;
+        let mut saw_req = false;
+        for ev in events {
+            let Value::Obj(fields) = ev else { panic!("event must be an object") };
+            match fields.get("ph") {
+                Some(Value::Str(ph)) if ph == "M" => saw_meta = true,
+                Some(Value::Str(ph)) if ph == "X" => {
+                    assert!(matches!(fields.get("ts"), Some(Value::Num(_))));
+                    assert!(matches!(fields.get("dur"), Some(Value::Num(_))));
+                    if let Some(Value::Obj(args)) = fields.get("args") {
+                        if let Some(Value::Str(req)) = args.get("req") {
+                            saw_req |= req == "000000000000abcd";
+                        }
+                    }
+                }
+                other => panic!("unexpected ph: {other:?}"),
+            }
+        }
+        assert!(saw_meta, "process_name metadata event missing");
+        assert!(saw_req, "request id did not survive into trace args");
+    }
+}

@@ -151,7 +151,9 @@ impl<'s> StreamPool<'s> {
     }
 
     /// The pool's telemetry (latency histogram, throughput, occupancy,
-    /// rejection counters).
+    /// rejection counters). The network frontend exports every field
+    /// here as Prometheus text on `GET /metrics` (see
+    /// [`super::obs::prom`]).
     pub fn telemetry(&self) -> &Telemetry {
         &self.tel
     }

@@ -47,6 +47,7 @@ use crate::fastpath::attention::causal_chunk;
 use crate::fastpath::parallel::SendPtr;
 use crate::fastpath::{grow, parallel, simd};
 
+use super::obs::{self, Stage};
 use super::pool::{all_finite, FaultKind, Slot, StreamId, StreamPool};
 use super::ServeError;
 
@@ -176,31 +177,41 @@ impl Scheduler {
         let map = session.feature_map().expect("streaming pool implies a Maclaurin session");
         let feat = map.flat.num_features();
         let scale = session.decode_scale();
-        grow(&mut self.qs, n * d);
-        grow(&mut self.ks, n * d);
-        grow(&mut self.phi_q, n * feat);
-        grow(&mut self.phi_k, n * feat);
-        grow(&mut self.prefill_out, n * dv);
-        simd::scaled_copy(q, scale, &mut self.qs[..n * d]);
-        simd::scaled_copy(k, scale, &mut self.ks[..n * d]);
-        // both fallible phi passes complete before any state is touched
-        let mut phi = session.phi_rows_into(&self.ks[..n * d], n, &mut self.phi_k[..n * feat]);
-        if phi.is_ok() {
-            phi = session.phi_rows_into(&self.qs[..n * d], n, &mut self.phi_q[..n * feat]);
+        {
+            let _gather = obs::span(Stage::TickGather);
+            grow(&mut self.qs, n * d);
+            grow(&mut self.ks, n * d);
+            grow(&mut self.phi_q, n * feat);
+            grow(&mut self.phi_k, n * feat);
+            grow(&mut self.prefill_out, n * dv);
+            simd::scaled_copy(q, scale, &mut self.qs[..n * d]);
+            simd::scaled_copy(k, scale, &mut self.ks[..n * d]);
         }
+        // both fallible phi passes complete before any state is touched
+        let phi = {
+            let _gemm = obs::span(Stage::PhiGemm);
+            let mut phi = session.phi_rows_into(&self.ks[..n * d], n, &mut self.phi_k[..n * feat]);
+            if phi.is_ok() {
+                phi = session.phi_rows_into(&self.qs[..n * d], n, &mut self.phi_q[..n * feat]);
+            }
+            phi
+        };
         if let Err(e) = phi {
             return Err(ServeError::Session(format!("{e:#}")));
         }
         let slot = &mut pool.slots[si];
         let state = slot.state.as_mut().expect("active slot always has a state");
-        state.prefill_phi_into(
-            &self.phi_q[..n * feat],
-            &self.phi_k[..n * feat],
-            v,
-            n,
-            causal_chunk(),
-            &mut self.prefill_out[..n * dv],
-        );
+        {
+            let _fold = obs::span(Stage::StateFold);
+            state.prefill_phi_into(
+                &self.phi_q[..n * feat],
+                &self.phi_k[..n * feat],
+                v,
+                n,
+                causal_chunk(),
+                &mut self.prefill_out[..n * dv],
+            );
+        }
         slot.out.copy_from_slice(&self.prefill_out[(n - 1) * dv..n * dv]);
         slot.has_output = true;
         pool.tel.record_prefill(n);
@@ -254,12 +265,19 @@ impl Scheduler {
             let mut faulted = 0usize;
             for &si in &self.scheduled {
                 let slot = &mut pool.slots[si as usize];
-                simd::scaled_copy(&slot.q, scale, &mut self.qs[..d]);
-                simd::scaled_copy(&slot.k, scale, &mut self.ks[..d]);
-                let mut phi = session.phi_rows_into(&self.ks[..d], 1, &mut self.phi_k[..feat]);
-                if phi.is_ok() {
-                    phi = session.phi_rows_into(&self.qs[..d], 1, &mut self.phi_q[..feat]);
+                {
+                    let _gather = obs::span(Stage::TickGather);
+                    simd::scaled_copy(&slot.q, scale, &mut self.qs[..d]);
+                    simd::scaled_copy(&slot.k, scale, &mut self.ks[..d]);
                 }
+                let phi = {
+                    let _gemm = obs::span(Stage::PhiGemm);
+                    let mut phi = session.phi_rows_into(&self.ks[..d], 1, &mut self.phi_k[..feat]);
+                    if phi.is_ok() {
+                        phi = session.phi_rows_into(&self.qs[..d], 1, &mut self.phi_q[..feat]);
+                    }
+                    phi
+                };
                 if let Err(e) = phi {
                     // account for the streams this tick did serve
                     if served > 0 {
@@ -267,8 +285,11 @@ impl Scheduler {
                     }
                     return Err(e);
                 }
-                if let Some(kind) = guarded_fold(slot, &self.phi_k[..feat], &self.phi_q[..feat], eps)
-                {
+                let fold = {
+                    let _fold = obs::span(Stage::StateFold);
+                    guarded_fold(slot, &self.phi_k[..feat], &self.phi_q[..feat], eps)
+                };
+                if let Some(kind) = fold {
                     // isolate immediately: the token is dropped with
                     // its stream, never re-scheduled
                     pool.retire_faulted(si as usize, kind);
@@ -287,24 +308,31 @@ impl Scheduler {
             return Ok(TickStats { batch: served, sequential, faulted });
         }
         {
-            grow(&mut self.qs, g * d);
-            grow(&mut self.ks, g * d);
-            grow(&mut self.phi_q, g * feat);
-            grow(&mut self.phi_k, g * feat);
-            for (j, &si) in self.scheduled.iter().enumerate() {
-                let slot = &pool.slots[si as usize];
-                simd::scaled_copy(&slot.q, scale, &mut self.qs[j * d..(j + 1) * d]);
-                simd::scaled_copy(&slot.k, scale, &mut self.ks[j * d..(j + 1) * d]);
+            {
+                let _gather = obs::span(Stage::TickGather);
+                grow(&mut self.qs, g * d);
+                grow(&mut self.ks, g * d);
+                grow(&mut self.phi_q, g * feat);
+                grow(&mut self.phi_k, g * feat);
+                for (j, &si) in self.scheduled.iter().enumerate() {
+                    let slot = &pool.slots[si as usize];
+                    simd::scaled_copy(&slot.q, scale, &mut self.qs[j * d..(j + 1) * d]);
+                    simd::scaled_copy(&slot.k, scale, &mut self.ks[j * d..(j + 1) * d]);
+                }
             }
             // One (g, 1, d) feature step per side across the whole
             // micro-batch, sharded over the fastpath worker pool.
-            session.phi_rows_into(&self.ks[..g * d], g, &mut self.phi_k[..g * feat])?;
-            session.phi_rows_into(&self.qs[..g * d], g, &mut self.phi_q[..g * feat])?;
+            {
+                let _gemm = obs::span(Stage::PhiGemm);
+                session.phi_rows_into(&self.ks[..g * d], g, &mut self.phi_k[..g * feat])?;
+                session.phi_rows_into(&self.qs[..g * d], g, &mut self.phi_q[..g * feat])?;
+            }
             // Parallel per-stream fold: index j owns slot scheduled[j].
             // Each fold is individually guarded (phi screen, panic
             // catch, denominator health); a fault is recorded on the
             // slot — disjoint writes, so still race-free — and the
             // hand-over loop below retires it.
+            let _fold = obs::span(Stage::StateFold);
             let slots = SendPtr(pool.slots.as_mut_ptr());
             let scheduled = &self.scheduled[..g];
             let phi_k = &self.phi_k[..g * feat];

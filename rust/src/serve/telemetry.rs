@@ -3,9 +3,10 @@
 //! Everything here is counters and a log2-bucketed latency histogram:
 //! no growth, no allocation, so the scheduler can record into it from
 //! the steady-state tick without breaking the zero-alloc contract.
-//! Percentiles are reconstructed from the histogram (reported as each
-//! bucket's upper bound, i.e. conservatively rounded up by at most 2x);
-//! the max is tracked exactly.
+//! Percentiles are reconstructed from the histogram, clamped to the
+//! exact maximum observed inside the bucket the rank lands in (a
+//! bucket's raw upper bound would over-report by up to 2x); the
+//! global max is tracked exactly.
 
 use std::time::{Duration, Instant};
 
@@ -13,16 +14,21 @@ use crate::util::json::Value;
 
 /// Latency buckets: bucket `b` covers `[2^b, 2^(b+1))` nanoseconds.
 /// 48 buckets span 1 ns .. ~78 hours — everything a serving tick can
-/// plausibly produce.
-const BUCKETS: usize = 48;
+/// plausibly produce. Shared with the per-stage histograms in
+/// [`obs`](super::obs), so `/metrics` exposes one consistent `le`
+/// ladder.
+pub const BUCKETS: usize = 48;
 
-// `percentile` computes bucket upper bounds as `1 << (idx + 1)`;
-// keep the bucket count inside the u64 shift range.
+// Bucket upper bounds are computed as `1 << (idx + 1)`; keep the
+// bucket count inside the u64 shift range.
 const _: () = assert!(BUCKETS < 64);
 
 #[derive(Debug, Clone)]
 struct Histogram {
     buckets: [u64; BUCKETS],
+    /// Exact maximum sample observed per bucket — what keeps the
+    /// reported percentiles honest (never above a real sample).
+    bucket_max: [u64; BUCKETS],
     count: u64,
     sum_ns: u64,
     max_ns: u64,
@@ -30,19 +36,26 @@ struct Histogram {
 
 impl Histogram {
     fn new() -> Histogram {
-        Histogram { buckets: [0; BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+        Histogram {
+            buckets: [0; BUCKETS],
+            bucket_max: [0; BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            max_ns: 0,
+        }
     }
 
     fn record(&mut self, ns: u64) {
         let idx = (63 - ns.max(1).leading_zeros() as usize).min(BUCKETS - 1);
         self.buckets[idx] += 1;
+        self.bucket_max[idx] = self.bucket_max[idx].max(ns);
         self.count += 1;
         self.sum_ns = self.sum_ns.saturating_add(ns);
         self.max_ns = self.max_ns.max(ns);
     }
 
-    /// Upper bound of the bucket holding the p-th percentile sample, in
-    /// seconds (0.0 with no samples).
+    /// The p-th percentile in seconds (0.0 with no samples), clamped
+    /// to the exact maximum observed in the bucket the rank lands in.
     fn percentile(&self, p: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -52,9 +65,7 @@ impl Histogram {
         for (idx, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= rank {
-                // idx <= BUCKETS - 1, and BUCKETS < 64 (asserted above)
-                let upper_ns = 1u64 << (idx + 1);
-                return upper_ns.min(self.max_ns.max(1)) as f64 * 1e-9;
+                return self.bucket_max[idx].clamp(1, self.max_ns.max(1)) as f64 * 1e-9;
             }
         }
         self.max_ns as f64 * 1e-9
@@ -65,6 +76,16 @@ impl Histogram {
             0.0
         } else {
             self.sum_ns as f64 / self.count as f64 * 1e-9
+        }
+    }
+
+    fn snapshot(&self) -> super::obs::HistSnapshot {
+        super::obs::HistSnapshot {
+            buckets: self.buckets,
+            bucket_max: self.bucket_max,
+            count: self.count,
+            sum_ns: self.sum_ns,
+            max_ns: self.max_ns,
         }
     }
 }
@@ -352,10 +373,26 @@ impl Telemetry {
         }
     }
 
+    /// Sum of micro-batch sizes over non-idle ticks (monotonic).
+    pub fn batch_sum(&self) -> u64 {
+        self.batch_sum
+    }
+
+    /// Sum of tick-start queue depths over all ticks (monotonic).
+    pub fn queue_depth_sum(&self) -> u64 {
+        self.depth_sum
+    }
+
     /// p-th percentile of per-token latency (submit -> served), seconds.
     /// Bucketed: see the module docs for rounding semantics.
     pub fn latency_percentile(&self, p: f64) -> f64 {
         self.latency.percentile(p)
+    }
+
+    /// A point-in-time copy of the latency histogram, in the shared
+    /// observability snapshot form (the `/metrics` exposition input).
+    pub fn latency_snapshot(&self) -> super::obs::HistSnapshot {
+        self.latency.snapshot()
     }
 
     /// Mean per-token latency in seconds (exact, not bucketed).
@@ -510,6 +547,7 @@ impl Telemetry {
                     ("p50", Value::num(self.latency_percentile(50.0))),
                     ("p90", Value::num(self.latency_percentile(90.0))),
                     ("p99", Value::num(self.latency_percentile(99.0))),
+                    ("p999", Value::num(self.latency_percentile(99.9))),
                     ("max", Value::num(self.latency_max())),
                 ]),
             ),
@@ -537,6 +575,54 @@ mod tests {
         // zero-duration samples land in the bottom bucket, no panic
         h.record(0);
         assert_eq!(h.count, 102);
+    }
+
+    /// Pins the percentile fix: with every sample exactly 1000ns, p50
+    /// must report 1e-6 exactly — not the 1.024e-6 bucket upper bound
+    /// the old implementation returned (up to 2x over-reporting).
+    #[test]
+    fn percentile_reports_observed_bucket_max_not_upper_bound() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(1_000);
+        }
+        // a single far-out sample keeps max_ns from masking the bug
+        h.record(1_000_000);
+        assert_eq!(h.percentile(50.0), 1e-6);
+        assert_eq!(h.percentile(90.0), 1e-6);
+        assert_eq!(h.percentile(100.0), 1e-3);
+        // mixed values inside one bucket clamp to that bucket's max
+        let mut h2 = Histogram::new();
+        h2.record(600); // bucket [512, 1024)
+        h2.record(900);
+        h2.record(5_000);
+        assert_eq!(h2.percentile(50.0), 900.0 * 1e-9);
+    }
+
+    #[test]
+    fn p999_lands_in_the_healthz_snapshot() {
+        let mut t = Telemetry::new();
+        for _ in 0..999 {
+            t.record_token_latency(Duration::from_nanos(1_000));
+        }
+        t.record_token_latency(Duration::from_nanos(1_000_000));
+        let json = t.to_json();
+        let lat = json.get("latency_s");
+        assert_eq!(lat.get("p50").as_f64(), Some(1e-6));
+        assert_eq!(lat.get("p999").as_f64(), Some(1e-3));
+        assert_eq!(lat.get("max").as_f64(), Some(1e-3));
+    }
+
+    #[test]
+    fn latency_snapshot_matches_the_histogram() {
+        let mut t = Telemetry::new();
+        t.record_token_latency(Duration::from_nanos(700));
+        t.record_token_latency(Duration::from_nanos(3_000));
+        let s = t.latency_snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.sum_ns, 3_700);
+        assert_eq!(s.max_ns, 3_000);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 2);
     }
 
     #[test]

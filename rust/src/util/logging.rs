@@ -2,17 +2,47 @@
 //!
 //! Backs the `log` crate facade so library modules can use the standard
 //! `log::info!` macros. Level comes from `MACFORMER_LOG` (error|warn|info|
-//! debug|trace; default info).
+//! debug|trace; default info). Output shape comes from
+//! `MACFORMER_LOG_FORMAT`: the default is the human one-liner; `json`
+//! switches to one JSON object per line (`ts_s`, `level`, `target`,
+//! `msg`, plus `req` when the calling thread is serving an identified
+//! request — see [`crate::serve::obs::request_id`]), for log shippers
+//! that want structure instead of a regex.
 
 use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 use once_cell::sync::OnceCell;
 
+use crate::util::json::Value;
+
 static START: OnceCell<Instant> = OnceCell::new();
+static JSON_FORMAT: AtomicBool = AtomicBool::new(false);
 static LOGGER: Logger = Logger;
 
 struct Logger;
+
+/// The human format: `[    0.123s INFO  target] message`.
+fn render_text(ts_s: f64, level: log::Level, target: &str, msg: &str) -> String {
+    format!("[{ts_s:9.3}s {level:5} {target}] {msg}")
+}
+
+/// The structured format: one JSON object per line. `req` is the
+/// current request's id hash (hex), omitted when the thread is not
+/// serving an identified request (`req == 0`).
+fn render_json(ts_s: f64, level: log::Level, target: &str, msg: &str, req: u64) -> String {
+    let mut fields = vec![
+        ("ts_s", Value::num(ts_s)),
+        ("level", Value::str(level.as_str())),
+        ("target", Value::str(target)),
+        ("msg", Value::str(msg)),
+    ];
+    if req != 0 {
+        fields.push(("req", Value::str(format!("{req:016x}"))));
+    }
+    Value::obj(fields).to_string()
+}
 
 impl log::Log for Logger {
     fn enabled(&self, metadata: &log::Metadata) -> bool {
@@ -24,14 +54,15 @@ impl log::Log for Logger {
             return;
         }
         let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let target = record.target().split("::").last().unwrap_or("");
+        let msg = record.args().to_string();
+        let line = if JSON_FORMAT.load(Ordering::Relaxed) {
+            render_json(t, record.level(), target, &msg, crate::serve::obs::request_id())
+        } else {
+            render_text(t, record.level(), target, &msg)
+        };
         let mut err = std::io::stderr().lock();
-        let _ = writeln!(
-            err,
-            "[{t:9.3}s {:5} {}] {}",
-            record.level(),
-            record.target().split("::").last().unwrap_or(""),
-            record.args()
-        );
+        let _ = writeln!(err, "{line}");
     }
 
     fn flush(&self) {}
@@ -40,6 +71,9 @@ impl log::Log for Logger {
 /// Install the logger; idempotent (subsequent calls are no-ops).
 pub fn init() {
     let _ = START.set(Instant::now());
+    if matches!(std::env::var("MACFORMER_LOG_FORMAT").as_deref(), Ok("json")) {
+        JSON_FORMAT.store(true, Ordering::Relaxed);
+    }
     if log::set_logger(&LOGGER).is_ok() {
         let level = match std::env::var("MACFORMER_LOG").as_deref() {
             Ok("error") => log::LevelFilter::Error,
@@ -54,10 +88,37 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke");
+    }
+
+    #[test]
+    fn text_format_is_the_classic_one_liner() {
+        let line = render_text(1.5, log::Level::Info, "serve", "hello");
+        assert_eq!(line, "[    1.500s INFO  serve] hello");
+    }
+
+    #[test]
+    fn json_format_is_one_strict_object_per_line() {
+        let line = render_json(0.25, log::Level::Warn, "engine", "queue \"full\"", 0);
+        let v = crate::util::json::parse(&line).expect("log line parses as strict JSON");
+        assert_eq!(v.get("level").as_str(), Some("WARN"));
+        assert_eq!(v.get("target").as_str(), Some("engine"));
+        assert_eq!(v.get("msg").as_str(), Some("queue \"full\""));
+        assert_eq!(v.get("ts_s").as_f64(), Some(0.25));
+        // no request id on the thread -> the key is absent, not zero
+        assert!(v.get("req").as_str().is_none());
+    }
+
+    #[test]
+    fn json_format_carries_the_request_id_when_set() {
+        let line = render_json(2.0, log::Level::Info, "http", "served", 0xabcd);
+        let v = crate::util::json::parse(&line).expect("log line parses");
+        assert_eq!(v.get("req").as_str(), Some("000000000000abcd"));
     }
 }

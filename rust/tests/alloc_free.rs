@@ -1,10 +1,11 @@
 //! Steady-state allocation audit (the ISSUE's heap-profile acceptance
 //! criterion): after a warmup call, `AttentionSession::forward_into`,
-//! `CausalState::append_token_into`, and the serve subsystem's
-//! submit/tick/take_output loop must make ZERO heap allocations — the
-//! scratch arena, the thread-local kernel workspaces, the claim-based
-//! worker pool, the scheduler's grow-only gather buffers, and the
-//! fixed-bucket telemetry leave nothing to allocate per call.
+//! `CausalState::append_token_into`, the serve subsystem's
+//! submit/tick/take_output loop, and `serve::obs` span recording must
+//! make ZERO heap allocations — the scratch arena, the thread-local
+//! kernel workspaces, the claim-based worker pool, the scheduler's
+//! grow-only gather buffers, the fixed-bucket telemetry, and the
+//! fixed-capacity span rings leave nothing to allocate per call.
 //!
 //! A counting `#[global_allocator]` wraps the system allocator; this
 //! file owns its whole test binary so the counter sees only this
@@ -19,6 +20,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use macformer::attn::{AttentionSpec, Backend, Kernel};
+use macformer::serve::obs::{self, Stage};
 use macformer::serve::{ResilienceConfig, Scheduler, ServeConfig, StreamPool, Supervisor};
 use macformer::tensor::Tensor;
 use macformer::util::rng::Rng;
@@ -450,4 +452,44 @@ fn append_token_into_is_allocation_free() {
         after - before
     );
     assert_eq!(state.len(), n);
+}
+
+/// Span recording rides every hot stage (tick gather, phi GEMM, state
+/// fold, SSE writes), so after the one-time ring registration it must
+/// be strictly allocation-free: histogram updates are relaxed atomics
+/// and the ring overwrites a pre-reserved fixed-capacity buffer. Both
+/// the explicit `record_span` call and the drop-guard [`obs::span`]
+/// path are measured, with a request id installed so the id plumbing
+/// is inside the window too.
+#[test]
+fn span_recording_is_allocation_free_after_registration() {
+    let _serial = TEST_LOCK.lock().unwrap();
+    obs::set_enabled(true);
+    obs::set_request_id(obs::hash_request_id(b"alloc-free-probe"));
+    // warmup: registers this thread's span ring (the one bounded
+    // allocation) and touches every stage's histogram once
+    obs::register_thread();
+    for stage in Stage::ALL {
+        let t0 = obs::now_ns();
+        obs::record_span(stage, t0, t0 + 100, 1);
+    }
+    let before = allocations();
+    // far past RING_CAP so the window covers both the fill phase
+    // (pushes into reserved capacity) and the wrap-around overwrites
+    for i in 0..3 * obs::RING_CAP {
+        let stage = Stage::ALL[i % Stage::ALL.len()];
+        let t0 = obs::now_ns();
+        obs::record_span(stage, t0, t0 + 100, 1);
+        drop(obs::span(stage));
+    }
+    let after = allocations();
+    obs::set_request_id(0);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state span recording allocated {} times",
+        after - before
+    );
+    // sanity: the spans actually landed
+    assert!(obs::snapshot(Stage::PhiGemm).count >= (3 * obs::RING_CAP / Stage::ALL.len()) as u64);
 }

@@ -1,0 +1,255 @@
+//! Integration tests for the observability layer (`serve::obs`) on a
+//! live gateway: `/metrics` exposition correctness after a
+//! deterministic load, request-id propagation from the HTTP header
+//! into the response echo and the exported Chrome trace, and the
+//! structural Prometheus invariants (no duplicate family headers,
+//! cumulative buckets, `+Inf` == `_count`) re-checked on real output.
+//!
+//! Global observability state (stage histograms, HTTP class counters,
+//! span rings) is process-wide and monotone, so every assertion here
+//! is of the "at least"/"never" kind — safe under the test harness's
+//! thread-level parallelism.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::time::Duration;
+
+use macformer::serve::net::run_socket;
+use macformer::serve::obs;
+use macformer::serve::{EngineSpec, LoadConfig, NetConfig, ServeConfig, Server};
+use macformer::util::json::Value;
+
+// ---------------------------------------------------------------------------
+// fixtures
+// ---------------------------------------------------------------------------
+
+/// A small, fast engine shape shared by the obs tests.
+fn small_cfg() -> LoadConfig {
+    LoadConfig {
+        streams: 4,
+        tokens: 12,
+        prompt: 4,
+        head_dim: 8,
+        dv: 8,
+        num_features: 16,
+        min_batch: 2,
+        ..LoadConfig::default()
+    }
+}
+
+fn server_for(cfg: &LoadConfig) -> Server {
+    let spec = EngineSpec {
+        kernel: cfg.kernel,
+        backend: cfg.backend,
+        head_dim: cfg.head_dim,
+        dv: cfg.dv,
+        num_features: cfg.num_features,
+        seed: cfg.seed,
+    };
+    let serve = ServeConfig { min_batch: cfg.min_batch, ..ServeConfig::new(cfg.streams, cfg.dv) };
+    Server::start(NetConfig::default(), spec, serve, cfg.resilience.clone(), None)
+        .expect("server start")
+}
+
+/// One raw request on a fresh connection, read to connection close.
+/// Returns `(status, lowercased head, body)`.
+fn one_shot(addr: SocketAddr, payload: &[u8]) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    stream.write_all(payload).expect("send request");
+    let _ = stream.shutdown(Shutdown::Write);
+    let mut buf = Vec::new();
+    let _ = stream.read_to_end(&mut buf);
+    let text = String::from_utf8_lossy(&buf).into_owned();
+    let split = text.find("\r\n\r\n").unwrap_or_else(|| panic!("no response head in {text:?}"));
+    let head = text[..split].to_ascii_lowercase();
+    let status = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+    (status, head, text[split + 4..].to_string())
+}
+
+/// The value of a single unlabelled or exactly-matching series line.
+fn series_value(body: &str, prefix: &str) -> u64 {
+    body.lines()
+        .find_map(|l| l.strip_prefix(prefix))
+        .unwrap_or_else(|| panic!("no series line starting with {prefix:?}"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|e| panic!("bad value for {prefix:?}: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// /metrics after a deterministic load
+// ---------------------------------------------------------------------------
+
+/// The golden family list: every `# HELP` header of a live `/metrics`
+/// response, in emission order. A new Telemetry field or stage metric
+/// must be added here deliberately, and a dropped family fails loudly.
+const FAMILIES: &[&str] = &[
+    "macformer_tokens_total",
+    "macformer_ticks_total",
+    "macformer_idle_ticks_total",
+    "macformer_batched_ticks_total",
+    "macformer_sequential_ticks_total",
+    "macformer_batch_size_sum_total",
+    "macformer_queue_depth_sum_total",
+    "macformer_admits_total",
+    "macformer_rejected_admits_total",
+    "macformer_rejected_submits_total",
+    "macformer_prefills_total",
+    "macformer_prefill_tokens_total",
+    "macformer_hibernations_total",
+    "macformer_restores_total",
+    "macformer_evictions_total",
+    "macformer_expirations_total",
+    "macformer_shed_total",
+    "macformer_faults_total",
+    "macformer_quarantines_total",
+    "macformer_nonfinite_rejects_total",
+    "macformer_batch_max",
+    "macformer_queue_depth_max",
+    "macformer_active_streams",
+    "macformer_hibernated_streams",
+    "macformer_decode_jobs",
+    "macformer_tick_no",
+    "macformer_token_latency_seconds",
+    "macformer_stage_duration_seconds",
+    "macformer_journal_bytes_total",
+    "macformer_recoveries_total",
+    "macformer_recovery_replayed_ops_total",
+    "macformer_recovery_truncated_bytes_total",
+    "macformer_http_responses_total",
+];
+
+#[test]
+fn metrics_after_a_deterministic_load_is_valid_prometheus_text() {
+    let cfg = LoadConfig { verify: false, ..small_cfg() };
+    let server = server_for(&cfg);
+    let addr = server.local_addr();
+    let report = run_socket(&cfg, &addr.to_string()).expect("socket load");
+    assert_eq!(report.stream_errors, 0);
+    assert_eq!(report.http_5xx, 0);
+
+    let (status, head, body) = one_shot(addr, b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+    server.shutdown();
+    assert_eq!(status, 200);
+    assert!(
+        head.contains("content-type: text/plain; version=0.0.4"),
+        "exposition content type missing: {head}"
+    );
+
+    // the golden family list, in order
+    let helps: Vec<&str> = body
+        .lines()
+        .filter_map(|l| l.strip_prefix("# HELP "))
+        .map(|rest| rest.split_whitespace().next().unwrap())
+        .collect();
+    assert_eq!(helps, FAMILIES, "family set or order changed");
+
+    // no duplicate HELP/TYPE headers
+    let mut seen = std::collections::HashSet::new();
+    for line in body.lines() {
+        if line.starts_with("# HELP") || line.starts_with("# TYPE") {
+            let key: Vec<&str> = line.split_whitespace().take(3).collect();
+            assert!(seen.insert(key.join(" ")), "duplicate header: {line}");
+        }
+    }
+
+    // the load left its footprint in the hot-path stage histograms
+    for stage in ["head_parse", "body_parse", "ingress_wait", "phi_gemm", "state_fold", "sse_write"]
+    {
+        let prefix = format!("macformer_stage_duration_seconds_count{{stage=\"{stage}\"}} ");
+        assert!(series_value(&body, &prefix) > 0, "stage {stage} recorded nothing");
+    }
+    assert!(series_value(&body, "macformer_tokens_total ") > 0);
+    assert!(series_value(&body, "macformer_http_responses_total{class=\"2xx\"} ") > 0);
+    // a 5xx would mean the engine failed a request during the load
+    assert_eq!(series_value(&body, "macformer_http_responses_total{class=\"5xx\"} "), 0);
+    // no durability store behind this server: families present, zero
+    assert_eq!(series_value(&body, "macformer_recoveries_total "), 0);
+
+    // histogram invariants on real output: cumulative monotone buckets,
+    // +Inf equal to _count, for every labelled stage series
+    for stage in macformer::serve::obs::Stage::ALL {
+        let tag = format!("stage=\"{}\"", stage.name());
+        let mut last = 0u64;
+        let mut inf = None;
+        for line in body.lines() {
+            let Some(rest) = line.strip_prefix("macformer_stage_duration_seconds_bucket{") else {
+                continue;
+            };
+            if !rest.starts_with(tag.as_str()) {
+                continue;
+            }
+            let v: u64 = rest.split('}').nth(1).unwrap().trim().parse().unwrap();
+            if rest.contains("le=\"+Inf\"") {
+                inf = Some(v);
+            } else {
+                assert!(v >= last, "non-monotone bucket: {line}");
+                last = v;
+            }
+        }
+        let inf = inf.unwrap_or_else(|| panic!("no +Inf bucket for {}", stage.name()));
+        let count = series_value(
+            &body,
+            &format!("macformer_stage_duration_seconds_count{{{tag}}} "),
+        );
+        assert_eq!(inf, count, "+Inf != _count for {}", stage.name());
+        assert!(inf >= last);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request ids: echoed on the wire, attached to trace spans
+// ---------------------------------------------------------------------------
+
+#[test]
+fn request_id_is_echoed_and_lands_in_the_exported_trace() {
+    let cfg = small_cfg();
+    let server = server_for(&cfg);
+    let addr = server.local_addr();
+
+    let (status, head, _) = one_shot(
+        addr,
+        b"GET /healthz HTTP/1.1\r\nHost: t\r\nx-request-id: obs-probe-42\r\n\r\n",
+    );
+    server.shutdown();
+    assert_eq!(status, 200);
+    assert!(
+        head.contains("x-request-id: obs-probe-42"),
+        "request id not echoed: {head}"
+    );
+
+    // the span recorded while parsing that request carries the id hash
+    let want = format!("{:016x}", obs::hash_request_id(b"obs-probe-42"));
+    let trace = obs::trace::chrome_trace_json();
+    let doc = macformer::util::json::parse(&trace).expect("trace is strict JSON");
+    let events = match doc.get("traceEvents") {
+        Value::Arr(events) => events,
+        other => panic!("traceEvents is not an array: {other:?}"),
+    };
+    assert!(!events.is_empty(), "trace has no events");
+    let mut saw_meta = false;
+    let mut saw_req = false;
+    for ev in events {
+        match ev.get("ph").as_str() {
+            Some("M") => {
+                assert_eq!(ev.get("name").as_str(), Some("process_name"));
+                saw_meta = true;
+            }
+            Some("X") => {
+                assert!(ev.get("ts").as_f64().is_some(), "X event without ts");
+                assert!(ev.get("dur").as_f64().is_some(), "X event without dur");
+                if ev.get("args").get("req").as_str() == Some(want.as_str()) {
+                    saw_req = true;
+                }
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert!(saw_meta, "no process_name metadata events");
+    assert!(saw_req, "no span carried the request id hash {want}");
+}
