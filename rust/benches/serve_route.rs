@@ -1,0 +1,324 @@
+//! Bench §Serve/route — the consistent-hashing router vs a direct
+//! backend connection.
+//!
+//! Three arms, one process:
+//!
+//! 1. **direct** — the socket load run straight at a gateway (the
+//!    floor the router must chase).
+//! 2. **routed** — the identical workload through a [`Router`]
+//!    fronting a fresh gateway. Both arms verify bit-exact against
+//!    in-process decode; the throughput ratio is gated: the proxy hop
+//!    must stay within 10% (`within_10pct` in the JSON — the CI
+//!    router-smoke job greps it, `MACFORMER_ROUTE_OVERHEAD` widens the
+//!    ratio ceiling for noisy runners).
+//! 3. **recovery** — two durable gateways behind a router; streams are
+//!    opened and prefilled through the router, the backend holding
+//!    streams is stopped, and the measurement is the wall-clock from
+//!    "backend gone" to "every orphaned stream remapped to the
+//!    survivor and answering its resume probe" (`recovery_ms`).
+//!    The full SIGKILL drill with bit-exact replay lives in
+//!    `macformer route --kill-node`; this arm times the router's
+//!    detect-and-migrate path in-process, where a bench can run it.
+//!
+//! Knobs (env): MACFORMER_ROUTE_STREAMS (8), MACFORMER_ROUTE_TOKENS
+//! (48), MACFORMER_SERVE_D (32), MACFORMER_SERVE_DV (32),
+//! MACFORMER_SERVE_FEATURES (64), MACFORMER_SERVE_MIN_BATCH (2),
+//! MACFORMER_BENCH_KERNEL (exp), MACFORMER_BENCH_BACKEND (host),
+//! MACFORMER_ROUTE_OVERHEAD (1.10), MACFORMER_THREADS.
+//!
+//! Run with: `cargo bench --bench serve_route`
+//!
+//! [`Router`]: macformer::serve::Router
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::str::FromStr;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use macformer::attn::{Backend, Kernel};
+use macformer::fastpath;
+use macformer::serve::loadgen::LoadConfig;
+use macformer::serve::net::{run_socket, NetConfig};
+use macformer::serve::obs;
+use macformer::serve::{
+    BackendSpec, DurabilityConfig, EngineSpec, Router, RouterConfig, ServeConfig, Server,
+};
+use macformer::util::json::Value;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_parse<T: FromStr>(name: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match std::env::var(name) {
+        Err(_) => Ok(default),
+        Ok(raw) => T::from_str(&raw).map_err(|e| anyhow!("{name}={raw:?}: {e}")),
+    }
+}
+
+fn server_for(cfg: &LoadConfig, workers: usize, data_dir: Option<&std::path::Path>) -> Result<Server> {
+    let spec = EngineSpec {
+        kernel: cfg.kernel,
+        backend: cfg.backend,
+        head_dim: cfg.head_dim,
+        dv: cfg.dv,
+        num_features: cfg.num_features,
+        seed: cfg.seed,
+    };
+    let serve = ServeConfig { min_batch: cfg.min_batch, ..ServeConfig::new(cfg.streams, cfg.dv) };
+    let net = NetConfig { workers, ..NetConfig::default() };
+    let durability = data_dir.map(|dir| {
+        let mut d = DurabilityConfig::new(dir.to_string_lossy().into_owned());
+        // every tick on disk: the recovery arm kills the node moments
+        // after the last prefill and the store must already hold it
+        d.sync_every_ticks = 1;
+        d
+    });
+    Server::start(net, spec, serve, cfg.resilience.clone(), durability)
+        .map_err(|e| anyhow!("backend start: {e}"))
+}
+
+/// One request on a fresh connection (write side half-closed after the
+/// send, so the keep-alive server answers and hangs up): (status, body).
+fn one_shot(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let _ = stream.shutdown(Shutdown::Write);
+    let mut buf = Vec::new();
+    let _ = stream.read_to_end(&mut buf);
+    let text = String::from_utf8_lossy(&buf).into_owned();
+    let split = text.find("\r\n\r\n").ok_or_else(|| anyhow!("no response head in {text:?}"))?;
+    let status: u16 = text[..split]
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line in {text:?}"))?;
+    Ok((status, text[split + 4..].to_string()))
+}
+
+/// Arm 3: two durable gateways behind a router; stop the one holding
+/// streams; return (recovery_ms, victim_streams, migrations_delta).
+fn measure_recovery(cfg: &LoadConfig, base: &std::path::Path) -> Result<(f64, usize, u64)> {
+    let dirs = [base.join("node0"), base.join("node1")];
+    let mut servers: Vec<Option<Server>> = Vec::new();
+    let mut backends = Vec::new();
+    for dir in &dirs {
+        std::fs::create_dir_all(dir)?;
+        let server = server_for(cfg, 8, Some(dir))?;
+        backends.push(BackendSpec {
+            addr: server.local_addr().to_string(),
+            data_dir: Some(dir.clone()),
+        });
+        servers.push(Some(server));
+    }
+    let router = Router::start(RouterConfig {
+        workers: 4,
+        seed: cfg.seed,
+        probe_interval: Duration::from_millis(10),
+        fail_threshold: 3,
+        recover_threshold: 2,
+        backends,
+        ..RouterConfig::default()
+    })
+    .map_err(|e| anyhow!("router start: {e}"))?;
+    let addr = router.local_addr().to_string();
+
+    // open a small fleet of streams and prefill two rows into each, so
+    // the migrated record carries real fold state
+    let q: Vec<String> = (0..cfg.head_dim).map(|i| format!("{}", (i % 3) as f32 * 0.25)).collect();
+    let v: Vec<String> = (0..cfg.dv).map(|i| format!("{}", (i % 5) as f32 * 0.125)).collect();
+    let row = format!("{{\"q\":[{0}],\"k\":[{0}],\"v\":[{1}]}}", q.join(","), v.join(","));
+    let mut ids = Vec::new();
+    for _ in 0..6 {
+        let (status, body) = one_shot(&addr, "POST", "/v1/streams", "{}")?;
+        if status != 201 {
+            bail!("open through router answered {status}: {body}");
+        }
+        let rid = body.split('"').nth(3).ok_or_else(|| anyhow!("no id in {body}"))?.to_string();
+        for _ in 0..2 {
+            let (status, body) = one_shot(&addr, "POST", &format!("/v1/streams/{rid}/prefill"), &row)?;
+            if status != 200 {
+                bail!("prefill through router answered {status}: {body}");
+            }
+        }
+        ids.push(rid);
+    }
+
+    // the victim is whichever backend holds more streams
+    let map = router.stream_map();
+    let on0 = map.iter().filter(|(_, b)| *b == 0).count();
+    let victim = if on0 * 2 >= map.len() { 0 } else { 1 };
+    let survivor = 1 - victim;
+    let victims: Vec<u64> =
+        map.iter().filter(|(_, b)| *b == victim).map(|(sid, _)| *sid).collect();
+    if victims.is_empty() {
+        bail!("hash ring left backend {victim} empty; nothing to migrate");
+    }
+    let migrations_before = obs::router_migrations();
+
+    // stop the victim; the clock runs from "gone" to "every orphan
+    // remapped to the survivor and answering its resume probe"
+    servers[victim].take().expect("victim server").shutdown();
+    let started = Instant::now();
+    let deadline = started + Duration::from_secs(30);
+    loop {
+        let map = router.stream_map();
+        if victims.iter().all(|sid| map.iter().any(|(s, b)| s == sid && *b == survivor)) {
+            break;
+        }
+        if Instant::now() > deadline {
+            bail!("streams still mapped to the dead backend after 30s");
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for sid in &victims {
+        let (status, body) = one_shot(&addr, "GET", &format!("/v1/streams/r-{sid}"), "")?;
+        if status != 200 || !body.contains("\"tokens\":2") {
+            bail!("migrated stream r-{sid} probe answered {status}: {body}");
+        }
+    }
+    let recovery_ms = started.elapsed().as_secs_f64() * 1e3;
+    let migrations = obs::router_migrations() - migrations_before;
+
+    for rid in &ids {
+        let _ = one_shot(&addr, "DELETE", &format!("/v1/streams/{rid}"), "");
+    }
+    router.shutdown();
+    if let Some(s) = servers[survivor].take() {
+        s.shutdown();
+    }
+    Ok((recovery_ms, victims.len(), migrations))
+}
+
+fn main() -> Result<()> {
+    macformer::util::logging::init();
+    obs::reset();
+    let streams = env_usize("MACFORMER_ROUTE_STREAMS", 8);
+    let tokens = env_usize("MACFORMER_ROUTE_TOKENS", 48);
+    let kernel: Kernel = env_parse("MACFORMER_BENCH_KERNEL", Kernel::Exp)?;
+    let backend: Backend = env_parse("MACFORMER_BENCH_BACKEND", Backend::HostFast)?;
+    let overhead_ceiling = env_f64("MACFORMER_ROUTE_OVERHEAD", 1.10);
+    let cfg = LoadConfig {
+        streams,
+        tokens,
+        prompt: 0,
+        head_dim: env_usize("MACFORMER_SERVE_D", 32),
+        dv: env_usize("MACFORMER_SERVE_DV", 32),
+        num_features: env_usize("MACFORMER_SERVE_FEATURES", 64),
+        kernel,
+        backend,
+        min_batch: env_usize("MACFORMER_SERVE_MIN_BATCH", 2),
+        verify: true,
+        ..LoadConfig::default()
+    };
+    println!(
+        "=== §Serve/route: {streams} streams x {tokens} tokens, kernel {kernel}, \
+         backend {backend}, {} threads ===",
+        fastpath::parallel::num_threads(),
+    );
+
+    // --- arm 1: direct to a gateway ---
+    let server = server_for(&cfg, streams + 8, None)?;
+    let direct = run_socket(&cfg, &server.local_addr().to_string())?;
+    server.shutdown();
+    println!("direct:\n{}\n", direct.render());
+
+    // --- arm 2: the same workload through the router ---
+    let server = server_for(&cfg, streams + 8, None)?;
+    let router = Router::start(RouterConfig {
+        workers: streams + 2,
+        seed: cfg.seed,
+        backends: vec![BackendSpec { addr: server.local_addr().to_string(), data_dir: None }],
+        ..RouterConfig::default()
+    })
+    .map_err(|e| anyhow!("router start: {e}"))?;
+    let routed = run_socket(&cfg, &router.local_addr().to_string())?;
+    router.shutdown();
+    server.shutdown();
+    println!("routed:\n{}\n", routed.render());
+
+    // --- arm 3: failover recovery time ---
+    let base = std::env::temp_dir().join(format!("macformer-route-bench-{}", std::process::id()));
+    let recovery = measure_recovery(&cfg, &base);
+    let _ = std::fs::remove_dir_all(&base);
+    let (recovery_ms, recovered_streams, migrations) = recovery?;
+
+    let overhead = if routed.tokens_per_sec > 0.0 {
+        direct.tokens_per_sec / routed.tokens_per_sec
+    } else {
+        f64::INFINITY
+    };
+    let within_10pct = overhead <= overhead_ceiling;
+    println!(
+        "routed {:.0} tok/s vs direct {:.0} tok/s ({overhead:.3}x, ceiling {overhead_ceiling:.2}x); \
+         added latency p50 {:+.6}s p99 {:+.6}s; \
+         failover recovered {recovered_streams} streams in {recovery_ms:.0} ms ({migrations} migrations)",
+        routed.tokens_per_sec,
+        direct.tokens_per_sec,
+        routed.latency_p50 - direct.latency_p50,
+        routed.latency_p99 - direct.latency_p99,
+    );
+
+    let doc = Value::obj(vec![
+        ("streams", Value::num(streams as f64)),
+        ("tokens_per_stream", Value::num(tokens as f64)),
+        ("kernel", Value::str(kernel.name())),
+        ("threads", Value::num(fastpath::parallel::num_threads() as f64)),
+        ("simd_supported", Value::Bool(fastpath::simd::supported())),
+        ("direct_tokens_per_sec", Value::num(direct.tokens_per_sec)),
+        ("routed_tokens_per_sec", Value::num(routed.tokens_per_sec)),
+        ("proxy_overhead", Value::num(overhead)),
+        ("overhead_ceiling", Value::num(overhead_ceiling)),
+        ("added_latency_p50_s", Value::num(routed.latency_p50 - direct.latency_p50)),
+        ("added_latency_p99_s", Value::num(routed.latency_p99 - direct.latency_p99)),
+        // CI router-smoke greps the three below
+        ("within_10pct", Value::Bool(within_10pct)),
+        ("verified", Value::Bool(direct.verified == Some(true) && routed.verified == Some(true))),
+        ("http_5xx", Value::num((direct.http_5xx + routed.http_5xx) as f64)),
+        ("recovery_ms", Value::num(recovery_ms)),
+        ("recovered_streams", Value::num(recovered_streams as f64)),
+        ("router_migrations", Value::num(migrations as f64)),
+        ("direct", direct.to_json()),
+        ("routed", routed.to_json()),
+    ]);
+    std::fs::write("BENCH_serve_route.json", doc.to_string())?;
+    println!("serve/route reports written to BENCH_serve_route.json");
+
+    if direct.verified != Some(true)
+        || routed.verified != Some(true)
+        || direct.stream_errors + routed.stream_errors > 0
+        || direct.http_5xx + routed.http_5xx > 0
+    {
+        bail!(
+            "serve/route degraded: direct verified {:?} ({} errors, {} x 5xx), \
+             routed verified {:?} ({} errors, {} x 5xx)",
+            direct.verified,
+            direct.stream_errors,
+            direct.http_5xx,
+            routed.verified,
+            routed.stream_errors,
+            routed.http_5xx
+        );
+    }
+    if !within_10pct {
+        bail!(
+            "proxy overhead {overhead:.3}x exceeds the {overhead_ceiling:.2}x ceiling \
+             (raise MACFORMER_ROUTE_OVERHEAD for a noisy runner)"
+        );
+    }
+    Ok(())
+}

@@ -20,7 +20,16 @@
 //!                                gateway over TCP, --kill-restart --data-dir
 //!                                PATH runs the crash-restart chaos drill,
 //!                                --trace-out FILE dumps the recorded stage
-//!                                spans as Chrome trace JSON on exit
+//!                                spans as Chrome trace JSON on exit,
+//!                                --retry-budget-ms caps the wall-clock a
+//!                                loadgen client spends retrying one request
+//!   route                        consistent-hashing router fronting N serve
+//!                                gateways (--backends a,b[,c] or --spawn N
+//!                                --data-dir BASE to launch a local fleet;
+//!                                probes /healthz, fails over dead nodes by
+//!                                migrating their streams to ring successors);
+//!                                --kill-node --nodes N --data-dir BASE runs
+//!                                the SIGKILL failover chaos drill instead
 //!   datagen                      dump synthetic dataset samples
 //!
 //! Every run prints a human summary to stdout and (with --out-json) a
@@ -58,16 +67,20 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("microbench") => cmd_microbench(args),
         Some("fig3") => cmd_fig3(args),
         Some("serve") => cmd_serve(args),
+        Some("route") => cmd_route(args),
         Some("datagen") => cmd_datagen(args),
         Some(other) => bail!(
-            "unknown subcommand {other:?}; try: info, train, sweep, microbench, fig3, serve, datagen"
+            "unknown subcommand {other:?}; try: info, train, sweep, microbench, fig3, serve, \
+             route, datagen"
         ),
         None => {
             println!(
                 "macformer v{} — Random Maclaurin Feature Attention",
                 macformer::VERSION
             );
-            println!("usage: macformer <info|train|sweep|microbench|fig3|serve|datagen> [flags]");
+            println!(
+                "usage: macformer <info|train|sweep|microbench|fig3|serve|route|datagen> [flags]"
+            );
             Ok(())
         }
     }
@@ -318,10 +331,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let checkpoint_every = args.u64_flag("checkpoint-every", 1024).map_err(|e| anyhow!(e))?;
     let kill_restart = args.switch("kill-restart");
     let trace_out = args.opt_flag("trace-out");
+    let retry_budget_ms = args
+        .u64_flag("retry-budget-ms", macformer::serve::net::DEFAULT_RETRY_BUDGET_MS)
+        .map_err(|e| anyhow!(e))?;
     args.check_unknown().map_err(|e| anyhow!(e))?;
     if listen.is_some() && connect.is_some() {
         bail!("--listen and --connect are mutually exclusive");
     }
+    // Wall-clock cap on a single request's retry loop (0 = attempts
+    // only) — matters behind a router that answers `503 migrating`
+    // while a stream's home node is being failed over.
+    macformer::serve::net::set_retry_budget_ms(retry_budget_ms);
     // --trace-out: dump every recorded stage span as Chrome trace JSON
     // (chrome://tracing / Perfetto) when the run ends. Written on the
     // degraded paths too — a trace of a bad run is the useful one.
@@ -452,6 +472,216 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `macformer route` — the multi-node front door. Two server shapes
+/// (`--backends` fronting already-running gateways, `--spawn N`
+/// launching a local fleet of child gateways) plus the `--kill-node`
+/// chaos drill, which SIGKILLs the most-loaded backend mid-decode and
+/// verifies the survivors plus the migrated casualties finish
+/// bit-identical to a run where nothing died.
+fn cmd_route(args: &Args) -> Result<()> {
+    use macformer::serve::loadgen::LoadConfig;
+    use macformer::serve::router::{run_kill_node, spawn_node};
+    use macformer::serve::{BackendSpec, Router, RouterConfig};
+    use std::path::PathBuf;
+    use std::str::FromStr;
+    use std::time::Duration;
+
+    let kernel_flag = args.str_flag("kernel", "exp");
+    let kernel = Kernel::from_str(&kernel_flag).map_err(|e| anyhow!("--kernel: {e}"))?;
+    let backend_flag = args.str_flag("backend", "host");
+    let backend = Backend::from_str(&backend_flag).map_err(|e| anyhow!("--backend: {e}"))?;
+    // The engine set every spawned gateway runs with (and the load the
+    // kill-node drill drives). Must match across the fleet: a stream
+    // migrates only between engines with identical specs.
+    let cfg = LoadConfig {
+        streams: args.usize_flag("streams", 8).map_err(|e| anyhow!(e))?,
+        tokens: args.usize_flag("tokens", 64).map_err(|e| anyhow!(e))?,
+        head_dim: args.usize_flag("head-dim", 32).map_err(|e| anyhow!(e))?,
+        dv: args.usize_flag("dv", 32).map_err(|e| anyhow!(e))?,
+        num_features: args.usize_flag("features", 64).map_err(|e| anyhow!(e))?,
+        kernel,
+        backend,
+        min_batch: args.usize_flag("min-batch", 2).map_err(|e| anyhow!(e))?,
+        seed: args.u64_flag("seed", 7).map_err(|e| anyhow!(e))?,
+        ..LoadConfig::default()
+    };
+    let listen = args.str_flag("listen", "127.0.0.1:0");
+    let port_file = args.opt_flag("port-file");
+    let backends_flag = args.opt_flag("backends");
+    let data_dirs_flag = args.opt_flag("data-dirs");
+    let spawn = args.usize_flag("spawn", 0).map_err(|e| anyhow!(e))?;
+    let data_dir = args.opt_flag("data-dir");
+    let workers = args.usize_flag("workers", 16).map_err(|e| anyhow!(e))?;
+    let vnodes = args.usize_flag("vnodes", 64).map_err(|e| anyhow!(e))?;
+    let probe_interval_ms = args.u64_flag("probe-interval-ms", 20).map_err(|e| anyhow!(e))?;
+    let probe_timeout_ms = args.u64_flag("probe-timeout-ms", 250).map_err(|e| anyhow!(e))?;
+    let fail_threshold = args.u64_flag("fail-threshold", 5).map_err(|e| anyhow!(e))? as u32;
+    let recover_threshold = args.u64_flag("recover-threshold", 3).map_err(|e| anyhow!(e))? as u32;
+    let retry_budget_ms = args.u64_flag("retry-budget-ms", 500).map_err(|e| anyhow!(e))?;
+    let kill_node = args.switch("kill-node");
+    let nodes = args.usize_flag("nodes", 3).map_err(|e| anyhow!(e))?;
+    let out_json = args.opt_flag("out-json");
+    args.check_unknown().map_err(|e| anyhow!(e))?;
+
+    // --kill-node: self-contained chaos drill (fleet + router + load +
+    // SIGKILL + failover + bit-exact verification), then exit
+    if kill_node {
+        let dir = data_dir
+            .as_deref()
+            .ok_or_else(|| anyhow!("--kill-node needs --data-dir for the node stores"))?;
+        let report = run_kill_node(&cfg, std::path::Path::new(dir), nodes)?;
+        println!("{}", report.render());
+        if let Some(path) = out_json {
+            std::fs::write(&path, report.to_json().to_string())?;
+        }
+        if !report.verified
+            || report.stream_errors > 0
+            || report.non_casualty_5xx > 0
+            || report.migration_failures > 0
+        {
+            bail!(
+                "kill-node degraded: verified {}, {} stream errors, {} non-casualty 5xx, \
+                 {} failed migrations",
+                report.verified,
+                report.stream_errors,
+                report.non_casualty_5xx,
+                report.migration_failures
+            );
+        }
+        return Ok(());
+    }
+
+    // Assemble the backend fleet: either addresses of gateways someone
+    // else runs, or children this process spawns and owns.
+    if (backends_flag.is_some() as usize) + ((spawn > 0) as usize) != 1 {
+        bail!("route needs exactly one of --backends a,b,... or --spawn N --data-dir BASE");
+    }
+    let mut children: Vec<std::process::Child> = Vec::new();
+    let mut specs: Vec<BackendSpec> = Vec::new();
+    if let Some(list) = backends_flag {
+        let addrs: Vec<&str> = list.split(',').filter(|s| !s.is_empty()).collect();
+        let dirs: Vec<String> = match &data_dirs_flag {
+            Some(s) => s.split(',').map(str::to_string).collect(),
+            None => Vec::new(),
+        };
+        if !dirs.is_empty() && dirs.len() != addrs.len() {
+            bail!(
+                "--data-dirs lists {} entries for {} --backends (one per address; \
+                 leave an entry empty for a backend with no durable store)",
+                dirs.len(),
+                addrs.len()
+            );
+        }
+        for (i, addr) in addrs.iter().enumerate() {
+            let dir = dirs.get(i).filter(|d| !d.is_empty()).map(PathBuf::from);
+            specs.push(BackendSpec { addr: addr.to_string(), data_dir: dir });
+        }
+    } else {
+        let base = data_dir
+            .as_deref()
+            .ok_or_else(|| anyhow!("--spawn needs --data-dir BASE for the node stores"))?;
+        let base = std::path::Path::new(base);
+        // each gateway needs enough workers that the router's proxy
+        // pool (one pooled connection per router worker) plus the
+        // prober plus a migration transfer never starve
+        let node_workers = workers + 8;
+        for n in 0..spawn {
+            let dir = base.join(format!("node{n}"));
+            match spawn_node(&cfg, &dir, node_workers) {
+                Ok((child, addr)) => {
+                    children.push(child);
+                    specs.push(BackendSpec { addr, data_dir: Some(dir) });
+                }
+                Err(e) => {
+                    for mut c in children {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                    return Err(anyhow!("spawning node {n}: {e}"));
+                }
+            }
+        }
+    }
+
+    let rcfg = RouterConfig {
+        listen,
+        workers,
+        vnodes,
+        seed: cfg.seed,
+        probe_interval: Duration::from_millis(probe_interval_ms.max(1)),
+        probe_timeout: Duration::from_millis(probe_timeout_ms.max(1)),
+        fail_threshold,
+        recover_threshold,
+        retry_budget: Duration::from_millis(retry_budget_ms),
+        backends: specs,
+        ..RouterConfig::default()
+    };
+    let router = match Router::start(rcfg) {
+        Ok(r) => r,
+        Err(e) => {
+            for mut c in children {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            return Err(e);
+        }
+    };
+    let local = router.local_addr();
+    // written only once the router is accepting and the prober thread
+    // is running — harnesses key off this file
+    if let Some(path) = port_file {
+        std::fs::write(&path, local.port().to_string())?;
+    }
+    println!(
+        "routing on http://{local}  ({} backends, {} spawned, node {})",
+        router.backend_states().len(),
+        children.len(),
+        router.node_id()
+    );
+    for (addr, state, node) in router.backend_states() {
+        println!("  backend {addr}  {}  {node}", state.name());
+    }
+
+    // SIGTERM or POST /admin/drain: stop admitting at the router, pass
+    // the drain down to spawned children, wait for them, exit 0 only
+    // if every child drained cleanly
+    install_sigterm_handler();
+    loop {
+        let term = SIGTERM_SEEN.load(std::sync::atomic::Ordering::SeqCst);
+        if term || router.drain_requested() {
+            eprintln!("draining: refusing new streams, draining {} children", children.len());
+            router.begin_drain();
+            for child in &children {
+                // SAFETY: signals a child this process spawned and
+                // still owns; SIGTERM is the gateway's drain trigger.
+                unsafe {
+                    libc::kill(child.id() as libc::pid_t, libc::SIGTERM);
+                }
+            }
+            let mut failed = 0usize;
+            for mut child in children {
+                match child.wait() {
+                    Ok(st) if st.success() => {}
+                    Ok(st) => {
+                        eprintln!("child gateway exited {st}");
+                        failed += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("waiting on child gateway: {e}");
+                        failed += 1;
+                    }
+                }
+            }
+            router.shutdown();
+            if failed > 0 {
+                bail!("{failed} child gateways failed to drain cleanly");
+            }
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
 }
 
 fn cmd_datagen(args: &Args) -> Result<()> {

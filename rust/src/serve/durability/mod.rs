@@ -96,6 +96,88 @@ impl Recovery {
     }
 }
 
+/// One stream's durable state extracted from a store — the cross-node
+/// failover payload. `record` is `None` when the stream was opened
+/// after the last checkpoint (it starts from an empty fold state);
+/// `ops` are the stream's journaled prefills/tokens after the
+/// checkpoint, in order, to replay on top through the normal fold
+/// path.
+#[derive(Debug, Clone)]
+pub struct StreamRecovery {
+    /// The MACS state record from the last checkpoint, if the stream
+    /// existed then.
+    pub record: Option<Vec<u8>>,
+    /// Whether the checkpointed stream sat in the spill arena.
+    pub hibernated: bool,
+    /// A token staged at checkpoint time but not yet folded; replay it
+    /// through the normal submit path before the journal tail.
+    pub pending: Option<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+    /// This stream's journal tail (Prefill/Token ops only).
+    pub ops: Vec<JournalOp>,
+}
+
+/// Read a store's recovery state **without taking ownership**: no
+/// torn-tail truncation, no stale-journal removal, no file creation.
+/// Safe to point at a *dead* node's data dir while its files sit
+/// untouched — the failover path another node uses to adopt streams.
+pub fn read_store(dir: &Path) -> Result<Recovery> {
+    let checkpoint = match std::fs::read(Store::checkpoint_path(dir)) {
+        Ok(bytes) => Some(CheckpointImage::decode(&bytes)?),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+        Err(e) => return Err(e),
+    };
+    let epoch = checkpoint.as_ref().map(|c| c.epoch).unwrap_or(0);
+    let (ops, truncated_bytes) = match std::fs::read(Store::journal_path(dir, epoch)) {
+        Ok(bytes) => {
+            let scan = journal::scan_journal(&bytes)?;
+            (scan.ops, (bytes.len() - scan.good_len) as u64)
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => (Vec::new(), 0),
+        Err(e) => return Err(e),
+    };
+    Ok(Recovery { checkpoint, ops, truncated_bytes })
+}
+
+/// Single-stream recovery from (another node's) store at `dir`:
+/// read-only, see [`read_store`]. Returns `Ok(None)` when the stream
+/// is unknown to the store or its journal tail closed it.
+pub fn recover_stream(dir: &Path, sid: u64) -> Result<Option<StreamRecovery>> {
+    let rec = read_store(dir)?;
+    let mut out: Option<StreamRecovery> = None;
+    if let Some(ckpt) = &rec.checkpoint {
+        if let Some(s) = ckpt.streams.iter().find(|s| s.sid == sid) {
+            out = Some(StreamRecovery {
+                record: Some(s.record.clone()),
+                hibernated: s.hibernated,
+                pending: s.pending.clone(),
+                ops: Vec::new(),
+            });
+        }
+    }
+    for op in rec.ops.into_iter().filter(|op| op.sid() == sid) {
+        match op {
+            JournalOp::Open { .. } => {
+                out = Some(StreamRecovery {
+                    record: None,
+                    hibernated: false,
+                    pending: None,
+                    ops: Vec::new(),
+                });
+            }
+            JournalOp::Close { .. } => out = None,
+            op => {
+                // a Prefill/Token for a stream the store never opened
+                // would be structural corruption; recovery is lenient
+                // and drops it (the op subsumes nothing)
+                if let Some(sr) = out.as_mut() {
+                    sr.ops.push(op);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
 /// The durable store: one open journal file plus the checkpoint
 /// machinery. Owned by the serve engine thread; every method is
 /// synchronous and returns typed I/O errors (the engine degrades to

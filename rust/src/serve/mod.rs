@@ -207,6 +207,45 @@
 //! mid-load at a seeded threshold, restart, resume every survivor, and
 //! verify all rows bit-identical with zero 5xx.
 //!
+//! # Multi-node quickstart
+//!
+//! [`router`] scales the gateway horizontally: one router process
+//! fronts N independent gateways, consistent-hashes new streams across
+//! them, health-checks every node, and migrates streams off a dead
+//! node onto its ring successor — transparently to clients, which keep
+//! talking to one address with one stream id.
+//!
+//! ```text
+//! # spawn 3 gateways (each on its own durable data-dir under ./fleet)
+//! # plus the router fronting them:
+//! macformer route --listen 127.0.0.1:8070 --spawn 3 --data-dir ./fleet \
+//!   --streams 8
+//!
+//! # or front gateways you started yourself (pass each node's
+//! # data-dir so dead-node recovery can read its durable store):
+//! macformer route --listen 127.0.0.1:8070 \
+//!   --backends 127.0.0.1:8077,127.0.0.1:8078 \
+//!   --data-dirs ./n0,./n1
+//!
+//! # clients use the same wire protocol, with router-scoped ids:
+//! curl -s -X POST http://127.0.0.1:8070/v1/streams   # {"stream":"r-0"}
+//! curl -s http://127.0.0.1:8070/healthz              # per-backend states
+//! curl -s http://127.0.0.1:8070/metrics              # router counters
+//!
+//! # move a stream by hand (the same path failover takes):
+//! curl -s -X POST http://127.0.0.1:8070/admin/migrate -d '{"stream":"r-0"}'
+//!
+//! # drive load through the router exactly like a single gateway:
+//! macformer serve --connect 127.0.0.1:8070 --streams 8 --verify
+//! ```
+//!
+//! Every proxied response carries the owning backend's
+//! `x-macformer-node` id, so placement stays observable without any
+//! client-side awareness. `macformer route --kill-node --nodes 3
+//! --data-dir DIR` runs the multi-node chaos drill: SIGKILL the
+//! most-loaded backend mid-load and verify survivors bit-identical,
+//! zero non-casualty 5xx, every casualty migrated and resumed.
+//!
 //! # Lifecycle
 //!
 //! ```
@@ -246,12 +285,14 @@ pub mod net;
 pub mod obs;
 pub mod pool;
 pub mod resilience;
+pub mod router;
 pub mod scheduler;
 pub mod telemetry;
 
 pub use durability::DurabilityConfig;
 pub use loadgen::{Arrival, LoadConfig, LoadReport};
 pub use net::{EngineSpec, NetConfig, NetLoadReport, Server};
+pub use router::{BackendSpec, KillNodeReport, NodeState, Router, RouterConfig};
 pub use pool::{StreamId, StreamPool};
 pub use resilience::{FaultPlan, ResilienceConfig, SessionId, SpillMode, StreamStatus, Supervisor};
 pub use scheduler::{Scheduler, TickStats};

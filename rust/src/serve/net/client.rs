@@ -42,18 +42,51 @@ use crate::util::json::Value;
 use super::wire::{Scan, TokenBody};
 
 /// Give up on a retryable status after this many attempts — keeps a
-/// misbehaving server from hanging the generator. Together with the
-/// capped exponential backoff this bounds the total wait per request
-/// to a couple of minutes.
+/// misbehaving server from hanging the generator. The wall-clock
+/// budget below usually fires first.
 const MAX_RETRIES: usize = 2048;
 
 /// Ceiling for a single backoff sleep, in milliseconds.
 const MAX_BACKOFF_MS: u64 = 50;
 
-/// A retryable request that exhausted its attempt budget. Typed (and
-/// surfaced through `anyhow`'s chain, so `downcast_ref` works) to keep
-/// "the server kept saying come back later" distinguishable from
-/// protocol failures.
+/// Default per-request retry wall-clock budget (see
+/// [`set_retry_budget_ms`]).
+pub const DEFAULT_RETRY_BUDGET_MS: u64 = 60_000;
+
+/// Total wall-clock a single request may spend in its retry loop
+/// before giving up, in milliseconds. The attempt cap alone bounds
+/// the wait only indirectly (attempts x max backoff); behind a router
+/// that keeps answering `503 migrating` for a lost stream, an
+/// explicit time budget is the difference between a clean
+/// [`RetryGaveUp`] and a client that looks hung. `0` disables the
+/// wall-clock cap, leaving only [`MAX_RETRIES`]. Surfaced on the CLI
+/// as `--retry-budget-ms`.
+static RETRY_BUDGET_MS: AtomicU64 = AtomicU64::new(DEFAULT_RETRY_BUDGET_MS);
+
+/// Set the per-request retry wall-clock budget in milliseconds
+/// (`0` = attempt-capped only). Process-global: applies to every
+/// loadgen client thread.
+pub fn set_retry_budget_ms(ms: u64) {
+    RETRY_BUDGET_MS.store(ms, Ordering::SeqCst);
+}
+
+/// Sleep before retry `attempt` if the wall-clock budget still covers
+/// the wait; `false` means the budget is spent and the caller must
+/// give up now (with the elapsed time in its [`RetryGaveUp`]).
+fn retry_sleep(started: Instant, attempt: usize, retry_after: Option<u64>, salt: u64) -> bool {
+    let wait = Duration::from_millis(backoff_ms(attempt, retry_after, salt));
+    let budget = RETRY_BUDGET_MS.load(Ordering::SeqCst);
+    if budget != 0 && started.elapsed() + wait > Duration::from_millis(budget) {
+        return false;
+    }
+    std::thread::sleep(wait);
+    true
+}
+
+/// A retryable request that exhausted its attempt budget or its
+/// wall-clock budget. Typed (and surfaced through `anyhow`'s chain,
+/// so `downcast_ref` works) to keep "the server kept saying come back
+/// later" distinguishable from protocol failures.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RetryGaveUp {
     pub method: String,
@@ -61,14 +94,18 @@ pub struct RetryGaveUp {
     pub attempts: usize,
     /// The last retryable status observed before giving up.
     pub last_status: u16,
+    /// Wall-clock spent retrying when the client gave up — at most
+    /// the configured [`set_retry_budget_ms`] budget (plus one
+    /// backoff) when that cap fired.
+    pub elapsed_ms: u64,
 }
 
 impl std::fmt::Display for RetryGaveUp {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} {}: still {} after {} attempts",
-            self.method, self.path, self.last_status, self.attempts
+            "{} {}: still {} after {} attempts ({} ms)",
+            self.method, self.path, self.last_status, self.attempts, self.elapsed_ms
         )
     }
 }
@@ -80,10 +117,10 @@ impl std::error::Error for RetryGaveUp {}
 /// hint, i.e. the server says the condition is final) — retried 429s
 /// and 503s land in their own buckets.
 #[derive(Debug, Default, Clone, Copy)]
-struct RetryCounts {
-    http_429: u64,
-    http_503: u64,
-    http_5xx: u64,
+pub(crate) struct RetryCounts {
+    pub(crate) http_429: u64,
+    pub(crate) http_503: u64,
+    pub(crate) http_5xx: u64,
 }
 
 /// Sleep before retry `attempt` (0-based): exponential from the
@@ -360,7 +397,9 @@ fn request_with_retry(
     counts: &mut RetryCounts,
     salt: u64,
 ) -> Result<(Head, Vec<u8>)> {
+    let started = Instant::now();
     let mut last_status = 0u16;
+    let mut tries = 0usize;
     for attempt in 0..MAX_RETRIES {
         http.send(method, path, body)?;
         let head = http.read_head()?;
@@ -379,13 +418,17 @@ fn request_with_retry(
             _ => return Ok((head, resp_body)),
         }
         last_status = head.status;
-        std::thread::sleep(Duration::from_millis(backoff_ms(attempt, head.retry_after, salt)));
+        tries = attempt + 1;
+        if !retry_sleep(started, attempt, head.retry_after, salt) {
+            break; // wall-clock retry budget spent
+        }
     }
     Err(anyhow::Error::new(RetryGaveUp {
         method: method.into(),
         path: path.into(),
-        attempts: MAX_RETRIES,
+        attempts: tries,
         last_status,
+        elapsed_ms: started.elapsed().as_millis() as u64,
     }))
 }
 
@@ -499,8 +542,10 @@ fn drive_stream(
             let body = body_for(tokens, d, dv, range.clone());
             // admission retry loop: a 429/503 answer means nothing
             // streamed yet, so the whole segment can be re-sent
+            let started = Instant::now();
             let mut streamed = false;
             let mut last_status = 0u16;
+            let mut tries = 0usize;
             for attempt in 0..MAX_RETRIES {
                 http.send("POST", &decode_path, &body)?;
                 let head = http.read_head()?;
@@ -516,11 +561,10 @@ fn drive_stream(
                         (s, _) => bail!("decode: unexpected status {s}"),
                     }
                     last_status = head.status;
-                    std::thread::sleep(Duration::from_millis(backoff_ms(
-                        attempt,
-                        head.retry_after,
-                        salt,
-                    )));
+                    tries = attempt + 1;
+                    if !retry_sleep(started, attempt, head.retry_after, salt) {
+                        break; // wall-clock retry budget spent
+                    }
                     continue;
                 }
                 // committed stream: read frames until done/error
@@ -559,8 +603,9 @@ fn drive_stream(
                 return Err(anyhow::Error::new(RetryGaveUp {
                     method: "POST".into(),
                     path: decode_path.clone(),
-                    attempts: MAX_RETRIES,
+                    attempts: tries,
                     last_status,
+                    elapsed_ms: started.elapsed().as_millis() as u64,
                 }));
             }
             if outcome.faulted || outcome.errors > 0 {
@@ -866,7 +911,7 @@ pub fn run_socket(cfg: &LoadConfig, addr: &str) -> Result<NetLoadReport> {
 
 /// Assert the server's `/v1/spec` matches the generator config, so
 /// bit-exact verification is comparing like with like.
-fn check_spec(cfg: &LoadConfig, addr: &str) -> Result<()> {
+pub(crate) fn check_spec(cfg: &LoadConfig, addr: &str) -> Result<()> {
     let mut http = Http::connect(addr)?;
     http.send("GET", "/v1/spec", "")?;
     let head = http.read_head()?;
@@ -1001,7 +1046,7 @@ impl KillRestartReport {
 /// the middle half of the run, `[total/4, 3*total/4)` produced tokens
 /// — late enough that streams have durable state, early enough that
 /// every stream still has tokens left to resume.
-fn kill_point(cfg: &LoadConfig) -> u64 {
+pub(crate) fn kill_point(cfg: &LoadConfig) -> u64 {
     let total = (cfg.streams * cfg.tokens) as u64;
     let mut x = cfg.seed.wrapping_add(0x2545_F491_4F6C_DD1D);
     x ^= x >> 30;
@@ -1087,27 +1132,27 @@ fn spawn_serve(cfg: &LoadConfig, data_dir: &Path) -> Result<(Child, String)> {
 }
 
 /// What one stream's client holds when the kill lands.
-struct KillPhase {
+pub(crate) struct KillPhase {
     /// Empty when the open was never acked (a true casualty).
-    sid: String,
-    outs: Vec<f32>,
-    produced: usize,
-    http: RetryCounts,
+    pub(crate) sid: String,
+    pub(crate) outs: Vec<f32>,
+    pub(crate) produced: usize,
+    pub(crate) http: RetryCounts,
     /// A failure observed while the server was still alive — anything
     /// after the kill flag flips is an expected casualty, not an error.
-    error: Option<String>,
+    pub(crate) error: Option<String>,
 }
 
 /// What one stream's client brings home from the restarted server.
-struct ResumePhase {
+pub(crate) struct ResumePhase {
     /// Token count the resume probe reported (`None` = not probed:
     /// either a casualty skip or a probe failure, see `error`).
-    probed: Option<u64>,
-    outs: Vec<f32>,
-    resumed_from: usize,
-    produced: usize,
-    http: RetryCounts,
-    error: Option<String>,
+    pub(crate) probed: Option<u64>,
+    pub(crate) outs: Vec<f32>,
+    pub(crate) resumed_from: usize,
+    pub(crate) produced: usize,
+    pub(crate) http: RetryCounts,
+    pub(crate) error: Option<String>,
 }
 
 fn sid_from_open(resp: &[u8]) -> Result<String> {
@@ -1147,7 +1192,9 @@ fn decode_into(
     }
     let path = format!("/v1/streams/{sid}/decode");
     let body = body_for(tokens, d, dv, start..cfg.tokens);
+    let started = Instant::now();
     let mut last_status = 0u16;
+    let mut tries = 0usize;
     for attempt in 0..MAX_RETRIES {
         http.send("POST", &path, &body)?;
         let head = http.read_head()?;
@@ -1182,17 +1229,21 @@ fn decode_into(
             (s, _) => bail!("decode: unexpected status {s}"),
         }
         last_status = head.status;
-        std::thread::sleep(Duration::from_millis(backoff_ms(attempt, head.retry_after, salt)));
+        tries = attempt + 1;
+        if !retry_sleep(started, attempt, head.retry_after, salt) {
+            break; // wall-clock retry budget spent
+        }
     }
     Err(anyhow::Error::new(RetryGaveUp {
         method: "POST".into(),
         path,
-        attempts: MAX_RETRIES,
+        attempts: tries,
         last_status,
+        elapsed_ms: started.elapsed().as_millis() as u64,
     }))
 }
 
-fn drive_to_kill(
+pub(crate) fn drive_to_kill(
     addr: &str,
     cfg: &LoadConfig,
     i: usize,
@@ -1244,7 +1295,13 @@ fn drive_to_kill(
     out
 }
 
-fn resume_stream(addr: &str, cfg: &LoadConfig, i: usize, sid: &str, tokens: &[f32]) -> ResumePhase {
+pub(crate) fn resume_stream(
+    addr: &str,
+    cfg: &LoadConfig,
+    i: usize,
+    sid: &str,
+    tokens: &[f32],
+) -> ResumePhase {
     let mut out = ResumePhase {
         probed: None,
         outs: vec![0.0; cfg.tokens * cfg.dv],
@@ -1583,10 +1640,25 @@ mod tests {
             path: "/v1/streams".into(),
             attempts: 3,
             last_status: 503,
+            elapsed_ms: 12,
         });
         let typed = err.downcast_ref::<RetryGaveUp>().expect("typed give-up");
         assert_eq!(typed.attempts, 3);
         assert_eq!(typed.last_status, 503);
         assert!(err.to_string().contains("after 3 attempts"));
+    }
+
+    #[test]
+    fn retry_sleep_refuses_once_budget_is_spent() {
+        // A request whose retry loop started longer ago than the whole
+        // default budget must be told to give up without sleeping.
+        let long_ago = Instant::now()
+            .checked_sub(Duration::from_millis(DEFAULT_RETRY_BUDGET_MS + 1_000))
+            .expect("clock supports backdating");
+        let t0 = Instant::now();
+        assert!(!retry_sleep(long_ago, 0, Some(1), 42));
+        assert!(t0.elapsed() < Duration::from_millis(200), "gave up without sleeping");
+        // A fresh request with the same hint is still allowed to wait.
+        assert!(retry_sleep(Instant::now(), 0, Some(0), 42));
     }
 }

@@ -25,12 +25,13 @@
 //!   and terminal errors become an in-stream [`Event::Error`].
 
 use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::time::Duration;
 
 use crate::attn::{AttentionSession, AttentionSpec};
 use crate::serve::durability::{
-    CheckpointImage, CheckpointStream, DurabilityConfig, JournalOp, Recovery, Store,
+    self, CheckpointImage, CheckpointStream, DurabilityConfig, JournalOp, Recovery, Store,
 };
 use crate::serve::obs::{self, Stage};
 use crate::serve::resilience::{ResilienceConfig, SessionId, StreamStatus, Supervisor};
@@ -79,6 +80,13 @@ pub enum Cmd {
     },
     ArmFault { sid: u64, reply: Sender<Result<(), ServeError>> },
     Hibernate { sid: u64, reply: Sender<Result<(), ServeError>> },
+    /// Move a stream out: snapshot its versioned MACS state record and
+    /// close it here. The record restores bit-identically on any node
+    /// (`GET /v1/streams/s-N/export`, the live-migration source side).
+    Export { sid: u64, reply: Sender<Result<ExportedStream, ServeError>> },
+    /// Adopt a stream under a fresh wire id (`POST /v1/streams/import`,
+    /// the migration destination side).
+    Import { source: ImportSource, reply: Sender<Result<u64, ServeError>> },
     Health { reply: Sender<Health> },
     /// Lifecycle + folded-token-count probe for `GET /v1/streams/s-N`
     /// — how a reconnecting client finds where to resume after a
@@ -92,6 +100,25 @@ pub enum Cmd {
     /// crash looks like to the durable store (and therefore what the
     /// recovery tests simulate in-process).
     Shutdown,
+}
+
+/// A stream's state moved out by [`Cmd::Export`]: the versioned MACS
+/// record plus whether it sat in the spill arena (both travel over the
+/// wire as-is; the record is the handoff format).
+pub struct ExportedStream {
+    pub record: Vec<u8>,
+    pub hibernated: bool,
+}
+
+/// Where an imported stream's state comes from.
+pub enum ImportSource {
+    /// A versioned MACS state record shipped over the wire (live
+    /// migration from a healthy source node).
+    Record { record: Vec<u8>, hibernated: bool },
+    /// Adopt one stream straight from a (dead) node's durable store on
+    /// shared storage: checkpoint record + journal-tail replay through
+    /// the normal fold path.
+    Store { dir: PathBuf, sid: u64 },
 }
 
 /// One streamed decode event (one SSE frame).
@@ -480,6 +507,29 @@ impl Engine<'_> {
                 };
                 let _ = reply.send(res);
             }
+            Cmd::Export { sid, reply } => {
+                let res = self.export_stream(sid);
+                if res.is_ok() {
+                    // the export is a move: journal the close so a
+                    // restart of *this* node does not resurrect a
+                    // stream that now lives elsewhere
+                    if let Some(store) = self.store.as_mut() {
+                        store.record_close(sid);
+                    }
+                    self.sync_store();
+                }
+                let _ = reply.send(res);
+            }
+            Cmd::Import { source, reply } => {
+                let res = self.import_stream(source);
+                if res.is_ok() {
+                    // no journal op spells "restore this record", so an
+                    // adopted stream becomes durable via an immediate
+                    // compacting checkpoint
+                    self.write_checkpoint();
+                }
+                let _ = reply.send(res);
+            }
             Cmd::Health { reply } => {
                 let _ = reply.send(Health {
                     tick_no: self.sup.tick_no(),
@@ -555,6 +605,78 @@ impl Engine<'_> {
             events,
             dead: false,
         });
+    }
+
+    /// [`Cmd::Export`]: snapshot the stream's state record, then close
+    /// it here — the caller now owns the only copy. A stream with an
+    /// in-flight decode job or a staged-but-unfolded token answers
+    /// `StreamBusy` (retryable once the job drains).
+    fn export_stream(&mut self, sid: u64) -> Result<ExportedStream, ServeError> {
+        let Some(&id) = self.sessions.get(&sid) else {
+            return Err(ServeError::UnknownStream);
+        };
+        if self.busy.contains(&sid) {
+            return Err(ServeError::StreamBusy);
+        }
+        let snap = self.sup.snapshot_stream(id)?;
+        if snap.pending.is_some() {
+            return Err(ServeError::StreamBusy);
+        }
+        self.sup.close(id)?;
+        self.sessions.remove(&sid);
+        Ok(ExportedStream { record: snap.record, hibernated: snap.hibernated })
+    }
+
+    /// [`Cmd::Import`]: restore a stream under a fresh wire id, then
+    /// replay any staged token and journal tail through the normal
+    /// fold path (deterministic — the adopted stream is bit-identical
+    /// to the one that left its old node). Failure rolls the stream
+    /// back out so a half-imported state never serves.
+    fn import_stream(&mut self, source: ImportSource) -> Result<u64, ServeError> {
+        let (record, hibernated, pending, ops) = match source {
+            ImportSource::Record { record, hibernated } => {
+                (Some(record), hibernated, None, Vec::new())
+            }
+            ImportSource::Store { dir, sid } => {
+                let rec = durability::recover_stream(&dir, sid)
+                    .map_err(|e| ServeError::Session(format!("reading {dir:?}: {e}")))?
+                    .ok_or(ServeError::UnknownStream)?;
+                (rec.record, rec.hibernated, rec.pending, rec.ops)
+            }
+        };
+        let id = match record {
+            Some(rec) => self.sup.restore_stream(&rec, hibernated)?,
+            // opened after the source's last checkpoint: fresh state,
+            // rebuilt entirely by the journal-tail replay below
+            None => self.sup.open()?,
+        };
+        let sid = self.next_sid;
+        self.next_sid += 1;
+        self.sessions.insert(sid, id);
+        let mut replay = || -> Result<(), ServeError> {
+            if let Some((q, k, v)) = &pending {
+                self.replay_token(id, q, k, v)?;
+            }
+            for op in &ops {
+                match op {
+                    JournalOp::Prefill { q, k, v, .. } => {
+                        self.sup.prefill(id, q, k, v)?;
+                        let mut out = vec![0.0f32; self.dv];
+                        self.sup.take_output(id, &mut out)?;
+                    }
+                    JournalOp::Token { q, k, v, .. } => self.replay_token(id, q, k, v)?,
+                    // recover_stream folds Open/Close into the record
+                    JournalOp::Open { .. } | JournalOp::Close { .. } => {}
+                }
+            }
+            Ok(())
+        };
+        if let Err(e) = replay() {
+            let _ = self.sup.close(id);
+            self.sessions.remove(&sid);
+            return Err(e);
+        }
+        Ok(sid)
     }
 
     // --- durability: journal pumping, checkpoints, recovery ---

@@ -140,6 +140,10 @@ pub struct Conn {
     req_id_len: usize,
     /// FNV hash of the id ([`obs::hash_request_id`]; 0 = none).
     req_hash: u64,
+    /// This node's stable id, stamped as `x-macformer-node` on every
+    /// response (empty = header suppressed) so multi-node clients can
+    /// tell backends apart through a router.
+    node_id: String,
 }
 
 impl Conn {
@@ -152,7 +156,15 @@ impl Conn {
             req_id: [0; MAX_REQUEST_ID],
             req_id_len: 0,
             req_hash: 0,
+            node_id: String::new(),
         }
+    }
+
+    /// Stamp every response from this connection with
+    /// `x-macformer-node: <id>` (empty clears the header).
+    pub fn set_node_id(&mut self, id: &str) {
+        self.node_id.clear();
+        self.node_id.push_str(id);
     }
 
     /// The sanitized `x-request-id` of the current request (empty when
@@ -354,30 +366,62 @@ impl Conn {
         body: &str,
         extra: &[(&str, &str)],
     ) -> Result<(), HttpError> {
+        self.write_head(status, reason, content_type, body.len(), extra);
+        self.out.push_str(body);
+        obs::record_http_response(status);
+        self.stream.write_all(self.out.as_bytes()).map_err(HttpError::Io)
+    }
+
+    /// Write one fixed-length response with a **binary** body (the
+    /// state-record export path — MACS records are not UTF-8).
+    pub fn write_response_bytes(
+        &mut self,
+        status: u16,
+        reason: &str,
+        content_type: &str,
+        body: &[u8],
+        extra: &[(&str, &str)],
+    ) -> Result<(), HttpError> {
+        self.write_head(status, reason, content_type, body.len(), extra);
+        obs::record_http_response(status);
+        self.stream.write_all(self.out.as_bytes()).map_err(HttpError::Io)?;
+        self.stream.write_all(body).map_err(HttpError::Io)
+    }
+
+    /// Assemble status line + standard headers + `extra` into `out`.
+    fn write_head(
+        &mut self,
+        status: u16,
+        reason: &str,
+        content_type: &str,
+        body_len: usize,
+        extra: &[(&str, &str)],
+    ) {
         use std::fmt::Write as _;
         self.out.clear();
         let _ = write!(
             self.out,
-            "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
-            body.len()
+            "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {body_len}\r\n",
         );
         self.echo_request_id();
         for (name, value) in extra {
             let _ = write!(self.out, "{name}: {value}\r\n");
         }
         self.out.push_str("\r\n");
-        self.out.push_str(body);
-        obs::record_http_response(status);
-        self.stream.write_all(self.out.as_bytes()).map_err(HttpError::Io)
     }
 
-    /// Echo the client's `x-request-id` (sanitized) onto the response
-    /// being assembled in `out`.
+    /// Echo the client's `x-request-id` (sanitized) and this node's id
+    /// onto the response being assembled in `out`.
     fn echo_request_id(&mut self) {
         if self.req_id_len > 0 {
             self.out.push_str("x-request-id: ");
             // printable ASCII by construction, so always valid UTF-8
             self.out.push_str(std::str::from_utf8(&self.req_id[..self.req_id_len]).unwrap_or(""));
+            self.out.push_str("\r\n");
+        }
+        if !self.node_id.is_empty() {
+            self.out.push_str("x-macformer-node: ");
+            self.out.push_str(&self.node_id);
             self.out.push_str("\r\n");
         }
     }

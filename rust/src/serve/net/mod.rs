@@ -39,6 +39,17 @@
 //! | `POST /v1/streams/{id}/hibernate` | `{}` | `200` (snapshot to the spill arena) |
 //! | `POST /admin/drain` | `{}` | `200` — flips the gateway to draining (see [`Server::drain`]) |
 //! | `DELETE /v1/streams/{id}` | — | `200` (any state) |
+//! | `GET /v1/streams/{id}/export` | — | `200` binary MACS state record (**moves** the stream out) |
+//! | `POST /v1/streams/import` | record bytes, or `{"dir":..,"stream":..}` | `201 {"stream":"s-K"}` |
+//!
+//! Export/import are the live-migration pair a router tier drives:
+//! `export` snapshots the stream's versioned state record and closes
+//! it here (the caller owns the only copy), `import` restores a record
+//! — or, in the JSON form, adopts one stream straight from a dead
+//! node's durable store on shared storage — under a fresh id and
+//! answers like an open. Every response carries `x-macformer-node`
+//! (the node's seeded stable id, also in `/healthz`) so callers can
+//! tell backends apart through a proxy.
 //!
 //! `q`/`k`/`v` are row-major flattened `n x d` / `n x d` / `n x dv`
 //! token rows. Decode responses are `text/event-stream` frames:
@@ -72,7 +83,10 @@ pub mod engine;
 pub mod http;
 pub mod wire;
 
-pub use client::{run_kill_restart, run_socket, KillRestartReport, NetLoadReport, RetryGaveUp};
+pub use client::{
+    run_kill_restart, run_socket, set_retry_budget_ms, KillRestartReport, NetLoadReport,
+    RetryGaveUp, DEFAULT_RETRY_BUDGET_MS,
+};
 pub use engine::EngineSpec;
 use engine::{Cmd, Event, IngressError};
 use http::{Conn, HttpConfig, HttpError, Method, Request};
@@ -91,6 +105,11 @@ pub struct NetConfig {
     pub queue_depth: usize,
     /// Per-connection HTTP limits.
     pub http: HttpConfig,
+    /// Stable node id stamped on every response as
+    /// `x-macformer-node` and reported by `/healthz`. `None` derives
+    /// one from the engine seed + data dir (or bind address), so a
+    /// restarted node keeps its identity.
+    pub node_id: Option<String>,
 }
 
 impl Default for NetConfig {
@@ -100,8 +119,25 @@ impl Default for NetConfig {
             workers: 4,
             queue_depth: 128,
             http: HttpConfig::default(),
+            node_id: None,
         }
     }
+}
+
+/// Derive a stable node id from the engine seed and a location salt
+/// (data dir, or the configured bind address): FNV-1a over the salt,
+/// xor-folded with the seed, splitmix-finalized — short, stable across
+/// restarts, and distinct per node in a `--spawn N` fleet.
+pub fn derive_node_id(seed: u64, salt: &str) -> String {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in salt.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    let mut x = h ^ seed.wrapping_mul(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^= x >> 31;
+    format!("n-{:012x}", x & 0xffff_ffff_ffff)
 }
 
 /// The HTTP status (code + reason) for every typed [`ServeError`].
@@ -135,8 +171,16 @@ pub fn retry_after_ticks(e: &ServeError) -> Option<u64> {
 }
 
 /// Serialize the machine-readable error body shared by plain error
-/// responses and in-stream `event: error` frames.
-fn error_json(buf: &mut String, code: &str, message: &str, retryable: bool, retry: Option<u64>) {
+/// responses, in-stream `event: error` frames, and the router's own
+/// error answers (`serve::router` reuses this so clients see one
+/// error shape fleet-wide).
+pub(crate) fn error_json(
+    buf: &mut String,
+    code: &str,
+    message: &str,
+    retryable: bool,
+    retry: Option<u64>,
+) {
     use std::fmt::Write as _;
     buf.clear();
     buf.push_str("{\"error\":");
@@ -160,6 +204,8 @@ struct Shared {
     ingress: SyncSender<Cmd>,
     spec: EngineSpec,
     serve: ServeConfig,
+    /// Stable node identity (see [`derive_node_id`]).
+    node_id: String,
     stop: AtomicBool,
     /// `starting` → `ready` → `draining`: workers consult this before
     /// touching the engine, so `healthz` answers during recovery and
@@ -207,6 +253,13 @@ impl Server {
         durability: Option<DurabilityConfig>,
     ) -> Result<Server> {
         serve.validate().map_err(|e| anyhow!(e))?;
+        let node_id = net.node_id.clone().unwrap_or_else(|| {
+            let salt = durability
+                .as_ref()
+                .map(|d| d.dir.to_string_lossy().into_owned())
+                .unwrap_or_else(|| net.addr.clone());
+            derive_node_id(spec.seed, &salt)
+        });
         let listener =
             TcpListener::bind(&net.addr).with_context(|| format!("binding {}", net.addr))?;
         let addr = listener.local_addr()?;
@@ -220,6 +273,7 @@ impl Server {
             ingress,
             spec,
             serve,
+            node_id,
             stop: AtomicBool::new(false),
             readiness: AtomicU8::new(READY_STARTING),
             drain_requested: AtomicBool::new(false),
@@ -336,7 +390,8 @@ fn worker_loop(listener: TcpListener, shared: Arc<Shared>, http: HttpConfig) {
             return;
         }
         let _ = stream.set_nodelay(true);
-        let conn = Conn::new(stream, http);
+        let mut conn = Conn::new(stream, http);
+        conn.set_node_id(&shared.node_id);
         if obs_on {
             obs::record_span(Stage::Accept, t_accept, obs::now_ns(), 0);
         }
@@ -379,6 +434,8 @@ enum Route {
     Spec,
     Streams,
     Drain,
+    /// `POST /v1/streams/import` — migration destination side.
+    Import,
     Stream { sid: u64, action: Option<StreamAction> },
     NotFound,
 }
@@ -388,6 +445,7 @@ enum StreamAction {
     Decode,
     ArmFault,
     Hibernate,
+    Export,
 }
 
 fn parse_route(path: &str) -> Route {
@@ -402,6 +460,9 @@ fn parse_route(path: &str) -> Route {
     let Some(rest) = path.strip_prefix("/v1/streams/") else {
         return Route::NotFound;
     };
+    if rest == "import" {
+        return Route::Import;
+    }
     let (id_part, action_part) = match rest.split_once('/') {
         Some((id, action)) => (id, Some(action)),
         None => (rest, None),
@@ -415,6 +476,7 @@ fn parse_route(path: &str) -> Route {
         Some("decode") => Some(StreamAction::Decode),
         Some("arm_fault") => Some(StreamAction::ArmFault),
         Some("hibernate") => Some(StreamAction::Hibernate),
+        Some("export") => Some(StreamAction::Export),
         Some(_) => return Route::NotFound,
     };
     Route::Stream { sid, action }
@@ -454,6 +516,10 @@ fn dispatch(
         (Method::Delete, Route::Stream { sid, action: None }) => {
             simple_cmd(conn, shared, scratch, |reply| Cmd::Close { sid, reply })
         }
+        (Method::Get, Route::Stream { sid, action: Some(StreamAction::Export) }) => {
+            export_stream(conn, shared, sid, scratch)
+        }
+        (Method::Post, Route::Import) => import_stream(conn, req, shared, scratch),
         _ => {
             error_json(scratch, "not_found", "no such route", false, None);
             conn.write_response(404, "Not Found", "application/json", scratch, &[])
@@ -533,6 +599,7 @@ fn health(conn: &mut Conn, shared: &Shared, scratch: &mut String) -> Result<(), 
                 Ok(h) => {
                     let doc = Value::obj(vec![
                         ("status", Value::str("ready")),
+                        ("node_id", Value::str(shared.node_id.clone())),
                         ("tick_no", Value::num(h.tick_no as f64)),
                         ("active_streams", Value::num(h.active_streams as f64)),
                         ("hibernated_streams", Value::num(h.hibernated_streams as f64)),
@@ -680,6 +747,118 @@ fn open_stream(conn: &mut Conn, shared: &Shared, scratch: &mut String) -> Result
             scratch.push_str("\"}");
             conn.write_response(201, "Created", "application/json", scratch, &[])
         }
+    }
+}
+
+/// Content type of an exported MACS state record.
+pub const STATE_CONTENT_TYPE: &str = "application/x-macformer-state";
+
+/// `GET /v1/streams/s-N/export`: snapshot the stream's versioned state
+/// record and close it here — a **move**, the live-migration source
+/// side. Busy streams (in-flight decode, staged token) answer `409`
+/// (retryable once the job drains).
+fn export_stream(
+    conn: &mut Conn,
+    shared: &Shared,
+    sid: u64,
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    let (reply, rx) = channel();
+    if let Err(e) = engine::try_enqueue(&shared.ingress, Cmd::Export { sid, reply }) {
+        return ingress_error(conn, e, scratch);
+    }
+    match rx.recv() {
+        Err(_) => engine_gone(conn, scratch),
+        Ok(Err(e)) => serve_error(conn, &e, scratch),
+        Ok(Ok(exp)) => conn.write_response_bytes(
+            200,
+            "OK",
+            STATE_CONTENT_TYPE,
+            &exp.record,
+            &[("x-macformer-hibernated", if exp.hibernated { "1" } else { "0" })],
+        ),
+    }
+}
+
+/// `POST /v1/streams/import`: adopt a stream under a fresh wire id —
+/// the migration destination side. Two body forms: raw MACS record
+/// bytes (live migration), or JSON `{"dir":"...","stream":"s-N"}`
+/// to recover one stream from a dead node's durable store on shared
+/// storage (checkpoint record + journal-tail replay through the
+/// normal fold path). Refused while draining, like an open.
+fn import_stream(
+    conn: &mut Conn,
+    req: &Request,
+    shared: &Shared,
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    if shared.readiness() == READY_DRAINING {
+        error_json(scratch, "draining", "server is draining; retry later", true, Some(1));
+        return conn.write_response(
+            503,
+            "Service Unavailable",
+            "application/json",
+            scratch,
+            &[("Retry-After", "1")],
+        );
+    }
+    let body = conn.body(req);
+    let source = if body.first() == Some(&b'{') {
+        match parse_import_json(body) {
+            Ok(src) => src,
+            Err(msg) => {
+                error_json(scratch, "bad_body", msg, false, None);
+                return conn.write_response(400, "Bad Request", "application/json", scratch, &[]);
+            }
+        }
+    } else if body.is_empty() {
+        error_json(scratch, "bad_body", "empty import body", false, None);
+        return conn.write_response(400, "Bad Request", "application/json", scratch, &[]);
+    } else {
+        engine::ImportSource::Record { record: body.to_vec(), hibernated: false }
+    };
+    let (reply, rx) = channel();
+    if let Err(e) = engine::try_enqueue(&shared.ingress, Cmd::Import { source, reply }) {
+        return ingress_error(conn, e, scratch);
+    }
+    match rx.recv() {
+        Err(_) => engine_gone(conn, scratch),
+        Ok(Err(e)) => serve_error(conn, &e, scratch),
+        Ok(Ok(sid)) => {
+            scratch.clear();
+            scratch.push_str("{\"stream\":\"s-");
+            scratch.push_str(&sid.to_string());
+            scratch.push_str("\"}");
+            conn.write_response(201, "Created", "application/json", scratch, &[])
+        }
+    }
+}
+
+/// Parse the JSON (dead-store) import form.
+fn parse_import_json(body: &[u8]) -> Result<engine::ImportSource, &'static str> {
+    let mut scan = wire::Scan::object(body).map_err(|_| "malformed JSON")?;
+    let mut dir: Option<String> = None;
+    let mut sid: Option<u64> = None;
+    while let Some(key) = scan.next_key().map_err(|_| "malformed JSON")? {
+        match key {
+            b"dir" => {
+                dir = Some(scan.str_value("dir").map_err(|_| "bad \"dir\"")?.to_string());
+            }
+            b"stream" => {
+                let s = scan.str_value("stream").map_err(|_| "bad \"stream\"")?;
+                sid = s.strip_prefix("s-").and_then(|n| n.parse().ok());
+                if sid.is_none() {
+                    return Err("\"stream\" must be \"s-N\"");
+                }
+            }
+            _ => scan.skip_value().map_err(|_| "malformed JSON")?,
+        }
+    }
+    match (dir, sid) {
+        (Some(dir), Some(sid)) => {
+            Ok(engine::ImportSource::Store { dir: std::path::PathBuf::from(dir), sid })
+        }
+        _ => Err("import JSON needs \"dir\" and \"stream\""),
     }
 }
 

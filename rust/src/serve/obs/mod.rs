@@ -493,6 +493,60 @@ pub fn recovery_truncated_bytes() -> u64 {
     RECOVERY_TRUNCATED_BYTES.load(Ordering::Relaxed)
 }
 
+// --- router counters (the multi-node tier; same pattern as above) ---
+
+static ROUTER_MIGRATIONS: AtomicU64 = AtomicU64::new(0);
+static ROUTER_MIGRATION_FAILURES: AtomicU64 = AtomicU64::new(0);
+static ROUTER_PROXIED_REQUESTS: AtomicU64 = AtomicU64::new(0);
+static ROUTER_PROXIED_BYTES: AtomicU64 = AtomicU64::new(0);
+static ROUTER_RETRIES: AtomicU64 = AtomicU64::new(0);
+
+/// Count one completed stream migration (failover or `/admin/migrate`).
+#[inline]
+pub fn add_router_migration() {
+    ROUTER_MIGRATIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn router_migrations() -> u64 {
+    ROUTER_MIGRATIONS.load(Ordering::Relaxed)
+}
+
+/// Count one stream the router could not move (state unrecoverable).
+#[inline]
+pub fn add_router_migration_failure() {
+    ROUTER_MIGRATION_FAILURES.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn router_migration_failures() -> u64 {
+    ROUTER_MIGRATION_FAILURES.load(Ordering::Relaxed)
+}
+
+/// Count one proxied request and the response-body bytes relayed.
+#[inline]
+pub fn add_router_proxied(body_bytes: u64) {
+    ROUTER_PROXIED_REQUESTS.fetch_add(1, Ordering::Relaxed);
+    ROUTER_PROXIED_BYTES.fetch_add(body_bytes, Ordering::Relaxed);
+}
+
+pub fn router_proxied_requests() -> u64 {
+    ROUTER_PROXIED_REQUESTS.load(Ordering::Relaxed)
+}
+
+pub fn router_proxied_bytes() -> u64 {
+    ROUTER_PROXIED_BYTES.load(Ordering::Relaxed)
+}
+
+/// Count one retry the router performed against a backend (retryable
+/// 429/503 re-sent after backoff).
+#[inline]
+pub fn add_router_retry() {
+    ROUTER_RETRIES.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn router_retries() -> u64 {
+    ROUTER_RETRIES.load(Ordering::Relaxed)
+}
+
 /// Count one HTTP response by status class (`429` → the 4xx bucket).
 #[inline]
 pub fn record_http_response(status: u16) {
@@ -521,6 +575,11 @@ pub fn reset() {
     RECOVERIES.store(0, Ordering::Relaxed);
     RECOVERY_REPLAYED_OPS.store(0, Ordering::Relaxed);
     RECOVERY_TRUNCATED_BYTES.store(0, Ordering::Relaxed);
+    ROUTER_MIGRATIONS.store(0, Ordering::Relaxed);
+    ROUTER_MIGRATION_FAILURES.store(0, Ordering::Relaxed);
+    ROUTER_PROXIED_REQUESTS.store(0, Ordering::Relaxed);
+    ROUTER_PROXIED_BYTES.store(0, Ordering::Relaxed);
+    ROUTER_RETRIES.store(0, Ordering::Relaxed);
     for c in &HTTP_RESPONSES {
         c.store(0, Ordering::Relaxed);
     }

@@ -1,0 +1,575 @@
+//! Kill-node chaos: SIGKILL one backend of a live multi-node fleet
+//! mid-load and prove the router's failover story end to end.
+//!
+//! The drill spawns `nodes` serve gateways as child processes (each on
+//! its own durable data-dir), fronts them with an in-process
+//! [`Router`], and drives `cfg.streams` concurrent clients through the
+//! router exactly like the single-node kill-restart drill
+//! ([`run_kill_restart`](crate::serve::net::run_kill_restart)). At a
+//! seeded produced-token threshold it SIGKILLs the backend owning the
+//! most streams. From there the router must do the rest on its own:
+//! the prober marks the node down, every stream mapped to it is
+//! recovered from the dead node's durable store onto its ring
+//! successor, and the casualty clients — which saw their SSE cut
+//! mid-decode — resume through the *same* router address and drain the
+//! rest of their tokens from the successor.
+//!
+//! The verification bar is the same as every other chaos drill in this
+//! repo: all wire outputs, before the kill and after the failover,
+//! **bit-identical** to a single-stream replay that never saw a dead
+//! node — on either SIMD arm. Non-casualty streams must never see a
+//! 5xx they could not retry, and every casualty must be migrated
+//! (`migrations >= casualties`, zero migration failures).
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::attn::AttentionSpec;
+use crate::serve::loadgen::{generate_tokens, token_stride, LoadConfig};
+use crate::serve::net::client::{
+    check_spec, drive_to_kill, kill_point, resume_stream, KillPhase, ResumePhase, RetryCounts,
+};
+use crate::serve::obs;
+use crate::util::json::Value;
+
+use super::{health, BackendSpec, Router, RouterConfig};
+
+/// Outcome of one [`run_kill_node`] drill. The CI router-smoke greps
+/// `verified`, `non_casualty_5xx`, and `migrations` out of the JSON
+/// form.
+#[derive(Debug, Clone)]
+pub struct KillNodeReport {
+    pub nodes: usize,
+    pub streams: usize,
+    pub tokens_per_stream: usize,
+    /// Seeded produced-token threshold at which the victim backend
+    /// took its SIGKILL.
+    pub kill_at_tokens: u64,
+    /// Tokens actually streamed back when the kill landed.
+    pub killed_at_tokens: u64,
+    /// Address of the SIGKILL'd backend.
+    pub killed_backend: String,
+    /// Streams whose open was acked before the kill.
+    pub admitted: usize,
+    /// Streams mapped to the victim when the kill landed — the ones
+    /// whose decode was cut and whose state had to migrate.
+    pub casualties: usize,
+    /// Admitted streams the fleet recovered (resume probe answered
+    /// 200 — for casualties, through the ring successor).
+    pub recovered: usize,
+    /// Recovered streams that resumed decode to completion.
+    pub resumed: usize,
+    /// Token counts the resume probes reported, summed.
+    pub recovered_tokens: u64,
+    /// Streams the router moved off the dead node.
+    pub migrations: u64,
+    pub migration_failures: u64,
+    pub http_429: u64,
+    pub http_503_retried: u64,
+    pub http_5xx: u64,
+    /// Non-retryable 5xx seen by streams that were *not* mapped to the
+    /// victim. The whole point of the router: this must be zero.
+    pub non_casualty_5xx: u64,
+    pub stream_errors: u64,
+    /// Every admitted stream recovered, resumed, and matched the
+    /// single-stream replay bit for bit; zero non-casualty 5xx; every
+    /// casualty migrated.
+    pub verified: bool,
+    /// Wall-clock from the SIGKILL until no stream mapped to the dead
+    /// node any more (detection + all migrations).
+    pub recovery_ms: f64,
+    pub elapsed_s: f64,
+}
+
+impl KillNodeReport {
+    pub fn render(&self) -> String {
+        format!(
+            "serve/router kill-node: {} nodes, {} streams x {} tokens, SIGKILL at {} produced tokens\n\
+             kill      backend {} died at {} streamed tokens holding {} of {} admitted streams\n\
+             failover  {} migrations ({} failed), streams remapped in {:.0} ms\n\
+             recover   {} / {} streams recovered ({} probed tokens), {} resumed\n\
+             http      {} x 429 (retried), {} x 503 (retried), {} x 5xx ({} on non-casualty streams), {} stream errors\n\
+             verify    {}",
+            self.nodes,
+            self.streams,
+            self.tokens_per_stream,
+            self.kill_at_tokens,
+            self.killed_backend,
+            self.killed_at_tokens,
+            self.casualties,
+            self.admitted,
+            self.migrations,
+            self.migration_failures,
+            self.recovery_ms,
+            self.recovered,
+            self.admitted,
+            self.recovered_tokens,
+            self.resumed,
+            self.http_429,
+            self.http_503_retried,
+            self.http_5xx,
+            self.non_casualty_5xx,
+            self.stream_errors,
+            if self.verified {
+                "bit-identical to a fleet where no node ever died"
+            } else {
+                "FAILED (see warnings above)"
+            },
+        )
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("nodes", Value::num(self.nodes as f64)),
+            ("streams", Value::num(self.streams as f64)),
+            ("tokens_per_stream", Value::num(self.tokens_per_stream as f64)),
+            ("kill_at_tokens", Value::num(self.kill_at_tokens as f64)),
+            ("killed_at_tokens", Value::num(self.killed_at_tokens as f64)),
+            ("killed_backend", Value::str(&self.killed_backend)),
+            ("admitted", Value::num(self.admitted as f64)),
+            ("casualties", Value::num(self.casualties as f64)),
+            ("recovered", Value::num(self.recovered as f64)),
+            ("resumed", Value::num(self.resumed as f64)),
+            ("recovered_tokens", Value::num(self.recovered_tokens as f64)),
+            ("migrations", Value::num(self.migrations as f64)),
+            ("migration_failures", Value::num(self.migration_failures as f64)),
+            ("http_429", Value::num(self.http_429 as f64)),
+            ("http_503_retried", Value::num(self.http_503_retried as f64)),
+            ("http_5xx", Value::num(self.http_5xx as f64)),
+            ("non_casualty_5xx", Value::num(self.non_casualty_5xx as f64)),
+            ("stream_errors", Value::num(self.stream_errors as f64)),
+            ("verified", Value::Bool(self.verified)),
+            ("recovery_ms", Value::num(self.recovery_ms)),
+            ("elapsed_s", Value::num(self.elapsed_s)),
+        ])
+    }
+}
+
+/// The child gateways, killable by index from the killer thread and
+/// reaped unconditionally on drop (the victim is already dead by then;
+/// killing it again is a no-op and the wait clears the zombie).
+struct Fleet {
+    children: Mutex<Vec<Child>>,
+}
+
+impl Fleet {
+    fn kill_one(&self, idx: usize) {
+        if let Some(child) = self.children.lock().unwrap().get_mut(idx) {
+            let _ = child.kill();
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for child in self.children.get_mut().unwrap().iter_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Spawn one `macformer serve --listen` gateway on its own data-dir
+/// and wait until `/healthz` answers ready. Unlike the kill-restart
+/// spawn this passes `--workers` explicitly: gateway workers serve one
+/// connection at a time, and behind a router every router worker may
+/// pool a keep-alive connection to this node. Also the spawn path for
+/// `macformer route --spawn N`.
+pub fn spawn_node(cfg: &LoadConfig, data_dir: &Path, workers: usize) -> Result<(Child, String)> {
+    std::fs::create_dir_all(data_dir)
+        .with_context(|| format!("creating node dir {}", data_dir.display()))?;
+    // clear stale durable state: "recovered" must mean this run's kill
+    for entry in std::fs::read_dir(data_dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy().into_owned();
+        if name == "checkpoint.macc"
+            || name == "checkpoint.tmp"
+            || name == "port.txt"
+            || (name.starts_with("journal.") && name.ends_with(".macj"))
+        {
+            std::fs::remove_file(entry.path()).with_context(|| format!("clearing stale {name}"))?;
+        }
+    }
+    let exe = std::env::current_exe().context("resolving the serve binary")?;
+    let port_file = data_dir.join("port.txt");
+    let mut child = Command::new(&exe)
+        .arg("serve")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--port-file")
+        .arg(&port_file)
+        .arg("--data-dir")
+        .arg(data_dir)
+        .arg("--workers")
+        .arg(workers.to_string())
+        .arg("--kernel")
+        .arg(cfg.kernel.name())
+        .arg("--backend")
+        .arg(cfg.backend.to_string())
+        .arg("--head-dim")
+        .arg(cfg.head_dim.to_string())
+        .arg("--dv")
+        .arg(cfg.dv.to_string())
+        .arg("--features")
+        .arg(cfg.num_features.to_string())
+        .arg("--seed")
+        .arg(cfg.seed.to_string())
+        .arg("--streams")
+        .arg(cfg.streams.to_string())
+        .arg("--min-batch")
+        .arg(cfg.min_batch.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning {} serve", exe.display()))?;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let addr = loop {
+        if let Some(status) = child.try_wait()? {
+            bail!("serve node exited during startup: {status}");
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("serve node wrote no port file within 60s");
+        }
+        match std::fs::read_to_string(&port_file) {
+            Ok(s) if !s.trim().is_empty() => break format!("127.0.0.1:{}", s.trim()),
+            _ => std::thread::sleep(Duration::from_millis(5)),
+        }
+    };
+    loop {
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("serve node on {addr} never answered /healthz ready");
+        }
+        if health::probe_once(&addr, Duration::from_millis(500)).is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    Ok((child, addr))
+}
+
+/// What the killer thread learned: which backend it shot, which public
+/// streams were mapped there, how long the remap took, and whether the
+/// map actually converged.
+struct KillOutcome {
+    victim: usize,
+    casualties: Vec<u64>,
+    killed_at: u64,
+    recovery_ms: f64,
+    remapped: bool,
+}
+
+/// Kill-node chaos over a router-fronted fleet; see the module docs
+/// for the full choreography. `base_dir` gets one `node{i}` data-dir
+/// per backend.
+pub fn run_kill_node(cfg: &LoadConfig, base_dir: &Path, nodes: usize) -> Result<KillNodeReport> {
+    if nodes < 2 {
+        bail!("kill-node: needs at least 2 nodes (someone has to survive)");
+    }
+    if cfg.streams == 0 || cfg.tokens < 2 {
+        bail!("kill-node: needs streams > 0 and at least 2 tokens per stream");
+    }
+    if cfg.prompt != 0 {
+        bail!("kill-node: --prompt is not supported here (decode-only recovery drill)");
+    }
+    if cfg.faults.is_active() {
+        bail!("kill-node: runs its own chaos; drop the --fault-* flags");
+    }
+    let tokens = generate_tokens(cfg);
+    let kill_at = kill_point(cfg);
+    let t0 = Instant::now();
+    let mig0 = obs::router_migrations();
+    let migf0 = obs::router_migration_failures();
+
+    // the fleet: one gateway per node dir, each sized so the router's
+    // whole worker pool plus the prober and a migration can connect
+    log::info!(
+        "kill-node: spawning {nodes} gateways under {}, SIGKILL at {kill_at} produced tokens",
+        base_dir.display()
+    );
+    let node_workers = cfg.streams + 8;
+    let mut children = Vec::with_capacity(nodes);
+    let mut backends = Vec::with_capacity(nodes);
+    for n in 0..nodes {
+        let dir: PathBuf = base_dir.join(format!("node{n}"));
+        match spawn_node(cfg, &dir, node_workers) {
+            Ok((child, addr)) => {
+                children.push(child);
+                backends.push(BackendSpec { addr, data_dir: Some(dir) });
+            }
+            Err(e) => {
+                // reap whatever came up before bailing
+                drop(Fleet { children: Mutex::new(children) });
+                return Err(e.context(format!("spawning node {n}")));
+            }
+        }
+    }
+    let fleet = Fleet { children: Mutex::new(children) };
+    let addrs: Vec<String> = backends.iter().map(|b| b.addr.clone()).collect();
+
+    let router = Router::start(RouterConfig {
+        workers: cfg.streams + 4,
+        seed: cfg.seed,
+        probe_interval: Duration::from_millis(10),
+        probe_timeout: Duration::from_millis(250),
+        fail_threshold: 3,
+        recover_threshold: 2,
+        backends,
+        ..RouterConfig::default()
+    })?;
+    let router_addr = router.local_addr().to_string();
+    check_spec(cfg, &router_addr)?;
+
+    // phase 1: drive all streams through the router; SIGKILL the
+    // most-loaded backend at the seeded threshold, then watch the
+    // stream map converge off the corpse
+    let counter = AtomicU64::new(0);
+    let killed = AtomicBool::new(false);
+    let done = AtomicUsize::new(0);
+    let (phase1, outcome) = std::thread::scope(|scope| {
+        let addr = router_addr.as_str();
+        let handles: Vec<_> = (0..cfg.streams)
+            .map(|i| {
+                let tokens = &tokens[i];
+                let (counter, killed, done) = (&counter, &killed, &done);
+                scope.spawn(move || drive_to_kill(addr, cfg, i, tokens, counter, killed, done))
+            })
+            .collect();
+        let killer = scope.spawn(|| loop {
+            if counter.load(Ordering::SeqCst) >= kill_at {
+                let map = router.stream_map();
+                let mut owned = vec![0usize; nodes];
+                for &(_, b) in &map {
+                    owned[b] += 1;
+                }
+                let victim = owned
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(_, c)| *c)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                killed.store(true, Ordering::SeqCst);
+                fleet.kill_one(victim);
+                let struck = Instant::now();
+                let casualties: Vec<u64> =
+                    map.iter().filter(|&&(_, b)| b == victim).map(|&(s, _)| s).collect();
+                // remap convergence: detection + every migration
+                let deadline = struck + Duration::from_secs(30);
+                let remapped = loop {
+                    if !router.stream_map().iter().any(|&(_, b)| b == victim) {
+                        break true;
+                    }
+                    if Instant::now() > deadline {
+                        break false;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                };
+                return Some(KillOutcome {
+                    victim,
+                    casualties,
+                    killed_at: counter.load(Ordering::SeqCst),
+                    recovery_ms: struck.elapsed().as_secs_f64() * 1e3,
+                    remapped,
+                });
+            }
+            if done.load(Ordering::SeqCst) == cfg.streams {
+                return None;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        let phase1: Vec<KillPhase> = handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| KillPhase {
+                    sid: String::new(),
+                    outs: Vec::new(),
+                    produced: 0,
+                    http: RetryCounts::default(),
+                    error: Some("client thread panicked".into()),
+                })
+            })
+            .collect();
+        (phase1, killer.join().unwrap_or(None))
+    });
+    let Some(outcome) = outcome else {
+        let first = phase1.iter().find_map(|p| p.error.clone()).unwrap_or_default();
+        bail!(
+            "kill-node: clients finished before the {kill_at}-token kill threshold \
+             ({} produced); first error: {first:?}",
+            counter.load(Ordering::SeqCst)
+        );
+    };
+    if !outcome.remapped {
+        log::warn!("kill-node: stream map never converged off the dead node within 30s");
+    }
+
+    // phase 2: resume every admitted stream through the SAME router —
+    // casualties must land on the ring successor transparently
+    log::info!(
+        "kill-node: phase 2 — resuming {} streams after killing {}",
+        cfg.streams,
+        addrs[outcome.victim]
+    );
+    let phase2: Vec<ResumePhase> = std::thread::scope(|scope| {
+        let addr = router_addr.as_str();
+        let handles: Vec<_> = (0..cfg.streams)
+            .map(|i| {
+                let tokens = &tokens[i];
+                let sid = phase1[i].sid.as_str();
+                scope.spawn(move || {
+                    if sid.is_empty() {
+                        return ResumePhase {
+                            probed: None,
+                            outs: Vec::new(),
+                            resumed_from: 0,
+                            produced: 0,
+                            http: RetryCounts::default(),
+                            error: None,
+                        };
+                    }
+                    resume_stream(addr, cfg, i, sid, tokens)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| ResumePhase {
+                    probed: None,
+                    outs: Vec::new(),
+                    resumed_from: 0,
+                    produced: 0,
+                    http: RetryCounts::default(),
+                    error: Some("client thread panicked".into()),
+                })
+            })
+            .collect()
+    });
+
+    // verify: one deterministic replay covers both phases, same bar as
+    // the single-node kill-restart drill
+    let casualty_set: HashSet<u64> = outcome.casualties.iter().copied().collect();
+    let is_casualty = |sid: &str| {
+        sid.strip_prefix("r-")
+            .and_then(|n| n.parse::<u64>().ok())
+            .is_some_and(|n| casualty_set.contains(&n))
+    };
+    let (d, dv, stride) = (cfg.head_dim, cfg.dv, token_stride(cfg));
+    let session = AttentionSpec::new(cfg.kernel)
+        .head_dim(d)
+        .num_features(cfg.num_features)
+        .causal(true)
+        .seed(cfg.seed)
+        .backend(cfg.backend)
+        .build()
+        .context("kill-node: building the verification session")?;
+    let mut stream_errors = 0u64;
+    let mut admitted = 0usize;
+    let mut recovered = 0usize;
+    let mut resumed = 0usize;
+    let mut recovered_tokens = 0u64;
+    let mut non_casualty_5xx = 0u64;
+    let mut outputs_ok = true;
+    let mut row = vec![0.0f32; dv];
+    for i in 0..cfg.streams {
+        let (p1, p2) = (&phase1[i], &phase2[i]);
+        if let Some(e) = &p1.error {
+            log::warn!("kill-node: stream {i} failed before the kill: {e}");
+            stream_errors += 1;
+            continue;
+        }
+        if p1.sid.is_empty() {
+            continue; // the kill beat the open ack: nothing to recover
+        }
+        admitted += 1;
+        if !is_casualty(&p1.sid) {
+            non_casualty_5xx += p1.http.http_5xx + p2.http.http_5xx;
+        }
+        if let Some(e) = &p2.error {
+            log::warn!("kill-node: stream {i} ({}) failed to resume: {e}", p1.sid);
+            stream_errors += 1;
+            continue;
+        }
+        let Some(probe) = p2.probed else { continue };
+        recovered += 1;
+        recovered_tokens += probe;
+        resumed += 1;
+        let mut state = session.begin_decode(dv)?;
+        let mut mismatched = false;
+        for t in 0..cfg.tokens {
+            let tok = &tokens[i][t * stride..(t + 1) * stride];
+            state.append_token_into(&tok[..d], &tok[d..2 * d], &tok[2 * d..], &mut row)?;
+            if t < p1.produced {
+                for (a, b) in p1.outs[t * dv..(t + 1) * dv].iter().zip(&row) {
+                    if a.to_bits() != b.to_bits() {
+                        mismatched = true;
+                    }
+                }
+            }
+            if t >= p2.resumed_from {
+                for (a, b) in p2.outs[t * dv..(t + 1) * dv].iter().zip(&row) {
+                    if a.to_bits() != b.to_bits() {
+                        mismatched = true;
+                    }
+                }
+            }
+        }
+        if mismatched {
+            log::warn!("kill-node: stream {i} ({}) diverged from the replay", p1.sid);
+            outputs_ok = false;
+        }
+    }
+    let http_429: u64 = phase1.iter().map(|p| p.http.http_429).sum::<u64>()
+        + phase2.iter().map(|p| p.http.http_429).sum::<u64>();
+    let http_503: u64 = phase1.iter().map(|p| p.http.http_503).sum::<u64>()
+        + phase2.iter().map(|p| p.http.http_503).sum::<u64>();
+    let http_5xx: u64 = phase1.iter().map(|p| p.http.http_5xx).sum::<u64>()
+        + phase2.iter().map(|p| p.http.http_5xx).sum::<u64>();
+    let migrations = obs::router_migrations().saturating_sub(mig0);
+    let migration_failures = obs::router_migration_failures().saturating_sub(migf0);
+
+    drop(router); // stop workers + prober before reaping the fleet
+    drop(fleet);
+
+    let verified = outputs_ok
+        && stream_errors == 0
+        && recovered == admitted
+        && resumed == admitted
+        && non_casualty_5xx == 0
+        && migration_failures == 0
+        && migrations >= outcome.casualties.len() as u64
+        && outcome.remapped;
+    Ok(KillNodeReport {
+        nodes,
+        streams: cfg.streams,
+        tokens_per_stream: cfg.tokens,
+        kill_at_tokens: kill_at,
+        killed_at_tokens: outcome.killed_at,
+        killed_backend: addrs[outcome.victim].clone(),
+        admitted,
+        casualties: outcome.casualties.len(),
+        recovered,
+        resumed,
+        recovered_tokens,
+        migrations,
+        migration_failures,
+        http_429,
+        http_503_retried: http_503,
+        http_5xx,
+        non_casualty_5xx,
+        stream_errors,
+        verified,
+        recovery_ms: outcome.recovery_ms,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,216 @@
+//! Backend health: a per-node failure-threshold state machine fed by
+//! an active `/healthz` prober.
+//!
+//! ```text
+//!            probe fails              fails reach threshold
+//!  Healthy ──────────────▶ Suspect ──────────────────────▶ Down
+//!     ▲                      │ probe ok                      │ probe ok
+//!     │ oks reach threshold  ▼                               ▼
+//!     └─────────────────── Recovering ◀──────────────────────┘
+//!                            │ probe fails
+//!                            └──────────▶ Down
+//! ```
+//!
+//! `Healthy` and `Suspect` are *routable* (a single missed probe must
+//! not trigger a migration storm); `Down` and `Recovering` are not.
+//! The `Down` transition is the failover trigger: the router moves
+//! every stream mapped to the node onto its ring successors. A node
+//! that comes back must answer `recover_threshold` consecutive probes
+//! before taking new opens again — it re-enters with no streams (its
+//! old ones migrated away) and refills from the ring.
+
+use std::io::{Read as _, Write as _};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// One backend's health as the router sees it.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum NodeState {
+    Healthy,
+    Suspect,
+    Down,
+    Recovering,
+}
+
+impl NodeState {
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeState::Healthy => "healthy",
+            NodeState::Suspect => "suspect",
+            NodeState::Down => "down",
+            NodeState::Recovering => "recovering",
+        }
+    }
+
+    /// May this node receive proxied traffic and new stream opens?
+    pub fn routable(self) -> bool {
+        matches!(self, NodeState::Healthy | NodeState::Suspect)
+    }
+
+    /// Stable gauge encoding for `/metrics`:
+    /// `0` down, `1` recovering, `2` suspect, `3` healthy.
+    pub fn gauge(self) -> u8 {
+        match self {
+            NodeState::Down => 0,
+            NodeState::Recovering => 1,
+            NodeState::Suspect => 2,
+            NodeState::Healthy => 3,
+        }
+    }
+}
+
+/// The threshold state machine for one backend. Owned by the prober
+/// thread; workers read the published [`NodeState`] through an atomic.
+pub struct HealthMachine {
+    state: NodeState,
+    /// Consecutive probe failures since the last success.
+    fails: u32,
+    /// Consecutive probe successes while recovering.
+    oks: u32,
+    fail_threshold: u32,
+    recover_threshold: u32,
+}
+
+impl HealthMachine {
+    pub fn new(fail_threshold: u32, recover_threshold: u32) -> HealthMachine {
+        HealthMachine {
+            state: NodeState::Healthy,
+            fails: 0,
+            oks: 0,
+            fail_threshold: fail_threshold.max(1),
+            recover_threshold: recover_threshold.max(1),
+        }
+    }
+
+    pub fn state(&self) -> NodeState {
+        self.state
+    }
+
+    /// Feed one probe result; `Some((from, to))` when the state moved.
+    pub fn observe(&mut self, ok: bool) -> Option<(NodeState, NodeState)> {
+        let from = self.state;
+        if ok {
+            self.fails = 0;
+            self.state = match self.state {
+                NodeState::Healthy | NodeState::Suspect => NodeState::Healthy,
+                NodeState::Down => {
+                    self.oks = 1;
+                    NodeState::Recovering
+                }
+                NodeState::Recovering => {
+                    self.oks += 1;
+                    if self.oks >= self.recover_threshold {
+                        NodeState::Healthy
+                    } else {
+                        NodeState::Recovering
+                    }
+                }
+            };
+        } else {
+            self.oks = 0;
+            self.fails += 1;
+            self.state = match self.state {
+                NodeState::Healthy | NodeState::Suspect => {
+                    if self.fails >= self.fail_threshold {
+                        NodeState::Down
+                    } else {
+                        NodeState::Suspect
+                    }
+                }
+                // one bad probe mid-recovery sends the node straight
+                // back down: flapping must not reach the routable set
+                NodeState::Recovering | NodeState::Down => NodeState::Down,
+            };
+        }
+        (from != self.state).then_some((from, self.state))
+    }
+}
+
+/// One active `/healthz` probe on its own short-deadline connection.
+/// `Some(node_id)` on a `200` (the id comes from the gateway's
+/// `x-macformer-node` response header); `None` on refusal, timeout,
+/// or any non-200 (a draining gateway answers 503 and is treated as
+/// going away — exactly what failover wants).
+pub fn probe_once(addr: &str, timeout: Duration) -> Option<String> {
+    let sock = addr.to_socket_addrs().ok()?.next()?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout).ok()?;
+    stream.set_read_timeout(Some(timeout)).ok()?;
+    stream.set_write_timeout(Some(timeout)).ok()?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: router\r\nConnection: close\r\n\r\n")
+        .ok()?;
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    // `Connection: close` bounds the read; cap it anyway
+    while buf.len() < 16 * 1024 {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    let head_end = buf.windows(4).position(|w| w == b"\r\n\r\n")?;
+    let head = std::str::from_utf8(&buf[..head_end]).ok()?;
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines.next()?.split_whitespace().nth(1)?.parse().ok()?;
+    if status != 200 {
+        return None;
+    }
+    let node = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(name, _)| name.eq_ignore_ascii_case("x-macformer-node"))
+        .map(|(_, v)| v.trim().to_string())
+        .unwrap_or_default();
+    Some(node)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_node_goes_suspect_then_down_at_the_threshold() {
+        let mut m = HealthMachine::new(3, 2);
+        assert_eq!(m.state(), NodeState::Healthy);
+        assert_eq!(m.observe(false), Some((NodeState::Healthy, NodeState::Suspect)));
+        assert!(m.state().routable(), "one missed probe must not unroute a node");
+        assert_eq!(m.observe(false), None, "still suspect below the threshold");
+        assert_eq!(m.observe(false), Some((NodeState::Suspect, NodeState::Down)));
+        assert!(!m.state().routable());
+    }
+
+    #[test]
+    fn a_single_success_clears_suspicion() {
+        let mut m = HealthMachine::new(3, 2);
+        m.observe(false);
+        assert_eq!(m.observe(true), Some((NodeState::Suspect, NodeState::Healthy)));
+        // the failure counter reset: two more misses still only suspect
+        m.observe(false);
+        assert_eq!(m.state(), NodeState::Suspect);
+        m.observe(false);
+        assert_eq!(m.state(), NodeState::Suspect);
+    }
+
+    #[test]
+    fn recovery_needs_consecutive_successes_and_flapping_restarts_it() {
+        let mut m = HealthMachine::new(1, 3);
+        assert_eq!(m.observe(false), Some((NodeState::Healthy, NodeState::Down)));
+        assert_eq!(m.observe(true), Some((NodeState::Down, NodeState::Recovering)));
+        assert!(!m.state().routable(), "recovering nodes take no traffic yet");
+        assert_eq!(m.observe(true), None, "two of three successes: still recovering");
+        // a flap mid-recovery goes straight back down...
+        assert_eq!(m.observe(false), Some((NodeState::Recovering, NodeState::Down)));
+        // ...and the success count starts over
+        m.observe(true);
+        m.observe(true);
+        assert_eq!(m.state(), NodeState::Recovering);
+        assert_eq!(m.observe(true), Some((NodeState::Recovering, NodeState::Healthy)));
+    }
+
+    #[test]
+    fn probe_against_a_dead_port_is_none() {
+        // a port from the dynamic range with nothing bound to it
+        assert_eq!(probe_once("127.0.0.1:1", Duration::from_millis(100)), None);
+    }
+}

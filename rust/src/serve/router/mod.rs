@@ -1,0 +1,1306 @@
+//! Multi-node serve: a dependency-free HTTP/1.1 router that fronts N
+//! serve gateways (`serve::net::Server` processes) behind one address.
+//!
+//! ```text
+//!                        ┌──────────────────────────────┐
+//!   clients ──────────▶  │ router: workers + hash ring  │
+//!   POST /v1/streams     │  r-K ──ring──▶ backend, s-N  │
+//!   POST .../decode      └──┬─────────┬─────────┬───────┘
+//!                           │ proxy   │ proxy   │ /healthz prober
+//!                        gateway 0 gateway 1 gateway 2   (+ failover)
+//!   ```
+//!
+//! Responsibilities, in one place each:
+//!
+//! - **Placement** ([`ring`]): new stream opens consistent-hash onto a
+//!   routable backend (seeded virtual nodes, so a restarted router
+//!   rebuilds the identical ring and a dead node remaps only its own
+//!   streams). The router mints public ids `r-K` and keeps the
+//!   `r-K → (backend, s-N)` map; everything else about the wire
+//!   protocol passes through byte-faithfully.
+//! - **Proxying** ([`proxy`]): per-(worker, backend) keep-alive
+//!   connections relay stream routes and the chunked SSE decode body.
+//!   Status, reason, `code` body, and `Retry-After` are relayed
+//!   unmodified; the backend's `x-macformer-node` id is echoed on
+//!   every proxied response. Retryable backend answers (`429`, `503`
+//!   with `Retry-After`) are retried on the same backend with the
+//!   loadgen client's backoff discipline inside a small wall-clock
+//!   budget, then passed through for the client to absorb.
+//! - **Health** ([`health`]): an active `/healthz` prober drives a
+//!   per-node `healthy → suspect → down → recovering` state machine.
+//!   `down` triggers failover.
+//! - **Migration** (here): live streams are exported from their
+//!   backend (`GET /v1/streams/{sid}/export`) and imported on the
+//!   ring successor (`POST /v1/streams/import`); streams on a *dead*
+//!   backend are recovered by the successor straight from the dead
+//!   node's durable store (the JSON import form). The public id is
+//!   remapped in place — clients retrying on `503 migrating` resume
+//!   against the successor without learning anything moved.
+//! - **Chaos** ([`chaos`]): `run_kill_node` SIGKILLs one backend of a
+//!   live fleet mid-load and requires survivors bit-identical to a
+//!   never-died run, zero non-casualty 5xx, and every casualty stream
+//!   migrated and resumed.
+//!
+//! Router-origin errors use the same JSON error shape as the gateway
+//! (`{"error","message","retryable",...}`) with router-specific codes:
+//! `no_backend` (no routable node), `backend_unreachable` (transport
+//! failure towards the mapped node), `migrating` (the mapped node is
+//! down and the stream has not landed on its successor yet) — all
+//! retryable `503` + `Retry-After: 1`, so well-behaved clients absorb
+//! failover with their existing backoff loop.
+
+pub mod chaos;
+pub mod health;
+pub mod proxy;
+pub mod ring;
+
+pub use chaos::{run_kill_node, spawn_node, KillNodeReport};
+pub use health::NodeState;
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::net::http::{Conn, HttpConfig, HttpError, Method, Request};
+use super::net::{derive_node_id, error_json, wire};
+use super::obs;
+use health::HealthMachine;
+use proxy::{BackendClient, RespHead};
+use ring::Ring;
+
+/// One backend gateway the router fronts.
+#[derive(Clone, Debug)]
+pub struct BackendSpec {
+    /// `host:port` of the gateway.
+    pub addr: String,
+    /// The gateway's durable store, when the router is allowed to
+    /// recover streams from it after the process dies. `None` means
+    /// dead-node failover for this backend is impossible (its streams
+    /// are lost if it dies without exporting).
+    pub data_dir: Option<PathBuf>,
+}
+
+/// Router tuning. `Default` is sized for loopback fleets.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Listen address (`127.0.0.1:0` picks a free port).
+    pub listen: String,
+    pub workers: usize,
+    /// Virtual nodes per backend on the hash ring.
+    pub vnodes: usize,
+    /// Seeds the ring, the public-id hash, and the router's node id.
+    pub seed: u64,
+    pub probe_interval: Duration,
+    pub probe_timeout: Duration,
+    /// Consecutive probe failures before a backend is `down`.
+    pub fail_threshold: u32,
+    /// Consecutive probe successes before a recovering backend is
+    /// routable again.
+    pub recover_threshold: u32,
+    /// Wall-clock budget for router-side retries of retryable backend
+    /// answers; once spent, the answer passes through for the client
+    /// to handle.
+    pub retry_budget: Duration,
+    pub http: HttpConfig,
+    pub backends: Vec<BackendSpec>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 4,
+            vnodes: 64,
+            seed: 7,
+            probe_interval: Duration::from_millis(20),
+            probe_timeout: Duration::from_millis(250),
+            fail_threshold: 5,
+            recover_threshold: 3,
+            retry_budget: Duration::from_millis(500),
+            http: HttpConfig::default(),
+            backends: Vec::new(),
+        }
+    }
+}
+
+/// Where a public stream currently lives.
+#[derive(Clone)]
+struct StreamEntry {
+    backend: usize,
+    /// The backend-side wire id (`s-N`), distinct per node.
+    sid: String,
+}
+
+/// Per-backend runtime state shared between workers and the prober.
+struct BackendSlot {
+    addr: String,
+    data_dir: Option<PathBuf>,
+    /// [`NodeState::gauge`] encoding, written by the prober.
+    state: AtomicU8,
+    /// The backend's self-reported node id, learned from probes.
+    node_id: Mutex<String>,
+}
+
+impl BackendSlot {
+    fn state(&self) -> NodeState {
+        match self.state.load(Ordering::SeqCst) {
+            0 => NodeState::Down,
+            1 => NodeState::Recovering,
+            2 => NodeState::Suspect,
+            _ => NodeState::Healthy,
+        }
+    }
+
+    fn set_state(&self, s: NodeState) {
+        self.state.store(s.gauge(), Ordering::SeqCst);
+    }
+
+    fn node_id(&self) -> String {
+        self.node_id.lock().unwrap().clone()
+    }
+}
+
+struct RouterShared {
+    seed: u64,
+    retry_budget: Duration,
+    backends: Vec<BackendSlot>,
+    ring: Ring,
+    streams: Mutex<HashMap<u64, StreamEntry>>,
+    next_pub: AtomicU64,
+    /// Serializes migrations (failover and `/admin/migrate`) so two
+    /// movers never race on one stream.
+    migrate_lock: Mutex<()>,
+    node_id: String,
+    stop: AtomicBool,
+    draining: AtomicBool,
+    drain_requested: AtomicBool,
+}
+
+impl RouterShared {
+    /// Routable snapshot for ring lookups.
+    fn routable(&self) -> Vec<bool> {
+        self.backends.iter().map(|b| b.state().routable()).collect()
+    }
+
+    fn entry(&self, pub_sid: u64) -> Option<StreamEntry> {
+        self.streams.lock().unwrap().get(&pub_sid).cloned()
+    }
+}
+
+/// A running router: worker pool + health prober, shut down
+/// explicitly (or on drop).
+pub struct Router {
+    addr: SocketAddr,
+    shared: Arc<RouterShared>,
+    workers: Vec<JoinHandle<()>>,
+    prober: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind, spawn workers and the prober. Backends are assumed
+    /// healthy until the prober says otherwise, so the router serves
+    /// from the first request.
+    pub fn start(cfg: RouterConfig) -> Result<Router> {
+        if cfg.backends.is_empty() {
+            bail!("router needs at least one backend");
+        }
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding router on {}", cfg.listen))?;
+        let addr = listener.local_addr().context("router local addr")?;
+        let addrs: Vec<String> = cfg.backends.iter().map(|b| b.addr.clone()).collect();
+        let ring = Ring::build(cfg.seed, &addrs, cfg.vnodes.max(1));
+        let backends = cfg
+            .backends
+            .iter()
+            .map(|b| BackendSlot {
+                addr: b.addr.clone(),
+                data_dir: b.data_dir.clone(),
+                state: AtomicU8::new(NodeState::Healthy.gauge()),
+                node_id: Mutex::new(String::new()),
+            })
+            .collect();
+        let shared = Arc::new(RouterShared {
+            seed: cfg.seed,
+            retry_budget: cfg.retry_budget,
+            backends,
+            ring,
+            streams: Mutex::new(HashMap::new()),
+            next_pub: AtomicU64::new(0),
+            migrate_lock: Mutex::new(()),
+            node_id: derive_node_id(cfg.seed, &format!("router:{addr}")),
+            stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            drain_requested: AtomicBool::new(false),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for i in 0..cfg.workers.max(1) {
+            let listener = listener.try_clone().context("cloning router listener")?;
+            let shared = Arc::clone(&shared);
+            let http = cfg.http;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("router-worker-{i}"))
+                    .spawn(move || worker_loop(listener, shared, http))
+                    .context("spawning router worker")?,
+            );
+        }
+        let prober = {
+            let shared = Arc::clone(&shared);
+            let (interval, timeout) = (cfg.probe_interval, cfg.probe_timeout);
+            let (fail_t, rec_t) = (cfg.fail_threshold, cfg.recover_threshold);
+            Some(
+                std::thread::Builder::new()
+                    .name("router-prober".into())
+                    .spawn(move || prober_loop(shared, interval, timeout, fail_t, rec_t))
+                    .context("spawning router prober")?,
+            )
+        };
+        log::info!("router {} listening on {addr} over {} backends", shared.node_id, addrs.len());
+        Ok(Router { addr, shared, workers, prober })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn node_id(&self) -> &str {
+        &self.shared.node_id
+    }
+
+    /// Refuse new stream opens; keep proxying admitted streams.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Did a client ask for a drain via `POST /admin/drain`?
+    pub fn drain_requested(&self) -> bool {
+        self.shared.drain_requested.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot of each backend: `(addr, state, node_id)`.
+    pub fn backend_states(&self) -> Vec<(String, NodeState, String)> {
+        self.shared
+            .backends
+            .iter()
+            .map(|b| (b.addr.clone(), b.state(), b.node_id()))
+            .collect()
+    }
+
+    /// Snapshot of the public-stream map: `(public id, backend idx)`.
+    pub fn stream_map(&self) -> Vec<(u64, usize)> {
+        self.shared.streams.lock().unwrap().iter().map(|(&k, e)| (k, e.backend)).collect()
+    }
+
+    /// Stop accepting and join every thread.
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // wake accept-blocked workers with throwaway connects
+        for _ in 0..self.workers.len() {
+            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(100));
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(p) = self.prober.take() {
+            let _ = p.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker: accept + dispatch
+// ---------------------------------------------------------------------------
+
+fn worker_loop(listener: TcpListener, shared: Arc<RouterShared>, http: HttpConfig) {
+    let mut clients: Vec<BackendClient> =
+        shared.backends.iter().map(|b| BackendClient::new(&b.addr)).collect();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let conn = Conn::new(stream, http);
+        serve_connection(conn, &shared, &mut clients);
+    }
+}
+
+fn serve_connection(mut conn: Conn, shared: &RouterShared, clients: &mut [BackendClient]) {
+    let mut scratch = String::new();
+    loop {
+        let req = match conn.read_request() {
+            Ok(req) => req,
+            Err(e) => {
+                if let Some((status, reason, code)) = e.status() {
+                    error_json(&mut scratch, code, &e.detail(), false, None);
+                    let _ = conn.write_response(status, reason, "application/json", &scratch, &[]);
+                }
+                return;
+            }
+        };
+        let keep_alive = req.keep_alive;
+        // router-origin answers carry the router's own node id; the
+        // proxied paths overwrite it with the backend's before writing
+        conn.set_node_id(&shared.node_id);
+        let served = dispatch(&mut conn, &req, shared, clients, &mut scratch);
+        if served.is_err() || !keep_alive {
+            return;
+        }
+    }
+}
+
+/// What a router path names. Stream actions are kept as the raw
+/// suffix to forward; only `decode` needs special (SSE) treatment.
+enum Route {
+    Health,
+    Metrics,
+    Spec,
+    Streams,
+    Drain,
+    Migrate,
+    Stream { pub_sid: u64, action: Option<&'static str> },
+    NotFound,
+}
+
+fn parse_route(path: &str) -> Route {
+    match path {
+        "/healthz" => return Route::Health,
+        "/metrics" => return Route::Metrics,
+        "/v1/spec" => return Route::Spec,
+        "/v1/streams" => return Route::Streams,
+        "/admin/drain" => return Route::Drain,
+        "/admin/migrate" => return Route::Migrate,
+        _ => {}
+    }
+    let Some(rest) = path.strip_prefix("/v1/streams/") else {
+        return Route::NotFound;
+    };
+    let (id_part, action_part) = match rest.split_once('/') {
+        Some((id, action)) => (id, Some(action)),
+        None => (rest, None),
+    };
+    let Some(pub_sid) = id_part.strip_prefix("r-").and_then(|s| s.parse::<u64>().ok()) else {
+        return Route::NotFound;
+    };
+    let action = match action_part {
+        None => None,
+        Some("prefill") => Some("prefill"),
+        Some("decode") => Some("decode"),
+        Some("arm_fault") => Some("arm_fault"),
+        Some("hibernate") => Some("hibernate"),
+        Some("export") => Some("export"),
+        Some(_) => return Route::NotFound,
+    };
+    Route::Stream { pub_sid, action }
+}
+
+fn dispatch(
+    conn: &mut Conn,
+    req: &Request,
+    shared: &RouterShared,
+    clients: &mut [BackendClient],
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    let route = parse_route(conn.path(req));
+    match (req.method, route) {
+        (Method::Get, Route::Health) => health(conn, shared, scratch),
+        (Method::Get, Route::Metrics) => metrics(conn, shared, scratch),
+        (Method::Get, Route::Spec) => proxy_spec(conn, shared, clients, scratch),
+        (Method::Post, Route::Streams) => open_stream(conn, req, shared, clients, scratch),
+        (Method::Post, Route::Drain) => {
+            shared.draining.store(true, Ordering::SeqCst);
+            shared.drain_requested.store(true, Ordering::SeqCst);
+            conn.write_response(200, "OK", "application/json", "{\"draining\":true}", &[])
+        }
+        (Method::Post, Route::Migrate) => admin_migrate(conn, req, shared, scratch),
+        (Method::Get, Route::Stream { pub_sid, action: None }) => {
+            stream_op(conn, req, shared, clients, pub_sid, None, scratch)
+        }
+        (Method::Get, Route::Stream { pub_sid, action: Some("export") }) => {
+            stream_op(conn, req, shared, clients, pub_sid, Some("export"), scratch)
+        }
+        (Method::Post, Route::Stream { pub_sid, action: Some(a) }) if a != "export" => {
+            stream_op(conn, req, shared, clients, pub_sid, Some(a), scratch)
+        }
+        (Method::Delete, Route::Stream { pub_sid, action: None }) => {
+            stream_op(conn, req, shared, clients, pub_sid, None, scratch)
+        }
+        _ => {
+            error_json(scratch, "not_found", "no such route", false, None);
+            conn.write_response(404, "Not Found", "application/json", scratch, &[])
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// router-origin answers
+// ---------------------------------------------------------------------------
+
+/// A retryable router-origin `503` (`Retry-After: 1`): the shape
+/// clients already absorb in their backoff loop.
+fn unavailable(
+    conn: &mut Conn,
+    scratch: &mut String,
+    code: &str,
+    msg: &str,
+) -> Result<(), HttpError> {
+    error_json(scratch, code, msg, true, Some(1));
+    conn.write_response(
+        503,
+        "Service Unavailable",
+        "application/json",
+        scratch,
+        &[("Retry-After", "1")],
+    )
+}
+
+fn health(conn: &mut Conn, shared: &RouterShared, scratch: &mut String) -> Result<(), HttpError> {
+    use std::fmt::Write as _;
+    let draining = shared.draining.load(Ordering::SeqCst);
+    scratch.clear();
+    let _ = write!(
+        scratch,
+        "{{\"status\":\"{}\",\"node_id\":\"{}\",\"role\":\"router\",\"streams\":{}",
+        if draining { "draining" } else { "ready" },
+        shared.node_id,
+        shared.streams.lock().unwrap().len()
+    );
+    scratch.push_str(",\"backends\":[");
+    for (i, b) in shared.backends.iter().enumerate() {
+        if i > 0 {
+            scratch.push(',');
+        }
+        let _ = write!(
+            scratch,
+            "{{\"addr\":\"{}\",\"state\":\"{}\",\"node_id\":\"{}\"}}",
+            b.addr,
+            b.state().name(),
+            b.node_id()
+        );
+    }
+    scratch.push_str("]}");
+    if draining {
+        conn.write_response(503, "Service Unavailable", "application/json", scratch, &[])
+    } else {
+        conn.write_response(200, "OK", "application/json", scratch, &[])
+    }
+}
+
+/// Hand-rolled Prometheus exposition: the router has no engine
+/// telemetry, so it renders its own counters and per-backend health
+/// gauges in the same text format the gateways use.
+fn metrics(conn: &mut Conn, shared: &RouterShared, scratch: &mut String) -> Result<(), HttpError> {
+    use std::fmt::Write as _;
+    scratch.clear();
+    let counters: [(&str, &str, u64); 5] = [
+        (
+            "macformer_router_migrations_total",
+            "Streams moved between backends (failover or admin).",
+            obs::router_migrations(),
+        ),
+        (
+            "macformer_router_migration_failures_total",
+            "Streams the router could not relocate.",
+            obs::router_migration_failures(),
+        ),
+        (
+            "macformer_router_proxied_requests_total",
+            "Requests relayed to a backend.",
+            obs::router_proxied_requests(),
+        ),
+        (
+            "macformer_router_proxied_bytes_total",
+            "Response-body bytes relayed from backends.",
+            obs::router_proxied_bytes(),
+        ),
+        (
+            "macformer_router_retries_total",
+            "Retryable backend answers the router retried itself.",
+            obs::router_retries(),
+        ),
+    ];
+    for (name, help, value) in counters {
+        let _ = write!(scratch, "# HELP {name} {help}\n# TYPE {name} counter\n{name} {value}\n");
+    }
+    scratch.push_str(
+        "# HELP macformer_router_backend_health Backend state: 0 down, 1 recovering, 2 suspect, 3 healthy.\n\
+         # TYPE macformer_router_backend_health gauge\n",
+    );
+    for b in &shared.backends {
+        let _ = writeln!(
+            scratch,
+            "macformer_router_backend_health{{backend=\"{}\",node=\"{}\"}} {}",
+            obs::prom::escape_label(&b.addr),
+            obs::prom::escape_label(&b.node_id()),
+            b.state().gauge()
+        );
+    }
+    let _ = write!(
+        scratch,
+        "# HELP macformer_router_streams Public streams currently mapped.\n\
+         # TYPE macformer_router_streams gauge\n\
+         macformer_router_streams {}\n",
+        shared.streams.lock().unwrap().len()
+    );
+    let classes = obs::http_responses();
+    scratch.push_str(
+        "# HELP macformer_http_responses_total Responses served by the router, by status class.\n\
+         # TYPE macformer_http_responses_total counter\n",
+    );
+    for (i, label) in ["other", "1xx", "2xx", "3xx", "4xx", "5xx"].iter().enumerate() {
+        let _ = writeln!(
+            scratch,
+            "macformer_http_responses_total{{class=\"{label}\"}} {}",
+            classes[i]
+        );
+    }
+    conn.write_response(200, "OK", obs::prom::CONTENT_TYPE, scratch, &[])
+}
+
+// ---------------------------------------------------------------------------
+// proxying
+// ---------------------------------------------------------------------------
+
+/// Is this a backend answer the router should retry itself?
+fn retryable(head: &RespHead) -> bool {
+    head.status == 429 || (head.status == 503 && head.retry_after.is_some())
+}
+
+/// Budgeted retry pacing for one proxied request.
+struct RetryClock {
+    started: Instant,
+    attempt: usize,
+    budget: Duration,
+}
+
+impl RetryClock {
+    fn new(budget: Duration) -> RetryClock {
+        RetryClock { started: Instant::now(), attempt: 0, budget }
+    }
+
+    /// Sleep for the next backoff if it fits the budget; `false`
+    /// means the budget is spent and the caller must answer now.
+    fn try_again(&mut self, retry_after: Option<u64>, salt: u64) -> bool {
+        let wait = Duration::from_millis(proxy::backoff_ms(self.attempt, retry_after, salt));
+        if self.started.elapsed() + wait > self.budget {
+            return false;
+        }
+        self.attempt += 1;
+        std::thread::sleep(wait);
+        true
+    }
+}
+
+/// Relay a fixed-length backend response byte-faithfully: status,
+/// reason, body, `Retry-After`, export's hibernation marker, and the
+/// backend's node id.
+fn relay_fixed(conn: &mut Conn, head: &RespHead, body: &[u8]) -> Result<(), HttpError> {
+    conn.set_node_id(&head.node);
+    let mut extra: Vec<(&str, &str)> = Vec::new();
+    if let Some(ra) = head.retry_after.as_deref() {
+        extra.push(("Retry-After", ra));
+    }
+    if let Some(h) = head.hibernated.as_deref() {
+        extra.push(("x-macformer-hibernated", h));
+    }
+    let ct = if head.content_type.is_empty() { "application/json" } else { &head.content_type };
+    obs::add_router_proxied(body.len() as u64);
+    conn.write_response_bytes(head.status, &head.reason, ct, body, &extra)
+}
+
+/// One forwarded request with a fully-read fixed body. Chunked
+/// answers are a protocol violation on these routes.
+fn forward_fixed(
+    client: &mut BackendClient,
+    method: &str,
+    path: &str,
+    req_id: &[u8],
+    body: &[u8],
+) -> Result<(RespHead, Vec<u8>)> {
+    let head = client.request(method, path, req_id, body)?;
+    if head.chunked {
+        client.disconnect();
+        bail!("unexpected chunked response from backend on {path}");
+    }
+    let body = client.read_body(head.content_length)?;
+    Ok((head, body))
+}
+
+/// `GET /v1/spec`: relayed from any routable backend (every node in a
+/// fleet serves the same engine spec — the loadgen client checks it
+/// against its own config before driving load).
+fn proxy_spec(
+    conn: &mut Conn,
+    shared: &RouterShared,
+    clients: &mut [BackendClient],
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    let alive = shared.routable();
+    let Some(target) = shared.ring.lookup(Ring::key(shared.seed, 0), &alive) else {
+        return unavailable(conn, scratch, "no_backend", "no routable backend");
+    };
+    match forward_fixed(&mut clients[target], "GET", "/v1/spec", conn.request_id(), b"") {
+        Ok((head, body)) => relay_fixed(conn, &head, &body),
+        Err(e) => {
+            log::debug!("router: spec relay to {} failed: {e:#}", shared.backends[target].addr);
+            unavailable(conn, scratch, "backend_unreachable", "backend did not answer")
+        }
+    }
+}
+
+/// `POST /v1/streams`: place the new stream on the ring, open it on
+/// the chosen backend, remember the mapping, answer the public id.
+fn open_stream(
+    conn: &mut Conn,
+    req: &Request,
+    shared: &RouterShared,
+    clients: &mut [BackendClient],
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    if shared.draining.load(Ordering::SeqCst) {
+        error_json(scratch, "draining", "router is draining; retry elsewhere", true, Some(1));
+        return conn.write_response(
+            503,
+            "Service Unavailable",
+            "application/json",
+            scratch,
+            &[("Retry-After", "1")],
+        );
+    }
+    let body = conn.body(req).to_vec();
+    let pub_sid = shared.next_pub.fetch_add(1, Ordering::SeqCst);
+    let key = Ring::key(shared.seed, pub_sid);
+    let salt = conn.request_id_hash() ^ pub_sid;
+    let mut clock = RetryClock::new(shared.retry_budget);
+    loop {
+        let alive = shared.routable();
+        let Some(target) = shared.ring.lookup(key, &alive) else {
+            return unavailable(conn, scratch, "no_backend", "no routable backend");
+        };
+        match forward_fixed(&mut clients[target], "POST", "/v1/streams", conn.request_id(), &body)
+        {
+            Err(e) => {
+                log::debug!(
+                    "router: open on {} failed: {e:#}",
+                    shared.backends[target].addr
+                );
+                if clock.try_again(Some(1), salt) {
+                    continue; // aliveness is re-read; the prober may reroute us
+                }
+                return unavailable(conn, scratch, "backend_unreachable", "backend did not answer");
+            }
+            Ok((head, resp)) => {
+                if retryable(&head) && clock.try_again(head.retry_after_ticks(), salt) {
+                    obs::add_router_retry();
+                    continue;
+                }
+                if head.status != 201 {
+                    return relay_fixed(conn, &head, &resp);
+                }
+                let Some(backend_sid) = sid_from_json(&resp) else {
+                    log::warn!("router: open on {} answered 201 without a stream id",
+                        shared.backends[target].addr);
+                    return unavailable(conn, scratch, "backend_unreachable", "malformed open ack");
+                };
+                shared
+                    .streams
+                    .lock()
+                    .unwrap()
+                    .insert(pub_sid, StreamEntry { backend: target, sid: backend_sid });
+                conn.set_node_id(&head.node);
+                obs::add_router_proxied(resp.len() as u64);
+                scratch.clear();
+                use std::fmt::Write as _;
+                let _ = write!(scratch, "{{\"stream\":\"r-{pub_sid}\"}}");
+                return conn.write_response(201, "Created", "application/json", scratch, &[]);
+            }
+        }
+    }
+}
+
+/// Any `/v1/streams/r-N[...]` request: resolve the mapping, rewrite
+/// the path to the backend's own id, relay. `decode` streams SSE;
+/// everything else is fixed-length.
+#[allow(clippy::too_many_arguments)]
+fn stream_op(
+    conn: &mut Conn,
+    req: &Request,
+    shared: &RouterShared,
+    clients: &mut [BackendClient],
+    pub_sid: u64,
+    action: Option<&'static str>,
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    let method = match req.method {
+        Method::Get => "GET",
+        Method::Post => "POST",
+        Method::Delete => "DELETE",
+        Method::Other => {
+            error_json(scratch, "not_found", "no such route", false, None);
+            return conn.write_response(404, "Not Found", "application/json", scratch, &[]);
+        }
+    };
+    let body = conn.body(req).to_vec();
+    let salt = conn.request_id_hash() ^ pub_sid;
+    let mut clock = RetryClock::new(shared.retry_budget);
+    loop {
+        // re-resolved every attempt: a migration may remap mid-retry
+        let Some(entry) = shared.entry(pub_sid) else {
+            error_json(scratch, "unknown_stream", "no such stream", false, None);
+            return conn.write_response(404, "Not Found", "application/json", scratch, &[]);
+        };
+        let slot = &shared.backends[entry.backend];
+        if !slot.state().routable() {
+            if clock.try_again(Some(1), salt) {
+                continue;
+            }
+            return unavailable(conn, scratch, "migrating", "stream is relocating; retry");
+        }
+        let path = match action {
+            None => format!("/v1/streams/{}", entry.sid),
+            Some(a) => format!("/v1/streams/{}/{a}", entry.sid),
+        };
+        if action == Some("decode") {
+            match relay_decode(conn, &mut clients[entry.backend], &path, &body, &mut clock, salt) {
+                DecodeRelay::Served(r) => return r,
+                DecodeRelay::BackendFailed => {
+                    if clock.try_again(Some(1), salt) {
+                        continue;
+                    }
+                    return unavailable(
+                        conn,
+                        scratch,
+                        "backend_unreachable",
+                        "backend did not answer",
+                    );
+                }
+            }
+        }
+        match forward_fixed(&mut clients[entry.backend], method, &path, conn.request_id(), &body) {
+            Err(e) => {
+                log::debug!("router: {method} {path} on {} failed: {e:#}", slot.addr);
+                if clock.try_again(Some(1), salt) {
+                    continue;
+                }
+                return unavailable(conn, scratch, "backend_unreachable", "backend did not answer");
+            }
+            Ok((head, resp)) => {
+                if retryable(&head) && clock.try_again(head.retry_after_ticks(), salt) {
+                    obs::add_router_retry();
+                    continue;
+                }
+                if method == "DELETE" && matches!(head.status, 200 | 404) {
+                    shared.streams.lock().unwrap().remove(&pub_sid);
+                }
+                return relay_fixed(conn, &head, &resp);
+            }
+        }
+    }
+}
+
+/// What happened to one decode relay attempt.
+enum DecodeRelay {
+    /// An answer went to the client (SSE relayed, error passed
+    /// through, or the client connection broke — in every case the
+    /// request is over).
+    Served(Result<(), HttpError>),
+    /// The backend could not be reached / answered retryably and the
+    /// clock still has budget; the caller re-resolves and retries.
+    BackendFailed,
+}
+
+/// Relay one decode: chunked SSE pass-through on success, fixed error
+/// pass-through otherwise. Once the `200` head is committed to the
+/// client, a backend death can only be surfaced by cutting the client
+/// connection — the client's own retry/resume discipline takes over.
+fn relay_decode(
+    conn: &mut Conn,
+    client: &mut BackendClient,
+    path: &str,
+    body: &[u8],
+    clock: &mut RetryClock,
+    salt: u64,
+) -> DecodeRelay {
+    let req_id: Vec<u8> = conn.request_id().to_vec();
+    let head = match client.request("POST", path, &req_id, body) {
+        Ok(h) => h,
+        Err(_) => return DecodeRelay::BackendFailed,
+    };
+    if !head.chunked {
+        let resp = match client.read_body(head.content_length) {
+            Ok(b) => b,
+            Err(_) => return DecodeRelay::BackendFailed,
+        };
+        if retryable(&head) {
+            // let the caller's loop decide: it owns the clock
+            if clock.try_again(head.retry_after_ticks(), salt) {
+                obs::add_router_retry();
+                return DecodeRelay::BackendFailed;
+            }
+        }
+        return DecodeRelay::Served(relay_fixed(conn, &head, &resp));
+    }
+    conn.set_node_id(&head.node);
+    if let Err(e) = conn.begin_chunked(&head.content_type) {
+        client.disconnect();
+        return DecodeRelay::Served(Err(e));
+    }
+    let mut relayed = 0u64;
+    loop {
+        match client.read_chunk() {
+            Ok(Some(payload)) => {
+                let Ok(text) = std::str::from_utf8(&payload) else {
+                    client.disconnect();
+                    return DecodeRelay::Served(Err(HttpError::Closed));
+                };
+                relayed += payload.len() as u64;
+                if let Err(e) = conn.write_chunk(text) {
+                    client.disconnect();
+                    return DecodeRelay::Served(Err(e));
+                }
+            }
+            Ok(None) => break,
+            // mid-stream backend death after the committed 200: cut
+            // the client off so it sees a broken stream, not silence
+            Err(_) => return DecodeRelay::Served(Err(HttpError::Closed)),
+        }
+    }
+    obs::add_router_proxied(relayed);
+    DecodeRelay::Served(conn.end_chunked())
+}
+
+fn sid_from_json(body: &[u8]) -> Option<String> {
+    let mut scan = wire::Scan::object(body).ok()?;
+    let mut sid = None;
+    while let Some(key) = scan.next_key().ok()? {
+        match key {
+            b"stream" => sid = Some(scan.str_value("stream").ok()?.to_string()),
+            _ => scan.skip_value().ok()?,
+        }
+    }
+    sid
+}
+
+// ---------------------------------------------------------------------------
+// migration
+// ---------------------------------------------------------------------------
+
+/// `POST /admin/migrate {"stream":"r-N"}`: move one stream off its
+/// current backend onto its ring successor, live (export → import)
+/// when the source is routable, from the durable store otherwise.
+fn admin_migrate(
+    conn: &mut Conn,
+    req: &Request,
+    shared: &RouterShared,
+    scratch: &mut String,
+) -> Result<(), HttpError> {
+    let pub_sid = (|| {
+        let mut scan = wire::Scan::object(conn.body(req)).ok()?;
+        let mut sid = None;
+        while let Some(key) = scan.next_key().ok()? {
+            match key {
+                b"stream" => {
+                    let s = scan.str_value("stream").ok()?;
+                    sid = s.strip_prefix("r-").and_then(|n| n.parse::<u64>().ok());
+                    sid?;
+                }
+                _ => scan.skip_value().ok()?,
+            }
+        }
+        sid
+    })();
+    let Some(pub_sid) = pub_sid else {
+        error_json(scratch, "bad_body", "migrate JSON needs \"stream\":\"r-N\"", false, None);
+        return conn.write_response(400, "Bad Request", "application/json", scratch, &[]);
+    };
+    match migrate_one(shared, pub_sid) {
+        Ok(dest) => {
+            use std::fmt::Write as _;
+            scratch.clear();
+            let _ = write!(
+                scratch,
+                "{{\"migrated\":\"r-{pub_sid}\",\"to\":\"{}\"}}",
+                shared.backends[dest].addr
+            );
+            conn.write_response(200, "OK", "application/json", scratch, &[])
+        }
+        Err(MigrateError::UnknownStream) => {
+            error_json(scratch, "unknown_stream", "no such stream", false, None);
+            conn.write_response(404, "Not Found", "application/json", scratch, &[])
+        }
+        Err(MigrateError::Failed(msg)) => {
+            error_json(scratch, "migration_failed", &msg, false, None);
+            conn.write_response(502, "Bad Gateway", "application/json", scratch, &[])
+        }
+    }
+}
+
+enum MigrateError {
+    UnknownStream,
+    /// The stream could not be moved; the message says why. The
+    /// failure is already counted and the mapping already dropped
+    /// when the state is unrecoverable.
+    Failed(String),
+}
+
+/// Move one public stream to its ring successor. Serialized under the
+/// migrate lock; safe to call from the prober and workers alike (it
+/// dials its own connections — migrations are rare).
+fn migrate_one(shared: &RouterShared, pub_sid: u64) -> Result<usize, MigrateError> {
+    let _guard = shared.migrate_lock.lock().unwrap();
+    let Some(entry) = shared.entry(pub_sid) else {
+        return Err(MigrateError::UnknownStream);
+    };
+    let source = entry.backend;
+    let key = Ring::key(shared.seed, pub_sid);
+    let mut alive = shared.routable();
+    alive[source] = false;
+    let Some(dest) = shared.ring.lookup(key, &alive) else {
+        obs::add_router_migration_failure();
+        return Err(MigrateError::Failed("no routable destination backend".into()));
+    };
+    let source_slot = &shared.backends[source];
+    let result = if source_slot.state().routable() {
+        migrate_live(shared, &entry, source, dest)
+    } else {
+        migrate_from_store(shared, &entry, source, dest)
+    };
+    match result {
+        Ok(new_sid) => {
+            let mut map = shared.streams.lock().unwrap();
+            // the entry may only have been removed (DELETE) meanwhile;
+            // remaps are serialized by the migrate lock
+            if let Some(e) = map.get_mut(&pub_sid) {
+                e.backend = dest;
+                e.sid = new_sid;
+            }
+            drop(map);
+            obs::add_router_migration();
+            log::info!(
+                "router: migrated r-{pub_sid} {} -> {}",
+                source_slot.addr,
+                shared.backends[dest].addr
+            );
+            Ok(dest)
+        }
+        Err(msg) => {
+            obs::add_router_migration_failure();
+            // the state is gone (live export consumed it, or the dead
+            // store had nothing): a stale mapping would retry forever,
+            // an honest 404 lets clients give up cleanly
+            shared.streams.lock().unwrap().remove(&pub_sid);
+            log::warn!("router: migration of r-{pub_sid} failed: {msg}");
+            Err(MigrateError::Failed(msg))
+        }
+    }
+}
+
+/// Live migration: export the versioned state record from the source
+/// (retrying `409 stream_busy` briefly — an in-flight decode batch
+/// finishes within a tick or two), import it on the destination.
+fn migrate_live(
+    shared: &RouterShared,
+    entry: &StreamEntry,
+    source: usize,
+    dest: usize,
+) -> Result<String, String> {
+    let mut src = BackendClient::new(&shared.backends[source].addr);
+    let path = format!("/v1/streams/{}/export", entry.sid);
+    let mut clock = RetryClock::new(shared.retry_budget);
+    let (head, record) = loop {
+        match forward_fixed(&mut src, "GET", &path, b"migrate", b"") {
+            Err(e) => {
+                if clock.try_again(Some(1), entry_salt(entry)) {
+                    continue;
+                }
+                return Err(format!("export transport failed: {e:#}"));
+            }
+            Ok((head, body)) => {
+                let busy = head.status == 409 || retryable(&head);
+                if busy && clock.try_again(head.retry_after_ticks(), entry_salt(entry)) {
+                    continue;
+                }
+                break (head, body);
+            }
+        }
+    };
+    if head.status != 200 {
+        return Err(format!("export answered {}", head.status));
+    }
+    import_record(shared, dest, &record, entry)
+}
+
+/// Dead-node migration: the destination recovers the stream straight
+/// from the dead backend's durable store (checkpoint + journal tail,
+/// replayed through the normal fold path).
+fn migrate_from_store(
+    shared: &RouterShared,
+    entry: &StreamEntry,
+    source: usize,
+    dest: usize,
+) -> Result<String, String> {
+    let Some(dir) = shared.backends[source].data_dir.as_ref() else {
+        return Err(format!(
+            "backend {} is down and has no known durable store",
+            shared.backends[source].addr
+        ));
+    };
+    use std::fmt::Write as _;
+    let mut body = String::new();
+    let _ = write!(body, "{{\"dir\":");
+    let mut dirs = String::new();
+    wire::write_str(&mut dirs, &dir.to_string_lossy());
+    body.push_str(&dirs);
+    let _ = write!(body, ",\"stream\":\"{}\"}}", entry.sid);
+    import_record_body(shared, dest, body.as_bytes(), entry)
+}
+
+fn import_record(
+    shared: &RouterShared,
+    dest: usize,
+    record: &[u8],
+    entry: &StreamEntry,
+) -> Result<String, String> {
+    import_record_body(shared, dest, record, entry)
+}
+
+fn import_record_body(
+    shared: &RouterShared,
+    dest: usize,
+    body: &[u8],
+    entry: &StreamEntry,
+) -> Result<String, String> {
+    let mut dst = BackendClient::new(&shared.backends[dest].addr);
+    let mut clock = RetryClock::new(shared.retry_budget);
+    loop {
+        match forward_fixed(&mut dst, "POST", "/v1/streams/import", b"migrate", body) {
+            Err(e) => {
+                if clock.try_again(Some(1), entry_salt(entry)) {
+                    continue;
+                }
+                return Err(format!("import transport failed: {e:#}"));
+            }
+            Ok((head, resp)) => {
+                if retryable(&head) && clock.try_again(head.retry_after_ticks(), entry_salt(entry))
+                {
+                    continue;
+                }
+                if head.status != 201 {
+                    return Err(format!("import answered {}", head.status));
+                }
+                return sid_from_json(&resp)
+                    .ok_or_else(|| "import ack carried no stream id".into());
+            }
+        }
+    }
+}
+
+fn entry_salt(entry: &StreamEntry) -> u64 {
+    entry.sid.bytes().fold(0xCBF2_9CE4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01B3)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// prober + failover
+// ---------------------------------------------------------------------------
+
+fn prober_loop(
+    shared: Arc<RouterShared>,
+    interval: Duration,
+    timeout: Duration,
+    fail_threshold: u32,
+    recover_threshold: u32,
+) {
+    let mut machines: Vec<HealthMachine> = shared
+        .backends
+        .iter()
+        .map(|_| HealthMachine::new(fail_threshold, recover_threshold))
+        .collect();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        for (i, slot) in shared.backends.iter().enumerate() {
+            if shared.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let probe = health::probe_once(&slot.addr, timeout);
+            if let Some(node) = &probe {
+                if !node.is_empty() {
+                    let mut id = slot.node_id.lock().unwrap();
+                    if *id != *node {
+                        *id = node.clone();
+                    }
+                }
+            }
+            if let Some((from, to)) = machines[i].observe(probe.is_some()) {
+                slot.set_state(to);
+                log::info!("router: backend {} {} -> {}", slot.addr, from.name(), to.name());
+            }
+        }
+        // failover as a convergence sweep, not a one-shot on the Down
+        // transition: a stream whose open was acked just before the
+        // node died can land in the map *after* the transition fired,
+        // and it still has to move
+        for (i, slot) in shared.backends.iter().enumerate() {
+            if shared.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            if slot.state() == NodeState::Down {
+                failover_backend(&shared, i);
+            }
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// Move every stream mapped to a now-dead backend onto its ring
+/// successors. Failures are counted and logged; each stream is
+/// independent.
+fn failover_backend(shared: &RouterShared, dead: usize) {
+    let victims: Vec<u64> = shared
+        .streams
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|(_, e)| e.backend == dead)
+        .map(|(&k, _)| k)
+        .collect();
+    if victims.is_empty() {
+        return;
+    }
+    log::info!(
+        "router: backend {} is down; migrating {} streams",
+        shared.backends[dead].addr,
+        victims.len()
+    );
+    for pub_sid in victims {
+        match migrate_one(shared, pub_sid) {
+            Ok(dest) => log::debug!(
+                "router: failover moved r-{pub_sid} to {}",
+                shared.backends[dest].addr
+            ),
+            Err(MigrateError::UnknownStream) => {} // closed meanwhile
+            Err(MigrateError::Failed(msg)) => {
+                log::warn!("router: failover of r-{pub_sid} failed: {msg}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_parse_and_reject_like_the_gateway() {
+        assert!(matches!(parse_route("/healthz"), Route::Health));
+        assert!(matches!(parse_route("/metrics"), Route::Metrics));
+        assert!(matches!(parse_route("/admin/migrate"), Route::Migrate));
+        assert!(matches!(parse_route("/v1/streams"), Route::Streams));
+        assert!(matches!(
+            parse_route("/v1/streams/r-12"),
+            Route::Stream { pub_sid: 12, action: None }
+        ));
+        assert!(matches!(
+            parse_route("/v1/streams/r-0/decode"),
+            Route::Stream { pub_sid: 0, action: Some("decode") }
+        ));
+        assert!(matches!(
+            parse_route("/v1/streams/r-3/export"),
+            Route::Stream { pub_sid: 3, action: Some("export") }
+        ));
+        // backend-style ids and unknown actions don't resolve here
+        assert!(matches!(parse_route("/v1/streams/s-1"), Route::NotFound));
+        assert!(matches!(parse_route("/v1/streams/r-1/nope"), Route::NotFound));
+        assert!(matches!(parse_route("/v1/streams/r-x"), Route::NotFound));
+        assert!(matches!(parse_route("/nope"), Route::NotFound));
+    }
+
+    #[test]
+    fn retry_clock_spends_its_budget_and_stops() {
+        let mut clock = RetryClock::new(Duration::from_millis(30));
+        let mut spins = 0;
+        while clock.try_again(Some(1), 7) {
+            spins += 1;
+            assert!(spins < 100, "clock never gave up");
+        }
+        assert!(spins >= 1, "a 30ms budget admits at least one short retry");
+        assert!(clock.started.elapsed() <= Duration::from_millis(300));
+    }
+
+    #[test]
+    fn router_refuses_an_empty_fleet() {
+        let err = Router::start(RouterConfig::default()).err().expect("must refuse");
+        assert!(err.to_string().contains("at least one backend"), "{err:#}");
+    }
+
+    #[test]
+    fn router_starts_stops_and_reports_health_over_the_wire() {
+        use std::io::{Read as _, Write as _};
+        let cfg = RouterConfig {
+            workers: 2,
+            // nothing listens there: the prober will mark it down,
+            // which must not crash anything
+            backends: vec![BackendSpec { addr: "127.0.0.1:9".into(), data_dir: None }],
+            probe_interval: Duration::from_millis(5),
+            probe_timeout: Duration::from_millis(50),
+            fail_threshold: 1,
+            ..RouterConfig::default()
+        };
+        let router = Router::start(cfg).expect("router start");
+        let addr = router.local_addr();
+        assert!(!router.node_id().is_empty());
+
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+            .expect("send");
+        let mut text = String::new();
+        let _ = s.read_to_string(&mut text);
+        assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+        assert!(text.contains("\"role\":\"router\""), "{text}");
+        assert!(text.contains("x-macformer-node:"), "router id missing: {text}");
+
+        // the dead backend reaches `down` and health reports it
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let states = router.backend_states();
+            if states[0].1 == NodeState::Down {
+                break;
+            }
+            assert!(Instant::now() < deadline, "backend never marked down: {:?}", states[0].1);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        router.shutdown();
+    }
+}

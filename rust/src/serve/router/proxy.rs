@@ -1,0 +1,354 @@
+//! The router's backend-side HTTP/1.1 client: one keep-alive
+//! connection per (worker thread, backend), reused across proxied
+//! requests so steady-state proxying adds no connection setup.
+//!
+//! Unlike the loadgen client this one is binary-clean (state-record
+//! export bodies are not UTF-8), keeps the backend's exact status
+//! *reason* and passthrough headers (`Retry-After`,
+//! `x-macformer-node`, `x-macformer-hibernated`) so the router can
+//! relay responses byte-faithfully, and exposes chunked reads for SSE
+//! decode relay.
+//!
+//! Failure discipline: a pooled connection that dies on reuse is
+//! retried **once** on a fresh connection (the backend may simply
+//! have closed an idle keep-alive); a fresh connection that dies is a
+//! real backend failure and surfaces as `Err` for the caller to map
+//! to a retryable `503 backend_unreachable`.
+
+use std::io::{Read as _, Write as _};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// How long a proxied backend read may stall before the router gives
+/// up on the connection. Generous: decode SSE frames arrive far
+/// faster than this on a live engine.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Loopback/LAN connect deadline; a backend that cannot accept within
+/// this is treated as unreachable.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// One parsed backend response head, with the raw header values the
+/// router passes through verbatim.
+pub struct RespHead {
+    pub status: u16,
+    pub reason: String,
+    pub content_length: usize,
+    pub chunked: bool,
+    /// Raw `Retry-After` value, relayed unmodified.
+    pub retry_after: Option<String>,
+    pub content_type: String,
+    /// The backend's `x-macformer-node` id (empty when absent).
+    pub node: String,
+    /// Raw `x-macformer-hibernated` value from an export response.
+    pub hibernated: Option<String>,
+}
+
+impl RespHead {
+    /// Parsed `Retry-After` ticks for the router's own backoff.
+    pub fn retry_after_ticks(&self) -> Option<u64> {
+        self.retry_after.as_deref().and_then(|v| v.trim().parse().ok())
+    }
+}
+
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl Conn {
+    fn connect(addr: &str) -> Result<Conn> {
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving backend {addr}"))?
+            .next()
+            .with_context(|| format!("backend {addr} resolves to nothing"))?;
+        let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+            .with_context(|| format!("connecting to backend {addr}"))?;
+        stream.set_read_timeout(Some(READ_TIMEOUT))?;
+        stream.set_write_timeout(Some(READ_TIMEOUT))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Conn { stream, buf: Vec::with_capacity(4096), pos: 0 })
+    }
+
+    fn fill(&mut self) -> Result<()> {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk).context("reading from backend")?;
+        if n == 0 {
+            bail!("backend closed the connection mid-response");
+        }
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(())
+    }
+
+    /// One CRLF-terminated line (without the terminator).
+    fn line(&mut self) -> Result<String> {
+        loop {
+            if let Some(off) = self.buf[self.pos..].windows(2).position(|w| w == b"\r\n") {
+                let line =
+                    String::from_utf8_lossy(&self.buf[self.pos..self.pos + off]).into_owned();
+                self.pos += off + 2;
+                return Ok(line);
+            }
+            self.fill()?;
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<Vec<u8>> {
+        while self.buf.len() - self.pos < n {
+            self.fill()?;
+        }
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn send(&mut self, method: &str, path: &str, req_id: &[u8], body: &[u8]) -> Result<()> {
+        use std::fmt::Write as _;
+        let mut head = String::with_capacity(256);
+        let _ = write!(
+            head,
+            "{method} {path} HTTP/1.1\r\nHost: macformer-router\r\nContent-Length: {}\r\n",
+            body.len()
+        );
+        if !req_id.is_empty() {
+            // printable ASCII by the gateway's own sanitization
+            head.push_str("x-request-id: ");
+            head.push_str(std::str::from_utf8(req_id).unwrap_or(""));
+            head.push_str("\r\n");
+        }
+        if !body.is_empty() {
+            head.push_str("Content-Type: application/json\r\n");
+        }
+        head.push_str("\r\n");
+        self.stream.write_all(head.as_bytes()).context("sending proxied request head")?;
+        if !body.is_empty() {
+            self.stream.write_all(body).context("sending proxied request body")?;
+        }
+        Ok(())
+    }
+
+    fn read_head(&mut self) -> Result<RespHead> {
+        let status_line = self.line()?;
+        let mut parts = status_line.splitn(3, ' ');
+        let _version = parts.next();
+        let status: u16 = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad status line from backend: {status_line:?}"))?;
+        let reason = parts.next().unwrap_or("").to_string();
+        let mut head = RespHead {
+            status,
+            reason,
+            content_length: 0,
+            chunked: false,
+            retry_after: None,
+            content_type: String::new(),
+            node: String::new(),
+            hibernated: None,
+        };
+        loop {
+            let line = self.line()?;
+            if line.is_empty() {
+                return Ok(head);
+            }
+            let Some((name, value)) = line.split_once(':') else { continue };
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                head.content_length =
+                    value.parse().with_context(|| format!("bad Content-Length {value:?}"))?;
+            } else if name.eq_ignore_ascii_case("transfer-encoding") {
+                head.chunked = value.eq_ignore_ascii_case("chunked");
+            } else if name.eq_ignore_ascii_case("retry-after") {
+                head.retry_after = Some(value.to_string());
+            } else if name.eq_ignore_ascii_case("content-type") {
+                head.content_type = value.to_string();
+            } else if name.eq_ignore_ascii_case("x-macformer-node") {
+                head.node = value.to_string();
+            } else if name.eq_ignore_ascii_case("x-macformer-hibernated") {
+                head.hibernated = Some(value.to_string());
+            }
+        }
+    }
+}
+
+/// The per-(worker, backend) client. Create once, reuse for the
+/// worker's lifetime; it lazily (re)connects as needed.
+pub struct BackendClient {
+    addr: String,
+    conn: Option<Conn>,
+}
+
+impl BackendClient {
+    pub fn new(addr: &str) -> BackendClient {
+        BackendClient { addr: addr.to_string(), conn: None }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Drop the pooled connection (after a transport error or a relay
+    /// abandoned mid-body, when the stream position is unknown).
+    pub fn disconnect(&mut self) {
+        self.conn = None;
+    }
+
+    /// Send one request and read the response head. The caller *must*
+    /// then consume the body — [`Self::read_body`] for fixed-length,
+    /// [`Self::read_chunk`] to `None` for chunked — before the next
+    /// request, or call [`Self::disconnect`].
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        req_id: &[u8],
+        body: &[u8],
+    ) -> Result<RespHead> {
+        let pooled = self.conn.is_some();
+        if self.conn.is_none() {
+            self.conn = Some(Conn::connect(&self.addr)?);
+        }
+        let conn = self.conn.as_mut().expect("just connected");
+        let first = conn.send(method, path, req_id, body).and_then(|()| conn.read_head());
+        match first {
+            Ok(head) => Ok(head),
+            Err(e) if pooled => {
+                // the backend closed an idle keep-alive under us;
+                // one fresh-connection retry is safe because nothing
+                // of the response was consumed
+                log::debug!("router: pooled connection to {} died ({e:#}); redialing", self.addr);
+                self.conn = None;
+                self.conn = Some(Conn::connect(&self.addr)?);
+                let conn = self.conn.as_mut().expect("just reconnected");
+                conn.send(method, path, req_id, body)?;
+                conn.read_head()
+            }
+            Err(e) => {
+                self.conn = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Read a fixed-length response body.
+    pub fn read_body(&mut self, len: usize) -> Result<Vec<u8>> {
+        let conn = self.conn.as_mut().context("read_body without a connection")?;
+        match conn.take(len) {
+            Ok(body) => Ok(body),
+            Err(e) => {
+                self.conn = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Read one chunk of a chunked response; `None` is the final
+    /// (empty) chunk — the response is complete and the connection
+    /// stays reusable.
+    pub fn read_chunk(&mut self) -> Result<Option<Vec<u8>>> {
+        let conn = self.conn.as_mut().context("read_chunk without a connection")?;
+        let r = (|| {
+            let size_line = conn.line()?;
+            let size = usize::from_str_radix(size_line.trim(), 16)
+                .with_context(|| format!("bad chunk size {size_line:?}"))?;
+            if size == 0 {
+                let _trailer = conn.line()?;
+                return Ok(None);
+            }
+            let payload = conn.take(size)?;
+            let crlf = conn.take(2)?;
+            if crlf != b"\r\n" {
+                bail!("missing CRLF after chunk");
+            }
+            Ok(Some(payload))
+        })();
+        if r.is_err() {
+            self.conn = None;
+        }
+        r
+    }
+}
+
+/// Retry backoff for proxied retryable statuses: exponential from the
+/// backend's `Retry-After` hint with deterministic splitmix jitter,
+/// capped — the same discipline the loadgen client applies, so the
+/// router never hammers a backpressured backend harder than a
+/// well-behaved client would.
+pub fn backoff_ms(attempt: usize, retry_after: Option<u64>, salt: u64) -> u64 {
+    const CAP_MS: u64 = 50;
+    let base = retry_after.unwrap_or(1).clamp(1, CAP_MS);
+    let exp = base.saturating_mul(1u64 << attempt.min(6)).min(CAP_MS);
+    let mut x = salt ^ (attempt as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^= x >> 31;
+    (exp + x % (exp / 2 + 1)).min(CAP_MS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::TcpListener;
+
+    #[test]
+    fn backoff_grows_with_attempts_and_respects_the_cap() {
+        let a0 = backoff_ms(0, Some(1), 7);
+        let a6 = backoff_ms(6, Some(1), 7);
+        assert!(a0 >= 1 && a0 <= 50, "{a0}");
+        assert!(a6 <= 50, "{a6}");
+        assert!(backoff_ms(0, Some(500), 7) <= 50, "hint must be clamped to the cap");
+    }
+
+    #[test]
+    fn pooled_connection_death_is_retried_once_on_a_fresh_dial() {
+        // a tiny server: answers the first request then slams the
+        // connection, answers the second connection's request properly
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let server = std::thread::spawn(move || {
+            // connection 1: one full response, then close (stale pool)
+            let (mut s, _) = listener.accept().expect("accept 1");
+            let mut sink = [0u8; 1024];
+            let _ = std::io::Read::read(&mut s, &mut sink);
+            s.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok").expect("resp 1");
+            drop(s);
+            // connection 2: the redial after the pooled send fails
+            let (mut s, _) = listener.accept().expect("accept 2");
+            let _ = std::io::Read::read(&mut s, &mut sink);
+            s.write_all(
+                b"HTTP/1.1 503 Service Unavailable\r\nContent-Length: 5\r\nRetry-After: 3\r\nx-macformer-node: n-abc\r\n\r\nlater",
+            )
+            .expect("resp 2");
+            // hold the socket open until the client has read it
+            std::thread::sleep(Duration::from_millis(200));
+        });
+
+        let mut client = BackendClient::new(&addr);
+        let head = client.request("GET", "/healthz", b"", b"").expect("first request");
+        assert_eq!(head.status, 200);
+        assert_eq!(client.read_body(head.content_length).expect("body"), b"ok");
+        // the server closed; this pooled request must transparently redial
+        let head = client.request("GET", "/healthz", b"rid-1", b"").expect("retried request");
+        assert_eq!(head.status, 503);
+        assert_eq!(head.reason, "Service Unavailable");
+        assert_eq!(head.retry_after.as_deref(), Some("3"));
+        assert_eq!(head.retry_after_ticks(), Some(3));
+        assert_eq!(head.node, "n-abc");
+        assert_eq!(client.read_body(head.content_length).expect("body"), b"later");
+        server.join().expect("server thread");
+    }
+
+    #[test]
+    fn fresh_connection_failure_is_an_error_not_a_loop() {
+        let mut client = BackendClient::new("127.0.0.1:1");
+        assert!(client.request("GET", "/healthz", b"", b"").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Seeded consistent-hash ring over the backend fleet.
+//!
+//! Each backend contributes `vnodes` points; a stream key walks the
+//! ring clockwise to the first point whose backend passes the caller's
+//! aliveness predicate. The ring itself is immutable — node health is
+//! a *filter at lookup time*, so a backend coming back after a blip
+//! reclaims exactly the arcs it owned before, and the death of one
+//! node remaps only the keys that node owned (every other key keeps
+//! hitting its old successor). All hashing is seeded and deterministic
+//! so a restarted router rebuilds the identical ring.
+
+/// `splitmix64` finalizer — the same mixer the serve stack uses for
+/// jitter and node ids.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// FNV-1a over a byte string (backend addresses).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// The ring: `(point, backend index)` sorted by point.
+pub struct Ring {
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    /// Build the ring from the full backend list. `vnodes` points per
+    /// backend; more points → smoother balance, linearly larger ring.
+    pub fn build(seed: u64, backends: &[String], vnodes: usize) -> Ring {
+        let mut points = Vec::with_capacity(backends.len() * vnodes);
+        for (idx, addr) in backends.iter().enumerate() {
+            let base = fnv1a(addr.as_bytes());
+            for v in 0..vnodes as u64 {
+                points.push((mix(seed ^ base ^ mix(v)), idx));
+            }
+        }
+        points.sort_unstable();
+        Ring { points }
+    }
+
+    /// The ring position of a public stream id.
+    pub fn key(seed: u64, public_sid: u64) -> u64 {
+        mix(seed ^ public_sid.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// First backend at or clockwise of `key` for which `alive[idx]`
+    /// holds; `None` when no backend is routable.
+    pub fn lookup(&self, key: u64, alive: &[bool]) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let start = self.points.partition_point(|&(h, _)| h < key);
+        for off in 0..self.points.len() {
+            let (_, idx) = self.points[(start + off) % self.points.len()];
+            if alive.get(idx).copied().unwrap_or(false) {
+                return Some(idx);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect()
+    }
+
+    #[test]
+    fn ring_is_deterministic_for_a_seed_and_differs_across_seeds() {
+        let backends = addrs(3);
+        let a = Ring::build(7, &backends, 64);
+        let b = Ring::build(7, &backends, 64);
+        let c = Ring::build(8, &backends, 64);
+        let alive = vec![true; 3];
+        let same = (0..256).all(|k| {
+            a.lookup(Ring::key(7, k), &alive) == b.lookup(Ring::key(7, k), &alive)
+        });
+        assert!(same, "identical seeds must build identical rings");
+        let moved = (0..256)
+            .filter(|&k| a.lookup(Ring::key(7, k), &alive) != c.lookup(Ring::key(8, k), &alive))
+            .count();
+        assert!(moved > 0, "a different seed should shuffle at least some keys");
+    }
+
+    #[test]
+    fn every_backend_owns_a_fair_share_of_keys() {
+        let backends = addrs(4);
+        let ring = Ring::build(42, &backends, 64);
+        let alive = vec![true; 4];
+        let mut counts = [0usize; 4];
+        for k in 0..4000u64 {
+            counts[ring.lookup(Ring::key(42, k), &alive).expect("routable")] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            // fair share is 1000; 64 vnodes keeps every node within ~2x
+            assert!((400..=2200).contains(&c), "backend {i} owns {c} of 4000 keys");
+        }
+    }
+
+    #[test]
+    fn killing_one_node_remaps_only_its_own_keys() {
+        let backends = addrs(5);
+        let ring = Ring::build(3, &backends, 64);
+        let alive = vec![true; 5];
+        let before: Vec<usize> =
+            (0..2000u64).map(|k| ring.lookup(Ring::key(3, k), &alive).unwrap()).collect();
+        let mut degraded = alive.clone();
+        degraded[2] = false;
+        for (k, &owner) in before.iter().enumerate() {
+            let after = ring.lookup(Ring::key(3, k as u64), &degraded).unwrap();
+            if owner != 2 {
+                assert_eq!(after, owner, "key {k} moved although its owner survived");
+            } else {
+                assert_ne!(after, 2, "key {k} still routed to the dead node");
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_with_no_routable_backend_is_none() {
+        let backends = addrs(2);
+        let ring = Ring::build(1, &backends, 8);
+        assert_eq!(ring.lookup(Ring::key(1, 0), &[false, false]), None);
+        let empty = Ring::build(1, &[], 8);
+        assert_eq!(empty.lookup(Ring::key(1, 0), &[]), None);
+    }
+}

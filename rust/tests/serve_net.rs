@@ -22,7 +22,8 @@ use std::time::{Duration, Instant};
 use macformer::serve::net::http::HttpConfig;
 use macformer::serve::net::{http_status, retry_after_ticks, run_socket};
 use macformer::serve::{
-    EngineSpec, FaultPlan, LoadConfig, NetConfig, ServeConfig, ServeError, Server,
+    BackendSpec, EngineSpec, FaultPlan, LoadConfig, NetConfig, Router, RouterConfig, ServeConfig,
+    ServeError, Server,
 };
 
 // ---------------------------------------------------------------------------
@@ -552,4 +553,189 @@ fn draining_gateway_refuses_new_opens_but_finishes_admitted_work() {
     assert_eq!(status, 200);
     drop(client);
     server.drain();
+}
+
+// ---------------------------------------------------------------------------
+// satellite: the router passes the backend wire contract through verbatim
+// ---------------------------------------------------------------------------
+
+/// A router fronting one in-process gateway, with a short proxy retry
+/// budget (so retryable-passthrough tests don't sit out the default)
+/// and a high fail threshold (so a deliberately-draining backend is
+/// not probed into `down` mid-test).
+fn router_over(backend: &Server, workers: usize) -> Router {
+    Router::start(RouterConfig {
+        workers,
+        retry_budget: Duration::from_millis(50),
+        fail_threshold: 10_000,
+        backends: vec![BackendSpec { addr: backend.local_addr().to_string(), data_dir: None }],
+        ..RouterConfig::default()
+    })
+    .expect("router start")
+}
+
+/// The full socket load run — opens, prefills, SSE decodes, deletes,
+/// bit-exact verification against the in-process decode — driven
+/// through the router instead of straight at the gateway. The proxy
+/// hop must be invisible: same outputs, zero 5xx, zero errors.
+#[test]
+fn routed_socket_decode_is_bit_identical_to_in_process() {
+    let cfg = small_cfg();
+    let net = NetConfig { workers: cfg.streams + 8, ..NetConfig::default() };
+    let server = server_for(&cfg, net);
+    let router = router_over(&server, cfg.streams + 2);
+    let addr = router.local_addr().to_string();
+    let report = run_socket(&cfg, &addr).expect("routed socket load run");
+    router.shutdown();
+    server.shutdown();
+    assert_eq!(report.verified, Some(true), "routed outputs diverged from in-process decode");
+    assert_eq!(report.stream_errors, 0);
+    assert_eq!(report.http_5xx, 0);
+    assert_eq!(report.poisoned_streams, 0);
+    assert_eq!(report.tokens_total, (cfg.streams * cfg.tokens) as u64);
+}
+
+/// Every wire-triggerable [`ServeError`] answer must cross the proxy
+/// hop unmodified: same status, same `Retry-After`, and — for
+/// backend-origin errors — the same body bytes. The router may retry
+/// a retryable 503 within its budget, but once the budget is spent the
+/// backend's verdict passes through verbatim, not rewritten.
+#[test]
+fn router_passes_backend_error_contract_through_verbatim() {
+    let cfg = small_cfg();
+    // a one-slot pool makes pool_full reachable with a single open
+    let serve = ServeConfig { min_batch: cfg.min_batch, ..ServeConfig::new(1, cfg.dv) };
+    let server =
+        Server::start(NetConfig::default(), spec_for(&cfg), serve, cfg.resilience.clone(), None)
+            .expect("server start");
+    let router = router_over(&server, 2);
+
+    let mut direct = RawClient::connect(server.local_addr());
+    let mut routed = RawClient::connect(router.local_addr());
+
+    // the open that takes the only slot goes through the router, so
+    // the router owns a live mapping for the bad_row probes below
+    let (status, head, resp) = routed.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 201, "{resp}");
+    let rid = resp.split('"').nth(3).expect("public stream id").to_string();
+    assert!(rid.starts_with("r-"), "router must mint public ids, got {rid}");
+    assert!(
+        head.contains(&format!("x-macformer-node: {}", router.node_id())),
+        "router-origin answer must carry the router's node id: {head}"
+    );
+
+    // pool_full: retryable 503 + Retry-After — after the router's
+    // retry budget is spent, byte-identical to the direct answer
+    let (d_status, d_head, d_body) = direct.request("POST", "/v1/streams", "{}");
+    let (r_status, r_head, r_body) = routed.request("POST", "/v1/streams", "{}");
+    assert_eq!((d_status, r_status), (503, 503));
+    for head in [&d_head, &r_head] {
+        assert!(head.contains("retry-after: 1"), "pool_full without Retry-After: {head}");
+    }
+    assert_eq!(d_body, r_body, "pool_full body rewritten by the proxy hop");
+    assert!(r_body.contains("\"error\":\"pool_full\""), "{r_body}");
+    assert!(r_body.contains("\"retryable\":true"), "{r_body}");
+
+    // bad_row: a non-retryable 400 passes through with the body intact
+    let bad = r#"{"q":[1,0,0],"k":[1,0,0,0,0,0,0,0],"v":[1,0,0,0,0,0,0,0]}"#;
+    let sid = {
+        // the backend id behind the router's only mapping
+        let map = router.stream_map();
+        assert_eq!(map.len(), 1);
+        format!("s-{}", 0)
+    };
+    let (d_status, _, d_body) = direct.request("POST", &format!("/v1/streams/{sid}/decode"), bad);
+    let (r_status, r_head, r_body) =
+        routed.request("POST", &format!("/v1/streams/{rid}/decode"), bad);
+    assert_eq!((d_status, r_status), (400, 400));
+    assert_eq!(d_body, r_body, "bad_row body rewritten by the proxy hop");
+    assert!(r_body.contains("\"error\":\"bad_row\""), "{r_body}");
+    assert!(r_body.contains("\"retryable\":false"), "{r_body}");
+    assert!(!r_head.contains("retry-after"), "Retry-After invented on a 400: {r_head}");
+
+    // unknown_stream: the router answers unmapped public ids itself,
+    // with the same code/status the backend pins for unknown backend
+    // ids — the contract is one vocabulary, whoever speaks it
+    let ok = r#"{"q":[1,0,0,0,0,0,0,0],"k":[1,0,0,0,0,0,0,0],"v":[1,0,0,0,0,0,0,0]}"#;
+    let (d_status, _, d_body) = direct.request("POST", "/v1/streams/s-999/decode", ok);
+    let (r_status, _, r_body) = routed.request("POST", "/v1/streams/r-999/decode", ok);
+    assert_eq!((d_status, r_status), (404, 404));
+    for body in [&d_body, &r_body] {
+        assert!(body.contains("\"error\":\"unknown_stream\""), "{body}");
+        assert!(body.contains("\"retryable\":false"), "{body}");
+    }
+
+    // draining: flip the backend into drain; its retryable refusal
+    // crosses the hop verbatim once the router's budget is spent
+    server.begin_drain();
+    let (d_status, d_head, d_body) = direct.request("POST", "/v1/streams", "{}");
+    let (r_status, r_head, r_body) = routed.request("POST", "/v1/streams", "{}");
+    assert_eq!((d_status, r_status), (503, 503));
+    for head in [&d_head, &r_head] {
+        assert!(head.contains("retry-after: 1"), "draining without Retry-After: {head}");
+    }
+    assert_eq!(d_body, r_body, "draining body rewritten by the proxy hop");
+    assert!(r_body.contains("\"error\":\"draining\""), "{r_body}");
+
+    drop(direct);
+    drop(routed);
+    router.shutdown();
+    server.shutdown();
+}
+
+/// Router-origin surfaces: `/healthz` says `router` and names the
+/// fleet, `/metrics` exposes the router families, unknown paths 404
+/// with the shared vocabulary, and deleting a mapped stream through
+/// the router unmaps it (a second delete is an honest 404).
+#[test]
+fn router_health_metrics_and_stream_lifecycle() {
+    let cfg = small_cfg();
+    let net = NetConfig { workers: 6, ..NetConfig::default() };
+    let server = server_for(&cfg, net);
+    let backend_addr = server.local_addr().to_string();
+    let router = router_over(&server, 2);
+    let mut client = RawClient::connect(router.local_addr());
+
+    let (status, head, body) = client.get("/healthz");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"role\":\"router\""), "{body}");
+    assert!(body.contains(&backend_addr), "fleet missing from {body}");
+    assert!(
+        head.contains(&format!("x-macformer-node: {}", router.node_id())),
+        "router /healthz must carry the router's node id: {head}"
+    );
+
+    let (status, _, body) = client.get("/metrics");
+    assert_eq!(status, 200);
+    for family in [
+        "macformer_router_backend_health",
+        "macformer_router_streams",
+        "macformer_router_migrations_total",
+    ] {
+        assert!(body.contains(family), "{family} missing from /metrics:\n{body}");
+    }
+
+    let (status, _, body) = client.get("/v1/nope");
+    assert_eq!(status, 404);
+    assert!(body.contains("\"error\":\"not_found\""), "{body}");
+
+    // spec is proxied from the backend
+    let (status, _, body) = client.get("/v1/spec");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"kernel\":\"exp\""), "{body}");
+
+    // open → delete → the mapping is gone, not leaked
+    let (status, _, resp) = client.request("POST", "/v1/streams", "{}");
+    assert_eq!(status, 201, "{resp}");
+    let rid = resp.split('"').nth(3).expect("public stream id").to_string();
+    assert_eq!(router.stream_map().len(), 1);
+    let (status, _, _) = client.request("DELETE", &format!("/v1/streams/{rid}"), "");
+    assert_eq!(status, 200);
+    assert_eq!(router.stream_map().len(), 0, "delete must unmap the public id");
+    let (status, _, body) = client.request("DELETE", &format!("/v1/streams/{rid}"), "");
+    assert_eq!(status, 404, "{body}");
+
+    drop(client);
+    router.shutdown();
+    server.shutdown();
 }

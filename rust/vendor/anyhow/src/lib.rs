@@ -4,19 +4,34 @@
 
 use std::fmt;
 
-/// A string-backed dynamic error.
+/// A string-backed dynamic error, optionally carrying the typed cause
+/// it was built from so [`Error::downcast_ref`] can recover it.
 ///
 /// Deliberately does NOT implement `std::error::Error`, so the blanket
 /// `From<E: std::error::Error>` below does not collide with the
 /// reflexive `From<Error>` impl from core (same trick as upstream).
 pub struct Error {
     msg: String,
+    cause: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from anything displayable.
     pub fn msg<M: fmt::Display>(m: M) -> Error {
-        Error { msg: m.to_string() }
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap a typed error, keeping it recoverable via
+    /// [`Error::downcast_ref`] (subset of upstream `Error::new`).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        Error { msg: e.to_string(), cause: Some(Box::new(e)) }
+    }
+
+    /// The typed cause this error was built from via [`Error::new`],
+    /// if it was and the type matches. Context wrappers drop the
+    /// cause (the shim keeps a message chain, not an error chain).
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        self.cause.as_ref()?.downcast_ref::<E>()
     }
 }
 
@@ -34,7 +49,7 @@ impl fmt::Debug for Error {
 
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        Error::msg(&e)
+        Error::new(e)
     }
 }
 
@@ -116,6 +131,26 @@ mod tests {
     fn question_mark_converts_std_errors() {
         let e = io_fail().unwrap_err();
         assert!(!format!("{e}").is_empty());
+        // `?` routes through `Error::new`, so the typed cause survives
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed {}", self.0)
+        }
+    }
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn new_keeps_the_typed_cause_recoverable() {
+        let e = Error::new(Typed(9));
+        assert_eq!(format!("{e}"), "typed 9");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(9)));
+        assert!(Error::msg("plain").downcast_ref::<Typed>().is_none());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Minimal offline shim of `libc`: exactly the `getrusage` surface used
-//! by `macformer::util::peak_rss_bytes`, plus the `signal(2)` surface
-//! the serve gateway uses to catch `SIGTERM` for graceful drain.
+//! by `macformer::util::peak_rss_bytes`, plus the `signal(2)` /
+//! `kill(2)` surface the serve gateway uses to catch `SIGTERM` for
+//! graceful drain and to forward it to spawned backend nodes.
 //! Struct layout matches glibc on 64-bit Linux (two `timeval`s
 //! followed by fourteen `c_long` fields).
 
@@ -51,6 +52,12 @@ pub const RUSAGE_SELF: c_int = 0;
 /// `SIGTERM` on Linux (the value is uniform across architectures).
 pub const SIGTERM: c_int = 15;
 
+/// `SIGKILL` on Linux (uniform across architectures).
+pub const SIGKILL: c_int = 9;
+
+/// A process id, as `kill(2)` takes it.
+pub type pid_t = i32;
+
 /// A `signal(2)` disposition: the address of an `extern "C"` handler
 /// (or 0 / 1 for `SIG_DFL` / `SIG_IGN`).
 pub type sighandler_t = usize;
@@ -58,6 +65,7 @@ pub type sighandler_t = usize;
 extern "C" {
     pub fn getrusage(who: c_int, usage: *mut rusage) -> c_int;
     pub fn signal(signum: c_int, handler: sighandler_t) -> sighandler_t;
+    pub fn kill(pid: pid_t, sig: c_int) -> c_int;
 }
 
 #[cfg(test)]
